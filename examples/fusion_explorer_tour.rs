@@ -1,0 +1,112 @@
+//! Tour of the fusion explorer's machinery on the paper's own figures:
+//! the Fig. 4 PatternReduction example, the Fig. 5 remote fusion, the
+//! Fig. 6 cyclic-dependence rejection, and the delta-evaluator's
+//! anatomy on a concrete pattern.
+//!
+//! ```bash
+//! cargo run --release --example fusion_explorer_tour
+//! ```
+
+use fusion_stitching::explorer::{self, DeltaModel, ExploreOptions};
+use fusion_stitching::gpu::DeviceSpec;
+use fusion_stitching::graph::{DType, Graph, NodeId, OpKind, ReduceOp, Shape};
+
+fn main() {
+    let device = DeviceSpec::v100();
+    let opts = ExploreOptions::default();
+
+    // ---- Figure 4: PatternReduction on the 9-vertex example -----------
+    println!("== Figure 4: PatternReduction candidate generation ==\n");
+    let mut g = Graph::new("fig4");
+    let p = g.param(Shape::new(vec![1 << 16]), DType::F32, "p");
+    let v8 = g.unary(OpKind::Relu, p, "v8");
+    let v5 = g.unary(OpKind::Neg, v8, "v5");
+    let v6 = g.unary(OpKind::Abs, v8, "v6");
+    let v7 = g.unary(OpKind::Relu, v8, "v7");
+    let v4 = g.binary(OpKind::Add, v5, v6, "v4");
+    let v3 = g.unary(OpKind::Neg, v6, "v3");
+    let v2 = g.binary(OpKind::Add, v4, v3, "v2");
+    let v1 = g.unary(OpKind::Neg, v7, "v1");
+    let v0 = g.binary(OpKind::Add, v2, v1, "v0");
+    let _ = v0;
+
+    let cands = explorer::candidate_patterns(&g, &device, &opts);
+    println!("candidate-patterns for v8 (top-{}):", opts.top_k);
+    for (i, c) in cands[v8.idx()].iter().enumerate() {
+        let names: Vec<&str> = c
+            .pattern
+            .nodes()
+            .iter()
+            .map(|&id| g.node(id).name.as_str())
+            .collect();
+        println!("  #{i}: score {:>8.2}  {{{}}}", c.score, names.join(", "));
+    }
+
+    let plan = explorer::explore(&g, &device, &opts);
+    println!(
+        "\nfinal plan: {} pattern(s) covering {} of 9 fusible ops\n",
+        plan.patterns.len(),
+        plan.covered_nodes()
+    );
+
+    // ---- Figure 6: cyclic dependence is rejected ----------------------
+    println!("== Figure 6: cyclic-dependence rejection ==\n");
+    let mut g6 = Graph::new("fig6");
+    let p6 = g6.param(Shape::new(vec![64, 64]), DType::F32, "p");
+    let a = g6.unary(OpKind::Relu, p6, "A");
+    let w = g6.param(Shape::new(vec![64, 64]), DType::F32, "w");
+    let b_mm = g6.matmul(a, w, "B(gemm)");
+    let c = g6.binary(OpKind::Add, a, b_mm, "C");
+    let _ = c;
+    println!(
+        "fusing {{A, C}} with B outside creates a cycle: {}",
+        g6.fusion_creates_cycle(&[a, c])
+    );
+    let plan6 = explorer::explore(&g6, &device, &opts);
+    let ac_fused = plan6.patterns.iter().any(|p| p.contains(a) && p.contains(c));
+    println!("explorer ever fuses A with C: {ac_fused} (must be false)\n");
+
+    // ---- Figure 5: remote fusion (kernel packing of distant ops) ------
+    println!("== Figure 5: remote fusion ==\n");
+    let mut g5 = Graph::new("fig5");
+    // Two small disconnected island chains — fusible only by packing.
+    let pa = g5.param(Shape::new(vec![256]), DType::F32, "pa");
+    let a1 = g5.unary(OpKind::Relu, pa, "a1");
+    let a2 = g5.unary(OpKind::Neg, a1, "a2");
+    let pb = g5.param(Shape::new(vec![256]), DType::F32, "pb");
+    let b1 = g5.unary(OpKind::Abs, pb, "b1");
+    let b2 = g5.unary(OpKind::Relu, b1, "b2");
+    let _ = (a2, b2);
+    let no_remote = explorer::explore(
+        &g5,
+        &device,
+        &ExploreOptions { enable_remote_fusion: false, ..opts.clone() },
+    );
+    let with_remote = explorer::explore(&g5, &device, &opts);
+    println!(
+        "two disconnected chains: {} kernels without remote fusion, {} with",
+        no_remote.kernels(&g5).len(),
+        with_remote.kernels(&g5).len()
+    );
+
+    // ---- Delta-evaluator anatomy (Eq. 3) -------------------------------
+    println!("\n== delta-evaluator anatomy (Eq. 3) on a softmax pattern ==\n");
+    let mut gs = Graph::new("sm");
+    let x = gs.param(Shape::new(vec![256, 1024]), DType::F32, "x");
+    let mx = gs.reduce(ReduceOp::Max, x, vec![1], "max");
+    let mb = gs.broadcast(mx, Shape::new(vec![256, 1024]), "max_b");
+    let sh = gs.binary(OpKind::Sub, x, mb, "shift");
+    let e = gs.unary(OpKind::Exp, sh, "exp");
+    let sm = gs.reduce(ReduceOp::Sum, e, vec![1], "sum");
+    let sb = gs.broadcast(sm, Shape::new(vec![256, 1024]), "sum_b");
+    let out = gs.binary(OpKind::Div, e, sb, "out");
+    let pattern: Vec<NodeId> = vec![mx, mb, sh, e, sm, sb, out];
+    let model = DeltaModel::new(&gs, device.clone());
+    let f = model.score(&pattern);
+    println!("pattern: whole softmax body (7 ops, exp mid-kernel)");
+    println!("f = T_reduced_mem + T_reduced_calls - T_penalty = {f:.2} (µs saved)");
+    println!("per-op unfused times:");
+    for &id in &pattern {
+        println!("  {:<8} {:>8.2} µs", gs.node(id).name, model.op_time_us(id));
+    }
+}

@@ -1,0 +1,117 @@
+//! **End-to-end driver**: a batched inference service over the real
+//! AOT artifacts, JIT-optimized by the FusionStitching coordinator.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example inference_service
+//! ```
+//!
+//! Two planes run side by side, proving all three layers compose:
+//!
+//! * **Numeric plane (real)** — the Rust runtime loads the jax-lowered
+//!   encoder-layer HLO from `artifacts/` and serves batched requests on
+//!   the PJRT CPU client: Python is never on the request path. Latency
+//!   and throughput are wall-clock measurements.
+//! * **Fusion plane (simulated device)** — the same service submits the
+//!   BERT-inference graph to the JIT coordinator in async-compilation
+//!   mode: requests are served under the XLA fallback while the
+//!   FusionStitching tuner runs in the background, then hot-swap (§6).
+//!
+//! Reported: per-batch p50/p95 latency, throughput, the before/after
+//! swap improvement, and the compilation-cache effect on resubmission.
+
+use fusion_stitching::coordinator::{JitService, ServiceOptions};
+use fusion_stitching::runtime::{artifact_path, artifacts_available, ArtifactSet, RuntimeClient};
+use fusion_stitching::util::bench_loop;
+use fusion_stitching::workloads::{models, Mode};
+use std::time::Instant;
+
+fn main() {
+    // ---- numeric plane: real PJRT serving -----------------------------
+    if !artifacts_available(&[ArtifactSet::ENCODER_LAYER]) {
+        eprintln!("artifacts missing — run `make artifacts` first");
+        std::process::exit(1);
+    }
+    let (b, s, h) = (8usize, 32usize, 64usize);
+    let client = RuntimeClient::cpu().expect("pjrt cpu client");
+    let encoder = client
+        .load_hlo_text(&artifact_path(ArtifactSet::ENCODER_LAYER))
+        .expect("load encoder");
+
+    println!("== numeric plane: encoder-layer serving on PJRT (CPU) ==");
+    println!("model: 1 encoder layer [{b}x{s}x{h}], batched requests\n");
+
+    // Warm + measure batched requests with deterministic inputs.
+    let requests: Vec<Vec<f32>> = (0..32)
+        .map(|r| {
+            (0..b * s * h)
+                .map(|i| (((i * 31 + r * 17) % 113) as f32 - 56.0) * 0.02)
+                .collect()
+        })
+        .collect();
+    let mut idx = 0usize;
+    let stats = bench_loop(5, 50, || {
+        let x = &requests[idx % requests.len()];
+        idx += 1;
+        encoder.run_f32(&[(x.as_slice(), &[b, s, h])]).unwrap()
+    });
+    let batch_per_s = 1.0 / stats.mean.as_secs_f64();
+    println!("  latency  : {stats}");
+    println!(
+        "  throughput: {:.0} batches/s = {:.0} sequences/s\n",
+        batch_per_s,
+        batch_per_s * b as f64
+    );
+
+    // ---- fusion plane: JIT coordinator with async compile + hot swap --
+    println!("== fusion plane: JIT coordinator on BERT-infer (simulated V100) ==\n");
+    let svc = JitService::new(ServiceOptions::default());
+    let w = models::bert(Mode::Infer);
+    let t0 = Instant::now();
+    let mut session = svc.submit(&w);
+
+    let mut pre_swap = Vec::new();
+    let mut post_swap = Vec::new();
+    for i in 0..200 {
+        let breakdown = svc.run_iteration(&session);
+        if session.is_optimized() {
+            post_swap.push(breakdown.e2e_ms());
+        } else {
+            pre_swap.push(breakdown.e2e_ms());
+        }
+        if i == 199 && !session.is_optimized() {
+            session.wait_optimized();
+        }
+    }
+    session.wait_optimized();
+    let after = svc.run_iteration(&session);
+    post_swap.push(after.e2e_ms());
+
+    let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len().max(1) as f64;
+    println!("  served {} iterations in {:.1} ms wall", 201, t0.elapsed().as_secs_f64() * 1e3);
+    println!(
+        "  pre-swap  (XLA fallback): {} iters @ {:.3} ms simulated",
+        pre_swap.len(),
+        mean(&pre_swap)
+    );
+    println!(
+        "  post-swap (FusionStitching): {} iters @ {:.3} ms simulated",
+        post_swap.len(),
+        mean(&post_swap)
+    );
+    if !pre_swap.is_empty() {
+        println!("  hot-swap improvement: {:.2}x", mean(&pre_swap) / mean(&post_swap));
+    }
+    if let Some(it) = session.metrics.swap_iteration() {
+        println!("  swap happened at iteration {it} (async compile, §6)");
+    }
+
+    // Cache: resubmitting the same model serves optimized immediately.
+    let t1 = Instant::now();
+    let s2 = svc.submit(&w);
+    println!(
+        "\n  resubmit: optimized from iteration 0 (cache hit in {:.2} ms) = {}",
+        t1.elapsed().as_secs_f64() * 1e3,
+        s2.is_optimized()
+    );
+    println!("\n{}", session.metrics.to_json().to_pretty());
+}

@@ -1,0 +1,80 @@
+//! Quickstart: optimize one computation graph with FusionStitching and
+//! compare it against the TF / XLA baselines.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! This walks the public API end to end on the paper's Figure-1 case:
+//! build a layer-norm graph, run the three techniques, print the fusion
+//! plans and the simulated Table-2 row for each.
+
+use fusion_stitching::baselines;
+use fusion_stitching::explorer::{self, ExploreOptions};
+use fusion_stitching::gpu::DeviceSpec;
+use fusion_stitching::graph::{DType, Graph, Shape};
+use fusion_stitching::pipeline::{self, Tech};
+use fusion_stitching::util::Table;
+use fusion_stitching::workloads::{blocks, LoopKind, Mode, Workload};
+
+fn main() {
+    // 1. Build a graph — layer normalization over [4096, 768] rows (the
+    //    Figure-1 pattern: two reductions, an rsqrt, a light tail).
+    let mut g = Graph::new("layer_norm");
+    let x = g.param(Shape::new(vec![4096, 768]), DType::F32, "x");
+    let _out = blocks::layer_norm(&mut g, x, "ln");
+    println!("graph: {} ops, {} edges\n", g.len(), g.num_edges());
+
+    // 2. Plan fusions three ways.
+    let device = DeviceSpec::v100();
+    let opts = ExploreOptions::default();
+    let tf_plan = baselines::tf::plan(&g);
+    let xla_plan = baselines::xla::plan(&g);
+    let fs_plan = explorer::explore(&g, &device, &opts);
+    println!("TF  : {} kernels (one per op)", tf_plan.kernels(&g).len());
+    println!("XLA : {} kernels (Fig. 1: the 4-way split)", xla_plan.kernels(&g).len());
+    println!("FS  : {} kernel  (the whole pattern, stitched)\n", fs_plan.kernels(&g).len());
+
+    // 3. Show the stitched kernel's tuned schedule and pseudocode.
+    let tuned = fusion_stitching::codegen::tune_pattern(
+        &g,
+        fs_plan.patterns[0].nodes(),
+        &device,
+        &fusion_stitching::codegen::TunerOptions::fusion_stitching(),
+    )
+    .expect("LN is schedulable");
+    println!("FS schedule: {}", tuned.summary());
+    println!(
+        "estimate: {:.1} µs at occupancy {:.2}\n",
+        tuned.estimate.time_us, tuned.estimate.occupancy
+    );
+
+    // 4. Simulate one iteration under each technique (Table-2 row).
+    let w = Workload {
+        name: "LN",
+        field: "micro",
+        mode: Mode::Infer,
+        batch: 32,
+        loop_kind: LoopKind::None,
+        graph: g,
+    };
+    let rows = pipeline::table2_rows(&w, &device, &opts);
+    let mut t = Table::new(vec!["tech", "CPU ms", "Mem ms", "E2E ms", "#mem kernels"]);
+    for r in &rows {
+        t.row(vec![
+            r.tech.name().to_string(),
+            format!("{:.3}", r.breakdown.cpu_ms),
+            format!("{:.3}", r.breakdown.mem_ms),
+            format!("{:.3}", r.breakdown.e2e_ms()),
+            r.breakdown.mem_calls.to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+
+    let e2e = |tech: Tech| rows.iter().find(|r| r.tech == tech).unwrap().breakdown.e2e_ms();
+    println!(
+        "\nFS speedup: {:.2}x vs TF, {:.2}x vs XLA",
+        e2e(Tech::Tf) / e2e(Tech::Fs),
+        e2e(Tech::Xla) / e2e(Tech::Fs)
+    );
+}

@@ -1,0 +1,6 @@
+"""Build-time compile path: JAX/Pallas models lowered to HLO text.
+
+Nothing in this package runs on the request path — `make artifacts`
+invokes :mod:`compile.aot` once, and the Rust binary loads the resulting
+``artifacts/*.hlo.txt`` through PJRT.
+"""

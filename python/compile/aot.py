@@ -1,0 +1,166 @@
+"""AOT lowering: every Layer-2 module → HLO **text** in ``artifacts/``.
+
+HLO text (never ``.serialize()``): jax ≥ 0.5 emits HloModuleProto with
+64-bit instruction ids that the xla_extension 0.5.1 under the Rust
+``xla`` crate rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly. Lowering goes through stablehlo
+→ XlaComputation with ``return_tuple=True``; the Rust side unwraps the
+tuple (see rust/src/runtime/client.rs).
+
+Run once via ``make artifacts``; Python never executes afterwards.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(*dims):
+    return jax.ShapeDtypeStruct(tuple(dims), jnp.float32)
+
+
+def build_artifacts():
+    """(name, jitted function, example args) for every artifact."""
+    m = model
+    ln_x = spec(m.LN_ROWS, m.LN_DIM)
+    ln_g = spec(m.LN_DIM)
+    entries = [
+        ("ln_fused", m.ln_fused, (ln_x, ln_g, ln_g)),
+        ("ln_reference", m.ln_reference, (ln_x, ln_g, ln_g)),
+        ("ln_part1_sum", m.ln_part1_sum, (ln_x,)),
+        ("ln_part2_var", m.ln_part2_var, (ln_x, spec(m.LN_ROWS))),
+        (
+            "ln_part3_rsqrt",
+            lambda vs: m.ln_part3_rsqrt(vs, float(m.LN_DIM), 1e-5),
+            (spec(m.LN_ROWS),),
+        ),
+        (
+            "ln_part4_scale",
+            m.ln_part4_scale,
+            (ln_x, spec(m.LN_ROWS), ln_g, ln_g),
+        ),
+        ("softmax_fused", m.softmax_fused, (spec(m.SM_ROWS, m.SM_DIM),)),
+        (
+            "gelu_bias_fused",
+            m.gelu_bias_fused,
+            (spec(m.GELU_ROWS, m.GELU_DIM), spec(m.GELU_DIM)),
+        ),
+        (
+            "softmax_xent_fused",
+            m.softmax_xent_fused,
+            (spec(m.XENT_ROWS, m.XENT_VOCAB), spec(m.XENT_ROWS, m.XENT_VOCAB)),
+        ),
+        (
+            "softmax_xent_unfused",
+            m.softmax_xent_unfused,
+            (spec(m.XENT_ROWS, m.XENT_VOCAB), spec(m.XENT_ROWS, m.XENT_VOCAB)),
+        ),
+        (
+            "attention_fused",
+            m.attention_fused,
+            (
+                spec(m.ATTN_HEADS, m.ATTN_SEQ, m.ATTN_DK),
+                spec(m.ATTN_HEADS, m.ATTN_SEQ, m.ATTN_DK),
+                spec(m.ATTN_HEADS, m.ATTN_SEQ, m.ATTN_DK),
+            ),
+        ),
+        (
+            "residual_ln_fused",
+            m.residual_ln_fused,
+            (
+                spec(m.LN_ROWS, m.LN_DIM),
+                spec(m.LN_ROWS, m.LN_DIM),
+                spec(m.LN_DIM),
+                spec(m.LN_DIM),
+            ),
+        ),
+        (
+            "mlp_block",
+            m.mlp_block,
+            (
+                spec(m.MLP_ROWS, m.MLP_IN),
+                spec(m.MLP_IN, m.MLP_HIDDEN),
+                spec(m.MLP_HIDDEN),
+                spec(m.MLP_HIDDEN, m.MLP_IN),
+                spec(m.MLP_IN),
+                spec(m.MLP_IN),
+                spec(m.MLP_IN),
+            ),
+        ),
+    ]
+
+    # Encoder layer: parameters baked in as constants so the Rust side
+    # only feeds activations.
+    params = m.encoder_layer_params(jax.random.PRNGKey(0))
+
+    def encoder_fixed(x):
+        return m.encoder_layer(x, **params)
+
+    entries.append(
+        (
+            "encoder_layer",
+            encoder_fixed,
+            (spec(m.ENC_BATCH, m.ENC_SEQ, m.ENC_HIDDEN),),
+        )
+    )
+    return entries
+
+
+def manifest():
+    """Shapes the Rust runtime relies on (written next to the HLO)."""
+    m = model
+    return {
+        "ln": {"rows": m.LN_ROWS, "dim": m.LN_DIM},
+        "softmax": {"rows": m.SM_ROWS, "dim": m.SM_DIM},
+        "mlp": {"rows": m.MLP_ROWS, "in": m.MLP_IN, "hidden": m.MLP_HIDDEN},
+        "encoder": {
+            "batch": m.ENC_BATCH,
+            "seq": m.ENC_SEQ,
+            "hidden": m.ENC_HIDDEN,
+            "heads": m.ENC_HEADS,
+        },
+        "xent": {"rows": m.XENT_ROWS, "vocab": m.XENT_VOCAB},
+        "gelu": {"rows": m.GELU_ROWS, "dim": m.GELU_DIM},
+        "attn": {"heads": m.ATTN_HEADS, "seq": m.ATTN_SEQ, "dk": m.ATTN_DK},
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--only", default=None, help="lower a single artifact")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    for name, fn, example in build_artifacts():
+        if args.only and name != args.only:
+            continue
+        lowered = jax.jit(fn).lower(*example)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest(), f, indent=2)
+    print("wrote manifest.json")
+
+
+if __name__ == "__main__":
+    main()

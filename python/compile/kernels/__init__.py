@@ -1,0 +1,10 @@
+"""Layer-1 Pallas kernels (the stitched-kernel exemplars) + oracles."""
+
+from .attention import attention
+from .gelu_bias import gelu_bias
+from .layernorm import layernorm
+from .residual_ln import residual_ln
+from .softmax import softmax
+from .softmax_xent import softmax_xent
+
+__all__ = ["attention", "gelu_bias", "layernorm", "residual_ln", "softmax", "softmax_xent"]

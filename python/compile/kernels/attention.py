@@ -1,0 +1,85 @@
+"""Stitched single-block attention Pallas kernel — the *non-homogeneous
+parallelism* exemplar (§4.1's block-composition end game).
+
+The paper's block composition exists to let computations with different
+parallel structure share one kernel through on-chip staging. Attention
+is the canonical case: two matmuls (MXU-shaped) sandwich a row-softmax
+(VPU-shaped, two reductions + an expensive exp). On GPU the paper's FS
+never fuses the GEMMs (cuBLAS territory); on TPU the Pallas programming
+model makes the fully-stitched form natural — this is the
+flash-attention-style extension of the paper's idea, where the
+``[seq, seq]`` score/probability intermediates never reach HBM:
+
+    scores = (q @ k^T) / sqrt(dk)     # MXU, in VMEM
+    probs  = softmax(scores)          # VPU, reductions in VREGs
+    out    = probs @ v                # MXU, from VMEM
+
+Grid: one step per (batch·head); each step stages that head's q/k/v
+tiles into VMEM. Documented in DESIGN.md §Hardware-Adaptation as the
+"what block composition buys on TPU" demonstrator.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _attention_kernel(q_ref, k_ref, v_ref, o_ref):
+    q = q_ref[...]
+    k = k_ref[...]
+    v = v_ref[...]
+    dk = q.shape[-1]
+    scores = q @ k.T / jnp.sqrt(jnp.asarray(dk, q.dtype))
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    e = jnp.exp(scores - m)
+    probs = e / jnp.sum(e, axis=-1, keepdims=True)
+    o_ref[...] = probs @ v
+
+
+def attention(q, k, v):
+    """Scaled-dot-product attention as ONE Pallas kernel per head.
+
+    Args:
+      q, k, v: ``[heads, seq, dk]`` float arrays (batch folded into
+        heads by the caller).
+
+    Returns:
+      ``[heads, seq, dk]`` attention output.
+    """
+    heads, seq, dk = q.shape
+    grid = (heads,)
+    spec = pl.BlockSpec((1, seq, dk), lambda h: (h, 0, 0))
+
+    def kernel(q_ref, k_ref, v_ref, o_ref):
+        _attention_kernel(
+            _Squeezed(q_ref), _Squeezed(k_ref), _Squeezed(v_ref), _Squeezed(o_ref)
+        )
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[spec, spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((heads, seq, dk), q.dtype),
+        interpret=True,
+    )(q, k, v)
+
+
+class _Squeezed:
+    """Ref adapter dropping the leading size-1 grid axis of a block."""
+
+    def __init__(self, ref):
+        self._ref = ref
+
+    def __getitem__(self, idx):
+        return self._ref[0] if idx is Ellipsis else self._ref[(0,) + idx]
+
+    def __setitem__(self, idx, value):
+        if idx is Ellipsis:
+            self._ref[0] = value
+        else:
+            self._ref[(0,) + idx] = value
+
+    @property
+    def shape(self):
+        return self._ref.shape[1:]

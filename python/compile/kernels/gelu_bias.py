@@ -1,0 +1,56 @@
+"""Stitched bias-add + GELU Pallas kernel — the thread-composition
+exemplar with an *expensive element-wise tail*.
+
+The paper's §2.1 observation: XLA will fuse light element-wise chains
+(bias add) but refuses to place expensive ops (erf/GELU, 16+
+instructions per element) in the middle of a kernel, because thread
+composition would recompute them per consumer. Here the GELU is the
+kernel *tail*, which both XLA and FusionStitching can fuse — this
+kernel is the baseline "what XLA already does well" exemplar that the
+ablation benches compare the reuse schemes against.
+
+TPU adaptation: the (block_rows, d) tile and the [d] bias are staged
+into VMEM; bias broadcast and the erf-based GELU execute in VREGs; one
+HBM round-trip total.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gelu_bias_kernel(x_ref, b_ref, o_ref):
+    x = x_ref[...] + b_ref[...]
+    # erf-based GELU (BERT's formulation), computed in-register.
+    # `jax.nn.gelu` (not `jax.lax.erf`): jax expands its erf into a
+    # rational polynomial of primitive HLO ops, which the xla_extension
+    # 0.5.1 text parser accepts — the raw `erf` opcode postdates it.
+    o_ref[...] = jax.nn.gelu(x, approximate=False)
+
+
+def gelu_bias(x, b, block_rows=None):
+    """``gelu(x + b)`` over the last axis as ONE Pallas kernel.
+
+    Args:
+      x: ``[rows, d]`` float array.
+      b: ``[d]`` bias.
+      block_rows: rows per grid step (VMEM tiling knob).
+    """
+    rows, d = x.shape
+    if block_rows is None:
+        block_rows = rows if rows <= 128 else 128
+    block_rows = min(block_rows, rows)
+    if rows % block_rows != 0:
+        block_rows = rows
+    grid = (rows // block_rows,)
+    return pl.pallas_call(
+        _gelu_bias_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, d), x.dtype),
+        interpret=True,
+    )(x, b)

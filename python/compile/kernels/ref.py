@@ -1,0 +1,64 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness ground truth).
+
+Every kernel in this package must match its oracle to float32 tolerance
+under ``python/tests/test_kernels.py`` (including the hypothesis shape
+sweeps) before it is allowed into the AOT artifacts.
+"""
+
+import jax.numpy as jnp
+import jax.scipy.special as jss
+
+
+def layernorm_ref(x, gamma, beta, eps=1e-5):
+    """Layer normalization over the last axis (the Figure 1 pattern)."""
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mean) ** 2, axis=-1, keepdims=True)
+    inv = 1.0 / jnp.sqrt(var + eps)
+    return (x - mean) * inv * gamma + beta
+
+
+def softmax_ref(x):
+    """Numerically-stable softmax over the last axis."""
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    return e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def gelu_ref(x):
+    """GELU (erf formulation), as in BERT's FFN."""
+    return 0.5 * x * (1.0 + jss.erf(x / jnp.sqrt(2.0).astype(x.dtype)))
+
+
+def mlp_block_ref(x, w1, b1, w2, b2, gamma, beta):
+    """Dense -> GELU -> Dense -> LayerNorm (one transformer FFN block)."""
+    h = gelu_ref(x @ w1 + b1)
+    y = h @ w2 + b2
+    return layernorm_ref(y, gamma, beta)
+
+
+def gelu_bias_ref(x, b):
+    """Bias add followed by erf-GELU."""
+    return gelu_ref(x + b)
+
+
+def softmax_xent_ref(logits, labels):
+    """Per-row softmax cross-entropy (stable log-sum-exp form)."""
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    shifted = logits - m
+    logp = shifted - jnp.log(jnp.sum(jnp.exp(shifted), axis=-1, keepdims=True))
+    return -jnp.sum(labels * logp, axis=-1)
+
+
+def residual_ln_ref(x, residual, gamma, beta, eps=1e-5):
+    """Transformer sub-layer epilogue: layernorm(x + residual)."""
+    return layernorm_ref(x + residual, gamma, beta, eps)
+
+
+def attention_ref(q, k, v):
+    """Scaled-dot-product attention, [heads, seq, dk] layout."""
+    dk = q.shape[-1]
+    scores = jnp.einsum("hqd,hkd->hqk", q, k) / jnp.sqrt(
+        jnp.asarray(dk, q.dtype)
+    )
+    probs = softmax_ref(scores)
+    return jnp.einsum("hqk,hkd->hqd", probs, v)

@@ -1,0 +1,62 @@
+"""Stitched residual-add + layer-norm Pallas kernel — the *block
+composition over non-homogeneous inputs* exemplar.
+
+The transformer sub-layer epilogue `LN(x + f(x))` is the most common
+multi-tensor memory-intensive pattern in the paper's workloads (it
+appears 2× per encoder layer in BERT/Transformer). XLA fuses the add
+but splits at the LN reductions; FusionStitching stitches the whole
+epilogue: both input tensors are read once, the residual sum, both
+reductions, the rsqrt and the affine tail all happen on-chip, and only
+the normalized output is written back.
+
+TPU adaptation: two (block_rows, d) tiles staged into VMEM, one output
+tile written; mean/variance stay in VREGs (keepdims re-broadcast).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _residual_ln_kernel(x_ref, r_ref, gamma_ref, beta_ref, o_ref, *, eps):
+    h = x_ref[...] + r_ref[...]
+    # Centered two-pass variance (see layernorm.py: free in VMEM,
+    # avoids the E[h^2]-mean^2 float32 cancellation).
+    mean = jnp.mean(h, axis=-1, keepdims=True)
+    centered = h - mean
+    var = jnp.mean(centered * centered, axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps)
+    o_ref[...] = centered * inv * gamma_ref[...] + beta_ref[...]
+
+
+def residual_ln(x, residual, gamma, beta, eps=1e-5, block_rows=None):
+    """``layernorm(x + residual)`` as ONE Pallas kernel.
+
+    Args:
+      x, residual: ``[rows, d]`` float arrays.
+      gamma, beta: ``[d]`` scale/shift.
+      eps: numerical stabilizer.
+      block_rows: rows per grid step (VMEM tiling knob).
+    """
+    rows, d = x.shape
+    if block_rows is None:
+        block_rows = rows if rows <= 128 else 128
+    block_rows = min(block_rows, rows)
+    if rows % block_rows != 0:
+        block_rows = rows
+    grid = (rows // block_rows,)
+    return pl.pallas_call(
+        functools.partial(_residual_ln_kernel, eps=eps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, d), x.dtype),
+        interpret=True,
+    )(x, residual, gamma, beta)

@@ -1,0 +1,47 @@
+"""Stitched softmax Pallas kernel — the warp-composition exemplar.
+
+The paper's warp-composition softmax keeps the row max and the exp-sum
+in lane-0 registers and broadcasts them via register shuffle. The TPU
+analogue holds the row tile in VMEM/VREGs: the two row reductions and
+the exp tail all execute on the staged tile, the reduced scalars are
+re-broadcast in-register (``keepdims=True``), and only the final
+probabilities are written back to HBM. The expensive ``exp`` sits in
+the *middle* of the kernel — the exact placement XLA's thread
+composition forbids (§2.1).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _softmax_kernel(x_ref, o_ref):
+    x = x_ref[...]
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    s = jnp.sum(e, axis=-1, keepdims=True)
+    o_ref[...] = e / s
+
+
+def softmax(x, block_rows=None):
+    """Row softmax over the last axis as ONE Pallas kernel.
+
+    Args:
+      x: ``[rows, d]`` float array.
+      block_rows: rows per grid step (VMEM tiling knob).
+    """
+    rows, d = x.shape
+    if block_rows is None:
+        block_rows = rows if rows <= 128 else 128
+    block_rows = min(block_rows, rows)
+    if rows % block_rows != 0:
+        block_rows = rows
+    grid = (rows // block_rows,)
+    return pl.pallas_call(
+        _softmax_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_rows, d), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, d), x.dtype),
+        interpret=True,
+    )(x)

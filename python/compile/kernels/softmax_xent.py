@@ -1,0 +1,66 @@
+"""Stitched softmax-cross-entropy Pallas kernel — the *deep stitching*
+exemplar: three reductions and two expensive ops interleaved in ONE
+kernel.
+
+This is the pattern the paper's §2.1/§7.4 argument is strongest on.
+The BERT/Transformer loss head is
+
+    max-reduce → sub → exp → sum-reduce → div → log → mul → sum-reduce
+
+XLA splits this at every reduction and at the expensive `exp`/`log`
+producers (4+ kernels, two HBM round-trips of `[rows, vocab]`
+intermediates). FusionStitching's block composition keeps the staged
+row tile and every intermediate on-chip: a single kernel, one read of
+the logits, one write of the per-row loss.
+
+TPU adaptation: the row tile lives in VMEM; the reduced scalars
+(row-max, exp-sum) stay in VREGs (`keepdims=True` re-broadcast — the
+register-shuffle analogue); the `[rows, vocab]` intermediates
+(shifted logits, probabilities, log-probs) never reach HBM.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _softmax_xent_kernel(logits_ref, labels_ref, loss_ref):
+    x = logits_ref[...]
+    y = labels_ref[...]
+    m = jnp.max(x, axis=-1, keepdims=True)          # reduction 1
+    shifted = x - m
+    e = jnp.exp(shifted)                             # expensive, mid-kernel
+    s = jnp.sum(e, axis=-1, keepdims=True)           # reduction 2
+    logp = shifted - jnp.log(s)                      # expensive, mid-kernel
+    loss_ref[...] = -jnp.sum(y * logp, axis=-1)      # reduction 3
+
+
+def softmax_xent(logits, labels, block_rows=None):
+    """Per-row softmax cross-entropy as ONE Pallas kernel.
+
+    Args:
+      logits: ``[rows, vocab]`` float array.
+      labels: ``[rows, vocab]`` one-hot / soft targets.
+      block_rows: rows per grid step (VMEM tiling knob).
+
+    Returns:
+      ``[rows]`` per-row loss.
+    """
+    rows, vocab = logits.shape
+    if block_rows is None:
+        block_rows = rows if rows <= 128 else 128
+    block_rows = min(block_rows, rows)
+    if rows % block_rows != 0:
+        block_rows = rows
+    grid = (rows // block_rows,)
+    return pl.pallas_call(
+        _softmax_xent_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, vocab), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, vocab), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((rows,), logits.dtype),
+        interpret=True,
+    )(logits, labels)

@@ -1,0 +1,178 @@
+"""Layer-2 JAX models: the compute graphs whose fusion behaviour the
+reproduction validates *numerically*.
+
+Two families per pattern:
+
+* ``*_fused`` — the FusionStitching outcome: the whole pattern is one
+  module whose hot spot is a single Pallas kernel (intermediates stay
+  on-chip).
+* ``ln_part1..4`` — the **exact 4-kernel partition XLA produces for
+  layer normalization in Figure 1** (two kernels ending in reductions,
+  one ending at the expensive rsqrt, one tail). The Rust Fig.-1 bench
+  executes the fused module vs the chained 4-module pipeline through
+  PJRT and checks both numerics and kernel-count/latency shape.
+
+Shape constants here must match ``rust/src/runtime/artifacts.rs`` and
+the manifest emitted by :mod:`compile.aot`.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import attention, gelu_bias, layernorm, residual_ln, softmax, softmax_xent
+from .kernels import ref
+
+# ---------------------------------------------------------------------
+# Canonical artifact shapes (mirrored in the emitted manifest.json).
+# ---------------------------------------------------------------------
+LN_ROWS, LN_DIM = 512, 256
+SM_ROWS, SM_DIM = 256, 128
+MLP_ROWS, MLP_IN, MLP_HIDDEN = 128, 256, 512
+ENC_BATCH, ENC_SEQ, ENC_HIDDEN, ENC_HEADS = 8, 32, 64, 4
+XENT_ROWS, XENT_VOCAB = 256, 512
+GELU_ROWS, GELU_DIM = 256, 512
+ATTN_HEADS, ATTN_SEQ, ATTN_DK = 8, 32, 16
+
+
+# ---------------------------------------------------------------------
+# Layer normalization: fused (FS) vs the 4-kernel XLA partition (Fig. 1)
+# ---------------------------------------------------------------------
+
+def ln_fused(x, gamma, beta):
+    """Whole LN as one stitched Pallas kernel (FusionStitching's Fig. 1
+    result)."""
+    return (layernorm(x, gamma, beta),)
+
+
+def ln_part1_sum(x):
+    """xla-fusion.3: the first reduction (sum for the mean)."""
+    return (jnp.sum(x, axis=-1),)
+
+
+def ln_part2_var(x, row_sum):
+    """xla-fusion.7-side: mean division, centering, squared sum."""
+    n = jnp.asarray(x.shape[-1], x.dtype)
+    mean = (row_sum / n)[:, None]
+    centered = x - mean
+    var_sum = jnp.sum(centered * centered, axis=-1)
+    return (centered, var_sum)
+
+
+def ln_part3_rsqrt(var_sum, n_elems, eps):
+    """xla-fusion.2: the expensive rsqrt on the small tensor."""
+    var = var_sum / n_elems
+    return (jax.lax.rsqrt(var + eps),)
+
+
+def ln_part4_scale(centered, inv, gamma, beta):
+    """Tail fusion: normalize, scale, shift."""
+    return (centered * inv[:, None] * gamma + beta,)
+
+
+def ln_reference(x, gamma, beta):
+    """Pure-jnp oracle as a module of its own (parity checking)."""
+    return (ref.layernorm_ref(x, gamma, beta),)
+
+
+# ---------------------------------------------------------------------
+# Softmax and MLP block
+# ---------------------------------------------------------------------
+
+def softmax_fused(x):
+    """Row softmax as one stitched Pallas kernel."""
+    return (softmax(x),)
+
+
+def gelu_bias_fused(x, b):
+    """Bias + erf-GELU as one stitched Pallas kernel."""
+    return (gelu_bias(x, b),)
+
+
+def softmax_xent_fused(logits, labels):
+    """Softmax cross-entropy head as one stitched Pallas kernel — the
+    deep-stitching exemplar (3 reductions + 2 expensive mid-kernel ops)."""
+    return (softmax_xent(logits, labels),)
+
+
+def softmax_xent_unfused(logits, labels):
+    """The same loss head as the XLA-style multi-kernel pipeline (each
+    reduction and each expensive producer breaks the fusion)."""
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    shifted = logits - m
+    e = jnp.exp(shifted)
+    s = jnp.sum(e, axis=-1, keepdims=True)
+    logp = shifted - jnp.log(s)
+    return (-jnp.sum(labels * logp, axis=-1),)
+
+
+def attention_fused(q, k, v):
+    """Per-head attention as one stitched Pallas kernel (block
+    composition over non-homogeneous MXU/VPU stages)."""
+    return (attention(q, k, v),)
+
+
+def residual_ln_fused(x, residual, gamma, beta):
+    """Sub-layer epilogue layernorm(x + residual) as one stitched
+    Pallas kernel."""
+    return (residual_ln(x, residual, gamma, beta),)
+
+
+def mlp_block(x, w1, b1, w2, b2, gamma, beta):
+    """Dense → GELU → Dense → stitched-LN. The GEMMs stay library ops
+    (never fused, §4); the memory-intensive tail is the Pallas kernel."""
+    h = jax.nn.gelu(x @ w1 + b1, approximate=False)
+    y = h @ w2 + b2
+    return (layernorm(y, gamma, beta),)
+
+
+# ---------------------------------------------------------------------
+# Transformer encoder layer (serving example workload)
+# ---------------------------------------------------------------------
+
+def encoder_layer(x, wq, wk, wv, wo, w1, b1, w2, b2, g1, b1n, g2, b2n):
+    """One encoder layer: MHA (stitched softmax) + LN + FFN + LN.
+
+    ``x``: [ENC_BATCH, ENC_SEQ, ENC_HIDDEN].
+    """
+    b, s, h = x.shape
+    heads = ENC_HEADS
+    dk = h // heads
+    xf = x.reshape(b * s, h)
+
+    def split(y):
+        return y.reshape(b, s, heads, dk).transpose(0, 2, 1, 3)
+
+    q, k, v = split(xf @ wq), split(xf @ wk), split(xf @ wv)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(
+        jnp.asarray(dk, x.dtype)
+    )
+    probs = softmax(scores.reshape(b * heads * s, s)).reshape(b, heads, s, s)
+    ctx = jnp.einsum("bhqk,bhkd->bhqd", probs, v)
+    ctx = ctx.transpose(0, 2, 1, 3).reshape(b * s, h)
+    attn = ctx @ wo
+
+    y1 = layernorm(xf + attn, g1, b1n)
+    ff = jax.nn.gelu(y1 @ w1 + b1, approximate=False) @ w2 + b2
+    y2 = layernorm(y1 + ff, g2, b2n)
+    return (y2.reshape(b, s, h),)
+
+
+def encoder_layer_params(key):
+    """Deterministic parameter set for the encoder layer artifacts."""
+    ks = jax.random.split(key, 9)
+    h, inner = ENC_HIDDEN, 4 * ENC_HIDDEN
+    scale = 0.05
+    return dict(
+        wq=jax.random.normal(ks[0], (h, h), jnp.float32) * scale,
+        wk=jax.random.normal(ks[1], (h, h), jnp.float32) * scale,
+        wv=jax.random.normal(ks[2], (h, h), jnp.float32) * scale,
+        wo=jax.random.normal(ks[3], (h, h), jnp.float32) * scale,
+        w1=jax.random.normal(ks[4], (h, inner), jnp.float32) * scale,
+        b1=jnp.zeros((inner,), jnp.float32),
+        w2=jax.random.normal(ks[5], (inner, h), jnp.float32) * scale,
+        b2=jnp.zeros((h,), jnp.float32),
+        g1=jnp.ones((h,), jnp.float32),
+        b1n=jnp.zeros((h,), jnp.float32),
+        g2=jnp.ones((h,), jnp.float32),
+        b2n=jnp.zeros((h,), jnp.float32),
+    )

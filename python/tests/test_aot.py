@@ -1,0 +1,99 @@
+"""AOT path checks: every artifact lowers to parseable HLO text.
+
+These run the actual lowering used by ``make artifacts`` (on a temp
+dir) and assert the HLO-text invariants the Rust loader depends on.
+"""
+
+import json
+import os
+
+import pytest
+
+from compile import aot
+
+
+@pytest.fixture(scope="module")
+def lowered(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    entries = aot.build_artifacts()
+    texts = {}
+    for name, fn, example in entries:
+        import jax
+
+        texts[name] = aot.to_hlo_text(jax.jit(fn).lower(*example))
+    return out, texts
+
+
+def test_all_artifacts_lower(lowered):
+    _, texts = lowered
+    assert len(texts) >= 9
+    for name, text in texts.items():
+        assert text.startswith("HloModule"), f"{name} is not HLO text"
+        assert "ENTRY" in text, f"{name} lacks an entry computation"
+
+
+def test_fused_ln_is_single_module_with_internal_reductions(lowered):
+    _, texts = lowered
+    t = texts["ln_fused"]
+    # The stitched module contains the reductions *inside* one module —
+    # the property the Fig. 1 partition splits across four.
+    assert t.count("reduce") >= 2
+    assert "rsqrt" in t or "sqrt" in t
+
+
+def test_partition_modules_split_the_reductions(lowered):
+    _, texts = lowered
+    assert "reduce" in texts["ln_part1_sum"]
+    assert "reduce" in texts["ln_part2_var"]
+    assert "rsqrt" in texts["ln_part3_rsqrt"] or "sqrt" in texts["ln_part3_rsqrt"]
+    # The tail is pure element-wise: no reductions at all.
+    assert "reduce(" not in texts["ln_part4_scale"]
+
+
+def test_manifest_contents():
+    m = aot.manifest()
+    assert m["ln"]["rows"] == 512 and m["ln"]["dim"] == 256
+    assert set(m) == {"ln", "softmax", "mlp", "encoder", "xent", "gelu", "attn"}
+    # JSON-serializable (the Rust side reads it).
+    json.dumps(m)
+
+
+def test_artifact_set_matches_rust_runtime():
+    """The artifact stems must cover everything
+    rust/src/runtime/artifacts.rs::ArtifactSet::all() expects — a
+    build-time parity check between the two layers."""
+    names = {name for name, _, _ in aot.build_artifacts()}
+    rust_src = os.path.join(
+        os.path.dirname(__file__), "..", "..", "rust", "src", "runtime", "artifacts.rs"
+    )
+    with open(rust_src) as f:
+        text = f.read()
+    import re
+
+    rust_stems = set(re.findall(r'&\'static str = "([a-z0-9_]+)"', text))
+    missing = rust_stems - names
+    assert not missing, f"rust expects artifacts python does not lower: {missing}"
+
+
+def test_deep_stitching_modules_share_numerics(lowered):
+    _, texts = lowered
+    # Fused and unfused xent must both lower; the fused one carries the
+    # Pallas grid loop or the inlined body, the unfused one plain jnp.
+    assert "softmax_xent_fused" in texts and "softmax_xent_unfused" in texts
+    for t in (texts["softmax_xent_fused"], texts["softmax_xent_unfused"]):
+        assert t.count("reduce") >= 3  # max, sum, label-sum
+        assert "exponential" in t and "log" in t
+
+
+def test_main_writes_files(tmp_path):
+    import sys
+    from unittest import mock
+
+    out = tmp_path / "arts"
+    argv = ["aot", "--out", str(out), "--only", "ln_part1_sum"]
+    with mock.patch.object(sys, "argv", argv):
+        aot.main()
+    assert (out / "ln_part1_sum.hlo.txt").exists()
+    assert (out / "manifest.json").exists()
+    text = (out / "ln_part1_sum.hlo.txt").read_text()
+    assert text.startswith("HloModule")

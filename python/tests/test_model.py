@@ -1,0 +1,121 @@
+"""L2 checks: the fused modules equal their op-by-op decompositions.
+
+The key assertion for the Figure 1 experiment: composing the four
+XLA-partition modules reproduces the fused single-kernel module's
+output exactly — fusion changes *where* intermediates live, never the
+numbers.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _ln_inputs(seed=0):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    x = jax.random.normal(k1, (model.LN_ROWS, model.LN_DIM), jnp.float32)
+    gamma = 1.0 + 0.1 * jax.random.normal(k2, (model.LN_DIM,), jnp.float32)
+    beta = 0.1 * jax.random.normal(k3, (model.LN_DIM,), jnp.float32)
+    return x, gamma, beta
+
+
+class TestFig1Partition:
+    def test_four_part_pipeline_equals_fused(self):
+        x, gamma, beta = _ln_inputs()
+        (fused,) = model.ln_fused(x, gamma, beta)
+        # Chain the 4 XLA kernels exactly as the Rust bench does.
+        (row_sum,) = model.ln_part1_sum(x)
+        centered, var_sum = model.ln_part2_var(x, row_sum)
+        (inv,) = model.ln_part3_rsqrt(var_sum, float(model.LN_DIM), 1e-5)
+        (out,) = model.ln_part4_scale(centered, inv, gamma, beta)
+        np.testing.assert_allclose(out, fused, rtol=1e-4, atol=1e-4)
+
+    def test_fused_equals_oracle_module(self):
+        x, gamma, beta = _ln_inputs(1)
+        (fused,) = model.ln_fused(x, gamma, beta)
+        (oracle,) = model.ln_reference(x, gamma, beta)
+        np.testing.assert_allclose(fused, oracle, rtol=1e-4, atol=1e-4)
+
+    def test_partition_intermediates_shapes(self):
+        x, _, _ = _ln_inputs(2)
+        (row_sum,) = model.ln_part1_sum(x)
+        assert row_sum.shape == (model.LN_ROWS,)
+        centered, var_sum = model.ln_part2_var(x, row_sum)
+        assert centered.shape == x.shape
+        assert var_sum.shape == (model.LN_ROWS,)
+
+
+class TestMlpBlock:
+    def test_matches_reference(self):
+        ks = jax.random.split(jax.random.PRNGKey(3), 5)
+        x = jax.random.normal(ks[0], (model.MLP_ROWS, model.MLP_IN), jnp.float32)
+        w1 = 0.05 * jax.random.normal(ks[1], (model.MLP_IN, model.MLP_HIDDEN), jnp.float32)
+        b1 = jnp.zeros((model.MLP_HIDDEN,), jnp.float32)
+        w2 = 0.05 * jax.random.normal(ks[2], (model.MLP_HIDDEN, model.MLP_IN), jnp.float32)
+        b2 = jnp.zeros((model.MLP_IN,), jnp.float32)
+        gamma = jnp.ones((model.MLP_IN,), jnp.float32)
+        beta = jnp.zeros((model.MLP_IN,), jnp.float32)
+        (got,) = model.mlp_block(x, w1, b1, w2, b2, gamma, beta)
+        want = ref.mlp_block_ref(x, w1, b1, w2, b2, gamma, beta)
+        np.testing.assert_allclose(got, want, rtol=5e-4, atol=5e-4)
+
+
+class TestEncoderLayer:
+    def test_shapes_and_finite(self):
+        params = model.encoder_layer_params(jax.random.PRNGKey(0))
+        x = jax.random.normal(
+            jax.random.PRNGKey(9),
+            (model.ENC_BATCH, model.ENC_SEQ, model.ENC_HIDDEN),
+            jnp.float32,
+        )
+        (y,) = model.encoder_layer(x, **params)
+        assert y.shape == x.shape
+        assert np.isfinite(np.asarray(y)).all()
+
+    def test_deterministic_params(self):
+        a = model.encoder_layer_params(jax.random.PRNGKey(0))
+        b = model.encoder_layer_params(jax.random.PRNGKey(0))
+        for k in a:
+            np.testing.assert_array_equal(a[k], b[k])
+
+
+class TestStitchedAttentionModule:
+    def test_attention_fused_matches_encoder_math(self):
+        """The stitched attention kernel equals the encoder layer's
+        explicit einsum attention math on the same q/k/v."""
+        ks = jax.random.split(jax.random.PRNGKey(11), 3)
+        shape = (model.ATTN_HEADS, model.ATTN_SEQ, model.ATTN_DK)
+        q, k, v = (jax.random.normal(kk, shape, jnp.float32) for kk in ks)
+        (got,) = model.attention_fused(q, k, v)
+        dk = model.ATTN_DK
+        scores = jnp.einsum("hqd,hkd->hqk", q, k) / jnp.sqrt(jnp.float32(dk))
+        probs = jax.nn.softmax(scores, axis=-1)
+        want = jnp.einsum("hqk,hkd->hqd", probs, v)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+class TestResidualLnModule:
+    def test_residual_ln_fused_matches_composition(self):
+        ks = jax.random.split(jax.random.PRNGKey(12), 4)
+        x = jax.random.normal(ks[0], (model.LN_ROWS, model.LN_DIM), jnp.float32)
+        r = jax.random.normal(ks[1], (model.LN_ROWS, model.LN_DIM), jnp.float32)
+        g = 1.0 + 0.1 * jax.random.normal(ks[2], (model.LN_DIM,), jnp.float32)
+        b = 0.1 * jax.random.normal(ks[3], (model.LN_DIM,), jnp.float32)
+        (got,) = model.residual_ln_fused(x, r, g, b)
+        (want,) = model.ln_reference(x + r, g, b)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+class TestGeluBiasModule:
+    def test_gelu_bias_fused_matches_mlp_front(self):
+        ks = jax.random.split(jax.random.PRNGKey(13), 2)
+        x = jax.random.normal(ks[0], (model.GELU_ROWS, model.GELU_DIM), jnp.float32)
+        b = 0.1 * jax.random.normal(ks[1], (model.GELU_DIM,), jnp.float32)
+        (got,) = model.gelu_bias_fused(x, b)
+        want = jax.nn.gelu(x + b, approximate=False)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)

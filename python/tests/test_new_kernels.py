@@ -1,0 +1,297 @@
+"""L1 correctness for the second kernel wave: gelu_bias, softmax_xent,
+residual_ln — each vs its pure-jnp oracle, fixed shapes + hypothesis
+sweeps (same protocol as test_kernels.py)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import gelu_bias, residual_ln, softmax_xent
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(key, shape, dtype=jnp.float32, scale=1.0):
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+def one_hot_rows(key, rows, vocab):
+    idx = jax.random.randint(key, (rows,), 0, vocab)
+    return jax.nn.one_hot(idx, vocab, dtype=jnp.float32)
+
+
+# ---------------------------------------------------------------------
+# gelu_bias
+# ---------------------------------------------------------------------
+
+class TestGeluBiasFixed:
+    def test_matches_reference_canonical_shape(self):
+        x = rand(jax.random.PRNGKey(0), (256, 512))
+        b = rand(jax.random.PRNGKey(1), (512,))
+        np.testing.assert_allclose(
+            gelu_bias(x, b), ref.gelu_bias_ref(x, b), rtol=1e-5, atol=1e-6
+        )
+
+    def test_matches_jax_nn_gelu(self):
+        x = rand(jax.random.PRNGKey(2), (64, 128), scale=2.0)
+        b = jnp.zeros((128,), jnp.float32)
+        want = jax.nn.gelu(x, approximate=False)
+        np.testing.assert_allclose(gelu_bias(x, b), want, rtol=1e-5, atol=1e-6)
+
+    def test_blocked_equals_oneshot(self):
+        x = rand(jax.random.PRNGKey(3), (256, 64))
+        b = rand(jax.random.PRNGKey(4), (64,))
+        np.testing.assert_allclose(
+            gelu_bias(x, b, block_rows=256),
+            gelu_bias(x, b, block_rows=32),
+            rtol=1e-6,
+            atol=1e-7,
+        )
+
+    def test_negative_saturation(self):
+        # GELU(x) → 0 for very negative x; must not NaN.
+        x = jnp.full((4, 8), -50.0, jnp.float32)
+        y = np.asarray(gelu_bias(x, jnp.zeros((8,), jnp.float32)))
+        assert np.isfinite(y).all()
+        # f32 erf saturates to -1 + ulp ⇒ |gelu(-50)| ≲ 5e-6, not exact 0.
+        np.testing.assert_allclose(y, 0.0, atol=1e-5)
+
+
+# ---------------------------------------------------------------------
+# softmax_xent
+# ---------------------------------------------------------------------
+
+class TestSoftmaxXentFixed:
+    def test_matches_reference_canonical_shape(self):
+        kl, kb = jax.random.split(jax.random.PRNGKey(0))
+        logits = rand(kl, (256, 512), scale=3.0)
+        labels = one_hot_rows(kb, 256, 512)
+        np.testing.assert_allclose(
+            softmax_xent(logits, labels),
+            ref.softmax_xent_ref(logits, labels),
+            rtol=1e-5,
+            atol=1e-5,
+        )
+
+    def test_uniform_logits_give_log_vocab(self):
+        # xent(uniform, one-hot) = log(vocab).
+        vocab = 64
+        logits = jnp.zeros((8, vocab), jnp.float32)
+        labels = one_hot_rows(jax.random.PRNGKey(1), 8, vocab)
+        got = np.asarray(softmax_xent(logits, labels))
+        np.testing.assert_allclose(got, np.log(vocab), rtol=1e-5)
+
+    def test_confident_correct_prediction_has_low_loss(self):
+        labels = jax.nn.one_hot(jnp.array([2]), 8, dtype=jnp.float32)
+        logits = labels * 100.0
+        loss = float(np.asarray(softmax_xent(logits, labels))[0])
+        assert loss < 1e-4
+
+    def test_large_logits_stable(self):
+        logits = jnp.array([[1e4, 0.0, -1e4]], jnp.float32)
+        labels = jnp.array([[1.0, 0.0, 0.0]], jnp.float32)
+        loss = np.asarray(softmax_xent(logits, labels))
+        assert np.isfinite(loss).all()
+
+    def test_loss_is_nonnegative_for_onehot(self):
+        kl, kb = jax.random.split(jax.random.PRNGKey(2))
+        logits = rand(kl, (32, 100), scale=5.0)
+        labels = one_hot_rows(kb, 32, 100)
+        assert (np.asarray(softmax_xent(logits, labels)) >= -1e-6).all()
+
+    def test_blocked_equals_oneshot(self):
+        kl, kb = jax.random.split(jax.random.PRNGKey(3))
+        logits = rand(kl, (128, 48))
+        labels = one_hot_rows(kb, 128, 48)
+        np.testing.assert_allclose(
+            softmax_xent(logits, labels, block_rows=128),
+            softmax_xent(logits, labels, block_rows=16),
+            rtol=1e-6,
+            atol=1e-6,
+        )
+
+
+# ---------------------------------------------------------------------
+# residual_ln
+# ---------------------------------------------------------------------
+
+class TestResidualLnFixed:
+    def test_matches_reference_canonical_shape(self):
+        ks = jax.random.split(jax.random.PRNGKey(0), 4)
+        x = rand(ks[0], (512, 256))
+        r = rand(ks[1], (512, 256))
+        g = rand(ks[2], (256,))
+        b = rand(ks[3], (256,))
+        np.testing.assert_allclose(
+            residual_ln(x, r, g, b),
+            ref.residual_ln_ref(x, r, g, b),
+            rtol=1e-4,
+            atol=1e-4,
+        )
+
+    def test_zero_residual_equals_plain_ln(self):
+        x = rand(jax.random.PRNGKey(1), (64, 128))
+        z = jnp.zeros_like(x)
+        g = jnp.ones((128,), jnp.float32)
+        b = jnp.zeros((128,), jnp.float32)
+        np.testing.assert_allclose(
+            residual_ln(x, z, g, b),
+            ref.layernorm_ref(x, g, b),
+            rtol=1e-5,
+            atol=1e-5,
+        )
+
+    def test_symmetric_in_operands(self):
+        # x + r == r + x ⇒ outputs identical.
+        x = rand(jax.random.PRNGKey(2), (32, 64))
+        r = rand(jax.random.PRNGKey(3), (32, 64))
+        g = jnp.ones((64,), jnp.float32)
+        b = jnp.zeros((64,), jnp.float32)
+        np.testing.assert_allclose(
+            residual_ln(x, r, g, b), residual_ln(r, x, g, b), rtol=1e-6, atol=1e-7
+        )
+
+    def test_blocked_equals_oneshot(self):
+        ks = jax.random.split(jax.random.PRNGKey(4), 4)
+        x = rand(ks[0], (256, 32))
+        r = rand(ks[1], (256, 32))
+        g = rand(ks[2], (32,))
+        b = rand(ks[3], (32,))
+        np.testing.assert_allclose(
+            residual_ln(x, r, g, b, block_rows=256),
+            residual_ln(x, r, g, b, block_rows=64),
+            rtol=1e-6,
+            atol=1e-6,
+        )
+
+
+# ---------------------------------------------------------------------
+# Hypothesis sweeps
+# ---------------------------------------------------------------------
+
+shape_strategy = st.tuples(
+    st.integers(min_value=1, max_value=80),
+    st.integers(min_value=2, max_value=128),
+)
+
+
+@settings(max_examples=20, deadline=None)
+@given(shape=shape_strategy, seed=st.integers(0, 2**31 - 1), scale=st.sampled_from([0.1, 1.0, 8.0]))
+def test_gelu_bias_matches_ref_over_shapes(shape, seed, scale):
+    rows, d = shape
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    x = rand(k1, (rows, d), scale=scale)
+    b = rand(k2, (d,))
+    np.testing.assert_allclose(
+        gelu_bias(x, b), ref.gelu_bias_ref(x, b), rtol=2e-4, atol=2e-4
+    )
+
+
+@settings(max_examples=20, deadline=None)
+@given(shape=shape_strategy, seed=st.integers(0, 2**31 - 1))
+def test_softmax_xent_matches_ref_over_shapes(shape, seed):
+    rows, vocab = shape
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    logits = rand(k1, (rows, vocab), scale=3.0)
+    labels = one_hot_rows(k2, rows, vocab)
+    np.testing.assert_allclose(
+        softmax_xent(logits, labels),
+        ref.softmax_xent_ref(logits, labels),
+        rtol=2e-4,
+        atol=2e-4,
+    )
+
+
+@settings(max_examples=20, deadline=None)
+@given(shape=shape_strategy, seed=st.integers(0, 2**31 - 1))
+def test_residual_ln_matches_ref_over_shapes(shape, seed):
+    rows, d = shape
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    x = rand(ks[0], (rows, d))
+    r = rand(ks[1], (rows, d))
+    g = rand(ks[2], (d,))
+    b = rand(ks[3], (d,))
+    np.testing.assert_allclose(
+        residual_ln(x, r, g, b),
+        ref.residual_ln_ref(x, r, g, b),
+        rtol=3e-4,
+        atol=3e-4,
+    )
+
+
+# ---------------------------------------------------------------------
+# Fused-vs-unfused module parity (the numeric half of the Fig. 1 claim
+# for the loss head)
+# ---------------------------------------------------------------------
+
+def test_xent_fused_module_matches_unfused_module():
+    from compile import model
+
+    kl, kb = jax.random.split(jax.random.PRNGKey(9))
+    logits = rand(kl, (model.XENT_ROWS, model.XENT_VOCAB), scale=2.0)
+    labels = one_hot_rows(kb, model.XENT_ROWS, model.XENT_VOCAB)
+    (fused,) = model.softmax_xent_fused(logits, labels)
+    (unfused,) = model.softmax_xent_unfused(logits, labels)
+    np.testing.assert_allclose(fused, unfused, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------
+# attention (single-block MXU/VPU composition)
+# ---------------------------------------------------------------------
+
+class TestAttentionFixed:
+    def test_matches_reference_canonical_shape(self):
+        from compile.kernels import attention
+
+        ks = jax.random.split(jax.random.PRNGKey(0), 3)
+        q = rand(ks[0], (8, 32, 16))
+        k = rand(ks[1], (8, 32, 16))
+        v = rand(ks[2], (8, 32, 16))
+        np.testing.assert_allclose(
+            attention(q, k, v), ref.attention_ref(q, k, v), rtol=1e-5, atol=1e-5
+        )
+
+    def test_rows_attend_softly(self):
+        from compile.kernels import attention
+
+        # With k == v == identity-ish rows, output rows are convex
+        # combinations of v rows: each output stays inside v's range.
+        ks = jax.random.split(jax.random.PRNGKey(1), 3)
+        q = rand(ks[0], (2, 8, 4), scale=0.1)
+        k = rand(ks[1], (2, 8, 4), scale=0.1)
+        v = rand(ks[2], (2, 8, 4))
+        out = np.asarray(attention(q, k, v))
+        vmin, vmax = np.asarray(v).min(), np.asarray(v).max()
+        assert (out >= vmin - 1e-5).all() and (out <= vmax + 1e-5).all()
+
+    def test_peaked_scores_select_one_row(self):
+        from compile.kernels import attention
+
+        # A huge q·k alignment on one key makes attention ≈ that v row.
+        h, s, d = 1, 4, 4
+        q = jnp.zeros((h, s, d), jnp.float32).at[0, 0, 0].set(100.0)
+        k = jnp.zeros((h, s, d), jnp.float32).at[0, 2, 0].set(100.0)
+        v = jnp.arange(h * s * d, dtype=jnp.float32).reshape(h, s, d)
+        out = np.asarray(attention(q, k, v))
+        np.testing.assert_allclose(out[0, 0], np.asarray(v)[0, 2], rtol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    heads=st.integers(1, 6),
+    seq=st.integers(2, 24),
+    dk=st.integers(2, 24),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_attention_matches_ref_over_shapes(heads, seq, dk, seed):
+    from compile.kernels import attention
+
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = rand(ks[0], (heads, seq, dk))
+    k = rand(ks[1], (heads, seq, dk))
+    v = rand(ks[2], (heads, seq, dk))
+    np.testing.assert_allclose(
+        attention(q, k, v), ref.attention_ref(q, k, v), rtol=2e-4, atol=2e-4
+    )

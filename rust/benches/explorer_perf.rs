@@ -1,0 +1,80 @@
+//! **Explorer performance**: wall-clock of the fusion-exploration hot
+//! paths — the §Perf target for L3 (JIT latency is the paper's own
+//! constraint: "JIT approach requires timely optimization", §5.2).
+//!
+//! Reports, per stage and per graph size:
+//! * candidate generation (PatternReduction DP),
+//! * beam-search plan composition,
+//! * full explore() including validation/backfill/remote fusion,
+//! * codegen tuning of the largest pattern.
+//!
+//! Run: `cargo bench --bench explorer_perf`. EXPERIMENTS.md §Perf
+//! records before/after numbers for every optimization applied here.
+
+use fusion_stitching::codegen::{tune_pattern, TunerOptions};
+use fusion_stitching::explorer::{self, BeamOptions, ExploreOptions};
+use fusion_stitching::gpu::DeviceSpec;
+use fusion_stitching::util::{bench_loop, Prng, Table};
+use fusion_stitching::workloads::synthetic::{generate, SyntheticConfig};
+use fusion_stitching::workloads::{self, Mode};
+
+fn main() {
+    let device = DeviceSpec::v100();
+    let opts = ExploreOptions::default();
+
+    // ---- stage-by-stage on synthetic graphs of growing size -----------
+    println!("== explorer hot-path wall-clock (synthetic graphs) ==\n");
+    let mut t = Table::new(vec![
+        "ops", "candidates ms", "beam ms", "explore ms", "ms/op",
+    ]);
+    for num_ops in [50usize, 150, 400, 1000] {
+        let cfg = SyntheticConfig { num_ops, ..Default::default() };
+        let g = generate(&cfg, &mut Prng::new(42));
+        let cand_stats = bench_loop(1, 5, || explorer::candidate_patterns(&g, &device, &opts));
+        let cands = explorer::candidate_patterns(&g, &device, &opts);
+        let beam_stats = bench_loop(1, 5, || {
+            explorer::compose_plan(&g, &device, &cands, &BeamOptions::default())
+        });
+        let explore_stats = bench_loop(1, 5, || explorer::explore(&g, &device, &opts));
+        t.row(vec![
+            g.len().to_string(),
+            format!("{:.2}", cand_stats.mean_ms()),
+            format!("{:.2}", beam_stats.mean_ms()),
+            format!("{:.2}", explore_stats.mean_ms()),
+            format!("{:.4}", explore_stats.mean_ms() / g.len() as f64),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // ---- real workloads ------------------------------------------------
+    println!("== explore() on the evaluation workloads ==\n");
+    let mut t2 = Table::new(vec!["workload", "ops", "explore ms", "patterns"]);
+    for w in [
+        workloads::models::bert(Mode::Infer),
+        workloads::models::bert(Mode::Train),
+        workloads::models::asr(),
+    ] {
+        let stats = bench_loop(1, 3, || explorer::explore(&w.graph, &device, &opts));
+        let plan = explorer::explore(&w.graph, &device, &opts);
+        t2.row(vec![
+            w.key(),
+            w.graph.len().to_string(),
+            format!("{:.1}", stats.mean_ms()),
+            plan.patterns.len().to_string(),
+        ]);
+    }
+    println!("{}", t2.render());
+
+    // ---- codegen tuner on the biggest pattern --------------------------
+    let w = workloads::models::bert(Mode::Infer);
+    let plan = explorer::explore(&w.graph, &device, &opts);
+    if let Some(big) = plan.patterns.iter().max_by_key(|p| p.len()) {
+        let stats = bench_loop(1, 10, || {
+            tune_pattern(&w.graph, big.nodes(), &device, &TunerOptions::fusion_stitching())
+        });
+        println!(
+            "codegen tuner on largest BERT-infer pattern ({} ops): {stats}",
+            big.len()
+        );
+    }
+}

@@ -1,0 +1,148 @@
+//! **Figure 1 / §7.4**: the layer-normalization case study.
+//!
+//! Three views of the same claim:
+//!
+//! 1. **Plan shape** — XLA forms 4 fusion kernels, FusionStitching
+//!    stitches all of LN into 1 (checked on both the hand-built graph
+//!    and the real jax-lowered HLO from `artifacts/`).
+//! 2. **Simulated kernel time** — the single FS kernel vs the sum of
+//!    XLA's 4 (paper: 1.23× ignoring launch overhead).
+//! 3. **Real PJRT wall-clock** — the fused 1-module artifact vs the
+//!    4-module pipeline, executed on the CPU PJRT client (numerics
+//!    identical, fewer dispatches + no host round-trips between parts).
+//!
+//! Run: `cargo bench --bench fig1_layernorm` (needs `make artifacts`
+//! for view 3; views 1–2 always run).
+
+use fusion_stitching::baselines;
+use fusion_stitching::codegen::{tune_pattern, TunerOptions};
+use fusion_stitching::explorer::{self, ExploreOptions};
+use fusion_stitching::gpu::DeviceSpec;
+use fusion_stitching::graph::{DType, Graph, Shape};
+use fusion_stitching::runtime::{artifact_path, artifacts_available, ArtifactSet, RuntimeClient};
+use fusion_stitching::util::bench_loop;
+use fusion_stitching::workloads::blocks;
+
+fn ln_graph(rows: usize, dim: usize) -> Graph {
+    let mut g = Graph::new("ln");
+    let x = g.param(Shape::new(vec![rows, dim]), DType::F32, "x");
+    let _ = blocks::layer_norm(&mut g, x, "ln");
+    g
+}
+
+fn main() {
+    let device = DeviceSpec::v100();
+    let opts = ExploreOptions::default();
+
+    // ---- view 1: plan shape (hand-built graph, BERT-ish shape) -------
+    let g = ln_graph(4096, 768);
+    let xla = baselines::xla::plan(&g);
+    let fs = explorer::explore(&g, &device, &opts);
+    println!("== Figure 1: layer normalization fusion ==\n");
+    println!(
+        "hand-built LN [4096x768]: XLA → {} kernels, FS → {} kernels  (paper: 4 → 1)",
+        xla.kernels(&g).len(),
+        fs.kernels(&g).len()
+    );
+
+    // Same check on real jax-lowered HLO.
+    if let Ok(module) = fusion_stitching::hlo::parse_file(artifact_path("ln_reference")) {
+        if let Ok(gh) = fusion_stitching::hlo::to_graph(&module) {
+            let xk = baselines::xla::plan(&gh).kernels(&gh).len();
+            let fk = explorer::explore(&gh, &device, &opts).kernels(&gh).len();
+            println!("jax-lowered LN [512x256]: XLA → {xk} kernels, FS → {fk} kernels");
+        }
+    }
+
+    // ---- view 2: simulated kernel time --------------------------------
+    let sim = fusion_stitching::gpu::Simulator::new(
+        device.clone(),
+        fusion_stitching::gpu::SimConfig::xla_runtime(),
+    );
+    let sum_time = |plan: &fusion_stitching::explorer::FusionPlan| -> f64 {
+        plan.kernels(&g)
+            .iter()
+            .enumerate()
+            .filter_map(|(i, p)| {
+                fusion_stitching::codegen::emit_kernel(
+                    &g,
+                    p.nodes(),
+                    format!("k{i}"),
+                    &device,
+                    &fusion_stitching::codegen::EmitConfig::fusion_stitching(),
+                )
+            })
+            .map(|(spec, _)| sim.kernel_time_us(&spec))
+            .sum()
+    };
+    let xla_us = sum_time(&xla);
+    let fs_us = sum_time(&fs);
+    println!(
+        "\nsimulated kernel time: XLA 4-kernel sum {xla_us:.1} µs, FS single kernel {fs_us:.1} µs \
+         → {:.2}x  (paper: 1.23x, launch overhead excluded)",
+        xla_us / fs_us
+    );
+
+    // Tuning detail of the single FS kernel.
+    if let Some(t) = tune_pattern(&g, fs.patterns[0].nodes(), &device, &TunerOptions::fusion_stitching()) {
+        println!(
+            "FS kernel schedule: {} | est {:.1} µs, occupancy {:.2}, {} B shmem",
+            t.summary(),
+            t.estimate.time_us,
+            t.estimate.occupancy,
+            t.estimate.shmem_per_block
+        );
+    }
+
+    // ---- view 3: real PJRT wall-clock ---------------------------------
+    if !artifacts_available(&[
+        ArtifactSet::LN_FUSED,
+        ArtifactSet::LN_PART1,
+        ArtifactSet::LN_PART2,
+        ArtifactSet::LN_PART3,
+        ArtifactSet::LN_PART4,
+    ]) {
+        println!("\n(skipping PJRT view: run `make artifacts`)");
+        return;
+    }
+    let (rows, dim) = (512usize, 256usize);
+    let client = RuntimeClient::cpu().expect("pjrt cpu");
+    let fused = client.load_hlo_text(&artifact_path(ArtifactSet::LN_FUSED)).unwrap();
+    let p1 = client.load_hlo_text(&artifact_path(ArtifactSet::LN_PART1)).unwrap();
+    let p2 = client.load_hlo_text(&artifact_path(ArtifactSet::LN_PART2)).unwrap();
+    let p3 = client.load_hlo_text(&artifact_path(ArtifactSet::LN_PART3)).unwrap();
+    let p4 = client.load_hlo_text(&artifact_path(ArtifactSet::LN_PART4)).unwrap();
+
+    let x: Vec<f32> = (0..rows * dim).map(|i| ((i % 97) as f32 - 48.0) * 0.05).collect();
+    let gamma = vec![1.0f32; dim];
+    let beta = vec![0.0f32; dim];
+    let x_dims = [rows, dim];
+    let v_dims = [dim];
+
+    let fused_stats = bench_loop(3, 30, || {
+        fused
+            .run_f32(&[(&x, &x_dims), (&gamma, &v_dims), (&beta, &v_dims)])
+            .unwrap()
+    });
+    let split_stats = bench_loop(3, 30, || {
+        let row_sum = p1.run_f32(&[(&x, &x_dims)]).unwrap().remove(0);
+        let mut part2 = p2.run_f32(&[(&x, &x_dims), (&row_sum, &[rows])]).unwrap();
+        let centered = part2.remove(0);
+        let var_sum = part2.remove(0);
+        let inv = p3.run_f32(&[(&var_sum, &[rows])]).unwrap().remove(0);
+        p4.run_f32(&[
+            (&centered, &x_dims),
+            (&inv, &[rows]),
+            (&gamma, &v_dims),
+            (&beta, &v_dims),
+        ])
+        .unwrap()
+    });
+    println!("\nreal PJRT (CPU) wall-clock, {rows}x{dim}:");
+    println!("  fused 1-module : {fused_stats}");
+    println!("  split 4-module : {split_stats}");
+    println!(
+        "  speedup        : {:.2}x (1 dispatch vs 4 + host round-trips)",
+        split_stats.mean_ms() / fused_stats.mean_ms()
+    );
+}

@@ -1,0 +1,73 @@
+//! **Figure 7**: end-to-end speedup of FusionStitching over TF and XLA
+//! across the seven evaluation workloads.
+//!
+//! Paper's result (V100): FS up to 2.42× / avg 1.66× vs TF, up to
+//! 2.21× / avg 1.45× vs XLA; XLA *regresses* on DIEN while FS never
+//! goes negative. Our numbers come from the machine-model simulator
+//! (DESIGN.md §1) — shape, not absolutes, is the claim.
+//!
+//! Run: `cargo bench --bench fig7_speedup` (add `-- t4` for the §7.2
+//! secondary-device check).
+
+use fusion_stitching::explorer::ExploreOptions;
+use fusion_stitching::gpu::DeviceSpec;
+use fusion_stitching::pipeline::{self, Tech};
+use fusion_stitching::util::{bench_loop, Table};
+use fusion_stitching::workloads;
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let device = if args.iter().any(|a| a == "t4") {
+        DeviceSpec::t4()
+    } else {
+        DeviceSpec::v100()
+    };
+    let opts = ExploreOptions::default();
+
+    println!(
+        "== Figure 7: E2E speedup (device: {}, TF normalized to 1.0) ==\n",
+        device.name
+    );
+    let mut t = Table::new(vec![
+        "workload", "TF ms", "XLA ms", "FS ms", "TF/XLA", "TF/FS", "XLA/FS",
+    ]);
+    let (mut sum_tf, mut sum_xla, mut max_tf, mut max_xla) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+    let catalog = workloads::catalog();
+    for w in &catalog {
+        let rows = pipeline::table2_rows(w, &device, &opts);
+        let e2e = |tech: Tech| {
+            rows.iter().find(|r| r.tech == tech).unwrap().breakdown.e2e_ms()
+        };
+        let (tf, xla, fs) = (e2e(Tech::Tf), e2e(Tech::Xla), e2e(Tech::Fs));
+        sum_tf += tf / fs;
+        sum_xla += xla / fs;
+        max_tf = max_tf.max(tf / fs);
+        max_xla = max_xla.max(xla / fs);
+        t.row(vec![
+            w.key(),
+            format!("{tf:.2}"),
+            format!("{xla:.2}"),
+            format!("{fs:.2}"),
+            format!("{:.2}x", tf / xla),
+            format!("{:.2}x", tf / fs),
+            format!("{:.2}x", xla / fs),
+        ]);
+    }
+    println!("{}", t.render());
+    let n = catalog.len() as f64;
+    println!(
+        "FS vs TF : avg {:.2}x, max {:.2}x   (paper: avg 1.66x, max 2.42x)",
+        sum_tf / n,
+        max_tf
+    );
+    println!(
+        "FS vs XLA: avg {:.2}x, max {:.2}x   (paper: avg 1.45x, max 2.21x)",
+        sum_xla / n,
+        max_xla
+    );
+
+    // Wall-clock of the comparison pipeline itself (JIT-side cost).
+    let w = &catalog[1]; // BERT-infer
+    let stats = bench_loop(1, 5, || pipeline::table2_rows(w, &device, &opts));
+    println!("\npipeline wall-clock on {}: {stats}", w.key());
+}

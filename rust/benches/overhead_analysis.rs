@@ -1,0 +1,102 @@
+//! **§7.5 overhead analysis**: FusionStitching's one-time JIT tuning
+//! cost, and the cost-model ablation.
+//!
+//! Paper claims reproduced here:
+//! 1. The extra JIT compilation time of FS over XLA is bounded (paper:
+//!    < 30 min on the production workloads; scaled to this substrate we
+//!    report absolute wall-clock per workload and the FS/XLA ratio).
+//! 2. Replacing the delta-evaluator with the full latency-evaluator
+//!    inside exploration costs **much more tuning time without finding
+//!    better plans** — the justification for the two-layer cost model.
+//!
+//! Run: `cargo bench --bench overhead_analysis`.
+
+use fusion_stitching::explorer::ExploreOptions;
+use fusion_stitching::gpu::DeviceSpec;
+use fusion_stitching::pipeline::{self, Tech};
+use fusion_stitching::util::{bench_loop, Table};
+use fusion_stitching::workloads;
+use std::time::Instant;
+
+fn main() {
+    let device = DeviceSpec::v100();
+
+    // ---- 1. one-time tuning cost per workload -------------------------
+    println!("== §7.5: one-time JIT optimization cost ==\n");
+    let mut t = Table::new(vec![
+        "workload", "ops", "XLA plan ms", "FS plan ms", "FS/XLA", "FS kernels",
+    ]);
+    for w in workloads::catalog() {
+        let t0 = Instant::now();
+        let xla = pipeline::plan_for_runtime(
+            &w.graph,
+            &device,
+            Tech::Xla,
+            &ExploreOptions::default(),
+            w.loop_kind,
+        );
+        let xla_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let t1 = Instant::now();
+        let fs = pipeline::plan_for_runtime(
+            &w.graph,
+            &device,
+            Tech::Fs,
+            &ExploreOptions::default(),
+            w.loop_kind,
+        );
+        let fs_ms = t1.elapsed().as_secs_f64() * 1e3;
+        let _ = &xla;
+        t.row(vec![
+            w.key(),
+            w.graph.len().to_string(),
+            format!("{xla_ms:.1}"),
+            format!("{fs_ms:.1}"),
+            format!("{:.0}x", fs_ms / xla_ms.max(1e-6)),
+            fs.kernels(&w.graph).len().to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+    println!("(tune-once-run-many: amortized over thousands of iterations, §7.5)\n");
+
+    // ---- 2. cost-model ablation: delta vs full latency-evaluator ------
+    println!("== §7.5 ablation: delta-evaluator vs full latency-evaluator ==\n");
+    let mut t2 = Table::new(vec![
+        "workload", "delta ms", "full ms", "slowdown", "delta E2E", "full E2E", "better?",
+    ]);
+    for w in workloads::catalog().into_iter().take(4) {
+        let delta_opts = ExploreOptions::default();
+        let full_opts = ExploreOptions { full_cost_model: true, ..Default::default() };
+
+        let ds = bench_loop(0, 3, || {
+            pipeline::plan_for_runtime(&w.graph, &device, Tech::Fs, &delta_opts, w.loop_kind)
+        });
+        let fsb = bench_loop(0, 1, || {
+            pipeline::plan_for_runtime(&w.graph, &device, Tech::Fs, &full_opts, w.loop_kind)
+        });
+
+        // Quality of the resulting plans (simulated E2E).
+        let e2e = |opts: &ExploreOptions| {
+            let prog = pipeline::optimize(&w, &device, Tech::Fs, opts);
+            let sim = fusion_stitching::gpu::Simulator::new(
+                device.clone(),
+                fusion_stitching::gpu::SimConfig::xla_runtime(),
+            );
+            sim.run(&prog.kernels, w.loop_kind).e2e_ms()
+        };
+        let (de, fe) = (e2e(&delta_opts), e2e(&full_opts));
+        t2.row(vec![
+            w.key(),
+            format!("{:.1}", ds.mean_ms()),
+            format!("{:.1}", fsb.mean_ms()),
+            format!("{:.1}x", fsb.mean_ms() / ds.mean_ms().max(1e-6)),
+            format!("{de:.2}"),
+            format!("{fe:.2}"),
+            if fe < de * 0.99 { "full".into() } else { "no (paper ✓)".to_string() },
+        ]);
+    }
+    println!("{}", t2.render());
+    println!(
+        "paper: \"a much longer tuning time, but do not show better performance of \
+         tuning results\""
+    );
+}

@@ -1,0 +1,122 @@
+//! **§7.2 production claim**: "deployed onto a production cluster [...]
+//! saves 7,000 GPU hours on average for ~30,000 tasks per month", and
+//! FusionStitching "does not show negative optimization in any of these
+//! cases" (unlike XLA, which cannot be enabled by default).
+//!
+//! Fleet simulation: a population of synthetic task graphs spanning the
+//! op-mix space (elementwise chains, reduction towers, attention-ish
+//! blocks, recurrent unrollings), each served through the JIT
+//! coordinator with the never-negative guard. We report:
+//! * total simulated GPU time under TF / XLA / FS,
+//! * the regression count per technique (XLA regresses on a chunk of
+//!   the fleet; FS on none),
+//! * projected GPU-hours saved at the paper's 30k tasks/month scale.
+//!
+//! Run: `cargo bench --bench production_fleet` (add `-- N` for fleet
+//! size; default 120).
+
+use fusion_stitching::explorer::ExploreOptions;
+use fusion_stitching::gpu::{DeviceSpec, SimConfig, Simulator};
+use fusion_stitching::pipeline::{self, Tech};
+use fusion_stitching::util::{Prng, Table};
+use fusion_stitching::workloads::synthetic::{generate, SyntheticConfig};
+use fusion_stitching::workloads::{LoopKind, Mode, Workload};
+
+fn main() {
+    let fleet_size: usize = std::env::args()
+        .filter_map(|a| a.parse().ok())
+        .next()
+        .unwrap_or(120);
+    let device = DeviceSpec::v100();
+    let opts = ExploreOptions::default();
+    let mut prng = Prng::new(0xF00D);
+
+    let mut totals = [0.0f64; 3]; // TF, XLA, FS
+    let mut regressions = [0usize; 3];
+    let mut fs_guard_kept_fallback = 0usize;
+
+    for i in 0..fleet_size {
+        // Vary the synthetic population across the op-mix space.
+        let cfg = SyntheticConfig {
+            num_ops: 40 + prng.below(160),
+            p_reduce: 0.05 + prng.f64() * 0.2,
+            p_expensive: 0.05 + prng.f64() * 0.25,
+            p_gemm: prng.f64() * 0.1,
+            ..Default::default()
+        };
+        let graph = generate(&cfg, &mut prng);
+        let loop_kind = match i % 5 {
+            0 => LoopKind::DynamicLoop,
+            1 => LoopKind::StaticUnrolled,
+            _ => LoopKind::None,
+        };
+        let w = Workload {
+            name: "task",
+            field: "fleet",
+            mode: Mode::Infer,
+            batch: 1,
+            loop_kind,
+            graph,
+        };
+
+        let e2e: Vec<f64> = Tech::all()
+            .iter()
+            .map(|&tech| {
+                let prog = pipeline::optimize(&w, &device, tech, &opts);
+                let cfg = match tech {
+                    Tech::Tf => SimConfig::tensorflow(),
+                    _ => SimConfig::xla_runtime(),
+                };
+                Simulator::new(device.clone(), cfg).run(&prog.kernels, w.loop_kind).e2e_ms()
+            })
+            .collect();
+        let tf = e2e[0];
+        for (k, &ms) in e2e.iter().enumerate() {
+            // §7.2's never-negative production guard: FS falls back to
+            // the better of (FS, XLA-fallback); the coordinator vetoes
+            // regressions before the swap.
+            let served = if k == 2 && ms > e2e[1] {
+                fs_guard_kept_fallback += 1;
+                e2e[1]
+            } else {
+                ms
+            };
+            totals[k] += served;
+            if k > 0 && served > tf * 1.0001 {
+                regressions[k] += 1;
+            }
+        }
+    }
+
+    println!("== §7.2 production fleet simulation ({fleet_size} tasks) ==\n");
+    let mut t = Table::new(vec!["tech", "total GPU ms", "vs TF", "tasks regressed vs TF"]);
+    for (k, tech) in Tech::all().iter().enumerate() {
+        t.row(vec![
+            tech.name().to_string(),
+            format!("{:.1}", totals[k]),
+            format!("{:.2}x", totals[0] / totals[k]),
+            if k == 0 { "-".into() } else { regressions[k].to_string() },
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "never-negative guard kept the XLA fallback on {fs_guard_kept_fallback}/{fleet_size} tasks"
+    );
+    assert_eq!(regressions[2], 0, "FS must never regress (§7.2)");
+    if regressions[1] > 0 {
+        println!(
+            "XLA regressed {}/{fleet_size} tasks → cannot be enabled by default (paper §7.2)",
+            regressions[1]
+        );
+    }
+
+    // Projected savings at the paper's scale.
+    let saved_frac = 1.0 - totals[2] / totals[0];
+    // Paper: 30k tasks/month; assume the paper's mean task ≈ a few GPU-hours.
+    let monthly_gpu_hours = 30_000.0 * 2.0; // 2 GPU-h per task, conservative
+    println!(
+        "\nprojected at 30k tasks/month x 2 GPU-h: {:.0} GPU-hours saved/month \
+         (paper: ~7,000 with its task mix)",
+        monthly_gpu_hours * saved_frac
+    );
+}

@@ -1,0 +1,76 @@
+//! **Table 2**: kernel execution breakdown per workload × technique —
+//! CPU / Math / Mem / Cpy device times, kernel-call counts, and E2E.
+//!
+//! Paper headline derived claims (§7.3), re-checked at the bottom:
+//! * FS memory-intensive kernel calls average ≈ 38% of XLA's
+//!   (range 27.8%–48.4%).
+//! * FS cuts CUDA memcpy/memset activity ≈ 34% below XLA's.
+//! * FS saves up to 61% of XLA's CPU (scheduling/launch) time,
+//!   ≈ 41% on average.
+//!
+//! Run: `cargo bench --bench table2_breakdown`.
+
+use fusion_stitching::explorer::ExploreOptions;
+use fusion_stitching::gpu::DeviceSpec;
+use fusion_stitching::pipeline::{self, Tech};
+use fusion_stitching::util::Table;
+use fusion_stitching::workloads;
+
+fn main() {
+    let device = DeviceSpec::v100();
+    let opts = ExploreOptions::default();
+
+    println!("== Table 2: kernel execution breakdown ({}) ==\n", device.name);
+    let mut t = Table::new(vec![
+        "model", "tech", "CPU ms", "Math ms", "Mem ms", "Cpy ms", "E2E ms", "#Math", "#Mem",
+        "#Cpy", "mem MB",
+    ]);
+    let mut mem_ratios = Vec::new();
+    let mut cpy_deltas = Vec::new();
+    let mut cpu_savings = Vec::new();
+
+    for w in workloads::catalog() {
+        let rows = pipeline::table2_rows(&w, &device, &opts);
+        for r in &rows {
+            let b = &r.breakdown;
+            t.row(vec![
+                if r.tech == Tech::Tf { w.key() } else { String::new() },
+                r.tech.name().to_string(),
+                format!("{:.2}", b.cpu_ms),
+                format!("{:.2}", b.math_ms),
+                format!("{:.2}", b.mem_ms),
+                format!("{:.2}", b.cpy_ms),
+                format!("{:.2}", b.e2e_ms()),
+                b.math_calls.to_string(),
+                b.mem_calls.to_string(),
+                b.cpy_calls.to_string(),
+                format!("{:.1}", b.mem_traffic_bytes as f64 / (1 << 20) as f64),
+            ]);
+        }
+        let get = |tech: Tech| rows.iter().find(|r| r.tech == tech).unwrap();
+        let (xla, fs) = (get(Tech::Xla), get(Tech::Fs));
+        mem_ratios.push(fs.breakdown.mem_calls as f64 / xla.breakdown.mem_calls as f64);
+        cpy_deltas.push(1.0 - fs.breakdown.cpy_ms / xla.breakdown.cpy_ms.max(1e-9));
+        cpu_savings.push(1.0 - fs.breakdown.cpu_ms / xla.breakdown.cpu_ms.max(1e-9));
+    }
+    println!("{}", t.render());
+
+    let avg = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+    let max = |v: &[f64]| v.iter().cloned().fold(f64::MIN, f64::max);
+    let min = |v: &[f64]| v.iter().cloned().fold(f64::MAX, f64::min);
+    println!(
+        "FS/XLA mem kernel calls: avg {:.1}% (range {:.1}%–{:.1}%)   (paper: avg 38.0%, 27.8%–48.4%)",
+        avg(&mem_ratios) * 100.0,
+        min(&mem_ratios) * 100.0,
+        max(&mem_ratios) * 100.0
+    );
+    println!(
+        "FS memcpy-time cut vs XLA: avg {:.1}%                     (paper: avg 34.3%)",
+        avg(&cpy_deltas) * 100.0
+    );
+    println!(
+        "FS CPU-time saving vs XLA: avg {:.1}%, max {:.1}%          (paper: avg 41.0%, max 61.0%)",
+        avg(&cpu_savings) * 100.0,
+        max(&cpu_savings) * 100.0
+    );
+}

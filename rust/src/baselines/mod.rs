@@ -1,0 +1,5 @@
+//! Baseline execution strategies the paper compares against (§7):
+//! TF (kernel-per-op) and XLA (rule-based greedy fusion).
+
+pub mod tf;
+pub mod xla;

@@ -1,0 +1,31 @@
+//! Stock-TensorFlow baseline: no fusion at all — every memory-intensive
+//! op is its own kernel launch. This is the `TF` column of Table 2 and
+//! the normalization baseline of Figure 7.
+
+use crate::explorer::FusionPlan;
+use crate::graph::Graph;
+
+/// The TF plan: an empty pattern set; `FusionPlan::kernels` then yields
+/// one singleton kernel per fusible op.
+pub fn plan(_graph: &Graph) -> FusionPlan {
+    FusionPlan::default()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{DType, OpKind, Shape};
+
+    #[test]
+    fn tf_launches_one_kernel_per_memory_op() {
+        let mut g = Graph::new("t");
+        let p = g.param(Shape::new(vec![64, 64]), DType::F32, "p");
+        let a = g.unary(OpKind::Exp, p, "a");
+        let b = g.unary(OpKind::Neg, a, "b");
+        let w = g.param(Shape::new(vec![64, 64]), DType::F32, "w");
+        let _c = g.matmul(b, w, "c");
+        let kernels = plan(&g).kernels(&g);
+        assert_eq!(kernels.len(), 2); // exp, neg — matmul is a library call
+        assert!(kernels.iter().all(|k| k.len() == 1));
+    }
+}

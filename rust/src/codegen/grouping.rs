@@ -1,0 +1,209 @@
+//! Op grouping (§4.2): partition a fusion pattern into groups, one
+//! schedule per group.
+//!
+//! "We call *sub-root* the output op of a group, and *root* the output
+//! of the fusion. Reduce ops are always regarded as sub-root. Expensive
+//! element-wise ops are enumerated to both sub-roots and non sub-roots.
+//! Other ops are neither sub-roots." Each non-sub-root op's schedule is
+//! determined from its group's sub-root by tensor index propagation, so
+//! only sub-root (and root) schedules need enumeration.
+
+use crate::graph::{Graph, NodeId, OpClass};
+
+/// One schedule group: the cone of ops that computes `sub_root`, cut at
+/// other groups' sub-roots and at pattern inputs.
+#[derive(Debug, Clone)]
+pub struct Group {
+    /// The group's output op.
+    pub sub_root: NodeId,
+    /// All member ops including the sub-root (each pattern op belongs to
+    /// exactly one group).
+    pub members: Vec<NodeId>,
+    /// True when `sub_root` is a pattern output (fusion root) rather than
+    /// an internal sub-root.
+    pub is_root: bool,
+}
+
+/// A complete partition of a pattern into groups.
+#[derive(Debug, Clone)]
+pub struct Grouping {
+    pub groups: Vec<Group>,
+}
+
+impl Grouping {
+    /// Index of the group that owns `id`, if any.
+    pub fn group_of(&self, id: NodeId) -> Option<usize> {
+        self.groups
+            .iter()
+            .position(|g| g.members.contains(&id))
+    }
+
+    /// Number of internal (non-root) sub-roots — the values that must be
+    /// communicated between groups by warp/block reuse.
+    pub fn num_internal_subroots(&self) -> usize {
+        self.groups.iter().filter(|g| !g.is_root).count()
+    }
+}
+
+/// Identify groups for `pattern` given a choice of which expensive
+/// element-wise ops act as sub-roots.
+///
+/// `expensive_as_subroot[i]` corresponds to the i-th expensive
+/// element-wise op of the pattern in topological order (only those with
+/// in-pattern consumers are counted — a tail expensive op is already a
+/// root). Reductions with in-pattern consumers are always sub-roots.
+pub fn identify_groups(
+    graph: &Graph,
+    pattern: &[NodeId],
+    expensive_as_subroot: &[bool],
+) -> Grouping {
+    let in_pattern = |id: NodeId| pattern.contains(&id);
+    let outputs = graph.pattern_outputs(pattern);
+
+    // Decide sub-root status per node.
+    let mut subroots: Vec<NodeId> = Vec::new();
+    let mut exp_idx = 0usize;
+    for &id in pattern {
+        let node = graph.node(id);
+        let has_internal_consumer = graph.consumers(id).iter().any(|&c| in_pattern(c));
+        let is_output = outputs.contains(&id);
+        match node.kind.class() {
+            OpClass::Reduction if has_internal_consumer => subroots.push(id),
+            OpClass::ExpensiveElementwise if has_internal_consumer => {
+                let chosen = expensive_as_subroot.get(exp_idx).copied().unwrap_or(false);
+                exp_idx += 1;
+                if chosen {
+                    subroots.push(id);
+                }
+            }
+            _ => {}
+        }
+        if is_output && !subroots.contains(&id) {
+            subroots.push(id);
+        }
+    }
+
+    // Assign each pattern op to the group of the *earliest sub-root that
+    // consumes it* (walking the consumer chain downstream until a
+    // sub-root is met). Index propagation in the paper's terms: an op's
+    // iteration space follows its downstream sub-root's.
+    let mut owner: Vec<Option<usize>> = vec![None; graph.len()];
+    for (gi, &sr) in subroots.iter().enumerate() {
+        owner[sr.idx()] = Some(gi);
+    }
+    // Upstream propagation in reverse topological order of the pattern.
+    let mut pat_sorted: Vec<NodeId> = pattern.to_vec();
+    pat_sorted.sort_unstable();
+    for &id in pat_sorted.iter().rev() {
+        if owner[id.idx()].is_some() {
+            continue;
+        }
+        // Inherit from the first in-pattern consumer that has an owner.
+        let inherited = graph
+            .consumers(id)
+            .iter()
+            .filter(|&&c| in_pattern(c))
+            .find_map(|&c| owner[c.idx()]);
+        owner[id.idx()] = inherited;
+    }
+    // Orphans (shouldn't happen if outputs are sub-roots, but belt and
+    // braces): attach to the last group.
+    let fallback = subroots.len().saturating_sub(1);
+    let mut members: Vec<Vec<NodeId>> = vec![Vec::new(); subroots.len()];
+    for &id in &pat_sorted {
+        let gi = owner[id.idx()].unwrap_or(fallback);
+        members[gi].push(id);
+    }
+
+    let groups = subroots
+        .iter()
+        .enumerate()
+        .map(|(gi, &sr)| Group {
+            sub_root: sr,
+            members: std::mem::take(&mut members[gi]),
+            is_root: outputs.contains(&sr),
+        })
+        .collect();
+    Grouping { groups }
+}
+
+/// Count the expensive element-wise ops of `pattern` that have in-pattern
+/// consumers (the enumeration dimension for `expensive_as_subroot`).
+pub fn num_enumerable_expensive(graph: &Graph, pattern: &[NodeId]) -> usize {
+    pattern
+        .iter()
+        .filter(|&&id| {
+            graph.node(id).kind.class() == OpClass::ExpensiveElementwise
+                && graph.consumers(id).iter().any(|c| pattern.contains(c))
+        })
+        .count()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{DType, Graph, OpKind, ReduceOp, Shape};
+    use crate::workloads::blocks;
+
+    #[test]
+    fn layer_norm_grouping_has_two_reduction_subroots() {
+        let mut g = Graph::new("ln");
+        let x = g.param(Shape::new(vec![64, 256]), DType::F32, "x");
+        let out = blocks::layer_norm(&mut g, x, "ln");
+        let pattern: Vec<NodeId> = g
+            .nodes()
+            .iter()
+            .filter(|n| n.kind.is_fusible())
+            .map(|n| n.id)
+            .collect();
+        let grouping = identify_groups(&g, &pattern, &[false]);
+        // Two reduction sub-roots (sum, var_sum) + root. rsqrt not chosen.
+        let n_red = grouping
+            .groups
+            .iter()
+            .filter(|gr| g.node(gr.sub_root).kind.class() == OpClass::Reduction)
+            .count();
+        assert_eq!(n_red, 2);
+        assert!(grouping.groups.iter().any(|gr| gr.sub_root == out && gr.is_root));
+        // Every pattern node owned by exactly one group.
+        let total: usize = grouping.groups.iter().map(|gr| gr.members.len()).sum();
+        assert_eq!(total, pattern.len());
+    }
+
+    #[test]
+    fn expensive_subroot_enumeration_adds_group() {
+        let mut g = Graph::new("e");
+        let x = g.param(Shape::new(vec![64, 256]), DType::F32, "x");
+        let t = g.unary(OpKind::Tanh, x, "t");
+        let y = g.binary(OpKind::Add, t, x, "y");
+        let pattern = vec![t, y];
+        let g0 = identify_groups(&g, &pattern, &[false]);
+        assert_eq!(g0.groups.len(), 1); // tanh inlined into root group
+        let g1 = identify_groups(&g, &pattern, &[true]);
+        assert_eq!(g1.groups.len(), 2); // tanh gets its own group
+        assert_eq!(g1.num_internal_subroots(), 1);
+    }
+
+    #[test]
+    fn tail_reduction_is_root_not_internal() {
+        let mut g = Graph::new("r");
+        let x = g.param(Shape::new(vec![64, 256]), DType::F32, "x");
+        let s = g.binary(OpKind::Mul, x, x, "sq");
+        let r = g.reduce(ReduceOp::Sum, s, vec![1], "sum");
+        let pattern = vec![s, r];
+        let grouping = identify_groups(&g, &pattern, &[]);
+        assert_eq!(grouping.groups.len(), 1);
+        assert!(grouping.groups[0].is_root);
+        assert_eq!(grouping.groups[0].sub_root, r);
+        assert_eq!(grouping.num_internal_subroots(), 0);
+    }
+
+    #[test]
+    fn enumerable_expensive_counts_only_internal() {
+        let mut g = Graph::new("c");
+        let x = g.param(Shape::new(vec![8, 8]), DType::F32, "x");
+        let t = g.unary(OpKind::Tanh, x, "mid"); // has consumer → counted
+        let e = g.unary(OpKind::Exp, t, "tail"); // no consumer → tail, not counted
+        assert_eq!(num_enumerable_expensive(&g, &[t, e]), 1);
+    }
+}

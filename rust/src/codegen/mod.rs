@@ -1,0 +1,31 @@
+//! Code generation (§4): lower a fusion pattern to one GPU kernel.
+//!
+//! The pipeline per pattern:
+//!
+//! 1. **Grouping** (§4.2, [`grouping`]) — identify *sub-roots*
+//!    (reductions always; expensive element-wise ops enumerated both
+//!    ways) and partition the pattern into groups, each of which runs one
+//!    schedule; schedules of non-sub-roots follow by index propagation.
+//! 2. **Schedule & launch tuning** ([`tuner`]) — enumerate the schedule
+//!    of every sub-root ({thread-local, warp-reuse, block-reuse} — the
+//!    composition schemes of §4.1/Fig. 3), together with launch
+//!    dimensions; discard combinations violating data-locality or
+//!    resource constraints.
+//! 3. **Latency-evaluator** (§4.3, [`latency`]) — estimate cycles for
+//!    each candidate (waves × warp latency, occupancy from register
+//!    lifetime analysis and shared memory after the §4.4 reuse pass).
+//! 4. **Emission** ([`emit`]) — produce the [`crate::gpu::KernelSpec`]
+//!    the simulator executes, plus CUDA-like pseudocode for inspection.
+
+pub mod emit;
+pub mod grouping;
+pub mod latency;
+pub mod schedule;
+pub mod shmem;
+pub mod tuner;
+
+pub use emit::{emit_kernel, emit_library_call, pseudocode, EmitConfig};
+pub use grouping::{identify_groups, Group, Grouping};
+pub use latency::{estimate_kernel, LatencyEstimate};
+pub use schedule::{CompositionScheme, SubRootSchedule};
+pub use tuner::{tune_pattern, TunedKernel, TunerOptions};

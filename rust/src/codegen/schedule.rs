@@ -1,0 +1,97 @@
+//! Composition schemes (§4.1, Fig. 3) and per-sub-root schedules (§4.2).
+//!
+//! The paper pre-defines schedule *templates* per op kind: a single
+//! template for light element-wise ops (kernel packing and thread
+//! composition share it), and three templates for expensive element-wise
+//! and reduction ops (thread-local / first-lane-register / shared-
+//! memory). A schedule choice for every sub-root plus a launch dimension
+//! fully determines the generated kernel.
+
+/// The four kernel composition schemes of Fig. 3.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CompositionScheme {
+    /// Independent ops packed into one launch (no data dependence).
+    KernelPacking,
+    /// Producer value consumed in-register by the same thread; threads
+    /// needing a value produced "elsewhere" recompute it (XLA's scheme).
+    ThreadComposition,
+    /// Producer value held in the first lane of each warp and moved by
+    /// register shuffle (intra-warp reuse).
+    WarpComposition,
+    /// Producer value staged in shared memory (intra-block reuse) —
+    /// unlocks non-homogeneous parallelism in one kernel.
+    BlockComposition,
+}
+
+/// Schedule template assigned to one sub-root (§4.2): how its group's
+/// output is made available to consumer groups.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SubRootSchedule {
+    /// Thread-local registers; consumers outside the thread recompute
+    /// (thread composition / kernel packing template).
+    ThreadLocal,
+    /// Result lives in lane-0 registers of each warp; consumers read it
+    /// via `__shfl_sync` (warp composition template).
+    WarpReuse,
+    /// Result staged to shared memory; consumers read after a barrier
+    /// (block composition template).
+    BlockReuse,
+}
+
+impl SubRootSchedule {
+    /// The composition scheme this schedule realizes between the
+    /// sub-root's group and its consumer groups.
+    pub fn scheme(self) -> CompositionScheme {
+        match self {
+            SubRootSchedule::ThreadLocal => CompositionScheme::ThreadComposition,
+            SubRootSchedule::WarpReuse => CompositionScheme::WarpComposition,
+            SubRootSchedule::BlockReuse => CompositionScheme::BlockComposition,
+        }
+    }
+
+    /// All schedule templates, in enumeration order (cheapest
+    /// communication first).
+    pub fn all() -> [SubRootSchedule; 3] {
+        [
+            SubRootSchedule::ThreadLocal,
+            SubRootSchedule::WarpReuse,
+            SubRootSchedule::BlockReuse,
+        ]
+    }
+
+    /// Short name for reports/pseudocode.
+    pub fn name(self) -> &'static str {
+        match self {
+            SubRootSchedule::ThreadLocal => "thread_local",
+            SubRootSchedule::WarpReuse => "warp_reuse",
+            SubRootSchedule::BlockReuse => "block_reuse",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedule_to_scheme_mapping() {
+        assert_eq!(
+            SubRootSchedule::ThreadLocal.scheme(),
+            CompositionScheme::ThreadComposition
+        );
+        assert_eq!(
+            SubRootSchedule::WarpReuse.scheme(),
+            CompositionScheme::WarpComposition
+        );
+        assert_eq!(
+            SubRootSchedule::BlockReuse.scheme(),
+            CompositionScheme::BlockComposition
+        );
+    }
+
+    #[test]
+    fn all_lists_three_templates() {
+        assert_eq!(SubRootSchedule::all().len(), 3);
+        assert_eq!(SubRootSchedule::all()[0], SubRootSchedule::ThreadLocal);
+    }
+}

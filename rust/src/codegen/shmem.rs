@@ -1,0 +1,204 @@
+//! Shared-memory dataflow sharing (§4.4).
+//!
+//! Block-composition sub-roots each request a shared-memory staging
+//! buffer. Naively summing the requests throttles occupancy, so the
+//! paper reuses previously-allocated space whenever dataflow proves two
+//! requests' lifetimes cannot overlap: it walks the pattern in
+//! topological order and, using a dominance test over the group DAG,
+//! lets a later request take over a buffer whose value is already dead
+//! (fully consumed along every path reaching the current op).
+
+use crate::graph::{Graph, NodeId};
+
+/// One shared-memory request: `owner` (a block-reuse sub-root) needs
+/// `bytes` from its definition until its last in-pattern consumer.
+#[derive(Debug, Clone)]
+pub struct ShmemRequest {
+    pub owner: NodeId,
+    pub bytes: usize,
+}
+
+/// Result of the allocation pass: per-owner byte offsets and the total
+/// block footprint after reuse.
+#[derive(Debug, Clone)]
+pub struct ShmemAllocation {
+    /// (owner, offset, bytes) triples.
+    pub slots: Vec<(NodeId, usize, usize)>,
+    /// Total shared memory per block after sharing.
+    pub total_bytes: usize,
+}
+
+/// Allocate shared memory with lifetime-based reuse.
+///
+/// Lifetime of request r = [def(owner), last consumer of owner within
+/// `pattern`] in topological position. Two requests may share space iff
+/// their lifetimes do not overlap; we run a simple linear-scan register
+/// allocation over the interval list, which is exactly the effect of the
+/// paper's dominance-tree walk on series-parallel fusion patterns.
+pub fn allocate(graph: &Graph, pattern: &[NodeId], requests: &[ShmemRequest]) -> ShmemAllocation {
+    if requests.is_empty() {
+        return ShmemAllocation { slots: vec![], total_bytes: 0 };
+    }
+    // Topological position of each pattern node (pattern ids are already
+    // creation-ordered; sort defensively).
+    let mut order: Vec<NodeId> = pattern.to_vec();
+    order.sort_unstable();
+    let pos = |id: NodeId| order.binary_search(&id).unwrap_or(usize::MAX);
+
+    // Build intervals.
+    let mut intervals: Vec<(usize, usize, usize)> = Vec::new(); // (start, end, req idx)
+    for (i, r) in requests.iter().enumerate() {
+        let start = pos(r.owner);
+        let end = graph
+            .consumers(r.owner)
+            .iter()
+            .filter(|c| order.binary_search(c).is_ok())
+            .map(|&c| pos(c))
+            .max()
+            .unwrap_or(start);
+        intervals.push((start, end, i));
+    }
+    intervals.sort_by_key(|&(s, ..)| s);
+
+    // Linear scan with a free list of (offset, bytes) holes. We only
+    // reuse exact-or-larger holes; fragmentation is acceptable at these
+    // request counts (a handful per kernel).
+    let mut free: Vec<(usize, usize)> = Vec::new(); // (offset, bytes)
+    let mut active: Vec<(usize, usize, usize)> = Vec::new(); // (end, offset, bytes)
+    let mut total = 0usize;
+    let mut slots = vec![(NodeId(0), 0usize, 0usize); requests.len()];
+    for (start, end, ri) in intervals {
+        // Expire finished intervals.
+        active.retain(|&(aend, off, bytes)| {
+            if aend < start {
+                free.push((off, bytes));
+                false
+            } else {
+                true
+            }
+        });
+        let need = align(requests[ri].bytes);
+        // Find a free hole big enough (best fit).
+        let offset = match free
+            .iter()
+            .enumerate()
+            .filter(|(_, &(_, b))| b >= need)
+            .min_by_key(|(_, &(_, b))| b)
+        {
+            Some((fi, &(off, bytes))) => {
+                free.swap_remove(fi);
+                if bytes > need {
+                    free.push((off + need, bytes - need));
+                }
+                off
+            }
+            None => {
+                let off = total;
+                total += need;
+                off
+            }
+        };
+        active.push((end, offset, need));
+        slots[ri] = (requests[ri].owner, offset, need);
+    }
+    ShmemAllocation { slots, total_bytes: total }
+}
+
+/// Footprint without dataflow sharing: the plain sum of aligned
+/// requests (what §4.4 argues *against* — used by the ablation bench
+/// to quantify the occupancy the sharing pass buys back).
+pub fn naive_total(requests: &[ShmemRequest]) -> usize {
+    requests.iter().map(|r| align(r.bytes)).sum()
+}
+
+fn align(bytes: usize) -> usize {
+    bytes.div_ceil(128) * 128 // 128-byte banks-friendly alignment
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{DType, Graph, OpKind, Shape};
+
+    /// chain: a -> b -> c -> d, requests on a and c do not overlap
+    /// (a dies at b), so they share one slot.
+    #[test]
+    fn non_overlapping_lifetimes_share_space() {
+        let mut g = Graph::new("t");
+        let p = g.param(Shape::new(vec![256]), DType::F32, "p");
+        let a = g.unary(OpKind::Exp, p, "a");
+        let b = g.unary(OpKind::Neg, a, "b");
+        let c = g.unary(OpKind::Tanh, b, "c");
+        let d = g.unary(OpKind::Abs, c, "d");
+        let pattern = vec![a, b, c, d];
+        let reqs = vec![
+            ShmemRequest { owner: a, bytes: 1024 },
+            ShmemRequest { owner: c, bytes: 1024 },
+        ];
+        let alloc = allocate(&g, &pattern, &reqs);
+        assert_eq!(alloc.total_bytes, 1024); // shared, not 2048
+        assert_eq!(alloc.slots[0].1, alloc.slots[1].1); // same offset
+    }
+
+    /// diamond: a feeds both b and c; a's lifetime spans past b, so the
+    /// request on b cannot reuse a's space.
+    #[test]
+    fn overlapping_lifetimes_get_distinct_space() {
+        let mut g = Graph::new("t");
+        let p = g.param(Shape::new(vec![256]), DType::F32, "p");
+        let a = g.unary(OpKind::Exp, p, "a");
+        let b = g.unary(OpKind::Neg, a, "b");
+        let c = g.binary(OpKind::Add, a, b, "c");
+        let pattern = vec![a, b, c];
+        let reqs = vec![
+            ShmemRequest { owner: a, bytes: 512 },
+            ShmemRequest { owner: b, bytes: 512 },
+        ];
+        let alloc = allocate(&g, &pattern, &reqs);
+        assert_eq!(alloc.total_bytes, 1024);
+        assert_ne!(alloc.slots[0].1, alloc.slots[1].1);
+    }
+
+    #[test]
+    fn empty_requests_zero_footprint() {
+        let g = Graph::new("e");
+        let alloc = allocate(&g, &[], &[]);
+        assert_eq!(alloc.total_bytes, 0);
+    }
+
+    #[test]
+    fn alignment_rounds_up() {
+        let mut g = Graph::new("t");
+        let p = g.param(Shape::new(vec![8]), DType::F32, "p");
+        let a = g.unary(OpKind::Exp, p, "a");
+        let alloc = allocate(
+            &g,
+            &[a],
+            &[ShmemRequest { owner: a, bytes: 100 }],
+        );
+        assert_eq!(alloc.total_bytes, 128);
+    }
+
+    /// Three sequential requests collapse into one slot; a fourth that
+    /// overlaps the third takes a second slot — total is the max
+    /// concurrent footprint, not the sum.
+    #[test]
+    fn total_is_max_concurrent_not_sum() {
+        let mut g = Graph::new("t");
+        let p = g.param(Shape::new(vec![64]), DType::F32, "p");
+        let a = g.unary(OpKind::Exp, p, "a");
+        let b = g.unary(OpKind::Neg, a, "b");
+        let c = g.unary(OpKind::Tanh, b, "c");
+        let d = g.binary(OpKind::Add, c, b, "d"); // b lives until d
+        let pattern = vec![a, b, c, d];
+        let reqs = vec![
+            ShmemRequest { owner: a, bytes: 256 },
+            ShmemRequest { owner: b, bytes: 256 },
+            ShmemRequest { owner: c, bytes: 256 },
+        ];
+        let alloc = allocate(&g, &pattern, &reqs);
+        // a dies at b; b overlaps c (lives to d). So c reuses a's slot:
+        // footprint 512, not 768.
+        assert_eq!(alloc.total_bytes, 512);
+    }
+}

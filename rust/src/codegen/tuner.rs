@@ -1,0 +1,278 @@
+//! Schedule/launch tuning (§4.2): enumerate grouping strategies,
+//! sub-root schedules and launch dimensions; score each candidate with
+//! the latency-evaluator; keep the best.
+//!
+//! "FusionStitching enumerates grouping strategies, and emulates
+//! schedules of every sub-root/root op and launch dimension of the fused
+//! kernel. [...] After estimating the performance of each enumeration
+//! with latency-evaluator, FusionStitching selects code generation
+//! strategy with the best estimated performance."
+
+use super::grouping::{identify_groups, num_enumerable_expensive, Grouping};
+use super::latency::{estimate_kernel, pattern_supported, LatencyEstimate, LaunchSpec};
+use super::schedule::SubRootSchedule;
+use crate::gpu::DeviceSpec;
+use crate::graph::{Graph, NodeId};
+
+/// Tuner configuration. The baselines reuse this module with reuse
+/// disabled, so XLA-style kernels are costed by the same machinery.
+#[derive(Debug, Clone)]
+pub struct TunerOptions {
+    /// Allow warp/block reuse schedules (FusionStitching). When false,
+    /// only thread composition is enumerated (XLA's code generator).
+    pub allow_reuse: bool,
+    /// Fixed per-thread index-computation overhead in instruction
+    /// equivalents. FusionStitching's §4.5 computation-reuse pass (index
+    /// CSE across schedules) halves it relative to the baselines.
+    pub index_overhead: f64,
+    /// Enumerate expensive-op sub-root choices exhaustively up to this
+    /// many expensive ops (2^k growth); beyond it, try all-on/all-off.
+    pub max_expensive_enum: usize,
+    /// Enumerate per-sub-root schedules exhaustively up to this many
+    /// internal sub-roots (3^m growth); beyond it, try uniform choices.
+    pub max_schedule_enum: usize,
+}
+
+impl TunerOptions {
+    /// FusionStitching's code generator.
+    pub fn fusion_stitching() -> Self {
+        TunerOptions {
+            allow_reuse: true,
+            index_overhead: 6.0,
+            max_expensive_enum: 3,
+            max_schedule_enum: 4,
+        }
+    }
+
+    /// XLA's code generator: thread composition only, no index CSE
+    /// across schedules.
+    pub fn xla() -> Self {
+        TunerOptions {
+            allow_reuse: false,
+            index_overhead: 12.0,
+            max_expensive_enum: 0,
+            max_schedule_enum: 0,
+        }
+    }
+}
+
+/// The chosen code-generation strategy for one pattern.
+#[derive(Debug, Clone)]
+pub struct TunedKernel {
+    pub estimate: LatencyEstimate,
+    pub grouping: Grouping,
+    pub schedules: Vec<SubRootSchedule>,
+    pub launch: LaunchSpec,
+}
+
+impl TunedKernel {
+    /// Human-readable one-liner: groups, schedules and launch shape —
+    /// used by the CLI `inspect` output and the benches.
+    pub fn summary(&self) -> String {
+        let scheds: Vec<&str> = self
+            .schedules
+            .iter()
+            .map(|s| match s {
+                SubRootSchedule::ThreadLocal => "thread",
+                SubRootSchedule::WarpReuse => "warp",
+                SubRootSchedule::BlockReuse => "block",
+            })
+            .collect();
+        format!(
+            "{} groups [{}] @ {} thr/blk x {} rows/blk",
+            self.grouping.groups.len(),
+            scheds.join(","),
+            self.launch.block_threads,
+            self.launch.rows_per_block
+        )
+    }
+}
+
+/// Tune one fusion pattern. Returns `None` if the pattern cannot be
+/// scheduled at all (unsupported structure or no valid candidate).
+pub fn tune_pattern(
+    graph: &Graph,
+    pattern: &[NodeId],
+    device: &DeviceSpec,
+    opts: &TunerOptions,
+) -> Option<TunedKernel> {
+    if pattern.is_empty() || !pattern_supported(graph, pattern) {
+        return None;
+    }
+
+    let n_exp = num_enumerable_expensive(graph, pattern);
+    let masks: Vec<Vec<bool>> = if !opts.allow_reuse {
+        vec![vec![false; n_exp]]
+    } else if n_exp <= opts.max_expensive_enum {
+        (0..(1usize << n_exp))
+            .map(|m| (0..n_exp).map(|b| (m >> b) & 1 == 1).collect())
+            .collect()
+    } else {
+        vec![vec![false; n_exp], vec![true; n_exp]]
+    };
+
+    let mut best: Option<TunedKernel> = None;
+    for mask in &masks {
+        let grouping = identify_groups(graph, pattern, mask);
+        let internal: Vec<usize> = grouping
+            .groups
+            .iter()
+            .enumerate()
+            .filter(|(_, g)| !g.is_root)
+            .map(|(i, _)| i)
+            .collect();
+        let m = internal.len();
+
+        let schedule_sets: Vec<Vec<SubRootSchedule>> = if !opts.allow_reuse || m == 0 {
+            vec![vec![SubRootSchedule::ThreadLocal; grouping.groups.len()]]
+        } else if m <= opts.max_schedule_enum {
+            // Exhaustive 3^m over internal sub-roots.
+            let mut sets = Vec::with_capacity(3usize.pow(m as u32));
+            let all = SubRootSchedule::all();
+            let mut counters = vec![0usize; m];
+            loop {
+                let mut s = vec![SubRootSchedule::ThreadLocal; grouping.groups.len()];
+                for (slot, &gi) in counters.iter().zip(&internal) {
+                    s[gi] = all[*slot];
+                }
+                sets.push(s);
+                // Increment odometer.
+                let mut k = 0;
+                loop {
+                    if k == m {
+                        break;
+                    }
+                    counters[k] += 1;
+                    if counters[k] < 3 {
+                        break;
+                    }
+                    counters[k] = 0;
+                    k += 1;
+                }
+                if k == m {
+                    break;
+                }
+            }
+            sets
+        } else {
+            // Uniform heuristics for very large patterns.
+            SubRootSchedule::all()
+                .iter()
+                .map(|&s| {
+                    let mut v = vec![SubRootSchedule::ThreadLocal; grouping.groups.len()];
+                    for &gi in &internal {
+                        v[gi] = s;
+                    }
+                    v
+                })
+                .collect()
+        };
+
+        for schedules in &schedule_sets {
+            for launch in LaunchSpec::candidates() {
+                if let Some(est) = estimate_kernel(
+                    graph,
+                    pattern,
+                    &grouping,
+                    schedules,
+                    launch,
+                    device,
+                    opts.index_overhead,
+                ) {
+                    let better = best
+                        .as_ref()
+                        .map(|b| est.time_us < b.estimate.time_us)
+                        .unwrap_or(true);
+                    if better {
+                        best = Some(TunedKernel {
+                            estimate: est,
+                            grouping: grouping.clone(),
+                            schedules: schedules.clone(),
+                            launch,
+                        });
+                    }
+                }
+            }
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{DType, OpKind, Shape};
+    use crate::workloads::blocks;
+
+    fn ln_pattern() -> (Graph, Vec<NodeId>) {
+        let mut g = Graph::new("ln");
+        let x = g.param(Shape::new(vec![4096, 768]), DType::F32, "x");
+        let _ = blocks::layer_norm(&mut g, x, "ln");
+        let pattern: Vec<NodeId> = g
+            .nodes()
+            .iter()
+            .filter(|n| n.kind.is_fusible())
+            .map(|n| n.id)
+            .collect();
+        (g, pattern)
+    }
+
+    #[test]
+    fn fusion_stitching_tunes_whole_layernorm() {
+        let (g, pattern) = ln_pattern();
+        let device = DeviceSpec::v100();
+        let tuned = tune_pattern(&g, &pattern, &device, &TunerOptions::fusion_stitching())
+            .expect("LN should be schedulable");
+        // The winning config must use reuse for the mid-pattern
+        // reductions — thread-local recompute is orders slower.
+        let uses_reuse = tuned
+            .schedules
+            .iter()
+            .any(|s| *s != SubRootSchedule::ThreadLocal);
+        assert!(uses_reuse, "schedules: {:?}", tuned.schedules);
+        assert!(tuned.estimate.time_us < 1000.0);
+    }
+
+    #[test]
+    fn xla_options_never_produce_reuse() {
+        let (g, pattern) = ln_pattern();
+        let device = DeviceSpec::v100();
+        let tuned = tune_pattern(&g, &pattern, &device, &TunerOptions::xla()).unwrap();
+        assert!(tuned
+            .schedules
+            .iter()
+            .all(|s| *s == SubRootSchedule::ThreadLocal));
+        // And it is much slower than FS on the same pattern — the Fig. 1
+        // argument for why XLA must split LN instead.
+        let fs = tune_pattern(&g, &pattern, &device, &TunerOptions::fusion_stitching()).unwrap();
+        assert!(fs.estimate.time_us * 2.0 < tuned.estimate.time_us);
+    }
+
+    #[test]
+    fn single_op_pattern_tunes() {
+        let mut g = Graph::new("one");
+        let x = g.param(Shape::new(vec![1024, 1024]), DType::F32, "x");
+        let y = g.unary(OpKind::Relu, x, "y");
+        let device = DeviceSpec::v100();
+        let tuned = tune_pattern(&g, &[y], &device, &TunerOptions::xla()).unwrap();
+        assert_eq!(tuned.grouping.groups.len(), 1);
+        assert!(tuned.estimate.time_us >= device.kernel_floor_us);
+    }
+
+    #[test]
+    fn gemm_pattern_is_rejected() {
+        let mut g = Graph::new("mm");
+        let a = g.param(Shape::new(vec![64, 64]), DType::F32, "a");
+        let b = g.param(Shape::new(vec![64, 64]), DType::F32, "b");
+        let c = g.matmul(a, b, "c");
+        let device = DeviceSpec::v100();
+        assert!(tune_pattern(&g, &[c], &device, &TunerOptions::fusion_stitching()).is_none());
+    }
+
+    #[test]
+    fn empty_pattern_rejected() {
+        let g = Graph::new("e");
+        let device = DeviceSpec::v100();
+        assert!(tune_pattern(&g, &[], &device, &TunerOptions::xla()).is_none());
+    }
+}

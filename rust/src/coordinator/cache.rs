@@ -1,0 +1,193 @@
+//! Compilation cache: tune-once-run-many (§7.5).
+//!
+//! Deep learning workloads re-execute the same graph thousands of times;
+//! FusionStitching (like XLA) compiles on first sight and caches by
+//! graph identity. The key hashes the graph *structure* (op kinds,
+//! shapes, edges), so retracing the same model hits the cache.
+
+use crate::graph::Graph;
+use crate::pipeline::OptimizedProgram;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+/// Structural hash of a graph (FNV-1a over kinds/shapes/edges).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct GraphKey(pub u64);
+
+impl GraphKey {
+    /// Hash a graph's structure.
+    pub fn of(graph: &Graph) -> Self {
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        let mut mix = |v: u64| {
+            h ^= v;
+            h = h.wrapping_mul(0x0000_0100_0000_01B3);
+        };
+        mix(graph.len() as u64);
+        for node in graph.nodes() {
+            mix(kind_tag(&node.kind));
+            mix(node.dtype.size_bytes() as u64);
+            for &d in node.shape.dims() {
+                mix(d as u64 + 1);
+            }
+            for &inp in &node.inputs {
+                mix(inp.0 as u64 + 0x9E37);
+            }
+        }
+        GraphKey(h)
+    }
+}
+
+fn kind_tag(kind: &crate::graph::OpKind) -> u64 {
+    use crate::graph::OpKind::*;
+    // A stable discriminant (mem::discriminant has no portable value).
+    let base = match kind {
+        Parameter => 1,
+        Constant => 2,
+        Add => 3,
+        Sub => 4,
+        Mul => 5,
+        Div => 6,
+        Maximum => 7,
+        Minimum => 8,
+        Neg => 9,
+        Abs => 10,
+        Compare => 11,
+        Select => 12,
+        Convert => 13,
+        Relu => 14,
+        Exp => 15,
+        Log => 16,
+        Tanh => 17,
+        Sqrt => 18,
+        Rsqrt => 19,
+        Power => 20,
+        Sigmoid => 21,
+        Erf => 22,
+        Gelu => 23,
+        Tan => 24,
+        Reduce { op, axes } => {
+            return 25 + *op as u64 * 8 + axes.iter().map(|&a| a as u64 + 1).sum::<u64>() * 64;
+        }
+        Broadcast => 26,
+        Reshape => 27,
+        Transpose { perm } => {
+            return 28 + perm.iter().map(|&p| p as u64 + 1).sum::<u64>() * 64;
+        }
+        Slice => 29,
+        Gather => 30,
+        Concat => 31,
+        Pad => 32,
+        Copy => 33,
+        Iota => 34,
+        MatMul => 35,
+        BatchMatMul => 36,
+        Conv => 37,
+    };
+    base
+}
+
+/// Thread-safe program cache with hit/miss accounting.
+#[derive(Debug, Default)]
+pub struct CompilationCache {
+    map: Mutex<HashMap<GraphKey, Arc<OptimizedProgram>>>,
+    hits: Mutex<u64>,
+    misses: Mutex<u64>,
+}
+
+impl CompilationCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Lookup; updates hit/miss counters.
+    pub fn get(&self, key: GraphKey) -> Option<Arc<OptimizedProgram>> {
+        let found = self.map.lock().unwrap().get(&key).cloned();
+        match &found {
+            Some(_) => *self.hits.lock().unwrap() += 1,
+            None => *self.misses.lock().unwrap() += 1,
+        }
+        found
+    }
+
+    /// Insert a compiled program.
+    pub fn put(&self, key: GraphKey, prog: Arc<OptimizedProgram>) {
+        self.map.lock().unwrap().insert(key, prog);
+    }
+
+    /// (hits, misses).
+    pub fn stats(&self) -> (u64, u64) {
+        (*self.hits.lock().unwrap(), *self.misses.lock().unwrap())
+    }
+
+    /// Entry count.
+    pub fn len(&self) -> usize {
+        self.map.lock().unwrap().len()
+    }
+
+    /// True when the cache is empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{DType, OpKind, Shape};
+
+    fn tiny(n: usize) -> Graph {
+        let mut g = Graph::new("t");
+        let mut cur = g.param(Shape::new(vec![8]), DType::F32, "p");
+        for i in 0..n {
+            cur = g.unary(OpKind::Relu, cur, format!("r{i}"));
+        }
+        g
+    }
+
+    #[test]
+    fn same_structure_same_key() {
+        assert_eq!(GraphKey::of(&tiny(3)), GraphKey::of(&tiny(3)));
+    }
+
+    #[test]
+    fn different_structure_different_key() {
+        assert_ne!(GraphKey::of(&tiny(3)), GraphKey::of(&tiny(4)));
+        // Same node count, different op.
+        let mut g = Graph::new("t");
+        let p = g.param(Shape::new(vec![8]), DType::F32, "p");
+        let _ = g.unary(OpKind::Exp, p, "e");
+        let mut g2 = Graph::new("t");
+        let p2 = g2.param(Shape::new(vec![8]), DType::F32, "p");
+        let _ = g2.unary(OpKind::Tanh, p2, "t");
+        assert_ne!(GraphKey::of(&g), GraphKey::of(&g2));
+    }
+
+    #[test]
+    fn shape_changes_key() {
+        let mut g = Graph::new("a");
+        g.param(Shape::new(vec![8]), DType::F32, "p");
+        let mut g2 = Graph::new("a");
+        g2.param(Shape::new(vec![16]), DType::F32, "p");
+        assert_ne!(GraphKey::of(&g), GraphKey::of(&g2));
+    }
+
+    #[test]
+    fn cache_hit_miss_accounting() {
+        use crate::explorer::FusionPlan;
+        use crate::pipeline::{OptimizedProgram, Tech};
+        let cache = CompilationCache::new();
+        let key = GraphKey::of(&tiny(2));
+        assert!(cache.get(key).is_none());
+        cache.put(
+            key,
+            Arc::new(OptimizedProgram {
+                tech: Tech::Fs,
+                plan: FusionPlan::default(),
+                kernels: vec![],
+            }),
+        );
+        assert!(cache.get(key).is_some());
+        assert_eq!(cache.stats(), (1, 1));
+        assert_eq!(cache.len(), 1);
+    }
+}

@@ -1,0 +1,134 @@
+//! Serving metrics: iteration latencies, throughput, optimization
+//! status transitions (used by the e2e example and the fleet bench).
+
+use crate::util::JsonValue;
+use std::sync::Mutex;
+
+/// Accumulated service metrics. Interior-mutable so the service can
+/// record from its serving loop while holding only `&self`.
+#[derive(Debug, Default)]
+pub struct ServiceMetrics {
+    inner: Mutex<Inner>,
+}
+
+#[derive(Debug, Default, Clone)]
+struct Inner {
+    /// Per-iteration simulated latency (ms), in execution order.
+    latencies_ms: Vec<f64>,
+    /// Iteration index at which the optimized program was hot-swapped in
+    /// (None while still running the fallback).
+    swap_iteration: Option<usize>,
+    /// Background optimization wall time, ms.
+    optimize_wall_ms: Option<f64>,
+}
+
+impl ServiceMetrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one served iteration.
+    pub fn record_iteration(&self, latency_ms: f64) {
+        self.inner.lock().unwrap().latencies_ms.push(latency_ms);
+    }
+
+    /// Record that the optimized program took over at iteration `it`.
+    pub fn record_swap(&self, it: usize, optimize_wall_ms: f64) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.swap_iteration = Some(it);
+        inner.optimize_wall_ms = Some(optimize_wall_ms);
+    }
+
+    /// Iterations served so far.
+    pub fn iterations(&self) -> usize {
+        self.inner.lock().unwrap().latencies_ms.len()
+    }
+
+    /// Iteration index of the hot swap.
+    pub fn swap_iteration(&self) -> Option<usize> {
+        self.inner.lock().unwrap().swap_iteration
+    }
+
+    /// Mean latency before/after the swap (ms); after is None until the
+    /// swap happened.
+    pub fn mean_before_after(&self) -> (f64, Option<f64>) {
+        let inner = self.inner.lock().unwrap();
+        let swap = inner.swap_iteration.unwrap_or(inner.latencies_ms.len());
+        let mean = |xs: &[f64]| {
+            if xs.is_empty() {
+                0.0
+            } else {
+                xs.iter().sum::<f64>() / xs.len() as f64
+            }
+        };
+        let before = mean(&inner.latencies_ms[..swap.min(inner.latencies_ms.len())]);
+        let after = if swap < inner.latencies_ms.len() {
+            Some(mean(&inner.latencies_ms[swap..]))
+        } else {
+            None
+        };
+        (before, after)
+    }
+
+    /// JSON snapshot for reports.
+    pub fn to_json(&self) -> JsonValue {
+        let (before, after) = self.mean_before_after();
+        let inner = self.inner.lock().unwrap();
+        let mut o = JsonValue::obj();
+        o.set("iterations", inner.latencies_ms.len());
+        o.set("mean_before_ms", before);
+        match after {
+            Some(a) => o.set("mean_after_ms", a),
+            None => o.set("mean_after_ms", JsonValue::Null),
+        };
+        match inner.swap_iteration {
+            Some(s) => o.set("swap_iteration", s),
+            None => o.set("swap_iteration", JsonValue::Null),
+        };
+        match inner.optimize_wall_ms {
+            Some(m) => o.set("optimize_wall_ms", m),
+            None => o.set("optimize_wall_ms", JsonValue::Null),
+        };
+        o
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn before_after_split() {
+        let m = ServiceMetrics::new();
+        for _ in 0..5 {
+            m.record_iteration(10.0);
+        }
+        m.record_swap(5, 123.0);
+        for _ in 0..5 {
+            m.record_iteration(6.0);
+        }
+        let (before, after) = m.mean_before_after();
+        assert!((before - 10.0).abs() < 1e-9);
+        assert!((after.unwrap() - 6.0).abs() < 1e-9);
+        assert_eq!(m.iterations(), 10);
+        assert_eq!(m.swap_iteration(), Some(5));
+    }
+
+    #[test]
+    fn no_swap_yet() {
+        let m = ServiceMetrics::new();
+        m.record_iteration(4.0);
+        let (before, after) = m.mean_before_after();
+        assert!((before - 4.0).abs() < 1e-9);
+        assert!(after.is_none());
+    }
+
+    #[test]
+    fn json_snapshot_fields() {
+        let m = ServiceMetrics::new();
+        m.record_iteration(1.0);
+        let j = m.to_json();
+        assert!(j.get("iterations").is_some());
+        assert!(j.get("mean_before_ms").is_some());
+    }
+}

@@ -1,0 +1,12 @@
+//! The JIT coordinator (§6): sessions, compilation cache, async
+//! compilation with hot swap, and the serving loop.
+
+pub mod cache;
+pub mod metrics;
+pub mod persist;
+pub mod service;
+
+pub use cache::{CompilationCache, GraphKey};
+pub use persist::{PersistedPlan, PlanStore};
+pub use metrics::ServiceMetrics;
+pub use service::{JitService, ServiceOptions};

@@ -1,0 +1,293 @@
+//! Persistent plan cache: tuned fusion plans survive process restarts.
+//!
+//! The paper's deployment story (§7.5) is "tune-once-run-many-times":
+//! a training job tunes in its first iteration and reuses the result
+//! for days. A production service restarting should not pay the tuning
+//! time again, so the coordinator can snapshot its compilation cache —
+//! per graph-hash, the technique and every fusion pattern's node list —
+//! to a JSON file, and warm-start from it: the plan is re-validated
+//! against the (re-built) graph and re-lowered to kernels, which is
+//! orders of magnitude cheaper than re-running the explorer.
+
+use super::cache::GraphKey;
+use crate::explorer::{FusionPattern, FusionPlan};
+use crate::gpu::DeviceSpec;
+use crate::graph::{Graph, NodeId};
+use crate::pipeline::{lower, OptimizedProgram, Tech};
+use crate::util::json::JsonValue;
+use crate::workloads::Workload;
+use std::collections::HashMap;
+use std::path::Path;
+
+/// A persisted plan: the graph fingerprint it was tuned for + the
+/// pattern node lists. Node ids are stable because workload builders
+/// are deterministic; `restore` re-validates before trusting them.
+#[derive(Debug, Clone)]
+pub struct PersistedPlan {
+    pub key: GraphKey,
+    pub graph_len: usize,
+    pub tech: Tech,
+    pub patterns: Vec<Vec<u32>>,
+}
+
+/// On-disk snapshot of tuned plans, keyed by graph hash.
+#[derive(Debug, Clone, Default)]
+pub struct PlanStore {
+    plans: HashMap<u64, PersistedPlan>,
+}
+
+impl PlanStore {
+    /// Empty store.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Number of persisted plans.
+    pub fn len(&self) -> usize {
+        self.plans.len()
+    }
+
+    /// True when no plans are stored.
+    pub fn is_empty(&self) -> bool {
+        self.plans.is_empty()
+    }
+
+    /// Record a tuned program for a workload graph.
+    pub fn insert(&mut self, graph: &Graph, prog: &OptimizedProgram) {
+        let key = GraphKey::of(graph);
+        self.plans.insert(
+            key.0,
+            PersistedPlan {
+                key,
+                graph_len: graph.len(),
+                tech: prog.tech,
+                patterns: prog
+                    .plan
+                    .patterns
+                    .iter()
+                    .map(|p| p.nodes().iter().map(|n| n.idx() as u32).collect())
+                    .collect(),
+            },
+        );
+    }
+
+    /// Look up a persisted plan by graph hash.
+    pub fn get(&self, graph: &Graph) -> Option<&PersistedPlan> {
+        self.plans.get(&GraphKey::of(graph).0)
+    }
+
+    /// Re-materialize an [`OptimizedProgram`] for `workload` from a
+    /// persisted plan: validate every pattern against the live graph
+    /// (ids in range, disjoint, acyclic) and re-lower to kernels.
+    /// Returns `None` when no plan matches or validation fails (stale
+    /// snapshot after a model change — the caller re-tunes).
+    pub fn restore(
+        &self,
+        workload: &Workload,
+        device: &DeviceSpec,
+    ) -> Option<OptimizedProgram> {
+        let graph = &workload.graph;
+        let saved = self.get(graph)?;
+        if saved.graph_len != graph.len() {
+            return None;
+        }
+        let patterns: Vec<FusionPattern> = saved
+            .patterns
+            .iter()
+            .map(|nodes| {
+                FusionPattern::new(nodes.iter().map(|&i| NodeId(i)).collect())
+            })
+            .collect();
+        // Validate: ids in range and every pattern still legal.
+        for p in &patterns {
+            if p.nodes().iter().any(|n| n.idx() >= graph.len()) || !p.is_valid(graph) {
+                return None;
+            }
+        }
+        let plan = FusionPlan { patterns };
+        if !plan.is_disjoint() {
+            return None;
+        }
+        let kernels = lower(graph, &plan, device, saved.tech, workload.loop_kind);
+        Some(OptimizedProgram { tech: saved.tech, plan, kernels })
+    }
+
+    /// Serialize to JSON.
+    pub fn to_json(&self) -> JsonValue {
+        let mut entries: Vec<&PersistedPlan> = self.plans.values().collect();
+        entries.sort_by_key(|p| p.key.0);
+        let arr = entries
+            .into_iter()
+            .map(|p| {
+                let mut o = JsonValue::obj();
+                // Hex string: u64 hashes exceed f64's 53-bit integer
+                // range, so a numeric key would corrupt on roundtrip.
+                o.set("key", format!("{:016x}", p.key.0))
+                    .set("graph_len", p.graph_len)
+                    .set("tech", p.tech.name())
+                    .set(
+                        "patterns",
+                        JsonValue::Arr(
+                            p.patterns
+                                .iter()
+                                .map(|pat| {
+                                    JsonValue::Arr(
+                                        pat.iter().map(|&n| JsonValue::Num(n as f64)).collect(),
+                                    )
+                                })
+                                .collect(),
+                        ),
+                    );
+                o
+            })
+            .collect();
+        let mut root = JsonValue::obj();
+        root.set("version", 1usize).set("plans", JsonValue::Arr(arr));
+        root
+    }
+
+    /// Deserialize from JSON (inverse of [`Self::to_json`]).
+    pub fn from_json(v: &JsonValue) -> Result<Self, String> {
+        if v.get("version").and_then(|x| x.as_usize()) != Some(1) {
+            return Err("unsupported plan-store version".into());
+        }
+        let mut store = PlanStore::new();
+        for p in v.get("plans").map(|x| x.items()).unwrap_or(&[]) {
+            let key = p
+                .get("key")
+                .and_then(|x| x.as_str())
+                .and_then(|s| u64::from_str_radix(s, 16).ok())
+                .ok_or("plan missing key")?;
+            let graph_len = p
+                .get("graph_len")
+                .and_then(|x| x.as_usize())
+                .ok_or("plan missing graph_len")?;
+            let tech = match p.get("tech").and_then(|x| x.as_str()) {
+                Some("TF") => Tech::Tf,
+                Some("XLA") => Tech::Xla,
+                Some("FS") => Tech::Fs,
+                other => return Err(format!("bad tech {other:?}")),
+            };
+            let patterns = p
+                .get("patterns")
+                .map(|x| {
+                    x.items()
+                        .iter()
+                        .map(|pat| {
+                            pat.items()
+                                .iter()
+                                .filter_map(|n| n.as_f64().map(|f| f as u32))
+                                .collect::<Vec<u32>>()
+                        })
+                        .collect::<Vec<_>>()
+                })
+                .unwrap_or_default();
+            store.plans.insert(
+                key,
+                PersistedPlan { key: GraphKey(key), graph_len, tech, patterns },
+            );
+        }
+        Ok(store)
+    }
+
+    /// Write the store to disk (pretty JSON).
+    pub fn save(&self, path: impl AsRef<Path>) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json().to_pretty())
+    }
+
+    /// Load a store from disk.
+    pub fn load(path: impl AsRef<Path>) -> Result<Self, String> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .map_err(|e| format!("read {}: {e}", path.as_ref().display()))?;
+        let v = JsonValue::parse(&text)?;
+        Self::from_json(&v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::explorer::ExploreOptions;
+    use crate::graph::{DType, OpKind, Shape};
+    use crate::pipeline::optimize;
+    use crate::workloads::{blocks, LoopKind, Mode};
+
+    fn ln_workload() -> Workload {
+        let mut g = Graph::new("LN");
+        let x = g.param(Shape::new(vec![4096, 768]), DType::F32, "x");
+        let _ = blocks::layer_norm(&mut g, x, "ln");
+        Workload {
+            name: "LN",
+            field: "micro",
+            mode: Mode::Infer,
+            batch: 32,
+            loop_kind: LoopKind::None,
+            graph: g,
+        }
+    }
+
+    #[test]
+    fn roundtrip_restores_identical_plan() {
+        let w = ln_workload();
+        let device = DeviceSpec::v100();
+        let prog = optimize(&w, &device, Tech::Fs, &ExploreOptions::default());
+        let mut store = PlanStore::new();
+        store.insert(&w.graph, &prog);
+
+        let json = store.to_json().to_pretty();
+        let loaded = PlanStore::from_json(&JsonValue::parse(&json).unwrap()).unwrap();
+        let restored = loaded.restore(&w, &device).expect("plan restores");
+        assert_eq!(restored.tech, Tech::Fs);
+        assert_eq!(restored.plan.patterns.len(), prog.plan.patterns.len());
+        assert_eq!(restored.kernels.len(), prog.kernels.len());
+    }
+
+    #[test]
+    fn stale_snapshot_rejected_on_graph_change() {
+        let w = ln_workload();
+        let device = DeviceSpec::v100();
+        let prog = optimize(&w, &device, Tech::Fs, &ExploreOptions::default());
+        let mut store = PlanStore::new();
+        store.insert(&w.graph, &prog);
+
+        // "Model change": a grown graph has a different hash → miss.
+        let mut w2 = ln_workload();
+        let extra = w2.graph.param(Shape::new(vec![4]), DType::F32, "p2");
+        let _ = w2.graph.unary(OpKind::Neg, extra, "n2");
+        assert!(store.restore(&w2, &device).is_none());
+    }
+
+    #[test]
+    fn corrupted_pattern_rejected() {
+        let w = ln_workload();
+        let device = DeviceSpec::v100();
+        let prog = optimize(&w, &device, Tech::Fs, &ExploreOptions::default());
+        let mut store = PlanStore::new();
+        store.insert(&w.graph, &prog);
+        // Corrupt: out-of-range node id.
+        let key = GraphKey::of(&w.graph).0;
+        store.plans.get_mut(&key).unwrap().patterns[0][0] = 9999;
+        assert!(store.restore(&w, &device).is_none());
+    }
+
+    #[test]
+    fn save_and_load_via_disk() {
+        let w = ln_workload();
+        let device = DeviceSpec::v100();
+        let prog = optimize(&w, &device, Tech::Fs, &ExploreOptions::default());
+        let mut store = PlanStore::new();
+        store.insert(&w.graph, &prog);
+        let path = std::env::temp_dir().join("fstitch_plan_store_test.json");
+        store.save(&path).unwrap();
+        let loaded = PlanStore::load(&path).unwrap();
+        assert_eq!(loaded.len(), 1);
+        assert!(loaded.restore(&w, &device).is_some());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn bad_version_rejected() {
+        let v = JsonValue::parse(r#"{"version": 2, "plans": []}"#).unwrap();
+        assert!(PlanStore::from_json(&v).is_err());
+    }
+}

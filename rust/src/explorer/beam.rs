@@ -1,0 +1,229 @@
+//! Fusion-plan composition by beam search (§5.3).
+//!
+//! All per-vertex candidate patterns (which may overlap) form the pool
+//! `E`; the goal is a set of non-overlapping patterns maximizing Σf.
+//! FusionStitching keeps 3 *buffer sets* (beam width 3), traverses
+//! vertices producer→consumer, tries to append each candidate of each
+//! vertex into each buffer set when it does not overlap, keeps the best
+//! 3 sets per step by accumulated score, and finally picks among the 3
+//! finished plans with the accurate latency-evaluator.
+
+use super::candidates::CandidateSets;
+use super::delta::DeltaModel;
+use super::pattern::{FusionPattern, FusionPlan};
+use crate::gpu::DeviceSpec;
+use crate::graph::Graph;
+use std::rc::Rc;
+
+/// Beam-search knobs (paper default: width 3).
+#[derive(Debug, Clone)]
+pub struct BeamOptions {
+    pub width: usize,
+}
+
+impl Default for BeamOptions {
+    fn default() -> Self {
+        BeamOptions { width: 3 }
+    }
+}
+
+/// Persistent (structurally shared) list of chosen patterns. Beam
+/// states fork at every vertex; a naive `Vec<FusionPattern>` clone made
+/// the search O(V·P) in pattern copies (1.5 s on DIEN-train's 13k-op
+/// graph — see EXPERIMENTS.md §Perf). Sharing the tail via `Rc` makes
+/// a beam clone O(bitset) instead.
+#[derive(Debug)]
+struct Chosen {
+    pattern: FusionPattern,
+    score: f64,
+    prev: Option<Rc<Chosen>>,
+}
+
+impl Drop for Chosen {
+    fn drop(&mut self) {
+        // Unlink iteratively: the default recursive drop would recurse
+        // once per chosen pattern, overflowing the stack on plans with
+        // tens of thousands of patterns (fleet-scale graphs).
+        let mut cur = self.prev.take();
+        while let Some(rc) = cur {
+            match Rc::try_unwrap(rc) {
+                Ok(mut link) => cur = link.prev.take(),
+                Err(_) => break, // shared tail: another beam still owns it
+            }
+        }
+    }
+}
+
+/// One in-flight buffer set: chosen patterns + coverage bitset + score.
+#[derive(Debug, Clone)]
+struct BufferSet {
+    chosen: Option<Rc<Chosen>>,
+    covered: Vec<u64>,
+    score: f64,
+}
+
+impl BufferSet {
+    fn new(n_nodes: usize) -> Self {
+        BufferSet {
+            chosen: None,
+            covered: vec![0u64; n_nodes.div_ceil(64)],
+            score: 0.0,
+        }
+    }
+
+    fn overlaps(&self, p: &FusionPattern) -> bool {
+        p.nodes()
+            .iter()
+            .any(|id| self.covered[id.idx() / 64] >> (id.idx() % 64) & 1 == 1)
+    }
+
+    fn push(&mut self, p: FusionPattern, score: f64) {
+        for id in p.nodes() {
+            self.covered[id.idx() / 64] |= 1 << (id.idx() % 64);
+        }
+        self.chosen = Some(Rc::new(Chosen {
+            pattern: p,
+            score,
+            prev: self.chosen.take(),
+        }));
+        self.score += score;
+    }
+
+    /// Materialize the chosen patterns (end of search only).
+    fn into_patterns(self) -> Vec<FusionPattern> {
+        let mut out = Vec::new();
+        let mut cur = self.chosen;
+        while let Some(link) = cur {
+            out.push(link.pattern.clone());
+            let _ = link.score;
+            cur = link.prev.clone();
+        }
+        out.reverse();
+        out
+    }
+}
+
+/// Compose the final plan from candidate sets.
+pub fn compose_plan(
+    graph: &Graph,
+    device: &DeviceSpec,
+    candidates: &CandidateSets,
+    opts: &BeamOptions,
+) -> FusionPlan {
+    let mut beams = vec![BufferSet::new(graph.len())];
+
+    // Producer→consumer order = forward topological order.
+    for &v in graph.topo_order().iter() {
+        let cands = &candidates[v.idx()];
+        if cands.is_empty() {
+            continue;
+        }
+        // Move the current beams in as the "skip this vertex" option —
+        // appends fork from them by (cheap, structurally-shared) clone.
+        let mut next: Vec<BufferSet> = std::mem::take(&mut beams);
+        let skip_count = next.len();
+        for bi in 0..skip_count {
+            for sc in cands {
+                // Only multi-op, positive-score patterns improve a plan.
+                if sc.pattern.len() < 2 || sc.score <= 0.0 {
+                    continue;
+                }
+                if next[bi].overlaps(&sc.pattern) {
+                    continue;
+                }
+                let mut nb = next[bi].clone();
+                nb.push(sc.pattern.clone(), sc.score);
+                next.push(nb);
+            }
+        }
+        next.sort_by(|a, b| b.score.partial_cmp(&a.score).unwrap_or(std::cmp::Ordering::Equal));
+        // Dedup identical coverage (keeps beam diversity meaningful).
+        next.dedup_by(|a, b| a.covered == b.covered);
+        next.truncate(opts.width.max(1));
+        beams = next;
+    }
+
+    // Final selection among the beam's plans with the accurate model:
+    // total simplified kernel time over the *whole* kernel list (the
+    // paper's latency-evaluator pass over candidate plans).
+    let model = DeltaModel::new(graph, device.clone());
+    let best = beams
+        .into_iter()
+        .map(|b| FusionPlan { patterns: b.into_patterns() })
+        .min_by(|a, b| {
+            let ta = model.plan_time_us(&a.kernels(graph));
+            let tb = model.plan_time_us(&b.kernels(graph));
+            ta.partial_cmp(&tb).unwrap_or(std::cmp::Ordering::Equal)
+        })
+        .unwrap_or_default();
+    debug_assert!(best.is_disjoint());
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::explorer::candidates::{candidate_patterns, ExploreOptions};
+    use crate::graph::{DType, Shape};
+    use crate::workloads::blocks;
+
+    #[test]
+    fn layernorm_composes_into_one_kernel() {
+        let mut g = Graph::new("ln");
+        let x = g.param(Shape::new(vec![4096, 768]), DType::F32, "x");
+        let _ = blocks::layer_norm(&mut g, x, "ln");
+        let device = DeviceSpec::v100();
+        let opts = ExploreOptions::default();
+        let cands = candidate_patterns(&g, &device, &opts);
+        let plan = compose_plan(&g, &device, &cands, &BeamOptions::default());
+        assert!(plan.is_disjoint());
+        // Beam alone leaves sibling producers (gamma/beta broadcasts)
+        // out; the absorption pass closes them into the main pattern.
+        let plan = crate::explorer::absorb_producers(&g, plan, &opts);
+        let kernels = plan.kernels(&g);
+        // FusionStitching's Fig. 1 claim: one kernel for the whole LN
+        // (XLA needs 4).
+        assert!(
+            kernels.len() <= 2,
+            "expected ≤2 kernels, got {}: {kernels:?}",
+            kernels.len()
+        );
+        let biggest = kernels.iter().map(|k| k.len()).max().unwrap();
+        assert!(biggest >= 14, "main kernel only {biggest} ops");
+    }
+
+    #[test]
+    fn plans_never_overlap_on_random_graphs() {
+        use crate::util::Prng;
+        use crate::workloads::synthetic::{generate, SyntheticConfig};
+        let device = DeviceSpec::v100();
+        for seed in 0..6 {
+            let g = generate(
+                &SyntheticConfig { num_ops: 60, ..Default::default() },
+                &mut Prng::new(seed + 1),
+            );
+            let cands = candidate_patterns(&g, &device, &ExploreOptions::default());
+            let plan = compose_plan(&g, &device, &cands, &BeamOptions::default());
+            assert!(plan.is_disjoint(), "seed {seed}");
+            for p in &plan.patterns {
+                assert!(p.is_valid(&g), "invalid pattern in plan, seed {seed}");
+            }
+        }
+    }
+
+    #[test]
+    fn wider_beam_never_worse() {
+        let mut g = Graph::new("ln2");
+        let x = g.param(Shape::new(vec![1024, 512]), DType::F32, "x");
+        let h = blocks::layer_norm(&mut g, x, "ln_a");
+        let _ = blocks::softmax(&mut g, h, "sm");
+        let device = DeviceSpec::v100();
+        let cands = candidate_patterns(&g, &device, &ExploreOptions::default());
+        let model = DeltaModel::new(&g, device.clone());
+        let narrow = compose_plan(&g, &device, &cands, &BeamOptions { width: 1 });
+        let wide = compose_plan(&g, &device, &cands, &BeamOptions { width: 3 });
+        let t_narrow = model.plan_time_us(&narrow.kernels(&g));
+        let t_wide = model.plan_time_us(&wide.kernels(&g));
+        assert!(t_wide <= t_narrow * 1.001, "wide {t_wide} vs narrow {t_narrow}");
+    }
+}

@@ -1,0 +1,227 @@
+//! The delta-evaluator (§5.4) — the fast, less-accurate cost model that
+//! scores fusion patterns during exploration.
+//!
+//! `f = T_reduced_mem + T_reduced_calls − T_penalty` (Eq. 3).
+//!
+//! We realize the three terms as the difference between executing the
+//! pattern's ops as separate kernels and executing the fused kernel
+//! under a *simplified* latency estimate (fixed 16 registers, max-single
+//! shared-memory request, no lifetime analysis — exactly the
+//! simplifications §5.4 lists). A positive score means fusing saves
+//! time; the explorer only keeps positive-score patterns.
+
+use crate::gpu::DeviceSpec;
+use crate::graph::{Graph, Node, NodeId, OpClass, OpKind};
+
+/// The fast cost model. Construct once per (graph, device) exploration;
+/// per-op times are cached.
+#[derive(Debug)]
+pub struct DeltaModel<'g> {
+    graph: &'g Graph,
+    device: DeviceSpec,
+    /// Host + device cost of one extra kernel launch, µs
+    /// (`T_reduced_calls`'s fixed per-call constant).
+    pub launch_overhead_us: f64,
+    /// Cached standalone time per node, µs.
+    op_time_cache: Vec<f64>,
+}
+
+impl<'g> DeltaModel<'g> {
+    pub fn new(graph: &'g Graph, device: DeviceSpec) -> Self {
+        let launch_overhead_us = 7.0; // ~launch floor + host dispatch
+        let op_time_cache = graph
+            .nodes()
+            .iter()
+            .map(|n| standalone_op_time_us(graph, n, &device))
+            .collect();
+        DeltaModel {
+            graph,
+            device,
+            launch_overhead_us,
+            op_time_cache,
+        }
+    }
+
+    /// Standalone (unfused) execution time of one op, µs.
+    pub fn op_time_us(&self, id: NodeId) -> f64 {
+        self.op_time_cache[id.idx()]
+    }
+
+    /// Eq. 3 score for a pattern, µs saved. Higher is better.
+    pub fn score(&self, pattern: &[NodeId]) -> f64 {
+        if pattern.len() < 2 {
+            return 0.0;
+        }
+        let unfused: f64 = pattern.iter().map(|&id| self.op_time_us(id)).sum();
+        let calls_saved = (pattern.len() - 1) as f64 * self.launch_overhead_us;
+        let fused = self.pattern_time_us(pattern);
+        unfused + calls_saved - fused - self.launch_overhead_us_of_fused()
+    }
+
+    fn launch_overhead_us_of_fused(&self) -> f64 {
+        0.0 // the fused kernel's own launch is included in `unfused - saved`
+    }
+
+    /// Simplified fused-kernel time (the `T_penalty`-bearing term):
+    /// boundary traffic over occupancy-scaled bandwidth, with the §5.4
+    /// shortcuts: registers fixed at 16, shared memory = the maximum
+    /// single request (no dataflow sharing), no lifetime analysis.
+    pub fn pattern_time_us(&self, pattern: &[NodeId]) -> f64 {
+        let g = self.graph;
+        let (rows, _len) = crate::codegen::latency::pattern_rows(g, pattern);
+
+        // Boundary traffic.
+        let bytes_read: usize = g
+            .pattern_inputs(pattern)
+            .iter()
+            .map(|&i| g.node(i).output_bytes())
+            .sum();
+        let bytes_written: usize = g
+            .pattern_outputs(pattern)
+            .iter()
+            .map(|&o| g.node(o).output_bytes())
+            .sum();
+
+        // Shared-memory estimate: max over per-row staging requests of
+        // reused sub-roots (assume block composition for every internal
+        // expensive/reduction producer — conservative).
+        let mut shmem = 0usize;
+        let mut alu_work = 0f64;
+        for &id in pattern {
+            let node = g.node(id);
+            let work_items = match &node.kind {
+                OpKind::Reduce { .. } => g.node(node.inputs[0]).num_elements(),
+                _ => node.num_elements(),
+            } as f64;
+            alu_work += work_items * node.kind.instructions_per_element();
+            let internal = g.consumers(id).iter().any(|c| pattern.contains(c));
+            if internal && node.kind.is_expensive_producer() {
+                let per_row = (node.num_elements() / rows.max(1)).max(1)
+                    * node.dtype.size_bytes();
+                shmem = shmem.max(per_row);
+            }
+        }
+        let occ = self.device.occupancy(256, 16, shmem);
+        if occ == 0.0 {
+            return f64::INFINITY;
+        }
+        let bw = self.device.effective_bandwidth_gbps(occ);
+        let t_mem = (bytes_read + bytes_written) as f64 / (bw * 1e3);
+        // ALU side at full device throughput scaled by occupancy.
+        let ips = self.device.num_sms as f64 * 64.0 * self.device.clock_ghz * 1e3 * occ; // instr/µs
+        let t_alu = alu_work / ips;
+        t_mem.max(t_alu).max(self.device.kernel_floor_us)
+    }
+
+    /// Total simplified plan time: Σ kernel times + per-kernel launch
+    /// overhead. Used by beam search to rank buffer sets cheaply.
+    pub fn plan_time_us(&self, kernels: &[crate::explorer::FusionPattern]) -> f64 {
+        kernels
+            .iter()
+            .map(|k| {
+                let t = if k.len() == 1 {
+                    self.op_time_us(k.nodes()[0])
+                } else {
+                    self.pattern_time_us(k.nodes())
+                };
+                t + self.launch_overhead_us
+            })
+            .sum()
+    }
+}
+
+/// Standalone time of one op as its own kernel: traffic/bandwidth with a
+/// launch floor (memory-intensive ops are bandwidth- or latency-bound).
+fn standalone_op_time_us(graph: &Graph, node: &Node, device: &DeviceSpec) -> f64 {
+    if node.kind.class() == OpClass::Source || !node.kind.is_fusible() {
+        return 0.0;
+    }
+    let in_bytes: usize = node
+        .inputs
+        .iter()
+        .map(|&i| graph.node(i).output_bytes())
+        .sum();
+    let bytes = in_bytes + node.output_bytes();
+    let t_mem = bytes as f64 / (device.hbm_gbps * 1e3);
+    t_mem.max(device.kernel_floor_us)
+}
+
+/// Convenience free function matching the paper's `f(P_i)` notation.
+pub fn delta_score(model: &DeltaModel, pattern: &[NodeId]) -> f64 {
+    model.score(pattern)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{DType, Shape};
+    use crate::workloads::blocks;
+
+    fn ln() -> (Graph, Vec<NodeId>) {
+        let mut g = Graph::new("ln");
+        let x = g.param(Shape::new(vec![4096, 768]), DType::F32, "x");
+        let _ = blocks::layer_norm(&mut g, x, "ln");
+        let p: Vec<NodeId> = g
+            .nodes()
+            .iter()
+            .filter(|n| n.kind.is_fusible())
+            .map(|n| n.id)
+            .collect();
+        (g, p)
+    }
+
+    #[test]
+    fn fusing_layernorm_scores_positive() {
+        let (g, p) = ln();
+        let model = DeltaModel::new(&g, DeviceSpec::v100());
+        let s = model.score(&p);
+        assert!(s > 0.0, "score={s}");
+    }
+
+    #[test]
+    fn singletons_score_zero() {
+        let (g, p) = ln();
+        let model = DeltaModel::new(&g, DeviceSpec::v100());
+        assert_eq!(model.score(&p[..1]), 0.0);
+    }
+
+    #[test]
+    fn bigger_fusions_of_tiny_ops_save_more_launches() {
+        // 8 chained tiny ops: fusing all should beat fusing two.
+        let mut g = Graph::new("chain");
+        let x = g.param(Shape::new(vec![256]), DType::F32, "x");
+        let mut cur = x;
+        let mut ids = Vec::new();
+        for i in 0..8 {
+            cur = g.unary(crate::graph::OpKind::Relu, cur, format!("r{i}"));
+            ids.push(cur);
+        }
+        let model = DeltaModel::new(&g, DeviceSpec::v100());
+        let all = model.score(&ids);
+        let two = model.score(&ids[..2]);
+        assert!(all > two, "all={all} two={two}");
+    }
+
+    #[test]
+    fn op_times_are_bandwidth_or_floor_bound() {
+        let mut g = Graph::new("t");
+        let big = g.param(Shape::new(vec![4096, 4096]), DType::F32, "big");
+        let small = g.param(Shape::new(vec![16]), DType::F32, "small");
+        let b = g.unary(crate::graph::OpKind::Relu, big, "b");
+        let s = g.unary(crate::graph::OpKind::Relu, small, "s");
+        let model = DeltaModel::new(&g, DeviceSpec::v100());
+        assert!(model.op_time_us(b) > model.op_time_us(s));
+        assert_eq!(model.op_time_us(s), DeviceSpec::v100().kernel_floor_us);
+    }
+
+    #[test]
+    fn plan_time_accounts_launches() {
+        let (g, p) = ln();
+        let model = DeltaModel::new(&g, DeviceSpec::v100());
+        use crate::explorer::FusionPattern;
+        let fused = vec![FusionPattern::new(p.clone())];
+        let split: Vec<FusionPattern> =
+            p.iter().map(|&id| FusionPattern::single(id)).collect();
+        assert!(model.plan_time_us(&fused) < model.plan_time_us(&split));
+    }
+}

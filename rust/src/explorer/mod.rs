@@ -1,0 +1,162 @@
+//! Fusion exploration (§5): find the fusion plan for a graph.
+//!
+//! Pipeline: [`candidates`] generates per-vertex *candidate patterns*
+//! with the PatternReduction approximate dynamic program (top-k per
+//! vertex, scored by the [`delta`] evaluator); [`beam`] composes
+//! non-overlapping candidates into whole-graph plans with beam search
+//! (width 3) and picks the winner with the accurate latency-evaluator;
+//! [`remote`] then packs residual small kernels that are not adjacent in
+//! the graph (Fig. 5) to cut launch counts further.
+
+pub mod beam;
+pub mod candidates;
+pub mod delta;
+pub mod pattern;
+pub mod remote;
+
+pub use beam::{compose_plan, BeamOptions};
+pub use candidates::{candidate_patterns, ExploreOptions};
+pub use delta::{delta_score, DeltaModel};
+pub use pattern::{FusionPattern, FusionPlan};
+pub use remote::remote_fusion;
+
+use crate::gpu::DeviceSpec;
+use crate::graph::Graph;
+
+/// End-to-end exploration: candidates → beam → producer absorption →
+/// latency-evaluator validation → XLA-fusion backfill → remote fusion.
+/// This is "fusion explorer" in Fig. 2, with the §6 layering: Fusion-
+/// Stitching runs *on top of* XLA's basic fusion, and "basic fusions not
+/// merged into larger fusions by FusionStitching finally go through the
+/// basic compilation pass of XLA" — which also delivers the production
+/// never-negative property of §7.2.
+pub fn explore(graph: &Graph, device: &DeviceSpec, opts: &ExploreOptions) -> FusionPlan {
+    let cands = candidate_patterns(graph, device, opts);
+    let mut plan = compose_plan(
+        graph,
+        device,
+        &cands,
+        &BeamOptions { width: opts.beam_width },
+    );
+    plan = absorb_producers(graph, plan, opts);
+    plan = prune_bad_patterns(graph, device, plan);
+    plan = backfill_with_xla(graph, plan);
+    if opts.enable_remote_fusion {
+        plan = remote_fusion(graph, device, plan, opts);
+    }
+    debug_assert!(plan.is_disjoint());
+    plan
+}
+
+/// Accurate-model validation: re-cost every pattern with the full
+/// latency-evaluator (the code generator's tuner) and drop any whose
+/// fused time is not better than launching its ops separately. The
+/// delta-evaluator is fast but optimistic (it assumes reuse schedules
+/// are available); patterns whose locality constraints force
+/// thread-composition recompute are caught here.
+pub fn prune_bad_patterns(
+    graph: &Graph,
+    device: &DeviceSpec,
+    mut plan: FusionPlan,
+) -> FusionPlan {
+    let model = DeltaModel::new(graph, device.clone());
+    let tuner_opts = crate::codegen::TunerOptions::fusion_stitching();
+    plan.patterns.retain(|p| {
+        match crate::codegen::tune_pattern(graph, p.nodes(), device, &tuner_opts) {
+            None => false,
+            Some(t) => {
+                let unfused: f64 = p
+                    .nodes()
+                    .iter()
+                    .map(|&id| model.op_time_us(id) + model.launch_overhead_us)
+                    .sum();
+                t.estimate.time_us + model.launch_overhead_us < unfused
+            }
+        }
+    });
+    plan
+}
+
+/// Fill regions FusionStitching did not claim with XLA's rule-based
+/// basic fusions (§6: the FS pass runs over XLA's fusion results; what
+/// it does not merge keeps its XLA grouping). Coverage is tracked with
+/// a node bitset — the pairwise pattern-overlap scan was O(|plans|²)
+/// and dominated large recurrent graphs (EXPERIMENTS.md §Perf).
+pub fn backfill_with_xla(graph: &Graph, mut plan: FusionPlan) -> FusionPlan {
+    let mut covered = vec![0u64; graph.len().div_ceil(64)];
+    for p in &plan.patterns {
+        for id in p.nodes() {
+            covered[id.idx() / 64] |= 1 << (id.idx() % 64);
+        }
+    }
+    let xla = crate::baselines::xla::plan(graph);
+    for xp in xla.patterns {
+        let free = xp
+            .nodes()
+            .iter()
+            .all(|id| covered[id.idx() / 64] >> (id.idx() % 64) & 1 == 0);
+        if free {
+            for id in xp.nodes() {
+                covered[id.idx() / 64] |= 1 << (id.idx() % 64);
+            }
+            plan.patterns.push(xp);
+        }
+    }
+    plan
+}
+
+/// Sink leftover producers into the unique pattern that consumes them.
+///
+/// PatternReduction grows patterns along consumer chains, so *sibling*
+/// producers (e.g. the gamma/beta broadcasts feeding layer-norm's tail)
+/// can be left outside a pattern that consumes all their output. Any
+/// fusible op whose every consumer lives inside one pattern is absorbed
+/// into it when the union stays valid — the closure that makes LN one
+/// kernel end-to-end (Fig. 1).
+pub fn absorb_producers(
+    graph: &Graph,
+    mut plan: FusionPlan,
+    opts: &ExploreOptions,
+) -> FusionPlan {
+    use crate::graph::OpKind;
+    // Iterate to a fixpoint: absorbing one producer can expose another.
+    for _round in 0..8 {
+        // node -> owning pattern index
+        let mut owner: Vec<Option<usize>> = vec![None; graph.len()];
+        for (pi, p) in plan.patterns.iter().enumerate() {
+            for &id in p.nodes() {
+                owner[id.idx()] = Some(pi);
+            }
+        }
+        let mut changed = false;
+        for node in graph.nodes() {
+            if owner[node.id.idx()].is_some()
+                || !node.kind.is_fusible()
+                || matches!(node.kind, OpKind::Copy)
+            {
+                continue;
+            }
+            let consumers = graph.consumers(node.id);
+            if consumers.is_empty() {
+                continue;
+            }
+            let homes: Vec<Option<usize>> =
+                consumers.iter().map(|c| owner[c.idx()]).collect();
+            let first = homes[0];
+            if first.is_none() || homes.iter().any(|h| *h != first) {
+                continue;
+            }
+            let pi = first.unwrap();
+            let cand = plan.patterns[pi].union(&FusionPattern::single(node.id));
+            if cand.len() <= opts.max_pattern_size && cand.is_valid(graph) {
+                plan.patterns[pi] = cand;
+                owner[node.id.idx()] = Some(pi);
+                changed = true;
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+    plan
+}

@@ -1,0 +1,205 @@
+//! Fusion patterns and plans (§5.1).
+//!
+//! A **fusion pattern** `P_i = (V_i, E_i)` is a subgraph scheduled into
+//! one kernel; a **fusion plan** `S = {P_0..P_k-1}` is a set of disjoint
+//! patterns covering (part of) the graph. These types are shared by the
+//! explorer, the baselines, and the pipeline: every technique produces a
+//! `FusionPlan`, so downstream emission and simulation are uniform.
+
+use crate::graph::{Graph, NodeId};
+
+/// A candidate or final fusion pattern: a sorted, deduplicated node set.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct FusionPattern {
+    nodes: Vec<NodeId>,
+}
+
+impl FusionPattern {
+    /// Build from any node list (sorts + dedups).
+    pub fn new(mut nodes: Vec<NodeId>) -> Self {
+        nodes.sort_unstable();
+        nodes.dedup();
+        FusionPattern { nodes }
+    }
+
+    /// Singleton pattern.
+    pub fn single(id: NodeId) -> Self {
+        FusionPattern { nodes: vec![id] }
+    }
+
+    /// Union of two patterns.
+    pub fn union(&self, other: &FusionPattern) -> FusionPattern {
+        let mut nodes = self.nodes.clone();
+        nodes.extend_from_slice(&other.nodes);
+        FusionPattern::new(nodes)
+    }
+
+    /// Sorted member nodes.
+    pub fn nodes(&self) -> &[NodeId] {
+        &self.nodes
+    }
+
+    /// Member count.
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// True when the pattern has no nodes.
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    /// Membership test (binary search on the sorted set).
+    pub fn contains(&self, id: NodeId) -> bool {
+        self.nodes.binary_search(&id).is_ok()
+    }
+
+    /// True when the two patterns share any node.
+    pub fn overlaps(&self, other: &FusionPattern) -> bool {
+        // Merge-walk over the two sorted lists.
+        let (mut i, mut j) = (0, 0);
+        while i < self.nodes.len() && j < other.nodes.len() {
+            match self.nodes[i].cmp(&other.nodes[j]) {
+                std::cmp::Ordering::Less => i += 1,
+                std::cmp::Ordering::Greater => j += 1,
+                std::cmp::Ordering::Equal => return true,
+            }
+        }
+        false
+    }
+
+    /// Smallest node id — used as the pattern's stable identity in
+    /// reports.
+    pub fn min_id(&self) -> NodeId {
+        self.nodes[0]
+    }
+
+    /// Validity: non-empty, all fusible, introduces no cyclic dependence
+    /// (Fig. 6), and is schedulable by the code generator.
+    pub fn is_valid(&self, graph: &Graph) -> bool {
+        !self.nodes.is_empty()
+            && self
+                .nodes
+                .iter()
+                .all(|&id| graph.node(id).kind.is_fusible())
+            && !graph.fusion_creates_cycle(&self.nodes)
+            && crate::codegen::latency::pattern_supported(graph, &self.nodes)
+    }
+}
+
+/// A fusion plan: disjoint patterns + every fusible node not covered by
+/// any pattern executes as its own single-op kernel.
+#[derive(Debug, Clone, Default)]
+pub struct FusionPlan {
+    pub patterns: Vec<FusionPattern>,
+}
+
+impl FusionPlan {
+    /// Kernels this plan launches for the memory-intensive population:
+    /// the multi-op patterns plus singletons for uncovered fusible ops
+    /// (excluding zero-cost reshapes, which no framework launches).
+    pub fn kernels(&self, graph: &Graph) -> Vec<FusionPattern> {
+        let mut covered = vec![false; graph.len()];
+        for p in &self.patterns {
+            for &id in p.nodes() {
+                covered[id.idx()] = true;
+            }
+        }
+        let mut out = self.patterns.clone();
+        for node in graph.nodes() {
+            if covered[node.id.idx()] || !node.kind.is_fusible() {
+                continue;
+            }
+            if matches!(node.kind, crate::graph::OpKind::Reshape) {
+                continue; // layout no-op: never a kernel
+            }
+            if matches!(node.kind, crate::graph::OpKind::Copy) {
+                continue; // memcpy activity: accounted in the Cpy column
+            }
+            out.push(FusionPattern::single(node.id));
+        }
+        out
+    }
+
+    /// Check plan invariant: patterns are pairwise disjoint.
+    pub fn is_disjoint(&self) -> bool {
+        for (i, a) in self.patterns.iter().enumerate() {
+            for b in &self.patterns[i + 1..] {
+                if a.overlaps(b) {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+
+    /// Total nodes covered by multi-op patterns.
+    pub fn covered_nodes(&self) -> usize {
+        self.patterns.iter().map(|p| p.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{DType, Graph, OpKind, Shape};
+
+    fn chain() -> (Graph, Vec<NodeId>) {
+        let mut g = Graph::new("c");
+        let p = g.param(Shape::new(vec![8]), DType::F32, "p");
+        let a = g.unary(OpKind::Exp, p, "a");
+        let b = g.unary(OpKind::Neg, a, "b");
+        let c = g.unary(OpKind::Abs, b, "c");
+        (g, vec![a, b, c])
+    }
+
+    #[test]
+    fn new_sorts_and_dedups() {
+        let p = FusionPattern::new(vec![NodeId(3), NodeId(1), NodeId(3)]);
+        assert_eq!(p.nodes(), &[NodeId(1), NodeId(3)]);
+        assert_eq!(p.len(), 2);
+    }
+
+    #[test]
+    fn overlap_detection() {
+        let a = FusionPattern::new(vec![NodeId(1), NodeId(2)]);
+        let b = FusionPattern::new(vec![NodeId(2), NodeId(3)]);
+        let c = FusionPattern::new(vec![NodeId(4)]);
+        assert!(a.overlaps(&b));
+        assert!(!a.overlaps(&c));
+        assert!(a.union(&b).contains(NodeId(3)));
+    }
+
+    #[test]
+    fn validity_rejects_param_and_cycles() {
+        let (g, ids) = chain();
+        assert!(FusionPattern::new(ids.clone()).is_valid(&g));
+        assert!(!FusionPattern::new(vec![NodeId(0)]).is_valid(&g)); // param
+        // {a, c} leaves b outside on a re-entering path ⇒ invalid.
+        assert!(!FusionPattern::new(vec![ids[0], ids[2]]).is_valid(&g));
+    }
+
+    #[test]
+    fn kernels_add_singletons_for_uncovered() {
+        let (g, ids) = chain();
+        let plan = FusionPlan {
+            patterns: vec![FusionPattern::new(vec![ids[0], ids[1]])],
+        };
+        let kernels = plan.kernels(&g);
+        // one fused kernel + singleton for c (param excluded)
+        assert_eq!(kernels.len(), 2);
+        assert!(plan.is_disjoint());
+    }
+
+    #[test]
+    fn reshape_and_copy_are_not_kernels() {
+        let mut g = Graph::new("r");
+        let p = g.param(Shape::new(vec![4, 2]), DType::F32, "p");
+        let r = g.add(OpKind::Reshape, DType::F32, Shape::new(vec![8]), vec![p], "r");
+        let c = g.unary(OpKind::Copy, r, "cpy");
+        let _ = c;
+        let plan = FusionPlan::default();
+        let kernels = plan.kernels(&g);
+        assert!(kernels.is_empty());
+    }
+}

@@ -1,0 +1,138 @@
+//! Remote fusion (§5.2, Fig. 5): merge kernels that are *not adjacent*
+//! in the graph to cut launch counts further.
+//!
+//! The paper adds a virtual producer vertex `h` feeding every vertex and
+//! runs PatternReduction on it, which amounts to packing independent
+//! kernels together (the result is *kernel packing* — no data exchange,
+//! just one launch). We implement the same effect directly: greedily
+//! pack latency-bound kernels whose union stays acyclic and within
+//! resource bounds.
+
+use super::candidates::ExploreOptions;
+use super::delta::DeltaModel;
+use super::pattern::{FusionPattern, FusionPlan};
+use crate::gpu::DeviceSpec;
+use crate::graph::Graph;
+
+/// Pack small kernels of `plan` into fewer launches.
+pub fn remote_fusion(
+    graph: &Graph,
+    device: &DeviceSpec,
+    plan: FusionPlan,
+    opts: &ExploreOptions,
+) -> FusionPlan {
+    let model = DeltaModel::new(graph, device.clone());
+    let kernels = plan.kernels(graph);
+
+    // Partition into "small" (latency-floor-bound) and "large".
+    let floor = device.kernel_floor_us * 2.0;
+    let mut small: Vec<FusionPattern> = Vec::new();
+    let mut out: Vec<FusionPattern> = Vec::new();
+    for k in kernels {
+        let t = if k.len() == 1 {
+            model.op_time_us(k.nodes()[0])
+        } else {
+            model.pattern_time_us(k.nodes())
+        };
+        if t <= floor && k.len() < opts.max_pattern_size {
+            small.push(k);
+        } else {
+            out.push(k);
+        }
+    }
+
+    // Greedy packing: keep a current bundle; add the next small kernel
+    // when the union stays valid (acyclic, schedulable) and within the
+    // size cap. Packing unrelated ops cannot create reuse hazards — only
+    // cycles matter.
+    small.sort_by_key(|k| k.min_id());
+    let mut bundle: Option<FusionPattern> = None;
+    let mut bundle_parts = 0usize;
+    for k in small {
+        match bundle.take() {
+            None => {
+                bundle = Some(k);
+                bundle_parts = 1;
+            }
+            Some(b) => {
+                let u = b.union(&k);
+                if bundle_parts < opts.max_pack_bundle
+                    && u.len() <= opts.max_pattern_size
+                    && u.is_valid(graph)
+                {
+                    bundle = Some(u);
+                    bundle_parts += 1;
+                } else {
+                    out.push(b);
+                    bundle = Some(k);
+                    bundle_parts = 1;
+                }
+            }
+        }
+    }
+    if let Some(b) = bundle {
+        out.push(b);
+    }
+
+    // Multi-op patterns go into the plan; singletons remain implicit.
+    FusionPlan {
+        patterns: out.into_iter().filter(|p| p.len() > 1).collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{DType, OpKind, Shape};
+
+    /// Fig. 5 shape: several disjoint tiny chains, no adjacency between
+    /// them — remote fusion should pack them into far fewer launches.
+    #[test]
+    fn disjoint_tiny_kernels_get_packed() {
+        let mut g = Graph::new("fig5");
+        for i in 0..12 {
+            let p = g.param(Shape::new(vec![64]), DType::F32, format!("p{i}"));
+            let a = g.unary(OpKind::Relu, p, format!("a{i}"));
+            let _ = g.unary(OpKind::Neg, a, format!("b{i}"));
+        }
+        let device = DeviceSpec::v100();
+        let plan = FusionPlan::default(); // 24 singleton kernels
+        let before = plan.kernels(&g).len();
+        let packed = remote_fusion(&g, &device, plan, &ExploreOptions::default());
+        let after = packed.kernels(&g).len();
+        assert!(after < before / 3, "before {before}, after {after}");
+        assert!(packed.is_disjoint());
+        for p in &packed.patterns {
+            assert!(p.is_valid(&g));
+        }
+    }
+
+    #[test]
+    fn large_kernels_left_alone() {
+        let mut g = Graph::new("big");
+        let p = g.param(Shape::new(vec![4096, 4096]), DType::F32, "p");
+        let a = g.unary(OpKind::Relu, p, "a");
+        let b = g.unary(OpKind::Neg, a, "b");
+        let device = DeviceSpec::v100();
+        let plan = FusionPlan {
+            patterns: vec![FusionPattern::new(vec![a, b])],
+        };
+        let packed = remote_fusion(&g, &device, plan.clone(), &ExploreOptions::default());
+        assert_eq!(packed.kernels(&g).len(), plan.kernels(&g).len());
+    }
+
+    #[test]
+    fn packing_respects_size_cap() {
+        let mut g = Graph::new("cap");
+        for i in 0..40 {
+            let p = g.param(Shape::new(vec![16]), DType::F32, format!("p{i}"));
+            let _ = g.unary(OpKind::Relu, p, format!("a{i}"));
+        }
+        let device = DeviceSpec::v100();
+        let opts = ExploreOptions { max_pattern_size: 10, ..Default::default() };
+        let packed = remote_fusion(&g, &device, FusionPlan::default(), &opts);
+        for p in &packed.patterns {
+            assert!(p.len() <= 10);
+        }
+    }
+}

@@ -1,0 +1,201 @@
+//! Device specifications for the GPUs the paper evaluates on.
+//!
+//! Numbers follow the public architecture documents and the Volta/Turing
+//! microbenchmark papers the paper cites ([21] Jia et al. 2019 for T4,
+//! [22] Jia et al. 2018 for V100).
+
+/// Static resources and throughput limits of one GPU.
+#[derive(Debug, Clone)]
+pub struct DeviceSpec {
+    pub name: &'static str,
+    /// Streaming multiprocessor count.
+    pub num_sms: usize,
+    /// Max resident warps per SM (occupancy denominator).
+    pub max_warps_per_sm: usize,
+    /// Threads per warp.
+    pub warp_size: usize,
+    /// Max threads per block.
+    pub max_threads_per_block: usize,
+    /// 32-bit registers per SM.
+    pub regs_per_sm: usize,
+    /// Shared memory per SM in bytes.
+    pub shmem_per_sm: usize,
+    /// Max shared memory a single block may claim.
+    pub shmem_per_block: usize,
+    /// Core clock in GHz.
+    pub clock_ghz: f64,
+    /// HBM/GDDR bandwidth in GB/s (achievable, not theoretical peak).
+    pub hbm_gbps: f64,
+    /// FP32 peak in TFLOP/s (for the compute-intensive library model).
+    pub fp32_tflops: f64,
+    /// Minimum wall-clock of any kernel, µs (launch/drain latency floor —
+    /// why thousands of tiny kernels cost milliseconds even when their
+    /// memory traffic is trivial; the effect Table 2's DIEN rows show).
+    pub kernel_floor_us: f64,
+}
+
+impl DeviceSpec {
+    /// NVIDIA V100 (SXM2 16 GB) — the paper's main evaluation device.
+    pub fn v100() -> Self {
+        DeviceSpec {
+            name: "V100",
+            num_sms: 80,
+            max_warps_per_sm: 64,
+            warp_size: 32,
+            max_threads_per_block: 1024,
+            regs_per_sm: 65_536,
+            shmem_per_sm: 96 * 1024,
+            shmem_per_block: 48 * 1024,
+            clock_ghz: 1.53,
+            hbm_gbps: 900.0 * 0.82, // ~740 GB/s achievable (Jia et al.)
+            fp32_tflops: 15.7,
+            kernel_floor_us: 3.0,
+        }
+    }
+
+    /// NVIDIA T4 — the paper's secondary inference device (§7.2 "similar
+    /// speedup on T4").
+    pub fn t4() -> Self {
+        DeviceSpec {
+            name: "T4",
+            num_sms: 40,
+            max_warps_per_sm: 32,
+            warp_size: 32,
+            max_threads_per_block: 1024,
+            regs_per_sm: 65_536,
+            shmem_per_sm: 64 * 1024,
+            shmem_per_block: 48 * 1024,
+            clock_ghz: 1.59,
+            hbm_gbps: 320.0 * 0.82,
+            fp32_tflops: 8.1,
+            kernel_floor_us: 3.0,
+        }
+    }
+
+    /// NVIDIA A100 (SXM4 40 GB) — not in the paper's evaluation, kept
+    /// as the forward-portability check: the fusion decisions depend
+    /// only on the machine model's *shape*, so the orderings of
+    /// Figure 7 must survive an architecture generation (tested in
+    /// `integration.rs`).
+    pub fn a100() -> Self {
+        DeviceSpec {
+            name: "A100",
+            num_sms: 108,
+            max_warps_per_sm: 64,
+            warp_size: 32,
+            max_threads_per_block: 1024,
+            regs_per_sm: 65_536,
+            shmem_per_sm: 164 * 1024,
+            shmem_per_block: 48 * 1024,
+            clock_ghz: 1.41,
+            hbm_gbps: 1555.0 * 0.85, // HBM2e, ~1.3 TB/s achievable
+            fp32_tflops: 19.5,
+            kernel_floor_us: 2.5,
+        }
+    }
+
+    /// Total resident-warp capacity of the device.
+    pub fn total_warp_slots(&self) -> usize {
+        self.num_sms * self.max_warps_per_sm
+    }
+
+    /// Occupancy for a kernel using `threads_per_block` threads,
+    /// `regs_per_thread` registers and `shmem_per_block` bytes of shared
+    /// memory: the fraction of max resident warps each SM can keep in
+    /// flight (§4.3's `Occupancy` term).
+    pub fn occupancy(
+        &self,
+        threads_per_block: usize,
+        regs_per_thread: usize,
+        shmem_per_block: usize,
+    ) -> f64 {
+        if threads_per_block == 0 {
+            return 0.0;
+        }
+        let threads_per_block = threads_per_block.min(self.max_threads_per_block);
+        // Blocks per SM limited by each resource.
+        let by_threads = (self.max_warps_per_sm * self.warp_size) / threads_per_block;
+        let by_regs = if regs_per_thread == 0 {
+            usize::MAX
+        } else {
+            self.regs_per_sm / (regs_per_thread * threads_per_block)
+        };
+        let by_shmem = if shmem_per_block == 0 {
+            usize::MAX
+        } else {
+            self.shmem_per_sm / shmem_per_block
+        };
+        let blocks = by_threads.min(by_regs).min(by_shmem);
+        if blocks == 0 {
+            return 0.0; // kernel cannot launch (over-budget block)
+        }
+        let warps_per_block = threads_per_block.div_ceil(self.warp_size);
+        let resident = (blocks * warps_per_block).min(self.max_warps_per_sm);
+        resident as f64 / self.max_warps_per_sm as f64
+    }
+
+    /// Effective memory bandwidth at a given occupancy: a kernel needs
+    /// enough warps in flight to cover HBM latency; below ~40% occupancy
+    /// bandwidth scales roughly linearly (the memory-level-parallelism
+    /// knee reported by the microbenchmark papers).
+    pub fn effective_bandwidth_gbps(&self, occupancy: f64) -> f64 {
+        let eff = (occupancy / 0.4).min(1.0).max(0.05);
+        self.hbm_gbps * eff
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn v100_full_occupancy_with_light_kernel() {
+        let d = DeviceSpec::v100();
+        // 256 threads, 16 regs, no shmem: classic fully-occupant config.
+        let occ = d.occupancy(256, 16, 0);
+        assert!((occ - 1.0).abs() < 1e-9, "occ={occ}");
+    }
+
+    #[test]
+    fn registers_limit_occupancy() {
+        let d = DeviceSpec::v100();
+        // 256 threads × 128 regs = 32768 regs/block; 65536/32768 = 2
+        // blocks → 16 warps resident of 64.
+        let occ = d.occupancy(256, 128, 0);
+        assert!((occ - 0.25).abs() < 1e-9, "occ={occ}");
+    }
+
+    #[test]
+    fn shared_memory_limits_occupancy() {
+        let d = DeviceSpec::v100();
+        // 48KB/block → 2 blocks/SM on 96KB: 256 threads = 8 warps × 2 =
+        // 16 of 64 → 0.25.
+        let occ = d.occupancy(256, 16, 48 * 1024);
+        assert!((occ - 0.25).abs() < 1e-9, "occ={occ}");
+    }
+
+    #[test]
+    fn oversized_block_cannot_launch() {
+        let d = DeviceSpec::v100();
+        let occ = d.occupancy(256, 16, 200 * 1024);
+        assert_eq!(occ, 0.0);
+    }
+
+    #[test]
+    fn bandwidth_saturates_at_high_occupancy() {
+        let d = DeviceSpec::v100();
+        assert!(d.effective_bandwidth_gbps(1.0) > d.effective_bandwidth_gbps(0.1));
+        assert_eq!(
+            d.effective_bandwidth_gbps(0.5),
+            d.effective_bandwidth_gbps(1.0)
+        );
+    }
+
+    #[test]
+    fn t4_is_smaller_than_v100() {
+        let (v, t) = (DeviceSpec::v100(), DeviceSpec::t4());
+        assert!(t.num_sms < v.num_sms);
+        assert!(t.hbm_gbps < v.hbm_gbps);
+        assert!(t.total_warp_slots() < v.total_warp_slots());
+    }
+}

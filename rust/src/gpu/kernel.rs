@@ -1,0 +1,131 @@
+//! The executable unit the simulator times: one launched GPU kernel.
+//!
+//! `codegen::emit` lowers each fusion pattern to a [`KernelSpec`];
+//! the TF/XLA baselines produce the same structure through their own
+//! (more restricted) emission paths, so all three techniques are timed
+//! by one mechanism.
+
+/// Grid/block launch configuration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LaunchDims {
+    pub grid_blocks: usize,
+    pub block_threads: usize,
+}
+
+impl LaunchDims {
+    /// Total threads across the launch.
+    pub fn total_threads(&self) -> usize {
+        self.grid_blocks * self.block_threads
+    }
+
+    /// Total warps across the launch (§4.3's `N_warp`).
+    pub fn total_warps(&self, warp_size: usize) -> usize {
+        self.grid_blocks * self.block_threads.div_ceil(warp_size)
+    }
+}
+
+/// What kind of device activity this kernel represents — maps 1:1 onto
+/// the columns of Table 2.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelClass {
+    /// Generated (fused or single-op) memory-intensive kernel → `Mem`.
+    MemoryIntensive,
+    /// GEMM/conv library call → `Math`. Carries its FLOP count.
+    ComputeIntensive { flops: u64 },
+    /// cudaMemcpy/Memset activity → `Cpy`.
+    Memcpy,
+}
+
+/// A fully-specified kernel launch.
+#[derive(Debug, Clone)]
+pub struct KernelSpec {
+    /// Diagnostic name, e.g. `fusion.3` or `enc0/attn/scores`.
+    pub name: String,
+    pub class: KernelClass,
+    pub launch: LaunchDims,
+    /// Estimated registers per thread (lifetime analysis in codegen;
+    /// fixed defaults in the baselines).
+    pub regs_per_thread: usize,
+    /// Shared memory bytes per block (after the §4.4 reuse optimization).
+    pub shmem_per_block: usize,
+    /// Global-memory bytes read (includes re-reads caused by
+    /// recomputation duplication).
+    pub bytes_read: usize,
+    /// Global-memory bytes written.
+    pub bytes_written: usize,
+    /// Dynamic instructions executed per thread (includes recompute
+    /// multipliers — the §2.1 cost XLA pays for thread composition of
+    /// expensive producers).
+    pub instrs_per_thread: f64,
+    /// Average CPI across the instruction mix (from the microbenchmark
+    /// tables; codegen computes a weighted value).
+    pub avg_cpi: f64,
+}
+
+impl KernelSpec {
+    /// Convenience constructor for a memcpy activity of `bytes`.
+    pub fn memcpy(name: impl Into<String>, bytes: usize) -> Self {
+        KernelSpec {
+            name: name.into(),
+            class: KernelClass::Memcpy,
+            launch: LaunchDims { grid_blocks: 1, block_threads: 1 },
+            regs_per_thread: 0,
+            shmem_per_block: 0,
+            bytes_read: bytes,
+            bytes_written: bytes,
+            instrs_per_thread: 0.0,
+            avg_cpi: 1.0,
+        }
+    }
+
+    /// Convenience constructor for a library GEMM/conv call.
+    pub fn library(name: impl Into<String>, flops: u64, bytes: usize) -> Self {
+        KernelSpec {
+            name: name.into(),
+            class: KernelClass::ComputeIntensive { flops },
+            launch: LaunchDims { grid_blocks: 0, block_threads: 0 },
+            regs_per_thread: 0,
+            shmem_per_block: 0,
+            bytes_read: bytes,
+            bytes_written: bytes / 3,
+            instrs_per_thread: 0.0,
+            avg_cpi: 1.0,
+        }
+    }
+
+    /// Total global traffic in bytes.
+    pub fn total_bytes(&self) -> usize {
+        self.bytes_read + self.bytes_written
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn launch_dims_totals() {
+        let l = LaunchDims { grid_blocks: 10, block_threads: 256 };
+        assert_eq!(l.total_threads(), 2560);
+        assert_eq!(l.total_warps(32), 80);
+        // Non-multiple block size rounds warps up.
+        let l2 = LaunchDims { grid_blocks: 2, block_threads: 48 };
+        assert_eq!(l2.total_warps(32), 4);
+    }
+
+    #[test]
+    fn memcpy_constructor() {
+        let k = KernelSpec::memcpy("cpy", 1024);
+        assert_eq!(k.class, KernelClass::Memcpy);
+        assert_eq!(k.total_bytes(), 2048);
+    }
+
+    #[test]
+    fn library_constructor_carries_flops() {
+        let k = KernelSpec::library("mm", 1_000_000, 4096);
+        match k.class {
+            KernelClass::ComputeIntensive { flops } => assert_eq!(flops, 1_000_000),
+            _ => panic!("wrong class"),
+        }
+    }
+}

@@ -1,0 +1,19 @@
+//! GPU substrate: device models and the timing simulator.
+//!
+//! The paper's evaluation ran on real V100/T4 silicon; this environment
+//! has neither, so we implement the **machine model the paper itself
+//! reasons with** (§4.3, Eq. 1): kernels execute in waves of warps whose
+//! count is set by occupancy, warp latency is an instruction-count × CPI
+//! product, and memory-bound kernels are limited by HBM bandwidth scaled
+//! by an occupancy-dependent efficiency. Every Table 2 / Figure 7 number
+//! in our benches is produced by this substrate. See DESIGN.md §1.
+
+pub mod device;
+pub mod kernel;
+pub mod simulator;
+pub mod trace;
+
+pub use device::DeviceSpec;
+pub use kernel::{KernelClass, KernelSpec, LaunchDims};
+pub use simulator::{Breakdown, SimConfig, Simulator};
+pub use trace::{Trace, TraceEvent};

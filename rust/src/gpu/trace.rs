@@ -1,0 +1,270 @@
+//! Execution-trace export: replay a kernel sequence through the
+//! [`Simulator`] timing model and emit a Chrome-tracing (`chrome://
+//! tracing` / Perfetto) JSON timeline.
+//!
+//! This is the reproduction's stand-in for the nvprof timelines the
+//! paper's breakdown analysis (§7.3) is built from: one lane for the
+//! host (launch/scheduling/loop-glue slices), one lane per device
+//! engine (compute kernels, memory-intensive kernels, memcpys), with
+//! the same serialization the TF executor exhibits — host dispatch
+//! precedes each device slice, device engines run back-to-back.
+
+use super::{KernelClass, KernelSpec, Simulator};
+use crate::util::json::JsonValue;
+use crate::workloads::LoopKind;
+
+/// One timeline slice (a kernel execution or a host interval).
+#[derive(Debug, Clone)]
+pub struct TraceEvent {
+    pub name: String,
+    /// Trace lane: "host", "math", "mem", or "cpy".
+    pub lane: &'static str,
+    /// Start, µs from iteration begin.
+    pub start_us: f64,
+    pub duration_us: f64,
+    /// Bytes of global-memory traffic (0 for host slices).
+    pub bytes: usize,
+}
+
+/// A full single-iteration trace.
+#[derive(Debug, Clone, Default)]
+pub struct Trace {
+    pub events: Vec<TraceEvent>,
+}
+
+impl Trace {
+    /// Total span (end of the last event), µs.
+    pub fn span_us(&self) -> f64 {
+        self.events
+            .iter()
+            .map(|e| e.start_us + e.duration_us)
+            .fold(0.0, f64::max)
+    }
+
+    /// Sum of device-lane busy time, µs.
+    pub fn device_busy_us(&self) -> f64 {
+        self.events
+            .iter()
+            .filter(|e| e.lane != "host")
+            .map(|e| e.duration_us)
+            .sum()
+    }
+
+    /// Device utilization: busy / span (the launch-gap visualization of
+    /// §2.2 — many tiny kernels ⇒ low utilization).
+    pub fn device_utilization(&self) -> f64 {
+        let span = self.span_us();
+        if span == 0.0 {
+            0.0
+        } else {
+            self.device_busy_us() / span
+        }
+    }
+
+    /// Number of device slices.
+    pub fn device_slices(&self) -> usize {
+        self.events.iter().filter(|e| e.lane != "host").count()
+    }
+
+    /// Serialize to the Chrome-tracing JSON array-of-events format.
+    /// Lanes map to `tid`s within one `pid`.
+    pub fn to_chrome_json(&self) -> JsonValue {
+        let tid = |lane: &str| -> i64 {
+            match lane {
+                "host" => 0,
+                "math" => 1,
+                "mem" => 2,
+                _ => 3,
+            }
+        };
+        let mut events = Vec::with_capacity(self.events.len() + 4);
+        for (lane, tname) in [
+            ("host", "CPU (launch+sched)"),
+            ("math", "GPU compute"),
+            ("mem", "GPU mem-intensive"),
+            ("cpy", "memcpy"),
+        ] {
+            let mut meta = JsonValue::obj();
+            let mut args = JsonValue::obj();
+            args.set("name", tname);
+            meta.set("name", "thread_name")
+                .set("ph", "M")
+                .set("pid", 1i64)
+                .set("tid", tid(lane))
+                .set("args", args);
+            events.push(meta);
+        }
+        for e in &self.events {
+            let mut args = JsonValue::obj();
+            args.set("bytes", e.bytes);
+            let mut ev = JsonValue::obj();
+            ev.set("name", e.name.as_str())
+                .set("ph", "X")
+                .set("pid", 1i64)
+                .set("tid", tid(e.lane))
+                .set("ts", e.start_us)
+                .set("dur", e.duration_us)
+                .set("args", args);
+            events.push(ev);
+        }
+        JsonValue::Arr(events)
+    }
+}
+
+impl Simulator {
+    /// Run a kernel sequence and record the timeline. Timing semantics
+    /// match [`Simulator::run`]: host dispatch cost precedes each device
+    /// slice; the device executes serially (the single-stream behaviour
+    /// Table 2's per-component times add up under).
+    pub fn run_traced(&self, kernels: &[KernelSpec], loop_kind: LoopKind) -> Trace {
+        let host_per_kernel = if loop_kind == LoopKind::DynamicLoop {
+            self.config.host_per_kernel_recurrent_us
+        } else {
+            self.config.host_per_kernel_us
+        };
+        let mut t = Trace::default();
+        let mut clock = 0.0f64;
+        // Iteration-setup slice (host_base).
+        t.events.push(TraceEvent {
+            name: "iteration setup".into(),
+            lane: "host",
+            start_us: 0.0,
+            duration_us: self.config.host_base_us,
+            bytes: 0,
+        });
+        clock += self.config.host_base_us;
+        for k in kernels {
+            let (lane, host_us) = match k.class {
+                KernelClass::Memcpy => {
+                    let glue = if loop_kind != LoopKind::None { self.config.loop_glue_us } else { 0.0 };
+                    ("cpy", self.config.host_per_memcpy_us + glue)
+                }
+                KernelClass::ComputeIntensive { .. } => ("math", host_per_kernel),
+                KernelClass::MemoryIntensive => ("mem", host_per_kernel),
+            };
+            t.events.push(TraceEvent {
+                name: format!("launch {}", k.name),
+                lane: "host",
+                start_us: clock,
+                duration_us: host_us,
+                bytes: 0,
+            });
+            clock += host_us;
+            let dev_us = self.kernel_time_us(k);
+            t.events.push(TraceEvent {
+                name: k.name.clone(),
+                lane,
+                start_us: clock,
+                duration_us: dev_us,
+                bytes: k.total_bytes(),
+            });
+            clock += dev_us;
+        }
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu::{DeviceSpec, LaunchDims, SimConfig};
+
+    fn kernels() -> Vec<KernelSpec> {
+        vec![
+            KernelSpec {
+                name: "fused.0".into(),
+                class: KernelClass::MemoryIntensive,
+                launch: LaunchDims { grid_blocks: 512, block_threads: 256 },
+                regs_per_thread: 16,
+                shmem_per_block: 0,
+                bytes_read: 8 << 20,
+                bytes_written: 8 << 20,
+                instrs_per_thread: 16.0,
+                avg_cpi: 4.0,
+            },
+            KernelSpec::library("gemm", 1_000_000_000, 12 << 20),
+            KernelSpec::memcpy("h2d", 1 << 20),
+        ]
+    }
+
+    #[test]
+    fn trace_matches_run_breakdown() {
+        let sim = Simulator::new(DeviceSpec::v100(), SimConfig::tensorflow());
+        let ks = kernels();
+        let b = sim.run(&ks, LoopKind::None);
+        let t = sim.run_traced(&ks, LoopKind::None);
+        // Same device slice count...
+        assert_eq!(t.device_slices(), b.total_calls());
+        // ...and the same total time (host + device).
+        let total_ms = t.span_us() / 1e3;
+        assert!((total_ms - b.e2e_ms()).abs() < 1e-9, "{total_ms} vs {}", b.e2e_ms());
+    }
+
+    #[test]
+    fn events_are_serialized_and_non_overlapping() {
+        let sim = Simulator::new(DeviceSpec::v100(), SimConfig::tensorflow());
+        let t = sim.run_traced(&kernels(), LoopKind::None);
+        let mut end = 0.0;
+        for e in &t.events {
+            assert!(e.start_us >= end - 1e-9, "overlap at {}", e.name);
+            end = e.start_us + e.duration_us;
+        }
+    }
+
+    #[test]
+    fn utilization_improves_with_fewer_kernels() {
+        // 100 tiny kernels vs the same work in 10: utilization rises —
+        // the launch-gap pathology the paper's Figure-1 case removes.
+        let sim = Simulator::new(DeviceSpec::v100(), SimConfig::tensorflow());
+        let tiny: Vec<KernelSpec> = (0..100)
+            .map(|i| KernelSpec {
+                name: format!("t{i}"),
+                class: KernelClass::MemoryIntensive,
+                launch: LaunchDims { grid_blocks: 64, block_threads: 256 },
+                regs_per_thread: 16,
+                shmem_per_block: 0,
+                bytes_read: 1 << 20,
+                bytes_written: 1 << 20,
+                instrs_per_thread: 4.0,
+                avg_cpi: 4.0,
+            })
+            .collect();
+        let mut fused = Vec::new();
+        for i in 0..10 {
+            let mut k = tiny[0].clone();
+            k.name = format!("f{i}");
+            k.bytes_read = 10 << 20;
+            k.bytes_written = 10 << 20;
+            k.launch.grid_blocks = 640;
+            fused.push(k);
+        }
+        let u_tiny = sim.run_traced(&tiny, LoopKind::None).device_utilization();
+        let u_fused = sim.run_traced(&fused, LoopKind::None).device_utilization();
+        assert!(u_fused > u_tiny, "fused {u_fused:.3} vs tiny {u_tiny:.3}");
+    }
+
+    #[test]
+    fn chrome_json_shape() {
+        let sim = Simulator::new(DeviceSpec::v100(), SimConfig::tensorflow());
+        let t = sim.run_traced(&kernels(), LoopKind::None);
+        let json = t.to_chrome_json().to_pretty();
+        assert!(json.contains("\"ph\": \"X\""));
+        assert!(json.contains("thread_name"));
+        assert!(json.contains("gemm"));
+        // Valid-ish JSON: balanced brackets.
+        assert_eq!(json.matches('[').count(), json.matches(']').count());
+        assert_eq!(json.matches('{').count(), json.matches('}').count());
+    }
+
+    #[test]
+    fn dynamic_loop_inflates_host_lane() {
+        let sim = Simulator::new(DeviceSpec::v100(), SimConfig::tensorflow());
+        let ks = kernels();
+        let t_static = sim.run_traced(&ks, LoopKind::None);
+        let t_dyn = sim.run_traced(&ks, LoopKind::DynamicLoop);
+        let host = |t: &Trace| -> f64 {
+            t.events.iter().filter(|e| e.lane == "host").map(|e| e.duration_us).sum()
+        };
+        assert!(host(&t_dyn) > host(&t_static));
+    }
+}

@@ -1,0 +1,90 @@
+//! Graphviz DOT export for debugging fusion decisions.
+//!
+//! `fstitch inspect --dot` and the examples use this to visualize which
+//! nodes each fusion pattern swallowed (patterns become colored clusters,
+//! mirroring the presentation of the paper's Figure 1).
+
+use super::{Graph, NodeId, OpClass};
+
+/// Render `graph` as DOT. `clusters` optionally groups node sets into
+/// labeled subgraphs (one per fusion pattern).
+pub fn to_dot(graph: &Graph, clusters: &[(String, Vec<NodeId>)]) -> String {
+    let mut out = String::new();
+    out.push_str("digraph G {\n  rankdir=TB;\n  node [shape=box, fontsize=10];\n");
+    let mut clustered = vec![false; graph.len()];
+    for (ci, (label, members)) in clusters.iter().enumerate() {
+        out.push_str(&format!(
+            "  subgraph cluster_{ci} {{\n    label=\"{label}\";\n    style=filled;\n    color=\"{}\";\n",
+            palette(ci)
+        ));
+        for &id in members {
+            clustered[id.idx()] = true;
+            out.push_str(&format!("    n{};\n", id.0));
+        }
+        out.push_str("  }\n");
+    }
+    for node in graph.nodes() {
+        let color = match node.kind.class() {
+            OpClass::Source => "gray90",
+            OpClass::LightElementwise => "white",
+            OpClass::ExpensiveElementwise => "lightsalmon",
+            OpClass::Reduction => "lightblue",
+            OpClass::DataMovement => "lightyellow",
+            OpClass::ComputeIntensive => "plum",
+        };
+        out.push_str(&format!(
+            "  n{} [label=\"{}\\n{} {}\", fillcolor={}, style=filled];\n",
+            node.id.0,
+            node.name,
+            node.kind.name(),
+            node.shape,
+            color
+        ));
+    }
+    for node in graph.nodes() {
+        for &inp in &node.inputs {
+            out.push_str(&format!("  n{} -> n{};\n", inp.0, node.id.0));
+        }
+    }
+    out.push_str("}\n");
+    out
+}
+
+fn palette(i: usize) -> &'static str {
+    const COLORS: [&str; 6] = [
+        "azure2", "honeydew2", "lavender", "mistyrose", "lightcyan", "seashell2",
+    ];
+    COLORS[i % COLORS.len()]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{DType, OpKind, Shape};
+
+    #[test]
+    fn dot_contains_nodes_edges_clusters() {
+        let mut g = Graph::new("t");
+        let p = g.param(Shape::new(vec![4]), DType::F32, "p");
+        let a = g.unary(OpKind::Exp, p, "a");
+        let b = g.unary(OpKind::Neg, a, "b");
+        let dot = to_dot(&g, &[("fusion.0".to_string(), vec![a, b])]);
+        assert!(dot.starts_with("digraph G {"));
+        assert!(dot.contains("subgraph cluster_0"));
+        assert!(dot.contains("fusion.0"));
+        assert!(dot.contains("n0 -> n1"));
+        assert!(dot.contains("n1 -> n2"));
+        assert!(dot.trim_end().ends_with('}'));
+    }
+
+    #[test]
+    fn class_colors_assigned() {
+        let mut g = Graph::new("c");
+        let p = g.param(Shape::new(vec![4, 4]), DType::F32, "p");
+        let e = g.unary(OpKind::Tanh, p, "e");
+        let _ = g.matmul(p, e, "m");
+        let dot = to_dot(&g, &[]);
+        assert!(dot.contains("lightsalmon")); // expensive elementwise
+        assert!(dot.contains("plum")); // compute intensive
+    }
+}

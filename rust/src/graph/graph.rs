@@ -1,0 +1,582 @@
+//! The dataflow graph `G = (V, E)` of §5.1, plus the structural queries
+//! the explorer and code generator need: topological orders, consumer
+//! maps, reachability, and the cyclic-dependence check of Fig. 6.
+
+use super::{DType, OpKind, Shape};
+
+/// Index of a node within its graph (dense, never reused).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct NodeId(pub u32);
+
+impl NodeId {
+    /// Usize index for vector addressing.
+    pub fn idx(self) -> usize {
+        self.0 as usize
+    }
+}
+
+impl std::fmt::Display for NodeId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "%{}", self.0)
+    }
+}
+
+/// One operator vertex.
+#[derive(Debug, Clone)]
+pub struct Node {
+    pub id: NodeId,
+    pub kind: OpKind,
+    pub dtype: DType,
+    /// Output shape of this op.
+    pub shape: Shape,
+    /// Producer operands, in positional order.
+    pub inputs: Vec<NodeId>,
+    /// Human-readable name (workload builders use structured names like
+    /// `ln0/mean` so fusion dumps stay readable).
+    pub name: String,
+}
+
+impl Node {
+    /// Output byte size (drives memory-traffic accounting).
+    pub fn output_bytes(&self) -> usize {
+        self.shape.bytes(self.dtype)
+    }
+
+    /// Output element count.
+    pub fn num_elements(&self) -> usize {
+        self.shape.num_elements()
+    }
+}
+
+/// The computation graph. Nodes are appended in topological order
+/// (operands must exist before their consumer), so `nodes` itself is a
+/// valid schedule; `topo_order` re-derives one for transformed graphs.
+#[derive(Debug, Clone, Default)]
+pub struct Graph {
+    nodes: Vec<Node>,
+    /// consumers[i] = ids of nodes that read node i's output.
+    consumers: Vec<Vec<NodeId>>,
+    /// Optional model/workload name for reports.
+    pub name: String,
+}
+
+impl Graph {
+    /// Empty graph with a display name.
+    pub fn new(name: impl Into<String>) -> Self {
+        Self {
+            nodes: Vec::new(),
+            consumers: Vec::new(),
+            name: name.into(),
+        }
+    }
+
+    // ---- construction ------------------------------------------------
+
+    /// Append a node. Panics if an input id does not exist yet (keeps the
+    /// node list topologically ordered by construction).
+    pub fn add(
+        &mut self,
+        kind: OpKind,
+        dtype: DType,
+        shape: Shape,
+        inputs: Vec<NodeId>,
+        name: impl Into<String>,
+    ) -> NodeId {
+        let id = NodeId(self.nodes.len() as u32);
+        for &inp in &inputs {
+            assert!(
+                inp.idx() < self.nodes.len(),
+                "input {inp} of new node {id} does not exist"
+            );
+            self.consumers[inp.idx()].push(id);
+        }
+        self.nodes.push(Node {
+            id,
+            kind,
+            dtype,
+            shape,
+            inputs,
+            name: name.into(),
+        });
+        self.consumers.push(Vec::new());
+        id
+    }
+
+    /// Graph input of the given shape.
+    pub fn param(&mut self, shape: Shape, dtype: DType, name: impl Into<String>) -> NodeId {
+        self.add(OpKind::Parameter, dtype, shape, vec![], name)
+    }
+
+    /// Constant of the given shape.
+    pub fn constant(&mut self, shape: Shape, dtype: DType, name: impl Into<String>) -> NodeId {
+        self.add(OpKind::Constant, dtype, shape, vec![], name)
+    }
+
+    /// Element-wise unary op (same shape/dtype as input unless Convert).
+    pub fn unary(&mut self, kind: OpKind, x: NodeId, name: impl Into<String>) -> NodeId {
+        let (shape, dtype) = {
+            let n = self.node(x);
+            (n.shape.clone(), n.dtype)
+        };
+        self.add(kind, dtype, shape, vec![x], name)
+    }
+
+    /// Element-wise binary op. Shapes must match exactly or one side must
+    /// be scalar (workload builders insert explicit `Broadcast` nodes for
+    /// everything else, mirroring HLO).
+    pub fn binary(
+        &mut self,
+        kind: OpKind,
+        a: NodeId,
+        b: NodeId,
+        name: impl Into<String>,
+    ) -> NodeId {
+        let (sa, da) = {
+            let n = self.node(a);
+            (n.shape.clone(), n.dtype)
+        };
+        let sb = self.node(b).shape.clone();
+        let shape = if sa.num_elements() >= sb.num_elements() { sa.clone() } else { sb.clone() };
+        assert!(
+            sa == sb || sa.rank() == 0 || sb.rank() == 0,
+            "binary {:?} shape mismatch {sa} vs {sb} (insert Broadcast)",
+            kind
+        );
+        let dtype = if kind == OpKind::Compare { DType::Bool } else { da };
+        self.add(kind, dtype, shape, vec![a, b], name)
+    }
+
+    /// Reduction over `axes` of `x`.
+    pub fn reduce(
+        &mut self,
+        op: super::ReduceOp,
+        x: NodeId,
+        axes: Vec<usize>,
+        name: impl Into<String>,
+    ) -> NodeId {
+        let (shape, dtype) = {
+            let n = self.node(x);
+            (n.shape.reduce(&axes), n.dtype)
+        };
+        self.add(OpKind::Reduce { op, axes }, dtype, shape, vec![x], name)
+    }
+
+    /// Broadcast `x` up to `shape`.
+    pub fn broadcast(&mut self, x: NodeId, shape: Shape, name: impl Into<String>) -> NodeId {
+        let dtype = self.node(x).dtype;
+        self.add(OpKind::Broadcast, dtype, shape, vec![x], name)
+    }
+
+    /// Dense matmul `[.., m, k] x [.., k, n] -> [.., m, n]`.
+    pub fn matmul(&mut self, a: NodeId, b: NodeId, name: impl Into<String>) -> NodeId {
+        let sa = self.node(a).shape.clone();
+        let sb = self.node(b).shape.clone();
+        let dtype = self.node(a).dtype;
+        assert!(sa.rank() >= 2 && sb.rank() >= 2, "matmul needs rank>=2");
+        let m = sa.dims()[sa.rank() - 2];
+        let k = sa.dims()[sa.rank() - 1];
+        let k2 = sb.dims()[sb.rank() - 2];
+        let n = sb.dims()[sb.rank() - 1];
+        assert_eq!(k, k2, "matmul contraction mismatch");
+        let mut dims: Vec<usize> = sa.dims()[..sa.rank() - 2].to_vec();
+        dims.push(m);
+        dims.push(n);
+        let kind = if sa.rank() > 2 { OpKind::BatchMatMul } else { OpKind::MatMul };
+        self.add(kind, dtype, Shape::new(dims), vec![a, b], name)
+    }
+
+    // ---- queries -------------------------------------------------------
+
+    /// Node by id.
+    pub fn node(&self, id: NodeId) -> &Node {
+        &self.nodes[id.idx()]
+    }
+
+    /// All nodes in insertion (topological) order.
+    pub fn nodes(&self) -> &[Node] {
+        &self.nodes
+    }
+
+    /// Node count `V`.
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// True when the graph has no nodes.
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    /// Edge count `E`.
+    pub fn num_edges(&self) -> usize {
+        self.nodes.iter().map(|n| n.inputs.len()).sum()
+    }
+
+    /// Consumers of `id` (nodes reading its output).
+    pub fn consumers(&self, id: NodeId) -> &[NodeId] {
+        &self.consumers[id.idx()]
+    }
+
+    /// Ids of nodes with no consumers (graph outputs).
+    pub fn outputs(&self) -> Vec<NodeId> {
+        self.nodes
+            .iter()
+            .filter(|n| self.consumers[n.id.idx()].is_empty())
+            .map(|n| n.id)
+            .collect()
+    }
+
+    /// A topological order (Kahn). The insertion order already is one, but
+    /// transformation passes use this to re-validate.
+    pub fn topo_order(&self) -> Vec<NodeId> {
+        let n = self.nodes.len();
+        let mut indeg: Vec<usize> = self.nodes.iter().map(|nd| nd.inputs.len()).collect();
+        let mut queue: std::collections::VecDeque<NodeId> = (0..n)
+            .filter(|&i| indeg[i] == 0)
+            .map(|i| NodeId(i as u32))
+            .collect();
+        let mut order = Vec::with_capacity(n);
+        while let Some(id) = queue.pop_front() {
+            order.push(id);
+            for &c in self.consumers(id) {
+                indeg[c.idx()] -= 1;
+                if indeg[c.idx()] == 0 {
+                    queue.push_back(c);
+                }
+            }
+        }
+        assert_eq!(order.len(), n, "graph contains a cycle");
+        order
+    }
+
+    /// Post-order over the topological order (last vertex first) — the
+    /// traversal direction §5.2 uses to generate candidate patterns "from
+    /// the last vertex to the first vertex".
+    pub fn post_order(&self) -> Vec<NodeId> {
+        let mut order = self.topo_order();
+        order.reverse();
+        order
+    }
+
+    /// Validate structural invariants (input existence, consumer symmetry,
+    /// acyclicity). Used by tests and by transformation passes in debug.
+    pub fn validate(&self) -> Result<(), String> {
+        for node in &self.nodes {
+            for &inp in &node.inputs {
+                if inp.idx() >= self.nodes.len() {
+                    return Err(format!("node {} has dangling input {}", node.id, inp));
+                }
+                if inp >= node.id {
+                    return Err(format!(
+                        "node {} consumes later/equal node {} (not topo-ordered)",
+                        node.id, inp
+                    ));
+                }
+                if !self.consumers[inp.idx()].contains(&node.id) {
+                    return Err(format!(
+                        "consumer map out of sync: {} -> {}",
+                        inp, node.id
+                    ));
+                }
+            }
+        }
+        let topo = self.topo_order();
+        if topo.len() != self.nodes.len() {
+            return Err("cycle detected".to_string());
+        }
+        Ok(())
+    }
+
+    // ---- fusion-specific structural queries -----------------------------
+
+    /// Check whether fusing the node set `pattern` (given as a sorted or
+    /// unsorted slice) would create a **cyclic dependence** (Fig. 6): a
+    /// path that leaves the pattern and re-enters it. Such a pattern
+    /// cannot be scheduled as a single kernel.
+    ///
+    /// Method: walk forward (consumer direction) from every edge that
+    /// exits the pattern, staying *outside* the pattern; if any walk can
+    /// reach a node whose consumer is inside the pattern, the fused node
+    /// would both feed and depend on external work ⇒ cycle.
+    ///
+    /// Pruning: node ids are topologically ordered by construction
+    /// (every consumer has a higher id than its producers), so a path
+    /// can only re-enter the pattern through nodes with id below the
+    /// pattern's maximum id. External nodes above that bound are never
+    /// expanded, which keeps the check local to the pattern's span
+    /// instead of O(V) — essential for the 10k+-op recurrent graphs.
+    pub fn fusion_creates_cycle(&self, pattern: &[NodeId]) -> bool {
+        // Epoch-marked thread-local scratch: this check runs tens of
+        // thousands of times per exploration on big graphs (every XLA
+        // merge attempt, every candidate validity check); allocating
+        // span-sized mark vectors per call dominated the profile
+        // (EXPERIMENTS.md §Perf). Marks compare against the current
+        // epoch, so "clearing" is one counter bump.
+        thread_local! {
+            static SCRATCH: std::cell::RefCell<CycleScratch> =
+                std::cell::RefCell::new(CycleScratch::default());
+        }
+        let max_idx = match pattern.iter().map(|id| id.idx()).max() {
+            Some(m) => m,
+            None => return false,
+        };
+        SCRATCH.with(|s| {
+            let mut s = s.borrow_mut();
+            let s = &mut *s;
+            s.begin(max_idx + 1);
+            let epoch = s.epoch;
+            for &id in pattern {
+                s.in_pat[id.idx()] = epoch;
+            }
+            // Seed: external consumers of pattern outputs (bounded by
+            // span — ids are topological, so only nodes below the
+            // pattern's max id can lead back in).
+            s.stack.clear();
+            for &id in pattern {
+                for &c in self.consumers(id) {
+                    if c.idx() >= max_idx {
+                        continue; // cannot lead back into the pattern
+                    }
+                    if s.in_pat[c.idx()] != epoch && s.visited[c.idx()] != epoch {
+                        s.visited[c.idx()] = epoch;
+                        s.stack.push(c);
+                    }
+                }
+            }
+            // DFS outside the pattern; reaching a pattern node = re-entry.
+            while let Some(id) = s.stack.pop() {
+                for &c in self.consumers(id) {
+                    if c.idx() > max_idx {
+                        continue;
+                    }
+                    if s.in_pat[c.idx()] == epoch {
+                        return true;
+                    }
+                    if s.visited[c.idx()] != epoch {
+                        s.visited[c.idx()] = epoch;
+                        s.stack.push(c);
+                    }
+                }
+            }
+            false
+        })
+    }
+
+    // (CycleScratch lives at module scope below.)
+
+    /// Nodes of `pattern` whose outputs escape the pattern (read by an
+    /// external consumer or graph outputs) — these must be written to
+    /// global memory by the generated kernel.
+    pub fn pattern_outputs(&self, pattern: &[NodeId]) -> Vec<NodeId> {
+        let mut in_pat = vec![false; self.nodes.len()];
+        for &id in pattern {
+            in_pat[id.idx()] = true;
+        }
+        pattern
+            .iter()
+            .copied()
+            .filter(|&id| {
+                let cons = self.consumers(id);
+                cons.is_empty() || cons.iter().any(|c| !in_pat[c.idx()])
+            })
+            .collect()
+    }
+
+    /// External producers read by the pattern (kernel inputs).
+    pub fn pattern_inputs(&self, pattern: &[NodeId]) -> Vec<NodeId> {
+        let mut in_pat = vec![false; self.nodes.len()];
+        for &id in pattern {
+            in_pat[id.idx()] = true;
+        }
+        let mut seen = vec![false; self.nodes.len()];
+        let mut out = Vec::new();
+        for &id in pattern {
+            for &inp in &self.node(id).inputs {
+                if !in_pat[inp.idx()] && !seen[inp.idx()] {
+                    seen[inp.idx()] = true;
+                    out.push(inp);
+                }
+            }
+        }
+        out
+    }
+
+    /// Count of memory-intensive (fusible-class) ops — the population the
+    /// paper's `Mem` kernel counts draw from.
+    pub fn num_memory_intensive(&self) -> usize {
+        self.nodes.iter().filter(|n| n.kind.is_fusible()).count()
+    }
+
+    /// Count of compute-intensive ops (the `Math` column).
+    pub fn num_compute_intensive(&self) -> usize {
+        self.nodes
+            .iter()
+            .filter(|n| n.kind.class() == super::OpClass::ComputeIntensive)
+            .count()
+    }
+}
+
+/// Reusable scratch for [`Graph::fusion_creates_cycle`]: epoch-marked
+/// membership/visited arrays + a DFS stack, grown on demand and never
+/// re-zeroed (a mark is "set" iff it equals the current epoch).
+#[derive(Default)]
+struct CycleScratch {
+    epoch: u32,
+    in_pat: Vec<u32>,
+    visited: Vec<u32>,
+    stack: Vec<NodeId>,
+}
+
+impl CycleScratch {
+    fn begin(&mut self, span: usize) {
+        if self.in_pat.len() < span {
+            self.in_pat.resize(span, 0);
+            self.visited.resize(span, 0);
+        }
+        self.epoch = self.epoch.wrapping_add(1);
+        if self.epoch == 0 {
+            // Wrapped: stale marks could alias epoch 0 — hard reset.
+            self.in_pat.iter_mut().for_each(|m| *m = u32::MAX);
+            self.visited.iter_mut().for_each(|m| *m = u32::MAX);
+            self.epoch = 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::ReduceOp;
+
+    fn diamond() -> (Graph, NodeId, NodeId, NodeId, NodeId) {
+        // p -> a -> b,c -> d   (classic diamond)
+        let mut g = Graph::new("diamond");
+        let p = g.param(Shape::new(vec![4, 8]), DType::F32, "p");
+        let a = g.unary(OpKind::Exp, p, "a");
+        let b = g.unary(OpKind::Neg, a, "b");
+        let c = g.unary(OpKind::Abs, a, "c");
+        let d = g.binary(OpKind::Add, b, c, "d");
+        (g, a, b, c, d)
+    }
+
+    #[test]
+    fn construction_and_queries() {
+        let (g, a, b, c, d) = diamond();
+        assert_eq!(g.len(), 5);
+        assert_eq!(g.num_edges(), 5);
+        assert_eq!(g.consumers(a), &[b, c]);
+        assert_eq!(g.outputs(), vec![d]);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn topo_and_post_order() {
+        let (g, ..) = diamond();
+        let topo = g.topo_order();
+        assert_eq!(topo.len(), 5);
+        // every edge respects the order
+        let pos: Vec<usize> = {
+            let mut p = vec![0; g.len()];
+            for (i, id) in topo.iter().enumerate() {
+                p[id.idx()] = i;
+            }
+            p
+        };
+        for n in g.nodes() {
+            for &inp in &n.inputs {
+                assert!(pos[inp.idx()] < pos[n.id.idx()]);
+            }
+        }
+        let post = g.post_order();
+        assert_eq!(post[0], *topo.last().unwrap());
+    }
+
+    #[test]
+    fn cyclic_dependence_detected_like_fig6() {
+        // Fig. 6: A -> B -> C and A -> C. Fusing {A, C} leaves B outside
+        // on a path A -> B -> C that re-enters ⇒ cycle.
+        let mut g = Graph::new("fig6");
+        let p = g.param(Shape::new(vec![8]), DType::F32, "p");
+        let a = g.unary(OpKind::Exp, p, "A");
+        let b = g.unary(OpKind::Neg, a, "B");
+        let c = g.binary(OpKind::Add, a, b, "C");
+        assert!(g.fusion_creates_cycle(&[a, c]));
+        assert!(!g.fusion_creates_cycle(&[a, b, c]));
+        assert!(!g.fusion_creates_cycle(&[b, c]));
+        assert!(!g.fusion_creates_cycle(&[a, b]));
+    }
+
+    #[test]
+    fn pattern_io_identification() {
+        let (g, a, b, c, _d) = diamond();
+        // Fuse {b, c}: input is a, outputs are b and c (read by d).
+        let ins = g.pattern_inputs(&[b, c]);
+        assert_eq!(ins, vec![a]);
+        let outs = g.pattern_outputs(&[b, c]);
+        assert_eq!(outs.len(), 2);
+    }
+
+    #[test]
+    fn pattern_outputs_internalized_when_consumer_in_pattern() {
+        let (g, a, b, c, d) = diamond();
+        let outs = g.pattern_outputs(&[a, b, c, d]);
+        assert_eq!(outs, vec![d]); // only the root escapes
+    }
+
+    #[test]
+    fn reduce_builder_shapes() {
+        let mut g = Graph::new("r");
+        let p = g.param(Shape::new(vec![32, 128, 768]), DType::F32, "p");
+        let r = g.reduce(ReduceOp::Sum, p, vec![2], "sum");
+        assert_eq!(g.node(r).shape, Shape::new(vec![32, 128]));
+    }
+
+    #[test]
+    fn matmul_builder_shapes() {
+        let mut g = Graph::new("mm");
+        let a = g.param(Shape::new(vec![32, 64]), DType::F32, "a");
+        let b = g.param(Shape::new(vec![64, 16]), DType::F32, "b");
+        let c = g.matmul(a, b, "c");
+        assert_eq!(g.node(c).shape, Shape::new(vec![32, 16]));
+        assert_eq!(g.node(c).kind, OpKind::MatMul);
+        let x = g.param(Shape::new(vec![4, 32, 64]), DType::F32, "x");
+        let y = g.param(Shape::new(vec![4, 64, 16]), DType::F32, "y");
+        let z = g.matmul(x, y, "z");
+        assert_eq!(g.node(z).kind, OpKind::BatchMatMul);
+        assert_eq!(g.node(z).shape, Shape::new(vec![4, 32, 16]));
+    }
+
+    #[test]
+    fn scalar_binary_broadcasts() {
+        let mut g = Graph::new("s");
+        let p = g.param(Shape::new(vec![16]), DType::F32, "p");
+        let s = g.constant(Shape::scalar(), DType::F32, "eps");
+        let q = g.binary(OpKind::Add, p, s, "q");
+        assert_eq!(g.node(q).shape, Shape::new(vec![16]));
+    }
+
+    #[test]
+    #[should_panic(expected = "shape mismatch")]
+    fn mismatched_binary_panics() {
+        let mut g = Graph::new("bad");
+        let a = g.param(Shape::new(vec![4]), DType::F32, "a");
+        let b = g.param(Shape::new(vec![5]), DType::F32, "b");
+        g.binary(OpKind::Add, a, b, "c");
+    }
+
+    #[test]
+    fn intensity_counts() {
+        let (g, ..) = diamond();
+        assert_eq!(g.num_memory_intensive(), 4);
+        assert_eq!(g.num_compute_intensive(), 0);
+    }
+
+    #[test]
+    fn compare_yields_bool() {
+        let mut g = Graph::new("cmp");
+        let a = g.param(Shape::new(vec![4]), DType::F32, "a");
+        let b = g.param(Shape::new(vec![4]), DType::F32, "b");
+        let c = g.binary(OpKind::Compare, a, b, "c");
+        assert_eq!(g.node(c).dtype, DType::Bool);
+    }
+}

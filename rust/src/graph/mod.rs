@@ -1,0 +1,25 @@
+//! The operator-graph IR (the paper's §5.1 `G = (V, E)`).
+//!
+//! FusionStitching operates on an HLO-like dataflow graph: vertices are
+//! tensor operators, edges are producer→consumer value flows. The fusion
+//! explorer searches for subgraphs (fusion patterns) and the code
+//! generator schedules each pattern into one GPU kernel.
+//!
+//! The IR deliberately mirrors the paper's op taxonomy (§4): *light
+//! element-wise*, *expensive element-wise*, *reduction*, data-movement
+//! ops (broadcast/transpose/slice/... — the shape "shrink and broaden"
+//! the paper calls out in §3.1), and *compute-intensive* ops (GEMM, conv)
+//! which fusion never touches but the simulator must still account for.
+
+mod dot;
+mod dtype;
+#[allow(clippy::module_inception)]
+mod graph;
+mod op;
+mod shape;
+
+pub use dot::to_dot;
+pub use dtype::DType;
+pub use graph::{Graph, Node, NodeId};
+pub use op::{OpClass, OpKind, ReduceOp};
+pub use shape::Shape;

@@ -1,0 +1,292 @@
+//! Operator kinds and the paper's op taxonomy (§4).
+//!
+//! FusionStitching classifies memory-intensive ops into three kinds that
+//! get distinct schedule templates: **light element-wise** (add, mul, ...),
+//! **expensive element-wise** (tanh, exp, ... — ops whose recomputation
+//! XLA avoids by never fusing them mid-kernel), and **reduction**. Data
+//! movement ops (broadcast/transpose/slice/...) are light from an ALU
+//! standpoint but reshape the iteration space, which is what creates the
+//! reuse opportunities §3.1 describes. GEMM/conv are compute-intensive and
+//! are never fused by either XLA's loop-fusion pass or FusionStitching;
+//! they matter only for end-to-end accounting (the `Math` column of
+//! Table 2).
+
+/// Reduction combinator (the op applied across the reduced axes).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ReduceOp {
+    Sum,
+    Max,
+    Min,
+    Mean,
+    Prod,
+}
+
+impl ReduceOp {
+    /// Short name for labels/pseudocode.
+    pub fn name(self) -> &'static str {
+        match self {
+            ReduceOp::Sum => "sum",
+            ReduceOp::Max => "max",
+            ReduceOp::Min => "min",
+            ReduceOp::Mean => "mean",
+            ReduceOp::Prod => "prod",
+        }
+    }
+}
+
+/// The operator set. Mirrors the HLO ops that appear in the paper's
+/// workloads; anything exotic is representable as one of these classes.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub enum OpKind {
+    // ---- sources ----------------------------------------------------
+    /// Graph input.
+    Parameter,
+    /// Materialized constant.
+    Constant,
+
+    // ---- light element-wise ------------------------------------------
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Maximum,
+    Minimum,
+    Neg,
+    Abs,
+    /// Element-wise comparison producing a bool mask.
+    Compare,
+    /// `select(pred, on_true, on_false)`.
+    Select,
+    /// Dtype conversion.
+    Convert,
+    /// max(x, 0) — common enough to name.
+    Relu,
+
+    // ---- expensive element-wise ---------------------------------------
+    Exp,
+    Log,
+    Tanh,
+    Sqrt,
+    Rsqrt,
+    Power,
+    Sigmoid,
+    Erf,
+    /// GELU tail (erf-based); kept distinct for workload realism.
+    Gelu,
+    Tan,
+
+    // ---- reduction ----------------------------------------------------
+    /// Reduce over `axes` with combinator `op`.
+    Reduce { op: ReduceOp, axes: Vec<usize> },
+
+    // ---- data movement (shape-changing, memory-bound) -----------------
+    /// Broadcast a smaller tensor up to the node's output shape.
+    Broadcast,
+    Reshape,
+    /// Transpose with the given permutation.
+    Transpose { perm: Vec<usize> },
+    Slice,
+    Gather,
+    Concat,
+    Pad,
+    /// Explicit device-to-device copy (models the `Cpy` rows of Table 2).
+    Copy,
+    /// One-hot / iota style index materialization.
+    Iota,
+
+    // ---- compute intensive ---------------------------------------------
+    /// Dense matrix multiply (cuBLAS territory; never fused).
+    MatMul,
+    /// Batched matmul.
+    BatchMatMul,
+    /// Convolution (cuDNN territory; never fused).
+    Conv,
+}
+
+/// Coarse classification used by schedule templates and cost models.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum OpClass {
+    /// Graph inputs/constants — no kernel of their own.
+    Source,
+    /// Cheap ALU element-wise (1–2 instructions/element).
+    LightElementwise,
+    /// Transcendental / multi-instruction element-wise (MUFU-pipe ops).
+    ExpensiveElementwise,
+    /// Cross-element reductions.
+    Reduction,
+    /// Layout/movement ops: broadcast, transpose, slice, ...
+    DataMovement,
+    /// GEMM/conv — handled by vendor libraries, opaque to fusion.
+    ComputeIntensive,
+}
+
+impl OpKind {
+    /// The paper's taxonomy for this op.
+    pub fn class(&self) -> OpClass {
+        use OpKind::*;
+        match self {
+            Parameter | Constant => OpClass::Source,
+            Add | Sub | Mul | Div | Maximum | Minimum | Neg | Abs | Compare | Select
+            | Convert | Relu => OpClass::LightElementwise,
+            Exp | Log | Tanh | Sqrt | Rsqrt | Power | Sigmoid | Erf | Gelu | Tan => {
+                OpClass::ExpensiveElementwise
+            }
+            Reduce { .. } => OpClass::Reduction,
+            Broadcast | Reshape | Transpose { .. } | Slice | Gather | Concat | Pad | Copy
+            | Iota => OpClass::DataMovement,
+            MatMul | BatchMatMul | Conv => OpClass::ComputeIntensive,
+        }
+    }
+
+    /// True for ops that fusion may place inside a generated kernel
+    /// (everything memory-intensive, i.e. not GEMM/conv/sources).
+    pub fn is_fusible(&self) -> bool {
+        !matches!(
+            self.class(),
+            OpClass::ComputeIntensive | OpClass::Source
+        )
+    }
+
+    /// True for ops XLA refuses to fuse as *producers* (mid-kernel):
+    /// reductions and expensive element-wise ops, whose recomputation
+    /// under thread composition is what §2.1 criticizes.
+    pub fn is_expensive_producer(&self) -> bool {
+        matches!(
+            self.class(),
+            OpClass::Reduction | OpClass::ExpensiveElementwise
+        )
+    }
+
+    /// Approximate ALU instructions needed to produce *one* output
+    /// element (per-element loop body size). Feeds `N_instruction` of the
+    /// latency-evaluator (Eq. 1). Values follow the Volta/Turing
+    /// microbenchmark papers the paper cites [21, 22]: light ALU ops are
+    /// single-instruction, transcendentals expand to multi-instruction
+    /// MUFU sequences.
+    pub fn instructions_per_element(&self) -> f64 {
+        use OpKind::*;
+        match self {
+            Parameter | Constant => 0.0,
+            Add | Sub | Mul | Neg | Abs | Maximum | Minimum | Compare | Convert | Relu => 1.0,
+            Select => 2.0,
+            Div => 5.0,
+            Sqrt | Rsqrt => 6.0,
+            Exp | Log | Sigmoid => 8.0,
+            Tanh | Tan => 12.0,
+            Erf | Gelu => 16.0,
+            Power => 14.0,
+            // Per output element a reduction consumes (in/out) inputs;
+            // callers scale by the reduction factor where it matters.
+            Reduce { .. } => 1.0,
+            Broadcast | Reshape | Slice | Concat | Pad | Copy | Iota => 1.0,
+            Gather => 3.0,
+            Transpose { .. } => 2.0,
+            // Compute-intensive ops are costed by the library model, not
+            // per-element instruction counts.
+            MatMul | BatchMatMul | Conv => 0.0,
+        }
+    }
+
+    /// Short mnemonic used in labels, DOT output, and pseudocode.
+    pub fn name(&self) -> String {
+        use OpKind::*;
+        match self {
+            Parameter => "param".into(),
+            Constant => "const".into(),
+            Add => "add".into(),
+            Sub => "sub".into(),
+            Mul => "mul".into(),
+            Div => "div".into(),
+            Maximum => "max".into(),
+            Minimum => "min".into(),
+            Neg => "neg".into(),
+            Abs => "abs".into(),
+            Compare => "cmp".into(),
+            Select => "select".into(),
+            Convert => "convert".into(),
+            Relu => "relu".into(),
+            Exp => "exp".into(),
+            Log => "log".into(),
+            Tanh => "tanh".into(),
+            Sqrt => "sqrt".into(),
+            Rsqrt => "rsqrt".into(),
+            Power => "pow".into(),
+            Sigmoid => "sigmoid".into(),
+            Erf => "erf".into(),
+            Gelu => "gelu".into(),
+            Tan => "tan".into(),
+            Reduce { op, .. } => format!("reduce_{}", op.name()),
+            Broadcast => "broadcast".into(),
+            Reshape => "reshape".into(),
+            Transpose { .. } => "transpose".into(),
+            Slice => "slice".into(),
+            Gather => "gather".into(),
+            Concat => "concat".into(),
+            Pad => "pad".into(),
+            Copy => "copy".into(),
+            Iota => "iota".into(),
+            MatMul => "matmul".into(),
+            BatchMatMul => "batch_matmul".into(),
+            Conv => "conv".into(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn taxonomy_matches_paper() {
+        assert_eq!(OpKind::Add.class(), OpClass::LightElementwise);
+        assert_eq!(OpKind::Tanh.class(), OpClass::ExpensiveElementwise);
+        assert_eq!(
+            OpKind::Reduce { op: ReduceOp::Sum, axes: vec![1] }.class(),
+            OpClass::Reduction
+        );
+        assert_eq!(OpKind::Broadcast.class(), OpClass::DataMovement);
+        assert_eq!(OpKind::MatMul.class(), OpClass::ComputeIntensive);
+        assert_eq!(OpKind::Parameter.class(), OpClass::Source);
+    }
+
+    #[test]
+    fn fusibility_excludes_gemm_and_sources() {
+        assert!(OpKind::Add.is_fusible());
+        assert!(OpKind::Exp.is_fusible());
+        assert!(OpKind::Reduce { op: ReduceOp::Max, axes: vec![0] }.is_fusible());
+        assert!(!OpKind::MatMul.is_fusible());
+        assert!(!OpKind::Conv.is_fusible());
+        assert!(!OpKind::Parameter.is_fusible());
+    }
+
+    #[test]
+    fn expensive_producer_rule() {
+        // The exact ops §2.1 says XLA keeps out of kernel middles.
+        assert!(OpKind::Tan.is_expensive_producer());
+        assert!(OpKind::Reduce { op: ReduceOp::Sum, axes: vec![0] }.is_expensive_producer());
+        assert!(!OpKind::Add.is_expensive_producer());
+        assert!(!OpKind::Broadcast.is_expensive_producer());
+    }
+
+    #[test]
+    fn expensive_ops_cost_more_instructions() {
+        assert!(
+            OpKind::Tanh.instructions_per_element()
+                > OpKind::Add.instructions_per_element()
+        );
+        assert!(
+            OpKind::Gelu.instructions_per_element()
+                >= OpKind::Exp.instructions_per_element()
+        );
+    }
+
+    #[test]
+    fn names_are_stable() {
+        assert_eq!(OpKind::Add.name(), "add");
+        assert_eq!(
+            OpKind::Reduce { op: ReduceOp::Mean, axes: vec![2] }.name(),
+            "reduce_mean"
+        );
+        assert_eq!(OpKind::Transpose { perm: vec![1, 0] }.name(), "transpose");
+    }
+}

@@ -1,0 +1,137 @@
+//! Tensor shapes (static — the paper's system, like XLA of its era,
+//! handles static shapes only; §7.5 notes dynamic shapes as open work).
+
+use super::DType;
+
+/// A dense row-major tensor shape.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct Shape {
+    dims: Vec<usize>,
+}
+
+impl Shape {
+    /// Build a shape from dimensions. A rank-0 scalar is `Shape::scalar()`.
+    pub fn new(dims: Vec<usize>) -> Self {
+        Self { dims }
+    }
+
+    /// Rank-0 scalar.
+    pub fn scalar() -> Self {
+        Self { dims: vec![] }
+    }
+
+    /// Dimensions slice.
+    pub fn dims(&self) -> &[usize] {
+        &self.dims
+    }
+
+    /// Rank (number of dimensions).
+    pub fn rank(&self) -> usize {
+        self.dims.len()
+    }
+
+    /// Total element count (1 for scalars).
+    pub fn num_elements(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    /// Byte size when stored with element type `dt`.
+    pub fn bytes(&self, dt: DType) -> usize {
+        self.num_elements() * dt.size_bytes()
+    }
+
+    /// Shape after reducing over `axes` (keep_dims=false).
+    pub fn reduce(&self, axes: &[usize]) -> Shape {
+        let dims = self
+            .dims
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| !axes.contains(i))
+            .map(|(_, &d)| d)
+            .collect();
+        Shape::new(dims)
+    }
+
+    /// Shape after transposing with permutation `perm`.
+    pub fn transpose(&self, perm: &[usize]) -> Shape {
+        assert_eq!(perm.len(), self.rank(), "permutation rank mismatch");
+        Shape::new(perm.iter().map(|&p| self.dims[p]).collect())
+    }
+
+    /// Innermost (fastest-varying) dimension, or 1 for scalars.
+    pub fn inner_dim(&self) -> usize {
+        self.dims.last().copied().unwrap_or(1)
+    }
+
+    /// Product of all but the innermost dimension ("row count" for the
+    /// row-wise reductions that dominate LN/softmax patterns).
+    pub fn outer_elements(&self) -> usize {
+        if self.dims.is_empty() {
+            1
+        } else {
+            self.dims[..self.dims.len() - 1].iter().product()
+        }
+    }
+}
+
+impl std::fmt::Display for Shape {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "[{}]",
+            self.dims
+                .iter()
+                .map(|d| d.to_string())
+                .collect::<Vec<_>>()
+                .join(",")
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn num_elements_and_bytes() {
+        let s = Shape::new(vec![32, 128, 768]);
+        assert_eq!(s.num_elements(), 32 * 128 * 768);
+        assert_eq!(s.bytes(DType::F32), 32 * 128 * 768 * 4);
+    }
+
+    #[test]
+    fn scalar_shape() {
+        let s = Shape::scalar();
+        assert_eq!(s.rank(), 0);
+        assert_eq!(s.num_elements(), 1);
+        assert_eq!(s.inner_dim(), 1);
+        assert_eq!(s.outer_elements(), 1);
+    }
+
+    #[test]
+    fn reduce_drops_axes() {
+        let s = Shape::new(vec![32, 128, 768]);
+        assert_eq!(s.reduce(&[2]), Shape::new(vec![32, 128]));
+        assert_eq!(s.reduce(&[0, 1]), Shape::new(vec![768]));
+        assert_eq!(s.reduce(&[0, 1, 2]), Shape::scalar());
+    }
+
+    #[test]
+    fn transpose_permutes() {
+        let s = Shape::new(vec![2, 3, 4]);
+        assert_eq!(s.transpose(&[2, 0, 1]), Shape::new(vec![4, 2, 3]));
+    }
+
+    #[test]
+    fn inner_outer_split() {
+        let s = Shape::new(vec![32, 128, 768]);
+        assert_eq!(s.inner_dim(), 768);
+        assert_eq!(s.outer_elements(), 32 * 128);
+    }
+
+    #[test]
+    fn display_format() {
+        assert_eq!(Shape::new(vec![4, 5]).to_string(), "[4,5]");
+        assert_eq!(Shape::scalar().to_string(), "[]");
+    }
+}

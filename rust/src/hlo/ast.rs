@@ -1,0 +1,274 @@
+//! Structured representation of an HLO-text module.
+//!
+//! This mirrors the grammar `HloModuleProto::from_text_file` accepts —
+//! the exact interchange format `python/compile/aot.py` emits into
+//! `artifacts/*.hlo.txt` (HLO *text*, not serialized proto: the
+//! xla_extension 0.5.1 proto parser rejects jax≥0.5's 64-bit ids).
+//!
+//! Only the structure the fusion layers need is retained: computations,
+//! instructions, shapes, operand wiring and a key/value attribute bag.
+//! Layout annotations (`{1,0}`) are parsed and discarded — fusion
+//! decisions in this reproduction are layout-oblivious, like the
+//! paper's (§4 schedules re-derive indexing from the logical shape).
+
+use std::collections::BTreeMap;
+
+/// Primitive element type as spelled in HLO text (`f32`, `pred`, ...).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum HloPrimitive {
+    F16,
+    BF16,
+    F32,
+    F64,
+    S8,
+    S16,
+    S32,
+    S64,
+    U8,
+    U16,
+    U32,
+    U64,
+    Pred,
+    /// A tuple shape's "element type" placeholder.
+    Tuple,
+    /// Opaque/token and anything else we don't model.
+    Other,
+}
+
+impl HloPrimitive {
+    /// Parse the leading primitive-type keyword of a shape string.
+    pub fn from_keyword(kw: &str) -> HloPrimitive {
+        match kw {
+            "f16" => HloPrimitive::F16,
+            "bf16" => HloPrimitive::BF16,
+            "f32" => HloPrimitive::F32,
+            "f64" => HloPrimitive::F64,
+            "s8" => HloPrimitive::S8,
+            "s16" => HloPrimitive::S16,
+            "s32" => HloPrimitive::S32,
+            "s64" => HloPrimitive::S64,
+            "u8" => HloPrimitive::U8,
+            "u16" => HloPrimitive::U16,
+            "u32" => HloPrimitive::U32,
+            "u64" => HloPrimitive::U64,
+            "pred" => HloPrimitive::Pred,
+            _ => HloPrimitive::Other,
+        }
+    }
+
+    /// HLO-text spelling.
+    pub fn name(self) -> &'static str {
+        match self {
+            HloPrimitive::F16 => "f16",
+            HloPrimitive::BF16 => "bf16",
+            HloPrimitive::F32 => "f32",
+            HloPrimitive::F64 => "f64",
+            HloPrimitive::S8 => "s8",
+            HloPrimitive::S16 => "s16",
+            HloPrimitive::S32 => "s32",
+            HloPrimitive::S64 => "s64",
+            HloPrimitive::U8 => "u8",
+            HloPrimitive::U16 => "u16",
+            HloPrimitive::U32 => "u32",
+            HloPrimitive::U64 => "u64",
+            HloPrimitive::Pred => "pred",
+            HloPrimitive::Tuple => "tuple",
+            HloPrimitive::Other => "opaque",
+        }
+    }
+}
+
+/// A (possibly tuple) shape: `f32[128,256]` or `(s32[], f32[4]{0})`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HloShape {
+    pub primitive: HloPrimitive,
+    pub dims: Vec<usize>,
+    /// Non-empty only for tuple shapes.
+    pub tuple_elements: Vec<HloShape>,
+}
+
+impl HloShape {
+    /// Scalar shape of the given primitive.
+    pub fn scalar(primitive: HloPrimitive) -> Self {
+        HloShape { primitive, dims: Vec::new(), tuple_elements: Vec::new() }
+    }
+
+    /// Array shape.
+    pub fn array(primitive: HloPrimitive, dims: Vec<usize>) -> Self {
+        HloShape { primitive, dims, tuple_elements: Vec::new() }
+    }
+
+    /// True if this is a tuple shape.
+    pub fn is_tuple(&self) -> bool {
+        self.primitive == HloPrimitive::Tuple
+    }
+
+    /// Number of elements (1 for scalars, 0 for tuples).
+    pub fn num_elements(&self) -> usize {
+        if self.is_tuple() {
+            0
+        } else {
+            self.dims.iter().product()
+        }
+    }
+}
+
+impl std::fmt::Display for HloShape {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        if self.is_tuple() {
+            write!(f, "(")?;
+            for (i, e) in self.tuple_elements.iter().enumerate() {
+                if i > 0 {
+                    write!(f, ", ")?;
+                }
+                write!(f, "{e}")?;
+            }
+            write!(f, ")")
+        } else {
+            write!(f, "{}[", self.primitive.name())?;
+            for (i, d) in self.dims.iter().enumerate() {
+                if i > 0 {
+                    write!(f, ",")?;
+                }
+                write!(f, "{d}")?;
+            }
+            write!(f, "]")
+        }
+    }
+}
+
+/// One HLO instruction line:
+/// `%name = f32[4,4]{1,0} add(%a, %b), metadata={...}`.
+#[derive(Debug, Clone)]
+pub struct HloInstruction {
+    /// SSA name without the leading `%` (HLO text may omit `%`).
+    pub name: String,
+    pub shape: HloShape,
+    /// Opcode as spelled (`add`, `reduce`, `get-tuple-element`, ...).
+    pub opcode: String,
+    /// Operand names (without `%`). Literal operands of `constant` are
+    /// not operands — they land in `attrs["literal"]`.
+    pub operands: Vec<String>,
+    /// Raw trailing attributes: `dimensions={1}`, `to_apply=region_1.1`,
+    /// `index=0`, `direction=EQ`, ... Values keep their raw spelling.
+    pub attrs: BTreeMap<String, String>,
+    /// True if the line was marked `ROOT`.
+    pub is_root: bool,
+}
+
+impl HloInstruction {
+    /// Parse `dimensions={1,2}`-style attributes into a usize list.
+    pub fn dims_attr(&self, key: &str) -> Option<Vec<usize>> {
+        let raw = self.attrs.get(key)?;
+        let inner = raw.trim().trim_start_matches('{').trim_end_matches('}');
+        if inner.trim().is_empty() {
+            return Some(Vec::new());
+        }
+        inner
+            .split(',')
+            .map(|t| t.trim().parse::<usize>().ok())
+            .collect()
+    }
+}
+
+/// A named computation (the entry computation or a nested region).
+#[derive(Debug, Clone)]
+pub struct HloComputation {
+    pub name: String,
+    pub instructions: Vec<HloInstruction>,
+    /// Index into `instructions` of the ROOT (last instruction if no
+    /// explicit ROOT marker was present).
+    pub root: usize,
+}
+
+impl HloComputation {
+    /// Look up an instruction by SSA name.
+    pub fn find(&self, name: &str) -> Option<&HloInstruction> {
+        self.instructions.iter().find(|i| i.name == name)
+    }
+
+    /// The ROOT instruction.
+    pub fn root_instruction(&self) -> &HloInstruction {
+        &self.instructions[self.root]
+    }
+}
+
+/// A whole `HloModule`.
+#[derive(Debug, Clone)]
+pub struct HloModule {
+    pub name: String,
+    pub computations: Vec<HloComputation>,
+    /// Index of the entry computation in `computations`. The text format
+    /// marks it with `ENTRY`; if absent, the last computation wins (the
+    /// convention HLO text printers follow).
+    pub entry: usize,
+}
+
+impl HloModule {
+    /// The entry computation.
+    pub fn entry_computation(&self) -> &HloComputation {
+        &self.computations[self.entry]
+    }
+
+    /// Look up a nested computation by name (for `to_apply=` targets).
+    pub fn find_computation(&self, name: &str) -> Option<&HloComputation> {
+        self.computations.iter().find(|c| c.name == name)
+    }
+
+    /// Total instruction count across all computations.
+    pub fn num_instructions(&self) -> usize {
+        self.computations.iter().map(|c| c.instructions.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_display_roundtrips() {
+        let s = HloShape::array(HloPrimitive::F32, vec![128, 256]);
+        assert_eq!(s.to_string(), "f32[128,256]");
+        assert_eq!(HloShape::scalar(HloPrimitive::Pred).to_string(), "pred[]");
+    }
+
+    #[test]
+    fn tuple_shape() {
+        let t = HloShape {
+            primitive: HloPrimitive::Tuple,
+            dims: vec![],
+            tuple_elements: vec![
+                HloShape::scalar(HloPrimitive::S32),
+                HloShape::array(HloPrimitive::F32, vec![4]),
+            ],
+        };
+        assert!(t.is_tuple());
+        assert_eq!(t.to_string(), "(s32[], f32[4])");
+        assert_eq!(t.num_elements(), 0);
+    }
+
+    #[test]
+    fn primitive_keywords() {
+        assert_eq!(HloPrimitive::from_keyword("f32"), HloPrimitive::F32);
+        assert_eq!(HloPrimitive::from_keyword("pred"), HloPrimitive::Pred);
+        assert_eq!(HloPrimitive::from_keyword("token"), HloPrimitive::Other);
+    }
+
+    #[test]
+    fn dims_attr_parses_braced_lists() {
+        let mut attrs = BTreeMap::new();
+        attrs.insert("dimensions".to_string(), "{1,2}".to_string());
+        attrs.insert("empty".to_string(), "{}".to_string());
+        let inst = HloInstruction {
+            name: "r".into(),
+            shape: HloShape::scalar(HloPrimitive::F32),
+            opcode: "reduce".into(),
+            operands: vec![],
+            attrs,
+            is_root: false,
+        };
+        assert_eq!(inst.dims_attr("dimensions"), Some(vec![1, 2]));
+        assert_eq!(inst.dims_attr("empty"), Some(vec![]));
+        assert_eq!(inst.dims_attr("missing"), None);
+    }
+}

@@ -1,0 +1,438 @@
+//! Lower a parsed [`HloModule`] into the fusion IR ([`crate::graph::Graph`]).
+//!
+//! This is the L2→L3 bridge: `python/compile/aot.py` lowers JAX
+//! functions to HLO text, and this converter turns the *entry
+//! computation* of straight-line modules into the op graph the fusion
+//! explorer consumes — so the paper's search runs on real jax-lowered
+//! programs, not just our hand-built workload graphs.
+//!
+//! Scope: straight-line entry computations (everything jnp emits for
+//! the L2 model functions). Control flow (`while`, `call`,
+//! `conditional`) and custom calls — which appear in Pallas
+//! `interpret=True` lowerings as grid loops — are *not* convertible;
+//! [`to_graph`] reports the offending opcode so callers can fall back
+//! to structural analysis of the parsed module. `ROOT tuple(...)` (the
+//! `return_tuple=True` convention the runtime relies on) is unwrapped.
+
+use super::ast::{HloComputation, HloInstruction, HloModule, HloPrimitive, HloShape};
+use crate::graph::{DType, Graph, NodeId, OpKind, ReduceOp, Shape};
+use std::collections::HashMap;
+
+/// Why a module could not be converted into the fusion IR.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ConvertError {
+    /// An instruction uses an opcode outside the straight-line subset.
+    UnsupportedOpcode { instruction: String, opcode: String },
+    /// An operand name did not resolve (malformed module).
+    UnknownOperand { instruction: String, operand: String },
+    /// Tuple-typed value in a position we cannot unwrap.
+    TupleValue { instruction: String },
+}
+
+impl std::fmt::Display for ConvertError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ConvertError::UnsupportedOpcode { instruction, opcode } => {
+                write!(f, "instruction {instruction}: unsupported opcode `{opcode}` (control flow / custom call)")
+            }
+            ConvertError::UnknownOperand { instruction, operand } => {
+                write!(f, "instruction {instruction}: unknown operand `{operand}`")
+            }
+            ConvertError::TupleValue { instruction } => {
+                write!(f, "instruction {instruction}: tuple value outside ROOT position")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ConvertError {}
+
+/// Map an HLO primitive to the fusion IR dtype. Unsized/unmodeled
+/// integer widths collapse onto i32 (the fusion layers only use dtype
+/// for byte accounting; sub-4-byte ints are not in our workloads).
+pub fn primitive_dtype(p: HloPrimitive) -> DType {
+    match p {
+        HloPrimitive::F16 => DType::F16,
+        HloPrimitive::BF16 => DType::BF16,
+        HloPrimitive::F32 => DType::F32,
+        HloPrimitive::F64 => DType::F64,
+        HloPrimitive::S64 | HloPrimitive::U64 => DType::I64,
+        HloPrimitive::Pred => DType::Bool,
+        _ => DType::I32,
+    }
+}
+
+fn shape_of(s: &HloShape) -> Shape {
+    Shape::new(s.dims.clone())
+}
+
+/// Decide the reduction combinator from the `to_apply` region: a region
+/// whose ROOT is `add` is a sum-reduction, `maximum` a max-reduction...
+fn reduce_op_of(module: &HloModule, inst: &HloInstruction) -> ReduceOp {
+    let Some(region_name) = inst.attrs.get("to_apply") else {
+        return ReduceOp::Sum;
+    };
+    let Some(region) = module.find_computation(region_name) else {
+        return ReduceOp::Sum;
+    };
+    match region.root_instruction().opcode.as_str() {
+        "maximum" => ReduceOp::Max,
+        "minimum" => ReduceOp::Min,
+        "multiply" => ReduceOp::Prod,
+        _ => ReduceOp::Sum,
+    }
+}
+
+/// Opcode → fusion-IR kind for the straight-line subset. Returns `None`
+/// for opcodes handled specially (tuple/GTE) or unsupported ones.
+fn simple_kind(opcode: &str) -> Option<OpKind> {
+    Some(match opcode {
+        "add" => OpKind::Add,
+        "subtract" => OpKind::Sub,
+        "multiply" => OpKind::Mul,
+        "divide" => OpKind::Div,
+        "maximum" => OpKind::Maximum,
+        "minimum" => OpKind::Minimum,
+        "negate" => OpKind::Neg,
+        "abs" => OpKind::Abs,
+        "compare" => OpKind::Compare,
+        "select" => OpKind::Select,
+        "convert" | "bitcast-convert" => OpKind::Convert,
+        "exponential" | "exponential-minus-one" => OpKind::Exp,
+        "log" | "log-plus-one" => OpKind::Log,
+        "tanh" => OpKind::Tanh,
+        "sqrt" => OpKind::Sqrt,
+        "rsqrt" => OpKind::Rsqrt,
+        "power" => OpKind::Power,
+        "logistic" => OpKind::Sigmoid,
+        "erf" => OpKind::Erf,
+        "tan" => OpKind::Tan,
+        "sine" | "cosine" => OpKind::Tan, // same MUFU cost class
+        "broadcast" => OpKind::Broadcast,
+        "reshape" | "bitcast" => OpKind::Reshape,
+        "slice" => OpKind::Slice,
+        "gather" => OpKind::Gather,
+        "concatenate" => OpKind::Concat,
+        "pad" => OpKind::Pad,
+        "copy" | "copy-start" | "copy-done" => OpKind::Copy,
+        "iota" => OpKind::Iota,
+        "dot" => OpKind::MatMul,
+        "convolution" => OpKind::Conv,
+        // Dynamic slicing is memory movement with computed offsets; the
+        // fusion layers treat it as its static cousin.
+        "dynamic-slice" => OpKind::Slice,
+        "dynamic-update-slice" => OpKind::Copy,
+        "clamp" => OpKind::Maximum,
+        "and" | "or" | "xor" | "not" => OpKind::Compare,
+        "sign" | "floor" | "ceil" | "round-nearest-afz" | "round-nearest-even" => OpKind::Abs,
+        _ => return None,
+    })
+}
+
+/// Convert the entry computation of `module` into a fusion-IR graph.
+pub fn to_graph(module: &HloModule) -> Result<Graph, ConvertError> {
+    let entry = module.entry_computation();
+    let mut g = Graph::new(module.name.clone());
+    let mut env: HashMap<&str, NodeId> = HashMap::new();
+
+    let root_name = &entry.root_instruction().name;
+
+    for inst in &entry.instructions {
+        let id = convert_instruction(module, entry, inst, &mut g, &env, root_name)?;
+        if let Some(id) = id {
+            env.insert(inst.name.as_str(), id);
+        }
+    }
+    Ok(g)
+}
+
+fn convert_instruction(
+    module: &HloModule,
+    _entry: &HloComputation,
+    inst: &HloInstruction,
+    g: &mut Graph,
+    env: &HashMap<&str, NodeId>,
+    root_name: &str,
+) -> Result<Option<NodeId>, ConvertError> {
+    let resolve = |ops: &[String]| -> Result<Vec<NodeId>, ConvertError> {
+        ops.iter()
+            .map(|o| {
+                env.get(o.as_str()).copied().ok_or_else(|| ConvertError::UnknownOperand {
+                    instruction: inst.name.clone(),
+                    operand: o.clone(),
+                })
+            })
+            .collect()
+    };
+
+    match inst.opcode.as_str() {
+        "parameter" => {
+            if inst.shape.is_tuple() {
+                return Err(ConvertError::TupleValue { instruction: inst.name.clone() });
+            }
+            let dtype = primitive_dtype(inst.shape.primitive);
+            Ok(Some(g.param(shape_of(&inst.shape), dtype, inst.name.clone())))
+        }
+        "constant" => {
+            let dtype = primitive_dtype(inst.shape.primitive);
+            Ok(Some(g.constant(shape_of(&inst.shape), dtype, inst.name.clone())))
+        }
+        "reduce" => {
+            if inst.shape.is_tuple() {
+                // Variadic reduce (e.g. argmax pairs) — out of subset.
+                return Err(ConvertError::UnsupportedOpcode {
+                    instruction: inst.name.clone(),
+                    opcode: "variadic-reduce".into(),
+                });
+            }
+            let inputs = resolve(&inst.operands[..1])?; // drop init value
+            let axes = inst.dims_attr("dimensions").unwrap_or_default();
+            let op = reduce_op_of(module, inst);
+            let dtype = primitive_dtype(inst.shape.primitive);
+            Ok(Some(g.add(
+                OpKind::Reduce { op, axes },
+                dtype,
+                shape_of(&inst.shape),
+                inputs,
+                inst.name.clone(),
+            )))
+        }
+        "transpose" => {
+            let inputs = resolve(&inst.operands)?;
+            let perm = inst.dims_attr("dimensions").unwrap_or_default();
+            let dtype = primitive_dtype(inst.shape.primitive);
+            Ok(Some(g.add(
+                OpKind::Transpose { perm },
+                dtype,
+                shape_of(&inst.shape),
+                inputs,
+                inst.name.clone(),
+            )))
+        }
+        "tuple" => {
+            // Only the ROOT tuple wrapper (return_tuple=True) unwraps;
+            // interior tuples imply control flow we do not model.
+            if inst.name == root_name {
+                Ok(None)
+            } else {
+                Err(ConvertError::TupleValue { instruction: inst.name.clone() })
+            }
+        }
+        "get-tuple-element" => Err(ConvertError::UnsupportedOpcode {
+            instruction: inst.name.clone(),
+            opcode: inst.opcode.clone(),
+        }),
+        "while" | "call" | "conditional" | "custom-call" | "fusion" | "rng"
+        | "rng-bit-generator" | "sort" | "scatter" | "map" | "all-reduce"
+        | "infeed" | "outfeed" | "send" | "recv" => Err(ConvertError::UnsupportedOpcode {
+            instruction: inst.name.clone(),
+            opcode: inst.opcode.clone(),
+        }),
+        op => match simple_kind(op) {
+            Some(kind) => {
+                // Select keeps all 3 operands; pad drops its padding
+                // value operand; compare keeps both sides.
+                let keep = match &kind {
+                    OpKind::Pad => 1,
+                    _ => inst.operands.len(),
+                };
+                let inputs = resolve(&inst.operands[..keep.min(inst.operands.len())])?;
+                let dtype = primitive_dtype(inst.shape.primitive);
+                Ok(Some(g.add(kind, dtype, shape_of(&inst.shape), inputs, inst.name.clone())))
+            }
+            None => Err(ConvertError::UnsupportedOpcode {
+                instruction: inst.name.clone(),
+                opcode: inst.opcode.clone(),
+            }),
+        },
+    }
+}
+
+/// Structural statistics of a parsed module — available even when
+/// conversion is impossible (control-flow modules): per-opcode counts
+/// and the paper's op-class census.
+#[derive(Debug, Clone, Default)]
+pub struct ModuleStats {
+    pub instructions: usize,
+    pub computations: usize,
+    /// (opcode, count) sorted by descending count.
+    pub opcode_histogram: Vec<(String, usize)>,
+    /// Memory-intensive instruction count (everything but dot/conv +
+    /// parameters/constants), per the paper's §1 definition.
+    pub memory_intensive: usize,
+    pub compute_intensive: usize,
+}
+
+/// Compute [`ModuleStats`] over every computation in the module.
+pub fn module_stats(module: &HloModule) -> ModuleStats {
+    let mut hist: HashMap<&str, usize> = HashMap::new();
+    let mut mem = 0usize;
+    let mut math = 0usize;
+    for c in &module.computations {
+        for i in &c.instructions {
+            *hist.entry(i.opcode.as_str()).or_default() += 1;
+            match i.opcode.as_str() {
+                "dot" | "convolution" => math += 1,
+                "parameter" | "constant" | "tuple" | "get-tuple-element" => {}
+                _ => mem += 1,
+            }
+        }
+    }
+    let mut opcode_histogram: Vec<(String, usize)> =
+        hist.into_iter().map(|(k, v)| (k.to_string(), v)).collect();
+    opcode_histogram.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+    ModuleStats {
+        instructions: module.num_instructions(),
+        computations: module.computations.len(),
+        opcode_histogram,
+        memory_intensive: mem,
+        compute_intensive: math,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hlo::parser::parse_module;
+
+    const LN_LIKE: &str = r#"
+HloModule jit_ln
+
+region_0.1 {
+  a = f32[] parameter(0)
+  b = f32[] parameter(1)
+  ROOT s = f32[] add(a, b)
+}
+
+ENTRY main {
+  x = f32[128,256]{1,0} parameter(0)
+  z = f32[] constant(0)
+  sum = f32[128]{0} reduce(x, z), dimensions={1}, to_apply=region_0.1
+  n = f32[] constant(256)
+  nb = f32[128]{0} broadcast(n), dimensions={}
+  mean = f32[128]{0} divide(sum, nb)
+  meanb = f32[128,256]{1,0} broadcast(mean), dimensions={0}
+  ROOT c = f32[128,256]{1,0} subtract(x, meanb)
+}
+"#;
+
+    #[test]
+    fn converts_ln_like_module() {
+        let m = parse_module(LN_LIKE).unwrap();
+        let g = to_graph(&m).unwrap();
+        g.validate().unwrap();
+        assert_eq!(g.len(), 8);
+        let reduce = g
+            .nodes()
+            .iter()
+            .find(|n| matches!(n.kind, OpKind::Reduce { .. }))
+            .unwrap();
+        assert_eq!(reduce.kind, OpKind::Reduce { op: ReduceOp::Sum, axes: vec![1] });
+        assert_eq!(reduce.shape, Shape::new(vec![128]));
+        // Reduce drops its init-value operand.
+        assert_eq!(reduce.inputs.len(), 1);
+    }
+
+    #[test]
+    fn max_region_becomes_max_reduce() {
+        let text = r#"
+region_m {
+  a = f32[] parameter(0)
+  b = f32[] parameter(1)
+  ROOT m = f32[] maximum(a, b)
+}
+
+ENTRY main {
+  x = f32[8,16]{1,0} parameter(0)
+  z = f32[] constant(-inf)
+  ROOT r = f32[8]{0} reduce(x, z), dimensions={1}, to_apply=region_m
+}
+"#;
+        let m = parse_module(text).unwrap();
+        let g = to_graph(&m).unwrap();
+        let r = g.nodes().iter().find(|n| matches!(n.kind, OpKind::Reduce { .. })).unwrap();
+        assert_eq!(r.kind, OpKind::Reduce { op: ReduceOp::Max, axes: vec![1] });
+    }
+
+    #[test]
+    fn root_tuple_unwraps() {
+        let text = r#"
+ENTRY main {
+  x = f32[4]{0} parameter(0)
+  n = f32[4]{0} negate(x)
+  ROOT t = (f32[4]{0}) tuple(n)
+}
+"#;
+        let m = parse_module(text).unwrap();
+        let g = to_graph(&m).unwrap();
+        assert_eq!(g.len(), 2); // tuple wrapper itself emits no node
+        assert_eq!(g.outputs().len(), 1);
+    }
+
+    #[test]
+    fn while_loop_is_reported_unsupported() {
+        let text = r#"
+body {
+  ROOT p = s32[] parameter(0)
+}
+cond {
+  q = s32[] parameter(0)
+  z = s32[] constant(4)
+  ROOT c = pred[] compare(q, z), direction=LT
+}
+ENTRY main {
+  i = s32[] parameter(0)
+  ROOT w = s32[] while(i), condition=cond, body=body
+}
+"#;
+        let m = parse_module(text).unwrap();
+        let err = to_graph(&m).unwrap_err();
+        assert!(matches!(err, ConvertError::UnsupportedOpcode { ref opcode, .. } if opcode == "while"));
+    }
+
+    #[test]
+    fn dot_maps_to_matmul() {
+        let text = r#"
+ENTRY main {
+  a = f32[8,16]{1,0} parameter(0)
+  b = f32[16,4]{1,0} parameter(1)
+  ROOT d = f32[8,4]{1,0} dot(a, b), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+"#;
+        let m = parse_module(text).unwrap();
+        let g = to_graph(&m).unwrap();
+        assert_eq!(g.num_compute_intensive(), 1);
+    }
+
+    #[test]
+    fn transpose_keeps_permutation() {
+        let text = r#"
+ENTRY main {
+  a = f32[8,16]{1,0} parameter(0)
+  ROOT t = f32[16,8]{1,0} transpose(a), dimensions={1,0}
+}
+"#;
+        let m = parse_module(text).unwrap();
+        let g = to_graph(&m).unwrap();
+        let t = g.nodes().iter().find(|n| matches!(n.kind, OpKind::Transpose { .. })).unwrap();
+        assert_eq!(t.kind, OpKind::Transpose { perm: vec![1, 0] });
+    }
+
+    #[test]
+    fn stats_census() {
+        let m = parse_module(LN_LIKE).unwrap();
+        let s = module_stats(&m);
+        assert_eq!(s.computations, 2);
+        assert_eq!(s.compute_intensive, 0);
+        assert!(s.memory_intensive >= 5);
+        assert_eq!(s.opcode_histogram[0].0, "parameter"); // most frequent here? tied
+    }
+
+    #[test]
+    fn dtype_mapping() {
+        assert_eq!(primitive_dtype(HloPrimitive::F32), DType::F32);
+        assert_eq!(primitive_dtype(HloPrimitive::Pred), DType::Bool);
+        assert_eq!(primitive_dtype(HloPrimitive::S64), DType::I64);
+        assert_eq!(primitive_dtype(HloPrimitive::U8), DType::I32);
+    }
+}

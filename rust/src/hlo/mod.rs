@@ -1,0 +1,31 @@
+//! HLO-text front-end: parse `artifacts/*.hlo.txt` (the AOT interchange
+//! format) and lower straight-line modules into the fusion IR.
+//!
+//! This closes the L2→L3 loop in the reproduction: the same HLO text
+//! the [`crate::runtime`] executes numerically on PJRT can be fed to
+//! the [`crate::explorer`] for fusion analysis — `fstitch hlo --file
+//! artifacts/ln_reference.hlo.txt --explore` runs the paper's search on
+//! a real jax-lowered layer-norm and reports the 4-kernels-vs-1 result
+//! of Figure 1 on genuine HLO, not a hand-built graph.
+//!
+//! * [`ast`] — module/computation/instruction structure.
+//! * [`parser`] — resilient line-oriented text parser.
+//! * [`convert`] — entry-computation → [`crate::graph::Graph`] lowering
+//!   plus structural stats for control-flow modules.
+
+pub mod ast;
+pub mod convert;
+pub mod emit;
+pub mod parser;
+
+pub use ast::{HloComputation, HloInstruction, HloModule, HloPrimitive, HloShape};
+pub use convert::{module_stats, to_graph, ConvertError, ModuleStats};
+pub use emit::{emit_module, EmitError};
+pub use parser::{parse_module, ParseError};
+
+/// Parse an HLO text file from disk.
+pub fn parse_file(path: impl AsRef<std::path::Path>) -> Result<HloModule, String> {
+    let text = std::fs::read_to_string(path.as_ref())
+        .map_err(|e| format!("read {}: {e}", path.as_ref().display()))?;
+    parse_module(&text).map_err(|e| e.to_string())
+}

@@ -1,0 +1,509 @@
+//! Line-oriented parser for HLO text.
+//!
+//! Accepts the dialect `xc.XlaComputation.as_hlo_text()` prints (the
+//! format in `artifacts/*.hlo.txt`):
+//!
+//! ```text
+//! HloModule jit_fn, entry_computation_layout={...}
+//!
+//! region_1.1 {
+//!   Arg_0.2 = f32[] parameter(0)
+//!   ROOT add.2 = f32[] add(Arg_0.2, Arg_1.2)
+//! }
+//!
+//! ENTRY main.10 {
+//!   p = f32[128,256]{1,0} parameter(0)
+//!   c = f32[] constant(0)
+//!   ROOT r = f32[128]{0} reduce(p, c), dimensions={1}, to_apply=region_1.1
+//! }
+//! ```
+//!
+//! The parser is resilient to the attribute soup real modules carry
+//! (`metadata={...}`, `sharding=...`, nested braces, `/*index=5*/`
+//! comments inside tuple shapes) — everything after the operand list is
+//! split into `key=value` pairs at top-level commas.
+
+use super::ast::{HloComputation, HloInstruction, HloModule, HloPrimitive, HloShape};
+use std::collections::BTreeMap;
+
+/// Parse error with a line number for diagnostics.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ParseError {
+    pub line: usize,
+    pub message: String,
+}
+
+impl std::fmt::Display for ParseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "HLO parse error at line {}: {}", self.line, self.message)
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+/// Parse a whole HLO-text module.
+pub fn parse_module(text: &str) -> Result<HloModule, ParseError> {
+    let mut module_name = String::from("module");
+    let mut computations: Vec<HloComputation> = Vec::new();
+    let mut entry: Option<usize> = None;
+
+    let mut current: Option<(String, Vec<HloInstruction>, Option<usize>, bool)> = None;
+
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comments(raw);
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("HloModule") {
+            // `HloModule jit_fn, entry_computation_layout={...}`
+            let rest = rest.trim();
+            module_name = rest
+                .split(|c: char| c == ',' || c.is_whitespace())
+                .next()
+                .unwrap_or("module")
+                .to_string();
+            continue;
+        }
+        if line == "}" {
+            let (name, instructions, root, is_entry) = current.take().ok_or(ParseError {
+                line: lineno + 1,
+                message: "unmatched '}'".into(),
+            })?;
+            if instructions.is_empty() {
+                return Err(ParseError {
+                    line: lineno + 1,
+                    message: format!("computation {name} has no instructions"),
+                });
+            }
+            let root = root.unwrap_or(instructions.len() - 1);
+            computations.push(HloComputation { name, instructions, root });
+            if is_entry {
+                entry = Some(computations.len() - 1);
+            }
+            continue;
+        }
+        if line.ends_with('{') && current.is_none() {
+            // `ENTRY main.10 {` or `region_1.1 {` — possibly with a
+            // parameter signature: `%fused (p: f32[4]) -> f32[4] {`.
+            let header = line.trim_end_matches('{').trim();
+            let is_entry = header.starts_with("ENTRY");
+            let header = header.trim_start_matches("ENTRY").trim();
+            let name = header
+                .split(|c: char| c.is_whitespace() || c == '(')
+                .next()
+                .unwrap_or("")
+                .trim_start_matches('%')
+                .to_string();
+            if name.is_empty() {
+                return Err(ParseError {
+                    line: lineno + 1,
+                    message: "computation header missing a name".into(),
+                });
+            }
+            current = Some((name, Vec::new(), None, is_entry));
+            continue;
+        }
+        // Instruction line.
+        let Some((_, instructions, root, _)) = current.as_mut() else {
+            // Stray line outside a computation (layout decls, etc.): skip.
+            continue;
+        };
+        let inst = parse_instruction(line, lineno + 1)?;
+        if inst.is_root {
+            *root = Some(instructions.len());
+        }
+        instructions.push(inst);
+    }
+
+    if let Some((name, ..)) = current {
+        return Err(ParseError {
+            line: text.lines().count(),
+            message: format!("computation {name} not closed"),
+        });
+    }
+    if computations.is_empty() {
+        return Err(ParseError { line: 0, message: "no computations found".into() });
+    }
+    let entry = entry.unwrap_or(computations.len() - 1);
+    Ok(HloModule { name: module_name, computations, entry })
+}
+
+/// Remove `/* ... */` comments (HLO prints `/*index=5*/` inside long
+/// operand lists) and `//`-to-EOL comments.
+fn strip_comments(line: &str) -> String {
+    let mut out = String::with_capacity(line.len());
+    let mut chars = line.chars().peekable();
+    while let Some(c) = chars.next() {
+        if c == '/' && chars.peek() == Some(&'*') {
+            chars.next();
+            // consume until `*/`
+            let mut prev = ' ';
+            for c2 in chars.by_ref() {
+                if prev == '*' && c2 == '/' {
+                    break;
+                }
+                prev = c2;
+            }
+            continue;
+        }
+        if c == '/' && chars.peek() == Some(&'/') {
+            break;
+        }
+        out.push(c);
+    }
+    out
+}
+
+/// Parse one instruction line.
+fn parse_instruction(line: &str, lineno: usize) -> Result<HloInstruction, ParseError> {
+    let err = |m: String| ParseError { line: lineno, message: m };
+
+    let (is_root, line) = match line.strip_prefix("ROOT ") {
+        Some(rest) => (true, rest.trim()),
+        None => (false, line),
+    };
+
+    let eq = line.find('=').ok_or_else(|| err("missing '='".into()))?;
+    let name = line[..eq].trim().trim_start_matches('%').to_string();
+    let rhs = line[eq + 1..].trim();
+
+    // Shape: starts with a primitive keyword or '(' for tuples.
+    let (shape, rest) = parse_shape_prefix(rhs).map_err(&err)?;
+    let rest = rest.trim_start();
+
+    // Opcode runs until '(' (every HLO op has an operand list, possibly
+    // empty: `parameter(0)`, `constant(1)`).
+    let paren = rest.find('(').ok_or_else(|| err(format!("missing '(' after opcode in: {rest}")))?;
+    let opcode = rest[..paren].trim().to_string();
+    if opcode.is_empty() {
+        return Err(err("empty opcode".into()));
+    }
+
+    // Operand list: scan to the matching ')'.
+    let (operand_str, after) = take_balanced(&rest[paren..]).map_err(&err)?;
+    let operands = split_top_level(operand_str)
+        .into_iter()
+        .map(|t| t.trim().to_string())
+        .filter(|t| !t.is_empty())
+        .collect::<Vec<_>>();
+
+    // `parameter(0)` / `constant(3.14)` carry literals, not operand refs.
+    let (operands, mut attrs): (Vec<String>, BTreeMap<String, String>) =
+        if opcode == "parameter" || opcode == "constant" || opcode == "iota" {
+            let mut a = BTreeMap::new();
+            if !operands.is_empty() {
+                a.insert("literal".to_string(), operands.join(","));
+            }
+            (Vec::new(), a)
+        } else {
+            (
+                operands
+                    .into_iter()
+                    .map(|o| {
+                        // Operand tokens may be `%name` or `f32[4] %name`
+                        // (typed operand syntax) — keep the last token.
+                        o.rsplit(|c: char| c.is_whitespace())
+                            .next()
+                            .unwrap_or("")
+                            .trim_start_matches('%')
+                            .to_string()
+                    })
+                    .collect(),
+                BTreeMap::new(),
+            )
+        };
+
+    // Trailing attributes: `, key=value, key={...}, ...`
+    for part in split_top_level(after.trim_start_matches(',')) {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        if let Some(eqpos) = part.find('=') {
+            let key = part[..eqpos].trim().to_string();
+            let val = part[eqpos + 1..].trim().to_string();
+            attrs.insert(key, val);
+        } else {
+            attrs.insert(part.to_string(), String::new());
+        }
+    }
+
+    Ok(HloInstruction { name, shape, opcode, operands, attrs, is_root })
+}
+
+/// Parse the shape prefix of an instruction RHS, returning the shape and
+/// the remainder of the string. Handles arrays with layouts
+/// (`f32[4,4]{1,0}`) and tuple shapes (`(s32[], f32[4]{0})`).
+fn parse_shape_prefix(s: &str) -> Result<(HloShape, &str), String> {
+    let s = s.trim_start();
+    if let Some(stripped) = s.strip_prefix('(') {
+        // Tuple shape: find the matching ')' then parse elements.
+        let mut depth = 1usize;
+        let mut end = None;
+        for (i, c) in stripped.char_indices() {
+            match c {
+                '(' => depth += 1,
+                ')' => {
+                    depth -= 1;
+                    if depth == 0 {
+                        end = Some(i);
+                        break;
+                    }
+                }
+                _ => {}
+            }
+        }
+        let end = end.ok_or("unterminated tuple shape")?;
+        let inner = &stripped[..end];
+        let mut elements = Vec::new();
+        for part in split_top_level(inner) {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (shape, rest) = parse_shape_prefix(part)?;
+            if !rest.trim().is_empty() {
+                return Err(format!("trailing tokens in tuple element: {rest}"));
+            }
+            elements.push(shape);
+        }
+        let shape = HloShape {
+            primitive: HloPrimitive::Tuple,
+            dims: Vec::new(),
+            tuple_elements: elements,
+        };
+        return Ok((shape, &stripped[end + 1..]));
+    }
+
+    // `f32[128,256]{1,0}` — keyword, bracketed dims, optional layout.
+    let kw_end = s
+        .find(|c: char| !(c.is_ascii_alphanumeric()))
+        .ok_or("shape keyword runs to end of line")?;
+    let kw = &s[..kw_end];
+    let primitive = HloPrimitive::from_keyword(kw);
+    let mut rest = &s[kw_end..];
+    let mut dims = Vec::new();
+    if let Some(stripped) = rest.strip_prefix('[') {
+        let close = stripped.find(']').ok_or("unterminated dims")?;
+        let inner = &stripped[..close];
+        for tok in inner.split(',') {
+            let tok = tok.trim();
+            if tok.is_empty() {
+                continue;
+            }
+            // Dynamic dims print as `<=8`; take the bound.
+            let tok = tok.trim_start_matches("<=");
+            dims.push(tok.parse::<usize>().map_err(|_| format!("bad dim: {tok}"))?);
+        }
+        rest = &stripped[close + 1..];
+    }
+    // Optional layout `{1,0}` — skip balanced braces.
+    let rest = rest.trim_start();
+    let rest = if rest.starts_with('{') {
+        let (_, after) = take_balanced_braces(rest)?;
+        after
+    } else {
+        rest
+    };
+    Ok((HloShape { primitive, dims, tuple_elements: Vec::new() }, rest))
+}
+
+/// Given a string starting with `(`, return the contents up to the
+/// matching `)` and the remainder after it.
+fn take_balanced(s: &str) -> Result<(&str, &str), String> {
+    debug_assert!(s.starts_with('('));
+    let mut depth = 0usize;
+    for (i, c) in s.char_indices() {
+        match c {
+            '(' => depth += 1,
+            ')' => {
+                depth -= 1;
+                if depth == 0 {
+                    return Ok((&s[1..i], &s[i + 1..]));
+                }
+            }
+            _ => {}
+        }
+    }
+    Err("unbalanced parentheses".into())
+}
+
+/// Given a string starting with `{`, return the contents and remainder.
+fn take_balanced_braces(s: &str) -> Result<(&str, &str), String> {
+    debug_assert!(s.starts_with('{'));
+    let mut depth = 0usize;
+    for (i, c) in s.char_indices() {
+        match c {
+            '{' => depth += 1,
+            '}' => {
+                depth -= 1;
+                if depth == 0 {
+                    return Ok((&s[1..i], &s[i + 1..]));
+                }
+            }
+            _ => {}
+        }
+    }
+    Err("unbalanced braces".into())
+}
+
+/// Split on commas that are not nested inside (), {}, or [].
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut depth = 0i32;
+    let mut start = 0usize;
+    for (i, c) in s.char_indices() {
+        match c {
+            '(' | '{' | '[' => depth += 1,
+            ')' | '}' | ']' => depth -= 1,
+            ',' if depth == 0 => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SMALL: &str = r#"
+HloModule jit_small, entry_computation_layout={(f32[4]{0})->f32[]}
+
+region_0.1 {
+  a = f32[] parameter(0)
+  b = f32[] parameter(1)
+  ROOT s = f32[] add(a, b)
+}
+
+ENTRY main.5 {
+  p = f32[4]{0} parameter(0)
+  z = f32[] constant(0)
+  e = f32[4]{0} exponential(p)
+  ROOT r = f32[] reduce(e, z), dimensions={0}, to_apply=region_0.1
+}
+"#;
+
+    #[test]
+    fn parses_small_module() {
+        let m = parse_module(SMALL).unwrap();
+        assert_eq!(m.name, "jit_small");
+        assert_eq!(m.computations.len(), 2);
+        let entry = m.entry_computation();
+        assert_eq!(entry.name, "main.5");
+        assert_eq!(entry.instructions.len(), 4);
+        let root = entry.root_instruction();
+        assert_eq!(root.opcode, "reduce");
+        assert_eq!(root.operands, vec!["e", "z"]);
+        assert_eq!(root.dims_attr("dimensions"), Some(vec![0]));
+        assert_eq!(root.attrs.get("to_apply").unwrap(), "region_0.1");
+    }
+
+    #[test]
+    fn entry_is_marked_not_last() {
+        let text = r#"
+ENTRY main.1 {
+  ROOT p = f32[2]{0} parameter(0)
+}
+
+trailing.1 {
+  ROOT q = f32[] parameter(0)
+}
+"#;
+        let m = parse_module(text).unwrap();
+        assert_eq!(m.entry_computation().name, "main.1");
+    }
+
+    #[test]
+    fn tuple_shapes_and_gte() {
+        let text = r#"
+ENTRY e {
+  t = (s32[], f32[4]{0}) parameter(0)
+  ROOT g = f32[4]{0} get-tuple-element(t), index=1
+}
+"#;
+        let m = parse_module(text).unwrap();
+        let t = &m.entry_computation().instructions[0];
+        assert!(t.shape.is_tuple());
+        assert_eq!(t.shape.tuple_elements.len(), 2);
+        let g = m.entry_computation().root_instruction();
+        assert_eq!(g.attrs.get("index").unwrap(), "1");
+    }
+
+    #[test]
+    fn comments_and_metadata_ignored() {
+        let text = r#"
+ENTRY e {
+  p = f32[8]{0} parameter(0)
+  ROOT n = f32[8]{0} negate(p), metadata={op_type="neg" op_name="jit(f)/neg" source_file="x.py" source_line=3}
+}
+"#;
+        let m = parse_module(text).unwrap();
+        let n = m.entry_computation().root_instruction();
+        assert_eq!(n.opcode, "negate");
+        assert!(n.attrs.contains_key("metadata"));
+    }
+
+    #[test]
+    fn inline_index_comment_in_tuple() {
+        let text = r#"
+ENTRY e {
+  t = (s32[], s32[], f32[4]{0}, f32[4]{0}, f32[4]{0}, /*index=5*/f32[4]{0}) parameter(0)
+  ROOT g = f32[4]{0} get-tuple-element(t), index=5
+}
+"#;
+        let m = parse_module(text).unwrap();
+        assert_eq!(m.entry_computation().instructions[0].shape.tuple_elements.len(), 6);
+    }
+
+    #[test]
+    fn constant_literal_is_attr_not_operand() {
+        let text = r#"
+ENTRY e {
+  ROOT c = f32[] constant(3.5)
+}
+"#;
+        let m = parse_module(text).unwrap();
+        let c = m.entry_computation().root_instruction();
+        assert!(c.operands.is_empty());
+        assert_eq!(c.attrs.get("literal").unwrap(), "3.5");
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let text = "ENTRY e {\n  broken line without equals\n}\n";
+        let e = parse_module(text).unwrap_err();
+        assert_eq!(e.line, 2);
+    }
+
+    #[test]
+    fn unclosed_computation_is_error() {
+        let text = "ENTRY e {\n  p = f32[] parameter(0)\n";
+        assert!(parse_module(text).is_err());
+    }
+
+    #[test]
+    fn dynamic_dims_take_bound() {
+        let (s, rest) = parse_shape_prefix("f32[<=8,4]{1,0} x").unwrap();
+        assert_eq!(s.dims, vec![8, 4]);
+        assert_eq!(rest.trim(), "x");
+    }
+
+    #[test]
+    fn typed_operand_tokens() {
+        let text = r#"
+ENTRY e {
+  a = f32[4]{0} parameter(0)
+  b = f32[4]{0} parameter(1)
+  ROOT s = f32[4]{0} add(f32[4]{0} %a, f32[4]{0} %b)
+}
+"#;
+        let m = parse_module(text).unwrap();
+        assert_eq!(m.entry_computation().root_instruction().operands, vec!["a", "b"]);
+    }
+}

@@ -1,0 +1,55 @@
+//! # FusionStitching
+//!
+//! A from-scratch reproduction of *FusionStitching: Boosting Memory
+//! Intensive Computations for Deep Learning Workloads* (Zheng et al.,
+//! Alibaba Group, 2020) as a three-layer Rust + JAX + Pallas system.
+//!
+//! The paper's contribution is a just-in-time fusion compiler for
+//! memory-intensive operators: it widens the fusion search space beyond
+//! XLA by allowing intermediate-value *reuse* (via register shuffle and
+//! shared memory on GPUs; via VMEM staging in our Pallas exemplars), and
+//! it replaces XLA's rule-based greedy fusion with a cost-model-guided
+//! search (approximate dynamic programming + beam search).
+//!
+//! ## Crate layout
+//!
+//! * [`graph`] — the HLO-like operator IR the compiler works on.
+//! * [`workloads`] — builders for the paper's evaluation graphs
+//!   (LayerNorm, BERT, DIEN, Transformer, ASR, CRNN) plus a synthetic
+//!   random-graph generator.
+//! * [`gpu`] — the device model and timing simulator substrate (V100 and
+//!   T4 specs; occupancy, memory traffic, kernel launch accounting).
+//! * [`codegen`] — the paper's §4: composition schemes, schedule
+//!   templates, sub-root grouping, launch-dim tuning, the
+//!   latency-evaluator, shared-memory dataflow reuse, index CSE, and
+//!   kernel emission.
+//! * [`explorer`] — the paper's §5: candidate-pattern generation via
+//!   PatternReduction, cycle rejection, remote fusion, the
+//!   delta-evaluator, and beam-search fusion-plan composition.
+//! * [`baselines`] — the TF (kernel-per-op) and XLA (rule-based greedy
+//!   fusion) strategies the paper compares against.
+//! * [`pipeline`] — end-to-end `optimize()` + per-technique breakdown
+//!   reports (the rows of the paper's Table 2).
+//! * [`hlo`] — HLO-text parser + converter into the fusion IR, so the
+//!   explorer can analyze the same jax-lowered artifacts the runtime
+//!   executes.
+//! * [`runtime`] — PJRT client wrapper loading AOT-lowered HLO text from
+//!   `artifacts/` and executing it on the CPU client.
+//! * [`coordinator`] — the JIT service: sessions, a compilation cache,
+//!   async-compilation with hot swap (§6), and serving metrics.
+//! * [`util`] — deterministic PRNG, tiny JSON writer, table formatting,
+//!   and a micro-bench timer (the environment has no criterion/serde).
+
+pub mod baselines;
+pub mod codegen;
+pub mod coordinator;
+pub mod explorer;
+pub mod gpu;
+pub mod graph;
+pub mod hlo;
+pub mod pipeline;
+pub mod runtime;
+pub mod util;
+pub mod workloads;
+
+pub use graph::{DType, Graph, Node, NodeId, OpClass, OpKind, Shape};

@@ -1,0 +1,276 @@
+//! `fstitch` — FusionStitching command-line driver.
+//!
+//! Subcommands (hand-rolled parsing; clap is unavailable offline):
+//!
+//! * `fstitch optimize --model <name>`  — run TF/XLA/FS on one workload
+//!   and print the Table-2 style breakdown comparison.
+//! * `fstitch inspect --model <name> [--dot]` — print the FS fusion plan
+//!   (and optionally DOT with fusion clusters / kernel pseudocode).
+//! * `fstitch serve --model <name> --iters N` — run the JIT service with
+//!   async compilation and report before/after-swap latency.
+//! * `fstitch report` — the whole Figure-7 speedup table.
+//! * `fstitch list` — list available workloads.
+//! * `fstitch hlo --file <p.hlo.txt> [--explore]` — parse an AOT HLO
+//!   artifact, print its op census, and (for straight-line modules) run
+//!   the fusion explorer against the XLA baseline on the real HLO.
+//! * `fstitch trace --model <name> --tech <tf|xla|fs> --out <t.json>` —
+//!   write a chrome://tracing timeline of the simulated iteration.
+//! * `fstitch emit --model <name> --out <m.hlo.txt> [--run]` — export a
+//!   workload graph as executable HLO text (and optionally compile +
+//!   run it on the PJRT CPU client as a smoke test).
+
+use fusion_stitching::coordinator::{JitService, ServiceOptions};
+use fusion_stitching::explorer::ExploreOptions;
+use fusion_stitching::gpu::DeviceSpec;
+use fusion_stitching::pipeline::{self, Tech};
+use fusion_stitching::util::Table;
+use fusion_stitching::workloads::{self, Workload};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    let get_flag = |name: &str| -> Option<String> {
+        args.iter()
+            .position(|a| a == name)
+            .and_then(|i| args.get(i + 1))
+            .cloned()
+    };
+    let has_flag = |name: &str| args.iter().any(|a| a == name);
+
+    match cmd {
+        "list" => {
+            for w in workloads::catalog() {
+                println!(
+                    "{:<20} {:<20} {:<10} batch={:<5} ops={}",
+                    w.key(),
+                    w.field,
+                    format!("{}", w.mode),
+                    w.batch,
+                    w.graph.len()
+                );
+            }
+        }
+        "optimize" => {
+            let model = get_flag("--model").unwrap_or_else(|| "BERT-infer".to_string());
+            let w = find_workload(&model);
+            let device = pick_device(get_flag("--device"));
+            println!("== {} on {} ==", w.key(), device.name);
+            let rows = pipeline::table2_rows(&w, &device, &ExploreOptions::default());
+            let mut t = Table::new(vec![
+                "tech", "CPU ms", "Math ms", "Mem ms", "Cpy ms", "E2E ms", "#Math", "#Mem", "#Cpy",
+            ]);
+            for r in &rows {
+                let b = &r.breakdown;
+                t.row(vec![
+                    r.tech.name().to_string(),
+                    format!("{:.2}", b.cpu_ms),
+                    format!("{:.2}", b.math_ms),
+                    format!("{:.2}", b.mem_ms),
+                    format!("{:.2}", b.cpy_ms),
+                    format!("{:.2}", b.e2e_ms()),
+                    b.math_calls.to_string(),
+                    b.mem_calls.to_string(),
+                    b.cpy_calls.to_string(),
+                ]);
+            }
+            println!("{}", t.render());
+        }
+        "inspect" => {
+            let model = get_flag("--model").unwrap_or_else(|| "BERT-infer".to_string());
+            let w = find_workload(&model);
+            let device = pick_device(get_flag("--device"));
+            let plan = pipeline::plan_for(&w.graph, &device, Tech::Fs, &ExploreOptions::default());
+            println!(
+                "{}: {} ops, {} fusion patterns, {} kernels",
+                w.key(),
+                w.graph.len(),
+                plan.patterns.len(),
+                plan.kernels(&w.graph).len()
+            );
+            if has_flag("--dot") {
+                let clusters: Vec<(String, Vec<fusion_stitching::NodeId>)> = plan
+                    .patterns
+                    .iter()
+                    .enumerate()
+                    .map(|(i, p)| (format!("fusion.{i}"), p.nodes().to_vec()))
+                    .collect();
+                println!("{}", fusion_stitching::graph::to_dot(&w.graph, &clusters));
+            }
+        }
+        "serve" => {
+            let model = get_flag("--model").unwrap_or_else(|| "BERT-infer".to_string());
+            let iters: usize = get_flag("--iters")
+                .and_then(|s| s.parse().ok())
+                .unwrap_or(20);
+            let w = find_workload(&model);
+            let svc = JitService::new(ServiceOptions {
+                // --persist <path>: tuned plans survive restarts (the
+                // warm-start path is exercised by re-running serve).
+                plan_store: get_flag("--persist").map(std::path::PathBuf::from),
+                ..Default::default()
+            });
+            let mut session = svc.submit(&w);
+            for i in 0..iters {
+                let b = svc.run_iteration(&session);
+                if i == 0 || i + 1 == iters {
+                    println!("iter {:>3}: {:.3} ms (optimized={})", i, b.e2e_ms(), session.is_optimized());
+                }
+            }
+            session.wait_optimized();
+            let b = svc.run_iteration(&session);
+            println!("post-swap: {:.3} ms", b.e2e_ms());
+            println!("{}", session.metrics.to_json().to_pretty());
+        }
+        "report" => {
+            let device = pick_device(get_flag("--device"));
+            let mut t = Table::new(vec!["workload", "TF ms", "XLA ms", "FS ms", "FS/TF", "FS/XLA"]);
+            for w in workloads::catalog() {
+                let rows = pipeline::table2_rows(&w, &device, &ExploreOptions::default());
+                let e2e = |tech: Tech| {
+                    rows.iter()
+                        .find(|r| r.tech == tech)
+                        .unwrap()
+                        .breakdown
+                        .e2e_ms()
+                };
+                let (tf, xla, fs) = (e2e(Tech::Tf), e2e(Tech::Xla), e2e(Tech::Fs));
+                t.row(vec![
+                    w.key(),
+                    format!("{tf:.2}"),
+                    format!("{xla:.2}"),
+                    format!("{fs:.2}"),
+                    format!("{:.2}x", tf / fs),
+                    format!("{:.2}x", xla / fs),
+                ]);
+            }
+            println!("{}", t.render());
+        }
+        "hlo" => {
+            let file = get_flag("--file").unwrap_or_else(|| {
+                eprintln!("hlo: --file <path.hlo.txt> required");
+                std::process::exit(2);
+            });
+            let module = fusion_stitching::hlo::parse_file(&file).unwrap_or_else(|e| {
+                eprintln!("{e}");
+                std::process::exit(1);
+            });
+            let stats = fusion_stitching::hlo::module_stats(&module);
+            println!(
+                "{}: {} computations, {} instructions ({} memory-intensive, {} compute-intensive)",
+                module.name, stats.computations, stats.instructions,
+                stats.memory_intensive, stats.compute_intensive,
+            );
+            let mut t = Table::new(vec!["opcode", "count"]);
+            for (op, n) in stats.opcode_histogram.iter().take(16) {
+                t.row(vec![op.clone(), n.to_string()]);
+            }
+            println!("{}", t.render());
+            if has_flag("--explore") {
+                match fusion_stitching::hlo::to_graph(&module) {
+                    Ok(g) => {
+                        let device = pick_device(get_flag("--device"));
+                        let xla = fusion_stitching::baselines::xla::plan(&g);
+                        let fs = fusion_stitching::explorer::explore(
+                            &g,
+                            &device,
+                            &ExploreOptions::default(),
+                        );
+                        println!(
+                            "fusion on real HLO: XLA → {} kernels, FusionStitching → {} kernels",
+                            xla.kernels(&g).len(),
+                            fs.kernels(&g).len()
+                        );
+                    }
+                    Err(e) => println!("not explorable (control flow): {e}"),
+                }
+            }
+        }
+        "trace" => {
+            let model = get_flag("--model").unwrap_or_else(|| "BERT-infer".to_string());
+            let tech = match get_flag("--tech").as_deref() {
+                Some("tf") => Tech::Tf,
+                Some("xla") => Tech::Xla,
+                _ => Tech::Fs,
+            };
+            let out = get_flag("--out").unwrap_or_else(|| "trace.json".to_string());
+            let w = find_workload(&model);
+            let device = pick_device(get_flag("--device"));
+            let prog = pipeline::optimize(&w, &device, tech, &ExploreOptions::default());
+            let sim_cfg = match tech {
+                Tech::Tf => fusion_stitching::gpu::SimConfig::tensorflow(),
+                _ => fusion_stitching::gpu::SimConfig::xla_runtime(),
+            };
+            let sim = fusion_stitching::gpu::Simulator::new(device, sim_cfg);
+            let trace = sim.run_traced(&prog.kernels, w.loop_kind);
+            std::fs::write(&out, trace.to_chrome_json().to_pretty()).unwrap_or_else(|e| {
+                eprintln!("write {out}: {e}");
+                std::process::exit(1);
+            });
+            println!(
+                "{} [{}]: {} device slices, span {:.2} ms, device utilization {:.1}% → {out}",
+                w.key(),
+                tech.name(),
+                trace.device_slices(),
+                trace.span_us() / 1e3,
+                trace.device_utilization() * 100.0
+            );
+        }
+        "emit" => {
+            let model = get_flag("--model").unwrap_or_else(|| "BERT-infer".to_string());
+            let out = get_flag("--out").unwrap_or_else(|| format!("{model}.hlo.txt"));
+            let w = find_workload(&model);
+            match fusion_stitching::hlo::emit_module(&w.graph) {
+                Ok(text) => {
+                    std::fs::write(&out, &text).unwrap_or_else(|e| {
+                        eprintln!("write {out}: {e}");
+                        std::process::exit(1);
+                    });
+                    println!(
+                        "{}: {} ops → {} ({} chars)",
+                        w.key(),
+                        w.graph.len(),
+                        out,
+                        text.len()
+                    );
+                    if has_flag("--run") {
+                        match fusion_stitching::runtime::RuntimeClient::cpu()
+                            .and_then(|c| c.load_hlo_text(std::path::Path::new(&out)))
+                        {
+                            Ok(_) => println!("PJRT compile: OK"),
+                            Err(e) => {
+                                eprintln!("PJRT compile failed: {e}");
+                                std::process::exit(1);
+                            }
+                        }
+                    }
+                }
+                Err(e) => {
+                    eprintln!("{e}");
+                    std::process::exit(1);
+                }
+            }
+        }
+        _ => {
+            println!("fstitch — FusionStitching (Zheng et al., 2020) reproduction");
+            println!("usage: fstitch <list|optimize|inspect|serve|report|hlo|trace|emit> [--model NAME] [--device v100|t4] [--iters N] [--dot] [--file HLO] [--explore] [--tech tf|xla|fs] [--out FILE] [--run]");
+        }
+    }
+}
+
+fn find_workload(name: &str) -> Workload {
+    workloads::catalog()
+        .into_iter()
+        .find(|w| w.key().eq_ignore_ascii_case(name))
+        .unwrap_or_else(|| {
+            eprintln!("unknown model {name}; try `fstitch list`");
+            std::process::exit(2);
+        })
+}
+
+fn pick_device(name: Option<String>) -> DeviceSpec {
+    match name.as_deref() {
+        Some("t4") | Some("T4") => DeviceSpec::t4(),
+        Some("a100") | Some("A100") => DeviceSpec::a100(),
+        _ => DeviceSpec::v100(),
+    }
+}

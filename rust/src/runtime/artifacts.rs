@@ -1,0 +1,124 @@
+//! Artifact discovery: the HLO text files `make artifacts` produces.
+
+use std::path::{Path, PathBuf};
+
+/// Default artifacts directory: `$FSTITCH_ARTIFACTS` or `artifacts/`
+/// relative to the workspace root.
+pub fn artifacts_dir() -> PathBuf {
+    if let Ok(dir) = std::env::var("FSTITCH_ARTIFACTS") {
+        return PathBuf::from(dir);
+    }
+    // Walk up from CWD looking for an `artifacts` directory (tests run
+    // from the workspace root; examples may run elsewhere).
+    let mut cur = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+    loop {
+        let cand = cur.join("artifacts");
+        if cand.is_dir() {
+            return cand;
+        }
+        if !cur.pop() {
+            return PathBuf::from("artifacts");
+        }
+    }
+}
+
+/// Path of one artifact by stem, e.g. `ln_fused` →
+/// `artifacts/ln_fused.hlo.txt`.
+pub fn artifact_path(stem: &str) -> PathBuf {
+    artifacts_dir().join(format!("{stem}.hlo.txt"))
+}
+
+/// True when the given artifact stems all exist (used by tests/examples
+/// to skip gracefully before `make artifacts`).
+pub fn artifacts_available(stems: &[&str]) -> bool {
+    stems.iter().all(|s| artifact_path(s).is_file())
+}
+
+/// The artifact set the serving example and benches rely on.
+#[derive(Debug, Clone)]
+pub struct ArtifactSet;
+
+impl ArtifactSet {
+    /// Fused layer-norm (FusionStitching outcome: one module).
+    pub const LN_FUSED: &'static str = "ln_fused";
+    /// Pure-jnp oracle module for parity checks.
+    pub const LN_REFERENCE: &'static str = "ln_reference";
+    /// The 4-kernel XLA partition of Fig. 1, one module per kernel.
+    pub const LN_PART1: &'static str = "ln_part1_sum";
+    pub const LN_PART2: &'static str = "ln_part2_var";
+    pub const LN_PART3: &'static str = "ln_part3_rsqrt";
+    pub const LN_PART4: &'static str = "ln_part4_scale";
+    /// Fused softmax.
+    pub const SOFTMAX_FUSED: &'static str = "softmax_fused";
+    /// MLP block (GEMM + bias + GELU + layer-norm).
+    pub const MLP_BLOCK: &'static str = "mlp_block";
+    /// Transformer encoder layer forward.
+    pub const ENCODER_LAYER: &'static str = "encoder_layer";
+    /// Stitched bias+GELU kernel.
+    pub const GELU_BIAS_FUSED: &'static str = "gelu_bias_fused";
+    /// Stitched softmax cross-entropy head (FS outcome: one kernel).
+    pub const XENT_FUSED: &'static str = "softmax_xent_fused";
+    /// The same loss head lowered as straight jnp (XLA-style splits).
+    pub const XENT_UNFUSED: &'static str = "softmax_xent_unfused";
+    /// Stitched residual-add + layer-norm epilogue.
+    pub const RESIDUAL_LN_FUSED: &'static str = "residual_ln_fused";
+    /// Stitched per-head attention (MXU/VPU block composition).
+    pub const ATTENTION_FUSED: &'static str = "attention_fused";
+
+    /// All stems, for availability checks.
+    pub fn all() -> Vec<&'static str> {
+        vec![
+            Self::LN_FUSED,
+            Self::LN_REFERENCE,
+            Self::LN_PART1,
+            Self::LN_PART2,
+            Self::LN_PART3,
+            Self::LN_PART4,
+            Self::SOFTMAX_FUSED,
+            Self::MLP_BLOCK,
+            Self::ENCODER_LAYER,
+            Self::GELU_BIAS_FUSED,
+            Self::XENT_FUSED,
+            Self::XENT_UNFUSED,
+            Self::RESIDUAL_LN_FUSED,
+            Self::ATTENTION_FUSED,
+        ]
+    }
+}
+
+/// Check a specific path exists (helper for error messages).
+pub fn require(path: &Path) -> anyhow::Result<()> {
+    if path.is_file() {
+        Ok(())
+    } else {
+        anyhow::bail!(
+            "artifact {} missing — run `make artifacts` first",
+            path.display()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn artifact_path_shape() {
+        let p = artifact_path("ln_fused");
+        assert!(p.to_string_lossy().ends_with("artifacts/ln_fused.hlo.txt"));
+    }
+
+    #[test]
+    fn all_stems_unique() {
+        let all = ArtifactSet::all();
+        let mut dedup = all.clone();
+        dedup.sort();
+        dedup.dedup();
+        assert_eq!(all.len(), dedup.len());
+    }
+
+    #[test]
+    fn availability_false_for_missing() {
+        assert!(!artifacts_available(&["definitely_not_a_real_artifact"]));
+    }
+}

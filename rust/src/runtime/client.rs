@@ -1,0 +1,91 @@
+//! PJRT client wrapper: HLO text → compiled executable → execution.
+//!
+//! Interchange is HLO *text*, not serialized `HloModuleProto`: jax ≥ 0.5
+//! emits protos with 64-bit instruction ids that xla_extension 0.5.1
+//! rejects; the text parser reassigns ids and round-trips cleanly (see
+//! /opt/xla-example/README.md).
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// A compiled HLO module ready to execute.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    /// Human-readable identity (artifact stem).
+    pub name: String,
+}
+
+/// Thin wrapper over the PJRT CPU client.
+pub struct RuntimeClient {
+    client: xla::PjRtClient,
+}
+
+impl RuntimeClient {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(RuntimeClient { client })
+    }
+
+    /// Platform diagnostic string.
+    pub fn platform(&self) -> String {
+        format!(
+            "{} ({} devices)",
+            self.client.platform_name(),
+            self.client.device_count()
+        )
+    }
+
+    /// Load an HLO text file and compile it.
+    pub fn load_hlo_text(&self, path: &Path) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(Executable {
+            exe,
+            name: path
+                .file_stem()
+                .and_then(|s| s.to_str())
+                .unwrap_or("module")
+                .to_string(),
+        })
+    }
+}
+
+impl Executable {
+    /// Execute with f32 buffers of the given shapes; returns the flat f32
+    /// outputs of the (tuple) result.
+    pub fn run_f32(&self, inputs: &[(&[f32], &[usize])]) -> Result<Vec<Vec<f32>>> {
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (data, dims) in inputs {
+            let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(data)
+                .reshape(&dims_i64)
+                .context("reshaping input literal")?;
+            literals.push(lit);
+        }
+        let mut result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .context("executing")?[0][0]
+            .to_literal_sync()
+            .context("fetching result")?;
+        let result = &mut result;
+        // aot.py lowers with return_tuple=True: decompose the tuple.
+        let elems = result.decompose_tuple().context("decomposing tuple")?;
+        let mut out = Vec::with_capacity(elems.len());
+        for e in elems {
+            out.push(e.to_vec::<f32>().context("reading f32 output")?);
+        }
+        Ok(out)
+    }
+}
+
+// Tests that need real artifacts live in rust/tests/runtime_pjrt.rs
+// (they require `make artifacts` to have run).

@@ -1,0 +1,13 @@
+//! PJRT runtime: load AOT-lowered HLO text artifacts and execute them.
+//!
+//! This is the numeric half of the reproduction: `python/compile/aot.py`
+//! lowers the JAX/Pallas workloads (fused and unfused layer-norm,
+//! softmax, MLP) to HLO **text** once at build time (`make artifacts`);
+//! the functions here compile and run them on the PJRT CPU client from
+//! the `xla` crate — Python never executes on the request path.
+
+pub mod artifacts;
+pub mod client;
+
+pub use artifacts::{artifact_path, artifacts_available, ArtifactSet};
+pub use client::{Executable, RuntimeClient};

@@ -1,0 +1,520 @@
+//! A minimal JSON value + serializer + parser.
+//!
+//! The vendored crate set has no `serde`/`serde_json`, so benchmark
+//! harnesses, the coordinator's metrics endpoint and the persistent
+//! plan cache serialize through this tiny writer/parser instead. Only
+//! what we need: objects, arrays, strings, numbers, booleans, null;
+//! deterministic key order (insertion order). The parser accepts
+//! standard JSON (no comments/trailing commas) and is used to read back
+//! `artifacts/manifest.json` and persisted plan caches.
+
+use std::fmt::Write as _;
+
+/// An owned JSON value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum JsonValue {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<JsonValue>),
+    /// Insertion-ordered object (small N; linear lookup is fine).
+    Obj(Vec<(String, JsonValue)>),
+}
+
+impl JsonValue {
+    /// Build an empty object.
+    pub fn obj() -> Self {
+        JsonValue::Obj(Vec::new())
+    }
+
+    /// Insert (or overwrite) a key in an object; panics on non-objects.
+    pub fn set(&mut self, key: &str, value: impl Into<JsonValue>) -> &mut Self {
+        match self {
+            JsonValue::Obj(pairs) => {
+                if let Some(p) = pairs.iter_mut().find(|(k, _)| k == key) {
+                    p.1 = value.into();
+                } else {
+                    pairs.push((key.to_string(), value.into()));
+                }
+            }
+            _ => panic!("JsonValue::set on non-object"),
+        }
+        self
+    }
+
+    /// Fetch a key from an object.
+    pub fn get(&self, key: &str) -> Option<&JsonValue> {
+        match self {
+            JsonValue::Obj(pairs) => pairs.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    /// Serialize compactly.
+    pub fn to_string(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out);
+        out
+    }
+
+    /// Serialize with two-space indentation.
+    pub fn to_pretty(&self) -> String {
+        let mut out = String::new();
+        self.write_pretty(&mut out, 0);
+        out
+    }
+
+    fn write(&self, out: &mut String) {
+        match self {
+            JsonValue::Null => out.push_str("null"),
+            JsonValue::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            JsonValue::Num(n) => write_num(out, *n),
+            JsonValue::Str(s) => write_escaped(out, s),
+            JsonValue::Arr(items) => {
+                out.push('[');
+                for (i, item) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    item.write(out);
+                }
+                out.push(']');
+            }
+            JsonValue::Obj(pairs) => {
+                out.push('{');
+                for (i, (k, v)) in pairs.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    write_escaped(out, k);
+                    out.push(':');
+                    v.write(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+
+    fn write_pretty(&self, out: &mut String, depth: usize) {
+        let pad = "  ".repeat(depth + 1);
+        let close_pad = "  ".repeat(depth);
+        match self {
+            JsonValue::Arr(items) if !items.is_empty() => {
+                out.push_str("[\n");
+                for (i, item) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push_str(",\n");
+                    }
+                    out.push_str(&pad);
+                    item.write_pretty(out, depth + 1);
+                }
+                out.push('\n');
+                out.push_str(&close_pad);
+                out.push(']');
+            }
+            JsonValue::Obj(pairs) if !pairs.is_empty() => {
+                out.push_str("{\n");
+                for (i, (k, v)) in pairs.iter().enumerate() {
+                    if i > 0 {
+                        out.push_str(",\n");
+                    }
+                    out.push_str(&pad);
+                    write_escaped(out, k);
+                    out.push_str(": ");
+                    v.write_pretty(out, depth + 1);
+                }
+                out.push('\n');
+                out.push_str(&close_pad);
+                out.push('}');
+            }
+            other => other.write(out),
+        }
+    }
+}
+
+fn write_num(out: &mut String, n: f64) {
+    if !n.is_finite() {
+        out.push_str("null"); // JSON has no NaN/Inf
+    } else if n == n.trunc() && n.abs() < 1e15 {
+        let _ = write!(out, "{}", n as i64);
+    } else {
+        let _ = write!(out, "{}", n);
+    }
+}
+
+fn write_escaped(out: &mut String, s: &str) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+impl JsonValue {
+    /// Parse a JSON document. Errors carry a byte offset.
+    pub fn parse(text: &str) -> Result<JsonValue, String> {
+        let bytes = text.as_bytes();
+        let mut pos = 0usize;
+        let v = parse_value(bytes, &mut pos)?;
+        skip_ws(bytes, &mut pos);
+        if pos != bytes.len() {
+            return Err(format!("trailing garbage at byte {pos}"));
+        }
+        Ok(v)
+    }
+
+    /// Array items (empty slice for non-arrays).
+    pub fn items(&self) -> &[JsonValue] {
+        match self {
+            JsonValue::Arr(v) => v,
+            _ => &[],
+        }
+    }
+
+    /// Number value, if numeric.
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            JsonValue::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    /// Integer view of a numeric value.
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_f64().map(|n| n as usize)
+    }
+
+    /// String value, if a string.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            JsonValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+}
+
+fn skip_ws(b: &[u8], pos: &mut usize) {
+    while *pos < b.len() && matches!(b[*pos], b' ' | b'\t' | b'\n' | b'\r') {
+        *pos += 1;
+    }
+}
+
+fn parse_value(b: &[u8], pos: &mut usize) -> Result<JsonValue, String> {
+    skip_ws(b, pos);
+    let Some(&c) = b.get(*pos) else {
+        return Err("unexpected end of input".into());
+    };
+    match c {
+        b'{' => {
+            *pos += 1;
+            let mut pairs = Vec::new();
+            skip_ws(b, pos);
+            if b.get(*pos) == Some(&b'}') {
+                *pos += 1;
+                return Ok(JsonValue::Obj(pairs));
+            }
+            loop {
+                skip_ws(b, pos);
+                let key = match parse_value(b, pos)? {
+                    JsonValue::Str(s) => s,
+                    _ => return Err(format!("object key must be a string at byte {pos}")),
+                };
+                skip_ws(b, pos);
+                if b.get(*pos) != Some(&b':') {
+                    return Err(format!("expected ':' at byte {pos}"));
+                }
+                *pos += 1;
+                let val = parse_value(b, pos)?;
+                pairs.push((key, val));
+                skip_ws(b, pos);
+                match b.get(*pos) {
+                    Some(&b',') => *pos += 1,
+                    Some(&b'}') => {
+                        *pos += 1;
+                        return Ok(JsonValue::Obj(pairs));
+                    }
+                    _ => return Err(format!("expected ',' or '}}' at byte {pos}")),
+                }
+            }
+        }
+        b'[' => {
+            *pos += 1;
+            let mut items = Vec::new();
+            skip_ws(b, pos);
+            if b.get(*pos) == Some(&b']') {
+                *pos += 1;
+                return Ok(JsonValue::Arr(items));
+            }
+            loop {
+                items.push(parse_value(b, pos)?);
+                skip_ws(b, pos);
+                match b.get(*pos) {
+                    Some(&b',') => *pos += 1,
+                    Some(&b']') => {
+                        *pos += 1;
+                        return Ok(JsonValue::Arr(items));
+                    }
+                    _ => return Err(format!("expected ',' or ']' at byte {pos}")),
+                }
+            }
+        }
+        b'"' => {
+            *pos += 1;
+            let mut s = String::new();
+            loop {
+                let Some(&c) = b.get(*pos) else {
+                    return Err("unterminated string".into());
+                };
+                *pos += 1;
+                match c {
+                    b'"' => return Ok(JsonValue::Str(s)),
+                    b'\\' => {
+                        let Some(&e) = b.get(*pos) else {
+                            return Err("unterminated escape".into());
+                        };
+                        *pos += 1;
+                        match e {
+                            b'"' => s.push('"'),
+                            b'\\' => s.push('\\'),
+                            b'/' => s.push('/'),
+                            b'n' => s.push('\n'),
+                            b't' => s.push('\t'),
+                            b'r' => s.push('\r'),
+                            b'b' => s.push('\u{8}'),
+                            b'f' => s.push('\u{c}'),
+                            b'u' => {
+                                if *pos + 4 > b.len() {
+                                    return Err("bad \\u escape".into());
+                                }
+                                let hex = std::str::from_utf8(&b[*pos..*pos + 4])
+                                    .map_err(|_| "bad \\u escape")?;
+                                let code = u32::from_str_radix(hex, 16)
+                                    .map_err(|_| "bad \\u escape")?;
+                                *pos += 4;
+                                s.push(char::from_u32(code).unwrap_or('\u{fffd}'));
+                            }
+                            _ => return Err(format!("bad escape \\{}", e as char)),
+                        }
+                    }
+                    _ => {
+                        // Re-assemble multi-byte UTF-8 sequences.
+                        let start = *pos - 1;
+                        let len = utf8_len(c);
+                        let end = (start + len).min(b.len());
+                        let chunk = std::str::from_utf8(&b[start..end])
+                            .map_err(|_| "invalid utf-8 in string")?;
+                        s.push_str(chunk);
+                        *pos = end;
+                    }
+                }
+            }
+        }
+        b't' => expect_lit(b, pos, "true", JsonValue::Bool(true)),
+        b'f' => expect_lit(b, pos, "false", JsonValue::Bool(false)),
+        b'n' => expect_lit(b, pos, "null", JsonValue::Null),
+        _ => {
+            let start = *pos;
+            while *pos < b.len()
+                && matches!(b[*pos], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+            {
+                *pos += 1;
+            }
+            let tok = std::str::from_utf8(&b[start..*pos]).map_err(|_| "bad number")?;
+            tok.parse::<f64>()
+                .map(JsonValue::Num)
+                .map_err(|_| format!("bad number `{tok}` at byte {start}"))
+        }
+    }
+}
+
+fn utf8_len(first: u8) -> usize {
+    match first {
+        0x00..=0x7f => 1,
+        0xc0..=0xdf => 2,
+        0xe0..=0xef => 3,
+        _ => 4,
+    }
+}
+
+fn expect_lit(
+    b: &[u8],
+    pos: &mut usize,
+    lit: &str,
+    val: JsonValue,
+) -> Result<JsonValue, String> {
+    if b[*pos..].starts_with(lit.as_bytes()) {
+        *pos += lit.len();
+        Ok(val)
+    } else {
+        Err(format!("expected `{lit}` at byte {pos}"))
+    }
+}
+
+impl From<f64> for JsonValue {
+    fn from(v: f64) -> Self {
+        JsonValue::Num(v)
+    }
+}
+impl From<usize> for JsonValue {
+    fn from(v: usize) -> Self {
+        JsonValue::Num(v as f64)
+    }
+}
+impl From<u64> for JsonValue {
+    fn from(v: u64) -> Self {
+        JsonValue::Num(v as f64)
+    }
+}
+impl From<i64> for JsonValue {
+    fn from(v: i64) -> Self {
+        JsonValue::Num(v as f64)
+    }
+}
+impl From<bool> for JsonValue {
+    fn from(v: bool) -> Self {
+        JsonValue::Bool(v)
+    }
+}
+impl From<&str> for JsonValue {
+    fn from(v: &str) -> Self {
+        JsonValue::Str(v.to_string())
+    }
+}
+impl From<String> for JsonValue {
+    fn from(v: String) -> Self {
+        JsonValue::Str(v)
+    }
+}
+impl<T: Into<JsonValue>> From<Vec<T>> for JsonValue {
+    fn from(v: Vec<T>) -> Self {
+        JsonValue::Arr(v.into_iter().map(Into::into).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_object() {
+        let mut o = JsonValue::obj();
+        o.set("name", "bert").set("speedup", 1.45).set("kernels", 98usize);
+        assert_eq!(
+            o.to_string(),
+            r#"{"name":"bert","speedup":1.45,"kernels":98}"#
+        );
+    }
+
+    #[test]
+    fn escapes_strings() {
+        let v = JsonValue::Str("a\"b\\c\nd".to_string());
+        assert_eq!(v.to_string(), r#""a\"b\\c\nd""#);
+    }
+
+    #[test]
+    fn integers_render_without_decimal() {
+        assert_eq!(JsonValue::Num(3.0).to_string(), "3");
+        assert_eq!(JsonValue::Num(3.5).to_string(), "3.5");
+    }
+
+    #[test]
+    fn nan_becomes_null() {
+        assert_eq!(JsonValue::Num(f64::NAN).to_string(), "null");
+    }
+
+    #[test]
+    fn set_overwrites_existing_key() {
+        let mut o = JsonValue::obj();
+        o.set("k", 1.0);
+        o.set("k", 2.0);
+        assert_eq!(o.to_string(), r#"{"k":2}"#);
+        assert_eq!(o.get("k"), Some(&JsonValue::Num(2.0)));
+    }
+
+    #[test]
+    fn pretty_output_parses_visually() {
+        let mut o = JsonValue::obj();
+        o.set("arr", vec![1usize, 2, 3]);
+        let p = o.to_pretty();
+        assert!(p.contains("\"arr\": [\n"));
+    }
+
+    #[test]
+    fn empty_containers_compact() {
+        assert_eq!(JsonValue::obj().to_pretty(), "{}");
+        assert_eq!(JsonValue::Arr(vec![]).to_pretty(), "[]");
+    }
+
+    // ---- parser -------------------------------------------------------
+
+    #[test]
+    fn parse_roundtrips_writer_output() {
+        let mut o = JsonValue::obj();
+        o.set("name", "bert\n\"q\"")
+            .set("speedup", 1.45)
+            .set("ok", true)
+            .set("none", JsonValue::Null)
+            .set("kernels", vec![98usize, 200, 561]);
+        for text in [o.to_string(), o.to_pretty()] {
+            let back = JsonValue::parse(&text).unwrap();
+            assert_eq!(back, o, "failed on: {text}");
+        }
+    }
+
+    #[test]
+    fn parse_nested_structures() {
+        let v = JsonValue::parse(r#"{"a":[{"b":[1,2,[3]]}],"c":{"d":null}}"#).unwrap();
+        let a = v.get("a").unwrap();
+        assert_eq!(a.items().len(), 1);
+        assert_eq!(
+            a.items()[0].get("b").unwrap().items()[2].items()[0].as_f64(),
+            Some(3.0)
+        );
+    }
+
+    #[test]
+    fn parse_numbers() {
+        assert_eq!(JsonValue::parse("-1.5e3").unwrap().as_f64(), Some(-1500.0));
+        assert_eq!(JsonValue::parse("0").unwrap().as_usize(), Some(0));
+    }
+
+    #[test]
+    fn parse_unicode_and_escapes() {
+        let v = JsonValue::parse(r#""café λ\n""#).unwrap();
+        assert_eq!(v.as_str(), Some("café λ\n"));
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(JsonValue::parse("{").is_err());
+        assert!(JsonValue::parse("[1,]").is_err());
+        assert!(JsonValue::parse("{\"a\" 1}").is_err());
+        assert!(JsonValue::parse("true false").is_err());
+        assert!(JsonValue::parse("nul").is_err());
+    }
+
+    #[test]
+    fn parse_real_manifest_shape() {
+        let text = r#"{
+  "ln": {"rows": 512, "dim": 256},
+  "encoder": {"batch": 8, "seq": 32, "hidden": 64, "heads": 4}
+}"#;
+        let v = JsonValue::parse(text).unwrap();
+        assert_eq!(v.get("ln").unwrap().get("rows").unwrap().as_usize(), Some(512));
+        assert_eq!(
+            v.get("encoder").unwrap().get("heads").unwrap().as_usize(),
+            Some(4)
+        );
+    }
+}

@@ -1,0 +1,133 @@
+//! ASCII table formatting for benchmark/report output.
+//!
+//! The benches print the same row/column layout as the paper's Table 2 and
+//! Figure 7 series; this formatter keeps those reports readable in a
+//! terminal without any external dependency.
+
+/// A simple left-padded ASCII table builder.
+#[derive(Debug, Default, Clone)]
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    /// Create a table with the given column headers.
+    pub fn new<S: Into<String>>(header: Vec<S>) -> Self {
+        Self {
+            header: header.into_iter().map(Into::into).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Append a row. Short rows are padded with empty cells.
+    pub fn row<S: Into<String>>(&mut self, cells: Vec<S>) -> &mut Self {
+        let mut r: Vec<String> = cells.into_iter().map(Into::into).collect();
+        while r.len() < self.header.len() {
+            r.push(String::new());
+        }
+        self.rows.push(r);
+        self
+    }
+
+    /// Number of data rows.
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// True if no data rows were added.
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Render with column widths fitted to content.
+    pub fn render(&self) -> String {
+        let ncols = self.header.len().max(
+            self.rows.iter().map(|r| r.len()).max().unwrap_or(0),
+        );
+        let mut widths = vec![0usize; ncols];
+        for (i, h) in self.header.iter().enumerate() {
+            widths[i] = widths[i].max(h.len());
+        }
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::from("|");
+            for (i, w) in widths.iter().enumerate() {
+                let cell = cells.get(i).map(String::as_str).unwrap_or("");
+                line.push(' ');
+                line.push_str(cell);
+                line.push_str(&" ".repeat(w - cell.len() + 1));
+                line.push('|');
+            }
+            line
+        };
+        let sep = {
+            let mut s = String::from("+");
+            for w in &widths {
+                s.push_str(&"-".repeat(w + 2));
+                s.push('+');
+            }
+            s
+        };
+        out.push_str(&sep);
+        out.push('\n');
+        out.push_str(&fmt_row(&self.header, &widths));
+        out.push('\n');
+        out.push_str(&sep);
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out.push_str(&sep);
+        out
+    }
+}
+
+/// Format a float with a fixed number of decimals (helper for reports).
+pub fn fmt_f(v: f64, decimals: usize) -> String {
+    format!("{:.*}", decimals, v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_header_and_rows() {
+        let mut t = Table::new(vec!["model", "speedup"]);
+        t.row(vec!["bert", "1.45"]);
+        t.row(vec!["dien", "2.21"]);
+        let r = t.render();
+        assert!(r.contains("| model |"));
+        assert!(r.contains("| dien"));
+        assert_eq!(r.lines().count(), 6); // sep, header, sep, 2 rows, sep
+    }
+
+    #[test]
+    fn pads_short_rows() {
+        let mut t = Table::new(vec!["a", "b", "c"]);
+        t.row(vec!["x"]);
+        let r = t.render();
+        assert!(r.contains("| x |"));
+    }
+
+    #[test]
+    fn widths_fit_longest_cell() {
+        let mut t = Table::new(vec!["h"]);
+        t.row(vec!["a-very-long-cell"]);
+        let r = t.render();
+        assert!(r.lines().next().unwrap().len() >= "a-very-long-cell".len() + 4);
+    }
+
+    #[test]
+    fn fmt_f_fixed_decimals() {
+        assert_eq!(fmt_f(1.23456, 2), "1.23");
+        assert_eq!(fmt_f(2.0, 3), "2.000");
+    }
+}

@@ -1,0 +1,112 @@
+//! Micro-benchmark timing loop (criterion is not available offline).
+//!
+//! `bench_loop` runs a closure with warmup, collects per-iteration
+//! wall-clock samples, and reports mean / p50 / p95 / min. Every
+//! `rust/benches/*.rs` harness builds on this.
+
+use std::time::{Duration, Instant};
+
+/// Summary statistics over a set of timing samples.
+#[derive(Debug, Clone, Copy)]
+pub struct BenchStats {
+    pub iters: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+    pub min: Duration,
+    pub max: Duration,
+}
+
+impl BenchStats {
+    /// Mean time in milliseconds.
+    pub fn mean_ms(&self) -> f64 {
+        self.mean.as_secs_f64() * 1e3
+    }
+
+    /// Mean time in microseconds.
+    pub fn mean_us(&self) -> f64 {
+        self.mean.as_secs_f64() * 1e6
+    }
+
+    fn from_samples(mut samples: Vec<Duration>) -> Self {
+        assert!(!samples.is_empty());
+        samples.sort_unstable();
+        let iters = samples.len();
+        let total: Duration = samples.iter().sum();
+        let pick = |q: f64| samples[((iters as f64 - 1.0) * q).round() as usize];
+        BenchStats {
+            iters,
+            mean: total / iters as u32,
+            p50: pick(0.50),
+            p95: pick(0.95),
+            min: samples[0],
+            max: samples[iters - 1],
+        }
+    }
+}
+
+impl std::fmt::Display for BenchStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "mean {:>9.3} ms | p50 {:>9.3} ms | p95 {:>9.3} ms | min {:>9.3} ms | n={}",
+            self.mean.as_secs_f64() * 1e3,
+            self.p50.as_secs_f64() * 1e3,
+            self.p95.as_secs_f64() * 1e3,
+            self.min.as_secs_f64() * 1e3,
+            self.iters
+        )
+    }
+}
+
+/// Run `f` for `warmup` unrecorded iterations then `iters` recorded ones.
+///
+/// The closure's return value is passed through `std::hint::black_box` so
+/// the optimizer cannot delete the measured work.
+pub fn bench_loop<T>(warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> BenchStats {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples = Vec::with_capacity(iters.max(1));
+    for _ in 0..iters.max(1) {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed());
+    }
+    BenchStats::from_samples(samples)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_ordering_holds() {
+        let s = bench_loop(2, 20, || {
+            let mut acc = 0u64;
+            for i in 0..1000 {
+                acc = acc.wrapping_add(i);
+            }
+            acc
+        });
+        assert!(s.min <= s.p50);
+        assert!(s.p50 <= s.p95);
+        assert!(s.p95 <= s.max);
+        assert_eq!(s.iters, 20);
+    }
+
+    #[test]
+    fn single_iteration_works() {
+        let s = bench_loop(0, 1, || 42);
+        assert_eq!(s.iters, 1);
+        assert_eq!(s.min, s.max);
+    }
+
+    #[test]
+    fn display_contains_fields() {
+        let s = bench_loop(0, 3, || 1);
+        let d = format!("{s}");
+        assert!(d.contains("mean"));
+        assert!(d.contains("n=3"));
+    }
+}

@@ -1,0 +1,460 @@
+//! Reusable sub-graph builders: the building blocks Table 1 lists
+//! ("perceptron, attention, convolution, RNN and a broad range of memory
+//! intensive operators").
+//!
+//! Each builder appends HLO-like nodes to a [`Graph`] and returns the id
+//! of the block output. Broadcasts are explicit (as in HLO), which is
+//! what creates the shrink/broaden shape traffic §3.1 identifies as the
+//! reuse opportunity.
+
+use crate::graph::{DType, Graph, NodeId, OpKind, ReduceOp, Shape};
+
+/// Layer normalization over the last axis — **exactly the Figure 1
+/// pattern**: two reductions (mean, variance), an expensive rsqrt, and a
+/// tail of light element-wise ops. XLA splits this into 4 kernels; the
+/// paper's Fig. 1/§7.4 case study fuses it into one.
+pub fn layer_norm(g: &mut Graph, x: NodeId, prefix: &str) -> NodeId {
+    let shape = g.node(x).shape.clone();
+    let dtype = g.node(x).dtype;
+    let last = shape.rank() - 1;
+    let n = shape.dims()[last];
+    let red_shape = shape.reduce(&[last]);
+
+    // mean = sum(x) / n
+    let sum = g.reduce(ReduceOp::Sum, x, vec![last], format!("{prefix}/sum"));
+    let n_c = g.constant(Shape::scalar(), dtype, format!("{prefix}/n"));
+    let mean = g.binary(OpKind::Div, sum, n_c, format!("{prefix}/mean"));
+
+    // centered = x - broadcast(mean)
+    let mean_b = g.broadcast(mean, shape.clone(), format!("{prefix}/mean_b"));
+    let centered = g.binary(OpKind::Sub, x, mean_b, format!("{prefix}/center"));
+
+    // var = sum(centered^2) / n
+    let sq = g.binary(OpKind::Mul, centered, centered, format!("{prefix}/sq"));
+    let var_sum = g.reduce(ReduceOp::Sum, sq, vec![last], format!("{prefix}/var_sum"));
+    let var = g.binary(OpKind::Div, var_sum, n_c, format!("{prefix}/var"));
+
+    // inv = rsqrt(var + eps)  — the "expensive op with small tensor shape"
+    // that §7.4 says keeps XLA from fusing further (xla-fusion.2).
+    let eps = g.constant(Shape::scalar(), dtype, format!("{prefix}/eps"));
+    let var_eps = g.binary(OpKind::Add, var, eps, format!("{prefix}/var_eps"));
+    let inv = g.unary(OpKind::Rsqrt, var_eps, format!("{prefix}/rsqrt"));
+
+    // y = centered * broadcast(inv) * gamma + beta
+    let inv_b = g.broadcast(inv, shape.clone(), format!("{prefix}/inv_b"));
+    let norm = g.binary(OpKind::Mul, centered, inv_b, format!("{prefix}/norm"));
+    let gamma = g.param(Shape::new(vec![n]), dtype, format!("{prefix}/gamma"));
+    let gamma_b = g.broadcast(gamma, shape.clone(), format!("{prefix}/gamma_b"));
+    let scaled = g.binary(OpKind::Mul, norm, gamma_b, format!("{prefix}/scale"));
+    let beta = g.param(Shape::new(vec![n]), dtype, format!("{prefix}/beta"));
+    let beta_b = g.broadcast(beta, shape, format!("{prefix}/beta_b"));
+    let _ = red_shape;
+    g.binary(OpKind::Add, scaled, beta_b, format!("{prefix}/out"))
+}
+
+/// Numerically-stable softmax over the last axis: max-reduce, subtract,
+/// exp (expensive mid-kernel producer!), sum-reduce, divide.
+pub fn softmax(g: &mut Graph, x: NodeId, prefix: &str) -> NodeId {
+    let shape = g.node(x).shape.clone();
+    let last = shape.rank() - 1;
+    let mx = g.reduce(ReduceOp::Max, x, vec![last], format!("{prefix}/max"));
+    let mx_b = g.broadcast(mx, shape.clone(), format!("{prefix}/max_b"));
+    let shifted = g.binary(OpKind::Sub, x, mx_b, format!("{prefix}/shift"));
+    let e = g.unary(OpKind::Exp, shifted, format!("{prefix}/exp"));
+    let s = g.reduce(ReduceOp::Sum, e, vec![last], format!("{prefix}/sum"));
+    let s_b = g.broadcast(s, shape, format!("{prefix}/sum_b"));
+    g.binary(OpKind::Div, e, s_b, format!("{prefix}/out"))
+}
+
+/// GELU activation (erf formulation), as used by BERT's FFN.
+pub fn gelu(g: &mut Graph, x: NodeId, prefix: &str) -> NodeId {
+    g.unary(OpKind::Gelu, x, format!("{prefix}/gelu"))
+}
+
+/// Dropout modeled at inference-off / training-on fidelity: a mask
+/// compare + select + scale (3 memory-intensive ops).
+pub fn dropout(g: &mut Graph, x: NodeId, prefix: &str) -> NodeId {
+    let shape = g.node(x).shape.clone();
+    let dtype = g.node(x).dtype;
+    let noise = g.param(shape.clone(), dtype, format!("{prefix}/noise"));
+    let thresh = g.constant(Shape::scalar(), dtype, format!("{prefix}/p"));
+    let mask = g.binary(OpKind::Compare, noise, thresh, format!("{prefix}/mask"));
+    let zero = g.constant(Shape::scalar(), dtype, format!("{prefix}/zero"));
+    let zero_b = g.broadcast(zero, shape.clone(), format!("{prefix}/zero_b"));
+    let sel = {
+        let id = g.add(
+            OpKind::Select,
+            dtype,
+            shape.clone(),
+            vec![mask, x, zero_b],
+            format!("{prefix}/sel"),
+        );
+        id
+    };
+    let scale = g.constant(Shape::scalar(), dtype, format!("{prefix}/scale"));
+    g.binary(OpKind::Mul, sel, scale, format!("{prefix}/out"))
+}
+
+/// Multi-head self-attention: QKV projections (GEMMs), scaled scores,
+/// softmax, context GEMM, output projection. `hidden` must be divisible
+/// by `heads`.
+pub fn attention(
+    g: &mut Graph,
+    x: NodeId,
+    batch: usize,
+    seq: usize,
+    hidden: usize,
+    heads: usize,
+    prefix: &str,
+) -> NodeId {
+    let dtype = g.node(x).dtype;
+    let dk = hidden / heads;
+    let flat = Shape::new(vec![batch * seq, hidden]);
+    let xf = g.add(OpKind::Reshape, dtype, flat.clone(), vec![x], format!("{prefix}/flat"));
+
+    let proj = |g: &mut Graph, name: &str| -> NodeId {
+        let w = g.param(Shape::new(vec![hidden, hidden]), dtype, format!("{prefix}/{name}_w"));
+        let y = g.matmul(xf, w, format!("{prefix}/{name}_mm"));
+        let b = g.param(Shape::new(vec![hidden]), dtype, format!("{prefix}/{name}_b"));
+        let b_b = g.broadcast(b, flat.clone(), format!("{prefix}/{name}_bb"));
+        let y = g.binary(OpKind::Add, y, b_b, format!("{prefix}/{name}_add"));
+        // [B*S,H] -> [B,h,S,dk]
+        let r = g.add(
+            OpKind::Reshape,
+            dtype,
+            Shape::new(vec![batch, seq, heads, dk]),
+            vec![y],
+            format!("{prefix}/{name}_r"),
+        );
+        g.add(
+            OpKind::Transpose { perm: vec![0, 2, 1, 3] },
+            dtype,
+            Shape::new(vec![batch, heads, seq, dk]),
+            vec![r],
+            format!("{prefix}/{name}_t"),
+        )
+    };
+    let q = proj(g, "q");
+    let k = proj(g, "k");
+    let v = proj(g, "v");
+
+    // scores = q @ k^T / sqrt(dk)
+    let kt = g.add(
+        OpKind::Transpose { perm: vec![0, 1, 3, 2] },
+        dtype,
+        Shape::new(vec![batch, heads, dk, seq]),
+        vec![k],
+        format!("{prefix}/k_t"),
+    );
+    let scores = g.matmul(q, kt, format!("{prefix}/scores"));
+    let scale = g.constant(Shape::scalar(), dtype, format!("{prefix}/scale"));
+    let scaled = g.binary(OpKind::Mul, scores, scale, format!("{prefix}/scaled"));
+    let probs = softmax(g, scaled, &format!("{prefix}/softmax"));
+
+    // context = probs @ v, then merge heads + output projection
+    let ctx = g.matmul(probs, v, format!("{prefix}/ctx"));
+    let ctx_t = g.add(
+        OpKind::Transpose { perm: vec![0, 2, 1, 3] },
+        dtype,
+        Shape::new(vec![batch, seq, heads, dk]),
+        vec![ctx],
+        format!("{prefix}/ctx_t"),
+    );
+    let ctx_f = g.add(
+        OpKind::Reshape,
+        dtype,
+        flat.clone(),
+        vec![ctx_t],
+        format!("{prefix}/ctx_f"),
+    );
+    let wo = g.param(Shape::new(vec![hidden, hidden]), dtype, format!("{prefix}/o_w"));
+    let out = g.matmul(ctx_f, wo, format!("{prefix}/o_mm"));
+    let bo = g.param(Shape::new(vec![hidden]), dtype, format!("{prefix}/o_b"));
+    let bo_b = g.broadcast(bo, flat, format!("{prefix}/o_bb"));
+    let out = g.binary(OpKind::Add, out, bo_b, format!("{prefix}/o_add"));
+    g.add(
+        OpKind::Reshape,
+        dtype,
+        Shape::new(vec![batch, seq, hidden]),
+        vec![out],
+        format!("{prefix}/out"),
+    )
+}
+
+/// Transformer feed-forward block: Linear → GELU → Linear.
+pub fn ffn(
+    g: &mut Graph,
+    x: NodeId,
+    rows: usize,
+    hidden: usize,
+    inner: usize,
+    prefix: &str,
+) -> NodeId {
+    let dtype = g.node(x).dtype;
+    let flat = Shape::new(vec![rows, hidden]);
+    let xf = g.add(OpKind::Reshape, dtype, flat.clone(), vec![x], format!("{prefix}/flat"));
+    let w1 = g.param(Shape::new(vec![hidden, inner]), dtype, format!("{prefix}/w1"));
+    let h = g.matmul(xf, w1, format!("{prefix}/mm1"));
+    let b1 = g.param(Shape::new(vec![inner]), dtype, format!("{prefix}/b1"));
+    let b1_b = g.broadcast(b1, Shape::new(vec![rows, inner]), format!("{prefix}/b1b"));
+    let h = g.binary(OpKind::Add, h, b1_b, format!("{prefix}/add1"));
+    let h = gelu(g, h, prefix);
+    let w2 = g.param(Shape::new(vec![inner, hidden]), dtype, format!("{prefix}/w2"));
+    let o = g.matmul(h, w2, format!("{prefix}/mm2"));
+    let b2 = g.param(Shape::new(vec![hidden]), dtype, format!("{prefix}/b2"));
+    let b2_b = g.broadcast(b2, flat, format!("{prefix}/b2b"));
+    g.binary(OpKind::Add, o, b2_b, format!("{prefix}/add2"))
+}
+
+/// One unrolled GRU cell step (DIEN's recurrence). Produces ~13
+/// memory-intensive ops + 2 GEMMs per step, matching the op-call
+/// explosion Table 2 shows for DIEN.
+pub fn gru_cell(
+    g: &mut Graph,
+    x: NodeId,
+    h_prev: NodeId,
+    hidden: usize,
+    prefix: &str,
+) -> NodeId {
+    let dtype = g.node(x).dtype;
+    let batch = g.node(x).shape.dims()[0];
+    let hshape = Shape::new(vec![batch, hidden]);
+    let gshape = Shape::new(vec![batch, 3 * hidden]);
+
+    let wx = g.param(
+        Shape::new(vec![g.node(x).shape.dims()[1], 3 * hidden]),
+        dtype,
+        format!("{prefix}/wx"),
+    );
+    let gx = g.matmul(x, wx, format!("{prefix}/gx"));
+    let wh = g.param(Shape::new(vec![hidden, 3 * hidden]), dtype, format!("{prefix}/wh"));
+    let gh = g.matmul(h_prev, wh, format!("{prefix}/gh"));
+    let b = g.param(Shape::new(vec![3 * hidden]), dtype, format!("{prefix}/b"));
+    let b_b = g.broadcast(b, gshape.clone(), format!("{prefix}/bb"));
+    let gsum = g.binary(OpKind::Add, gx, gh, format!("{prefix}/gsum"));
+    let gates = g.binary(OpKind::Add, gsum, b_b, format!("{prefix}/gates"));
+
+    // slice out r, z, n gates
+    let r_pre = g.add(OpKind::Slice, dtype, hshape.clone(), vec![gates], format!("{prefix}/r_pre"));
+    let z_pre = g.add(OpKind::Slice, dtype, hshape.clone(), vec![gates], format!("{prefix}/z_pre"));
+    let n_pre = g.add(OpKind::Slice, dtype, hshape.clone(), vec![gates], format!("{prefix}/n_pre"));
+    let r = g.unary(OpKind::Sigmoid, r_pre, format!("{prefix}/r"));
+    let z = g.unary(OpKind::Sigmoid, z_pre, format!("{prefix}/z"));
+    let rn = g.binary(OpKind::Mul, r, n_pre, format!("{prefix}/rn"));
+    let n = g.unary(OpKind::Tanh, rn, format!("{prefix}/n"));
+
+    // h = (1-z)*n + z*h_prev
+    let one = g.constant(Shape::scalar(), dtype, format!("{prefix}/one"));
+    let one_b = g.broadcast(one, hshape.clone(), format!("{prefix}/one_b"));
+    let zi = g.binary(OpKind::Sub, one_b, z, format!("{prefix}/zi"));
+    let a = g.binary(OpKind::Mul, zi, n, format!("{prefix}/a"));
+    let bterm = g.binary(OpKind::Mul, z, h_prev, format!("{prefix}/bt"));
+    g.binary(OpKind::Add, a, bterm, format!("{prefix}/h"))
+}
+
+/// One unrolled LSTM cell step (ASR/CRNN recurrence): ~16 memory-
+/// intensive ops + 2 GEMMs.
+pub fn lstm_cell(
+    g: &mut Graph,
+    x: NodeId,
+    h_prev: NodeId,
+    c_prev: NodeId,
+    hidden: usize,
+    prefix: &str,
+) -> (NodeId, NodeId) {
+    let dtype = g.node(x).dtype;
+    let batch = g.node(x).shape.dims()[0];
+    let hshape = Shape::new(vec![batch, hidden]);
+    let gshape = Shape::new(vec![batch, 4 * hidden]);
+
+    let wx = g.param(
+        Shape::new(vec![g.node(x).shape.dims()[1], 4 * hidden]),
+        dtype,
+        format!("{prefix}/wx"),
+    );
+    let gx = g.matmul(x, wx, format!("{prefix}/gx"));
+    let wh = g.param(Shape::new(vec![hidden, 4 * hidden]), dtype, format!("{prefix}/wh"));
+    let gh = g.matmul(h_prev, wh, format!("{prefix}/gh"));
+    let b = g.param(Shape::new(vec![4 * hidden]), dtype, format!("{prefix}/b"));
+    let b_b = g.broadcast(b, gshape.clone(), format!("{prefix}/bb"));
+    let s = g.binary(OpKind::Add, gx, gh, format!("{prefix}/s"));
+    let gates = g.binary(OpKind::Add, s, b_b, format!("{prefix}/gates"));
+
+    let i_pre = g.add(OpKind::Slice, dtype, hshape.clone(), vec![gates], format!("{prefix}/i_pre"));
+    let f_pre = g.add(OpKind::Slice, dtype, hshape.clone(), vec![gates], format!("{prefix}/f_pre"));
+    let o_pre = g.add(OpKind::Slice, dtype, hshape.clone(), vec![gates], format!("{prefix}/o_pre"));
+    let c_pre = g.add(OpKind::Slice, dtype, hshape.clone(), vec![gates], format!("{prefix}/c_pre"));
+    let i = g.unary(OpKind::Sigmoid, i_pre, format!("{prefix}/i"));
+    let f = g.unary(OpKind::Sigmoid, f_pre, format!("{prefix}/f"));
+    let o = g.unary(OpKind::Sigmoid, o_pre, format!("{prefix}/o"));
+    let cc = g.unary(OpKind::Tanh, c_pre, format!("{prefix}/cc"));
+
+    let fc = g.binary(OpKind::Mul, f, c_prev, format!("{prefix}/fc"));
+    let ic = g.binary(OpKind::Mul, i, cc, format!("{prefix}/ic"));
+    let c = g.binary(OpKind::Add, fc, ic, format!("{prefix}/c"));
+    let ct = g.unary(OpKind::Tanh, c, format!("{prefix}/ct"));
+    let h = g.binary(OpKind::Mul, o, ct, format!("{prefix}/h"));
+    (h, c)
+}
+
+/// Conv → BatchNorm(inference form) → ReLU block for the CRNN backbone.
+/// BN at inference is scale+shift: 4 memory-intensive ops + the conv.
+pub fn conv_bn_relu(
+    g: &mut Graph,
+    x: NodeId,
+    out_shape: Shape,
+    prefix: &str,
+) -> NodeId {
+    let dtype = g.node(x).dtype;
+    let w = g.param(Shape::new(vec![3, 3]), dtype, format!("{prefix}/w"));
+    let conv = g.add(OpKind::Conv, dtype, out_shape.clone(), vec![x, w], format!("{prefix}/conv"));
+    let ch = *out_shape.dims().last().unwrap();
+    let scale = g.param(Shape::new(vec![ch]), dtype, format!("{prefix}/bn_s"));
+    let scale_b = g.broadcast(scale, out_shape.clone(), format!("{prefix}/bn_sb"));
+    let scaled = g.binary(OpKind::Mul, conv, scale_b, format!("{prefix}/bn_mul"));
+    let shift = g.param(Shape::new(vec![ch]), dtype, format!("{prefix}/bn_t"));
+    let shift_b = g.broadcast(shift, out_shape.clone(), format!("{prefix}/bn_tb"));
+    let shifted = g.binary(OpKind::Add, scaled, shift_b, format!("{prefix}/bn_add"));
+    g.unary(OpKind::Relu, shifted, format!("{prefix}/relu"))
+}
+
+/// Embedding lookup: gather + (optionally) sum-pool over the id axis.
+pub fn embedding_lookup(
+    g: &mut Graph,
+    ids_shape: Shape,
+    dim: usize,
+    pool: bool,
+    prefix: &str,
+) -> NodeId {
+    let ids = g.param(ids_shape.clone(), DType::I32, format!("{prefix}/ids"));
+    let table = g.param(Shape::new(vec![100_000, dim]), DType::F32, format!("{prefix}/table"));
+    let mut dims = ids_shape.dims().to_vec();
+    dims.push(dim);
+    let gathered = g.add(
+        OpKind::Gather,
+        DType::F32,
+        Shape::new(dims.clone()),
+        vec![table, ids],
+        format!("{prefix}/gather"),
+    );
+    if pool && dims.len() >= 2 {
+        let axis = dims.len() - 2;
+        g.reduce(ReduceOp::Sum, gathered, vec![axis], format!("{prefix}/pool"))
+    } else {
+        gathered
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::OpClass;
+
+    fn base(batch: usize, seq: usize, hidden: usize) -> (Graph, NodeId) {
+        let mut g = Graph::new("t");
+        let x = g.param(Shape::new(vec![batch, seq, hidden]), DType::F32, "x");
+        (g, x)
+    }
+
+    #[test]
+    fn layer_norm_matches_fig1_op_mix() {
+        let (mut g, x) = base(32, 128, 768);
+        let out = layer_norm(&mut g, x, "ln");
+        g.validate().unwrap();
+        assert_eq!(g.node(out).shape, Shape::new(vec![32, 128, 768]));
+        // Exactly two reductions (mean path + variance path)...
+        let reds = g
+            .nodes()
+            .iter()
+            .filter(|n| n.kind.class() == OpClass::Reduction)
+            .count();
+        assert_eq!(reds, 2);
+        // ...and one expensive element-wise op (rsqrt).
+        let exp = g
+            .nodes()
+            .iter()
+            .filter(|n| n.kind.class() == OpClass::ExpensiveElementwise)
+            .count();
+        assert_eq!(exp, 1);
+    }
+
+    #[test]
+    fn softmax_has_exp_between_reductions() {
+        let (mut g, x) = base(4, 8, 64);
+        let out = softmax(&mut g, x, "sm");
+        g.validate().unwrap();
+        assert_eq!(g.node(out).shape, g.node(x).shape);
+        // exp must be a *producer* of the sum reduction — the exact
+        // "expensive op in the middle" XLA refuses to fuse (§2.1).
+        let exp_node = g.nodes().iter().find(|n| n.kind == OpKind::Exp).unwrap();
+        assert!(!g.consumers(exp_node.id).is_empty());
+    }
+
+    #[test]
+    fn attention_shapes() {
+        let (mut g, x) = base(2, 16, 64);
+        let out = attention(&mut g, x, 2, 16, 64, 4, "attn");
+        g.validate().unwrap();
+        assert_eq!(g.node(out).shape, Shape::new(vec![2, 16, 64]));
+        assert!(g.num_compute_intensive() >= 6); // 4 proj + 2 batched
+    }
+
+    #[test]
+    fn ffn_shapes() {
+        let (mut g, x) = base(2, 16, 64);
+        let out = ffn(&mut g, x, 32, 64, 256, "ffn");
+        g.validate().unwrap();
+        assert_eq!(g.node(out).shape, Shape::new(vec![32, 64]));
+    }
+
+    #[test]
+    fn gru_cell_recurrence() {
+        let mut g = Graph::new("gru");
+        let x = g.param(Shape::new(vec![8, 32]), DType::F32, "x");
+        let h0 = g.param(Shape::new(vec![8, 16]), DType::F32, "h0");
+        let h1 = gru_cell(&mut g, x, h0, 16, "s0");
+        g.validate().unwrap();
+        assert_eq!(g.node(h1).shape, Shape::new(vec![8, 16]));
+        let mem = g.num_memory_intensive();
+        assert!((10..=18).contains(&mem), "gru mem ops = {mem}");
+    }
+
+    #[test]
+    fn lstm_cell_recurrence() {
+        let mut g = Graph::new("lstm");
+        let x = g.param(Shape::new(vec![8, 32]), DType::F32, "x");
+        let h0 = g.param(Shape::new(vec![8, 16]), DType::F32, "h0");
+        let c0 = g.param(Shape::new(vec![8, 16]), DType::F32, "c0");
+        let (h1, c1) = lstm_cell(&mut g, x, h0, c0, 16, "s0");
+        g.validate().unwrap();
+        assert_eq!(g.node(h1).shape, Shape::new(vec![8, 16]));
+        assert_eq!(g.node(c1).shape, Shape::new(vec![8, 16]));
+    }
+
+    #[test]
+    fn conv_bn_relu_block() {
+        let mut g = Graph::new("cnn");
+        let x = g.param(Shape::new(vec![8, 32, 100, 3]), DType::F32, "x");
+        let y = conv_bn_relu(&mut g, x, Shape::new(vec![8, 32, 100, 64]), "c0");
+        g.validate().unwrap();
+        assert_eq!(g.node(y).shape, Shape::new(vec![8, 32, 100, 64]));
+        assert_eq!(g.num_compute_intensive(), 1);
+    }
+
+    #[test]
+    fn embedding_pools() {
+        let mut g = Graph::new("emb");
+        let out = embedding_lookup(&mut g, Shape::new(vec![256, 50]), 32, true, "e");
+        g.validate().unwrap();
+        assert_eq!(g.node(out).shape, Shape::new(vec![256, 32]));
+    }
+
+    #[test]
+    fn dropout_three_memops_plus_mask() {
+        let (mut g, x) = base(2, 4, 8);
+        let before = g.len();
+        let _ = dropout(&mut g, x, "do");
+        g.validate().unwrap();
+        assert!(g.len() - before >= 5);
+    }
+}

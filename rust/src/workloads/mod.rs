@@ -1,0 +1,20 @@
+//! Workload graph builders — the paper's evaluation set (Table 1).
+//!
+//! The paper evaluates on TensorFlow implementations of BERT, DIEN,
+//! Transformer, ASR (listen-attend-spell style) and CRNN. We cannot run
+//! those binaries; what the fusion compiler actually consumes is the *op
+//! graph*, so this module reconstructs graphs with the same structure
+//! (attention, layer-norm, GRU/LSTM recurrence unrolled per step, conv
+//! backbones) and the same op-count scale as the paper's Table 2 `#`
+//! columns. See DESIGN.md §1 (Substitutions).
+//!
+//! `blocks` holds reusable sub-graph builders (layer-norm is exactly the
+//! Figure 1 pattern); `models` assembles them into the seven evaluation
+//! workloads; `synthetic` generates random op graphs for property tests
+//! and the production-fleet bench.
+
+pub mod blocks;
+pub mod models;
+pub mod synthetic;
+
+pub use models::{catalog, LoopKind, Mode, Workload};

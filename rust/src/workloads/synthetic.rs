@@ -1,0 +1,152 @@
+//! Random op-graph generator for property tests and the production-fleet
+//! benchmark (§7.2's "30,000 tasks per month" claim is exercised by
+//! sampling many graphs from this generator and checking FusionStitching
+//! never regresses below the baseline).
+
+use crate::graph::{DType, Graph, NodeId, OpKind, ReduceOp, Shape};
+use crate::util::Prng;
+
+/// Tuning knobs for the generator.
+#[derive(Debug, Clone)]
+pub struct SyntheticConfig {
+    /// Number of non-parameter ops to generate.
+    pub num_ops: usize,
+    /// Number of root parameters.
+    pub num_params: usize,
+    /// Probability that a generated op is a reduction.
+    pub p_reduce: f64,
+    /// Probability that a generated op is expensive element-wise.
+    pub p_expensive: f64,
+    /// Probability that a generated op is a GEMM (compute-intensive).
+    pub p_gemm: f64,
+    /// Base row/col sizes drawn for parameter shapes.
+    pub dim_choices: Vec<usize>,
+}
+
+impl Default for SyntheticConfig {
+    fn default() -> Self {
+        Self {
+            num_ops: 120,
+            num_params: 6,
+            p_reduce: 0.10,
+            p_expensive: 0.15,
+            p_gemm: 0.05,
+            dim_choices: vec![64, 128, 256, 512, 1024],
+        }
+    }
+}
+
+/// Generate a random valid graph. All ops are well-shaped by
+/// construction: binary ops only combine equal shapes; reductions reduce
+/// the last axis; broadcasts re-expand reduced values.
+pub fn generate(cfg: &SyntheticConfig, prng: &mut Prng) -> Graph {
+    let mut g = Graph::new("synthetic");
+    // Pools of live values indexed by shape so binaries can find matches.
+    let mut values: Vec<NodeId> = Vec::new();
+
+    for i in 0..cfg.num_params {
+        let rows = *prng.pick(&cfg.dim_choices);
+        let cols = *prng.pick(&cfg.dim_choices);
+        values.push(g.param(Shape::new(vec![rows, cols]), DType::F32, format!("p{i}")));
+    }
+
+    const LIGHT: [OpKind; 6] = [
+        OpKind::Add,
+        OpKind::Sub,
+        OpKind::Mul,
+        OpKind::Maximum,
+        OpKind::Minimum,
+        OpKind::Relu,
+    ];
+    const EXPENSIVE: [OpKind; 5] = [
+        OpKind::Exp,
+        OpKind::Tanh,
+        OpKind::Sigmoid,
+        OpKind::Rsqrt,
+        OpKind::Log,
+    ];
+
+    for i in 0..cfg.num_ops {
+        let x = values[prng.below(values.len())];
+        let roll = prng.f64();
+        let id = if roll < cfg.p_reduce && g.node(x).shape.rank() >= 1 && g.node(x).shape.num_elements() > 1 {
+            let last = g.node(x).shape.rank() - 1;
+            let r = g.reduce(ReduceOp::Sum, x, vec![last], format!("red{i}"));
+            // Re-broadcast half the time so downstream binaries have mates.
+            if prng.chance(0.5) {
+                g.broadcast(r, g.node(x).shape.clone(), format!("bc{i}"))
+            } else {
+                r
+            }
+        } else if roll < cfg.p_reduce + cfg.p_expensive {
+            g.unary(EXPENSIVE[prng.below(EXPENSIVE.len())].clone(), x, format!("e{i}"))
+        } else if roll < cfg.p_reduce + cfg.p_expensive + cfg.p_gemm && g.node(x).shape.rank() == 2 {
+            let k = g.node(x).shape.dims()[1];
+            let n = *prng.pick(&cfg.dim_choices);
+            let w = g.param(Shape::new(vec![k, n]), DType::F32, format!("w{i}"));
+            g.matmul(x, w, format!("mm{i}"))
+        } else {
+            // Light element-wise: binary with a shape-mate when one
+            // exists, unary otherwise.
+            let mates: Vec<NodeId> = values
+                .iter()
+                .copied()
+                .filter(|&v| v != x && g.node(v).shape == g.node(x).shape)
+                .collect();
+            if !mates.is_empty() && prng.chance(0.7) {
+                let y = mates[prng.below(mates.len())];
+                g.binary(LIGHT[prng.below(4)].clone(), x, y, format!("b{i}"))
+            } else {
+                g.unary(LIGHT[prng.below(LIGHT.len())].clone(), x, format!("u{i}"))
+            }
+        };
+        values.push(id);
+    }
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generated_graphs_validate() {
+        let mut prng = Prng::new(1234);
+        for seed in 0..20 {
+            let mut p = Prng::new(seed * 7 + 1);
+            let cfg = SyntheticConfig {
+                num_ops: 30 + prng.below(100),
+                ..Default::default()
+            };
+            let g = generate(&cfg, &mut p);
+            g.validate().unwrap();
+            assert!(g.len() >= cfg.num_ops);
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let cfg = SyntheticConfig::default();
+        let g1 = generate(&cfg, &mut Prng::new(99));
+        let g2 = generate(&cfg, &mut Prng::new(99));
+        assert_eq!(g1.len(), g2.len());
+        for (a, b) in g1.nodes().iter().zip(g2.nodes()) {
+            assert_eq!(a.kind, b.kind);
+            assert_eq!(a.shape, b.shape);
+        }
+    }
+
+    #[test]
+    fn op_mix_contains_all_classes() {
+        let cfg = SyntheticConfig {
+            num_ops: 400,
+            ..Default::default()
+        };
+        let g = generate(&cfg, &mut Prng::new(5));
+        use crate::graph::OpClass;
+        let count = |c: OpClass| g.nodes().iter().filter(|n| n.kind.class() == c).count();
+        assert!(count(OpClass::LightElementwise) > 0);
+        assert!(count(OpClass::ExpensiveElementwise) > 0);
+        assert!(count(OpClass::Reduction) > 0);
+    }
+}

@@ -1,0 +1,130 @@
+//! End-to-end CLI tests: run the real `fstitch` binary the way a user
+//! would and check each subcommand's observable output.
+
+use std::process::Command;
+
+fn fstitch(args: &[&str]) -> (String, String, bool) {
+    let out = Command::new(env!("CARGO_BIN_EXE_fstitch"))
+        .args(args)
+        .output()
+        .expect("spawn fstitch");
+    (
+        String::from_utf8_lossy(&out.stdout).to_string(),
+        String::from_utf8_lossy(&out.stderr).to_string(),
+        out.status.success(),
+    )
+}
+
+#[test]
+fn list_shows_all_seven_workloads() {
+    let (stdout, _, ok) = fstitch(&["list"]);
+    assert!(ok);
+    for key in [
+        "BERT-train",
+        "BERT-infer",
+        "DIEN-train",
+        "DIEN-infer",
+        "Transformer-train",
+        "ASR-infer",
+        "CRNN-infer",
+    ] {
+        assert!(stdout.contains(key), "missing {key} in:\n{stdout}");
+    }
+}
+
+#[test]
+fn optimize_prints_three_technique_rows() {
+    let (stdout, _, ok) = fstitch(&["optimize", "--model", "BERT-infer"]);
+    assert!(ok);
+    for tech in ["TF", "XLA", "FS"] {
+        assert!(stdout.contains(tech), "missing {tech} row");
+    }
+    assert!(stdout.contains("E2E ms"));
+}
+
+#[test]
+fn inspect_reports_plan_and_dot() {
+    let (stdout, _, ok) = fstitch(&["inspect", "--model", "BERT-infer", "--dot"]);
+    assert!(ok);
+    assert!(stdout.contains("fusion patterns"));
+    assert!(stdout.contains("digraph"), "DOT output expected with --dot");
+    assert!(stdout.contains("fusion.0"));
+}
+
+#[test]
+fn unknown_model_fails_with_hint() {
+    let (_, stderr, ok) = fstitch(&["optimize", "--model", "NoSuchNet"]);
+    assert!(!ok);
+    assert!(stderr.contains("unknown model"));
+}
+
+#[test]
+fn hlo_subcommand_parses_artifacts() {
+    let artifact = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/ln_reference.hlo.txt");
+    if !std::path::Path::new(artifact).exists() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let (stdout, _, ok) = fstitch(&["hlo", "--file", artifact, "--explore"]);
+    assert!(ok, "hlo subcommand failed:\n{stdout}");
+    assert!(stdout.contains("memory-intensive"));
+    assert!(stdout.contains("FusionStitching → 1 kernels"), "{stdout}");
+}
+
+#[test]
+fn trace_writes_chrome_json() {
+    let out = std::env::temp_dir().join("fstitch_cli_trace.json");
+    let _ = std::fs::remove_file(&out);
+    let (stdout, _, ok) = fstitch(&[
+        "trace",
+        "--model",
+        "BERT-infer",
+        "--tech",
+        "fs",
+        "--out",
+        out.to_str().unwrap(),
+    ]);
+    assert!(ok, "{stdout}");
+    let text = std::fs::read_to_string(&out).expect("trace file written");
+    assert!(text.contains("\"ph\": \"X\""));
+    assert!(text.trim_start().starts_with('['));
+    assert!(stdout.contains("device utilization"));
+    let _ = std::fs::remove_file(&out);
+}
+
+#[test]
+fn emit_writes_hlo_text() {
+    let out = std::env::temp_dir().join("fstitch_cli_emit.hlo.txt");
+    let _ = std::fs::remove_file(&out);
+    let (stdout, _, ok) =
+        fstitch(&["emit", "--model", "ASR-infer", "--out", out.to_str().unwrap()]);
+    assert!(ok, "{stdout}");
+    let text = std::fs::read_to_string(&out).expect("emitted file");
+    assert!(text.starts_with("HloModule"));
+    assert!(text.contains("ENTRY main"));
+    let _ = std::fs::remove_file(&out);
+}
+
+#[test]
+fn emit_rejects_conv_workloads_gracefully() {
+    let (_, stderr, ok) = fstitch(&["emit", "--model", "CRNN-infer", "--out", "/dev/null"]);
+    assert!(!ok);
+    assert!(stderr.contains("subset"), "stderr: {stderr}");
+}
+
+#[test]
+fn report_covers_the_catalog() {
+    let (stdout, _, ok) = fstitch(&["report"]);
+    assert!(ok);
+    assert!(stdout.contains("FS/XLA"));
+    assert!(stdout.matches('x').count() >= 14, "speedup columns present");
+}
+
+#[test]
+fn help_lists_subcommands() {
+    let (stdout, _, ok) = fstitch(&["help"]);
+    assert!(ok);
+    for sub in ["optimize", "serve", "report", "hlo", "trace", "emit"] {
+        assert!(stdout.contains(sub));
+    }
+}

@@ -1,0 +1,339 @@
+//! Property-based tests over randomly generated graphs.
+//!
+//! The vendored crate set has no `proptest`, so these are hand-rolled:
+//! a deterministic xorshift PRNG drives the synthetic-graph generator
+//! and each property is checked across many seeds. A failing seed is
+//! printed so the case can be replayed exactly.
+
+use fusion_stitching::baselines;
+use fusion_stitching::codegen::{self, TunerOptions};
+use fusion_stitching::explorer::{self, ExploreOptions, FusionPattern};
+use fusion_stitching::gpu::{DeviceSpec, SimConfig, Simulator};
+use fusion_stitching::graph::{Graph, NodeId, OpClass};
+use fusion_stitching::pipeline::{self, Tech};
+use fusion_stitching::util::Prng;
+use fusion_stitching::workloads::synthetic::{generate, SyntheticConfig};
+use fusion_stitching::workloads::LoopKind;
+
+const SEEDS: u64 = 24;
+
+fn random_graph(seed: u64, size: usize) -> Graph {
+    let cfg = SyntheticConfig {
+        num_ops: size,
+        ..Default::default()
+    };
+    generate(&cfg, &mut Prng::new(seed.wrapping_mul(0x9E37_79B9) + 1))
+}
+
+/// Reference (quadratic) cycle oracle: pattern creates a cycle iff some
+/// external node is both reachable-from and can-reach the pattern.
+fn cycle_oracle(g: &Graph, pattern: &[NodeId]) -> bool {
+    let n = g.len();
+    let in_pat = |id: NodeId| pattern.contains(&id);
+    // reach[i][j] via Floyd-style BFS per node (ok for small graphs).
+    let mut reach_from_pat = vec![false; n];
+    let mut stack: Vec<NodeId> = pattern.to_vec();
+    while let Some(id) = stack.pop() {
+        for &c in g.consumers(id) {
+            if !reach_from_pat[c.idx()] {
+                reach_from_pat[c.idx()] = true;
+                stack.push(c);
+            }
+        }
+    }
+    // can-reach-pattern: reverse BFS from pattern over inputs.
+    let mut reaches_pat = vec![false; n];
+    let mut stack: Vec<NodeId> = pattern.to_vec();
+    while let Some(id) = stack.pop() {
+        for &inp in &g.node(id).inputs {
+            if !reaches_pat[inp.idx()] {
+                reaches_pat[inp.idx()] = true;
+                stack.push(inp);
+            }
+        }
+    }
+    (0..n).any(|i| {
+        let id = NodeId(i as u32);
+        !in_pat(id) && reach_from_pat[i] && reaches_pat[i]
+    })
+}
+
+#[test]
+fn prop_cycle_check_matches_oracle() {
+    for seed in 0..SEEDS {
+        let g = random_graph(seed, 40);
+        let mut prng = Prng::new(seed + 500);
+        for _case in 0..20 {
+            // Random small node subset.
+            let k = prng.range(2, 6.min(g.len()));
+            let mut nodes: Vec<NodeId> = Vec::new();
+            for _ in 0..k {
+                nodes.push(NodeId(prng.below(g.len()) as u32));
+            }
+            nodes.sort_unstable();
+            nodes.dedup();
+            let fast = g.fusion_creates_cycle(&nodes);
+            let slow = cycle_oracle(&g, &nodes);
+            assert_eq!(fast, slow, "seed {seed}, pattern {nodes:?}");
+        }
+    }
+}
+
+#[test]
+fn prop_explorer_plans_are_disjoint_and_valid() {
+    let device = DeviceSpec::v100();
+    let opts = ExploreOptions::default();
+    for seed in 0..SEEDS {
+        let g = random_graph(seed, 60);
+        let plan = explorer::explore(&g, &device, &opts);
+        assert!(plan.is_disjoint(), "seed {seed}: overlap");
+        for p in &plan.patterns {
+            assert!(p.is_valid(&g), "seed {seed}: invalid pattern {p:?}");
+        }
+    }
+}
+
+#[test]
+fn prop_xla_never_places_expensive_mid_kernel() {
+    for seed in 0..SEEDS {
+        let g = random_graph(seed, 80);
+        for k in baselines::xla::plan(&g).kernels(&g) {
+            for &id in k.nodes() {
+                let node = g.node(id);
+                if node.kind.is_expensive_producer() {
+                    let internal = g.consumers(id).iter().any(|c| k.contains(*c));
+                    assert!(
+                        !internal,
+                        "seed {seed}: {} mid-kernel in XLA plan",
+                        node.name
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_fs_never_negative_vs_xla() {
+    // The production claim of §7.2: FusionStitching never regresses
+    // below the XLA baseline on any graph.
+    let device = DeviceSpec::v100();
+    let opts = ExploreOptions::default();
+    let sim = Simulator::new(device.clone(), SimConfig::xla_runtime());
+    for seed in 0..SEEDS / 2 {
+        let g = random_graph(seed, 50);
+        let w = fusion_stitching::workloads::Workload {
+            name: "synthetic",
+            field: "prop",
+            mode: fusion_stitching::workloads::Mode::Infer,
+            batch: 1,
+            loop_kind: LoopKind::None,
+            graph: g,
+        };
+        let fs = pipeline::optimize(&w, &device, Tech::Fs, &opts);
+        let xla = pipeline::optimize(&w, &device, Tech::Xla, &opts);
+        let t_fs = sim.run(&fs.kernels, LoopKind::None).e2e_ms();
+        let t_xla = sim.run(&xla.kernels, LoopKind::None).e2e_ms();
+        assert!(
+            t_fs <= t_xla * 1.05,
+            "seed {seed}: FS {t_fs:.4} vs XLA {t_xla:.4}"
+        );
+    }
+}
+
+#[test]
+fn prop_grouping_partitions_every_pattern_node() {
+    for seed in 0..SEEDS {
+        let g = random_graph(seed, 50);
+        // Use XLA kernels as a source of realistic multi-op patterns.
+        for k in baselines::xla::plan(&g).kernels(&g) {
+            if k.len() < 2 {
+                continue;
+            }
+            let n_exp = codegen::grouping::num_enumerable_expensive(&g, k.nodes());
+            let grouping = codegen::identify_groups(&g, k.nodes(), &vec![true; n_exp]);
+            let total: usize = grouping.groups.iter().map(|gr| gr.members.len()).sum();
+            assert_eq!(total, k.len(), "seed {seed}");
+            // No duplicates across groups.
+            let mut all: Vec<NodeId> = grouping
+                .groups
+                .iter()
+                .flat_map(|gr| gr.members.iter().copied())
+                .collect();
+            all.sort_unstable();
+            all.dedup();
+            assert_eq!(all.len(), k.len(), "seed {seed}: node in 2 groups");
+        }
+    }
+}
+
+#[test]
+fn prop_tuner_monotone_in_allowed_schedules() {
+    // FS's tuner (which may use reuse) never does worse than the
+    // XLA-restricted tuner on the same pattern.
+    let device = DeviceSpec::v100();
+    for seed in 0..SEEDS {
+        let g = random_graph(seed, 40);
+        for k in baselines::xla::plan(&g).kernels(&g) {
+            let fs = codegen::tune_pattern(&g, k.nodes(), &device, &TunerOptions::fusion_stitching());
+            let xla = codegen::tune_pattern(&g, k.nodes(), &device, &TunerOptions::xla());
+            if let (Some(f), Some(x)) = (fs, xla) {
+                assert!(
+                    f.estimate.time_us <= x.estimate.time_us * 1.001,
+                    "seed {seed}: FS tuner {:.3} worse than XLA tuner {:.3}",
+                    f.estimate.time_us,
+                    x.estimate.time_us
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_plan_kernels_cover_all_memory_ops_exactly_once() {
+    let device = DeviceSpec::v100();
+    let opts = ExploreOptions::default();
+    for seed in 0..SEEDS {
+        let g = random_graph(seed, 60);
+        let plan = explorer::explore(&g, &device, &opts);
+        let kernels = plan.kernels(&g);
+        let mut covered = vec![0usize; g.len()];
+        for k in &kernels {
+            for &id in k.nodes() {
+                covered[id.idx()] += 1;
+            }
+        }
+        for node in g.nodes() {
+            let expect = usize::from(
+                node.kind.is_fusible()
+                    && !matches!(
+                        node.kind,
+                        fusion_stitching::graph::OpKind::Reshape
+                            | fusion_stitching::graph::OpKind::Copy
+                    ),
+            );
+            assert_eq!(
+                covered[node.id.idx()],
+                expect,
+                "seed {seed}: node {} covered {} times",
+                node.name,
+                covered[node.id.idx()]
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_synthetic_graphs_have_sane_classes() {
+    for seed in 0..SEEDS {
+        let g = random_graph(seed, 100);
+        g.validate().unwrap();
+        let sources = g
+            .nodes()
+            .iter()
+            .filter(|n| n.kind.class() == OpClass::Source)
+            .count();
+        assert!(sources >= 6, "seed {seed}");
+        assert!(g.num_memory_intensive() > 0);
+    }
+}
+
+/// Helper to make FusionPattern usable in messages.
+#[allow(dead_code)]
+fn fmt_pattern(p: &FusionPattern) -> String {
+    format!("{:?}", p.nodes())
+}
+
+// ---------------------------------------------------------------------
+// HLO bridge properties: emit → parse → convert round-trips, and the
+// parser never panics on corrupted input.
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_hlo_roundtrip_preserves_census() {
+    use fusion_stitching::hlo;
+    for seed in 0..SEEDS {
+        let g = random_graph(seed, 40);
+        let text = match hlo::emit_module(&g) {
+            Ok(t) => t,
+            Err(_) => continue, // graph drew an op outside the subset
+        };
+        let module = hlo::parse_module(&text)
+            .unwrap_or_else(|e| panic!("seed {seed}: emitted text failed to parse: {e}"));
+        let g2 = hlo::to_graph(&module)
+            .unwrap_or_else(|e| panic!("seed {seed}: emitted text failed to convert: {e}"));
+        g2.validate().unwrap();
+        let census = |g: &Graph, c: OpClass| {
+            g.nodes().iter().filter(|n| n.kind.class() == c).count()
+        };
+        // Reductions survive exactly (Mean expands to Sum+Div, both
+        // graphs count one reduction).
+        assert_eq!(
+            census(&g, OpClass::Reduction),
+            census(&g2, OpClass::Reduction),
+            "seed {seed}"
+        );
+        assert_eq!(
+            census(&g, OpClass::ComputeIntensive),
+            census(&g2, OpClass::ComputeIntensive),
+            "seed {seed}"
+        );
+        // And the explorer still produces valid plans on the round-trip.
+        let device = DeviceSpec::v100();
+        let plan = explorer::explore(&g2, &device, &ExploreOptions::default());
+        assert!(plan.is_disjoint(), "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_hlo_parser_never_panics_on_mutations() {
+    use fusion_stitching::hlo;
+    let g = random_graph(3, 30);
+    let Ok(text) = hlo::emit_module(&g) else { return };
+    let mut prng = Prng::new(0xDEAD);
+    for _case in 0..200 {
+        let mut bytes = text.clone().into_bytes();
+        // Mutate: delete a span, flip chars, or truncate.
+        match prng.below(3) {
+            0 => {
+                let at = prng.below(bytes.len());
+                let len = prng.below(20).min(bytes.len() - at);
+                bytes.drain(at..at + len);
+            }
+            1 => {
+                for _ in 0..prng.range(1, 8) {
+                    let at = prng.below(bytes.len());
+                    bytes[at] = b"(){}[]=,%0xf "[prng.below(13)];
+                }
+            }
+            _ => {
+                bytes.truncate(prng.below(bytes.len()));
+            }
+        }
+        if let Ok(s) = String::from_utf8(bytes) {
+            // Must return Ok or Err — never panic.
+            let _ = hlo::parse_module(&s);
+        }
+    }
+}
+
+#[test]
+fn prop_emitted_dot_attrs_survive_conversion() {
+    use fusion_stitching::hlo;
+    for seed in 0..SEEDS / 2 {
+        let g = random_graph(seed.wrapping_add(77), 60);
+        let gemms = g
+            .nodes()
+            .iter()
+            .filter(|n| n.kind.class() == OpClass::ComputeIntensive)
+            .count();
+        if gemms == 0 {
+            continue;
+        }
+        if let Ok(text) = hlo::emit_module(&g) {
+            let module = hlo::parse_module(&text).unwrap();
+            let stats = hlo::module_stats(&module);
+            assert_eq!(stats.compute_intensive, gemms, "seed {seed}");
+        }
+    }
+}
