@@ -3,120 +3,91 @@
 //! FusionStitching "does not show negative optimization in any of these
 //! cases" (unlike XLA, which cannot be enabled by default).
 //!
-//! Fleet simulation: a population of synthetic task graphs spanning the
-//! op-mix space (elementwise chains, reduction towers, attention-ish
-//! blocks, recurrent unrollings), each served through the JIT
-//! coordinator with the never-negative guard. We report:
-//! * total simulated GPU time under TF / XLA / FS,
-//! * the regression count per technique (XLA regresses on a chunk of
-//!   the fleet; FS on none),
-//! * projected GPU-hours saved at the paper's 30k tasks/month scale.
+//! This bench replays a deterministic seeded task trace through
+//! `fleet::FleetService` — the real coordinator path: XLA fallbacks
+//! serve immediately, FS exploration is throttled through the bounded
+//! work-stealing compile pool, plans port across the mixed V100/T4
+//! registry via the launch-dim re-tuner, and the never-negative guard
+//! vetoes regressions before any swap. Reported: fleet-wide GPU time
+//! saved (projected to the paper's 30k tasks/month), regression count
+//! (must be 0), cache/portability hit rates, and queue-latency
+//! p50/p99. The trace is replayed twice and the reports must be
+//! byte-identical — the §7.2 numbers are reproducible, not sampled.
 //!
-//! Run: `cargo bench --bench production_fleet` (add `-- N` for fleet
-//! size; default 120).
+//! Run: `cargo bench --bench production_fleet` (add `-- N` for trace
+//! size; default 1200, acceptance floor 1000). Writes `BENCH_fleet.json`.
 
-use fusion_stitching::explorer::ExploreOptions;
-use fusion_stitching::gpu::{DeviceSpec, SimConfig, Simulator};
-use fusion_stitching::pipeline::{self, Tech};
-use fusion_stitching::util::{Prng, Table};
-use fusion_stitching::workloads::synthetic::{generate, SyntheticConfig};
-use fusion_stitching::workloads::{LoopKind, Mode, Workload};
+use fusion_stitching::fleet::{
+    build_templates, generate_trace, DeviceRegistry, FleetOptions, FleetReport, FleetService,
+    TrafficConfig,
+};
+use fusion_stitching::util::JsonValue;
+
+fn run_once(traffic: &TrafficConfig) -> FleetReport {
+    let templates = build_templates(traffic);
+    let trace = generate_trace(traffic);
+    let opts = FleetOptions {
+        registry: DeviceRegistry::mixed(2, 2, 2),
+        compile_workers: 4,
+        ..Default::default()
+    };
+    let mut svc = FleetService::new(opts, templates);
+    svc.run_trace(&trace)
+}
 
 fn main() {
-    let fleet_size: usize = std::env::args()
+    let tasks: usize = std::env::args()
         .filter_map(|a| a.parse().ok())
         .next()
-        .unwrap_or(120);
-    let device = DeviceSpec::v100();
-    let opts = ExploreOptions::default();
-    let mut prng = Prng::new(0xF00D);
+        .unwrap_or(1200);
+    let traffic = TrafficConfig { tasks, ..Default::default() };
 
-    let mut totals = [0.0f64; 3]; // TF, XLA, FS
-    let mut regressions = [0usize; 3];
-    let mut fs_guard_kept_fallback = 0usize;
-
-    for i in 0..fleet_size {
-        // Vary the synthetic population across the op-mix space.
-        let cfg = SyntheticConfig {
-            num_ops: 40 + prng.below(160),
-            p_reduce: 0.05 + prng.f64() * 0.2,
-            p_expensive: 0.05 + prng.f64() * 0.25,
-            p_gemm: prng.f64() * 0.1,
-            ..Default::default()
-        };
-        let graph = generate(&cfg, &mut prng);
-        let loop_kind = match i % 5 {
-            0 => LoopKind::DynamicLoop,
-            1 => LoopKind::StaticUnrolled,
-            _ => LoopKind::None,
-        };
-        let w = Workload {
-            name: "task",
-            field: "fleet",
-            mode: Mode::Infer,
-            batch: 1,
-            loop_kind,
-            graph,
-        };
-
-        let e2e: Vec<f64> = Tech::all()
-            .iter()
-            .map(|&tech| {
-                let prog = pipeline::optimize(&w, &device, tech, &opts);
-                let cfg = match tech {
-                    Tech::Tf => SimConfig::tensorflow(),
-                    _ => SimConfig::xla_runtime(),
-                };
-                Simulator::new(device.clone(), cfg).run(&prog.kernels, w.loop_kind).e2e_ms()
-            })
-            .collect();
-        let tf = e2e[0];
-        for (k, &ms) in e2e.iter().enumerate() {
-            // §7.2's never-negative production guard: FS falls back to
-            // the better of (FS, XLA-fallback); the coordinator vetoes
-            // regressions before the swap.
-            let served = if k == 2 && ms > e2e[1] {
-                fs_guard_kept_fallback += 1;
-                e2e[1]
-            } else {
-                ms
-            };
-            totals[k] += served;
-            if k > 0 && served > tf * 1.0001 {
-                regressions[k] += 1;
-            }
-        }
-    }
-
-    println!("== §7.2 production fleet simulation ({fleet_size} tasks) ==\n");
-    let mut t = Table::new(vec!["tech", "total GPU ms", "vs TF", "tasks regressed vs TF"]);
-    for (k, tech) in Tech::all().iter().enumerate() {
-        t.row(vec![
-            tech.name().to_string(),
-            format!("{:.1}", totals[k]),
-            format!("{:.2}x", totals[0] / totals[k]),
-            if k == 0 { "-".into() } else { regressions[k].to_string() },
-        ]);
-    }
-    println!("{}", t.render());
     println!(
-        "never-negative guard kept the XLA fallback on {fs_guard_kept_fallback}/{fleet_size} tasks"
+        "== §7.2 production fleet: {} tasks, {} templates, mixed V100/T4, seed {:#x} ==\n",
+        traffic.tasks, traffic.templates, traffic.seed
     );
-    assert_eq!(regressions[2], 0, "FS must never regress (§7.2)");
-    if regressions[1] > 0 {
-        println!(
-            "XLA regressed {}/{fleet_size} tasks → cannot be enabled by default (paper §7.2)",
-            regressions[1]
-        );
-    }
+    let report = run_once(&traffic);
+    println!("{}\n", report.render());
 
-    // Projected savings at the paper's scale.
-    let saved_frac = 1.0 - totals[2] / totals[0];
-    // Paper: 30k tasks/month; assume the paper's mean task ≈ a few GPU-hours.
-    let monthly_gpu_hours = 30_000.0 * 2.0; // 2 GPU-h per task, conservative
-    println!(
-        "\nprojected at 30k tasks/month x 2 GPU-h: {:.0} GPU-hours saved/month \
-         (paper: ~7,000 with its task mix)",
-        monthly_gpu_hours * saved_frac
+    // Reproducibility: the same seed must produce the same report,
+    // byte for byte — virtual time, not wall clock, drives everything.
+    let replay = run_once(&traffic);
+    let (a, b) = (report.to_json().to_string(), replay.to_json().to_string());
+    assert_eq!(a, b, "fleet replay diverged for the same seed");
+    println!("replay check: two runs with seed {:#x} are byte-identical", traffic.seed);
+
+    // The acceptance gates of the §7.2 claim.
+    assert_eq!(report.regressions, 0, "FS must never regress (§7.2)");
+    assert!(
+        report.port_hits > 0,
+        "mixed registry must port plans across device classes"
     );
+    assert!(report.wait.p99 >= report.wait.p50);
+
+    let projected = report.projected_gpu_hours_saved(30_000.0, 2.0);
+    println!(
+        "\nGPU time saved: {:.1} ms of {:.1} ms fallback-only ({:.1}%)",
+        report.saved_gpu_ms(),
+        report.fallback_gpu_ms,
+        report.saved_frac() * 100.0
+    );
+    println!(
+        "projected at 30k tasks/month x 2 GPU-h: {projected:.0} GPU-hours saved/month \
+         (paper: ~7,000 with its task mix)"
+    );
+
+    // Machine-readable summary for tracking across PRs.
+    let mut out = JsonValue::obj();
+    out.set("bench", "production_fleet")
+        .set("tasks", traffic.tasks)
+        .set("templates", traffic.templates)
+        .set("seed", format!("{:#x}", traffic.seed))
+        .set("reproducible", true)
+        .set("projected_gpu_hours_saved_per_month", projected)
+        .set("report", report.to_json());
+    let path = "BENCH_fleet.json";
+    match std::fs::write(path, out.to_pretty()) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
 }

@@ -198,6 +198,28 @@ pub fn tune_pattern(
     best
 }
 
+/// Re-tune an already-explored fusion plan for a (possibly different)
+/// device: run only the §4.2 schedule/launch-dimension tuner over each
+/// kernel the plan launches, skipping exploration entirely — the
+/// codegen-level plan-portability entry point, giving the caller every
+/// [`TunedKernel`] (launch dims, schedules, estimates) on the new
+/// device. The fleet's program-level variant is
+/// [`crate::pipeline::port_program`], which folds this tuning into
+/// lowering so each kernel is tuned once. Returns `None` when any
+/// pattern fails to schedule on the target device (the caller falls
+/// back to a full re-exploration).
+pub fn retune_plan(
+    graph: &Graph,
+    plan: &crate::explorer::FusionPlan,
+    device: &DeviceSpec,
+    opts: &TunerOptions,
+) -> Option<Vec<TunedKernel>> {
+    plan.kernels(graph)
+        .iter()
+        .map(|p| tune_pattern(graph, p.nodes(), device, opts))
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -274,5 +296,24 @@ mod tests {
         let g = Graph::new("e");
         let device = DeviceSpec::v100();
         assert!(tune_pattern(&g, &[], &device, &TunerOptions::xla()).is_none());
+    }
+
+    #[test]
+    fn retune_plan_ports_across_devices() {
+        // Explore once on V100, then re-tune the plan for T4: every
+        // kernel schedules, and the chosen launch configs adapt to the
+        // smaller device without re-running the explorer.
+        let (g, _) = ln_pattern();
+        let v100 = DeviceSpec::v100();
+        let explore_opts = crate::explorer::ExploreOptions::default();
+        let plan = crate::explorer::explore(&g, &v100, &explore_opts);
+        let opts = TunerOptions::fusion_stitching();
+        let on_v100 = retune_plan(&g, &plan, &v100, &opts).expect("tunes on V100");
+        let on_t4 = retune_plan(&g, &plan, &DeviceSpec::t4(), &opts).expect("tunes on T4");
+        assert_eq!(on_v100.len(), on_t4.len());
+        assert_eq!(on_v100.len(), plan.kernels(&g).len());
+        // T4 has less bandwidth: the same fused work cannot be faster.
+        let sum = |ks: &[TunedKernel]| ks.iter().map(|k| k.estimate.time_us).sum::<f64>();
+        assert!(sum(&on_t4) >= sum(&on_v100), "{} vs {}", sum(&on_t4), sum(&on_v100));
     }
 }

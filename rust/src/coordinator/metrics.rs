@@ -49,6 +49,47 @@ impl ServiceMetrics {
         self.inner.lock().unwrap().swap_iteration
     }
 
+    /// Snapshot of the recorded per-iteration latencies (ms).
+    pub fn latencies(&self) -> Vec<f64> {
+        self.inner.lock().unwrap().latencies_ms.clone()
+    }
+
+    /// Latency percentile over all recorded iterations (`q` in [0, 1]);
+    /// `None` until at least one iteration was recorded.
+    pub fn latency_percentile(&self, q: f64) -> Option<f64> {
+        let inner = self.inner.lock().unwrap();
+        if inner.latencies_ms.is_empty() {
+            None
+        } else {
+            Some(crate::util::percentile(&inner.latencies_ms, q))
+        }
+    }
+
+    /// Fold another metrics object's samples into this one — the fleet
+    /// layer aggregates per-device `ServiceMetrics` into one fleet-wide
+    /// view this way. Optimization wall times sum; the swap marker is
+    /// dropped: it is an index into one session's latency sequence, and
+    /// any index into the concatenation would misattribute samples
+    /// around it (`mean_before_after` on an aggregate would lie).
+    pub fn absorb(&self, other: &ServiceMetrics) {
+        let o = other.inner.lock().unwrap().clone();
+        let mut inner = self.inner.lock().unwrap();
+        inner.latencies_ms.extend_from_slice(&o.latencies_ms);
+        inner.swap_iteration = None;
+        if let Some(w) = o.optimize_wall_ms {
+            inner.optimize_wall_ms = Some(inner.optimize_wall_ms.unwrap_or(0.0) + w);
+        }
+    }
+
+    /// Aggregate many metrics objects into a fresh fleet-wide one.
+    pub fn aggregate<'a>(parts: impl IntoIterator<Item = &'a ServiceMetrics>) -> ServiceMetrics {
+        let total = ServiceMetrics::new();
+        for m in parts {
+            total.absorb(m);
+        }
+        total
+    }
+
     /// Mean latency before/after the swap (ms); after is None until the
     /// swap happened.
     pub fn mean_before_after(&self) -> (f64, Option<f64>) {
@@ -130,5 +171,44 @@ mod tests {
         let j = m.to_json();
         assert!(j.get("iterations").is_some());
         assert!(j.get("mean_before_ms").is_some());
+    }
+
+    #[test]
+    fn latency_percentiles() {
+        let m = ServiceMetrics::new();
+        assert!(m.latency_percentile(0.5).is_none());
+        for i in 1..=100 {
+            m.record_iteration(i as f64);
+        }
+        let p50 = m.latency_percentile(0.5).unwrap();
+        assert!((49.0..=51.0).contains(&p50), "p50={p50}");
+        let p99 = m.latency_percentile(0.99).unwrap();
+        assert!(p99 >= 98.0, "p99={p99}");
+        assert_eq!(m.latencies().len(), 100);
+    }
+
+    #[test]
+    fn aggregate_merges_samples_sums_wall_and_drops_swap_markers() {
+        let a = ServiceMetrics::new();
+        let b = ServiceMetrics::new();
+        for _ in 0..4 {
+            a.record_iteration(10.0);
+            b.record_iteration(20.0);
+        }
+        a.record_swap(7, 100.0);
+        b.record_swap(3, 50.0);
+        let total = ServiceMetrics::aggregate([&a, &b]);
+        assert_eq!(total.iterations(), 8);
+        // Swap indices are per-session positions: meaningless in the
+        // concatenation, so the aggregate drops them...
+        assert_eq!(total.swap_iteration(), None);
+        // ...which keeps mean_before_after honest (all samples count
+        // as one population instead of splitting at a bogus index).
+        let (before, after) = total.mean_before_after();
+        assert!((before - 15.0).abs() < 1e-9);
+        assert!(after.is_none());
+        // Optimization wall time sums.
+        let j = total.to_json();
+        assert_eq!(j.get("optimize_wall_ms").and_then(|v| v.as_f64()), Some(150.0));
     }
 }

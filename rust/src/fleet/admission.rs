@@ -1,0 +1,133 @@
+//! Admission control and compile backpressure.
+//!
+//! A production fleet protects itself in two tiers:
+//!
+//! * **Serving admission** — a task whose placed device already has a
+//!   queue delay beyond the bound is rejected outright (the cluster
+//!   scheduler retries it elsewhere/later; this layer just refuses to
+//!   let one device's backlog grow without bound).
+//! * **Compile backpressure** — when the bounded compile-worker pool is
+//!   saturated, new graphs are still *served* (the XLA fallback needs no
+//!   exploration) but skip FusionStitching compilation. Optimization
+//!   yields to serving under overload — the fleet-wide version of §6's
+//!   "serve the fallback while tuning runs in background".
+
+/// Admission-control knobs.
+#[derive(Debug, Clone)]
+pub struct AdmissionConfig {
+    /// Reject a task when the queue delay at its placed device would
+    /// exceed this bound (ms).
+    pub max_queue_delay_ms: f64,
+    /// Skip FS compilation (fallback-only admission) when more compile
+    /// jobs than this are pending fleet-wide.
+    pub max_pending_compiles: usize,
+}
+
+impl Default for AdmissionConfig {
+    fn default() -> Self {
+        AdmissionConfig {
+            max_queue_delay_ms: 250.0,
+            max_pending_compiles: 16,
+        }
+    }
+}
+
+/// Outcome of one admission decision.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdmitDecision {
+    /// Serve, and compile/port when the plan store misses.
+    Admit,
+    /// Serve on the fallback only; no compile job is enqueued.
+    AdmitFallbackOnly,
+    /// Refuse the task (device backlog beyond the bound).
+    Reject,
+}
+
+/// Stateful admission controller with decision accounting.
+#[derive(Debug, Clone, Default)]
+pub struct AdmissionController {
+    config: AdmissionConfig,
+    admitted: usize,
+    fallback_only: usize,
+    rejected: usize,
+}
+
+// Manual Default above needs a concrete config default; derive would
+// require AdmissionConfig: Default, which it implements.
+
+impl AdmissionController {
+    pub fn new(config: AdmissionConfig) -> Self {
+        AdmissionController { config, ..Default::default() }
+    }
+
+    /// Decide one task given its placed queue delay, the pending
+    /// compile-job count, and whether serving it optimized would need a
+    /// new compile/port job (plan-store hits need none, so compile
+    /// backpressure never degrades them).
+    pub fn decide(
+        &mut self,
+        queue_delay_ms: f64,
+        pending_compiles: usize,
+        needs_compile: bool,
+    ) -> AdmitDecision {
+        if queue_delay_ms > self.config.max_queue_delay_ms {
+            self.rejected += 1;
+            return AdmitDecision::Reject;
+        }
+        if needs_compile && pending_compiles >= self.config.max_pending_compiles {
+            self.fallback_only += 1;
+            return AdmitDecision::AdmitFallbackOnly;
+        }
+        self.admitted += 1;
+        AdmitDecision::Admit
+    }
+
+    /// (admitted, fallback_only, rejected) counts so far.
+    pub fn counts(&self) -> (usize, usize, usize) {
+        (self.admitted, self.fallback_only, self.rejected)
+    }
+
+    /// The active configuration.
+    pub fn config(&self) -> &AdmissionConfig {
+        &self.config
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn normal_load_admits() {
+        let mut ac = AdmissionController::new(AdmissionConfig::default());
+        assert_eq!(ac.decide(0.0, 0, true), AdmitDecision::Admit);
+        assert_eq!(ac.counts(), (1, 0, 0));
+    }
+
+    #[test]
+    fn deep_backlog_rejects() {
+        let mut ac = AdmissionController::new(AdmissionConfig {
+            max_queue_delay_ms: 100.0,
+            ..Default::default()
+        });
+        assert_eq!(ac.decide(100.1, 0, true), AdmitDecision::Reject);
+        assert_eq!(ac.decide(99.9, 0, true), AdmitDecision::Admit);
+        assert_eq!(ac.counts(), (1, 0, 1));
+    }
+
+    #[test]
+    fn compile_saturation_degrades_to_fallback_only() {
+        let mut ac = AdmissionController::new(AdmissionConfig {
+            max_pending_compiles: 4,
+            ..Default::default()
+        });
+        assert_eq!(ac.decide(0.0, 4, true), AdmitDecision::AdmitFallbackOnly);
+        assert_eq!(ac.decide(0.0, 3, true), AdmitDecision::Admit);
+        // Plan-store hits need no compile: backpressure never degrades
+        // them.
+        assert_eq!(ac.decide(0.0, 100, false), AdmitDecision::Admit);
+        // Rejection takes precedence over backpressure.
+        assert_eq!(ac.decide(1e9, 100, true), AdmitDecision::Reject);
+        assert_eq!(ac.counts(), (2, 1, 1));
+    }
+}

@@ -1,0 +1,272 @@
+//! Fleet-wide report: the §7.2 production numbers, but measured through
+//! the coordinator path instead of asserted.
+
+use crate::util::{fmt_f, JsonValue, Summary, Table};
+
+/// Per-device utilization line.
+#[derive(Debug, Clone)]
+pub struct DeviceUtilization {
+    pub id: usize,
+    pub class: &'static str,
+    pub tasks: usize,
+    pub busy_ms: f64,
+    /// busy / (makespan × capacity).
+    pub utilization: f64,
+}
+
+/// Everything one trace replay produces. All quantities are virtual-time
+/// deterministic: two replays of the same (seed, config) are
+/// byte-identical, which the production bench asserts.
+#[derive(Debug, Clone)]
+pub struct FleetReport {
+    pub tasks: usize,
+    pub admitted: usize,
+    pub fallback_only: usize,
+    pub rejected: usize,
+    pub exact_hits: usize,
+    pub port_hits: usize,
+    pub misses: usize,
+    pub explore_jobs: usize,
+    pub port_jobs: usize,
+    pub port_failures: usize,
+    pub fs_vetoes: usize,
+    /// Tasks whose served GPU time exceeded their fallback GPU time.
+    /// The never-negative guard must keep this at zero (§7.2).
+    pub regressions: usize,
+    /// Compile jobs run by their hash-affinity owner worker vs. taken
+    /// by a different (earliest-free) worker. In the virtual-time
+    /// replay assignment is immediate, so this measures owner-affinity
+    /// misses — not deque backlog relief (see `fleet::queue` docs).
+    pub compile_owner_runs: usize,
+    pub compile_affinity_misses: usize,
+    /// Total GPU time actually spent serving (FS where available).
+    pub served_gpu_ms: f64,
+    /// GPU time the same trace would have cost on the fallback alone.
+    pub fallback_gpu_ms: f64,
+    /// Queue-wait distribution (arrival → slot start) over served tasks.
+    pub wait: Summary,
+    /// Per-iteration device latency percentiles, fleet-wide (aggregated
+    /// per-device `ServiceMetrics`).
+    pub iter_p50_ms: f64,
+    pub iter_p99_ms: f64,
+    /// Virtual time at which the last task finished.
+    pub makespan_ms: f64,
+    pub per_device: Vec<DeviceUtilization>,
+}
+
+impl FleetReport {
+    /// GPU time the fleet saved versus fallback-only serving.
+    pub fn saved_gpu_ms(&self) -> f64 {
+        self.fallback_gpu_ms - self.served_gpu_ms
+    }
+
+    /// Fraction of fallback GPU time saved.
+    pub fn saved_frac(&self) -> f64 {
+        if self.fallback_gpu_ms <= 0.0 {
+            0.0
+        } else {
+            self.saved_gpu_ms() / self.fallback_gpu_ms
+        }
+    }
+
+    /// Tasks that were actually served (admitted either way).
+    pub fn served_tasks(&self) -> usize {
+        self.admitted + self.fallback_only
+    }
+
+    /// Project the per-task saving to a monthly task volume, in GPU
+    /// hours — the paper's "~7,000 GPU hours for ~30,000 tasks" frame.
+    /// The trace's tasks are minutes-scale; the projection scales each
+    /// task's saving by `hours_per_task` over its simulated GPU time.
+    pub fn projected_gpu_hours_saved(&self, tasks_per_month: f64, hours_per_task: f64) -> f64 {
+        if self.served_tasks() == 0 {
+            return 0.0;
+        }
+        tasks_per_month * hours_per_task * self.saved_frac()
+    }
+
+    /// JSON snapshot (deterministic field order and values).
+    pub fn to_json(&self) -> JsonValue {
+        let mut o = JsonValue::obj();
+        o.set("tasks", self.tasks)
+            .set("admitted", self.admitted)
+            .set("fallback_only", self.fallback_only)
+            .set("rejected", self.rejected)
+            .set("exact_hits", self.exact_hits)
+            .set("port_hits", self.port_hits)
+            .set("misses", self.misses)
+            .set("explore_jobs", self.explore_jobs)
+            .set("port_jobs", self.port_jobs)
+            .set("port_failures", self.port_failures)
+            .set("fs_vetoes", self.fs_vetoes)
+            .set("regressions", self.regressions)
+            .set("compile_owner_runs", self.compile_owner_runs)
+            .set("compile_affinity_misses", self.compile_affinity_misses)
+            .set("served_gpu_ms", self.served_gpu_ms)
+            .set("fallback_gpu_ms", self.fallback_gpu_ms)
+            .set("saved_gpu_ms", self.saved_gpu_ms())
+            .set("saved_frac", self.saved_frac())
+            .set("wait_p50_ms", self.wait.p50)
+            .set("wait_p99_ms", self.wait.p99)
+            .set("wait_max_ms", self.wait.max)
+            .set("iter_p50_ms", self.iter_p50_ms)
+            .set("iter_p99_ms", self.iter_p99_ms)
+            .set("makespan_ms", self.makespan_ms);
+        let devices: Vec<JsonValue> = self
+            .per_device
+            .iter()
+            .map(|d| {
+                let mut dj = JsonValue::obj();
+                dj.set("id", d.id)
+                    .set("class", d.class)
+                    .set("tasks", d.tasks)
+                    .set("busy_ms", d.busy_ms)
+                    .set("utilization", d.utilization);
+                dj
+            })
+            .collect();
+        o.set("devices", JsonValue::Arr(devices));
+        o
+    }
+
+    /// Human-readable report (tables + headline numbers).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        let mut t = Table::new(vec!["metric", "value"]);
+        t.row(vec!["tasks".to_string(), self.tasks.to_string()]);
+        t.row(vec!["admitted".to_string(), self.admitted.to_string()]);
+        t.row(vec![
+            "admitted fallback-only (backpressure)".to_string(),
+            self.fallback_only.to_string(),
+        ]);
+        t.row(vec!["rejected (admission)".to_string(), self.rejected.to_string()]);
+        t.row(vec!["plan-store exact hits".to_string(), self.exact_hits.to_string()]);
+        t.row(vec![
+            "plan-store portability hits".to_string(),
+            self.port_hits.to_string(),
+        ]);
+        t.row(vec!["plan-store misses".to_string(), self.misses.to_string()]);
+        t.row(vec!["full explorations".to_string(), self.explore_jobs.to_string()]);
+        t.row(vec!["cross-device ports".to_string(), self.port_jobs.to_string()]);
+        t.row(vec!["port failures (re-explored)".to_string(), self.port_failures.to_string()]);
+        t.row(vec!["never-negative vetoes".to_string(), self.fs_vetoes.to_string()]);
+        t.row(vec!["FS regressions".to_string(), self.regressions.to_string()]);
+        t.row(vec![
+            "compile jobs owner-run/affinity-miss".to_string(),
+            format!("{}/{}", self.compile_owner_runs, self.compile_affinity_misses),
+        ]);
+        t.row(vec![
+            "queue wait p50/p99".to_string(),
+            format!("{} / {} ms", fmt_f(self.wait.p50, 3), fmt_f(self.wait.p99, 3)),
+        ]);
+        t.row(vec![
+            "iteration latency p50/p99".to_string(),
+            format!("{} / {} ms", fmt_f(self.iter_p50_ms, 3), fmt_f(self.iter_p99_ms, 3)),
+        ]);
+        t.row(vec![
+            "GPU ms served / fallback-only".to_string(),
+            format!(
+                "{} / {}",
+                fmt_f(self.served_gpu_ms, 1),
+                fmt_f(self.fallback_gpu_ms, 1)
+            ),
+        ]);
+        t.row(vec![
+            "GPU time saved".to_string(),
+            format!(
+                "{} ms ({}%)",
+                fmt_f(self.saved_gpu_ms(), 1),
+                fmt_f(self.saved_frac() * 100.0, 1)
+            ),
+        ]);
+        t.row(vec!["makespan".to_string(), format!("{} ms", fmt_f(self.makespan_ms, 1))]);
+        out.push_str(&t.render());
+        out.push('\n');
+
+        let mut d = Table::new(vec!["device", "class", "tasks", "busy ms", "util %"]);
+        for dev in &self.per_device {
+            d.row(vec![
+                format!("dev{}", dev.id),
+                dev.class.to_string(),
+                dev.tasks.to_string(),
+                fmt_f(dev.busy_ms, 1),
+                fmt_f(dev.utilization * 100.0, 1),
+            ]);
+        }
+        out.push_str(&d.render());
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report() -> FleetReport {
+        FleetReport {
+            tasks: 10,
+            admitted: 7,
+            fallback_only: 2,
+            rejected: 1,
+            exact_hits: 4,
+            port_hits: 2,
+            misses: 3,
+            explore_jobs: 3,
+            port_jobs: 2,
+            port_failures: 0,
+            fs_vetoes: 1,
+            regressions: 0,
+            compile_owner_runs: 3,
+            compile_affinity_misses: 2,
+            served_gpu_ms: 60.0,
+            fallback_gpu_ms: 100.0,
+            wait: crate::util::summarize(&[0.0, 1.0, 2.0]),
+            iter_p50_ms: 0.5,
+            iter_p99_ms: 1.5,
+            makespan_ms: 123.0,
+            per_device: vec![DeviceUtilization {
+                id: 0,
+                class: "V100",
+                tasks: 9,
+                busy_ms: 61.0,
+                utilization: 0.5,
+            }],
+        }
+    }
+
+    #[test]
+    fn savings_math() {
+        let r = report();
+        assert_eq!(r.saved_gpu_ms(), 40.0);
+        assert!((r.saved_frac() - 0.4).abs() < 1e-12);
+        assert_eq!(r.served_tasks(), 9);
+        // 30k tasks × 2 h × 40% = 24,000 GPU hours.
+        let h = r.projected_gpu_hours_saved(30_000.0, 2.0);
+        assert!((h - 24_000.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn json_has_headline_fields() {
+        let j = report().to_json();
+        for key in [
+            "tasks",
+            "port_hits",
+            "regressions",
+            "wait_p50_ms",
+            "wait_p99_ms",
+            "saved_frac",
+            "devices",
+        ] {
+            assert!(j.get(key).is_some(), "missing {key}");
+        }
+        assert_eq!(j.get("regressions").and_then(|v| v.as_usize()), Some(0));
+    }
+
+    #[test]
+    fn render_mentions_portability_and_percentiles() {
+        let text = report().render();
+        assert!(text.contains("portability"));
+        assert!(text.contains("p50/p99"));
+        assert!(text.contains("V100"));
+    }
+}

@@ -1,0 +1,40 @@
+//! Fleet serving (§6–§7.2 at cluster scale): multi-device, multi-tenant
+//! JIT-optimized serving with cross-device plan portability.
+//!
+//! The paper's production deployment ran FusionStitching on "a
+//! production cluster [with] thousands of GPUs" serving "~30,000 tasks
+//! per month", saving "~7,000 GPU hours" with *zero* negative
+//! optimizations. This subsystem makes that claim executable:
+//!
+//! * [`registry`] — the mixed V100/T4 device population with per-device
+//!   serving capacity.
+//! * [`queue`] — the work-stealing deque set under the bounded
+//!   compile-worker pool that throttles FS exploration.
+//! * [`store`] — the shared cross-device plan store: a plan explored on
+//!   one device class is *ported* to another by re-running only the
+//!   §4.2 launch-dimension tuner ([`crate::pipeline::port_program`]).
+//! * [`admission`] — admission control (backlog rejection) and compile
+//!   backpressure (serve fallback-only under saturation).
+//! * [`sim`] — deterministic seeded traffic traces at the paper's task
+//!   scale.
+//! * [`service`] — [`FleetService`]: replays a trace through the real
+//!   optimization pipeline in virtual time.
+//! * [`metrics`] — the fleet-wide report: GPU hours saved, regression
+//!   counts (must be zero), cache/portability hit rates, queue-latency
+//!   percentiles.
+
+pub mod admission;
+pub mod metrics;
+pub mod queue;
+pub mod registry;
+pub mod service;
+pub mod sim;
+pub mod store;
+
+pub use admission::{AdmissionConfig, AdmissionController, AdmitDecision};
+pub use metrics::{DeviceUtilization, FleetReport};
+pub use queue::{QueueStats, WorkStealingQueue};
+pub use registry::{DeviceId, DeviceRegistry, RegisteredDevice};
+pub use service::{FleetOptions, FleetService};
+pub use sim::{build_templates, generate_trace, FleetTask, TrafficConfig};
+pub use store::{PlanLookup, SharedPlanStore, StoreStats};

@@ -1,0 +1,183 @@
+//! Work-stealing queue for the bounded compile-worker pool.
+//!
+//! FusionStitching exploration is orders of magnitude more expensive
+//! than serving an iteration, so a fleet throttles it through a small
+//! worker pool while the XLA fallback serves immediately (§6's
+//! async-compilation, fleet-wide). Each worker owns a deque: it pushes
+//! and pops its own work LIFO (locality — a template's port jobs tend
+//! to land on the owner that explored it), and when idle steals FIFO
+//! from the most-backlogged victim, which keeps a hot owner from
+//! starving the rest of the fleet's compilations.
+//!
+//! The implementation is deterministic and single-threaded — the fleet
+//! simulator advances virtual time, so lock-free deques would add
+//! nondeterminism for nothing. Fairness is what matters and is tested.
+//!
+//! Integration note: in the virtual-time [`super::service`], a compile
+//! job's assignment is a timestamp computation, so jobs route through
+//! push/pop immediately and *backlog lives in virtual time* (worker
+//! `free_ms` beyond now), not in the deques; the steal counter there
+//! measures owner-affinity misses (the earliest-free worker taking
+//! another owner's job). The multi-item LIFO/FIFO/longest-victim
+//! semantics below are what a wall-clock executor (ROADMAP open item)
+//! will drain, and are exercised directly by the unit tests.
+
+use std::collections::VecDeque;
+
+/// Push/pop/steal accounting.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct QueueStats {
+    pub pushes: usize,
+    pub local_pops: usize,
+    pub steals: usize,
+}
+
+/// Per-worker deques with LIFO local pop and FIFO stealing.
+#[derive(Debug, Clone)]
+pub struct WorkStealingQueue<T> {
+    deques: Vec<VecDeque<T>>,
+    stats: QueueStats,
+}
+
+impl<T> WorkStealingQueue<T> {
+    /// Create a queue set for `workers` workers (at least one).
+    pub fn new(workers: usize) -> Self {
+        assert!(workers > 0, "work-stealing queue needs at least one worker");
+        WorkStealingQueue {
+            deques: (0..workers).map(|_| VecDeque::new()).collect(),
+            stats: QueueStats::default(),
+        }
+    }
+
+    /// Number of workers.
+    pub fn workers(&self) -> usize {
+        self.deques.len()
+    }
+
+    /// Enqueue an item on `worker`'s deque (index wraps).
+    pub fn push(&mut self, worker: usize, item: T) {
+        let w = worker % self.deques.len();
+        self.deques[w].push_back(item);
+        self.stats.pushes += 1;
+    }
+
+    /// Dequeue for `worker`: LIFO from its own deque; when empty, steal
+    /// FIFO from the victim with the longest backlog (lowest index on
+    /// ties, so replay is deterministic). `None` when all deques are
+    /// empty.
+    pub fn pop(&mut self, worker: usize) -> Option<T> {
+        let w = worker % self.deques.len();
+        if let Some(item) = self.deques[w].pop_back() {
+            self.stats.local_pops += 1;
+            return Some(item);
+        }
+        let mut victim: Option<usize> = None;
+        for (i, dq) in self.deques.iter().enumerate() {
+            if dq.is_empty() {
+                continue;
+            }
+            match victim {
+                Some(v) if self.deques[v].len() >= dq.len() => {}
+                _ => victim = Some(i),
+            }
+        }
+        let v = victim?;
+        let item = self.deques[v].pop_front();
+        if item.is_some() {
+            self.stats.steals += 1;
+        }
+        item
+    }
+
+    /// Total queued items across all deques.
+    pub fn len(&self) -> usize {
+        self.deques.iter().map(|d| d.len()).sum()
+    }
+
+    /// True when no work is queued anywhere.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Backlog of one worker's deque.
+    pub fn backlog(&self, worker: usize) -> usize {
+        self.deques[worker % self.deques.len()].len()
+    }
+
+    /// Accounting snapshot.
+    pub fn stats(&self) -> QueueStats {
+        self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn own_pops_are_lifo_steals_are_fifo() {
+        let mut q = WorkStealingQueue::new(2);
+        q.push(0, 1);
+        q.push(0, 2);
+        q.push(0, 3);
+        // Owner pops newest first.
+        assert_eq!(q.pop(0), Some(3));
+        // Thief steals oldest first.
+        assert_eq!(q.pop(1), Some(1));
+        assert_eq!(q.pop(1), Some(2));
+        assert_eq!(q.pop(0), None);
+        assert_eq!(q.stats().local_pops, 1);
+        assert_eq!(q.stats().steals, 2);
+    }
+
+    #[test]
+    fn stealing_spreads_a_hot_owner_evenly() {
+        // All 100 jobs land on worker 0; four workers drain round-robin.
+        // Fairness: every worker ends up doing an equal share.
+        let mut q = WorkStealingQueue::new(4);
+        for i in 0..100 {
+            q.push(0, i);
+        }
+        let mut done = [0usize; 4];
+        let mut w = 0;
+        while !q.is_empty() {
+            if q.pop(w).is_some() {
+                done[w] += 1;
+            }
+            w = (w + 1) % 4;
+        }
+        assert_eq!(done, [25, 25, 25, 25], "unfair drain: {done:?}");
+        assert_eq!(q.stats().local_pops, 25);
+        assert_eq!(q.stats().steals, 75);
+        assert_eq!(q.stats().pushes, 100);
+    }
+
+    #[test]
+    fn steals_prefer_longest_backlog() {
+        let mut q = WorkStealingQueue::new(3);
+        q.push(0, 10);
+        q.push(1, 20);
+        q.push(1, 21);
+        // Worker 2 steals from the most backlogged deque (worker 1).
+        assert_eq!(q.pop(2), Some(20));
+        // Now both have 1; tie resolves to the lowest index (worker 0).
+        assert_eq!(q.pop(2), Some(10));
+        assert_eq!(q.pop(2), Some(21));
+    }
+
+    #[test]
+    fn worker_index_wraps() {
+        let mut q = WorkStealingQueue::new(2);
+        q.push(5, 42); // 5 % 2 == 1
+        assert_eq!(q.backlog(1), 1);
+        assert_eq!(q.pop(3), Some(42)); // 3 % 2 == 1: own pop
+        assert_eq!(q.stats().local_pops, 1);
+    }
+
+    #[test]
+    fn empty_pop_returns_none() {
+        let mut q: WorkStealingQueue<u32> = WorkStealingQueue::new(1);
+        assert_eq!(q.pop(0), None);
+        assert!(q.is_empty());
+    }
+}

@@ -1,0 +1,131 @@
+//! Device registry: the mixed-hardware population a fleet serves on.
+//!
+//! The paper's production cluster (§7.2) spans "thousands of GPUs of
+//! different architecture generations"; the registry models that as a
+//! set of device *instances*, each carrying a [`DeviceSpec`] (its
+//! class — V100, T4, ...) and a serving capacity (concurrent session
+//! slots). Plans are tuned per device *class* and shared across
+//! instances of that class (see [`super::store`]).
+
+use crate::gpu::DeviceSpec;
+
+/// Index of a registered device instance.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct DeviceId(pub usize);
+
+/// One physical device in the fleet.
+#[derive(Debug, Clone)]
+pub struct RegisteredDevice {
+    pub id: DeviceId,
+    pub spec: DeviceSpec,
+    /// Concurrent serving slots (sessions this device serves at once).
+    pub capacity: usize,
+}
+
+impl RegisteredDevice {
+    /// Device class used for plan sharing (the spec name).
+    pub fn class(&self) -> &'static str {
+        self.spec.name
+    }
+}
+
+/// The fleet's device population.
+#[derive(Debug, Clone, Default)]
+pub struct DeviceRegistry {
+    devices: Vec<RegisteredDevice>,
+}
+
+impl DeviceRegistry {
+    /// Empty registry.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register one device instance; returns its id.
+    pub fn register(&mut self, spec: DeviceSpec, capacity: usize) -> DeviceId {
+        assert!(capacity > 0, "device capacity must be positive");
+        let id = DeviceId(self.devices.len());
+        self.devices.push(RegisteredDevice { id, spec, capacity });
+        id
+    }
+
+    /// The paper's mixed population: `v100s` V100 instances followed by
+    /// `t4s` T4 instances, all with the same per-device capacity.
+    pub fn mixed(v100s: usize, t4s: usize, capacity: usize) -> Self {
+        let mut reg = Self::new();
+        for _ in 0..v100s {
+            reg.register(DeviceSpec::v100(), capacity);
+        }
+        for _ in 0..t4s {
+            reg.register(DeviceSpec::t4(), capacity);
+        }
+        reg
+    }
+
+    /// Fetch one device by id.
+    pub fn device(&self, id: DeviceId) -> &RegisteredDevice {
+        &self.devices[id.0]
+    }
+
+    /// All registered devices in registration order.
+    pub fn devices(&self) -> &[RegisteredDevice] {
+        &self.devices
+    }
+
+    /// Number of device instances.
+    pub fn len(&self) -> usize {
+        self.devices.len()
+    }
+
+    /// True when no device is registered.
+    pub fn is_empty(&self) -> bool {
+        self.devices.is_empty()
+    }
+
+    /// Total serving slots across the fleet.
+    pub fn total_capacity(&self) -> usize {
+        self.devices.iter().map(|d| d.capacity).sum()
+    }
+
+    /// Distinct device classes in registration order.
+    pub fn classes(&self) -> Vec<&'static str> {
+        let mut out: Vec<&'static str> = Vec::new();
+        for d in &self.devices {
+            if !out.contains(&d.class()) {
+                out.push(d.class());
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mixed_population_shape() {
+        let reg = DeviceRegistry::mixed(3, 2, 4);
+        assert_eq!(reg.len(), 5);
+        assert_eq!(reg.total_capacity(), 20);
+        assert_eq!(reg.device(DeviceId(0)).class(), "V100");
+        assert_eq!(reg.device(DeviceId(4)).class(), "T4");
+        assert_eq!(reg.classes(), vec!["V100", "T4"]);
+    }
+
+    #[test]
+    fn ids_are_sequential() {
+        let mut reg = DeviceRegistry::new();
+        let a = reg.register(DeviceSpec::v100(), 1);
+        let b = reg.register(DeviceSpec::t4(), 2);
+        assert_eq!(a, DeviceId(0));
+        assert_eq!(b, DeviceId(1));
+        assert_eq!(reg.device(b).capacity, 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "capacity")]
+    fn zero_capacity_rejected() {
+        DeviceRegistry::new().register(DeviceSpec::v100(), 0);
+    }
+}

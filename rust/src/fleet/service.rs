@@ -1,0 +1,609 @@
+//! The fleet service: multi-device, multi-tenant serving on top of the
+//! coordinator's primitives.
+//!
+//! One [`FleetService`] owns a [`DeviceRegistry`], a bounded
+//! compile-worker pool fed through a [`WorkStealingQueue`], a
+//! [`SharedPlanStore`] making plans portable across device classes, and
+//! an [`AdmissionController`]. A seeded task trace (see [`super::sim`])
+//! is replayed in **virtual time**: serving latencies come from the
+//! per-device timing simulator, compile latencies from a deterministic
+//! cost model, so two replays of the same trace are byte-identical —
+//! while every *program* on the path (fallbacks, explored plans, ported
+//! plans) is produced by the real pipeline: `baselines::xla`,
+//! `explorer::explore`, `codegen::tuner`, `pipeline::port_program`, and
+//! the coordinator's never-negative guard.
+//!
+//! Per task the flow mirrors §6/§7.2 at fleet scale:
+//!
+//! 1. **Place** on the least-loaded serving slot (mixed V100/T4).
+//! 2. **Admit** — reject on deep backlog; under compile saturation
+//!    serve the fallback without enqueueing new optimization work.
+//! 3. **Resolve a plan** — exact store hit (serve optimized, possibly
+//!    hot-swapping when the producing compile finishes mid-task), a
+//!    cross-class *port* (launch-dim re-tune only), or a full
+//!    exploration on the worker pool.
+//! 4. **Serve** iterations, fallback until the plan's virtual ready
+//!    time, optimized after — never-negative guarded, so a task can
+//!    never regress past its fallback.
+
+use super::admission::{AdmissionConfig, AdmissionController, AdmitDecision};
+use super::metrics::{DeviceUtilization, FleetReport};
+use super::queue::WorkStealingQueue;
+use super::registry::DeviceRegistry;
+use super::sim::FleetTask;
+use super::store::{PlanLookup, SharedPlanStore};
+use crate::coordinator::{
+    guard_never_negative, tune_with_guards, GraphKey, ServiceMetrics, ServiceOptions,
+};
+use crate::explorer::ExploreOptions;
+use crate::gpu::{DeviceSpec, SimConfig, Simulator};
+use crate::pipeline::{self, OptimizedProgram, Tech};
+use crate::util::summarize;
+use crate::workloads::{LoopKind, Workload};
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// Fleet configuration.
+#[derive(Debug, Clone)]
+pub struct FleetOptions {
+    pub registry: DeviceRegistry,
+    /// Bounded compile pool size (the throttle on FS exploration).
+    pub compile_workers: usize,
+    pub admission: AdmissionConfig,
+    pub explore: ExploreOptions,
+    /// §7.2 production guard: never swap in a plan estimated slower
+    /// than the fallback on its device.
+    pub never_negative: bool,
+    /// Virtual compile-cost model: a full exploration costs
+    /// `base + per_op × |V|` ms of worker time.
+    pub explore_cost_base_ms: f64,
+    pub explore_cost_per_op_ms: f64,
+    /// A cross-class port (launch-dim re-tune only) costs this fraction
+    /// of the full exploration.
+    pub port_cost_frac: f64,
+}
+
+impl Default for FleetOptions {
+    fn default() -> Self {
+        FleetOptions {
+            registry: DeviceRegistry::mixed(2, 2, 2),
+            compile_workers: 2,
+            admission: AdmissionConfig::default(),
+            explore: ExploreOptions::default(),
+            never_negative: true,
+            explore_cost_base_ms: 10.0,
+            explore_cost_per_op_ms: 1.0,
+            port_cost_frac: 0.1,
+        }
+    }
+}
+
+/// A queued compile/port job (identity used for routing + debugging).
+#[derive(Debug, Clone, Copy)]
+struct CompileJob {
+    key: u64,
+    class: &'static str,
+}
+
+/// The multi-device serving layer.
+pub struct FleetService {
+    opts: FleetOptions,
+    templates: Vec<Arc<Workload>>,
+    template_keys: Vec<GraphKey>,
+    store: SharedPlanStore,
+    admission: AdmissionController,
+    queue: WorkStealingQueue<CompileJob>,
+    /// Virtual time each compile worker frees up.
+    worker_free_ms: Vec<f64>,
+    /// Virtual finish time of every compile job ever scheduled (pending
+    /// count = finishes still in the future).
+    compile_finishes: Vec<f64>,
+    /// Per device instance: serving slots' next-free times.
+    slots: Vec<Vec<f64>>,
+    device_tasks: Vec<usize>,
+    device_busy_ms: Vec<f64>,
+    /// Per device instance: iteration latencies (coordinator metrics,
+    /// aggregated fleet-wide in the report).
+    device_metrics: Vec<ServiceMetrics>,
+    /// (template, class) → fallback program + per-iteration ms.
+    fallbacks: HashMap<(usize, &'static str), (Arc<OptimizedProgram>, f64)>,
+    /// (graph key, class) → per-iteration ms of the stored program.
+    latency: HashMap<(u64, &'static str), f64>,
+    // Accumulators.
+    submitted: usize,
+    explore_jobs: usize,
+    port_jobs: usize,
+    port_failures: usize,
+    fs_vetoes: usize,
+    regressions: usize,
+    served_gpu_ms: f64,
+    fallback_gpu_ms: f64,
+    waits_ms: Vec<f64>,
+    makespan_ms: f64,
+}
+
+impl FleetService {
+    /// Build a fleet over a template population (tasks reference
+    /// templates by index; see [`super::sim::build_templates`]).
+    pub fn new(opts: FleetOptions, templates: Vec<Workload>) -> Self {
+        assert!(!opts.registry.is_empty(), "fleet needs at least one device");
+        assert!(opts.compile_workers >= 1, "fleet needs at least one compile worker");
+        assert!(!templates.is_empty(), "fleet needs at least one template");
+        let template_keys = templates.iter().map(|w| GraphKey::of(&w.graph)).collect();
+        let slots = opts
+            .registry
+            .devices()
+            .iter()
+            .map(|d| vec![0.0f64; d.capacity])
+            .collect();
+        let n_dev = opts.registry.len();
+        FleetService {
+            admission: AdmissionController::new(opts.admission.clone()),
+            queue: WorkStealingQueue::new(opts.compile_workers),
+            worker_free_ms: vec![0.0; opts.compile_workers],
+            compile_finishes: Vec::new(),
+            slots,
+            device_tasks: vec![0; n_dev],
+            device_busy_ms: vec![0.0; n_dev],
+            device_metrics: (0..n_dev).map(|_| ServiceMetrics::new()).collect(),
+            fallbacks: HashMap::new(),
+            latency: HashMap::new(),
+            submitted: 0,
+            explore_jobs: 0,
+            port_jobs: 0,
+            port_failures: 0,
+            fs_vetoes: 0,
+            regressions: 0,
+            served_gpu_ms: 0.0,
+            fallback_gpu_ms: 0.0,
+            waits_ms: Vec::new(),
+            makespan_ms: 0.0,
+            templates: templates.into_iter().map(Arc::new).collect(),
+            template_keys,
+            store: SharedPlanStore::new(),
+            opts,
+        }
+    }
+
+    /// Replay a trace (must be sorted by arrival) and report.
+    pub fn run_trace(&mut self, trace: &[FleetTask]) -> FleetReport {
+        let mut last = 0.0f64;
+        for task in trace {
+            assert!(
+                task.arrival_ms >= last,
+                "trace must be sorted by arrival time"
+            );
+            last = task.arrival_ms;
+            self.submit(task);
+        }
+        self.report()
+    }
+
+    /// Shared plan store (inspection).
+    pub fn store(&self) -> &SharedPlanStore {
+        &self.store
+    }
+
+    /// Per-iteration simulated latency of a program on a device.
+    fn iter_ms(spec: &DeviceSpec, prog: &OptimizedProgram, loop_kind: LoopKind) -> f64 {
+        Simulator::new(spec.clone(), SimConfig::xla_runtime())
+            .run(&prog.kernels, loop_kind)
+            .e2e_ms()
+    }
+
+    fn explore_cost_ms(&self, w: &Workload) -> f64 {
+        self.opts.explore_cost_base_ms + self.opts.explore_cost_per_op_ms * w.graph.len() as f64
+    }
+
+    /// XLA fallback program + per-iteration ms for (template, class) —
+    /// computed once, shared by every instance of the class.
+    fn fallback_for(&mut self, template: usize, spec: &DeviceSpec) -> (Arc<OptimizedProgram>, f64) {
+        if let Some(v) = self.fallbacks.get(&(template, spec.name)) {
+            return v.clone();
+        }
+        let w = Arc::clone(&self.templates[template]);
+        let prog = Arc::new(pipeline::optimize(&w, spec, Tech::Xla, &self.opts.explore));
+        let ms = Self::iter_ms(spec, &prog, w.loop_kind);
+        self.fallbacks.insert((template, spec.name), (Arc::clone(&prog), ms));
+        (prog, ms)
+    }
+
+    /// Route one job through the work-stealing pool; returns its virtual
+    /// finish time. Jobs arrive in time order and assignment is a pure
+    /// timestamp computation, so each job is pushed and immediately
+    /// taken by the earliest-free worker — backlog manifests as worker
+    /// `free_ms` beyond `enqueue_at`, and the queue's steal counter
+    /// records owner-affinity misses (worker != hash-chosen owner).
+    fn schedule_compile(
+        &mut self,
+        enqueue_at: f64,
+        key: GraphKey,
+        class: &'static str,
+        cost_ms: f64,
+    ) -> f64 {
+        let owner = (key.0 as usize ^ class.len()) % self.opts.compile_workers;
+        self.queue.push(owner, CompileJob { key: key.0, class });
+        let mut w = 0;
+        for i in 1..self.worker_free_ms.len() {
+            if self.worker_free_ms[i] < self.worker_free_ms[w] {
+                w = i;
+            }
+        }
+        let job = self.queue.pop(w).expect("job just queued");
+        debug_assert_eq!((job.key, job.class), (key.0, class));
+        let start = enqueue_at.max(self.worker_free_ms[w]);
+        let finish = start + cost_ms;
+        self.worker_free_ms[w] = finish;
+        self.compile_finishes.push(finish);
+        finish
+    }
+
+    /// Full exploration on the worker pool: real FS optimization with
+    /// the coordinator's guards; the store records what the class will
+    /// serve (FS plan, or the fallback when vetoed). Returns (virtual
+    /// ready time, per-iteration ms once ready).
+    fn run_explore(
+        &mut self,
+        template: usize,
+        spec: &DeviceSpec,
+        key: GraphKey,
+        fallback: &Arc<OptimizedProgram>,
+        fb_ms: f64,
+        enqueue_at: f64,
+    ) -> (f64, f64) {
+        let w = Arc::clone(&self.templates[template]);
+        let cost = self.explore_cost_ms(&w);
+        let ready = self.schedule_compile(enqueue_at, key, spec.name, cost);
+        self.explore_jobs += 1;
+        let svc_opts = ServiceOptions {
+            device: spec.clone(),
+            explore: self.opts.explore.clone(),
+            async_compile: false,
+            never_negative: self.opts.never_negative,
+            inject_compile_failure: false,
+            plan_store: None,
+        };
+        match tune_with_guards(&w, &svc_opts, fallback) {
+            Some(prog) => {
+                let ms = Self::iter_ms(spec, &prog, w.loop_kind);
+                self.store.insert(key, spec.name, prog, ready);
+                self.latency.insert((key.0, spec.name), ms);
+                (ready, ms)
+            }
+            None => {
+                // Vetoed (or crashed): production pins the fallback for
+                // this class so later tasks skip the re-tuning attempt.
+                self.fs_vetoes += 1;
+                self.store.insert(key, spec.name, Arc::clone(fallback), ready);
+                self.latency.insert((key.0, spec.name), fb_ms);
+                (ready, fb_ms)
+            }
+        }
+    }
+
+    /// Cross-class port: re-tune launch dims only (a fraction of the
+    /// exploration cost), guard, store. Falls back to a full
+    /// exploration when the plan cannot schedule on the target class.
+    #[allow(clippy::too_many_arguments)]
+    fn run_port(
+        &mut self,
+        template: usize,
+        spec: &DeviceSpec,
+        key: GraphKey,
+        source: &Arc<OptimizedProgram>,
+        available_ms: f64,
+        fallback: &Arc<OptimizedProgram>,
+        fb_ms: f64,
+        now: f64,
+    ) -> (f64, f64) {
+        let w = Arc::clone(&self.templates[template]);
+        let cost = self.explore_cost_ms(&w) * self.opts.port_cost_frac;
+        let enqueue_at = now.max(available_ms);
+        let ready = self.schedule_compile(enqueue_at, key, spec.name, cost);
+        self.port_jobs += 1;
+        match pipeline::port_program(&w.graph, source, spec, w.loop_kind) {
+            Some(ported) => {
+                let accepted = if self.opts.never_negative {
+                    guard_never_negative(&w, spec, ported, fallback)
+                } else {
+                    Some(Arc::new(ported))
+                };
+                match accepted {
+                    Some(prog) => {
+                        let ms = Self::iter_ms(spec, &prog, w.loop_kind);
+                        self.store.insert(key, spec.name, prog, ready);
+                        self.latency.insert((key.0, spec.name), ms);
+                        (ready, ms)
+                    }
+                    None => {
+                        self.fs_vetoes += 1;
+                        self.store.insert(key, spec.name, Arc::clone(fallback), ready);
+                        self.latency.insert((key.0, spec.name), fb_ms);
+                        (ready, fb_ms)
+                    }
+                }
+            }
+            None => {
+                // Unschedulable on this class: pay the full exploration,
+                // starting where the failed port left off.
+                self.port_failures += 1;
+                self.run_explore(template, spec, key, fallback, fb_ms, ready)
+            }
+        }
+    }
+
+    /// Process one task arrival.
+    fn submit(&mut self, task: &FleetTask) {
+        let now = task.arrival_ms;
+        self.submitted += 1;
+
+        // 1. Place: least-loaded serving slot fleet-wide (earliest
+        // free; ties resolve to the lowest device/slot index).
+        let (mut best_d, mut best_s) = (0usize, 0usize);
+        for (d, slots) in self.slots.iter().enumerate() {
+            for (s, &free) in slots.iter().enumerate() {
+                if free < self.slots[best_d][best_s] {
+                    (best_d, best_s) = (d, s);
+                }
+            }
+        }
+        let start = now.max(self.slots[best_d][best_s]);
+        let wait = start - now;
+        let spec = self.opts.registry.devices()[best_d].spec.clone();
+        let key = self.template_keys[task.template];
+
+        // 2. Resolve plan availability + admission. Arrivals are
+        // monotone, so finished compiles can be dropped as we go
+        // (keeps the pending count O(pending), not O(all jobs ever)).
+        let lookup = self.store.lookup(key, spec.name);
+        self.compile_finishes.retain(|&f| f > now);
+        let pending = self.compile_finishes.len();
+        let needs_compile = !matches!(&lookup, PlanLookup::Hit { .. });
+        let decision = self.admission.decide(wait, pending, needs_compile);
+        if decision == AdmitDecision::Reject {
+            return;
+        }
+
+        let w = Arc::clone(&self.templates[task.template]);
+        let (fallback, fb_ms) = self.fallback_for(task.template, &spec);
+
+        // 3. FS availability: per-iteration ms + virtual ready time.
+        // Store accounting records *acted-on* outcomes only: a
+        // backpressured task that merely looked does not count.
+        let fs: Option<(f64, f64)> = match lookup {
+            PlanLookup::Hit { prog, ready_ms } => {
+                self.store.note_exact_hit();
+                let ms = self
+                    .latency
+                    .get(&(key.0, spec.name))
+                    .copied()
+                    .unwrap_or_else(|| Self::iter_ms(&spec, &prog, w.loop_kind));
+                Some((ms, ready_ms))
+            }
+            PlanLookup::Portable { source, available_ms, .. }
+                if decision == AdmitDecision::Admit =>
+            {
+                self.store.note_port_hit();
+                let (ready, ms) = self.run_port(
+                    task.template,
+                    &spec,
+                    key,
+                    &source,
+                    available_ms,
+                    &fallback,
+                    fb_ms,
+                    now,
+                );
+                Some((ms, ready))
+            }
+            PlanLookup::Miss if decision == AdmitDecision::Admit => {
+                self.store.note_miss();
+                let (ready, ms) =
+                    self.run_explore(task.template, &spec, key, &fallback, fb_ms, now);
+                Some((ms, ready))
+            }
+            // Compile backpressure: serve the fallback for the whole
+            // task; no optimization work is enqueued.
+            _ => None,
+        };
+
+        // 4. Serve iterations in virtual time, hot-swapping to the FS
+        // program once its compile finishes (§6 at fleet scale).
+        let mut cursor = start;
+        let mut served = 0.0f64;
+        for _ in 0..task.iterations {
+            let iter = match fs {
+                Some((fs_ms, ready)) if cursor >= ready => fs_ms,
+                _ => fb_ms,
+            };
+            self.device_metrics[best_d].record_iteration(iter);
+            cursor += iter;
+            served += iter;
+        }
+        let fb_total = fb_ms * task.iterations as f64;
+        if served > fb_total + 1e-9 {
+            self.regressions += 1; // the guard must make this unreachable
+        }
+        self.slots[best_d][best_s] = cursor;
+        self.device_tasks[best_d] += 1;
+        self.device_busy_ms[best_d] += served;
+        self.served_gpu_ms += served;
+        self.fallback_gpu_ms += fb_total;
+        self.waits_ms.push(wait);
+        self.makespan_ms = self.makespan_ms.max(cursor);
+    }
+
+    /// Assemble the fleet-wide report.
+    pub fn report(&self) -> FleetReport {
+        let (admitted, fallback_only, rejected) = self.admission.counts();
+        let store = self.store.stats();
+        let qstats = self.queue.stats();
+        let agg = ServiceMetrics::aggregate(self.device_metrics.iter());
+        let iter_summary = summarize(&agg.latencies());
+        let per_device = self
+            .opts
+            .registry
+            .devices()
+            .iter()
+            .map(|d| {
+                let i = d.id.0;
+                let span = self.makespan_ms * d.capacity as f64;
+                DeviceUtilization {
+                    id: i,
+                    class: d.class(),
+                    tasks: self.device_tasks[i],
+                    busy_ms: self.device_busy_ms[i],
+                    utilization: if span > 0.0 { self.device_busy_ms[i] / span } else { 0.0 },
+                }
+            })
+            .collect();
+        FleetReport {
+            tasks: self.submitted,
+            admitted,
+            fallback_only,
+            rejected,
+            exact_hits: store.exact_hits,
+            port_hits: store.port_hits,
+            misses: store.misses,
+            explore_jobs: self.explore_jobs,
+            port_jobs: self.port_jobs,
+            port_failures: self.port_failures,
+            fs_vetoes: self.fs_vetoes,
+            regressions: self.regressions,
+            compile_owner_runs: qstats.local_pops,
+            compile_affinity_misses: qstats.steals,
+            served_gpu_ms: self.served_gpu_ms,
+            fallback_gpu_ms: self.fallback_gpu_ms,
+            wait: summarize(&self.waits_ms),
+            iter_p50_ms: iter_summary.p50,
+            iter_p99_ms: iter_summary.p99,
+            makespan_ms: self.makespan_ms,
+            per_device,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fleet::sim::{build_templates, generate_trace, TrafficConfig};
+
+    fn small_traffic() -> TrafficConfig {
+        TrafficConfig {
+            tasks: 80,
+            templates: 4,
+            mean_interarrival_ms: 1.0,
+            min_ops: 20,
+            max_ops: 40,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn mixed_fleet_is_deterministic_never_negative_and_ports_plans() {
+        let traffic = small_traffic();
+        let templates = build_templates(&traffic);
+        let trace = generate_trace(&traffic);
+        let run = || {
+            let opts = FleetOptions {
+                registry: DeviceRegistry::mixed(1, 1, 2),
+                compile_workers: 2,
+                ..Default::default()
+            };
+            let mut svc = FleetService::new(opts, templates.clone());
+            svc.run_trace(&trace)
+        };
+        let a = run();
+        let b = run();
+        // Byte-identical reports across replays of the same seed.
+        assert_eq!(a.to_json().to_string(), b.to_json().to_string());
+        assert_eq!(a.tasks, 80);
+        assert_eq!(a.regressions, 0, "never-negative must hold fleet-wide");
+        let snapshot = a.to_json().to_string();
+        assert!(a.port_hits >= 1, "mixed classes must port plans: {snapshot}");
+        assert!(a.exact_hits >= 1, "hot templates must hit the store");
+        assert!(a.served_gpu_ms > 0.0);
+        assert!(a.saved_gpu_ms() >= 0.0, "guard keeps savings non-negative");
+        assert!(a.wait.p99 >= a.wait.p50);
+        assert!(a.iter_p99_ms >= a.iter_p50_ms);
+        assert!(a.iter_p50_ms > 0.0);
+        // Accounting closes: every task is admitted some way or rejected.
+        assert_eq!(a.admitted + a.fallback_only + a.rejected, a.tasks);
+    }
+
+    #[test]
+    fn overload_triggers_admission_rejection() {
+        let traffic = TrafficConfig {
+            tasks: 40,
+            templates: 2,
+            mean_interarrival_ms: 0.01,
+            min_iterations: 20,
+            max_iterations: 30,
+            min_ops: 20,
+            max_ops: 30,
+            ..Default::default()
+        };
+        let templates = build_templates(&traffic);
+        let trace = generate_trace(&traffic);
+        let opts = FleetOptions {
+            registry: DeviceRegistry::mixed(1, 0, 1),
+            admission: AdmissionConfig { max_queue_delay_ms: 5.0, ..Default::default() },
+            ..Default::default()
+        };
+        let mut svc = FleetService::new(opts, templates);
+        let r = svc.run_trace(&trace);
+        assert!(r.rejected > 0, "overload must reject: {:?}", r.to_json().to_string());
+        assert_eq!(r.admitted + r.fallback_only + r.rejected, r.tasks);
+        assert_eq!(r.regressions, 0);
+    }
+
+    #[test]
+    fn compile_backpressure_serves_fallback_without_optimizing() {
+        let traffic = small_traffic();
+        let templates = build_templates(&traffic);
+        let trace = generate_trace(&traffic);
+        let opts = FleetOptions {
+            registry: DeviceRegistry::mixed(1, 1, 2),
+            admission: AdmissionConfig { max_pending_compiles: 0, ..Default::default() },
+            ..Default::default()
+        };
+        let mut svc = FleetService::new(opts, templates);
+        let r = svc.run_trace(&trace);
+        assert_eq!(r.explore_jobs, 0);
+        assert_eq!(r.port_jobs, 0);
+        assert_eq!(r.admitted, 0);
+        assert!(r.fallback_only > 0);
+        assert_eq!(r.saved_gpu_ms(), 0.0, "no optimization, no savings");
+        assert!(svc.store().is_empty());
+    }
+
+    #[test]
+    fn work_stealing_pool_balances_compiles() {
+        // Single-class fleet with many templates: all explorations, no
+        // ports; with >1 workers the steal counter must move (owner
+        // affinity is hash-based, the earliest-free worker takes jobs).
+        let traffic = TrafficConfig {
+            tasks: 30,
+            templates: 8,
+            mean_interarrival_ms: 0.5,
+            min_ops: 20,
+            max_ops: 30,
+            ..Default::default()
+        };
+        let templates = build_templates(&traffic);
+        let trace = generate_trace(&traffic);
+        let opts = FleetOptions {
+            registry: DeviceRegistry::mixed(2, 0, 2),
+            compile_workers: 2,
+            ..Default::default()
+        };
+        let mut svc = FleetService::new(opts, templates);
+        let r = svc.run_trace(&trace);
+        // One exploration per distinct template the trace touched.
+        assert_eq!(r.explore_jobs, r.misses, "every miss explores exactly once");
+        assert!((1..=8).contains(&r.explore_jobs));
+        assert_eq!(r.port_hits, 0, "single class never ports");
+        assert_eq!(r.port_jobs, 0);
+        assert_eq!(r.compile_owner_runs + r.compile_affinity_misses, r.explore_jobs);
+    }
+}

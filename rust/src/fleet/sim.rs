@@ -1,0 +1,164 @@
+//! Deterministic traffic generation for the fleet simulator.
+//!
+//! §7.2's scale claim ("~30,000 tasks per month") is replayed as a
+//! seeded discrete-event trace: exponential inter-arrivals, a skewed
+//! template popularity (production fleets serve a few hot models and a
+//! long tail), and a bounded iteration count per task. Everything is
+//! driven by [`crate::util::Prng`], so a (seed, config) pair always
+//! produces byte-identical traces — the reproducibility the bench
+//! asserts.
+
+use crate::util::Prng;
+use crate::workloads::synthetic::{generate, SyntheticConfig};
+use crate::workloads::{LoopKind, Mode, Workload};
+
+/// Trace-generation knobs.
+#[derive(Debug, Clone)]
+pub struct TrafficConfig {
+    /// Tasks in the trace.
+    pub tasks: usize,
+    /// Master seed: drives arrivals, template choice and template graphs.
+    pub seed: u64,
+    /// Mean exponential inter-arrival gap (ms of virtual time).
+    pub mean_interarrival_ms: f64,
+    /// Distinct model templates in the population.
+    pub templates: usize,
+    /// Iterations served per task (uniform in this inclusive range).
+    pub min_iterations: usize,
+    pub max_iterations: usize,
+    /// Ops per template graph (uniform in this inclusive range).
+    pub min_ops: usize,
+    pub max_ops: usize,
+}
+
+impl Default for TrafficConfig {
+    fn default() -> Self {
+        TrafficConfig {
+            tasks: 1200,
+            seed: 0xF1EE7,
+            mean_interarrival_ms: 1.5,
+            templates: 24,
+            min_iterations: 4,
+            max_iterations: 24,
+            min_ops: 30,
+            max_ops: 90,
+        }
+    }
+}
+
+/// One task in the trace: an instance of a template model arriving at a
+/// virtual time and serving a fixed number of iterations.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetTask {
+    pub id: usize,
+    pub arrival_ms: f64,
+    pub template: usize,
+    pub iterations: usize,
+}
+
+/// Build the template population: synthetic graphs spanning the op-mix
+/// space (elementwise chains, reduction towers, GEMM sprinkling) with
+/// the three runtime loop regimes interleaved, as in the §7.2 bench.
+pub fn build_templates(cfg: &TrafficConfig) -> Vec<Workload> {
+    assert!(cfg.templates > 0, "need at least one template");
+    assert!(cfg.min_ops <= cfg.max_ops);
+    let mut prng = Prng::new(cfg.seed ^ 0xABCD_EF01_2345_6789);
+    (0..cfg.templates)
+        .map(|i| {
+            let syn = SyntheticConfig {
+                num_ops: prng.range(cfg.min_ops, cfg.max_ops),
+                p_reduce: 0.05 + prng.f64() * 0.2,
+                p_expensive: 0.05 + prng.f64() * 0.25,
+                p_gemm: prng.f64() * 0.1,
+                ..Default::default()
+            };
+            let graph = generate(&syn, &mut prng);
+            let loop_kind = match i % 5 {
+                0 => LoopKind::DynamicLoop,
+                1 => LoopKind::StaticUnrolled,
+                _ => LoopKind::None,
+            };
+            Workload {
+                name: "task",
+                field: "fleet",
+                mode: Mode::Infer,
+                batch: 1,
+                loop_kind,
+                graph,
+            }
+        })
+        .collect()
+}
+
+/// Generate the arrival trace (sorted by arrival time by construction).
+pub fn generate_trace(cfg: &TrafficConfig) -> Vec<FleetTask> {
+    assert!(cfg.min_iterations >= 1 && cfg.min_iterations <= cfg.max_iterations);
+    assert!(cfg.mean_interarrival_ms > 0.0);
+    let mut prng = Prng::new(cfg.seed);
+    let mut t = 0.0f64;
+    (0..cfg.tasks)
+        .map(|id| {
+            // Exponential inter-arrival: -mean · ln(1 - U), U ∈ [0, 1).
+            let u = prng.f64();
+            t += -cfg.mean_interarrival_ms * (1.0 - u).ln();
+            // Quadratic popularity skew: low-index templates are hot.
+            let r = prng.f64();
+            let template = ((r * r * cfg.templates as f64) as usize).min(cfg.templates - 1);
+            let iterations = prng.range(cfg.min_iterations, cfg.max_iterations);
+            FleetTask { id, arrival_ms: t, template, iterations }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn traces_are_deterministic_per_seed() {
+        let cfg = TrafficConfig { tasks: 200, ..Default::default() };
+        assert_eq!(generate_trace(&cfg), generate_trace(&cfg));
+        let other = TrafficConfig { seed: 99, ..cfg };
+        assert_ne!(generate_trace(&cfg), generate_trace(&other));
+    }
+
+    #[test]
+    fn arrivals_are_monotone_and_fields_in_bounds() {
+        let cfg = TrafficConfig { tasks: 500, ..Default::default() };
+        let trace = generate_trace(&cfg);
+        assert_eq!(trace.len(), 500);
+        let mut last = 0.0;
+        for task in &trace {
+            assert!(task.arrival_ms >= last);
+            last = task.arrival_ms;
+            assert!(task.template < cfg.templates);
+            assert!((cfg.min_iterations..=cfg.max_iterations).contains(&task.iterations));
+        }
+    }
+
+    #[test]
+    fn popularity_is_skewed_toward_hot_templates() {
+        let cfg = TrafficConfig { tasks: 2000, ..Default::default() };
+        let trace = generate_trace(&cfg);
+        let hot = trace.iter().filter(|t| t.template < cfg.templates / 4).count();
+        // Quadratic skew: the first quartile of templates draws ~half
+        // the traffic (sqrt(0.25) = 0.5), far above the uniform 25%.
+        assert!(hot as f64 > trace.len() as f64 * 0.35, "hot share {hot}");
+    }
+
+    #[test]
+    fn templates_are_deterministic_and_varied() {
+        let cfg = TrafficConfig { templates: 8, ..Default::default() };
+        let a = build_templates(&cfg);
+        let b = build_templates(&cfg);
+        assert_eq!(a.len(), 8);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.graph.len(), y.graph.len());
+            assert_eq!(x.loop_kind, y.loop_kind);
+        }
+        // All three loop regimes appear.
+        assert!(a.iter().any(|w| w.loop_kind == LoopKind::DynamicLoop));
+        assert!(a.iter().any(|w| w.loop_kind == LoopKind::StaticUnrolled));
+        assert!(a.iter().any(|w| w.loop_kind == LoopKind::None));
+    }
+}

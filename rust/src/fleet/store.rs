@@ -1,0 +1,244 @@
+//! Shared cross-device plan store.
+//!
+//! The §7.5 tune-once-run-many economics at fleet scale: exploration
+//! runs once per (graph, device-class) — and for a graph already
+//! explored on *any* class, other classes skip the explorer entirely
+//! and only re-run the §4.2 launch-dimension tuner
+//! ([`crate::pipeline::port_program`]). The store tracks, per graph
+//! key, the portability *source* program (the first FS exploration
+//! result) plus the program each device class actually serves, with
+//! the virtual time its producing compile finishes (tasks that arrive
+//! earlier hot-swap mid-serve, §6 style).
+
+use crate::coordinator::GraphKey;
+use crate::pipeline::{OptimizedProgram, Tech};
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+/// Outcome of a lookup for (graph, device class).
+#[derive(Debug, Clone)]
+pub enum PlanLookup {
+    /// A program for this class exists; `ready_ms` is when its compile
+    /// finishes in virtual time (may be in the future — serve the
+    /// fallback until then, then hot-swap).
+    Hit {
+        prog: Arc<OptimizedProgram>,
+        ready_ms: f64,
+    },
+    /// No program for this class, but an FS exploration result from
+    /// another class exists: port it (launch-dim re-tune only).
+    /// `available_ms` is when the source plan exists in virtual time.
+    Portable {
+        source: Arc<OptimizedProgram>,
+        available_ms: f64,
+        tuned_on: &'static str,
+    },
+    /// Never explored anywhere: full exploration required.
+    Miss,
+}
+
+/// Hit/port/miss accounting. Counted by the fleet service when a task
+/// *acts* on a lookup (serves from the store, runs a port, runs a full
+/// exploration) — not at lookup time, so rejected/backpressured tasks
+/// do not inflate the rates.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct StoreStats {
+    pub exact_hits: usize,
+    pub port_hits: usize,
+    pub misses: usize,
+}
+
+#[derive(Debug, Default)]
+struct Entry {
+    /// First FS exploration result: (program, ready_ms, device class).
+    /// Vetoed/fallback programs never become the source — porting an
+    /// XLA plan would launder the veto into other classes.
+    source: Option<(Arc<OptimizedProgram>, f64, &'static str)>,
+    /// Per device class: the program production serves (post-guard),
+    /// with its virtual ready time.
+    programs: HashMap<&'static str, (Arc<OptimizedProgram>, f64)>,
+}
+
+/// Thread-safe shared plan store, keyed by graph structure hash.
+#[derive(Debug, Default)]
+pub struct SharedPlanStore {
+    entries: Mutex<HashMap<u64, Entry>>,
+    stats: Mutex<StoreStats>,
+}
+
+impl SharedPlanStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Look up the program for (graph, device class). Pure: accounting
+    /// happens via the `note_*` methods once the caller acts on the
+    /// outcome.
+    pub fn lookup(&self, key: GraphKey, device_class: &'static str) -> PlanLookup {
+        let entries = self.entries.lock().unwrap();
+        match entries.get(&key.0) {
+            Some(e) => {
+                if let Some((prog, ready_ms)) = e.programs.get(device_class) {
+                    PlanLookup::Hit { prog: Arc::clone(prog), ready_ms: *ready_ms }
+                } else if let Some((src, avail, class)) = &e.source {
+                    PlanLookup::Portable {
+                        source: Arc::clone(src),
+                        available_ms: *avail,
+                        tuned_on: class,
+                    }
+                } else {
+                    PlanLookup::Miss
+                }
+            }
+            None => PlanLookup::Miss,
+        }
+    }
+
+    /// Record that a task was served from a stored program.
+    pub fn note_exact_hit(&self) {
+        self.stats.lock().unwrap().exact_hits += 1;
+    }
+
+    /// Record that a task triggered a cross-class port of a stored plan.
+    pub fn note_port_hit(&self) {
+        self.stats.lock().unwrap().port_hits += 1;
+    }
+
+    /// Record that a task found nothing and triggered full exploration.
+    pub fn note_miss(&self) {
+        self.stats.lock().unwrap().misses += 1;
+    }
+
+    /// Record the program `device_class` serves for `key`; `ready_ms`
+    /// is the virtual completion time of the compile that produced it.
+    /// The first *FS* program inserted for a key becomes the
+    /// portability source for the other classes.
+    pub fn insert(
+        &self,
+        key: GraphKey,
+        device_class: &'static str,
+        prog: Arc<OptimizedProgram>,
+        ready_ms: f64,
+    ) {
+        let mut entries = self.entries.lock().unwrap();
+        let e = entries.entry(key.0).or_default();
+        if e.source.is_none() && prog.tech == Tech::Fs {
+            e.source = Some((Arc::clone(&prog), ready_ms, device_class));
+        }
+        e.programs.insert(device_class, (prog, ready_ms));
+    }
+
+    /// Accounting snapshot.
+    pub fn stats(&self) -> StoreStats {
+        *self.stats.lock().unwrap()
+    }
+
+    /// Number of distinct graphs with at least one entry.
+    pub fn len(&self) -> usize {
+        self.entries.lock().unwrap().len()
+    }
+
+    /// True when nothing is stored.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::explorer::ExploreOptions;
+    use crate::gpu::DeviceSpec;
+    use crate::graph::{DType, Graph, Shape};
+    use crate::pipeline::optimize;
+    use crate::workloads::{blocks, LoopKind, Mode, Workload};
+
+    fn ln_workload() -> Workload {
+        let mut g = Graph::new("LN");
+        let x = g.param(Shape::new(vec![1024, 256]), DType::F32, "x");
+        let _ = blocks::layer_norm(&mut g, x, "ln");
+        Workload {
+            name: "LN",
+            field: "micro",
+            mode: Mode::Infer,
+            batch: 1,
+            loop_kind: LoopKind::None,
+            graph: g,
+        }
+    }
+
+    #[test]
+    fn miss_then_hit_then_port() {
+        let store = SharedPlanStore::new();
+        let w = ln_workload();
+        let key = GraphKey::of(&w.graph);
+        let v100 = DeviceSpec::v100();
+
+        assert!(matches!(store.lookup(key, "V100"), PlanLookup::Miss));
+
+        let prog = Arc::new(optimize(
+            &w,
+            &v100,
+            crate::pipeline::Tech::Fs,
+            &ExploreOptions::default(),
+        ));
+        store.insert(key, "V100", Arc::clone(&prog), 10.0);
+
+        match store.lookup(key, "V100") {
+            PlanLookup::Hit { ready_ms, .. } => assert_eq!(ready_ms, 10.0),
+            other => panic!("expected exact hit, got {other:?}"),
+        }
+        match store.lookup(key, "T4") {
+            PlanLookup::Portable { tuned_on, available_ms, .. } => {
+                assert_eq!(tuned_on, "V100");
+                assert_eq!(available_ms, 10.0);
+            }
+            other => panic!("expected portable, got {other:?}"),
+        }
+        // Accounting is explicit (acted-on outcomes), not lookup-driven.
+        assert_eq!(store.stats(), StoreStats::default());
+        store.note_miss();
+        store.note_exact_hit();
+        store.note_port_hit();
+        store.note_port_hit();
+        assert_eq!(
+            store.stats(),
+            StoreStats { exact_hits: 1, port_hits: 2, misses: 1 }
+        );
+        assert_eq!(store.len(), 1);
+    }
+
+    #[test]
+    fn vetoed_fallback_is_not_a_port_source() {
+        // A class that stored its fallback (FS veto) must not offer it
+        // for porting: other classes should fully explore instead.
+        let store = SharedPlanStore::new();
+        let w = ln_workload();
+        let key = GraphKey::of(&w.graph);
+        let v100 = DeviceSpec::v100();
+        let xla_prog = Arc::new(optimize(
+            &w,
+            &v100,
+            crate::pipeline::Tech::Xla,
+            &ExploreOptions::default(),
+        ));
+        store.insert(key, "V100", xla_prog, 5.0);
+
+        assert!(matches!(store.lookup(key, "V100"), PlanLookup::Hit { .. }));
+        assert!(matches!(store.lookup(key, "T4"), PlanLookup::Miss));
+        // Once an FS program lands (from the T4 exploration), it becomes
+        // the source even though V100 inserted first.
+        let t4 = DeviceSpec::t4();
+        let fs_prog = Arc::new(optimize(
+            &w,
+            &t4,
+            crate::pipeline::Tech::Fs,
+            &ExploreOptions::default(),
+        ));
+        store.insert(key, "T4", fs_prog, 50.0);
+        match store.lookup(key, "A100") {
+            PlanLookup::Portable { tuned_on, .. } => assert_eq!(tuned_on, "T4"),
+            other => panic!("expected portable, got {other:?}"),
+        }
+    }
+}

@@ -37,13 +37,21 @@
 //!   `artifacts/` and executing it on the CPU client.
 //! * [`coordinator`] — the JIT service: sessions, a compilation cache,
 //!   async-compilation with hot swap (§6), and serving metrics.
+//! * [`fleet`] — the §7.2 production layer over the coordinator: a
+//!   mixed-device registry, a bounded compile-worker pool with a
+//!   work-stealing queue, a shared cross-device plan store (plans port
+//!   between device classes by re-running only the launch-dim tuner),
+//!   admission control/backpressure, and a deterministic discrete-event
+//!   traffic simulator reporting fleet-wide GPU-hours saved.
 //! * [`util`] — deterministic PRNG, tiny JSON writer, table formatting,
-//!   and a micro-bench timer (the environment has no criterion/serde).
+//!   percentile helpers, and a micro-bench timer (the environment has
+//!   no criterion/serde).
 
 pub mod baselines;
 pub mod codegen;
 pub mod coordinator;
 pub mod explorer;
+pub mod fleet;
 pub mod gpu;
 pub mod graph;
 pub mod hlo;

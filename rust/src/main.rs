@@ -18,8 +18,13 @@
 //! * `fstitch emit --model <name> --out <m.hlo.txt> [--run]` — export a
 //!   workload graph as executable HLO text (and optionally compile +
 //!   run it on the PJRT CPU client as a smoke test).
+//! * `fstitch fleet [--v100 N] [--t4 N] [--capacity C] [--workers K]
+//!   [--tasks N] [--rate MS] [--templates T] [--seed S] [--out FILE]` —
+//!   replay a deterministic task trace through the multi-device fleet
+//!   service (§7.2) and print the fleet-wide report.
 
 use fusion_stitching::coordinator::{JitService, ServiceOptions};
+use fusion_stitching::fleet;
 use fusion_stitching::explorer::ExploreOptions;
 use fusion_stitching::gpu::DeviceSpec;
 use fusion_stitching::pipeline::{self, Tech};
@@ -113,7 +118,8 @@ fn main() {
             for i in 0..iters {
                 let b = svc.run_iteration(&session);
                 if i == 0 || i + 1 == iters {
-                    println!("iter {:>3}: {:.3} ms (optimized={})", i, b.e2e_ms(), session.is_optimized());
+                    let opt = session.is_optimized();
+                    println!("iter {:>3}: {:.3} ms (optimized={opt})", i, b.e2e_ms());
                 }
             }
             session.wait_optimized();
@@ -250,9 +256,98 @@ fn main() {
                 }
             }
         }
+        "fleet" => {
+            fn bad_flag(name: &str, problem: &str) -> ! {
+                eprintln!("fleet: invalid value for {name}: {problem}");
+                std::process::exit(2);
+            }
+            let num = |name: &str, default: usize| -> usize {
+                match get_flag(name) {
+                    None => default,
+                    Some(s) => s.parse().unwrap_or_else(|_| bad_flag(name, &s)),
+                }
+            };
+            // Seeds print as hex ({:#x}); accept both 0x-hex and decimal
+            // so a printed seed can be pasted back for replay.
+            let seed = match get_flag("--seed") {
+                None => 0xF1EE7,
+                Some(s) => {
+                    let parsed = match s.strip_prefix("0x").or_else(|| s.strip_prefix("0X")) {
+                        Some(hex) => u64::from_str_radix(hex, 16).ok(),
+                        None => s.parse().ok(),
+                    };
+                    parsed.unwrap_or_else(|| bad_flag("--seed", &s))
+                }
+            };
+            let rate: f64 = match get_flag("--rate") {
+                None => 1.5,
+                Some(s) => s.parse().unwrap_or_else(|_| bad_flag("--rate", &s)),
+            };
+            if !(rate > 0.0) {
+                bad_flag("--rate", "must be a positive inter-arrival gap in ms");
+            }
+            let templates = num("--templates", 12);
+            if templates == 0 {
+                bad_flag("--templates", "need at least one template");
+            }
+            let traffic = fleet::TrafficConfig {
+                tasks: num("--tasks", 400),
+                templates,
+                seed,
+                mean_interarrival_ms: rate,
+                ..Default::default()
+            };
+            let (v100s, t4s) = (num("--v100", 2), num("--t4", 2));
+            if v100s + t4s == 0 {
+                bad_flag("--v100/--t4", "fleet needs at least one device");
+            }
+            let capacity = num("--capacity", 2);
+            if capacity == 0 {
+                bad_flag("--capacity", "device capacity must be positive");
+            }
+            let workers = num("--workers", 2);
+            if workers == 0 {
+                bad_flag("--workers", "compile pool needs at least one worker");
+            }
+            let opts = fleet::FleetOptions {
+                registry: fleet::DeviceRegistry::mixed(v100s, t4s, capacity),
+                compile_workers: workers,
+                ..Default::default()
+            };
+            println!(
+                "== fleet: {} tasks over {} templates on {} devices ({} slots), seed {:#x} ==\n",
+                traffic.tasks,
+                traffic.templates,
+                opts.registry.len(),
+                opts.registry.total_capacity(),
+                traffic.seed
+            );
+            let templates = fleet::build_templates(&traffic);
+            let trace = fleet::generate_trace(&traffic);
+            let mut svc = fleet::FleetService::new(opts, templates);
+            let report = svc.run_trace(&trace);
+            println!("{}", report.render());
+            println!(
+                "\nGPU time saved vs fallback-only: {:.1} ms ({:.1}%); \
+                 cross-device plan-portability hits: {}; FS regressions: {}",
+                report.saved_gpu_ms(),
+                report.saved_frac() * 100.0,
+                report.port_hits,
+                report.regressions
+            );
+            if let Some(out) = get_flag("--out") {
+                match std::fs::write(&out, report.to_json().to_pretty()) {
+                    Ok(()) => println!("wrote {out}"),
+                    Err(e) => {
+                        eprintln!("write {out}: {e}");
+                        std::process::exit(1);
+                    }
+                }
+            }
+        }
         _ => {
             println!("fstitch — FusionStitching (Zheng et al., 2020) reproduction");
-            println!("usage: fstitch <list|optimize|inspect|serve|report|hlo|trace|emit> [--model NAME] [--device v100|t4] [--iters N] [--dot] [--file HLO] [--explore] [--tech tf|xla|fs] [--out FILE] [--run]");
+            println!("usage: fstitch <list|optimize|inspect|serve|report|hlo|trace|emit|fleet> [--model NAME] [--device v100|t4] [--iters N] [--dot] [--file HLO] [--explore] [--tech tf|xla|fs] [--out FILE] [--run] [--v100 N] [--t4 N] [--capacity C] [--workers K] [--tasks N] [--rate MS] [--templates T] [--seed S]");
         }
     }
 }

@@ -193,10 +193,46 @@ pub fn lower(
 }
 
 /// Optimize + lower a workload under one technique.
-pub fn optimize(w: &Workload, device: &DeviceSpec, tech: Tech, opts: &ExploreOptions) -> OptimizedProgram {
+pub fn optimize(
+    w: &Workload,
+    device: &DeviceSpec,
+    tech: Tech,
+    opts: &ExploreOptions,
+) -> OptimizedProgram {
     let plan = plan_for_runtime(&w.graph, device, tech, opts, w.loop_kind);
     let kernels = lower(&w.graph, &plan, device, tech, w.loop_kind);
     OptimizedProgram { tech, plan, kernels }
+}
+
+/// Port an already-optimized program to a different device: keep the
+/// fusion plan (the expensive §5 exploration result) and re-run only
+/// the §4.2 launch-dimension tuner + lowering for the target device
+/// (each kernel is tuned exactly once, inside `lower`). Returns `None`
+/// when the target loses kernels the source device could schedule —
+/// detected by comparing memory-intensive kernel counts against the
+/// source program, since `lower` drops unschedulable patterns and
+/// silently under-counting the ported program's work would fake a
+/// speedup. The caller re-explores from scratch instead.
+pub fn port_program(
+    graph: &Graph,
+    prog: &OptimizedProgram,
+    device: &DeviceSpec,
+    loop_kind: LoopKind,
+) -> Option<OptimizedProgram> {
+    let mem_count = |ks: &[KernelSpec]| {
+        ks.iter()
+            .filter(|k| matches!(k.class, crate::gpu::KernelClass::MemoryIntensive))
+            .count()
+    };
+    let kernels = lower(graph, &prog.plan, device, prog.tech, loop_kind);
+    if mem_count(&kernels) < mem_count(&prog.kernels) {
+        return None;
+    }
+    Some(OptimizedProgram {
+        tech: prog.tech,
+        plan: prog.plan.clone(),
+        kernels,
+    })
 }
 
 /// One Table-2 row: technique + breakdown.
@@ -288,6 +324,21 @@ mod tests {
         let m: Vec<usize> = rows.iter().map(|r| r.breakdown.math_calls).collect();
         assert_eq!(m[0], m[1]);
         assert_eq!(m[1], m[2]);
+    }
+
+    #[test]
+    fn port_program_keeps_plan_and_relowers() {
+        let w = ln_workload();
+        let v100 = DeviceSpec::v100();
+        let t4 = DeviceSpec::t4();
+        let prog = optimize(&w, &v100, Tech::Fs, &ExploreOptions::default());
+        let ported = port_program(&w.graph, &prog, &t4, w.loop_kind).expect("LN ports to T4");
+        assert_eq!(ported.tech, Tech::Fs);
+        assert_eq!(ported.plan.patterns.len(), prog.plan.patterns.len());
+        assert_eq!(ported.kernels.len(), prog.kernels.len());
+        // The ported program is servable: positive simulated latency.
+        let sim = Simulator::new(t4, SimConfig::xla_runtime());
+        assert!(sim.run(&ported.kernels, w.loop_kind).e2e_ms() > 0.0);
     }
 
     #[test]

@@ -87,14 +87,14 @@ impl ArtifactSet {
 }
 
 /// Check a specific path exists (helper for error messages).
-pub fn require(path: &Path) -> anyhow::Result<()> {
+pub fn require(path: &Path) -> super::RuntimeResult<()> {
     if path.is_file() {
         Ok(())
     } else {
-        anyhow::bail!(
+        Err(super::RuntimeError(format!(
             "artifact {} missing — run `make artifacts` first",
             path.display()
-        )
+        )))
     }
 }
 

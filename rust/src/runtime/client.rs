@@ -4,88 +4,166 @@
 //! emits protos with 64-bit instruction ids that xla_extension 0.5.1
 //! rejects; the text parser reassigns ids and round-trips cleanly (see
 //! /opt/xla-example/README.md).
+//!
+//! Two builds of this module exist:
+//!
+//! * `RUSTFLAGS="--cfg fstitch_pjrt"` (with the vendored `xla` +
+//!   `anyhow` crates added to `[dependencies]`) — the real client over
+//!   PJRT. A custom cfg rather than a cargo feature: a feature would
+//!   need those crates declared as optional dependencies, and even
+//!   unactivated optional deps must resolve, which the offline build
+//!   cannot do.
+//! * default — an API-compatible stub: constructors return an error
+//!   explaining how to enable the real backend. Tests and examples all
+//!   gate on [`super::artifacts_available`] and skip before touching it.
 
-use anyhow::{Context, Result};
-use std::path::Path;
+#[cfg(fstitch_pjrt)]
+mod real {
+    use anyhow::{Context, Result};
+    use std::path::Path;
 
-/// A compiled HLO module ready to execute.
-pub struct Executable {
-    exe: xla::PjRtLoadedExecutable,
-    /// Human-readable identity (artifact stem).
-    pub name: String,
-}
-
-/// Thin wrapper over the PJRT CPU client.
-pub struct RuntimeClient {
-    client: xla::PjRtClient,
-}
-
-impl RuntimeClient {
-    /// Create a CPU PJRT client.
-    pub fn cpu() -> Result<Self> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(RuntimeClient { client })
+    /// A compiled HLO module ready to execute.
+    pub struct Executable {
+        exe: xla::PjRtLoadedExecutable,
+        /// Human-readable identity (artifact stem).
+        pub name: String,
     }
 
-    /// Platform diagnostic string.
-    pub fn platform(&self) -> String {
-        format!(
-            "{} ({} devices)",
-            self.client.platform_name(),
-            self.client.device_count()
-        )
+    /// Thin wrapper over the PJRT CPU client.
+    pub struct RuntimeClient {
+        client: xla::PjRtClient,
     }
 
-    /// Load an HLO text file and compile it.
-    pub fn load_hlo_text(&self, path: &Path) -> Result<Executable> {
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().context("non-utf8 path")?,
-        )
-        .with_context(|| format!("parsing HLO text {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compiling {}", path.display()))?;
-        Ok(Executable {
-            exe,
-            name: path
-                .file_stem()
-                .and_then(|s| s.to_str())
-                .unwrap_or("module")
-                .to_string(),
-        })
-    }
-}
-
-impl Executable {
-    /// Execute with f32 buffers of the given shapes; returns the flat f32
-    /// outputs of the (tuple) result.
-    pub fn run_f32(&self, inputs: &[(&[f32], &[usize])]) -> Result<Vec<Vec<f32>>> {
-        let mut literals = Vec::with_capacity(inputs.len());
-        for (data, dims) in inputs {
-            let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
-            let lit = xla::Literal::vec1(data)
-                .reshape(&dims_i64)
-                .context("reshaping input literal")?;
-            literals.push(lit);
+    impl RuntimeClient {
+        /// Create a CPU PJRT client.
+        pub fn cpu() -> Result<Self> {
+            let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+            Ok(RuntimeClient { client })
         }
-        let mut result = self
-            .exe
-            .execute::<xla::Literal>(&literals)
-            .context("executing")?[0][0]
-            .to_literal_sync()
-            .context("fetching result")?;
-        let result = &mut result;
-        // aot.py lowers with return_tuple=True: decompose the tuple.
-        let elems = result.decompose_tuple().context("decomposing tuple")?;
-        let mut out = Vec::with_capacity(elems.len());
-        for e in elems {
-            out.push(e.to_vec::<f32>().context("reading f32 output")?);
+
+        /// Platform diagnostic string.
+        pub fn platform(&self) -> String {
+            format!(
+                "{} ({} devices)",
+                self.client.platform_name(),
+                self.client.device_count()
+            )
         }
-        Ok(out)
+
+        /// Load an HLO text file and compile it.
+        pub fn load_hlo_text(&self, path: &Path) -> Result<Executable> {
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 path")?,
+            )
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", path.display()))?;
+            Ok(Executable {
+                exe,
+                name: path
+                    .file_stem()
+                    .and_then(|s| s.to_str())
+                    .unwrap_or("module")
+                    .to_string(),
+            })
+        }
+    }
+
+    impl Executable {
+        /// Execute with f32 buffers of the given shapes; returns the flat
+        /// f32 outputs of the (tuple) result.
+        pub fn run_f32(&self, inputs: &[(&[f32], &[usize])]) -> Result<Vec<Vec<f32>>> {
+            let mut literals = Vec::with_capacity(inputs.len());
+            for (data, dims) in inputs {
+                let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+                let lit = xla::Literal::vec1(data)
+                    .reshape(&dims_i64)
+                    .context("reshaping input literal")?;
+                literals.push(lit);
+            }
+            let mut result = self
+                .exe
+                .execute::<xla::Literal>(&literals)
+                .context("executing")?[0][0]
+                .to_literal_sync()
+                .context("fetching result")?;
+            let result = &mut result;
+            // aot.py lowers with return_tuple=True: decompose the tuple.
+            let elems = result.decompose_tuple().context("decomposing tuple")?;
+            let mut out = Vec::with_capacity(elems.len());
+            for e in elems {
+                out.push(e.to_vec::<f32>().context("reading f32 output")?);
+            }
+            Ok(out)
+        }
     }
 }
+
+#[cfg(fstitch_pjrt)]
+pub use real::{Executable, RuntimeClient};
+
+#[cfg(not(fstitch_pjrt))]
+mod stub {
+    use super::super::{RuntimeError, RuntimeResult};
+    use std::path::Path;
+
+    const UNAVAILABLE: &str = "PJRT backend unavailable: this build has no `xla` crate \
+         (offline vendored set). Add the vendored `xla`/`anyhow` deps and rebuild with \
+         RUSTFLAGS=\"--cfg fstitch_pjrt\" to execute HLO artifacts";
+
+    /// A compiled HLO module ready to execute (stub: never constructed).
+    pub struct Executable {
+        /// Human-readable identity (artifact stem).
+        pub name: String,
+        _private: (),
+    }
+
+    /// Thin wrapper over the PJRT CPU client (stub).
+    pub struct RuntimeClient {
+        _private: (),
+    }
+
+    impl RuntimeClient {
+        /// Create a CPU PJRT client. Always fails in the offline build.
+        pub fn cpu() -> RuntimeResult<Self> {
+            Err(RuntimeError(UNAVAILABLE.to_string()))
+        }
+
+        /// Platform diagnostic string.
+        pub fn platform(&self) -> String {
+            "pjrt-stub (0 devices)".to_string()
+        }
+
+        /// Load an HLO text file and compile it. Unreachable in practice
+        /// (no client can be constructed), kept for API parity.
+        pub fn load_hlo_text(&self, _path: &Path) -> RuntimeResult<Executable> {
+            Err(RuntimeError(UNAVAILABLE.to_string()))
+        }
+    }
+
+    impl Executable {
+        /// Execute with f32 buffers of the given shapes (stub).
+        pub fn run_f32(&self, _inputs: &[(&[f32], &[usize])]) -> RuntimeResult<Vec<Vec<f32>>> {
+            Err(RuntimeError(UNAVAILABLE.to_string()))
+        }
+    }
+}
+
+#[cfg(not(fstitch_pjrt))]
+pub use stub::{Executable, RuntimeClient};
 
 // Tests that need real artifacts live in rust/tests/runtime_pjrt.rs
 // (they require `make artifacts` to have run).
+
+#[cfg(test)]
+mod tests {
+    #[cfg(not(fstitch_pjrt))]
+    #[test]
+    fn stub_client_reports_unavailable() {
+        let err = super::RuntimeClient::cpu().err().expect("stub must error");
+        assert!(err.0.contains("pjrt"), "{err}");
+    }
+}

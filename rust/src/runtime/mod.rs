@@ -5,9 +5,34 @@
 //! softmax, MLP) to HLO **text** once at build time (`make artifacts`);
 //! the functions here compile and run them on the PJRT CPU client from
 //! the `xla` crate — Python never executes on the request path.
+//!
+//! The `xla` crate (and its `anyhow` error glue) is not part of the
+//! offline vendored set, so the real client lives behind the custom
+//! `fstitch_pjrt` cfg (see `rust/Cargo.toml` for why it is not a cargo
+//! feature and how to enable it). The default build ships an
+//! API-compatible stub whose constructors return a descriptive error;
+//! every test and example checks [`artifacts_available`] first and
+//! skips gracefully, so the crate builds and tests end-to-end without
+//! PJRT.
 
 pub mod artifacts;
 pub mod client;
 
 pub use artifacts::{artifact_path, artifacts_available, ArtifactSet};
 pub use client::{Executable, RuntimeClient};
+
+/// Runtime-layer error: a plain message (the offline build has no
+/// `anyhow`; the `pjrt` build converts foreign errors into this).
+#[derive(Debug, Clone)]
+pub struct RuntimeError(pub String);
+
+impl std::fmt::Display for RuntimeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for RuntimeError {}
+
+/// Result alias used by the runtime layer.
+pub type RuntimeResult<T> = std::result::Result<T, RuntimeError>;

@@ -3,15 +3,18 @@
 //! The build environment is fully offline with a fixed vendored crate set
 //! (no `rand`, `serde`, `criterion`, `clap`), so this module provides the
 //! minimal substitutes the rest of the crate needs: a deterministic PRNG,
-//! a tiny JSON writer, an ASCII table formatter, and a micro-benchmark
-//! timer used by the `rust/benches/` harnesses.
+//! a tiny JSON writer, an ASCII table formatter, percentile/summary
+//! helpers for latency samples, and a micro-benchmark timer used by the
+//! `rust/benches/` harnesses.
 
 pub mod json;
 pub mod prng;
+pub mod stats;
 pub mod table;
 pub mod timer;
 
 pub use json::JsonValue;
 pub use prng::Prng;
-pub use table::Table;
+pub use stats::{mean, percentile, summarize, Summary};
+pub use table::{fmt_f, Table};
 pub use timer::{bench_loop, BenchStats};

@@ -1,0 +1,110 @@
+//! Sample statistics helpers: percentiles and summaries over `f64`
+//! samples (queue waits, iteration latencies). The fleet layer reports
+//! p50/p99 over tens of thousands of values; `util::timer` keeps its own
+//! `Duration`-based quantiles for the micro-bench path.
+
+/// Nearest-rank percentile of a sample set; `q` in `[0, 1]`.
+/// Returns 0.0 for an empty slice (reports render it as a zero row
+/// rather than poisoning JSON with NaN).
+pub fn percentile(samples: &[f64], q: f64) -> f64 {
+    if samples.is_empty() {
+        return 0.0;
+    }
+    let mut sorted = samples.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+    let q = q.clamp(0.0, 1.0);
+    let idx = ((sorted.len() as f64 - 1.0) * q).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+/// Arithmetic mean; 0.0 for an empty slice.
+pub fn mean(samples: &[f64]) -> f64 {
+    if samples.is_empty() {
+        0.0
+    } else {
+        samples.iter().sum::<f64>() / samples.len() as f64
+    }
+}
+
+/// One-pass summary of a sample set.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+/// Summarize a sample set (sorts once; empty input yields all zeros).
+pub fn summarize(samples: &[f64]) -> Summary {
+    if samples.is_empty() {
+        return Summary::default();
+    }
+    let mut sorted = samples.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+    let pick = |q: f64| sorted[((sorted.len() as f64 - 1.0) * q).round() as usize];
+    Summary {
+        n: sorted.len(),
+        mean: mean(&sorted),
+        p50: pick(0.50),
+        p95: pick(0.95),
+        p99: pick(0.99),
+        min: sorted[0],
+        max: sorted[sorted.len() - 1],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 1.0), 100.0);
+        let p50 = percentile(&xs, 0.5);
+        assert!((49.0..=51.0).contains(&p50), "p50={p50}");
+        let p99 = percentile(&xs, 0.99);
+        assert!((98.0..=100.0).contains(&p99), "p99={p99}");
+    }
+
+    #[test]
+    fn percentile_unsorted_input() {
+        let xs = vec![5.0, 1.0, 3.0, 2.0, 4.0];
+        assert_eq!(percentile(&xs, 0.5), 3.0);
+        assert_eq!(percentile(&xs, 1.0), 5.0);
+    }
+
+    #[test]
+    fn empty_samples_are_zero() {
+        assert_eq!(percentile(&[], 0.5), 0.0);
+        assert_eq!(mean(&[]), 0.0);
+        let s = summarize(&[]);
+        assert_eq!(s.n, 0);
+        assert_eq!(s.p99, 0.0);
+    }
+
+    #[test]
+    fn summary_ordering_holds() {
+        let xs = vec![9.0, 2.0, 7.0, 4.0, 1.0, 8.0, 3.0];
+        let s = summarize(&xs);
+        assert_eq!(s.n, 7);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 9.0);
+        assert!(s.min <= s.p50 && s.p50 <= s.p95 && s.p95 <= s.p99 && s.p99 <= s.max);
+        assert!((s.mean - 34.0 / 7.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn single_sample_summary() {
+        let s = summarize(&[42.0]);
+        assert_eq!(s.n, 1);
+        assert_eq!(s.p50, 42.0);
+        assert_eq!(s.p99, 42.0);
+        assert_eq!(s.mean, 42.0);
+    }
+}

@@ -124,7 +124,35 @@ fn report_covers_the_catalog() {
 fn help_lists_subcommands() {
     let (stdout, _, ok) = fstitch(&["help"]);
     assert!(ok);
-    for sub in ["optimize", "serve", "report", "hlo", "trace", "emit"] {
+    for sub in ["optimize", "serve", "report", "hlo", "trace", "emit", "fleet"] {
         assert!(stdout.contains(sub));
     }
+}
+
+#[test]
+fn fleet_replays_a_trace_and_writes_json() {
+    let out = std::env::temp_dir().join("fstitch_cli_fleet.json");
+    let _ = std::fs::remove_file(&out);
+    let (stdout, stderr, ok) = fstitch(&[
+        "fleet",
+        "--tasks",
+        "120",
+        "--templates",
+        "4",
+        "--v100",
+        "1",
+        "--t4",
+        "1",
+        "--out",
+        out.to_str().unwrap(),
+    ]);
+    assert!(ok, "fleet failed:\n{stdout}\n{stderr}");
+    assert!(stdout.contains("portability"), "{stdout}");
+    assert!(stdout.contains("FS regressions: 0"), "{stdout}");
+    assert!(stdout.contains("p50/p99"), "{stdout}");
+    let text = std::fs::read_to_string(&out).expect("fleet JSON written");
+    let json = fusion_stitching::util::JsonValue::parse(&text).expect("valid JSON");
+    assert_eq!(json.get("regressions").and_then(|v| v.as_usize()), Some(0));
+    assert_eq!(json.get("tasks").and_then(|v| v.as_usize()), Some(120));
+    let _ = std::fs::remove_file(&out);
 }
