@@ -17,7 +17,8 @@
 //! cache/portability hit rates, queue-latency percentiles.
 
 use fusion_stitching::fleet::{
-    build_templates, generate_trace, DeviceRegistry, FleetOptions, FleetService, TrafficConfig,
+    build_templates, generate_trace, DeviceRegistry, ExecutorKind, FleetOptions, FleetService,
+    TrafficConfig,
 };
 
 fn main() {
@@ -75,4 +76,29 @@ fn main() {
         report.exact_hits, report.port_hits, report.explore_jobs, traffic.templates
     );
     assert_eq!(report.regressions, 0, "the §7.2 guard must hold");
+
+    // The same trace once more on real OS threads: compile workers
+    // drain the shared work-stealing queue while each device serves on
+    // its own thread, hot-swapping plans as they publish. Decisions
+    // must converge with the virtual replay above.
+    let wall_opts = FleetOptions {
+        registry: DeviceRegistry::mixed(2, 2, 2),
+        compile_workers: 3,
+        executor: ExecutorKind::WallClock { threads: 3 },
+        ..Default::default()
+    };
+    let mut wall_svc = FleetService::new(wall_opts, build_templates(&traffic));
+    let wall = wall_svc.run_trace(&trace);
+    println!(
+        "\nwall-clock executor: same trace on 3 compile threads in {:.1} ms elapsed — \
+         {} explorations, {} ports, {} regressions (decisions match: {})",
+        wall.wall_elapsed_ms,
+        wall.explore_jobs,
+        wall.port_jobs,
+        wall.regressions,
+        wall.explore_jobs == report.explore_jobs && wall.port_hits == report.port_hits
+    );
+    assert_eq!(wall.regressions, 0, "the guard must hold on real threads too");
+    assert_eq!(wall.explore_jobs, report.explore_jobs);
+    assert_eq!(wall.port_hits, report.port_hits);
 }

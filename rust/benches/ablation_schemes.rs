@@ -28,7 +28,8 @@ fn reduction_mid_pattern(width: usize) -> (Graph, Vec<NodeId>) {
     let y = g.binary(OpKind::Sub, x, b, "sub");
     let z = g.binary(OpKind::Mul, y, y, "sq");
     let _ = z;
-    let pattern: Vec<NodeId> = g.nodes().iter().filter(|n| n.kind.is_fusible()).map(|n| n.id).collect();
+    let pattern: Vec<NodeId> =
+        g.nodes().iter().filter(|n| n.kind.is_fusible()).map(|n| n.id).collect();
     (g, pattern)
 }
 
@@ -71,7 +72,8 @@ fn main() {
     let mut g = Graph::new("ln");
     let x = g.param(Shape::new(vec![4096, 768]), DType::F32, "x");
     let _ = blocks::layer_norm(&mut g, x, "ln");
-    let full: Vec<NodeId> = g.nodes().iter().filter(|n| n.kind.is_fusible()).map(|n| n.id).collect();
+    let full: Vec<NodeId> =
+        g.nodes().iter().filter(|n| n.kind.is_fusible()).map(|n| n.id).collect();
     let fs = tune_pattern(&g, &full, &device, &TunerOptions::fusion_stitching()).unwrap();
     let xla_whole = tune_pattern(&g, &full, &device, &TunerOptions::xla()).unwrap();
     println!(

@@ -84,7 +84,9 @@ fn main() {
     );
 
     // Tuning detail of the single FS kernel.
-    if let Some(t) = tune_pattern(&g, fs.patterns[0].nodes(), &device, &TunerOptions::fusion_stitching()) {
+    let fs_tuned =
+        tune_pattern(&g, fs.patterns[0].nodes(), &device, &TunerOptions::fusion_stitching());
+    if let Some(t) = fs_tuned {
         println!(
             "FS kernel schedule: {} | est {:.1} µs, occupancy {:.2}, {} B shmem",
             t.summary(),

@@ -14,44 +14,78 @@
 //! p50/p99. The trace is replayed twice and the reports must be
 //! byte-identical — the §7.2 numbers are reproducible, not sampled.
 //!
+//! The same trace then runs once more on the **wall-clock executor**
+//! (real compile-worker threads + per-device serving threads) and the
+//! bench asserts it converges to the virtual replay's plan/admission
+//! decisions — §6's "explore in background while serving" on actual
+//! hardware parallelism.
+//!
 //! Run: `cargo bench --bench production_fleet` (add `-- N` for trace
-//! size; default 1200, acceptance floor 1000). Writes `BENCH_fleet.json`.
+//! size, default 1200, acceptance floor 1000; `--threads K` for the
+//! wall-clock pool size, default 2). Writes `BENCH_fleet.json`.
 
 use fusion_stitching::fleet::{
-    build_templates, generate_trace, DeviceRegistry, FleetOptions, FleetReport, FleetService,
-    TrafficConfig,
+    build_templates, generate_trace, DeviceRegistry, ExecutorKind, FleetOptions, FleetReport,
+    FleetService, TrafficConfig,
 };
 use fusion_stitching::util::JsonValue;
+use fusion_stitching::workloads::Workload;
 
-fn run_once(traffic: &TrafficConfig) -> FleetReport {
-    let templates = build_templates(traffic);
-    let trace = generate_trace(traffic);
-    let opts = FleetOptions {
+fn base_options() -> FleetOptions {
+    FleetOptions {
         registry: DeviceRegistry::mixed(2, 2, 2),
         compile_workers: 4,
         ..Default::default()
-    };
-    let mut svc = FleetService::new(opts, templates);
+    }
+}
+
+fn run_once(
+    traffic: &TrafficConfig,
+    templates: &[Workload],
+    executor: ExecutorKind,
+) -> FleetReport {
+    let trace = generate_trace(traffic);
+    let opts = FleetOptions { executor, ..base_options() };
+    let mut svc = FleetService::new(opts, templates.to_vec());
     svc.run_trace(&trace)
 }
 
 fn main() {
-    let tasks: usize = std::env::args()
-        .filter_map(|a| a.parse().ok())
-        .next()
-        .unwrap_or(1200);
+    // Positional number = trace size (first parseable arg outside a
+    // `--threads K` pair, in any order); `--threads K` = wall-clock
+    // pool size.
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut tasks: Option<usize> = None;
+    let mut threads: usize = 2;
+    let mut i = 0;
+    while i < args.len() {
+        if args[i] == "--threads" {
+            threads = args.get(i + 1).and_then(|s| s.parse().ok()).unwrap_or_else(|| {
+                eprintln!("production_fleet: --threads needs a positive integer");
+                std::process::exit(2);
+            });
+            i += 2;
+        } else {
+            if tasks.is_none() {
+                tasks = args[i].parse().ok();
+            }
+            i += 1;
+        }
+    }
+    let tasks = tasks.unwrap_or(1200);
     let traffic = TrafficConfig { tasks, ..Default::default() };
+    let templates = build_templates(&traffic);
 
     println!(
         "== §7.2 production fleet: {} tasks, {} templates, mixed V100/T4, seed {:#x} ==\n",
         traffic.tasks, traffic.templates, traffic.seed
     );
-    let report = run_once(&traffic);
+    let report = run_once(&traffic, &templates, ExecutorKind::VirtualTime);
     println!("{}\n", report.render());
 
     // Reproducibility: the same seed must produce the same report,
     // byte for byte — virtual time, not wall clock, drives everything.
-    let replay = run_once(&traffic);
+    let replay = run_once(&traffic, &templates, ExecutorKind::VirtualTime);
     let (a, b) = (report.to_json().to_string(), replay.to_json().to_string());
     assert_eq!(a, b, "fleet replay diverged for the same seed");
     println!("replay check: two runs with seed {:#x} are byte-identical", traffic.seed);
@@ -63,6 +97,38 @@ fn main() {
         "mixed registry must port plans across device classes"
     );
     assert!(report.wait.p99 >= report.wait.p50);
+
+    // Wall-clock executor: the same trace on real OS threads must reach
+    // the same plan and admission decisions (§6 on real parallelism).
+    println!("\n== wall-clock executor: {threads} compile threads ==");
+    let wall = run_once(&traffic, &templates, ExecutorKind::WallClock { threads });
+    let decisions = |r: &FleetReport| {
+        (
+            r.tasks,
+            r.admitted,
+            r.fallback_only,
+            r.rejected,
+            r.exact_hits,
+            r.port_hits,
+            r.misses,
+            r.explore_jobs,
+            r.port_jobs,
+            r.port_failures,
+            r.fs_vetoes,
+        )
+    };
+    assert_eq!(
+        decisions(&wall),
+        decisions(&report),
+        "wall-clock run diverged from virtual decisions"
+    );
+    assert_eq!(wall.regressions, 0, "never-negative must hold on real threads");
+    assert!(wall.wall_elapsed_ms > 0.0);
+    println!(
+        "wall-clock: {} tasks in {:.1} ms elapsed; {} owner-run / {} stolen compiles; \
+         decisions match virtual replay",
+        wall.tasks, wall.wall_elapsed_ms, wall.compile_owner_runs, wall.compile_affinity_misses
+    );
 
     let projected = report.projected_gpu_hours_saved(30_000.0, 2.0);
     println!(
@@ -77,6 +143,16 @@ fn main() {
     );
 
     // Machine-readable summary for tracking across PRs.
+    let mut wall_json = JsonValue::obj();
+    wall_json
+        .set("threads", threads)
+        .set("elapsed_ms", wall.wall_elapsed_ms)
+        .set("served_gpu_ms", wall.served_gpu_ms)
+        .set("saved_gpu_ms", wall.saved_gpu_ms())
+        .set("compile_owner_runs", wall.compile_owner_runs)
+        .set("compile_affinity_misses", wall.compile_affinity_misses)
+        .set("regressions", wall.regressions)
+        .set("matches_virtual_decisions", true);
     let mut out = JsonValue::obj();
     out.set("bench", "production_fleet")
         .set("tasks", traffic.tasks)
@@ -84,7 +160,8 @@ fn main() {
         .set("seed", format!("{:#x}", traffic.seed))
         .set("reproducible", true)
         .set("projected_gpu_hours_saved_per_month", projected)
-        .set("report", report.to_json());
+        .set("report", report.to_json())
+        .set("wallclock", wall_json);
     let path = "BENCH_fleet.json";
     match std::fs::write(path, out.to_pretty()) {
         Ok(()) => println!("wrote {path}"),

@@ -442,7 +442,13 @@ mod tests {
         let scheds: Vec<SubRootSchedule> = grouping
             .groups
             .iter()
-            .map(|gr| if gr.is_root { SubRootSchedule::ThreadLocal } else { SubRootSchedule::BlockReuse })
+            .map(|gr| {
+                if gr.is_root {
+                    SubRootSchedule::ThreadLocal
+                } else {
+                    SubRootSchedule::BlockReuse
+                }
+            })
             .collect();
         let est = estimate_kernel(&g, &pattern, &grouping, &scheds, launch, &device, 6.0)
             .expect("block valid");
@@ -460,7 +466,13 @@ mod tests {
         let scheds: Vec<SubRootSchedule> = grouping
             .groups
             .iter()
-            .map(|gr| if gr.is_root { SubRootSchedule::ThreadLocal } else { SubRootSchedule::WarpReuse })
+            .map(|gr| {
+                if gr.is_root {
+                    SubRootSchedule::ThreadLocal
+                } else {
+                    SubRootSchedule::WarpReuse
+                }
+            })
             .collect();
         assert!(estimate_kernel(&g, &pattern, &grouping, &scheds, launch, &device, 6.0).is_none());
     }
@@ -515,7 +527,13 @@ mod tests {
         let scheds: Vec<SubRootSchedule> = grouping
             .groups
             .iter()
-            .map(|gr| if gr.is_root { SubRootSchedule::ThreadLocal } else { SubRootSchedule::WarpReuse })
+            .map(|gr| {
+                if gr.is_root {
+                    SubRootSchedule::ThreadLocal
+                } else {
+                    SubRootSchedule::WarpReuse
+                }
+            })
             .collect();
         let est = estimate_kernel(&g, &pattern, &grouping, &scheds, launch, &device, 6.0).unwrap();
         let x_bytes = 4096 * 768 * 4;

@@ -17,11 +17,9 @@ pub struct GraphKey(pub u64);
 impl GraphKey {
     /// Hash a graph's structure.
     pub fn of(graph: &Graph) -> Self {
-        let mut h = 0xcbf2_9ce4_8422_2325u64;
-        let mut mix = |v: u64| {
-            h ^= v;
-            h = h.wrapping_mul(0x0000_0100_0000_01B3);
-        };
+        use crate::util::hash::{fnv1a_u64, FNV_OFFSET};
+        let mut h = FNV_OFFSET;
+        let mut mix = |v: u64| h = fnv1a_u64(h, v);
         mix(graph.len() as u64);
         for node in graph.nodes() {
             mix(kind_tag(&node.kind));

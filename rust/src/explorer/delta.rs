@@ -108,7 +108,8 @@ impl<'g> DeltaModel<'g> {
         let bw = self.device.effective_bandwidth_gbps(occ);
         let t_mem = (bytes_read + bytes_written) as f64 / (bw * 1e3);
         // ALU side at full device throughput scaled by occupancy.
-        let ips = self.device.num_sms as f64 * 64.0 * self.device.clock_ghz * 1e3 * occ; // instr/µs
+        // instr/µs
+        let ips = self.device.num_sms as f64 * 64.0 * self.device.clock_ghz * 1e3 * occ;
         let t_alu = alu_work / ips;
         t_mem.max(t_alu).max(self.device.kernel_floor_us)
     }

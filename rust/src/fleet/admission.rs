@@ -52,12 +52,9 @@ pub struct AdmissionController {
     rejected: usize,
 }
 
-// Manual Default above needs a concrete config default; derive would
-// require AdmissionConfig: Default, which it implements.
-
 impl AdmissionController {
     pub fn new(config: AdmissionConfig) -> Self {
-        AdmissionController { config, ..Default::default() }
+        AdmissionController { config, admitted: 0, fallback_only: 0, rejected: 0 }
     }
 
     /// Decide one task given its placed queue delay, the pending

@@ -14,11 +14,17 @@ pub struct DeviceUtilization {
     pub utilization: f64,
 }
 
-/// Everything one trace replay produces. All quantities are virtual-time
-/// deterministic: two replays of the same (seed, config) are
-/// byte-identical, which the production bench asserts.
+/// Everything one trace replay produces. Under the virtual-time
+/// executor all quantities are deterministic: two replays of the same
+/// (seed, config) are byte-identical, which the production bench
+/// asserts. Under the wall-clock executor the decision fields still
+/// match the virtual replay's (the equivalence test asserts it), while
+/// the measured fields (`served_gpu_ms`, iteration percentiles,
+/// `wall_elapsed_ms`, queue accounting) reflect the real thread race.
 #[derive(Debug, Clone)]
 pub struct FleetReport {
+    /// Which executor produced this report: "virtual" or "wallclock".
+    pub executor: &'static str,
     pub tasks: usize,
     pub admitted: usize,
     pub fallback_only: usize,
@@ -51,6 +57,8 @@ pub struct FleetReport {
     pub iter_p99_ms: f64,
     /// Virtual time at which the last task finished.
     pub makespan_ms: f64,
+    /// Real elapsed time of the wall-clock run (0 under virtual time).
+    pub wall_elapsed_ms: f64,
     pub per_device: Vec<DeviceUtilization>,
 }
 
@@ -88,7 +96,8 @@ impl FleetReport {
     /// JSON snapshot (deterministic field order and values).
     pub fn to_json(&self) -> JsonValue {
         let mut o = JsonValue::obj();
-        o.set("tasks", self.tasks)
+        o.set("executor", self.executor)
+            .set("tasks", self.tasks)
             .set("admitted", self.admitted)
             .set("fallback_only", self.fallback_only)
             .set("rejected", self.rejected)
@@ -111,7 +120,8 @@ impl FleetReport {
             .set("wait_max_ms", self.wait.max)
             .set("iter_p50_ms", self.iter_p50_ms)
             .set("iter_p99_ms", self.iter_p99_ms)
-            .set("makespan_ms", self.makespan_ms);
+            .set("makespan_ms", self.makespan_ms)
+            .set("wall_elapsed_ms", self.wall_elapsed_ms);
         let devices: Vec<JsonValue> = self
             .per_device
             .iter()
@@ -133,6 +143,7 @@ impl FleetReport {
     pub fn render(&self) -> String {
         let mut out = String::new();
         let mut t = Table::new(vec!["metric", "value"]);
+        t.row(vec!["executor".to_string(), self.executor.to_string()]);
         t.row(vec!["tasks".to_string(), self.tasks.to_string()]);
         t.row(vec!["admitted".to_string(), self.admitted.to_string()]);
         t.row(vec![
@@ -180,6 +191,12 @@ impl FleetReport {
             ),
         ]);
         t.row(vec!["makespan".to_string(), format!("{} ms", fmt_f(self.makespan_ms, 1))]);
+        if self.wall_elapsed_ms > 0.0 {
+            t.row(vec![
+                "wall-clock elapsed".to_string(),
+                format!("{} ms", fmt_f(self.wall_elapsed_ms, 1)),
+            ]);
+        }
         out.push_str(&t.render());
         out.push('\n');
 
@@ -204,6 +221,7 @@ mod tests {
 
     fn report() -> FleetReport {
         FleetReport {
+            executor: "virtual",
             tasks: 10,
             admitted: 7,
             fallback_only: 2,
@@ -224,6 +242,7 @@ mod tests {
             iter_p50_ms: 0.5,
             iter_p99_ms: 1.5,
             makespan_ms: 123.0,
+            wall_elapsed_ms: 0.0,
             per_device: vec![DeviceUtilization {
                 id: 0,
                 class: "V100",
@@ -249,6 +268,8 @@ mod tests {
     fn json_has_headline_fields() {
         let j = report().to_json();
         for key in [
+            "executor",
+            "wall_elapsed_ms",
             "tasks",
             "port_hits",
             "regressions",

@@ -8,8 +8,8 @@
 //!
 //! * [`registry`] — the mixed V100/T4 device population with per-device
 //!   serving capacity.
-//! * [`queue`] — the work-stealing deque set under the bounded
-//!   compile-worker pool that throttles FS exploration.
+//! * [`queue`] — the shareable work-stealing deque set under the
+//!   bounded compile-worker pool that throttles FS exploration.
 //! * [`store`] — the shared cross-device plan store: a plan explored on
 //!   one device class is *ported* to another by re-running only the
 //!   §4.2 launch-dimension tuner ([`crate::pipeline::port_program`]).
@@ -18,12 +18,18 @@
 //! * [`sim`] — deterministic seeded traffic traces at the paper's task
 //!   scale.
 //! * [`service`] — [`FleetService`]: replays a trace through the real
-//!   optimization pipeline in virtual time.
+//!   optimization pipeline on either executor.
+//! * [`executor`] — the [`ExecutorKind`] seam: the deterministic
+//!   virtual-time replay (test harness) or the wall-clock pool, where
+//!   compile workers and per-device serving slots run on real OS
+//!   threads and hot-swap published plans mid-task; both reach the
+//!   same plan/admission decisions.
 //! * [`metrics`] — the fleet-wide report: GPU hours saved, regression
 //!   counts (must be zero), cache/portability hit rates, queue-latency
 //!   percentiles.
 
 pub mod admission;
+pub mod executor;
 pub mod metrics;
 pub mod queue;
 pub mod registry;
@@ -32,8 +38,9 @@ pub mod sim;
 pub mod store;
 
 pub use admission::{AdmissionConfig, AdmissionController, AdmitDecision};
+pub use executor::ExecutorKind;
 pub use metrics::{DeviceUtilization, FleetReport};
-pub use queue::{QueueStats, WorkStealingQueue};
+pub use queue::{owner_hash, QueueStats, WorkStealingQueue};
 pub use registry::{DeviceId, DeviceRegistry, RegisteredDevice};
 pub use service::{FleetOptions, FleetService};
 pub use sim::{build_templates, generate_trace, FleetTask, TrafficConfig};

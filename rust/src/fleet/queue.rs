@@ -9,20 +9,27 @@
 //! from the most-backlogged victim, which keeps a hot owner from
 //! starving the rest of the fleet's compilations.
 //!
-//! The implementation is deterministic and single-threaded — the fleet
-//! simulator advances virtual time, so lock-free deques would add
-//! nondeterminism for nothing. Fairness is what matters and is tested.
+//! The queue is **shareable**: every deque sits behind its own mutex
+//! and the accounting is atomic, so the same structure serves both
+//! integration points —
 //!
-//! Integration note: in the virtual-time [`super::service`], a compile
-//! job's assignment is a timestamp computation, so jobs route through
-//! push/pop immediately and *backlog lives in virtual time* (worker
-//! `free_ms` beyond now), not in the deques; the steal counter there
-//! measures owner-affinity misses (the earliest-free worker taking
-//! another owner's job). The multi-item LIFO/FIFO/longest-victim
-//! semantics below are what a wall-clock executor (ROADMAP open item)
-//! will drain, and are exercised directly by the unit tests.
+//! * the virtual-time [`super::service`] replay drives it
+//!   single-threaded (there a compile job's assignment is a timestamp
+//!   computation, jobs route through push/pop immediately, *backlog
+//!   lives in virtual time* as worker `free_ms` beyond now, and the
+//!   steal counter measures owner-affinity misses), and
+//! * the wall-clock [`super::executor`] shares one instance across its
+//!   real OS compile-worker threads, which drain the multi-item
+//!   LIFO/FIFO/longest-victim semantics concurrently.
+//!
+//! The LIFO-own/FIFO-steal/longest-victim behaviour is exercised
+//! single-threaded by the unit tests below (it stays deterministic when
+//! only one thread drives the queue); the lost/duplicate-free guarantee
+//! under contention is exercised by the multi-threaded stress test.
 
 use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
 
 /// Push/pop/steal accounting.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
@@ -32,11 +39,15 @@ pub struct QueueStats {
     pub steals: usize,
 }
 
-/// Per-worker deques with LIFO local pop and FIFO stealing.
-#[derive(Debug, Clone)]
+/// Per-worker deques with LIFO local pop and FIFO stealing. Shareable:
+/// all methods take `&self`, so one instance can sit behind an `Arc`
+/// and be driven by many worker threads at once.
+#[derive(Debug)]
 pub struct WorkStealingQueue<T> {
-    deques: Vec<VecDeque<T>>,
-    stats: QueueStats,
+    deques: Vec<Mutex<VecDeque<T>>>,
+    pushes: AtomicUsize,
+    local_pops: AtomicUsize,
+    steals: AtomicUsize,
 }
 
 impl<T> WorkStealingQueue<T> {
@@ -44,8 +55,10 @@ impl<T> WorkStealingQueue<T> {
     pub fn new(workers: usize) -> Self {
         assert!(workers > 0, "work-stealing queue needs at least one worker");
         WorkStealingQueue {
-            deques: (0..workers).map(|_| VecDeque::new()).collect(),
-            stats: QueueStats::default(),
+            deques: (0..workers).map(|_| Mutex::new(VecDeque::new())).collect(),
+            pushes: AtomicUsize::new(0),
+            local_pops: AtomicUsize::new(0),
+            steals: AtomicUsize::new(0),
         }
     }
 
@@ -55,43 +68,48 @@ impl<T> WorkStealingQueue<T> {
     }
 
     /// Enqueue an item on `worker`'s deque (index wraps).
-    pub fn push(&mut self, worker: usize, item: T) {
+    pub fn push(&self, worker: usize, item: T) {
         let w = worker % self.deques.len();
-        self.deques[w].push_back(item);
-        self.stats.pushes += 1;
+        self.deques[w].lock().unwrap().push_back(item);
+        self.pushes.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Dequeue for `worker`: LIFO from its own deque; when empty, steal
     /// FIFO from the victim with the longest backlog (lowest index on
-    /// ties, so replay is deterministic). `None` when all deques are
-    /// empty.
-    pub fn pop(&mut self, worker: usize) -> Option<T> {
+    /// ties, so a single-threaded replay is deterministic). `None` only
+    /// when a full scan observed every deque empty.
+    pub fn pop(&self, worker: usize) -> Option<T> {
         let w = worker % self.deques.len();
-        if let Some(item) = self.deques[w].pop_back() {
-            self.stats.local_pops += 1;
+        if let Some(item) = self.deques[w].lock().unwrap().pop_back() {
+            self.local_pops.fetch_add(1, Ordering::Relaxed);
             return Some(item);
         }
-        let mut victim: Option<usize> = None;
-        for (i, dq) in self.deques.iter().enumerate() {
-            if dq.is_empty() {
-                continue;
+        // Steal loop: the victim chosen from a length snapshot may be
+        // drained by a concurrent thief before we lock it, so retry the
+        // scan until an item is stolen or everything looks empty.
+        loop {
+            let mut victim: Option<(usize, usize)> = None; // (index, len)
+            for (i, dq) in self.deques.iter().enumerate() {
+                let len = dq.lock().unwrap().len();
+                if len == 0 {
+                    continue;
+                }
+                match victim {
+                    Some((_, best)) if best >= len => {}
+                    _ => victim = Some((i, len)),
+                }
             }
-            match victim {
-                Some(v) if self.deques[v].len() >= dq.len() => {}
-                _ => victim = Some(i),
+            let (v, _) = victim?;
+            if let Some(item) = self.deques[v].lock().unwrap().pop_front() {
+                self.steals.fetch_add(1, Ordering::Relaxed);
+                return Some(item);
             }
         }
-        let v = victim?;
-        let item = self.deques[v].pop_front();
-        if item.is_some() {
-            self.stats.steals += 1;
-        }
-        item
     }
 
     /// Total queued items across all deques.
     pub fn len(&self) -> usize {
-        self.deques.iter().map(|d| d.len()).sum()
+        self.deques.iter().map(|d| d.lock().unwrap().len()).sum()
     }
 
     /// True when no work is queued anywhere.
@@ -101,22 +119,37 @@ impl<T> WorkStealingQueue<T> {
 
     /// Backlog of one worker's deque.
     pub fn backlog(&self, worker: usize) -> usize {
-        self.deques[worker % self.deques.len()].len()
+        self.deques[worker % self.deques.len()].lock().unwrap().len()
     }
 
-    /// Accounting snapshot.
+    /// Accounting snapshot. Exact at quiescence (no concurrent pushes
+    /// or pops): `pushes == local_pops + steals + len()`.
     pub fn stats(&self) -> QueueStats {
-        self.stats
+        QueueStats {
+            pushes: self.pushes.load(Ordering::Relaxed),
+            local_pops: self.local_pops.load(Ordering::Relaxed),
+            steals: self.steals.load(Ordering::Relaxed),
+        }
     }
+}
+
+/// FNV-1a over a graph key and its device-class name: the owner-routing
+/// hash for compile jobs. Hashing the class *bytes* (not its length)
+/// makes same-length classes ("V100" vs "A100") route differently and
+/// lets every byte of short names like "T4" perturb the owner choice.
+pub fn owner_hash(key: u64, class: &str) -> u64 {
+    use crate::util::hash::{fnv1a_bytes, FNV_OFFSET};
+    fnv1a_bytes(fnv1a_bytes(FNV_OFFSET, &key.to_le_bytes()), class.as_bytes())
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::sync::Arc;
 
     #[test]
     fn own_pops_are_lifo_steals_are_fifo() {
-        let mut q = WorkStealingQueue::new(2);
+        let q = WorkStealingQueue::new(2);
         q.push(0, 1);
         q.push(0, 2);
         q.push(0, 3);
@@ -134,7 +167,7 @@ mod tests {
     fn stealing_spreads_a_hot_owner_evenly() {
         // All 100 jobs land on worker 0; four workers drain round-robin.
         // Fairness: every worker ends up doing an equal share.
-        let mut q = WorkStealingQueue::new(4);
+        let q = WorkStealingQueue::new(4);
         for i in 0..100 {
             q.push(0, i);
         }
@@ -154,7 +187,7 @@ mod tests {
 
     #[test]
     fn steals_prefer_longest_backlog() {
-        let mut q = WorkStealingQueue::new(3);
+        let q = WorkStealingQueue::new(3);
         q.push(0, 10);
         q.push(1, 20);
         q.push(1, 21);
@@ -167,7 +200,7 @@ mod tests {
 
     #[test]
     fn worker_index_wraps() {
-        let mut q = WorkStealingQueue::new(2);
+        let q = WorkStealingQueue::new(2);
         q.push(5, 42); // 5 % 2 == 1
         assert_eq!(q.backlog(1), 1);
         assert_eq!(q.pop(3), Some(42)); // 3 % 2 == 1: own pop
@@ -176,8 +209,91 @@ mod tests {
 
     #[test]
     fn empty_pop_returns_none() {
-        let mut q: WorkStealingQueue<u32> = WorkStealingQueue::new(1);
+        let q: WorkStealingQueue<u32> = WorkStealingQueue::new(1);
         assert_eq!(q.pop(0), None);
         assert!(q.is_empty());
+    }
+
+    #[test]
+    fn owner_hash_distinguishes_classes_and_keys() {
+        // The length-degenerate hash this replaced keyed on the class
+        // *length*: "V100"/"A100" (same length) collided entirely and
+        // "T4" barely moved the owner. FNV-1a over the bytes must
+        // separate all of these for essentially every key.
+        let keys: Vec<u64> = (0..64u64).map(|i| i.wrapping_mul(0x9E37_79B9_7F4A_7C15)).collect();
+        let differ = |a: &str, b: &str| {
+            keys.iter().filter(|&&k| owner_hash(k, a) != owner_hash(k, b)).count()
+        };
+        assert!(differ("V100", "A100") >= 60, "same-length classes must not collide");
+        assert!(differ("V100", "T4") >= 60);
+        // And the key itself spreads owners across a small pool.
+        let owners: std::collections::HashSet<u64> =
+            keys.iter().map(|&k| owner_hash(k, "V100") % 4).collect();
+        assert_eq!(owners.len(), 4, "keys must reach every worker");
+    }
+
+    #[test]
+    fn concurrent_hammer_loses_and_duplicates_nothing() {
+        // Loom-free stress test: N threads each push a disjoint range of
+        // item ids onto their own deque while popping (own-LIFO or
+        // stealing) from the shared structure. At quiescence every id
+        // must have been seen exactly once and the accounting must
+        // close: pushes == local_pops + steals, with nothing left.
+        const WORKERS: usize = 4;
+        const PER_WORKER: usize = 2_000;
+        const TOTAL: usize = WORKERS * PER_WORKER;
+        let q: Arc<WorkStealingQueue<usize>> = Arc::new(WorkStealingQueue::new(WORKERS));
+        let seen: Arc<Vec<AtomicUsize>> =
+            Arc::new((0..TOTAL).map(|_| AtomicUsize::new(0)).collect());
+        let popped = Arc::new(AtomicUsize::new(0));
+
+        let handles: Vec<_> = (0..WORKERS)
+            .map(|w| {
+                let q = Arc::clone(&q);
+                let seen = Arc::clone(&seen);
+                let popped = Arc::clone(&popped);
+                std::thread::spawn(move || {
+                    // Interleave pushes with pops so deques stay busy
+                    // and thieves race owners on live deques.
+                    for i in 0..PER_WORKER {
+                        q.push(w, w * PER_WORKER + i);
+                        if i % 3 == 0 {
+                            if let Some(item) = q.pop(w) {
+                                seen[item].fetch_add(1, Ordering::Relaxed);
+                                popped.fetch_add(1, Ordering::Relaxed);
+                            }
+                        }
+                    }
+                    // Drain until the whole population is accounted
+                    // for — with a deadline, so a lost item fails the
+                    // accounting assertions below instead of hanging
+                    // the test run.
+                    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(30);
+                    while popped.load(Ordering::Relaxed) < TOTAL {
+                        if std::time::Instant::now() > deadline {
+                            break;
+                        }
+                        match q.pop(w) {
+                            Some(item) => {
+                                seen[item].fetch_add(1, Ordering::Relaxed);
+                                popped.fetch_add(1, Ordering::Relaxed);
+                            }
+                            None => std::thread::yield_now(),
+                        }
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+
+        assert!(q.is_empty(), "items left behind");
+        for (id, slot) in seen.iter().enumerate() {
+            assert_eq!(slot.load(Ordering::Relaxed), 1, "item {id} lost or duplicated");
+        }
+        let s = q.stats();
+        assert_eq!(s.pushes, TOTAL);
+        assert_eq!(s.local_pops + s.steals, TOTAL, "accounting must close: {s:?}");
     }
 }

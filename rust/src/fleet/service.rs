@@ -5,11 +5,23 @@
 //! compile-worker pool fed through a [`WorkStealingQueue`], a
 //! [`SharedPlanStore`] making plans portable across device classes, and
 //! an [`AdmissionController`]. A seeded task trace (see [`super::sim`])
-//! is replayed in **virtual time**: serving latencies come from the
-//! per-device timing simulator, compile latencies from a deterministic
-//! cost model, so two replays of the same trace are byte-identical —
-//! while every *program* on the path (fallbacks, explored plans, ported
-//! plans) is produced by the real pipeline: `baselines::xla`,
+//! is replayed through one of two executors (see [`ExecutorKind`] and
+//! [`super::executor`]):
+//!
+//! * **Virtual time** (default): serving latencies come from the
+//!   per-device timing simulator, compile latencies from a
+//!   deterministic cost model, so two replays of the same trace are
+//!   byte-identical — the test harness.
+//! * **Wall clock**: the same trace with the same decision plane, but
+//!   full explorations and port guards run on real compile-worker
+//!   threads draining the shared work-stealing queue, and every device
+//!   serves tasks on its own thread, hot-swapping to plans the moment
+//!   they are published (§6's async compilation on actual hardware
+//!   parallelism). Plan decisions and store traffic converge to the
+//!   virtual replay's; measured latency fields differ.
+//!
+//! Either way, every *program* on the path (fallbacks, explored plans,
+//! ported plans) is produced by the real pipeline: `baselines::xla`,
 //! `explorer::explore`, `codegen::tuner`, `pipeline::port_program`, and
 //! the coordinator's never-negative guard.
 //!
@@ -22,32 +34,38 @@
 //!    hot-swapping when the producing compile finishes mid-task), a
 //!    cross-class *port* (launch-dim re-tune only), or a full
 //!    exploration on the worker pool.
-//! 4. **Serve** iterations, fallback until the plan's virtual ready
-//!    time, optimized after — never-negative guarded, so a task can
-//!    never regress past its fallback.
+//! 4. **Serve** iterations, fallback until the plan is ready,
+//!    optimized after — never-negative guarded, so a task can never
+//!    regress past its fallback.
 
 use super::admission::{AdmissionConfig, AdmissionController, AdmitDecision};
+use super::executor::{
+    guard_and_publish, iter_ms, produce_candidate, ExecutorKind, FleetCounters, LatencyMap,
+    ServeJob, WallClockPool, WallJob, WallJobKind,
+};
 use super::metrics::{DeviceUtilization, FleetReport};
-use super::queue::WorkStealingQueue;
+use super::queue::{owner_hash, QueueStats, WorkStealingQueue};
 use super::registry::DeviceRegistry;
 use super::sim::FleetTask;
 use super::store::{PlanLookup, SharedPlanStore};
-use crate::coordinator::{
-    guard_never_negative, tune_with_guards, GraphKey, ServiceMetrics, ServiceOptions,
-};
+use crate::coordinator::{GraphKey, ServiceMetrics, Session};
 use crate::explorer::ExploreOptions;
-use crate::gpu::{DeviceSpec, SimConfig, Simulator};
+use crate::gpu::DeviceSpec;
 use crate::pipeline::{self, OptimizedProgram, Tech};
 use crate::util::summarize;
-use crate::workloads::{LoopKind, Workload};
+use crate::workloads::Workload;
 use std::collections::HashMap;
-use std::sync::Arc;
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Mutex};
 
 /// Fleet configuration.
 #[derive(Debug, Clone)]
 pub struct FleetOptions {
     pub registry: DeviceRegistry,
-    /// Bounded compile pool size (the throttle on FS exploration).
+    /// Bounded compile pool size (the throttle on FS exploration) in
+    /// the *virtual admission model*; the wall-clock executor's real
+    /// thread count is chosen separately by [`ExecutorKind::WallClock`]
+    /// so decisions stay executor-independent.
     pub compile_workers: usize,
     pub admission: AdmissionConfig,
     pub explore: ExploreOptions,
@@ -61,6 +79,8 @@ pub struct FleetOptions {
     /// A cross-class port (launch-dim re-tune only) costs this fraction
     /// of the full exploration.
     pub port_cost_frac: f64,
+    /// Execution substrate for [`FleetService::run_trace`].
+    pub executor: ExecutorKind,
 }
 
 impl Default for FleetOptions {
@@ -74,6 +94,7 @@ impl Default for FleetOptions {
             explore_cost_base_ms: 10.0,
             explore_cost_per_op_ms: 1.0,
             port_cost_frac: 0.1,
+            executor: ExecutorKind::VirtualTime,
         }
     }
 }
@@ -85,12 +106,20 @@ struct CompileJob {
     class: &'static str,
 }
 
+/// Per-iteration latency of a task's FS plan: known immediately (store
+/// hit, or a virtual-mode inline compile) or pending publication by a
+/// wall-clock compile worker.
+enum FsLatency {
+    Known(f64),
+    Pending { key: u64, class: &'static str },
+}
+
 /// The multi-device serving layer.
 pub struct FleetService {
     opts: FleetOptions,
     templates: Vec<Arc<Workload>>,
     template_keys: Vec<GraphKey>,
-    store: SharedPlanStore,
+    store: Arc<SharedPlanStore>,
     admission: AdmissionController,
     queue: WorkStealingQueue<CompileJob>,
     /// Virtual time each compile worker frees up.
@@ -103,23 +132,29 @@ pub struct FleetService {
     device_tasks: Vec<usize>,
     device_busy_ms: Vec<f64>,
     /// Per device instance: iteration latencies (coordinator metrics,
-    /// aggregated fleet-wide in the report).
-    device_metrics: Vec<ServiceMetrics>,
+    /// aggregated fleet-wide in the report). `Arc` so wall-clock
+    /// serving sessions can record into them from their device thread.
+    device_metrics: Vec<Arc<ServiceMetrics>>,
     /// (template, class) → fallback program + per-iteration ms.
     fallbacks: HashMap<(usize, &'static str), (Arc<OptimizedProgram>, f64)>,
-    /// (graph key, class) → per-iteration ms of the stored program.
-    latency: HashMap<(u64, &'static str), f64>,
+    /// (graph key, class) → per-iteration ms of the stored program;
+    /// shared with the wall-clock pool, where an entry's appearance is
+    /// the publication signal.
+    latency: LatencyMap,
+    /// Explore/port/veto accounting shared with the compile pool.
+    counters: Arc<FleetCounters>,
+    /// Live wall-clock substrate during a `run_trace` (None ⇒ virtual).
+    pool: Option<WallClockPool>,
     // Accumulators.
     submitted: usize,
-    explore_jobs: usize,
-    port_jobs: usize,
-    port_failures: usize,
-    fs_vetoes: usize,
     regressions: usize,
     served_gpu_ms: f64,
     fallback_gpu_ms: f64,
     waits_ms: Vec<f64>,
     makespan_ms: f64,
+    /// Queue accounting of the torn-down wall-clock pool, when one ran.
+    wall_queue: Option<QueueStats>,
+    wall_elapsed_ms: f64,
 }
 
 impl FleetService {
@@ -145,28 +180,43 @@ impl FleetService {
             slots,
             device_tasks: vec![0; n_dev],
             device_busy_ms: vec![0.0; n_dev],
-            device_metrics: (0..n_dev).map(|_| ServiceMetrics::new()).collect(),
+            device_metrics: (0..n_dev).map(|_| Arc::new(ServiceMetrics::new())).collect(),
             fallbacks: HashMap::new(),
-            latency: HashMap::new(),
+            latency: Arc::new(Mutex::new(HashMap::new())),
+            counters: Arc::new(FleetCounters::default()),
+            pool: None,
             submitted: 0,
-            explore_jobs: 0,
-            port_jobs: 0,
-            port_failures: 0,
-            fs_vetoes: 0,
             regressions: 0,
             served_gpu_ms: 0.0,
             fallback_gpu_ms: 0.0,
             waits_ms: Vec::new(),
             makespan_ms: 0.0,
+            wall_queue: None,
+            wall_elapsed_ms: 0.0,
             templates: templates.into_iter().map(Arc::new).collect(),
             template_keys,
-            store: SharedPlanStore::new(),
+            store: Arc::new(SharedPlanStore::new()),
             opts,
         }
     }
 
-    /// Replay a trace (must be sorted by arrival) and report.
+    /// Replay a trace (must be sorted by arrival) and report. Under
+    /// [`ExecutorKind::WallClock`] this spins up the compile-worker and
+    /// per-device serving threads for the duration of the trace and
+    /// quiesces them before reporting.
     pub fn run_trace(&mut self, trace: &[FleetTask]) -> FleetReport {
+        if let ExecutorKind::WallClock { threads } = self.opts.executor {
+            self.pool = Some(WallClockPool::start(
+                threads,
+                self.opts.registry.len(),
+                self.templates.clone(),
+                Arc::clone(&self.store),
+                Arc::clone(&self.latency),
+                Arc::clone(&self.counters),
+                self.opts.explore.clone(),
+                self.opts.never_negative,
+            ));
+        }
         let mut last = 0.0f64;
         for task in trace {
             assert!(
@@ -176,19 +226,20 @@ impl FleetService {
             last = task.arrival_ms;
             self.submit(task);
         }
+        if let Some(pool) = self.pool.take() {
+            let totals = pool.shutdown();
+            self.served_gpu_ms = totals.served_gpu_ms;
+            self.device_busy_ms = totals.device_busy_ms;
+            self.regressions = totals.regressions;
+            self.wall_queue = Some(totals.queue);
+            self.wall_elapsed_ms = totals.elapsed_ms;
+        }
         self.report()
     }
 
     /// Shared plan store (inspection).
     pub fn store(&self) -> &SharedPlanStore {
         &self.store
-    }
-
-    /// Per-iteration simulated latency of a program on a device.
-    fn iter_ms(spec: &DeviceSpec, prog: &OptimizedProgram, loop_kind: LoopKind) -> f64 {
-        Simulator::new(spec.clone(), SimConfig::xla_runtime())
-            .run(&prog.kernels, loop_kind)
-            .e2e_ms()
     }
 
     fn explore_cost_ms(&self, w: &Workload) -> f64 {
@@ -203,17 +254,19 @@ impl FleetService {
         }
         let w = Arc::clone(&self.templates[template]);
         let prog = Arc::new(pipeline::optimize(&w, spec, Tech::Xla, &self.opts.explore));
-        let ms = Self::iter_ms(spec, &prog, w.loop_kind);
+        let ms = iter_ms(spec, &prog, w.loop_kind);
         self.fallbacks.insert((template, spec.name), (Arc::clone(&prog), ms));
         (prog, ms)
     }
 
-    /// Route one job through the work-stealing pool; returns its virtual
-    /// finish time. Jobs arrive in time order and assignment is a pure
-    /// timestamp computation, so each job is pushed and immediately
-    /// taken by the earliest-free worker — backlog manifests as worker
-    /// `free_ms` beyond `enqueue_at`, and the queue's steal counter
-    /// records owner-affinity misses (worker != hash-chosen owner).
+    /// Advance the virtual compile clocks for one job and return its
+    /// virtual finish time. Jobs arrive in time order and assignment is
+    /// a pure timestamp computation: the earliest-free virtual worker
+    /// takes the job, backlog manifests as worker `free_ms` beyond
+    /// `enqueue_at`, and (virtual mode) the queue's steal counter
+    /// records owner-affinity misses (worker != FNV-chosen owner). In
+    /// wall-clock mode the real job is routed through the pool's own
+    /// shared queue instead, so the local queue is left untouched.
     fn schedule_compile(
         &mut self,
         enqueue_at: f64,
@@ -221,16 +274,20 @@ impl FleetService {
         class: &'static str,
         cost_ms: f64,
     ) -> f64 {
-        let owner = (key.0 as usize ^ class.len()) % self.opts.compile_workers;
-        self.queue.push(owner, CompileJob { key: key.0, class });
+        if self.pool.is_none() {
+            let owner = (owner_hash(key.0, class) % self.opts.compile_workers as u64) as usize;
+            self.queue.push(owner, CompileJob { key: key.0, class });
+        }
         let mut w = 0;
         for i in 1..self.worker_free_ms.len() {
             if self.worker_free_ms[i] < self.worker_free_ms[w] {
                 w = i;
             }
         }
-        let job = self.queue.pop(w).expect("job just queued");
-        debug_assert_eq!((job.key, job.class), (key.0, class));
+        if self.pool.is_none() {
+            let job = self.queue.pop(w).expect("job just queued");
+            debug_assert_eq!((job.key, job.class), (key.0, class));
+        }
         let start = enqueue_at.max(self.worker_free_ms[w]);
         let finish = start + cost_ms;
         self.worker_free_ms[w] = finish;
@@ -241,7 +298,8 @@ impl FleetService {
     /// Full exploration on the worker pool: real FS optimization with
     /// the coordinator's guards; the store records what the class will
     /// serve (FS plan, or the fallback when vetoed). Returns (virtual
-    /// ready time, per-iteration ms once ready).
+    /// ready time, per-iteration latency — pending publication when the
+    /// exploration was handed to a wall-clock worker).
     fn run_explore(
         &mut self,
         template: usize,
@@ -250,39 +308,55 @@ impl FleetService {
         fallback: &Arc<OptimizedProgram>,
         fb_ms: f64,
         enqueue_at: f64,
-    ) -> (f64, f64) {
+    ) -> (f64, FsLatency) {
         let w = Arc::clone(&self.templates[template]);
         let cost = self.explore_cost_ms(&w);
         let ready = self.schedule_compile(enqueue_at, key, spec.name, cost);
-        self.explore_jobs += 1;
-        let svc_opts = ServiceOptions {
-            device: spec.clone(),
-            explore: self.opts.explore.clone(),
-            async_compile: false,
-            never_negative: self.opts.never_negative,
-            inject_compile_failure: false,
-            plan_store: None,
-        };
-        match tune_with_guards(&w, &svc_opts, fallback) {
-            Some(prog) => {
-                let ms = Self::iter_ms(spec, &prog, w.loop_kind);
-                self.store.insert(key, spec.name, prog, ready);
-                self.latency.insert((key.0, spec.name), ms);
-                (ready, ms)
-            }
-            None => {
-                // Vetoed (or crashed): production pins the fallback for
-                // this class so later tasks skip the re-tuning attempt.
-                self.fs_vetoes += 1;
-                self.store.insert(key, spec.name, Arc::clone(fallback), ready);
-                self.latency.insert((key.0, spec.name), fb_ms);
-                (ready, fb_ms)
-            }
+        self.counters.explore_jobs.fetch_add(1, Ordering::Relaxed);
+        if let Some(pool) = self.pool.as_ref() {
+            pool.enqueue_compile(WallJob {
+                template,
+                key,
+                spec: spec.clone(),
+                fallback: Arc::clone(fallback),
+                fb_ms,
+                ready_ms: ready,
+                kind: WallJobKind::Explore,
+            });
+            return (ready, FsLatency::Pending { key: key.0, class: spec.name });
         }
+        // Vetoed/crashed compiles (None) pin the fallback for this
+        // class so later tasks skip the re-tuning attempt; either way
+        // the outcome goes through the produce/publish path shared with
+        // the wall-clock workers.
+        let candidate = produce_candidate(
+            &w,
+            spec,
+            &self.opts.explore,
+            self.opts.never_negative,
+            fallback,
+            WallJobKind::Explore,
+        );
+        let ms = guard_and_publish(
+            &w,
+            spec,
+            key,
+            candidate,
+            fallback,
+            fb_ms,
+            ready,
+            &self.store,
+            &self.latency,
+            &self.counters,
+        );
+        (ready, FsLatency::Known(ms))
     }
 
     /// Cross-class port: re-tune launch dims only (a fraction of the
-    /// exploration cost), guard, store. Falls back to a full
+    /// exploration cost), guard, store. The launch-dim lowering itself
+    /// stays on the dispatcher in both executors (it is the cheap ~10%
+    /// and its outcome steers the decision stream); the wall-clock
+    /// executor offloads the guard + publication. Falls back to a full
     /// exploration when the plan cannot schedule on the target class.
     #[allow(clippy::too_many_arguments)]
     fn run_port(
@@ -295,38 +369,52 @@ impl FleetService {
         fallback: &Arc<OptimizedProgram>,
         fb_ms: f64,
         now: f64,
-    ) -> (f64, f64) {
+    ) -> (f64, FsLatency) {
         let w = Arc::clone(&self.templates[template]);
         let cost = self.explore_cost_ms(&w) * self.opts.port_cost_frac;
         let enqueue_at = now.max(available_ms);
         let ready = self.schedule_compile(enqueue_at, key, spec.name, cost);
-        self.port_jobs += 1;
+        self.counters.port_jobs.fetch_add(1, Ordering::Relaxed);
         match pipeline::port_program(&w.graph, source, spec, w.loop_kind) {
             Some(ported) => {
-                let accepted = if self.opts.never_negative {
-                    guard_never_negative(&w, spec, ported, fallback)
-                } else {
-                    Some(Arc::new(ported))
-                };
-                match accepted {
-                    Some(prog) => {
-                        let ms = Self::iter_ms(spec, &prog, w.loop_kind);
-                        self.store.insert(key, spec.name, prog, ready);
-                        self.latency.insert((key.0, spec.name), ms);
-                        (ready, ms)
-                    }
-                    None => {
-                        self.fs_vetoes += 1;
-                        self.store.insert(key, spec.name, Arc::clone(fallback), ready);
-                        self.latency.insert((key.0, spec.name), fb_ms);
-                        (ready, fb_ms)
-                    }
+                if let Some(pool) = self.pool.as_ref() {
+                    pool.enqueue_compile(WallJob {
+                        template,
+                        key,
+                        spec: spec.clone(),
+                        fallback: Arc::clone(fallback),
+                        fb_ms,
+                        ready_ms: ready,
+                        kind: WallJobKind::GuardPort { ported },
+                    });
+                    return (ready, FsLatency::Pending { key: key.0, class: spec.name });
                 }
+                let accepted = produce_candidate(
+                    &w,
+                    spec,
+                    &self.opts.explore,
+                    self.opts.never_negative,
+                    fallback,
+                    WallJobKind::GuardPort { ported },
+                );
+                let ms = guard_and_publish(
+                    &w,
+                    spec,
+                    key,
+                    accepted,
+                    fallback,
+                    fb_ms,
+                    ready,
+                    &self.store,
+                    &self.latency,
+                    &self.counters,
+                );
+                (ready, FsLatency::Known(ms))
             }
             None => {
                 // Unschedulable on this class: pay the full exploration,
                 // starting where the failed port left off.
-                self.port_failures += 1;
+                self.counters.port_failures.fetch_add(1, Ordering::Relaxed);
                 self.run_explore(template, spec, key, fallback, fb_ms, ready)
             }
         }
@@ -338,7 +426,10 @@ impl FleetService {
         self.submitted += 1;
 
         // 1. Place: least-loaded serving slot fleet-wide (earliest
-        // free; ties resolve to the lowest device/slot index).
+        // free; ties resolve to the lowest device/slot index). Both
+        // executors place on the virtual slot clocks — trace arrivals
+        // are virtual timestamps either way, which is what makes the
+        // wall-clock run converge to the virtual replay's decisions.
         let (mut best_d, mut best_s) = (0usize, 0usize);
         for (d, slots) in self.slots.iter().enumerate() {
             for (s, &free) in slots.iter().enumerate() {
@@ -351,6 +442,13 @@ impl FleetService {
         let wait = start - now;
         let spec = self.opts.registry.devices()[best_d].spec.clone();
         let key = self.template_keys[task.template];
+
+        // Wall clock: publication barrier — wait out any in-flight
+        // compile of this same graph so the store lookup below sees
+        // exactly what the virtual replay would.
+        if let Some(pool) = self.pool.as_ref() {
+            pool.await_key(key.0);
+        }
 
         // 2. Resolve plan availability + admission. Arrivals are
         // monotone, so finished compiles can be dropped as we go
@@ -367,24 +465,24 @@ impl FleetService {
         let w = Arc::clone(&self.templates[task.template]);
         let (fallback, fb_ms) = self.fallback_for(task.template, &spec);
 
-        // 3. FS availability: per-iteration ms + virtual ready time.
-        // Store accounting records *acted-on* outcomes only: a
+        // 3. FS availability: per-iteration latency + virtual ready
+        // time. Store accounting records *acted-on* outcomes only: a
         // backpressured task that merely looked does not count.
-        let fs: Option<(f64, f64)> = match lookup {
-            PlanLookup::Hit { prog, ready_ms } => {
+        let fs: Option<(FsLatency, f64)> = match lookup {
+            PlanLookup::Hit { ready_ms, .. } => {
                 self.store.note_exact_hit();
-                let ms = self
-                    .latency
-                    .get(&(key.0, spec.name))
-                    .copied()
-                    .unwrap_or_else(|| Self::iter_ms(&spec, &prog, w.loop_kind));
-                Some((ms, ready_ms))
+                // Every store insert goes through `guard_and_publish`,
+                // which pairs it with a latency entry — a miss here is
+                // a broken publication invariant, not a cache miss.
+                let known = self.latency.lock().unwrap().get(&(key.0, spec.name)).copied();
+                let ms = known.expect("store hit must have a published latency");
+                Some((FsLatency::Known(ms), ready_ms))
             }
             PlanLookup::Portable { source, available_ms, .. }
                 if decision == AdmitDecision::Admit =>
             {
                 self.store.note_port_hit();
-                let (ready, ms) = self.run_port(
+                let (ready, lat) = self.run_port(
                     task.template,
                     &spec,
                     key,
@@ -394,40 +492,83 @@ impl FleetService {
                     fb_ms,
                     now,
                 );
-                Some((ms, ready))
+                Some((lat, ready))
             }
             PlanLookup::Miss if decision == AdmitDecision::Admit => {
                 self.store.note_miss();
-                let (ready, ms) =
+                let (ready, lat) =
                     self.run_explore(task.template, &spec, key, &fallback, fb_ms, now);
-                Some((ms, ready))
+                Some((lat, ready))
             }
             // Compile backpressure: serve the fallback for the whole
             // task; no optimization work is enqueued.
             _ => None,
         };
 
-        // 4. Serve iterations in virtual time, hot-swapping to the FS
-        // program once its compile finishes (§6 at fleet scale).
+        // Wall clock: hand the task to its device's serving thread
+        // *before* advancing the virtual clocks, so real serving
+        // overlaps any publication wait the bookkeeping below incurs.
+        // The session crosses the thread boundary serving the fallback
+        // and is hot-swapped there when the plan publishes (§6).
+        if let Some(pool) = self.pool.as_ref() {
+            let session = Session::serving_fallback(
+                Arc::clone(&fallback),
+                Arc::clone(&self.device_metrics[best_d]),
+                w.loop_kind,
+            );
+            pool.send_serve(ServeJob {
+                session,
+                device: best_d,
+                iterations: task.iterations,
+                fb_ms,
+                fs: fs.as_ref().map(|_| (key, spec.name)),
+            });
+        }
+
+        // 4. Advance the virtual clocks through the task's iterations,
+        // hot-swapping to the FS latency once its compile finishes in
+        // virtual time (§6 at fleet scale). Both executors run this —
+        // placement, waits and makespan all derive from it — but only
+        // the virtual executor also records metrics here (the
+        // wall-clock executor's serving threads measure for real).
+        let fb_total = fb_ms * task.iterations as f64;
+        let mut fs_state = fs;
         let mut cursor = start;
         let mut served = 0.0f64;
         for _ in 0..task.iterations {
-            let iter = match fs {
-                Some((fs_ms, ready)) if cursor >= ready => fs_ms,
+            let iter = match &mut fs_state {
+                Some((lat, ready)) if cursor >= *ready => match lat {
+                    FsLatency::Known(ms) => *ms,
+                    FsLatency::Pending { key, class } => {
+                        // The task's virtual serving window crossed its
+                        // compile's virtual finish: the bookkeeping
+                        // needs the published latency now (rare — most
+                        // tasks drain on the fallback first).
+                        let pool = self.pool.as_ref().expect("wall-clock pool");
+                        pool.await_key(*key);
+                        let got = self.latency.lock().unwrap().get(&(*key, *class)).copied();
+                        let ms = got.expect("compile published its latency");
+                        *lat = FsLatency::Known(ms);
+                        ms
+                    }
+                },
                 _ => fb_ms,
             };
-            self.device_metrics[best_d].record_iteration(iter);
+            if self.pool.is_none() {
+                self.device_metrics[best_d].record_iteration(iter);
+            }
             cursor += iter;
             served += iter;
         }
-        let fb_total = fb_ms * task.iterations as f64;
-        if served > fb_total + 1e-9 {
-            self.regressions += 1; // the guard must make this unreachable
+        if self.pool.is_none() {
+            if served > fb_total + 1e-9 {
+                self.regressions += 1; // the guard must make this unreachable
+            }
+            self.device_busy_ms[best_d] += served;
+            self.served_gpu_ms += served;
         }
         self.slots[best_d][best_s] = cursor;
         self.device_tasks[best_d] += 1;
-        self.device_busy_ms[best_d] += served;
-        self.served_gpu_ms += served;
         self.fallback_gpu_ms += fb_total;
         self.waits_ms.push(wait);
         self.makespan_ms = self.makespan_ms.max(cursor);
@@ -437,8 +578,8 @@ impl FleetService {
     pub fn report(&self) -> FleetReport {
         let (admitted, fallback_only, rejected) = self.admission.counts();
         let store = self.store.stats();
-        let qstats = self.queue.stats();
-        let agg = ServiceMetrics::aggregate(self.device_metrics.iter());
+        let qstats = self.wall_queue.unwrap_or_else(|| self.queue.stats());
+        let agg = ServiceMetrics::aggregate(self.device_metrics.iter().map(|m| &**m));
         let iter_summary = summarize(&agg.latencies());
         let per_device = self
             .opts
@@ -458,6 +599,7 @@ impl FleetService {
             })
             .collect();
         FleetReport {
+            executor: self.opts.executor.name(),
             tasks: self.submitted,
             admitted,
             fallback_only,
@@ -465,10 +607,10 @@ impl FleetService {
             exact_hits: store.exact_hits,
             port_hits: store.port_hits,
             misses: store.misses,
-            explore_jobs: self.explore_jobs,
-            port_jobs: self.port_jobs,
-            port_failures: self.port_failures,
-            fs_vetoes: self.fs_vetoes,
+            explore_jobs: self.counters.explore_jobs.load(Ordering::Relaxed),
+            port_jobs: self.counters.port_jobs.load(Ordering::Relaxed),
+            port_failures: self.counters.port_failures.load(Ordering::Relaxed),
+            fs_vetoes: self.counters.fs_vetoes.load(Ordering::Relaxed),
             regressions: self.regressions,
             compile_owner_runs: qstats.local_pops,
             compile_affinity_misses: qstats.steals,
@@ -478,6 +620,7 @@ impl FleetService {
             iter_p50_ms: iter_summary.p50,
             iter_p99_ms: iter_summary.p99,
             makespan_ms: self.makespan_ms,
+            wall_elapsed_ms: self.wall_elapsed_ms,
             per_device,
         }
     }
@@ -605,5 +748,65 @@ mod tests {
         assert_eq!(r.port_hits, 0, "single class never ports");
         assert_eq!(r.port_jobs, 0);
         assert_eq!(r.compile_owner_runs + r.compile_affinity_misses, r.explore_jobs);
+    }
+
+    #[test]
+    fn wallclock_executor_converges_to_virtual_decisions() {
+        // The tentpole equivalence claim: the same trace through real
+        // OS threads reaches the same plan and admission decisions as
+        // the deterministic virtual replay. Latency *measurements*
+        // (served GPU ms, iteration percentiles, elapsed wall time) are
+        // real and may differ; decisions may not.
+        let traffic = small_traffic();
+        let templates = build_templates(&traffic);
+        let trace = generate_trace(&traffic);
+        let base = FleetOptions {
+            registry: DeviceRegistry::mixed(1, 1, 2),
+            compile_workers: 2,
+            ..Default::default()
+        };
+        let virt = {
+            let mut svc = FleetService::new(base.clone(), templates.clone());
+            svc.run_trace(&trace)
+        };
+        // Three real compile threads against a two-worker virtual
+        // admission model: decisions must converge for any thread count.
+        let wall = {
+            let opts = FleetOptions {
+                executor: ExecutorKind::WallClock { threads: 3 },
+                ..base
+            };
+            let mut svc = FleetService::new(opts, templates.clone());
+            svc.run_trace(&trace)
+        };
+        assert_eq!(wall.executor, "wallclock");
+        assert_eq!(virt.executor, "virtual");
+        // Plan decisions, admission decisions and store traffic are
+        // executor-independent...
+        assert_eq!(wall.tasks, virt.tasks);
+        assert_eq!(wall.admitted, virt.admitted);
+        assert_eq!(wall.fallback_only, virt.fallback_only);
+        assert_eq!(wall.rejected, virt.rejected);
+        assert_eq!(wall.exact_hits, virt.exact_hits);
+        assert_eq!(wall.port_hits, virt.port_hits);
+        assert_eq!(wall.misses, virt.misses);
+        assert_eq!(wall.explore_jobs, virt.explore_jobs);
+        assert_eq!(wall.port_jobs, virt.port_jobs);
+        assert_eq!(wall.port_failures, virt.port_failures);
+        assert_eq!(wall.fs_vetoes, virt.fs_vetoes);
+        // ...as are the virtual placement clocks feeding them...
+        assert_eq!(wall.wait.p50, virt.wait.p50);
+        assert_eq!(wall.wait.p99, virt.wait.p99);
+        assert_eq!(wall.makespan_ms, virt.makespan_ms);
+        assert_eq!(wall.fallback_gpu_ms, virt.fallback_gpu_ms);
+        // ...and the zero-regression guarantee holds on real threads.
+        assert_eq!(virt.regressions, 0);
+        assert_eq!(wall.regressions, 0);
+        assert!(wall.wall_elapsed_ms > 0.0, "wall run must measure elapsed time");
+        assert_eq!(virt.wall_elapsed_ms, 0.0);
+        // Wall-clock serving is a real measurement, not a replay — but
+        // the guard still caps it at fallback-only cost.
+        assert!(wall.served_gpu_ms > 0.0);
+        assert!(wall.served_gpu_ms <= wall.fallback_gpu_ms + 1e-6);
     }
 }

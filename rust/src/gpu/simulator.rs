@@ -121,7 +121,8 @@ impl Simulator {
     pub fn kernel_time_us(&self, k: &KernelSpec) -> f64 {
         match k.class {
             KernelClass::Memcpy => {
-                let t = k.bytes_read as f64 / (self.device.hbm_gbps * 1e3); // bytes/GBps → µs·1e-3
+                // bytes/GBps → µs·1e-3
+                let t = k.bytes_read as f64 / (self.device.hbm_gbps * 1e3);
                 (t / 1e0).max(self.config.memcpy_floor_us)
             }
             KernelClass::ComputeIntensive { flops } => {
@@ -142,7 +143,8 @@ impl Simulator {
                 }
                 // Memory side: bytes / effective bandwidth.
                 let bw = self.device.effective_bandwidth_gbps(occ); // GB/s
-                let t_mem_us = k.total_bytes() as f64 / (bw * 1e3); // bytes / (GB/s) = ns → /1e3 µs
+                // bytes / (GB/s) = ns → /1e3 µs
+                let t_mem_us = k.total_bytes() as f64 / (bw * 1e3);
                 // ALU side: Eq. 1 wave model.
                 let n_warp = k.launch.total_warps(self.device.warp_size);
                 let slots = (self.device.total_warp_slots() as f64 * occ).max(1.0);

@@ -136,7 +136,11 @@ impl Simulator {
         for k in kernels {
             let (lane, host_us) = match k.class {
                 KernelClass::Memcpy => {
-                    let glue = if loop_kind != LoopKind::None { self.config.loop_glue_us } else { 0.0 };
+                    let glue = if loop_kind != LoopKind::None {
+                        self.config.loop_glue_us
+                    } else {
+                        0.0
+                    };
                     ("cpy", self.config.host_per_memcpy_us + glue)
                 }
                 KernelClass::ComputeIntensive { .. } => ("math", host_per_kernel),

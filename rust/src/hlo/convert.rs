@@ -387,7 +387,10 @@ ENTRY main {
 "#;
         let m = parse_module(text).unwrap();
         let err = to_graph(&m).unwrap_err();
-        assert!(matches!(err, ConvertError::UnsupportedOpcode { ref opcode, .. } if opcode == "while"));
+        assert!(matches!(
+            err,
+            ConvertError::UnsupportedOpcode { ref opcode, .. } if opcode == "while"
+        ));
     }
 
     #[test]

@@ -148,7 +148,9 @@ fn emit_instruction(
     let arg = |i: usize| ssa(graph.node(node.inputs[i.min(node.inputs.len() - 1)]));
     let err = |reason: &str| EmitError { node: node.name.clone(), reason: reason.into() };
 
-    let simple_unary = |opcode: &str| format!("{out} = {sh} {opcode}({})", ssa(graph.node(node.inputs[0])));
+    let simple_unary = |opcode: &str| {
+        format!("{out} = {sh} {opcode}({})", ssa(graph.node(node.inputs[0])))
+    };
     // HLO forbids implicit broadcast: a binary operand whose shape is
     // not the output shape (scalar constants everywhere in LN/dropout)
     // gets an explicit broadcast prelude line.
@@ -498,7 +500,9 @@ mod tests {
         g2.validate().unwrap();
         // Same reduction / expensive-op counts (helpers add constants,
         // so totals differ; the fusion-relevant census must not).
-        let census = |g: &Graph, c: OpClass| g.nodes().iter().filter(|n| n.kind.class() == c).count();
+        let census = |g: &Graph, c: OpClass| {
+            g.nodes().iter().filter(|n| n.kind.class() == c).count()
+        };
         assert_eq!(census(&g, OpClass::Reduction), census(&g2, OpClass::Reduction));
         assert_eq!(
             census(&g, OpClass::ExpensiveElementwise),

@@ -19,9 +19,11 @@
 //!   workload graph as executable HLO text (and optionally compile +
 //!   run it on the PJRT CPU client as a smoke test).
 //! * `fstitch fleet [--v100 N] [--t4 N] [--capacity C] [--workers K]
-//!   [--tasks N] [--rate MS] [--templates T] [--seed S] [--out FILE]` —
-//!   replay a deterministic task trace through the multi-device fleet
-//!   service (§7.2) and print the fleet-wide report.
+//!   [--tasks N] [--rate MS] [--templates T] [--seed S] [--out FILE]
+//!   [--executor virtual|wallclock] [--threads N]` — replay a
+//!   deterministic task trace through the multi-device fleet service
+//!   (§7.2) and print the fleet-wide report; `wallclock` runs compile
+//!   workers and per-device serving slots on real OS threads.
 
 use fusion_stitching::coordinator::{JitService, ServiceOptions};
 use fusion_stitching::fleet;
@@ -309,18 +311,39 @@ fn main() {
             if workers == 0 {
                 bad_flag("--workers", "compile pool needs at least one worker");
             }
+            // --executor wallclock [--threads N]: real OS threads for
+            // compile workers and per-device serving slots; decisions
+            // converge to the virtual replay's. --threads alone
+            // implies wallclock.
+            let threads_flag = get_flag("--threads");
+            let threads = match &threads_flag {
+                None => workers,
+                Some(s) => s.parse().unwrap_or_else(|_| bad_flag("--threads", s)),
+            };
+            if threads == 0 {
+                bad_flag("--threads", "need at least one compile thread");
+            }
+            let executor = match get_flag("--executor").as_deref() {
+                Some("wallclock") => fleet::ExecutorKind::WallClock { threads },
+                None if threads_flag.is_some() => fleet::ExecutorKind::WallClock { threads },
+                Some("virtual") | None => fleet::ExecutorKind::VirtualTime,
+                Some(other) => bad_flag("--executor", other),
+            };
             let opts = fleet::FleetOptions {
                 registry: fleet::DeviceRegistry::mixed(v100s, t4s, capacity),
                 compile_workers: workers,
+                executor,
                 ..Default::default()
             };
             println!(
-                "== fleet: {} tasks over {} templates on {} devices ({} slots), seed {:#x} ==\n",
+                "== fleet: {} tasks over {} templates on {} devices ({} slots), \
+                 seed {:#x}, executor {} ==\n",
                 traffic.tasks,
                 traffic.templates,
                 opts.registry.len(),
                 opts.registry.total_capacity(),
-                traffic.seed
+                traffic.seed,
+                executor.name()
             );
             let templates = fleet::build_templates(&traffic);
             let trace = fleet::generate_trace(&traffic);
@@ -335,6 +358,12 @@ fn main() {
                 report.port_hits,
                 report.regressions
             );
+            if report.wall_elapsed_ms > 0.0 {
+                println!(
+                    "wall-clock executor: {} compile threads finished the trace in {:.1} ms",
+                    threads, report.wall_elapsed_ms
+                );
+            }
             if let Some(out) = get_flag("--out") {
                 match std::fs::write(&out, report.to_json().to_pretty()) {
                     Ok(()) => println!("wrote {out}"),
@@ -347,7 +376,13 @@ fn main() {
         }
         _ => {
             println!("fstitch — FusionStitching (Zheng et al., 2020) reproduction");
-            println!("usage: fstitch <list|optimize|inspect|serve|report|hlo|trace|emit|fleet> [--model NAME] [--device v100|t4] [--iters N] [--dot] [--file HLO] [--explore] [--tech tf|xla|fs] [--out FILE] [--run] [--v100 N] [--t4 N] [--capacity C] [--workers K] [--tasks N] [--rate MS] [--templates T] [--seed S]");
+            println!(
+                "usage: fstitch <list|optimize|inspect|serve|report|hlo|trace|emit|fleet> \
+                 [--model NAME] [--device v100|t4] [--iters N] [--dot] [--file HLO] \
+                 [--explore] [--tech tf|xla|fs] [--out FILE] [--run] [--v100 N] [--t4 N] \
+                 [--capacity C] [--workers K] [--tasks N] [--rate MS] [--templates T] \
+                 [--seed S] [--executor virtual|wallclock] [--threads N]"
+            );
         }
     }
 }

@@ -1,0 +1,42 @@
+//! FNV-1a hashing primitives, shared by graph keying
+//! ([`crate::coordinator::GraphKey`]) and fleet compile-job routing
+//! ([`crate::fleet::owner_hash`]) so the constants live in one place.
+
+/// FNV-1a 64-bit offset basis.
+pub const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+/// FNV-1a 64-bit prime.
+pub const FNV_PRIME: u64 = 0x0000_0100_0000_01B3;
+
+/// Fold one 64-bit value into an FNV-1a accumulator (word granularity:
+/// the whole value is one mix step, as the graph keyer uses).
+pub fn fnv1a_u64(h: u64, v: u64) -> u64 {
+    (h ^ v).wrapping_mul(FNV_PRIME)
+}
+
+/// Fold a byte slice into an FNV-1a accumulator (classic byte-at-a-time
+/// FNV-1a, as the fleet's owner router uses).
+pub fn fnv1a_bytes(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h = fnv1a_u64(h, u64::from(b));
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn byte_fold_matches_reference_vector() {
+        // Well-known FNV-1a test vector: "a" → 0xaf63dc4c8601ec8c.
+        assert_eq!(fnv1a_bytes(FNV_OFFSET, b"a"), 0xaf63_dc4c_8601_ec8c);
+        // Empty input leaves the accumulator untouched.
+        assert_eq!(fnv1a_bytes(FNV_OFFSET, b""), FNV_OFFSET);
+    }
+
+    #[test]
+    fn word_fold_is_one_mix_step() {
+        assert_eq!(fnv1a_u64(FNV_OFFSET, 0), FNV_OFFSET.wrapping_mul(FNV_PRIME));
+        assert_ne!(fnv1a_u64(FNV_OFFSET, 1), fnv1a_u64(FNV_OFFSET, 2));
+    }
+}

@@ -7,6 +7,7 @@
 //! helpers for latency samples, and a micro-benchmark timer used by the
 //! `rust/benches/` harnesses.
 
+pub mod hash;
 pub mod json;
 pub mod prng;
 pub mod stats;

@@ -31,9 +31,15 @@ impl Prng {
     }
 
     /// Uniform in `[0, bound)`. `bound` must be non-zero.
+    ///
+    /// Uses Lemire's widening-multiply reduction: `(x · bound) >> 64`
+    /// maps the 64-bit draw onto `[0, bound)` with bias bounded by
+    /// `bound / 2^64` — negligible for every bound this crate uses.
+    /// The previous `x % bound` biased low values whenever `bound`
+    /// did not divide `2^64`, skewing e.g. victim/template draws.
     pub fn below(&mut self, bound: usize) -> usize {
         assert!(bound > 0, "Prng::below(0)");
-        (self.next_u64() % bound as u64) as usize
+        ((u128::from(self.next_u64()) * bound as u128) >> 64) as usize
     }
 
     /// Uniform in `[lo, hi]` inclusive.
@@ -92,6 +98,23 @@ mod tests {
         let mut p = Prng::new(7);
         for _ in 0..1000 {
             assert!(p.below(13) < 13);
+        }
+    }
+
+    #[test]
+    fn below_is_roughly_uniform() {
+        // Lemire reduction: no modulo bias toward low values. With 3000
+        // draws over 3 buckets each bucket expects ~1000; a generator
+        // with the old `% bound` low-bias would still pass this, but a
+        // broken widening multiply (e.g. truncating instead of taking
+        // the high word) collapses to one bucket and fails loudly.
+        let mut p = Prng::new(0xB1A5);
+        let mut buckets = [0usize; 3];
+        for _ in 0..3000 {
+            buckets[p.below(3)] += 1;
+        }
+        for (i, &n) in buckets.iter().enumerate() {
+            assert!((800..=1200).contains(&n), "bucket {i}: {n}");
         }
     }
 

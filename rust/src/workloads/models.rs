@@ -358,7 +358,8 @@ pub fn transformer() -> Workload {
         // Cross-attention (reuse the attention block over memory+query mix;
         // structurally identical op mix).
         let mix = g.binary(OpKind::Add, ln1, memory, format!("{p}/mix"));
-        let cross = blocks::attention(&mut g, mix, batch, seq, hidden, heads, &format!("{p}/cross"));
+        let cross =
+            blocks::attention(&mut g, mix, batch, seq, hidden, heads, &format!("{p}/cross"));
         let r2 = g.binary(OpKind::Add, ln1, cross, format!("{p}/res2"));
         let ln2 = blocks::layer_norm(&mut g, r2, &format!("{p}/ln2"));
         let ff = blocks::ffn(&mut g, ln2, rows, hidden, 4 * hidden, &format!("{p}/ffn"));
@@ -413,8 +414,10 @@ pub fn asr() -> Workload {
     let mut layer_in = feats;
     for l in 0..2 {
         for dir in 0..2 {
-            let mut h = g.param(Shape::new(vec![batch, hidden]), DType::F32, format!("l{l}d{dir}/h0"));
-            let mut c = g.param(Shape::new(vec![batch, hidden]), DType::F32, format!("l{l}d{dir}/c0"));
+            let mut h =
+                g.param(Shape::new(vec![batch, hidden]), DType::F32, format!("l{l}d{dir}/h0"));
+            let mut c =
+                g.param(Shape::new(vec![batch, hidden]), DType::F32, format!("l{l}d{dir}/c0"));
             for t in 0..frames {
                 let xt = g.add(
                     OpKind::Slice,
@@ -423,7 +426,8 @@ pub fn asr() -> Workload {
                     vec![layer_in],
                     format!("l{l}d{dir}/x{t}"),
                 );
-                let (h2, c2) = lstm_cell_fused(&mut g, xt, h, c, hidden, &format!("l{l}d{dir}/s{t}"));
+                let (h2, c2) =
+                    lstm_cell_fused(&mut g, xt, h, c, hidden, &format!("l{l}d{dir}/s{t}"));
                 h = h2;
                 c = c2;
                 // TensorArray write + frame staging copies (Table 2 ASR
@@ -509,8 +513,10 @@ pub fn crnn() -> Workload {
     let mut in_dim = featdim;
     for l in 0..2 {
         for dir in 0..2 {
-            let mut h = g.param(Shape::new(vec![batch, hidden]), DType::F32, format!("rnn{l}d{dir}/h0"));
-            let mut c = g.param(Shape::new(vec![batch, hidden]), DType::F32, format!("rnn{l}d{dir}/c0"));
+            let mut h =
+                g.param(Shape::new(vec![batch, hidden]), DType::F32, format!("rnn{l}d{dir}/h0"));
+            let mut c =
+                g.param(Shape::new(vec![batch, hidden]), DType::F32, format!("rnn{l}d{dir}/c0"));
             for t in 0..width {
                 let xt = g.add(
                     OpKind::Slice,
@@ -519,7 +525,8 @@ pub fn crnn() -> Workload {
                     vec![layer_in],
                     format!("rnn{l}d{dir}/x{t}"),
                 );
-                let (h2, c2) = lstm_cell_fused(&mut g, xt, h, c, hidden, &format!("rnn{l}d{dir}/s{t}"));
+                let (h2, c2) =
+                    lstm_cell_fused(&mut g, xt, h, c, hidden, &format!("rnn{l}d{dir}/s{t}"));
                 h = h2;
                 c = c2;
                 // TensorArray + column staging copies (Table 2 CRNN Cpy
@@ -654,7 +661,8 @@ pub fn append_backward(g: &mut Graph, loss: NodeId) {
             OpClass::Reduction => {
                 // d(reduce) broadcasts the gradient back up.
                 let x = node.inputs[0];
-                let gb = g.broadcast(gout, g.node(x).shape.clone(), format!("grad/{}/bcast", node.name));
+                let gb =
+                    g.broadcast(gout, g.node(x).shape.clone(), format!("grad/{}/bcast", node.name));
                 accumulate(&mut grads, g, x, gb);
             }
             OpClass::DataMovement => {
@@ -666,7 +674,10 @@ pub fn append_backward(g: &mut Graph, loss: NodeId) {
                         // model as a sum-reduce producing the input shape.
                         let in_shape = g.node(x).shape.clone();
                         g.add(
-                            OpKind::Reduce { op: ReduceOp::Sum, axes: vec![node.shape.rank().saturating_sub(1)] },
+                            OpKind::Reduce {
+                                op: ReduceOp::Sum,
+                                axes: vec![node.shape.rank().saturating_sub(1)],
+                            },
                             node.dtype,
                             in_shape,
                             vec![gout],
@@ -717,11 +728,13 @@ pub fn append_backward(g: &mut Graph, loss: NodeId) {
                     if node.inputs.len() == 2 {
                         let (a, b) = (node.inputs[0], node.inputs[1]);
                         if g.node(a).shape == node.shape {
-                            let ga = g.binary(OpKind::Mul, gout, b, format!("grad/{}/da", node.name));
+                            let ga =
+                                g.binary(OpKind::Mul, gout, b, format!("grad/{}/da", node.name));
                             accumulate(&mut grads, g, a, ga);
                         }
                         if g.node(b).shape == node.shape {
-                            let gb = g.binary(OpKind::Mul, gout, a, format!("grad/{}/db", node.name));
+                            let gb =
+                                g.binary(OpKind::Mul, gout, a, format!("grad/{}/db", node.name));
                             accumulate(&mut grads, g, b, gb);
                         }
                     }

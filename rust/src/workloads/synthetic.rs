@@ -69,7 +69,8 @@ pub fn generate(cfg: &SyntheticConfig, prng: &mut Prng) -> Graph {
     for i in 0..cfg.num_ops {
         let x = values[prng.below(values.len())];
         let roll = prng.f64();
-        let id = if roll < cfg.p_reduce && g.node(x).shape.rank() >= 1 && g.node(x).shape.num_elements() > 1 {
+        let reducible = g.node(x).shape.rank() >= 1 && g.node(x).shape.num_elements() > 1;
+        let id = if roll < cfg.p_reduce && reducible {
             let last = g.node(x).shape.rank() - 1;
             let r = g.reduce(ReduceOp::Sum, x, vec![last], format!("red{i}"));
             // Re-broadcast half the time so downstream binaries have mates.
@@ -80,7 +81,9 @@ pub fn generate(cfg: &SyntheticConfig, prng: &mut Prng) -> Graph {
             }
         } else if roll < cfg.p_reduce + cfg.p_expensive {
             g.unary(EXPENSIVE[prng.below(EXPENSIVE.len())].clone(), x, format!("e{i}"))
-        } else if roll < cfg.p_reduce + cfg.p_expensive + cfg.p_gemm && g.node(x).shape.rank() == 2 {
+        } else if roll < cfg.p_reduce + cfg.p_expensive + cfg.p_gemm
+            && g.node(x).shape.rank() == 2
+        {
             let k = g.node(x).shape.dims()[1];
             let n = *prng.pick(&cfg.dim_choices);
             let w = g.param(Shape::new(vec![k, n]), DType::F32, format!("w{i}"));

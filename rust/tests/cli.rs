@@ -156,3 +156,36 @@ fn fleet_replays_a_trace_and_writes_json() {
     assert_eq!(json.get("tasks").and_then(|v| v.as_usize()), Some(120));
     let _ = std::fs::remove_file(&out);
 }
+
+#[test]
+fn fleet_wallclock_executor_runs_on_real_threads() {
+    let out = std::env::temp_dir().join("fstitch_cli_fleet_wall.json");
+    let _ = std::fs::remove_file(&out);
+    let (stdout, stderr, ok) = fstitch(&[
+        "fleet",
+        "--tasks",
+        "60",
+        "--templates",
+        "3",
+        "--v100",
+        "1",
+        "--t4",
+        "1",
+        "--executor",
+        "wallclock",
+        "--threads",
+        "2",
+        "--out",
+        out.to_str().unwrap(),
+    ]);
+    assert!(ok, "fleet wallclock failed:\n{stdout}\n{stderr}");
+    assert!(stdout.contains("executor wallclock"), "{stdout}");
+    assert!(stdout.contains("wall-clock executor"), "{stdout}");
+    assert!(stdout.contains("FS regressions: 0"), "{stdout}");
+    let text = std::fs::read_to_string(&out).expect("fleet JSON written");
+    let json = fusion_stitching::util::JsonValue::parse(&text).expect("valid JSON");
+    assert_eq!(json.get("executor").and_then(|v| v.as_str()), Some("wallclock"));
+    assert_eq!(json.get("regressions").and_then(|v| v.as_usize()), Some(0));
+    assert!(json.get("wall_elapsed_ms").and_then(|v| v.as_f64()).unwrap_or(0.0) > 0.0);
+    let _ = std::fs::remove_file(&out);
+}
