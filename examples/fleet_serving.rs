@@ -101,4 +101,30 @@ fn main() {
     assert_eq!(wall.regressions, 0, "the guard must hold on real threads too");
     assert_eq!(wall.explore_jobs, report.explore_jobs);
     assert_eq!(wall.port_hits, report.port_hits);
+
+    // Finally, region-sharded compile jobs: a multi-region graph's
+    // exploration fans out as parallel sub-jobs with a join barrier, so
+    // the pool parallelizes *within* one graph and the fleet's
+    // time-to-optimized-plan shrinks. Compile latency percentiles are
+    // part of the report (and of BENCH_fleet.json).
+    let sharded_opts = FleetOptions {
+        registry: DeviceRegistry::mixed(2, 2, 2),
+        compile_workers: 3,
+        compile_shards: 4,
+        ..Default::default()
+    };
+    let mut sharded_svc = FleetService::new(sharded_opts, build_templates(&traffic));
+    let sharded = sharded_svc.run_trace(&trace);
+    println!(
+        "\nregion-sharded compile (4 shards): {} sub-jobs across {} explorations; \
+         compile latency p50/p99 {:.1}/{:.1} ms (monolithic {:.1}/{:.1} ms)",
+        sharded.shard_jobs,
+        sharded.explore_jobs,
+        sharded.compile.p50,
+        sharded.compile.p99,
+        report.compile.p50,
+        report.compile.p99
+    );
+    assert_eq!(sharded.regressions, 0, "sharded compiles stay never-negative");
+    assert!(sharded.compile.p50 > 0.0);
 }

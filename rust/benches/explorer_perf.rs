@@ -6,28 +6,36 @@
 //! * candidate generation (PatternReduction DP),
 //! * beam-search plan composition,
 //! * full explore() including validation/backfill/remote fusion,
+//! * **partitioned vs monolithic** exploration: the region-parallel
+//!   pipeline (`explorer::regions`) against the whole-graph beam, with
+//!   the no-worse plan-quality gate asserted,
 //! * codegen tuning of the largest pattern.
 //!
-//! Run: `cargo bench --bench explorer_perf`. EXPERIMENTS.md §Perf
-//! records before/after numbers for every optimization applied here.
+//! Run: `cargo bench --bench explorer_perf` (add `-- --quick` for the
+//! reduced CI sweep). Writes `BENCH_explorer.json`. EXPERIMENTS.md
+//! §Perf records before/after numbers for every optimization applied
+//! here.
 
 use fusion_stitching::codegen::{tune_pattern, TunerOptions};
-use fusion_stitching::explorer::{self, BeamOptions, ExploreOptions};
+use fusion_stitching::explorer::{self, BeamOptions, DeltaModel, ExploreOptions};
 use fusion_stitching::gpu::DeviceSpec;
-use fusion_stitching::util::{bench_loop, Prng, Table};
+use fusion_stitching::util::{bench_loop, JsonValue, Prng, Table};
 use fusion_stitching::workloads::synthetic::{generate, SyntheticConfig};
 use fusion_stitching::workloads::{self, Mode};
 
 fn main() {
+    let quick = std::env::args().skip(1).any(|a| a == "--quick");
     let device = DeviceSpec::v100();
     let opts = ExploreOptions::default();
+    let sizes: &[usize] = if quick { &[50, 150] } else { &[50, 150, 400, 1000] };
 
     // ---- stage-by-stage on synthetic graphs of growing size -----------
     println!("== explorer hot-path wall-clock (synthetic graphs) ==\n");
     let mut t = Table::new(vec![
         "ops", "candidates ms", "beam ms", "explore ms", "ms/op",
     ]);
-    for num_ops in [50usize, 150, 400, 1000] {
+    let mut synthetic_json: Vec<JsonValue> = Vec::new();
+    for &num_ops in sizes {
         let cfg = SyntheticConfig { num_ops, ..Default::default() };
         let g = generate(&cfg, &mut Prng::new(42));
         let cand_stats = bench_loop(1, 5, || explorer::candidate_patterns(&g, &device, &opts));
@@ -43,17 +51,75 @@ fn main() {
             format!("{:.2}", explore_stats.mean_ms()),
             format!("{:.4}", explore_stats.mean_ms() / g.len() as f64),
         ]);
+        let mut row = JsonValue::obj();
+        row.set("ops", g.len())
+            .set("candidates_ms", cand_stats.mean_ms())
+            .set("beam_ms", beam_stats.mean_ms())
+            .set("explore_ms", explore_stats.mean_ms());
+        synthetic_json.push(row);
     }
     println!("{}", t.render());
+
+    // ---- partitioned vs monolithic exploration -------------------------
+    // The region pipeline must be no worse in plan quality (total
+    // estimated latency) — the bench enforces the acceptance gate on
+    // every size it sweeps — and its per-region work units are what the
+    // fleet parallelizes across compile workers.
+    println!("== partitioned vs monolithic exploration ==\n");
+    let mut tp = Table::new(vec![
+        "ops", "regions", "mono ms", "part ms", "mono plan µs", "part plan µs",
+    ]);
+    let mut partitioned_json: Vec<JsonValue> = Vec::new();
+    let mut partitioned_no_worse = true;
+    for &num_ops in sizes {
+        let cfg = SyntheticConfig { num_ops, ..Default::default() };
+        let g = generate(&cfg, &mut Prng::new(42));
+        let regions = explorer::regions::partition(&g);
+        let mono_stats = bench_loop(1, 5, || explorer::explore(&g, &device, &opts));
+        let part_stats = bench_loop(1, 5, || explorer::explore_partitioned(&g, &device, &opts));
+        let mono = explorer::explore(&g, &device, &opts);
+        let part = explorer::explore_partitioned(&g, &device, &opts);
+        let model = DeltaModel::new(&g, device.clone());
+        let t_mono = model.plan_time_us(&mono.kernels(&g));
+        let t_part = model.plan_time_us(&part.kernels(&g));
+        partitioned_no_worse &= t_part <= t_mono * 1.02 + 1e-9;
+        assert!(
+            partitioned_no_worse,
+            "{num_ops} ops: partitioned plan {t_part:.2} µs worse than monolithic {t_mono:.2} µs"
+        );
+        tp.row(vec![
+            g.len().to_string(),
+            regions.len().to_string(),
+            format!("{:.2}", mono_stats.mean_ms()),
+            format!("{:.2}", part_stats.mean_ms()),
+            format!("{:.1}", t_mono),
+            format!("{:.1}", t_part),
+        ]);
+        let mut row = JsonValue::obj();
+        row.set("ops", g.len())
+            .set("regions", regions.len())
+            .set("mono_ms", mono_stats.mean_ms())
+            .set("part_ms", part_stats.mean_ms())
+            .set("mono_plan_us", t_mono)
+            .set("part_plan_us", t_part);
+        partitioned_json.push(row);
+    }
+    println!("{}", tp.render());
 
     // ---- real workloads ------------------------------------------------
     println!("== explore() on the evaluation workloads ==\n");
     let mut t2 = Table::new(vec!["workload", "ops", "explore ms", "patterns"]);
-    for w in [
-        workloads::models::bert(Mode::Infer),
-        workloads::models::bert(Mode::Train),
-        workloads::models::asr(),
-    ] {
+    let mut workloads_json: Vec<JsonValue> = Vec::new();
+    let eval: Vec<workloads::Workload> = if quick {
+        vec![workloads::models::bert(Mode::Infer)]
+    } else {
+        vec![
+            workloads::models::bert(Mode::Infer),
+            workloads::models::bert(Mode::Train),
+            workloads::models::asr(),
+        ]
+    };
+    for w in &eval {
         let stats = bench_loop(1, 3, || explorer::explore(&w.graph, &device, &opts));
         let plan = explorer::explore(&w.graph, &device, &opts);
         t2.row(vec![
@@ -62,6 +128,12 @@ fn main() {
             format!("{:.1}", stats.mean_ms()),
             plan.patterns.len().to_string(),
         ]);
+        let mut row = JsonValue::obj();
+        row.set("workload", w.key())
+            .set("ops", w.graph.len())
+            .set("explore_ms", stats.mean_ms())
+            .set("patterns", plan.patterns.len());
+        workloads_json.push(row);
     }
     println!("{}", t2.render());
 
@@ -76,5 +148,21 @@ fn main() {
             "codegen tuner on largest BERT-infer pattern ({} ops): {stats}",
             big.len()
         );
+    }
+
+    // Machine-readable summary for tracking across PRs. The no-worse
+    // flag is measured over the swept sizes (which `quick` reduces —
+    // the field only vouches for what this run covered).
+    let mut out = JsonValue::obj();
+    out.set("bench", "explorer_perf")
+        .set("quick", quick)
+        .set("partitioned_no_worse", partitioned_no_worse)
+        .set("synthetic", JsonValue::Arr(synthetic_json))
+        .set("partitioned", JsonValue::Arr(partitioned_json))
+        .set("workloads", JsonValue::Arr(workloads_json));
+    let path = "BENCH_explorer.json";
+    match std::fs::write(path, out.to_pretty()) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
     }
 }

@@ -20,10 +20,18 @@
 //! decisions — §6's "explore in background while serving" on actual
 //! hardware parallelism.
 //!
+//! The same trace also runs with **region-sharded compile jobs**
+//! (`--compile-shards`, default 4): a multi-region graph's exploration
+//! fans out as one queue sub-job per region group with a join barrier,
+//! on both executors, and the bench asserts their decisions converge
+//! and the new compile-latency percentiles are populated.
+//!
 //! Run: `cargo bench --bench production_fleet` (add `-- N` for trace
 //! size, default 1200, acceptance floor 1000; `--threads K` for the
-//! wall-clock pool size, default 2). Writes `BENCH_fleet.json`.
+//! wall-clock pool size, default 2; `--compile-shards S`, default 4).
+//! Writes `BENCH_fleet.json`.
 
+use fusion_stitching::explorer::regions;
 use fusion_stitching::fleet::{
     build_templates, generate_trace, DeviceRegistry, ExecutorKind, FleetOptions, FleetReport,
     FleetService, TrafficConfig,
@@ -43,27 +51,35 @@ fn run_once(
     traffic: &TrafficConfig,
     templates: &[Workload],
     executor: ExecutorKind,
+    compile_shards: usize,
 ) -> FleetReport {
     let trace = generate_trace(traffic);
-    let opts = FleetOptions { executor, ..base_options() };
+    let opts = FleetOptions { executor, compile_shards, ..base_options() };
     let mut svc = FleetService::new(opts, templates.to_vec());
     svc.run_trace(&trace)
 }
 
 fn main() {
     // Positional number = trace size (first parseable arg outside a
-    // `--threads K` pair, in any order); `--threads K` = wall-clock
-    // pool size.
+    // flag pair, in any order); `--threads K` = wall-clock pool size;
+    // `--compile-shards S` = region fan-out for explorations.
     let args: Vec<String> = std::env::args().skip(1).collect();
     let mut tasks: Option<usize> = None;
     let mut threads: usize = 2;
+    let mut shards: usize = 4;
     let mut i = 0;
     while i < args.len() {
-        if args[i] == "--threads" {
-            threads = args.get(i + 1).and_then(|s| s.parse().ok()).unwrap_or_else(|| {
-                eprintln!("production_fleet: --threads needs a positive integer");
+        let flag_value = |name: &str, i: usize| -> usize {
+            args.get(i + 1).and_then(|s| s.parse().ok()).unwrap_or_else(|| {
+                eprintln!("production_fleet: {name} needs a positive integer");
                 std::process::exit(2);
-            });
+            })
+        };
+        if args[i] == "--threads" {
+            threads = flag_value("--threads", i);
+            i += 2;
+        } else if args[i] == "--compile-shards" {
+            shards = flag_value("--compile-shards", i).max(1);
             i += 2;
         } else {
             if tasks.is_none() {
@@ -80,12 +96,12 @@ fn main() {
         "== §7.2 production fleet: {} tasks, {} templates, mixed V100/T4, seed {:#x} ==\n",
         traffic.tasks, traffic.templates, traffic.seed
     );
-    let report = run_once(&traffic, &templates, ExecutorKind::VirtualTime);
+    let report = run_once(&traffic, &templates, ExecutorKind::VirtualTime, 1);
     println!("{}\n", report.render());
 
     // Reproducibility: the same seed must produce the same report,
     // byte for byte — virtual time, not wall clock, drives everything.
-    let replay = run_once(&traffic, &templates, ExecutorKind::VirtualTime);
+    let replay = run_once(&traffic, &templates, ExecutorKind::VirtualTime, 1);
     let (a, b) = (report.to_json().to_string(), replay.to_json().to_string());
     assert_eq!(a, b, "fleet replay diverged for the same seed");
     println!("replay check: two runs with seed {:#x} are byte-identical", traffic.seed);
@@ -97,11 +113,15 @@ fn main() {
         "mixed registry must port plans across device classes"
     );
     assert!(report.wait.p99 >= report.wait.p50);
+    assert!(
+        report.compile.p50 > 0.0 && report.compile.p99 > 0.0,
+        "explorations ran, so per-job compile latency must be populated"
+    );
 
     // Wall-clock executor: the same trace on real OS threads must reach
     // the same plan and admission decisions (§6 on real parallelism).
     println!("\n== wall-clock executor: {threads} compile threads ==");
-    let wall = run_once(&traffic, &templates, ExecutorKind::WallClock { threads });
+    let wall = run_once(&traffic, &templates, ExecutorKind::WallClock { threads }, 1);
     let decisions = |r: &FleetReport| {
         (
             r.tasks,
@@ -115,6 +135,7 @@ fn main() {
             r.port_jobs,
             r.port_failures,
             r.fs_vetoes,
+            r.shard_jobs,
         )
     };
     assert_eq!(
@@ -128,6 +149,47 @@ fn main() {
         "wall-clock: {} tasks in {:.1} ms elapsed; {} owner-run / {} stolen compiles; \
          decisions match virtual replay",
         wall.tasks, wall.wall_elapsed_ms, wall.compile_owner_runs, wall.compile_affinity_misses
+    );
+
+    // Region-sharded compile jobs: the same trace with explorations
+    // fanned out per region group, on both executors. Decisions must
+    // converge across executors here too.
+    println!("\n== region-sharded compile: {shards} shards ==");
+    let sharded = run_once(&traffic, &templates, ExecutorKind::VirtualTime, shards);
+    let sharded_wall =
+        run_once(&traffic, &templates, ExecutorKind::WallClock { threads }, shards);
+    assert_eq!(
+        decisions(&sharded_wall),
+        decisions(&sharded),
+        "sharded wall-clock run diverged from sharded virtual decisions"
+    );
+    assert_eq!(sharded.regressions, 0);
+    assert_eq!(sharded_wall.regressions, 0);
+    assert!(sharded.compile.p50 > 0.0 && sharded.compile.p99 > 0.0);
+    // Guard against the fan-out silently degenerating to monolithic:
+    // whenever the seeded template population has multi-region graphs
+    // (synthetic DAGs can legitimately stay one fusible component, so
+    // this is checked rather than assumed), sharded runs must have
+    // actually split compile jobs.
+    let multi_region = templates
+        .iter()
+        .filter(|w| regions::partition(&w.graph).len() > 1)
+        .count();
+    if multi_region > 0 {
+        assert!(
+            sharded.shard_jobs > 0,
+            "{multi_region} multi-region templates but no compile job fanned out"
+        );
+    }
+    println!(
+        "sharded: {} compile sub-jobs across {} explorations; compile p50/p99 \
+         {:.1}/{:.1} ms (monolithic {:.1}/{:.1} ms); decisions match across executors",
+        sharded.shard_jobs,
+        sharded.explore_jobs,
+        sharded.compile.p50,
+        sharded.compile.p99,
+        report.compile.p50,
+        report.compile.p99
     );
 
     let projected = report.projected_gpu_hours_saved(30_000.0, 2.0);
@@ -151,7 +213,21 @@ fn main() {
         .set("saved_gpu_ms", wall.saved_gpu_ms())
         .set("compile_owner_runs", wall.compile_owner_runs)
         .set("compile_affinity_misses", wall.compile_affinity_misses)
+        .set("compile_p50_ms", wall.compile.p50)
+        .set("compile_p99_ms", wall.compile.p99)
         .set("regressions", wall.regressions)
+        .set("matches_virtual_decisions", true);
+    let mut sharded_json = JsonValue::obj();
+    sharded_json
+        .set("compile_shards", shards)
+        .set("multi_region_templates", multi_region)
+        .set("shard_jobs", sharded.shard_jobs)
+        .set("explore_jobs", sharded.explore_jobs)
+        .set("compile_p50_ms", sharded.compile.p50)
+        .set("compile_p99_ms", sharded.compile.p99)
+        .set("monolithic_compile_p50_ms", report.compile.p50)
+        .set("monolithic_compile_p99_ms", report.compile.p99)
+        .set("regressions", sharded.regressions)
         .set("matches_virtual_decisions", true);
     let mut out = JsonValue::obj();
     out.set("bench", "production_fleet")
@@ -161,7 +237,8 @@ fn main() {
         .set("reproducible", true)
         .set("projected_gpu_hours_saved_per_month", projected)
         .set("report", report.to_json())
-        .set("wallclock", wall_json);
+        .set("wallclock", wall_json)
+        .set("sharded", sharded_json);
     let path = "BENCH_fleet.json";
     match std::fs::write(path, out.to_pretty()) {
         Ok(()) => println!("wrote {path}"),

@@ -37,6 +37,7 @@ impl GraphKey {
 
 fn kind_tag(kind: &crate::graph::OpKind) -> u64 {
     use crate::graph::OpKind::*;
+    use crate::util::hash::{fnv1a_u64, FNV_OFFSET};
     // A stable discriminant (mem::discriminant has no portable value).
     let base = match kind {
         Parameter => 1,
@@ -64,12 +65,29 @@ fn kind_tag(kind: &crate::graph::OpKind) -> u64 {
         Gelu => 23,
         Tan => 24,
         Reduce { op, axes } => {
-            return 25 + *op as u64 * 8 + axes.iter().map(|&a| a as u64 + 1).sum::<u64>() * 64;
+            // Positional FNV-1a mix: the old order-insensitive element
+            // *sum* collided axes splits like {0,3} vs {1,2}, so graphs
+            // differing only there hashed to one key and the cache
+            // could serve the wrong program.
+            let mut h = fnv1a_u64(FNV_OFFSET, 25);
+            h = fnv1a_u64(h, *op as u64 + 1);
+            for &a in axes {
+                h = fnv1a_u64(h, a as u64 + 1);
+            }
+            return h;
         }
         Broadcast => 26,
         Reshape => 27,
         Transpose { perm } => {
-            return 28 + perm.iter().map(|&p| p as u64 + 1).sum::<u64>() * 64;
+            // Positional mix: permutations are rearrangements of the
+            // same elements, so any order-insensitive fold (the old
+            // sum) collided *every* pair of same-rank permutations,
+            // e.g. [0,2,1] vs [1,0,2].
+            let mut h = fnv1a_u64(FNV_OFFSET, 28);
+            for &p in perm {
+                h = fnv1a_u64(h, p as u64 + 1);
+            }
+            return h;
         }
         Slice => 29,
         Gather => 30,
@@ -84,12 +102,22 @@ fn kind_tag(kind: &crate::graph::OpKind) -> u64 {
     base
 }
 
+/// Map + counters under ONE lock. The counters used to live behind two
+/// further mutexes, so a concurrent `stats()` could observe a *torn*
+/// snapshot (a lookup's map access done but its counter bump pending —
+/// hits + misses ≠ completed lookups). One lock makes every lookup
+/// atomic with its accounting.
+#[derive(Debug, Default)]
+struct CacheState {
+    map: HashMap<GraphKey, Arc<OptimizedProgram>>,
+    hits: u64,
+    misses: u64,
+}
+
 /// Thread-safe program cache with hit/miss accounting.
 #[derive(Debug, Default)]
 pub struct CompilationCache {
-    map: Mutex<HashMap<GraphKey, Arc<OptimizedProgram>>>,
-    hits: Mutex<u64>,
-    misses: Mutex<u64>,
+    state: Mutex<CacheState>,
 }
 
 impl CompilationCache {
@@ -97,29 +125,32 @@ impl CompilationCache {
         Self::default()
     }
 
-    /// Lookup; updates hit/miss counters.
+    /// Lookup; updates hit/miss counters atomically with the access.
     pub fn get(&self, key: GraphKey) -> Option<Arc<OptimizedProgram>> {
-        let found = self.map.lock().unwrap().get(&key).cloned();
+        let mut st = self.state.lock().unwrap();
+        let found = st.map.get(&key).cloned();
         match &found {
-            Some(_) => *self.hits.lock().unwrap() += 1,
-            None => *self.misses.lock().unwrap() += 1,
+            Some(_) => st.hits += 1,
+            None => st.misses += 1,
         }
         found
     }
 
     /// Insert a compiled program.
     pub fn put(&self, key: GraphKey, prog: Arc<OptimizedProgram>) {
-        self.map.lock().unwrap().insert(key, prog);
+        self.state.lock().unwrap().map.insert(key, prog);
     }
 
-    /// (hits, misses).
+    /// (hits, misses) — a consistent snapshot: both counters are read
+    /// under the same lock every lookup updates them under.
     pub fn stats(&self) -> (u64, u64) {
-        (*self.hits.lock().unwrap(), *self.misses.lock().unwrap())
+        let st = self.state.lock().unwrap();
+        (st.hits, st.misses)
     }
 
     /// Entry count.
     pub fn len(&self) -> usize {
-        self.map.lock().unwrap().len()
+        self.state.lock().unwrap().map.len()
     }
 
     /// True when the cache is empty.
@@ -170,6 +201,43 @@ mod tests {
     }
 
     #[test]
+    fn transpose_perm_is_order_sensitive() {
+        // Cube shape: every permutation of [4,4,4] preserves the output
+        // shape, so only the perm itself can separate the keys — the
+        // old sum-based tag collided (1+3+2 == 2+1+3).
+        let build = |perm: Vec<usize>| {
+            let mut g = Graph::new("t");
+            let p = g.param(Shape::new(vec![4, 4, 4]), DType::F32, "p");
+            let _ = g.add(
+                OpKind::Transpose { perm },
+                DType::F32,
+                Shape::new(vec![4, 4, 4]),
+                vec![p],
+                "t",
+            );
+            GraphKey::of(&g)
+        };
+        assert_ne!(build(vec![0, 2, 1]), build(vec![1, 0, 2]));
+        assert_eq!(build(vec![0, 2, 1]), build(vec![0, 2, 1]));
+    }
+
+    #[test]
+    fn reduce_axes_split_changes_key() {
+        use crate::graph::ReduceOp;
+        // [2,2,2,2] reduced over {0,3} vs {1,2}: same output shape
+        // [2,2], same combinator — the old sum-based tag collided
+        // ((1+4) == (2+3)), so the cache could serve the wrong program.
+        let build = |axes: Vec<usize>| {
+            let mut g = Graph::new("r");
+            let p = g.param(Shape::new(vec![2, 2, 2, 2]), DType::F32, "p");
+            let _ = g.reduce(ReduceOp::Sum, p, axes, "r");
+            GraphKey::of(&g)
+        };
+        assert_ne!(build(vec![0, 3]), build(vec![1, 2]));
+        assert_eq!(build(vec![0, 3]), build(vec![0, 3]));
+    }
+
+    #[test]
     fn cache_hit_miss_accounting() {
         use crate::explorer::FusionPlan;
         use crate::pipeline::{OptimizedProgram, Tech};
@@ -187,5 +255,72 @@ mod tests {
         assert!(cache.get(key).is_some());
         assert_eq!(cache.stats(), (1, 1));
         assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn concurrent_stats_are_never_torn() {
+        // Multi-threaded executor shape: worker threads hammer lookups
+        // while a reader snapshots stats. With the counters under the
+        // map lock, every snapshot's hits+misses equals the number of
+        // completed lookups at that instant — monotone mid-flight, and
+        // exactly (hits, misses) = (HITS, MISSES) at quiescence. The
+        // old three-mutex layout could tear (hits + misses ≠ lookups).
+        use crate::explorer::FusionPlan;
+        use crate::pipeline::{OptimizedProgram, Tech};
+        use std::sync::atomic::{AtomicBool, Ordering};
+
+        const THREADS: usize = 4;
+        const PER_THREAD: usize = 2_000; // half hits, half misses
+        let cache = Arc::new(CompilationCache::new());
+        let hit_key = GraphKey::of(&tiny(2));
+        let miss_key = GraphKey::of(&tiny(5));
+        cache.put(
+            hit_key,
+            Arc::new(OptimizedProgram {
+                tech: Tech::Fs,
+                plan: FusionPlan::default(),
+                kernels: vec![],
+            }),
+        );
+
+        let stop = Arc::new(AtomicBool::new(false));
+        let reader = {
+            let cache = Arc::clone(&cache);
+            let stop = Arc::clone(&stop);
+            std::thread::spawn(move || {
+                let mut last_total = 0u64;
+                while !stop.load(Ordering::Acquire) {
+                    let (h, m) = cache.stats();
+                    let total = h + m;
+                    assert!(
+                        total >= last_total,
+                        "torn stats: total went {last_total} -> {total}"
+                    );
+                    assert!(total <= (THREADS * PER_THREAD) as u64);
+                    last_total = total;
+                }
+            })
+        };
+        let workers: Vec<_> = (0..THREADS)
+            .map(|_| {
+                let cache = Arc::clone(&cache);
+                std::thread::spawn(move || {
+                    for i in 0..PER_THREAD {
+                        let key = if i % 2 == 0 { hit_key } else { miss_key };
+                        let _ = cache.get(key);
+                    }
+                })
+            })
+            .collect();
+        for w in workers {
+            w.join().unwrap();
+        }
+        stop.store(true, Ordering::Release);
+        reader.join().unwrap();
+
+        let (h, m) = cache.stats();
+        assert_eq!(h + m, (THREADS * PER_THREAD) as u64, "hits + misses ≠ lookups");
+        assert_eq!(h, (THREADS * PER_THREAD / 2) as u64);
+        assert_eq!(m, (THREADS * PER_THREAD / 2) as u64);
     }
 }

@@ -103,6 +103,25 @@ impl BufferSet {
     }
 }
 
+/// Drop beam states whose coverage set already has a better-scoring
+/// representative, leaving the survivors in score order. A plain
+/// score-sort + `Vec::dedup_by` removed *adjacent* duplicates only —
+/// two states covering the same nodes through different pattern splits
+/// accumulate different scores, so they need not sort adjacently, and
+/// the surviving duplicates crowded genuinely diverse states out of the
+/// width-k window. Grouping by coverage first makes duplicates adjacent
+/// without hashing (or cloning) the per-state bitsets; both sorts are
+/// stable so full ties keep insertion order and replays stay
+/// byte-identical.
+fn dedup_by_coverage(states: &mut Vec<BufferSet>) {
+    let by_score = |a: &BufferSet, b: &BufferSet| {
+        b.score.partial_cmp(&a.score).unwrap_or(std::cmp::Ordering::Equal)
+    };
+    states.sort_by(|a, b| a.covered.cmp(&b.covered).then(by_score(a, b)));
+    states.dedup_by(|next, prev| next.covered == prev.covered);
+    states.sort_by(by_score);
+}
+
 /// Compose the final plan from candidate sets.
 pub fn compose_plan(
     graph: &Graph,
@@ -136,9 +155,9 @@ pub fn compose_plan(
                 next.push(nb);
             }
         }
-        next.sort_by(|a, b| b.score.partial_cmp(&a.score).unwrap_or(std::cmp::Ordering::Equal));
-        // Dedup identical coverage (keeps beam diversity meaningful).
-        next.dedup_by(|a, b| a.covered == b.covered);
+        // Dedup identical coverage keeping the best score, ending in
+        // score order (beam diversity: one slot per node set).
+        dedup_by_coverage(&mut next);
         next.truncate(opts.width.max(1));
         beams = next;
     }
@@ -209,6 +228,43 @@ mod tests {
                 assert!(p.is_valid(&g), "invalid pattern in plan, seed {seed}");
             }
         }
+    }
+
+    #[test]
+    fn coverage_dedup_is_not_adjacent_only() {
+        // Four states sorted by score. States 0 and 2 cover the same
+        // nodes through different pattern splits (so their accumulated
+        // scores differ) and are separated by state 1 — exactly the
+        // shape `Vec::dedup_by` cannot see. With the old adjacent-only
+        // dedup the duplicate survived and truncation to the beam
+        // width (3) dropped the *distinct* state 3: a lost plan.
+        let mk = |cov: u64, score: f64| BufferSet {
+            chosen: None,
+            covered: vec![cov],
+            score,
+        };
+        let states =
+            vec![mk(0b0011, 4.0), mk(0b0111, 3.5), mk(0b0011, 3.0), mk(0b1000, 2.0)];
+
+        let mut adjacent_only = states.clone();
+        adjacent_only.dedup_by(|a, b| a.covered == b.covered);
+        adjacent_only.truncate(3);
+        assert!(
+            !adjacent_only.iter().any(|s| s.covered == vec![0b1000]),
+            "premise: adjacent-only dedup demonstrably loses the diverse state"
+        );
+
+        let mut fixed = states;
+        dedup_by_coverage(&mut fixed);
+        fixed.truncate(3);
+        assert_eq!(fixed.len(), 3);
+        assert!(
+            fixed.iter().any(|s| s.covered == vec![0b1000]),
+            "coverage dedup must keep the diverse state in the window"
+        );
+        // Exactly one survivor per coverage set, and it is the best one.
+        assert_eq!(fixed.iter().filter(|s| s.covered == vec![0b0011]).count(), 1);
+        assert!(fixed.iter().any(|s| s.covered == vec![0b0011] && s.score == 4.0));
     }
 
     #[test]

@@ -68,11 +68,30 @@ pub fn candidate_patterns(
     device: &DeviceSpec,
     opts: &ExploreOptions,
 ) -> CandidateSets {
+    candidate_patterns_in(graph, device, opts, None)
+}
+
+/// Masked candidate generation: vertices with `mask[id] == false`
+/// neither seed candidates nor contribute consumer options (their sets
+/// stay empty, which the DP and the beam both already treat as "skip").
+/// The region partitioner ([`super::regions`]) uses this to run the DP
+/// over one fusible region at a time; `None` means the whole graph.
+pub fn candidate_patterns_in(
+    graph: &Graph,
+    device: &DeviceSpec,
+    opts: &ExploreOptions,
+    mask: Option<&[bool]>,
+) -> CandidateSets {
     let model = DeltaModel::new(graph, device.clone());
     let scorer = Scorer { model, graph, device: device.clone(), full: opts.full_cost_model };
     let mut cands: CandidateSets = vec![Vec::new(); graph.len()];
 
     for &v in graph.post_order().iter() {
+        if let Some(m) = mask {
+            if !m[v.idx()] {
+                continue;
+            }
+        }
         let node = graph.node(v);
         // Copy nodes are memcpy activity (the Cpy column), never fused.
         // Reshape *does* participate: jax-lowered HLO sandwiches

@@ -6,18 +6,24 @@
 //! non-overlapping candidates into whole-graph plans with beam search
 //! (width 3) and picks the winner with the accurate latency-evaluator;
 //! [`remote`] then packs residual small kernels that are not adjacent in
-//! the graph (Fig. 5) to cut launch counts further.
+//! the graph (Fig. 5) to cut launch counts further. [`regions`] splits
+//! the graph into independent fusible regions (cut at GEMM/conv/copy
+//! boundaries) so candidates+beam+absorption+pruning run per region —
+//! the work units the fleet's compile pool parallelizes within a graph
+//! (see [`explore_partitioned`]).
 
 pub mod beam;
 pub mod candidates;
 pub mod delta;
 pub mod pattern;
+pub mod regions;
 pub mod remote;
 
 pub use beam::{compose_plan, BeamOptions};
 pub use candidates::{candidate_patterns, ExploreOptions};
 pub use delta::{delta_score, DeltaModel};
 pub use pattern::{FusionPattern, FusionPlan};
+pub use regions::{explore_partitioned, Region};
 pub use remote::remote_fusion;
 
 use crate::gpu::DeviceSpec;

@@ -1,0 +1,388 @@
+//! Region partitioning for parallel fusion exploration.
+//!
+//! Fusion decisions never cross unfusible boundaries: a candidate
+//! pattern only ever contains fusible ops connected through fusible
+//! producer→consumer edges, so GEMM/conv, explicit copies and graph
+//! sources cut the graph into independent *fusible regions* (connected
+//! components of the fusible subgraph). Candidate generation, beam
+//! composition, producer absorption and accurate-model pruning are all
+//! local to one region, which makes exploration embarrassingly parallel
+//! per region — the fleet fans a large graph's compile job out as one
+//! sub-job per region group and joins at a barrier (dynamic-loop
+//! boundaries stay enforced through the capped
+//! [`ExploreOptions`] the pipeline derives for `while_loop` bodies:
+//! patterns inside a region are still clipped to the loop-body budget).
+//!
+//! Only the two *global* passes stay outside the regions: the XLA
+//! backfill (coverage is a whole-graph property) and Fig. 5 remote
+//! fusion (kernel packing deliberately bundles kernels from unrelated
+//! regions into one launch).
+
+use super::beam::{compose_plan, BeamOptions};
+use super::candidates::{candidate_patterns_in, CandidateSets, ExploreOptions};
+use super::pattern::FusionPlan;
+use crate::gpu::DeviceSpec;
+use crate::graph::{Graph, NodeId, OpKind};
+
+/// One independent fusible region: a sorted, deduplicated node set
+/// closed under fusible adjacency.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Region {
+    nodes: Vec<NodeId>,
+}
+
+impl Region {
+    /// Sorted member nodes.
+    pub fn nodes(&self) -> &[NodeId] {
+        &self.nodes
+    }
+
+    /// Member count.
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// True when the region has no nodes (never produced by
+    /// [`partition`]).
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    /// Smallest node id — the region's stable identity.
+    pub fn min_id(&self) -> NodeId {
+        self.nodes[0]
+    }
+
+    /// Membership bitmap over `n` graph nodes.
+    fn mask(&self, n: usize) -> Vec<bool> {
+        let mut m = vec![false; n];
+        for &id in &self.nodes {
+            m[id.idx()] = true;
+        }
+        m
+    }
+}
+
+/// True when `kind` participates in fusion regions — the same filter
+/// candidate generation applies per vertex (copies are memcpy activity,
+/// never fused).
+fn participates(kind: &OpKind) -> bool {
+    kind.is_fusible() && !matches!(kind, OpKind::Copy)
+}
+
+/// Split a graph into its independent fusible regions: connected
+/// components of the fusible subgraph, cut at GEMM/conv/copy and source
+/// boundaries. Deterministic: regions are ordered by their smallest
+/// node id and every region's node list is sorted.
+pub fn partition(graph: &Graph) -> Vec<Region> {
+    let n = graph.len();
+    let mut visited = vec![false; n];
+    let mut out = Vec::new();
+    for start in graph.nodes() {
+        if visited[start.id.idx()] || !participates(&start.kind) {
+            continue;
+        }
+        visited[start.id.idx()] = true;
+        let mut stack = vec![start.id];
+        let mut nodes = Vec::new();
+        while let Some(id) = stack.pop() {
+            nodes.push(id);
+            let node = graph.node(id);
+            for &nb in node.inputs.iter().chain(graph.consumers(id).iter()) {
+                if !visited[nb.idx()] && participates(&graph.node(nb).kind) {
+                    visited[nb.idx()] = true;
+                    stack.push(nb);
+                }
+            }
+        }
+        nodes.sort_unstable();
+        out.push(Region { nodes });
+    }
+    out
+}
+
+/// Group regions into at most `shards` balanced compile sub-jobs
+/// (greedy longest-processing-time binning by region op count).
+/// Deterministic: ties break toward the smaller region id / lower bin
+/// index, and empty groups are dropped.
+pub fn shard_regions(mut regions: Vec<Region>, shards: usize) -> Vec<Vec<Region>> {
+    let bins_wanted = shards.max(1).min(regions.len().max(1));
+    regions.sort_by(|a, b| b.len().cmp(&a.len()).then(a.min_id().cmp(&b.min_id())));
+    let mut bins: Vec<(usize, Vec<Region>)> = vec![(0, Vec::new()); bins_wanted];
+    for r in regions {
+        // First-minimum selection keeps the binning deterministic.
+        let mut lightest = 0;
+        for i in 1..bins.len() {
+            if bins[i].0 < bins[lightest].0 {
+                lightest = i;
+            }
+        }
+        bins[lightest].0 += r.len();
+        bins[lightest].1.push(r);
+    }
+    bins.into_iter()
+        .map(|(_, group)| group)
+        .filter(|g| !g.is_empty())
+        .collect()
+}
+
+/// Explore one region: candidate generation, beam composition, producer
+/// absorption and accurate-model pruning, all restricted to the
+/// region's nodes. The absorption and pruning passes are region-local
+/// by construction (a fusible producer's fusible consumers live in the
+/// same connected component), so reusing the global passes on the
+/// region plan is exact.
+pub fn explore_region(
+    graph: &Graph,
+    device: &DeviceSpec,
+    opts: &ExploreOptions,
+    region: &Region,
+) -> FusionPlan {
+    if region.len() < 2 {
+        return FusionPlan::default(); // a single op never fuses
+    }
+    let mask = region.mask(graph.len());
+    let cands = candidate_patterns_in(graph, device, opts, Some(&mask));
+    compose_absorb_prune(graph, device, opts, &cands)
+}
+
+/// Beam composition + producer absorption + accurate-model pruning over
+/// one region's candidate sets (the per-region half shared by
+/// [`explore_region`] and [`explore_shard`]).
+fn compose_absorb_prune(
+    graph: &Graph,
+    device: &DeviceSpec,
+    opts: &ExploreOptions,
+    cands: &CandidateSets,
+) -> FusionPlan {
+    let mut plan = compose_plan(graph, device, cands, &BeamOptions { width: opts.beam_width });
+    plan = super::absorb_producers(graph, plan, opts);
+    plan = super::prune_bad_patterns(graph, device, plan);
+    plan
+}
+
+/// Explore a group of regions (one compile sub-job) and merge their
+/// plans. Candidate generation runs ONCE over the whole group — regions
+/// are disjoint and closed under fusible adjacency, so the per-vertex
+/// candidate sets of a group-masked DP are identical to per-region runs
+/// while paying a single cost-model build and graph walk instead of one
+/// per region; only beam/absorb/prune (whose state is genuinely
+/// per-region) then run per region, on that region's slice of the
+/// shared sets. Pure and deterministic: the result depends only on
+/// (graph, device, opts, regions), never on which worker runs it.
+pub fn explore_shard(
+    graph: &Graph,
+    device: &DeviceSpec,
+    opts: &ExploreOptions,
+    group: &[Region],
+) -> FusionPlan {
+    let mut mask = vec![false; graph.len()];
+    for region in group {
+        if region.len() < 2 {
+            continue; // singletons never fuse; skip their DP work too
+        }
+        for &id in region.nodes() {
+            mask[id.idx()] = true;
+        }
+    }
+    let mut cands = candidate_patterns_in(graph, device, opts, Some(&mask));
+    let mut plan = FusionPlan::default();
+    let mut region_cands: CandidateSets = vec![Vec::new(); graph.len()];
+    for region in group {
+        if region.len() < 2 {
+            continue;
+        }
+        for &id in region.nodes() {
+            region_cands[id.idx()] = std::mem::take(&mut cands[id.idx()]);
+        }
+        let rplan = compose_absorb_prune(graph, device, opts, &region_cands);
+        plan.patterns.extend(rplan.patterns);
+        for &id in region.nodes() {
+            region_cands[id.idx()] = Vec::new();
+        }
+    }
+    plan
+}
+
+/// The global tail of a partitioned exploration: canonicalize the
+/// merged per-region patterns (so the result is independent of how the
+/// regions were grouped into shards), backfill uncovered nodes with
+/// XLA's rule-based fusions, and run Fig. 5 remote kernel packing.
+pub fn finish_partitioned(
+    graph: &Graph,
+    device: &DeviceSpec,
+    opts: &ExploreOptions,
+    mut merged: FusionPlan,
+) -> FusionPlan {
+    merged.patterns.sort_by_key(|p| p.min_id());
+    let mut plan = super::backfill_with_xla(graph, merged);
+    if opts.enable_remote_fusion {
+        plan = super::remote_fusion(graph, device, plan, opts);
+    }
+    debug_assert!(plan.is_disjoint());
+    plan
+}
+
+/// End-to-end region-partitioned exploration: the drop-in sibling of
+/// [`super::explore`] that runs the per-region pipeline over every
+/// region and then the global tail. Same plan quality (each region gets
+/// the beam's full attention instead of sharing it graph-wide), and the
+/// per-region work units are what the fleet schedules in parallel.
+pub fn explore_partitioned(
+    graph: &Graph,
+    device: &DeviceSpec,
+    opts: &ExploreOptions,
+) -> FusionPlan {
+    let regions = partition(graph);
+    let merged = explore_shard(graph, device, opts, &regions);
+    finish_partitioned(graph, device, opts, merged)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::explorer::{explore, DeltaModel};
+    use crate::graph::{DType, Shape};
+    use crate::workloads::blocks;
+
+    /// ln → matmul → ln: two fusible regions split by the GEMM.
+    fn two_region_graph() -> Graph {
+        let mut g = Graph::new("2reg");
+        let x = g.param(Shape::new(vec![512, 256]), DType::F32, "x");
+        let h = blocks::layer_norm(&mut g, x, "ln0");
+        let w = g.param(Shape::new(vec![256, 256]), DType::F32, "w");
+        let mm = g.matmul(h, w, "mm");
+        let _ = blocks::layer_norm(&mut g, mm, "ln1");
+        g
+    }
+
+    #[test]
+    fn partition_cuts_at_gemm_boundaries() {
+        let g = two_region_graph();
+        let regions = partition(&g);
+        assert_eq!(regions.len(), 2, "GEMM must split the fusible subgraph");
+        // Regions are ordered by min id, disjoint, and cover every
+        // fusible non-copy node exactly once.
+        assert!(regions[0].min_id() < regions[1].min_id());
+        let mut covered = vec![0usize; g.len()];
+        for r in &regions {
+            assert!(r.len() >= 2);
+            for &id in r.nodes() {
+                covered[id.idx()] += 1;
+            }
+        }
+        for node in g.nodes() {
+            let expect = usize::from(participates(&node.kind));
+            assert_eq!(covered[node.id.idx()], expect, "node {}", node.name);
+        }
+    }
+
+    #[test]
+    fn partition_is_deterministic() {
+        let g = two_region_graph();
+        assert_eq!(partition(&g), partition(&g));
+    }
+
+    #[test]
+    fn shard_regions_balances_and_preserves() {
+        let g = two_region_graph();
+        let regions = partition(&g);
+        let total: usize = regions.iter().map(|r| r.len()).sum();
+        // More shards than regions: one group per region.
+        let groups = shard_regions(regions.clone(), 8);
+        assert_eq!(groups.len(), 2);
+        assert_eq!(groups.iter().flatten().map(|r| r.len()).sum::<usize>(), total);
+        // One shard: everything in a single group.
+        let one = shard_regions(regions, 1);
+        assert_eq!(one.len(), 1);
+        assert_eq!(one[0].len(), 2);
+    }
+
+    #[test]
+    fn shared_group_dp_matches_per_region_exploration() {
+        // explore_shard's one-DP-per-group optimization must be exact:
+        // exploring each region on its own masked DP (explore_region)
+        // and exploring the whole group with the shared DP must yield
+        // the same patterns.
+        let g = two_region_graph();
+        let device = DeviceSpec::v100();
+        let opts = ExploreOptions::default();
+        let regions = partition(&g);
+        let mut per_region = FusionPlan::default();
+        for r in &regions {
+            per_region
+                .patterns
+                .extend(explore_region(&g, &device, &opts, r).patterns);
+        }
+        let shard = explore_shard(&g, &device, &opts, &regions);
+        let norm = |plan: &FusionPlan| {
+            let mut v: Vec<Vec<NodeId>> =
+                plan.patterns.iter().map(|p| p.nodes().to_vec()).collect();
+            v.sort();
+            v
+        };
+        assert_eq!(norm(&per_region), norm(&shard));
+    }
+
+    #[test]
+    fn single_region_partitioned_explore_matches_monolithic() {
+        // Layer-norm is one connected fusible region, so the
+        // partitioned pipeline must reproduce the monolithic plan
+        // pattern-for-pattern.
+        let mut g = Graph::new("ln");
+        let x = g.param(Shape::new(vec![2048, 512]), DType::F32, "x");
+        let _ = blocks::layer_norm(&mut g, x, "ln");
+        let device = DeviceSpec::v100();
+        let opts = ExploreOptions::default();
+        assert_eq!(partition(&g).len(), 1);
+        let mono = explore(&g, &device, &opts);
+        let part = explore_partitioned(&g, &device, &opts);
+        let norm = |plan: &FusionPlan| {
+            let mut v: Vec<Vec<NodeId>> =
+                plan.patterns.iter().map(|p| p.nodes().to_vec()).collect();
+            v.sort();
+            v
+        };
+        assert_eq!(norm(&mono), norm(&part));
+    }
+
+    #[test]
+    fn partitioned_explore_no_worse_across_gemm_boundaries() {
+        let g = two_region_graph();
+        let device = DeviceSpec::v100();
+        let opts = ExploreOptions::default();
+        let mono = explore(&g, &device, &opts);
+        let part = explore_partitioned(&g, &device, &opts);
+        assert!(part.is_disjoint());
+        for p in &part.patterns {
+            assert!(p.is_valid(&g));
+        }
+        let model = DeltaModel::new(&g, device.clone());
+        let t_mono = model.plan_time_us(&mono.kernels(&g));
+        let t_part = model.plan_time_us(&part.kernels(&g));
+        assert!(
+            t_part <= t_mono * 1.001 + 1e-9,
+            "partitioned {t_part} vs monolithic {t_mono}"
+        );
+    }
+
+    #[test]
+    fn partitioned_explore_no_worse_on_real_workloads() {
+        use crate::workloads::{models, Mode};
+        let device = DeviceSpec::v100();
+        let opts = ExploreOptions::default();
+        for w in [models::bert(Mode::Infer), models::asr()] {
+            let mono = explore(&w.graph, &device, &opts);
+            let part = explore_partitioned(&w.graph, &device, &opts);
+            assert!(part.is_disjoint(), "{}", w.key());
+            let model = DeltaModel::new(&w.graph, device.clone());
+            let t_mono = model.plan_time_us(&mono.kernels(&w.graph));
+            let t_part = model.plan_time_us(&part.kernels(&w.graph));
+            assert!(
+                t_part <= t_mono * 1.01 + 1e-9,
+                "{}: partitioned {t_part} vs monolithic {t_mono}",
+                w.key()
+            );
+        }
+    }
+}

@@ -45,9 +45,9 @@ use super::store::{PlanLookup, SharedPlanStore};
 use crate::coordinator::{
     guard_never_negative, tune_with_guards, GraphKey, ServiceOptions, Session,
 };
-use crate::explorer::ExploreOptions;
+use crate::explorer::{regions, ExploreOptions, FusionPlan};
 use crate::gpu::{DeviceSpec, SimConfig, Simulator};
-use crate::pipeline::{OptimizedProgram, Tech};
+use crate::pipeline::{self, OptimizedProgram, Tech};
 use crate::workloads::{LoopKind, Workload};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -98,6 +98,10 @@ pub(crate) struct FleetCounters {
     pub port_jobs: AtomicUsize,
     pub port_failures: AtomicUsize,
     pub fs_vetoes: AtomicUsize,
+    /// Region-shard compile sub-jobs fanned out by sharded explorations
+    /// (each counts toward queue traffic but not `explore_jobs`, which
+    /// stays one per graph exploration).
+    pub shard_jobs: AtomicUsize,
 }
 
 /// Per-iteration simulated latency of a program on a device.
@@ -133,6 +137,9 @@ pub(crate) fn produce_candidate(
                 plan_store: None,
             };
             tune_with_guards(w, &opts, fallback)
+        }
+        WallJobKind::ExploreShard { .. } => {
+            unreachable!("sharded explorations publish through their join barrier")
         }
         WallJobKind::GuardPort { ported } => {
             if never_negative {
@@ -184,11 +191,108 @@ pub(crate) fn guard_and_publish(
 pub(crate) enum WallJobKind {
     /// Full FS exploration with the production guards.
     Explore,
+    /// One region group of a sharded exploration. Whichever shard
+    /// completes the join barrier runs the global tail (backfill +
+    /// remote fusion + lowering), guards and publishes for the whole
+    /// graph.
+    ExploreShard { join: Arc<ShardJoin>, index: usize },
     /// A cross-class port already lowered by the dispatcher (the
     /// launch-dim re-tune is the cheap 10% and must stay on the
     /// deterministic decision path); the worker runs the §7.2
     /// never-negative guard and publishes the verdict.
     GuardPort { ported: OptimizedProgram },
+}
+
+/// Join barrier for one graph's region-sharded exploration: shard
+/// workers deposit their partial plans here; the last one to finish
+/// takes them all and publishes. The groups are index-aligned with the
+/// queued shard jobs.
+#[derive(Debug)]
+pub(crate) struct ShardJoin {
+    pub groups: Vec<Vec<regions::Region>>,
+    state: Mutex<ShardState>,
+}
+
+#[derive(Debug)]
+struct ShardState {
+    partials: Vec<Option<FusionPlan>>,
+    done: usize,
+}
+
+impl ShardJoin {
+    pub(crate) fn new(groups: Vec<Vec<regions::Region>>) -> Self {
+        let n = groups.len();
+        ShardJoin {
+            groups,
+            state: Mutex::new(ShardState { partials: vec![None; n], done: 0 }),
+        }
+    }
+
+    /// Deposit shard `index`'s partial plan (`None` = the shard
+    /// crashed). Returns every partial exactly once — to whichever
+    /// caller completes the join.
+    fn complete(
+        &self,
+        index: usize,
+        partial: Option<FusionPlan>,
+    ) -> Option<Vec<Option<FusionPlan>>> {
+        let mut st = self.state.lock().unwrap();
+        st.partials[index] = partial;
+        st.done += 1;
+        if st.done == self.groups.len() {
+            Some(std::mem::take(&mut st.partials))
+        } else {
+            None
+        }
+    }
+}
+
+/// One shard's crash-contained partial exploration: per-region
+/// candidates + beam + absorption + pruning over the shard's region
+/// group. Pure — both executors compute byte-identical partials, which
+/// is what keeps sharded plan decisions executor-invariant.
+pub(crate) fn shard_partial(
+    w: &Workload,
+    spec: &DeviceSpec,
+    explore: &ExploreOptions,
+    group: &[regions::Region],
+) -> Option<FusionPlan> {
+    let opts = pipeline::runtime_explore_opts(explore, w.loop_kind);
+    std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        regions::explore_shard(&w.graph, spec, &opts, group)
+    }))
+    .ok()
+}
+
+/// Merge shard partials and run the global tail (canonical-order merge,
+/// XLA backfill, remote fusion, lowering) with the production guards: a
+/// crashed shard (`None` partial) or a panicking tail yields `None`,
+/// which [`guard_and_publish`] turns into the pinned-fallback veto path
+/// — exactly like a crashed monolithic exploration.
+pub(crate) fn produce_sharded_candidate(
+    w: &Workload,
+    spec: &DeviceSpec,
+    explore: &ExploreOptions,
+    never_negative: bool,
+    fallback: &Arc<OptimizedProgram>,
+    partials: Vec<Option<FusionPlan>>,
+) -> Option<Arc<OptimizedProgram>> {
+    let mut merged = FusionPlan::default();
+    for p in partials {
+        merged.patterns.extend(p?.patterns);
+    }
+    let opts = pipeline::runtime_explore_opts(explore, w.loop_kind);
+    let prog = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        let plan = regions::finish_partitioned(&w.graph, spec, &opts, merged);
+        let kernels = pipeline::lower(&w.graph, &plan, spec, Tech::Fs, w.loop_kind);
+        OptimizedProgram { tech: Tech::Fs, plan, kernels }
+    }))
+    .ok()?;
+    if never_negative {
+        guard_never_negative(w, spec, prog, fallback)
+    } else {
+        Some(Arc::new(prog))
+    }
 }
 
 /// One unit of background compilation.
@@ -445,6 +549,40 @@ fn run_compile(s: &Shared, job: WallJob) {
     // the pipeline below panics.
     let _release = InflightRelease { s, key: key.0 };
     let w = Arc::clone(&s.templates[template]);
+    let kind = match kind {
+        WallJobKind::ExploreShard { join, index } => {
+            // Shard jobs publish once, from whichever worker completes
+            // the join; the other shards only deposit partials (their
+            // inflight count still releases via the guard above, so the
+            // dispatcher's publication barrier holds until the join
+            // publishes).
+            let partial = shard_partial(&w, &spec, &s.explore, &join.groups[index]);
+            if let Some(partials) = join.complete(index, partial) {
+                let candidate = produce_sharded_candidate(
+                    &w,
+                    &spec,
+                    &s.explore,
+                    s.never_negative,
+                    &fallback,
+                    partials,
+                );
+                guard_and_publish(
+                    &w,
+                    &spec,
+                    key,
+                    candidate,
+                    &fallback,
+                    fb_ms,
+                    ready_ms,
+                    &s.store,
+                    &s.latency,
+                    &s.counters,
+                );
+            }
+            return;
+        }
+        other => other,
+    };
     let candidate = produce_candidate(&w, &spec, &s.explore, s.never_negative, &fallback, kind);
     guard_and_publish(
         &w,

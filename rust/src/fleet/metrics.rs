@@ -36,6 +36,15 @@ pub struct FleetReport {
     pub port_jobs: usize,
     pub port_failures: usize,
     pub fs_vetoes: usize,
+    /// Region-shard compile sub-jobs fanned out by sharded explorations
+    /// (0 with `compile_shards == 1` or when no explored graph had more
+    /// than one fusible region).
+    pub shard_jobs: usize,
+    /// Per-job compile latency (enqueue → virtual ready; a sharded
+    /// exploration counts once, at its join barrier) over every explore
+    /// and port job. Derived from the virtual clocks in both executors,
+    /// so the percentiles are executor-invariant and deterministic.
+    pub compile: Summary,
     /// Tasks whose served GPU time exceeded their fallback GPU time.
     /// The never-negative guard must keep this at zero (§7.2).
     pub regressions: usize,
@@ -108,6 +117,10 @@ impl FleetReport {
             .set("port_jobs", self.port_jobs)
             .set("port_failures", self.port_failures)
             .set("fs_vetoes", self.fs_vetoes)
+            .set("shard_jobs", self.shard_jobs)
+            .set("compile_p50_ms", self.compile.p50)
+            .set("compile_p99_ms", self.compile.p99)
+            .set("compile_max_ms", self.compile.max)
             .set("regressions", self.regressions)
             .set("compile_owner_runs", self.compile_owner_runs)
             .set("compile_affinity_misses", self.compile_affinity_misses)
@@ -158,6 +171,14 @@ impl FleetReport {
         ]);
         t.row(vec!["plan-store misses".to_string(), self.misses.to_string()]);
         t.row(vec!["full explorations".to_string(), self.explore_jobs.to_string()]);
+        t.row(vec![
+            "region-shard compile sub-jobs".to_string(),
+            self.shard_jobs.to_string(),
+        ]);
+        t.row(vec![
+            "compile latency p50/p99".to_string(),
+            format!("{} / {} ms", fmt_f(self.compile.p50, 3), fmt_f(self.compile.p99, 3)),
+        ]);
         t.row(vec!["cross-device ports".to_string(), self.port_jobs.to_string()]);
         t.row(vec!["port failures (re-explored)".to_string(), self.port_failures.to_string()]);
         t.row(vec!["never-negative vetoes".to_string(), self.fs_vetoes.to_string()]);
@@ -233,6 +254,8 @@ mod tests {
             port_jobs: 2,
             port_failures: 0,
             fs_vetoes: 1,
+            shard_jobs: 4,
+            compile: crate::util::summarize(&[12.0, 20.0, 44.0, 16.0, 31.0]),
             regressions: 0,
             compile_owner_runs: 3,
             compile_affinity_misses: 2,
@@ -275,12 +298,28 @@ mod tests {
             "regressions",
             "wait_p50_ms",
             "wait_p99_ms",
+            "shard_jobs",
+            "compile_p50_ms",
+            "compile_p99_ms",
+            "compile_max_ms",
             "saved_frac",
             "devices",
         ] {
             assert!(j.get(key).is_some(), "missing {key}");
         }
         assert_eq!(j.get("regressions").and_then(|v| v.as_usize()), Some(0));
+        assert_eq!(j.get("shard_jobs").and_then(|v| v.as_usize()), Some(4));
+    }
+
+    #[test]
+    fn compile_latency_summary_orders() {
+        let r = report();
+        assert!(r.compile.p50 > 0.0);
+        assert!(r.compile.p99 >= r.compile.p50);
+        assert!(r.compile.max >= r.compile.p99);
+        let text = r.render();
+        assert!(text.contains("compile latency p50/p99"));
+        assert!(text.contains("region-shard compile sub-jobs"));
     }
 
     #[test]

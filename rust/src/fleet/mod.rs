@@ -9,7 +9,11 @@
 //! * [`registry`] — the mixed V100/T4 device population with per-device
 //!   serving capacity.
 //! * [`queue`] — the shareable work-stealing deque set under the
-//!   bounded compile-worker pool that throttles FS exploration.
+//!   bounded compile-worker pool that throttles FS exploration. With
+//!   `compile_shards > 1` a multi-region graph's exploration fans out
+//!   as one queue sub-job per region group with a join barrier, so the
+//!   pool parallelizes *within* one graph
+//!   ([`crate::explorer::regions`]).
 //! * [`store`] — the shared cross-device plan store: a plan explored on
 //!   one device class is *ported* to another by re-running only the
 //!   §4.2 launch-dimension tuner ([`crate::pipeline::port_program`]).

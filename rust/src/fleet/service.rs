@@ -40,8 +40,9 @@
 
 use super::admission::{AdmissionConfig, AdmissionController, AdmitDecision};
 use super::executor::{
-    guard_and_publish, iter_ms, produce_candidate, ExecutorKind, FleetCounters, LatencyMap,
-    ServeJob, WallClockPool, WallJob, WallJobKind,
+    guard_and_publish, iter_ms, produce_candidate, produce_sharded_candidate, shard_partial,
+    ExecutorKind, FleetCounters, LatencyMap, ServeJob, ShardJoin, WallClockPool, WallJob,
+    WallJobKind,
 };
 use super::metrics::{DeviceUtilization, FleetReport};
 use super::queue::{owner_hash, QueueStats, WorkStealingQueue};
@@ -49,7 +50,7 @@ use super::registry::DeviceRegistry;
 use super::sim::FleetTask;
 use super::store::{PlanLookup, SharedPlanStore};
 use crate::coordinator::{GraphKey, ServiceMetrics, Session};
-use crate::explorer::ExploreOptions;
+use crate::explorer::{regions, ExploreOptions};
 use crate::gpu::DeviceSpec;
 use crate::pipeline::{self, OptimizedProgram, Tech};
 use crate::util::summarize;
@@ -79,6 +80,12 @@ pub struct FleetOptions {
     /// A cross-class port (launch-dim re-tune only) costs this fraction
     /// of the full exploration.
     pub port_cost_frac: f64,
+    /// Region-shard fan-out for full explorations: a graph whose
+    /// fusible subgraph splits into multiple independent regions is
+    /// compiled as up to this many queue sub-jobs joined at a barrier,
+    /// so the worker pool parallelizes *within* one graph. `1` keeps
+    /// the monolithic compile jobs (one exploration = one queue item).
+    pub compile_shards: usize,
     /// Execution substrate for [`FleetService::run_trace`].
     pub executor: ExecutorKind,
 }
@@ -94,6 +101,7 @@ impl Default for FleetOptions {
             explore_cost_base_ms: 10.0,
             explore_cost_per_op_ms: 1.0,
             port_cost_frac: 0.1,
+            compile_shards: 1,
             executor: ExecutorKind::VirtualTime,
         }
     }
@@ -151,6 +159,11 @@ pub struct FleetService {
     served_gpu_ms: f64,
     fallback_gpu_ms: f64,
     waits_ms: Vec<f64>,
+    /// Per compile job (explore or port): enqueue → virtual ready, join
+    /// barrier included for sharded explorations. Virtual bookkeeping
+    /// in both executors, so the reported percentiles are
+    /// executor-invariant.
+    compile_ms: Vec<f64>,
     makespan_ms: f64,
     /// Queue accounting of the torn-down wall-clock pool, when one ran.
     wall_queue: Option<QueueStats>,
@@ -163,6 +176,7 @@ impl FleetService {
     pub fn new(opts: FleetOptions, templates: Vec<Workload>) -> Self {
         assert!(!opts.registry.is_empty(), "fleet needs at least one device");
         assert!(opts.compile_workers >= 1, "fleet needs at least one compile worker");
+        assert!(opts.compile_shards >= 1, "compile fan-out needs at least one shard");
         assert!(!templates.is_empty(), "fleet needs at least one template");
         let template_keys = templates.iter().map(|w| GraphKey::of(&w.graph)).collect();
         let slots = opts
@@ -190,6 +204,7 @@ impl FleetService {
             served_gpu_ms: 0.0,
             fallback_gpu_ms: 0.0,
             waits_ms: Vec::new(),
+            compile_ms: Vec::new(),
             makespan_ms: 0.0,
             wall_queue: None,
             wall_elapsed_ms: 0.0,
@@ -297,8 +312,11 @@ impl FleetService {
 
     /// Full exploration on the worker pool: real FS optimization with
     /// the coordinator's guards; the store records what the class will
-    /// serve (FS plan, or the fallback when vetoed). Returns (virtual
-    /// ready time, per-iteration latency — pending publication when the
+    /// serve (FS plan, or the fallback when vetoed). With
+    /// `compile_shards > 1` and a multi-region graph the exploration
+    /// fans out as one queue sub-job per region group with a join
+    /// barrier ([`Self::run_explore_sharded`]). Returns (virtual ready
+    /// time, per-iteration latency — pending publication when the
     /// exploration was handed to a wall-clock worker).
     fn run_explore(
         &mut self,
@@ -310,8 +328,17 @@ impl FleetService {
         enqueue_at: f64,
     ) -> (f64, FsLatency) {
         let w = Arc::clone(&self.templates[template]);
+        if self.opts.compile_shards > 1 {
+            let groups =
+                regions::shard_regions(regions::partition(&w.graph), self.opts.compile_shards);
+            if groups.len() > 1 {
+                return self
+                    .run_explore_sharded(template, spec, key, fallback, fb_ms, enqueue_at, groups);
+            }
+        }
         let cost = self.explore_cost_ms(&w);
         let ready = self.schedule_compile(enqueue_at, key, spec.name, cost);
+        self.compile_ms.push(ready - enqueue_at);
         self.counters.explore_jobs.fetch_add(1, Ordering::Relaxed);
         if let Some(pool) = self.pool.as_ref() {
             pool.enqueue_compile(WallJob {
@@ -352,6 +379,84 @@ impl FleetService {
         (ready, FsLatency::Known(ms))
     }
 
+    /// Region-sharded exploration: one queue sub-job per region group,
+    /// each costed by its own op count, joined at a barrier (the
+    /// compile is ready when the slowest shard finishes). Decisions
+    /// stay executor-invariant because the partial plans are pure
+    /// functions of (graph, device, options) and publication goes
+    /// through the same `produce_sharded_candidate`/`guard_and_publish`
+    /// pair in both executors.
+    #[allow(clippy::too_many_arguments)]
+    fn run_explore_sharded(
+        &mut self,
+        template: usize,
+        spec: &DeviceSpec,
+        key: GraphKey,
+        fallback: &Arc<OptimizedProgram>,
+        fb_ms: f64,
+        enqueue_at: f64,
+        groups: Vec<Vec<regions::Region>>,
+    ) -> (f64, FsLatency) {
+        let w = Arc::clone(&self.templates[template]);
+        // Apportion the monolithic cost basis (base + per_op × |V|, the
+        // same basis `explore_cost_ms` charges) across the shards by
+        // their region-op share: sharding parallelizes the modeled
+        // work — it must not delete the non-region share of it — and
+        // each sub-job pays its own fixed base.
+        let total_region_ops: usize = groups.iter().flatten().map(|r| r.len()).sum();
+        let mut ready = enqueue_at;
+        for group in &groups {
+            let ops: usize = group.iter().map(|r| r.len()).sum();
+            let frac = ops as f64 / total_region_ops as f64;
+            let cost = self.opts.explore_cost_base_ms
+                + self.opts.explore_cost_per_op_ms * w.graph.len() as f64 * frac;
+            ready = ready.max(self.schedule_compile(enqueue_at, key, spec.name, cost));
+        }
+        self.compile_ms.push(ready - enqueue_at);
+        self.counters.explore_jobs.fetch_add(1, Ordering::Relaxed);
+        self.counters.shard_jobs.fetch_add(groups.len(), Ordering::Relaxed);
+        if let Some(pool) = self.pool.as_ref() {
+            let join = Arc::new(ShardJoin::new(groups));
+            for index in 0..join.groups.len() {
+                pool.enqueue_compile(WallJob {
+                    template,
+                    key,
+                    spec: spec.clone(),
+                    fallback: Arc::clone(fallback),
+                    fb_ms,
+                    ready_ms: ready,
+                    kind: WallJobKind::ExploreShard { join: Arc::clone(&join), index },
+                });
+            }
+            return (ready, FsLatency::Pending { key: key.0, class: spec.name });
+        }
+        let partials = groups
+            .iter()
+            .map(|group| shard_partial(&w, spec, &self.opts.explore, group))
+            .collect();
+        let candidate = produce_sharded_candidate(
+            &w,
+            spec,
+            &self.opts.explore,
+            self.opts.never_negative,
+            fallback,
+            partials,
+        );
+        let ms = guard_and_publish(
+            &w,
+            spec,
+            key,
+            candidate,
+            fallback,
+            fb_ms,
+            ready,
+            &self.store,
+            &self.latency,
+            &self.counters,
+        );
+        (ready, FsLatency::Known(ms))
+    }
+
     /// Cross-class port: re-tune launch dims only (a fraction of the
     /// exploration cost), guard, store. The launch-dim lowering itself
     /// stays on the dispatcher in both executors (it is the cheap ~10%
@@ -374,6 +479,7 @@ impl FleetService {
         let cost = self.explore_cost_ms(&w) * self.opts.port_cost_frac;
         let enqueue_at = now.max(available_ms);
         let ready = self.schedule_compile(enqueue_at, key, spec.name, cost);
+        self.compile_ms.push(ready - enqueue_at);
         self.counters.port_jobs.fetch_add(1, Ordering::Relaxed);
         match pipeline::port_program(&w.graph, source, spec, w.loop_kind) {
             Some(ported) => {
@@ -611,6 +717,8 @@ impl FleetService {
             port_jobs: self.counters.port_jobs.load(Ordering::Relaxed),
             port_failures: self.counters.port_failures.load(Ordering::Relaxed),
             fs_vetoes: self.counters.fs_vetoes.load(Ordering::Relaxed),
+            shard_jobs: self.counters.shard_jobs.load(Ordering::Relaxed),
+            compile: summarize(&self.compile_ms),
             regressions: self.regressions,
             compile_owner_runs: qstats.local_pops,
             compile_affinity_misses: qstats.steals,
@@ -799,6 +907,12 @@ mod tests {
         assert_eq!(wall.wait.p99, virt.wait.p99);
         assert_eq!(wall.makespan_ms, virt.makespan_ms);
         assert_eq!(wall.fallback_gpu_ms, virt.fallback_gpu_ms);
+        // ...and the compile-latency telemetry (virtual bookkeeping in
+        // both executors).
+        assert_eq!(wall.shard_jobs, virt.shard_jobs);
+        assert_eq!(wall.compile.p50, virt.compile.p50);
+        assert_eq!(wall.compile.p99, virt.compile.p99);
+        assert!(virt.compile.p50 > 0.0, "explorations ran, so compile latency is nonzero");
         // ...and the zero-regression guarantee holds on real threads.
         assert_eq!(virt.regressions, 0);
         assert_eq!(wall.regressions, 0);
@@ -808,5 +922,122 @@ mod tests {
         // the guard still caps it at fallback-only cost.
         assert!(wall.served_gpu_ms > 0.0);
         assert!(wall.served_gpu_ms <= wall.fallback_gpu_ms + 1e-6);
+    }
+
+    /// ln → matmul → ln: two fusible regions split by the GEMM, so a
+    /// sharded exploration genuinely fans out.
+    fn two_region_template(rows: usize) -> Workload {
+        use crate::graph::{DType, Graph, Shape};
+        use crate::workloads::{blocks, LoopKind, Mode};
+        let mut g = Graph::new("2reg");
+        let x = g.param(Shape::new(vec![rows, 256]), DType::F32, "x");
+        let h = blocks::layer_norm(&mut g, x, "ln0");
+        let wgt = g.param(Shape::new(vec![256, 256]), DType::F32, "w");
+        let mm = g.matmul(h, wgt, "mm");
+        let _ = blocks::layer_norm(&mut g, mm, "ln1");
+        Workload {
+            name: "2reg",
+            field: "test",
+            mode: Mode::Infer,
+            batch: 1,
+            loop_kind: LoopKind::None,
+            graph: g,
+        }
+    }
+
+    #[test]
+    fn sharded_compile_fans_out_and_cuts_time_to_optimized_plan() {
+        // One task, one multi-region template, idle 4-worker pool: the
+        // sharded exploration must split into >= 2 queue sub-jobs whose
+        // join barrier finishes strictly earlier than the monolithic
+        // compile (each shard pays only its own region's op cost).
+        let template = two_region_template(512);
+        let trace = vec![FleetTask { id: 0, arrival_ms: 0.0, template: 0, iterations: 8 }];
+        let run = |executor: ExecutorKind, shards: usize| {
+            let opts = FleetOptions {
+                registry: DeviceRegistry::mixed(1, 0, 2),
+                compile_workers: 4,
+                compile_shards: shards,
+                executor,
+                ..Default::default()
+            };
+            let mut svc = FleetService::new(opts, vec![template.clone()]);
+            svc.run_trace(&trace)
+        };
+        let mono = run(ExecutorKind::VirtualTime, 1);
+        let virt = run(ExecutorKind::VirtualTime, 4);
+        let wall = run(ExecutorKind::WallClock { threads: 4 }, 4);
+
+        assert_eq!(mono.shard_jobs, 0, "monolithic compiles never shard");
+        assert_eq!(virt.explore_jobs, 1);
+        assert!(virt.shard_jobs >= 2, "expected region fan-out, got {}", virt.shard_jobs);
+        assert!(
+            virt.compile.p99 < mono.compile.p99,
+            "sharded compile {} must beat monolithic {} on an idle pool",
+            virt.compile.p99,
+            mono.compile.p99
+        );
+        // The virtual/wall-clock decision equivalence holds for the
+        // sharded jobs and their join barrier too.
+        assert_eq!(wall.explore_jobs, virt.explore_jobs);
+        assert_eq!(wall.shard_jobs, virt.shard_jobs);
+        assert_eq!(wall.misses, virt.misses);
+        assert_eq!(wall.fs_vetoes, virt.fs_vetoes);
+        assert_eq!(wall.compile.p50, virt.compile.p50);
+        assert_eq!(wall.compile.p99, virt.compile.p99);
+        assert_eq!(virt.regressions, 0);
+        assert_eq!(wall.regressions, 0);
+    }
+
+    #[test]
+    fn sharded_trace_converges_across_executors() {
+        // A full trace over multi-region templates with a mixed
+        // registry: sharded explorations, ports and store hits all
+        // interleave, and the wall-clock run must still reach the
+        // virtual replay's decisions exactly.
+        let templates = vec![two_region_template(256), two_region_template(384)];
+        let traffic = TrafficConfig {
+            tasks: 60,
+            templates: 2,
+            mean_interarrival_ms: 1.0,
+            ..Default::default()
+        };
+        let trace = generate_trace(&traffic);
+        let base = FleetOptions {
+            registry: DeviceRegistry::mixed(1, 1, 2),
+            compile_workers: 3,
+            compile_shards: 3,
+            ..Default::default()
+        };
+        let virt = {
+            let mut svc = FleetService::new(base.clone(), templates.clone());
+            svc.run_trace(&trace)
+        };
+        let wall = {
+            let opts = FleetOptions {
+                executor: ExecutorKind::WallClock { threads: 2 },
+                ..base
+            };
+            let mut svc = FleetService::new(opts, templates);
+            svc.run_trace(&trace)
+        };
+        // One sharded exploration per template (the second class ports
+        // instead of exploring), each fanning out per region.
+        assert!(virt.shard_jobs >= 4, "two 2-region explorations fan out: {}", virt.shard_jobs);
+        assert_eq!(wall.tasks, virt.tasks);
+        assert_eq!(wall.admitted, virt.admitted);
+        assert_eq!(wall.fallback_only, virt.fallback_only);
+        assert_eq!(wall.rejected, virt.rejected);
+        assert_eq!(wall.exact_hits, virt.exact_hits);
+        assert_eq!(wall.port_hits, virt.port_hits);
+        assert_eq!(wall.misses, virt.misses);
+        assert_eq!(wall.explore_jobs, virt.explore_jobs);
+        assert_eq!(wall.port_jobs, virt.port_jobs);
+        assert_eq!(wall.shard_jobs, virt.shard_jobs);
+        assert_eq!(wall.compile.p50, virt.compile.p50);
+        assert_eq!(wall.compile.p99, virt.compile.p99);
+        assert_eq!(wall.makespan_ms, virt.makespan_ms);
+        assert_eq!(virt.regressions, 0);
+        assert_eq!(wall.regressions, 0);
     }
 }

@@ -20,10 +20,13 @@
 //!   run it on the PJRT CPU client as a smoke test).
 //! * `fstitch fleet [--v100 N] [--t4 N] [--capacity C] [--workers K]
 //!   [--tasks N] [--rate MS] [--templates T] [--seed S] [--out FILE]
-//!   [--executor virtual|wallclock] [--threads N]` — replay a
-//!   deterministic task trace through the multi-device fleet service
-//!   (§7.2) and print the fleet-wide report; `wallclock` runs compile
-//!   workers and per-device serving slots on real OS threads.
+//!   [--executor virtual|wallclock] [--threads N]
+//!   [--compile-shards S]` — replay a deterministic task trace through
+//!   the multi-device fleet service (§7.2) and print the fleet-wide
+//!   report; `wallclock` runs compile workers and per-device serving
+//!   slots on real OS threads, and `--compile-shards` fans a
+//!   multi-region graph's exploration out as parallel region sub-jobs
+//!   with a join barrier.
 
 use fusion_stitching::coordinator::{JitService, ServiceOptions};
 use fusion_stitching::fleet;
@@ -311,6 +314,13 @@ fn main() {
             if workers == 0 {
                 bad_flag("--workers", "compile pool needs at least one worker");
             }
+            // --compile-shards S: fan each multi-region exploration out
+            // as up to S region sub-jobs with a join barrier (1 =
+            // monolithic compile jobs).
+            let compile_shards = num("--compile-shards", 1);
+            if compile_shards == 0 {
+                bad_flag("--compile-shards", "need at least one shard");
+            }
             // --executor wallclock [--threads N]: real OS threads for
             // compile workers and per-device serving slots; decisions
             // converge to the virtual replay's. --threads alone
@@ -332,18 +342,20 @@ fn main() {
             let opts = fleet::FleetOptions {
                 registry: fleet::DeviceRegistry::mixed(v100s, t4s, capacity),
                 compile_workers: workers,
+                compile_shards,
                 executor,
                 ..Default::default()
             };
             println!(
                 "== fleet: {} tasks over {} templates on {} devices ({} slots), \
-                 seed {:#x}, executor {} ==\n",
+                 seed {:#x}, executor {}, compile shards {} ==\n",
                 traffic.tasks,
                 traffic.templates,
                 opts.registry.len(),
                 opts.registry.total_capacity(),
                 traffic.seed,
-                executor.name()
+                executor.name(),
+                compile_shards
             );
             let templates = fleet::build_templates(&traffic);
             let trace = fleet::generate_trace(&traffic);
@@ -358,6 +370,16 @@ fn main() {
                 report.port_hits,
                 report.regressions
             );
+            if report.shard_jobs > 0 {
+                println!(
+                    "region-sharded compile: {} sub-jobs across {} explorations; \
+                     compile latency p50/p99 {:.1}/{:.1} ms",
+                    report.shard_jobs,
+                    report.explore_jobs,
+                    report.compile.p50,
+                    report.compile.p99
+                );
+            }
             if report.wall_elapsed_ms > 0.0 {
                 println!(
                     "wall-clock executor: {} compile threads finished the trace in {:.1} ms",
@@ -381,7 +403,7 @@ fn main() {
                  [--model NAME] [--device v100|t4] [--iters N] [--dot] [--file HLO] \
                  [--explore] [--tech tf|xla|fs] [--out FILE] [--run] [--v100 N] [--t4 N] \
                  [--capacity C] [--workers K] [--tasks N] [--rate MS] [--templates T] \
-                 [--seed S] [--executor virtual|wallclock] [--threads N]"
+                 [--seed S] [--executor virtual|wallclock] [--threads N] [--compile-shards S]"
             );
         }
     }

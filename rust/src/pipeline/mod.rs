@@ -81,23 +81,28 @@ pub fn plan_for_runtime(
             // results; we seed exploration from the raw graph, which
             // subsumes that behaviour (the explorer re-discovers every
             // XLA fusion as a candidate).
-            //
-            // Dynamic while_loops bound what any JIT fusion pass can
-            // touch: the runtime dispatches one loop *step* at a time,
-            // so fusions cannot span step boundaries and remote packing
-            // of kernels from different dispatches is impossible. We
-            // model that by capping the pattern size at a loop-body's
-            // op budget and disabling the Fig. 5 remote pass — this is
-            // why the paper's DIEN kernel reduction (6842 → 2109,
-            // ≈ 3.2×) is far shallower than its BERT one (§7.3).
-            let mut o = opts.clone();
-            if loop_kind == LoopKind::DynamicLoop {
-                o.max_pattern_size = o.max_pattern_size.min(DYNLOOP_PATTERN_BUDGET);
-                o.enable_remote_fusion = false;
-            }
-            explorer::explore(graph, device, &o)
+            explorer::explore(graph, device, &runtime_explore_opts(opts, loop_kind))
         }
     }
+}
+
+/// Exploration knobs adjusted for the runtime loop regime. Dynamic
+/// while_loops bound what any JIT fusion pass can touch: the runtime
+/// dispatches one loop *step* at a time, so fusions cannot span step
+/// boundaries and remote packing of kernels from different dispatches
+/// is impossible. We model that by capping the pattern size at a
+/// loop-body's op budget and disabling the Fig. 5 remote pass — this is
+/// why the paper's DIEN kernel reduction (6842 → 2109, ≈ 3.2×) is far
+/// shallower than its BERT one (§7.3). Shared by [`plan_for_runtime`]
+/// and the fleet's region-sharded compile path so both cut at the same
+/// dynamic-loop boundary.
+pub fn runtime_explore_opts(opts: &ExploreOptions, loop_kind: LoopKind) -> ExploreOptions {
+    let mut o = opts.clone();
+    if loop_kind == LoopKind::DynamicLoop {
+        o.max_pattern_size = o.max_pattern_size.min(DYNLOOP_PATTERN_BUDGET);
+        o.enable_remote_fusion = false;
+    }
+    o
 }
 
 /// Lower a plan to the kernel launch sequence.

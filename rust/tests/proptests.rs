@@ -94,6 +94,88 @@ fn prop_explorer_plans_are_disjoint_and_valid() {
 }
 
 #[test]
+fn prop_regions_partition_fusible_nodes_exactly() {
+    use fusion_stitching::explorer::regions;
+    use fusion_stitching::graph::OpKind;
+    for seed in 0..SEEDS {
+        let g = random_graph(seed, 80);
+        let regions = regions::partition(&g);
+        // Every fusible non-copy node is in exactly one region; nothing
+        // else is in any region.
+        let mut count = vec![0usize; g.len()];
+        for r in &regions {
+            for &id in r.nodes() {
+                count[id.idx()] += 1;
+            }
+        }
+        for node in g.nodes() {
+            let expect = usize::from(
+                node.kind.is_fusible() && !matches!(node.kind, OpKind::Copy),
+            );
+            assert_eq!(count[node.id.idx()], expect, "seed {seed}: node {}", node.name);
+        }
+        // Regions are closed under fusible adjacency, so no fusion
+        // decision can ever cross a region boundary.
+        for r in &regions {
+            for &id in r.nodes() {
+                for &c in g.consumers(id) {
+                    let k = &g.node(c).kind;
+                    if k.is_fusible() && !matches!(k, OpKind::Copy) {
+                        assert!(
+                            r.nodes().binary_search(&c).is_ok(),
+                            "seed {seed}: fusible consumer {c} escaped its region"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_partitioned_explore_no_worse_and_merged_plans_valid() {
+    // The region-parallel acceptance gate: per-region exploration plus
+    // the global backfill/remote tail must produce a plan whose total
+    // estimated latency is no worse than the monolithic explorer's, and
+    // the merged per-region plans must stay disjoint and valid.
+    use fusion_stitching::explorer::DeltaModel;
+    use fusion_stitching::graph::OpKind;
+    let device = DeviceSpec::v100();
+    let opts = ExploreOptions::default();
+    for seed in 0..SEEDS {
+        let g = random_graph(seed, 60);
+        let mono = explorer::explore(&g, &device, &opts);
+        let part = explorer::explore_partitioned(&g, &device, &opts);
+        assert!(part.is_disjoint(), "seed {seed}: merged plans overlap");
+        for p in &part.patterns {
+            assert!(p.is_valid(&g), "seed {seed}: invalid merged pattern {p:?}");
+        }
+        // Merged kernels still cover every memory op exactly once.
+        let kernels = part.kernels(&g);
+        let mut covered = vec![0usize; g.len()];
+        for k in &kernels {
+            for &id in k.nodes() {
+                covered[id.idx()] += 1;
+            }
+        }
+        for node in g.nodes() {
+            let expect = usize::from(
+                node.kind.is_fusible()
+                    && !matches!(node.kind, OpKind::Reshape | OpKind::Copy),
+            );
+            assert_eq!(covered[node.id.idx()], expect, "seed {seed}: node {}", node.name);
+        }
+        let model = DeltaModel::new(&g, device.clone());
+        let t_mono = model.plan_time_us(&mono.kernels(&g));
+        let t_part = model.plan_time_us(&kernels);
+        assert!(
+            t_part <= t_mono * 1.05 + 1e-9,
+            "seed {seed}: partitioned {t_part:.2} µs vs monolithic {t_mono:.2} µs"
+        );
+    }
+}
+
+#[test]
 fn prop_xla_never_places_expensive_mid_kernel() {
     for seed in 0..SEEDS {
         let g = random_graph(seed, 80);
