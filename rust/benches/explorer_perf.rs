@@ -4,6 +4,9 @@
 //!
 //! Reports, per stage and per graph size:
 //! * candidate generation (PatternReduction DP),
+//! * the delta-evaluator / schedulability hot path (per-pattern
+//!   `pattern_time_us` + `pattern_supported`, now bitset-membership
+//!   based instead of O(n²) `contains` scans),
 //! * beam-search plan composition,
 //! * full explore() including validation/backfill/remote fusion,
 //! * **partitioned vs monolithic** exploration: the region-parallel
@@ -59,6 +62,50 @@ fn main() {
         synthetic_json.push(row);
     }
     println!("{}", t.render());
+
+    // ---- cost-model hot path: delta scoring + schedulability -----------
+    // `DeltaModel::pattern_time_us` and `pattern_supported` run once per
+    // candidate pattern per DP step; both used `pattern.contains` inside
+    // per-node loops (O(n²) on large regions) and now use a node-id
+    // bitset. This section times exactly those two calls over every
+    // multi-op candidate the DP produced, so the win (and any
+    // regression) shows up as ms/pattern across graph sizes.
+    println!("== cost-model hot path (bitset membership) ==\n");
+    let mut td = Table::new(vec!["ops", "patterns", "delta-score ms", "supported ms"]);
+    let mut delta_json: Vec<JsonValue> = Vec::new();
+    for &num_ops in sizes {
+        let cfg = SyntheticConfig { num_ops, ..Default::default() };
+        let g = generate(&cfg, &mut Prng::new(42));
+        let cands = explorer::candidate_patterns(&g, &device, &opts);
+        let pats: Vec<Vec<fusion_stitching::NodeId>> = cands
+            .iter()
+            .flatten()
+            .filter(|sp| sp.pattern.len() >= 2)
+            .map(|sp| sp.pattern.nodes().to_vec())
+            .collect();
+        let model = DeltaModel::new(&g, device.clone());
+        let score_stats = bench_loop(1, 5, || {
+            pats.iter().map(|p| model.pattern_time_us(p)).sum::<f64>()
+        });
+        let supported_stats = bench_loop(1, 5, || {
+            pats.iter()
+                .filter(|p| fusion_stitching::codegen::latency::pattern_supported(&g, p))
+                .count()
+        });
+        td.row(vec![
+            g.len().to_string(),
+            pats.len().to_string(),
+            format!("{:.3}", score_stats.mean_ms()),
+            format!("{:.3}", supported_stats.mean_ms()),
+        ]);
+        let mut row = JsonValue::obj();
+        row.set("ops", g.len())
+            .set("patterns", pats.len())
+            .set("delta_score_ms", score_stats.mean_ms())
+            .set("supported_ms", supported_stats.mean_ms());
+        delta_json.push(row);
+    }
+    println!("{}", td.render());
 
     // ---- partitioned vs monolithic exploration -------------------------
     // The region pipeline must be no worse in plan quality (total
@@ -158,6 +205,7 @@ fn main() {
         .set("quick", quick)
         .set("partitioned_no_worse", partitioned_no_worse)
         .set("synthetic", JsonValue::Arr(synthetic_json))
+        .set("delta_hot_path", JsonValue::Arr(delta_json))
         .set("partitioned", JsonValue::Arr(partitioned_json))
         .set("workloads", JsonValue::Arr(workloads_json));
     let path = "BENCH_explorer.json";

@@ -59,6 +59,17 @@ fn run_once(
     svc.run_trace(&trace)
 }
 
+fn run_calibrated(
+    traffic: &TrafficConfig,
+    templates: &[Workload],
+    executor: ExecutorKind,
+) -> FleetReport {
+    let trace = generate_trace(traffic);
+    let opts = FleetOptions { executor, calibrate: true, ..base_options() };
+    let mut svc = FleetService::new(opts, templates.to_vec());
+    svc.run_trace(&trace)
+}
+
 fn main() {
     // Positional number = trace size (first parseable arg outside a
     // flag pair, in any order); `--threads K` = wall-clock pool size;
@@ -192,6 +203,52 @@ fn main() {
         report.compile.p99
     );
 
+    // Calibration loop: the same trace with online cost-model
+    // calibration + drift-triggered re-exploration. Gates: drift must
+    // not grow (the fit falls back to the defaults when it would not
+    // help), every re-exploration resolves through the plan-quality
+    // no-worse gate, zero regressions, and the calibrated decision
+    // stream converges across executors.
+    println!("\n== calibration: fit cost params from served traffic, re-explore on drift ==");
+    let cal = run_calibrated(&traffic, &templates, ExecutorKind::VirtualTime);
+    let cal_wall = run_calibrated(&traffic, &templates, ExecutorKind::WallClock { threads });
+    assert_eq!(
+        decisions(&cal_wall),
+        decisions(&cal),
+        "calibrated wall-clock run diverged from calibrated virtual decisions"
+    );
+    assert_eq!(cal_wall.reexplore_jobs, cal.reexplore_jobs);
+    assert_eq!(cal_wall.reexplore_improved, cal.reexplore_improved);
+    assert_eq!(cal_wall.reexplore_rejected, cal.reexplore_rejected);
+    assert_eq!(cal_wall.calibration_samples, cal.calibration_samples);
+    assert_eq!(cal_wall.drift_before, cal.drift_before);
+    assert_eq!(cal_wall.drift_after, cal.drift_after);
+    assert!(cal.calibration_samples > 0, "served hits must produce calibration samples");
+    assert!(cal.drift_before > 0.0, "uncalibrated cost model must show measurable drift");
+    assert!(
+        cal.drift_after <= cal.drift_before,
+        "calibration must not grow drift: {} -> {}",
+        cal.drift_before,
+        cal.drift_after
+    );
+    let plan_quality_no_worse =
+        cal.reexplore_improved + cal.reexplore_rejected == cal.reexplore_jobs
+            && cal.regressions == 0
+            && cal_wall.regressions == 0;
+    assert!(plan_quality_no_worse, "re-exploration accounting must close with zero regressions");
+    println!(
+        "calibration: {} kernel samples; median |predicted-measured| drift {:.4} -> {:.4}; \
+         {} re-explorations ({} improved, {} rejected); saved {:.1}% vs {:.1}% uncalibrated",
+        cal.calibration_samples,
+        cal.drift_before,
+        cal.drift_after,
+        cal.reexplore_jobs,
+        cal.reexplore_improved,
+        cal.reexplore_rejected,
+        cal.saved_frac() * 100.0,
+        report.saved_frac() * 100.0
+    );
+
     let projected = report.projected_gpu_hours_saved(30_000.0, 2.0);
     println!(
         "\nGPU time saved: {:.1} ms of {:.1} ms fallback-only ({:.1}%)",
@@ -229,6 +286,19 @@ fn main() {
         .set("monolithic_compile_p99_ms", report.compile.p99)
         .set("regressions", sharded.regressions)
         .set("matches_virtual_decisions", true);
+    let mut calibration_json = JsonValue::obj();
+    calibration_json
+        .set("enabled", true)
+        .set("calibration_samples", cal.calibration_samples)
+        .set("drift_before", cal.drift_before)
+        .set("drift_after", cal.drift_after)
+        .set("reexplored", cal.reexplore_jobs)
+        .set("reexplore_improved", cal.reexplore_improved)
+        .set("reexplore_rejected", cal.reexplore_rejected)
+        .set("saved_frac_calibrated", cal.saved_frac())
+        .set("saved_frac_uncalibrated", report.saved_frac())
+        .set("plan_quality_no_worse", plan_quality_no_worse)
+        .set("matches_virtual_decisions", true);
     let mut out = JsonValue::obj();
     out.set("bench", "production_fleet")
         .set("tasks", traffic.tasks)
@@ -238,7 +308,8 @@ fn main() {
         .set("projected_gpu_hours_saved_per_month", projected)
         .set("report", report.to_json())
         .set("wallclock", wall_json)
-        .set("sharded", sharded_json);
+        .set("sharded", sharded_json)
+        .set("calibration", calibration_json);
     let path = "BENCH_fleet.json";
     match std::fs::write(path, out.to_pretty()) {
         Ok(()) => println!("wrote {path}"),

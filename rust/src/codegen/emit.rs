@@ -21,6 +21,11 @@ impl EmitConfig {
     pub fn fusion_stitching() -> Self {
         EmitConfig { tuner: TunerOptions::fusion_stitching() }
     }
+    /// FusionStitching personality under explicit (e.g. calibrated)
+    /// cost parameters.
+    pub fn fusion_stitching_with(cost: crate::gpu::CostParams) -> Self {
+        EmitConfig { tuner: TunerOptions::fusion_stitching_with(cost) }
+    }
     pub fn xla() -> Self {
         EmitConfig { tuner: TunerOptions::xla() }
     }

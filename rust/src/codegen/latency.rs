@@ -12,8 +12,9 @@
 use super::grouping::Grouping;
 use super::schedule::SubRootSchedule;
 use super::shmem::{self, ShmemRequest};
-use crate::gpu::{DeviceSpec, LaunchDims};
+use crate::gpu::{CostParams, DeviceSpec, LaunchDims};
 use crate::graph::{Graph, NodeId, OpClass, OpKind};
+use crate::util::IdMask;
 
 /// Launch shape for a generated kernel: `block_threads` threads per
 /// block, each block covering `rows_per_block` logical rows of the
@@ -61,20 +62,12 @@ pub struct LatencyEstimate {
     pub bytes_written: usize,
 }
 
-/// Instruction-cost constants (cycles/op folded into instruction
-/// equivalents; values follow the Volta microbenchmarks [22]).
+/// Structural cost constants that are not tunable knobs. The tunable
+/// instruction costs (CPI, shuffle, shared-memory access — the Volta
+/// microbenchmark values) moved to [`crate::gpu::CostParams`], which is
+/// threaded through every estimate so the calibration loop can correct
+/// them per device class.
 mod cost {
-    /// Extra instruction-equivalents per warp-shuffle exchange.
-    pub const SHUFFLE: f64 = 8.0;
-    /// Extra instruction-equivalents per shared-memory access.
-    pub const SHMEM_ACCESS: f64 = 6.0;
-    /// Warp-cooperative reduction combine per row (5 shuffle stages).
-    pub const WARP_COMBINE: f64 = 5.0 * SHUFFLE;
-    /// Block-cooperative reduction combine per row (warp stage + smem
-    /// stage + barrier).
-    pub const BLOCK_COMBINE: f64 = WARP_COMBINE + 32.0 + 30.0;
-    /// Base ALU CPI.
-    pub const CPI: f64 = 4.0;
     /// Cap on traffic re-read multipliers (L1/L2 bound recompute
     /// re-reads even when the recompute itself is unbounded).
     pub const REREAD_CAP: f64 = 32.0;
@@ -98,6 +91,10 @@ pub fn pattern_rows(graph: &Graph, pattern: &[NodeId]) -> (usize, usize) {
 /// all? (§4.1: no cross-block communication; mid-pattern reductions must
 /// be row reductions over the innermost axis.)
 pub fn pattern_supported(graph: &Graph, pattern: &[NodeId]) -> bool {
+    // Membership bitset: the per-node consumer scan below made this
+    // check O(n²) on large regions via `pattern.contains` (hot on the
+    // exploration path — every tuner call starts here).
+    let member = IdMask::from_ids(graph.len(), pattern.iter().map(|id| id.idx()));
     for &id in pattern {
         let node = graph.node(id);
         if !node.kind.is_fusible() {
@@ -106,7 +103,7 @@ pub fn pattern_supported(graph: &Graph, pattern: &[NodeId]) -> bool {
         let has_internal_consumer = graph
             .consumers(id)
             .iter()
-            .any(|c| pattern.contains(c));
+            .any(|c| member.contains(c.idx()));
         if has_internal_consumer {
             if let OpKind::Reduce { axes, .. } = &node.kind {
                 let in_rank = graph.node(node.inputs[0]).shape.rank();
@@ -121,10 +118,43 @@ pub fn pattern_supported(graph: &Graph, pattern: &[NodeId]) -> bool {
     true
 }
 
+/// Pattern membership as a node-id bitset — built once per pattern and
+/// shared across every `estimate_kernel` candidate the tuner evaluates
+/// for it (the enumeration calls it per launch × schedule combination).
+pub fn pattern_membership(graph: &Graph, pattern: &[NodeId]) -> IdMask {
+    IdMask::from_ids(graph.len(), pattern.iter().map(|id| id.idx()))
+}
+
+/// The Eq. 1 + bandwidth-model tail for a fully-specified
+/// memory-intensive launch: `(time_us, alu_cycles)` under `params`.
+/// The ONE copy of this formula — shared by [`estimate_kernel`] and the
+/// calibration model ([`crate::codegen::calibrate::model_kernel_us`]),
+/// so the calibrator can never drift from the model it corrects.
+pub fn device_time_us(
+    device: &DeviceSpec,
+    params: &CostParams,
+    dims: LaunchDims,
+    occupancy: f64,
+    instrs_per_thread: f64,
+    total_bytes: usize,
+) -> (f64, f64) {
+    let n_warp = dims.total_warps(device.warp_size) as f64;
+    let slots = (device.total_warp_slots() as f64 * occupancy).max(1.0);
+    let n_wave = (n_warp / slots).ceil().max(1.0);
+    let cycles = n_wave * instrs_per_thread * params.cpi;
+    let t_alu_us = cycles / (device.clock_ghz * 1e3);
+    let bw = device.effective_bandwidth_at(occupancy, params.bandwidth_knee);
+    let t_mem_us = total_bytes as f64 / (bw * 1e3);
+    let time_us = (t_alu_us.max(t_mem_us) * params.time_scale).max(device.kernel_floor_us);
+    (time_us, cycles)
+}
+
 /// Evaluate one fully-specified candidate. Returns `None` when the
 /// combination violates a data-locality or resource constraint (§4.2:
 /// "schedules that do not match data locality requirement are
-/// discarded").
+/// discarded"). `member` is the pattern's membership bitset
+/// ([`pattern_membership`]); callers evaluating many candidates for one
+/// pattern build it once.
 #[allow(clippy::too_many_arguments)]
 pub fn estimate_kernel(
     graph: &Graph,
@@ -134,6 +164,8 @@ pub fn estimate_kernel(
     launch: LaunchSpec,
     device: &DeviceSpec,
     index_overhead: f64,
+    params: &CostParams,
+    member: &IdMask,
 ) -> Option<LatencyEstimate> {
     assert_eq!(schedules.len(), grouping.groups.len());
     let (rows, _row_len) = pattern_rows(graph, pattern);
@@ -199,9 +231,9 @@ pub fn estimate_kernel(
             .any(|&m| graph.node(m).kind.class() == OpClass::Reduction);
         if has_reduction {
             let combines = if launch.rows_per_block == 1 {
-                cost::BLOCK_COMBINE
+                params.block_combine()
             } else if launch.rows_per_block == warps_per_block {
-                cost::WARP_COMBINE
+                params.warp_combine()
             } else {
                 0.0 // serial per-thread reduction: no combine stage
             };
@@ -209,7 +241,7 @@ pub fn estimate_kernel(
         }
 
         let sr_out = graph.node(g.sub_root).num_elements() as f64;
-        let demand = group_demand(graph, grouping, pattern, g.sub_root);
+        let demand = group_demand(graph, grouping, member, g.sub_root);
 
         if !g.is_root {
             match sched {
@@ -220,10 +252,10 @@ pub fn estimate_kernel(
                     group_work *= multiplier;
                 }
                 SubRootSchedule::WarpReuse => {
-                    group_work += sr_out * cost::SHUFFLE + demand * cost::SHUFFLE;
+                    group_work += (sr_out + demand) * params.shuffle_cost;
                 }
                 SubRootSchedule::BlockReuse => {
-                    group_work += sr_out * cost::SHMEM_ACCESS + demand * cost::SHMEM_ACCESS;
+                    group_work += (sr_out + demand) * params.shmem_access_cost;
                     let bytes_per_row = (sr_out as usize / rows.max(1)).max(1)
                         * graph.node(g.sub_root).dtype.size_bytes()
                         * launch.rows_per_block;
@@ -251,7 +283,7 @@ pub fn estimate_kernel(
         let uses = graph
             .consumers(inp)
             .iter()
-            .filter(|c| pattern.contains(c))
+            .filter(|c| member.contains(c.idx()))
             .count()
             .max(1);
         // Re-reads caused by recomputation of the consuming groups.
@@ -266,7 +298,7 @@ pub fn estimate_kernel(
                 .any(|&m| graph.node(m).inputs.contains(&inp));
             if feeds_group {
                 let sr_out = graph.node(g.sub_root).num_elements() as f64;
-                let demand = group_demand(graph, grouping, pattern, g.sub_root);
+                let demand = group_demand(graph, grouping, member, g.sub_root);
                 let rc = (demand / sr_out).max(1.0).min(cost::REREAD_CAP);
                 mult = mult.max(rc);
             }
@@ -281,15 +313,14 @@ pub fn estimate_kernel(
 
     // ---- Eq. 1 -----------------------------------------------------------
     let instrs_per_thread = total_work / total_threads + index_overhead;
-    let n_warp = dims.total_warps(device.warp_size) as f64;
-    let slots = (device.total_warp_slots() as f64 * occupancy).max(1.0);
-    let n_wave = (n_warp / slots).ceil().max(1.0);
-    let l_warp = instrs_per_thread * cost::CPI;
-    let cycles = n_wave * l_warp;
-    let t_alu_us = cycles / (device.clock_ghz * 1e3);
-    let bw = device.effective_bandwidth_gbps(occupancy);
-    let t_mem_us = (bytes_read + bytes_written) as f64 / (bw * 1e3);
-    let time_us = t_alu_us.max(t_mem_us).max(device.kernel_floor_us);
+    let (time_us, cycles) = device_time_us(
+        device,
+        params,
+        dims,
+        occupancy,
+        instrs_per_thread,
+        bytes_read + bytes_written,
+    );
 
     Some(LatencyEstimate {
         time_us,
@@ -299,7 +330,7 @@ pub fn estimate_kernel(
         regs_per_thread: regs,
         shmem_per_block: shmem_alloc.total_bytes,
         instrs_per_thread,
-        avg_cpi: cost::CPI,
+        avg_cpi: params.cpi,
         bytes_read,
         bytes_written,
     })
@@ -314,13 +345,13 @@ pub fn estimate_kernel(
 fn group_demand(
     graph: &Graph,
     grouping: &Grouping,
-    pattern: &[NodeId],
+    member: &IdMask,
     sub_root: NodeId,
 ) -> f64 {
     let mut seen_groups: Vec<usize> = Vec::new();
     let mut demand = 0.0f64;
     for &c in graph.consumers(sub_root) {
-        if !pattern.contains(&c) {
+        if !member.contains(c.idx()) {
             continue;
         }
         match grouping.group_of(c) {
@@ -420,7 +451,9 @@ mod tests {
                 .iter()
                 .map(|gr| if gr.is_root { SubRootSchedule::ThreadLocal } else { s })
                 .collect();
-            estimate_kernel(&g, &pattern, &grouping, &scheds, launch, &device, 6.0)
+            let cp = CostParams::default();
+            let m = pattern_membership(&g, &pattern);
+            estimate_kernel(&g, &pattern, &grouping, &scheds, launch, &device, 6.0, &cp, &m)
         };
         let warp = mk(SubRootSchedule::WarpReuse).expect("warp valid");
         let thread = mk(SubRootSchedule::ThreadLocal).expect("thread valid");
@@ -450,7 +483,9 @@ mod tests {
                 }
             })
             .collect();
-        let est = estimate_kernel(&g, &pattern, &grouping, &scheds, launch, &device, 6.0)
+        let cp = CostParams::default();
+        let m = pattern_membership(&g, &pattern);
+        let est = estimate_kernel(&g, &pattern, &grouping, &scheds, launch, &device, 6.0, &cp, &m)
             .expect("block valid");
         assert!(est.shmem_per_block > 0);
         assert!(est.occupancy > 0.0);
@@ -474,7 +509,10 @@ mod tests {
                 }
             })
             .collect();
-        assert!(estimate_kernel(&g, &pattern, &grouping, &scheds, launch, &device, 6.0).is_none());
+        let cp = CostParams::default();
+        let m = pattern_membership(&g, &pattern);
+        let est = estimate_kernel(&g, &pattern, &grouping, &scheds, launch, &device, 6.0, &cp, &m);
+        assert!(est.is_none());
     }
 
     #[test]
@@ -535,7 +573,10 @@ mod tests {
                 }
             })
             .collect();
-        let est = estimate_kernel(&g, &pattern, &grouping, &scheds, launch, &device, 6.0).unwrap();
+        let cp = CostParams::default();
+        let m = pattern_membership(&g, &pattern);
+        let est = estimate_kernel(&g, &pattern, &grouping, &scheds, launch, &device, 6.0, &cp, &m)
+            .unwrap();
         let x_bytes = 4096 * 768 * 4;
         // Input x read (a few uses) + gamma/beta; output written once.
         assert!(est.bytes_read >= x_bytes);

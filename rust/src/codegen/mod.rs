@@ -17,6 +17,7 @@
 //! 4. **Emission** ([`emit`]) — produce the [`crate::gpu::KernelSpec`]
 //!    the simulator executes, plus CUDA-like pseudocode for inspection.
 
+pub mod calibrate;
 pub mod emit;
 pub mod grouping;
 pub mod latency;
@@ -24,6 +25,7 @@ pub mod schedule;
 pub mod shmem;
 pub mod tuner;
 
+pub use calibrate::{Calibrator, DriftSummary, KernelSample};
 pub use emit::{emit_kernel, emit_library_call, pseudocode, EmitConfig};
 pub use grouping::{identify_groups, Group, Grouping};
 pub use latency::{estimate_kernel, LatencyEstimate};

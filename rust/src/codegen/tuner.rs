@@ -11,7 +11,7 @@
 use super::grouping::{identify_groups, num_enumerable_expensive, Grouping};
 use super::latency::{estimate_kernel, pattern_supported, LatencyEstimate, LaunchSpec};
 use super::schedule::SubRootSchedule;
-use crate::gpu::DeviceSpec;
+use crate::gpu::{CostParams, DeviceSpec};
 use crate::graph::{Graph, NodeId};
 
 /// Tuner configuration. The baselines reuse this module with reuse
@@ -31,27 +31,40 @@ pub struct TunerOptions {
     /// Enumerate per-sub-root schedules exhaustively up to this many
     /// internal sub-roots (3^m growth); beyond it, try uniform choices.
     pub max_schedule_enum: usize,
+    /// Cost constants the latency-evaluator scores candidates with
+    /// (CPI, shuffle/shared-memory instruction costs, bandwidth knee,
+    /// calibrated corrections).
+    pub cost: CostParams,
 }
 
 impl TunerOptions {
     /// FusionStitching's code generator.
     pub fn fusion_stitching() -> Self {
+        Self::fusion_stitching_with(CostParams::default())
+    }
+
+    /// FusionStitching's code generator under explicit (e.g. calibrated)
+    /// cost parameters.
+    pub fn fusion_stitching_with(cost: CostParams) -> Self {
         TunerOptions {
             allow_reuse: true,
             index_overhead: 6.0,
             max_expensive_enum: 3,
             max_schedule_enum: 4,
+            cost,
         }
     }
 
     /// XLA's code generator: thread composition only, no index CSE
-    /// across schedules.
+    /// across schedules. Always costed with the default constants — the
+    /// fallback must stay bit-stable under calibration.
     pub fn xla() -> Self {
         TunerOptions {
             allow_reuse: false,
             index_overhead: 12.0,
             max_expensive_enum: 0,
             max_schedule_enum: 0,
+            cost: CostParams::default(),
         }
     }
 }
@@ -99,6 +112,9 @@ pub fn tune_pattern(
     if pattern.is_empty() || !pattern_supported(graph, pattern) {
         return None;
     }
+    // One membership bitset for the whole enumeration below (it can
+    // reach hundreds of estimate_kernel calls per pattern).
+    let member = super::latency::pattern_membership(graph, pattern);
 
     let n_exp = num_enumerable_expensive(graph, pattern);
     let masks: Vec<Vec<bool>> = if !opts.allow_reuse {
@@ -178,6 +194,8 @@ pub fn tune_pattern(
                     launch,
                     device,
                     opts.index_overhead,
+                    &opts.cost,
+                    &member,
                 ) {
                     let better = best
                         .as_ref()

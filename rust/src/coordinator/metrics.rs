@@ -55,13 +55,23 @@ impl ServiceMetrics {
     }
 
     /// Latency percentile over all recorded iterations (`q` in [0, 1]);
-    /// `None` until at least one iteration was recorded.
+    /// `None` until at least one iteration was recorded. For several
+    /// quantiles of the same series use [`Self::latency_percentiles`],
+    /// which sorts once.
     pub fn latency_percentile(&self, q: f64) -> Option<f64> {
+        self.latency_percentiles(&[q]).map(|v| v[0])
+    }
+
+    /// Sort-once batch of latency percentiles (`None` until at least one
+    /// iteration was recorded) — the report paths ask for p50/p95/p99 of
+    /// series with tens of thousands of samples, and one clone + sort
+    /// serves the whole batch.
+    pub fn latency_percentiles(&self, qs: &[f64]) -> Option<Vec<f64>> {
         let inner = self.inner.lock().unwrap();
         if inner.latencies_ms.is_empty() {
             None
         } else {
-            Some(crate::util::percentile(&inner.latencies_ms, q))
+            Some(crate::util::percentiles(&inner.latencies_ms, qs))
         }
     }
 
@@ -184,6 +194,10 @@ mod tests {
         assert!((49.0..=51.0).contains(&p50), "p50={p50}");
         let p99 = m.latency_percentile(0.99).unwrap();
         assert!(p99 >= 98.0, "p99={p99}");
+        // Batch form sorts once and agrees with the per-call form.
+        let batch = m.latency_percentiles(&[0.5, 0.99]).unwrap();
+        assert_eq!(batch, vec![p50, p99]);
+        assert!(ServiceMetrics::new().latency_percentiles(&[0.5]).is_none());
         assert_eq!(m.latencies().len(), 100);
     }
 

@@ -19,11 +19,14 @@ use std::rc::Rc;
 #[derive(Debug, Clone)]
 pub struct BeamOptions {
     pub width: usize,
+    /// Cost constants for the final accurate-model selection among the
+    /// finished beams.
+    pub cost: crate::gpu::CostParams,
 }
 
 impl Default for BeamOptions {
     fn default() -> Self {
-        BeamOptions { width: 3 }
+        BeamOptions { width: 3, cost: crate::gpu::CostParams::default() }
     }
 }
 
@@ -165,7 +168,7 @@ pub fn compose_plan(
     // Final selection among the beam's plans with the accurate model:
     // total simplified kernel time over the *whole* kernel list (the
     // paper's latency-evaluator pass over candidate plans).
-    let model = DeltaModel::new(graph, device.clone());
+    let model = DeltaModel::with_params(graph, device.clone(), opts.cost);
     let best = beams
         .into_iter()
         .map(|b| FusionPlan { patterns: b.into_patterns() })
@@ -276,8 +279,10 @@ mod tests {
         let device = DeviceSpec::v100();
         let cands = candidate_patterns(&g, &device, &ExploreOptions::default());
         let model = DeltaModel::new(&g, device.clone());
-        let narrow = compose_plan(&g, &device, &cands, &BeamOptions { width: 1 });
-        let wide = compose_plan(&g, &device, &cands, &BeamOptions { width: 3 });
+        let narrow =
+            compose_plan(&g, &device, &cands, &BeamOptions { width: 1, ..Default::default() });
+        let wide =
+            compose_plan(&g, &device, &cands, &BeamOptions { width: 3, ..Default::default() });
         let t_narrow = model.plan_time_us(&narrow.kernels(&g));
         let t_wide = model.plan_time_us(&wide.kernels(&g));
         assert!(t_wide <= t_narrow * 1.001, "wide {t_wide} vs narrow {t_narrow}");

@@ -14,7 +14,7 @@
 
 use super::delta::DeltaModel;
 use super::pattern::FusionPattern;
-use crate::gpu::DeviceSpec;
+use crate::gpu::{CostParams, DeviceSpec};
 use crate::graph::{Graph, NodeId, OpKind};
 
 /// Exploration knobs (paper defaults: k = 3).
@@ -37,6 +37,12 @@ pub struct ExploreOptions {
     /// Beam width for plan composition (§5.3; the paper keeps 3
     /// buffer sets).
     pub beam_width: usize,
+    /// Cost-model constants every scoring pass of this exploration uses
+    /// (delta evaluator, beam selection, accurate-model pruning, launch
+    /// tuning at lowering). Defaults reproduce the historical hard-coded
+    /// values; the fleet's calibration loop threads fitted
+    /// per-device-class corrections through here.
+    pub cost: CostParams,
 }
 
 impl Default for ExploreOptions {
@@ -48,6 +54,7 @@ impl Default for ExploreOptions {
             max_pack_bundle: 4,
             full_cost_model: false,
             beam_width: 3,
+            cost: CostParams::default(),
         }
     }
 }
@@ -82,8 +89,14 @@ pub fn candidate_patterns_in(
     opts: &ExploreOptions,
     mask: Option<&[bool]>,
 ) -> CandidateSets {
-    let model = DeltaModel::new(graph, device.clone());
-    let scorer = Scorer { model, graph, device: device.clone(), full: opts.full_cost_model };
+    let model = DeltaModel::with_params(graph, device.clone(), opts.cost);
+    let scorer = Scorer {
+        model,
+        graph,
+        device: device.clone(),
+        full: opts.full_cost_model,
+        cost: opts.cost,
+    };
     let mut cands: CandidateSets = vec![Vec::new(); graph.len()];
 
     for &v in graph.post_order().iter() {
@@ -126,6 +139,7 @@ struct Scorer<'g> {
     graph: &'g Graph,
     device: DeviceSpec,
     full: bool,
+    cost: CostParams,
 }
 
 impl Scorer<'_> {
@@ -140,12 +154,12 @@ impl Scorer<'_> {
             .iter()
             .map(|&id| self.model.op_time_us(id))
             .sum();
-        let calls_saved = (pattern.len() - 1) as f64 * self.model.launch_overhead_us;
+        let calls_saved = (pattern.len() - 1) as f64 * self.model.launch_overhead_us();
         match crate::codegen::tune_pattern(
             self.graph,
             pattern.nodes(),
             &self.device,
-            &crate::codegen::TunerOptions::fusion_stitching(),
+            &crate::codegen::TunerOptions::fusion_stitching_with(self.cost),
         ) {
             Some(t) => unfused + calls_saved - t.estimate.time_us,
             None => f64::NEG_INFINITY,

@@ -10,7 +10,7 @@
 //! simplifications §5.4 lists). A positive score means fusing saves
 //! time; the explorer only keeps positive-score patterns.
 
-use crate::gpu::DeviceSpec;
+use crate::gpu::{CostParams, DeviceSpec};
 use crate::graph::{Graph, Node, NodeId, OpClass, OpKind};
 
 /// The fast cost model. Construct once per (graph, device) exploration;
@@ -19,27 +19,34 @@ use crate::graph::{Graph, Node, NodeId, OpClass, OpKind};
 pub struct DeltaModel<'g> {
     graph: &'g Graph,
     device: DeviceSpec,
-    /// Host + device cost of one extra kernel launch, µs
-    /// (`T_reduced_calls`'s fixed per-call constant).
-    pub launch_overhead_us: f64,
+    /// Cost constants (launch overhead, bandwidth knee, calibrated
+    /// corrections) this model scores with.
+    params: CostParams,
     /// Cached standalone time per node, µs.
     op_time_cache: Vec<f64>,
 }
 
 impl<'g> DeltaModel<'g> {
+    /// Model with the default (uncalibrated) cost constants.
     pub fn new(graph: &'g Graph, device: DeviceSpec) -> Self {
-        let launch_overhead_us = 7.0; // ~launch floor + host dispatch
+        Self::with_params(graph, device, CostParams::default())
+    }
+
+    /// Model under explicit cost parameters — the calibrated-exploration
+    /// entry point ([`crate::codegen::calibrate`]).
+    pub fn with_params(graph: &'g Graph, device: DeviceSpec, params: CostParams) -> Self {
         let op_time_cache = graph
             .nodes()
             .iter()
-            .map(|n| standalone_op_time_us(graph, n, &device))
+            .map(|n| standalone_op_time_us(graph, n, &device, &params))
             .collect();
-        DeltaModel {
-            graph,
-            device,
-            launch_overhead_us,
-            op_time_cache,
-        }
+        DeltaModel { graph, device, params, op_time_cache }
+    }
+
+    /// Host + device cost of one extra kernel launch, µs
+    /// (`T_reduced_calls`'s fixed per-call constant).
+    pub fn launch_overhead_us(&self) -> f64 {
+        self.params.launch_overhead_us
     }
 
     /// Standalone (unfused) execution time of one op, µs.
@@ -53,7 +60,7 @@ impl<'g> DeltaModel<'g> {
             return 0.0;
         }
         let unfused: f64 = pattern.iter().map(|&id| self.op_time_us(id)).sum();
-        let calls_saved = (pattern.len() - 1) as f64 * self.launch_overhead_us;
+        let calls_saved = (pattern.len() - 1) as f64 * self.launch_overhead_us();
         let fused = self.pattern_time_us(pattern);
         unfused + calls_saved - fused - self.launch_overhead_us_of_fused()
     }
@@ -82,6 +89,11 @@ impl<'g> DeltaModel<'g> {
             .map(|&o| g.node(o).output_bytes())
             .sum();
 
+        // Pattern membership as a node-id bitset: the consumer check
+        // below runs per node, and `pattern.contains` made it O(n²) on
+        // large regions (the exploration hot path).
+        let member = crate::util::IdMask::from_ids(g.len(), pattern.iter().map(|id| id.idx()));
+
         // Shared-memory estimate: max over per-row staging requests of
         // reused sub-roots (assume block composition for every internal
         // expensive/reduction producer — conservative).
@@ -94,7 +106,7 @@ impl<'g> DeltaModel<'g> {
                 _ => node.num_elements(),
             } as f64;
             alu_work += work_items * node.kind.instructions_per_element();
-            let internal = g.consumers(id).iter().any(|c| pattern.contains(c));
+            let internal = g.consumers(id).iter().any(|c| member.contains(c.idx()));
             if internal && node.kind.is_expensive_producer() {
                 let per_row = (node.num_elements() / rows.max(1)).max(1)
                     * node.dtype.size_bytes();
@@ -105,13 +117,13 @@ impl<'g> DeltaModel<'g> {
         if occ == 0.0 {
             return f64::INFINITY;
         }
-        let bw = self.device.effective_bandwidth_gbps(occ);
+        let bw = self.device.effective_bandwidth_at(occ, self.params.bandwidth_knee);
         let t_mem = (bytes_read + bytes_written) as f64 / (bw * 1e3);
         // ALU side at full device throughput scaled by occupancy.
         // instr/µs
         let ips = self.device.num_sms as f64 * 64.0 * self.device.clock_ghz * 1e3 * occ;
         let t_alu = alu_work / ips;
-        t_mem.max(t_alu).max(self.device.kernel_floor_us)
+        (t_mem.max(t_alu) * self.params.time_scale).max(self.device.kernel_floor_us)
     }
 
     /// Total simplified plan time: Σ kernel times + per-kernel launch
@@ -125,7 +137,7 @@ impl<'g> DeltaModel<'g> {
                 } else {
                     self.pattern_time_us(k.nodes())
                 };
-                t + self.launch_overhead_us
+                t + self.launch_overhead_us()
             })
             .sum()
     }
@@ -133,7 +145,12 @@ impl<'g> DeltaModel<'g> {
 
 /// Standalone time of one op as its own kernel: traffic/bandwidth with a
 /// launch floor (memory-intensive ops are bandwidth- or latency-bound).
-fn standalone_op_time_us(graph: &Graph, node: &Node, device: &DeviceSpec) -> f64 {
+fn standalone_op_time_us(
+    graph: &Graph,
+    node: &Node,
+    device: &DeviceSpec,
+    params: &CostParams,
+) -> f64 {
     if node.kind.class() == OpClass::Source || !node.kind.is_fusible() {
         return 0.0;
     }
@@ -144,7 +161,7 @@ fn standalone_op_time_us(graph: &Graph, node: &Node, device: &DeviceSpec) -> f64
         .sum();
     let bytes = in_bytes + node.output_bytes();
     let t_mem = bytes as f64 / (device.hbm_gbps * 1e3);
-    t_mem.max(device.kernel_floor_us)
+    (t_mem * params.time_scale).max(device.kernel_floor_us)
 }
 
 /// Convenience free function matching the paper's `f(P_i)` notation.
@@ -213,6 +230,45 @@ mod tests {
         let model = DeltaModel::new(&g, DeviceSpec::v100());
         assert!(model.op_time_us(b) > model.op_time_us(s));
         assert_eq!(model.op_time_us(s), DeviceSpec::v100().kernel_floor_us);
+    }
+
+    #[test]
+    fn calibrated_params_flow_into_scores() {
+        let (g, p) = ln();
+        let base = DeltaModel::new(&g, DeviceSpec::v100());
+        // A 2× time-scale correction scales the (bandwidth-bound,
+        // above-floor) fused LN time by 2×.
+        let scaled = DeltaModel::with_params(
+            &g,
+            DeviceSpec::v100(),
+            CostParams { time_scale: 2.0, ..Default::default() },
+        );
+        let (t0, t1) = (base.pattern_time_us(&p), scaled.pattern_time_us(&p));
+        assert!(t1 > t0 * 1.99, "base {t0} scaled {t1}");
+        // A cheaper calibrated launch overhead shrinks the call-saving
+        // term of Eq. 3, so the same fusion scores lower.
+        let cheap = DeltaModel::with_params(
+            &g,
+            DeviceSpec::v100(),
+            CostParams { launch_overhead_us: 1.0, ..Default::default() },
+        );
+        assert_eq!(cheap.launch_overhead_us(), 1.0);
+        assert!(cheap.score(&p) < base.score(&p));
+    }
+
+    #[test]
+    fn pattern_over_shmem_block_cap_is_unlaunchable() {
+        // One row of 16384 f32 = 64 KB of per-row staging for the
+        // internal reduction producer: over the 48 KB/block cap, so the
+        // delta evaluator must score the fusion unlaunchable (the bug
+        // this PR fixes let it through at occupancy 1.0).
+        let mut g = Graph::new("wide");
+        let x = g.param(Shape::new(vec![64, 16384]), DType::F32, "x");
+        let e = g.unary(crate::graph::OpKind::Exp, x, "e");
+        let r = g.reduce(crate::graph::ReduceOp::Sum, e, vec![1], "r");
+        let model = DeltaModel::new(&g, DeviceSpec::v100());
+        assert_eq!(model.pattern_time_us(&[e, r]), f64::INFINITY);
+        assert!(model.score(&[e, r]) < 0.0);
     }
 
     #[test]

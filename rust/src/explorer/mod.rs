@@ -42,10 +42,10 @@ pub fn explore(graph: &Graph, device: &DeviceSpec, opts: &ExploreOptions) -> Fus
         graph,
         device,
         &cands,
-        &BeamOptions { width: opts.beam_width },
+        &BeamOptions { width: opts.beam_width, cost: opts.cost },
     );
     plan = absorb_producers(graph, plan, opts);
-    plan = prune_bad_patterns(graph, device, plan);
+    plan = prune_bad_patterns(graph, device, plan, opts);
     plan = backfill_with_xla(graph, plan);
     if opts.enable_remote_fusion {
         plan = remote_fusion(graph, device, plan, opts);
@@ -64,9 +64,10 @@ pub fn prune_bad_patterns(
     graph: &Graph,
     device: &DeviceSpec,
     mut plan: FusionPlan,
+    opts: &ExploreOptions,
 ) -> FusionPlan {
-    let model = DeltaModel::new(graph, device.clone());
-    let tuner_opts = crate::codegen::TunerOptions::fusion_stitching();
+    let model = DeltaModel::with_params(graph, device.clone(), opts.cost);
+    let tuner_opts = crate::codegen::TunerOptions::fusion_stitching_with(opts.cost);
     plan.patterns.retain(|p| {
         match crate::codegen::tune_pattern(graph, p.nodes(), device, &tuner_opts) {
             None => false,
@@ -74,9 +75,9 @@ pub fn prune_bad_patterns(
                 let unfused: f64 = p
                     .nodes()
                     .iter()
-                    .map(|&id| model.op_time_us(id) + model.launch_overhead_us)
+                    .map(|&id| model.op_time_us(id) + model.launch_overhead_us())
                     .sum();
-                t.estimate.time_us + model.launch_overhead_us < unfused
+                t.estimate.time_us + model.launch_overhead_us() < unfused
             }
         }
     });

@@ -155,9 +155,14 @@ fn compose_absorb_prune(
     opts: &ExploreOptions,
     cands: &CandidateSets,
 ) -> FusionPlan {
-    let mut plan = compose_plan(graph, device, cands, &BeamOptions { width: opts.beam_width });
+    let mut plan = compose_plan(
+        graph,
+        device,
+        cands,
+        &BeamOptions { width: opts.beam_width, cost: opts.cost },
+    );
     plan = super::absorb_producers(graph, plan, opts);
-    plan = super::prune_bad_patterns(graph, device, plan);
+    plan = super::prune_bad_patterns(graph, device, plan, opts);
     plan
 }
 

@@ -21,7 +21,7 @@ pub fn remote_fusion(
     plan: FusionPlan,
     opts: &ExploreOptions,
 ) -> FusionPlan {
-    let model = DeltaModel::new(graph, device.clone());
+    let model = DeltaModel::with_params(graph, device.clone(), opts.cost);
     let kernels = plan.kernels(graph);
 
     // Partition into "small" (latency-floor-bound) and "large".

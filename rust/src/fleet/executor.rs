@@ -84,10 +84,43 @@ impl ExecutorKind {
     }
 }
 
-/// (graph key, device class) → per-iteration ms of the published
+/// One (graph, class) entry of the shared latency map: the published
+/// per-iteration ms, plus an optional strictly-better drift-triggered
+/// re-publication that only takes effect (in virtual bookkeeping) at
+/// its re-exploration's virtual compile-finish time — a re-explored
+/// plan must not be credited before the compile that produced it could
+/// have finished.
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct PublishedLatency {
+    /// Per-iteration ms of the originally published program.
+    pub ms: f64,
+    /// `(ms, effective_from_ms)` of a re-published improvement.
+    pub improved: Option<(f64, f64)>,
+}
+
+impl PublishedLatency {
+    pub(crate) fn first(ms: f64) -> Self {
+        PublishedLatency { ms, improved: None }
+    }
+
+    /// Value the virtual bookkeeping serves at virtual time `t`.
+    pub(crate) fn at(&self, t: f64) -> f64 {
+        match self.improved {
+            Some((m, from)) if t >= from => m,
+            _ => self.ms,
+        }
+    }
+
+    /// Latest published value (what wall-clock serving converges to).
+    pub(crate) fn latest(&self) -> f64 {
+        self.improved.map(|(m, _)| m).unwrap_or(self.ms)
+    }
+}
+
+/// (graph key, device class) → published latency of the served
 /// program. Shared between the dispatcher, compile workers and serving
 /// threads; publication of an entry *is* the wall-clock ready signal.
-pub(crate) type LatencyMap = Arc<Mutex<HashMap<(u64, &'static str), f64>>>;
+pub(crate) type LatencyMap = Arc<Mutex<HashMap<(u64, &'static str), PublishedLatency>>>;
 
 /// Outcome counters shared across the dispatcher and the compile pool
 /// (the virtual path bumps the same atomics inline, so reports read one
@@ -102,6 +135,15 @@ pub(crate) struct FleetCounters {
     /// (each counts toward queue traffic but not `explore_jobs`, which
     /// stays one per graph exploration).
     pub shard_jobs: AtomicUsize,
+    /// Drift-triggered re-exploration compile jobs (calibration loop).
+    pub reexplore_jobs: AtomicUsize,
+    /// Re-explorations whose plan beat the incumbent and was hot-swapped
+    /// in (the only way a re-exploration may change what a class serves
+    /// — the plan-quality no-worse gate).
+    pub reexplore_improved: AtomicUsize,
+    /// Re-explorations rejected by the gate (crashed, vetoed, or not
+    /// better than the incumbent); the incumbent keeps serving.
+    pub reexplore_rejected: AtomicUsize,
 }
 
 /// Per-iteration simulated latency of a program on a device.
@@ -141,6 +183,9 @@ pub(crate) fn produce_candidate(
         WallJobKind::ExploreShard { .. } => {
             unreachable!("sharded explorations publish through their join barrier")
         }
+        WallJobKind::Reexplore { .. } => {
+            unreachable!("re-explorations publish through publish_reexplored")
+        }
         WallJobKind::GuardPort { ported } => {
             if never_negative {
                 guard_never_negative(w, spec, ported, fallback)
@@ -174,15 +219,91 @@ pub(crate) fn guard_and_publish(
         Some(prog) => {
             let ms = iter_ms(spec, &prog, w.loop_kind);
             store.insert(key, spec.name, prog, ready_ms);
-            latency.lock().unwrap().insert((key.0, spec.name), ms);
+            latency.lock().unwrap().insert((key.0, spec.name), PublishedLatency::first(ms));
             ms
         }
         None => {
             counters.fs_vetoes.fetch_add(1, Ordering::Relaxed);
             store.insert(key, spec.name, Arc::clone(fallback), ready_ms);
-            latency.lock().unwrap().insert((key.0, spec.name), fb_ms);
+            latency.lock().unwrap().insert((key.0, spec.name), PublishedLatency::first(fb_ms));
             fb_ms
         }
+    }
+}
+
+/// Produce a drift-triggered re-exploration candidate: a full FS
+/// exploration under the dispatcher's calibrated `explore` snapshot,
+/// behind the usual crash/veto guards. Shared by the virtual inline
+/// path and the wall-clock workers.
+pub(crate) fn produce_reexplored(
+    w: &Workload,
+    spec: &DeviceSpec,
+    explore: &ExploreOptions,
+    never_negative: bool,
+    fallback: &Arc<OptimizedProgram>,
+) -> Option<Arc<OptimizedProgram>> {
+    let opts = ServiceOptions {
+        device: spec.clone(),
+        explore: explore.clone(),
+        async_compile: false,
+        never_negative,
+        inject_compile_failure: false,
+        plan_store: None,
+    };
+    tune_with_guards(w, &opts, fallback)
+}
+
+/// Publish a re-exploration outcome behind the plan-quality no-worse
+/// gate: the candidate replaces the served plan (store + latency map —
+/// in-flight wall-clock sessions hot-swap to it on their next
+/// iteration) only when its simulator-measured iteration time strictly
+/// beats the incumbent's. The incumbent's store `ready_ms` is preserved
+/// (the graph has been continuously served by the incumbent), while the
+/// improved *latency* only takes effect in virtual bookkeeping from
+/// `effective_ms` — the re-exploration's virtual compile-finish — so
+/// the charged compile time genuinely delays the win. The ONE
+/// re-publication path shared by both executors, like
+/// [`guard_and_publish`].
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn publish_reexplored(
+    w: &Workload,
+    spec: &DeviceSpec,
+    key: GraphKey,
+    candidate: Option<Arc<OptimizedProgram>>,
+    effective_ms: f64,
+    store: &SharedPlanStore,
+    latency: &LatencyMap,
+    counters: &FleetCounters,
+) {
+    let incumbent_ready = match store.lookup(key, spec.name) {
+        PlanLookup::Hit { ready_ms, .. } => ready_ms,
+        // No incumbent means the trigger raced ahead of publication —
+        // impossible by construction (re-explores are only enqueued for
+        // served hits), but never publish into that state.
+        _ => {
+            counters.reexplore_rejected.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+    };
+    let Some(prog) = candidate else {
+        counters.reexplore_rejected.fetch_add(1, Ordering::Relaxed);
+        return;
+    };
+    let new_ms = iter_ms(spec, &prog, w.loop_kind);
+    let old_ms = latency
+        .lock()
+        .unwrap()
+        .get(&(key.0, spec.name))
+        .map(|p| p.latest())
+        .unwrap_or(f64::INFINITY);
+    if new_ms < old_ms - 1e-12 {
+        store.insert(key, spec.name, prog, incumbent_ready);
+        if let Some(entry) = latency.lock().unwrap().get_mut(&(key.0, spec.name)) {
+            entry.improved = Some((new_ms, effective_ms));
+        }
+        counters.reexplore_improved.fetch_add(1, Ordering::Relaxed);
+    } else {
+        counters.reexplore_rejected.fetch_add(1, Ordering::Relaxed);
     }
 }
 
@@ -201,6 +322,13 @@ pub(crate) enum WallJobKind {
     /// deterministic decision path); the worker runs the §7.2
     /// never-negative guard and publishes the verdict.
     GuardPort { ported: OptimizedProgram },
+    /// Drift-triggered re-exploration under calibrated cost parameters
+    /// (carried inside `explore.cost` — a snapshot the dispatcher took
+    /// at trigger time, so both executors explore under identical
+    /// params). Publishes through [`publish_reexplored`]: the incumbent
+    /// plan is replaced only when the candidate measures strictly
+    /// faster.
+    Reexplore { explore: ExploreOptions },
 }
 
 /// Join barrier for one graph's region-sharded exploration: shard
@@ -284,7 +412,8 @@ pub(crate) fn produce_sharded_candidate(
     let opts = pipeline::runtime_explore_opts(explore, w.loop_kind);
     let prog = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
         let plan = regions::finish_partitioned(&w.graph, spec, &opts, merged);
-        let kernels = pipeline::lower(&w.graph, &plan, spec, Tech::Fs, w.loop_kind);
+        let kernels =
+            pipeline::lower_with_cost(&w.graph, &plan, spec, Tech::Fs, w.loop_kind, &opts.cost);
         OptimizedProgram { tech: Tech::Fs, plan, kernels }
     }))
     .ok()?;
@@ -354,6 +483,10 @@ struct Shared {
     latency: LatencyMap,
     explore: ExploreOptions,
     never_negative: bool,
+    /// True when the calibration loop may re-publish improved plans —
+    /// only then do serving threads keep polling after the first
+    /// publication (the mid-stream hot-swap path).
+    reexplore_live: bool,
     counters: Arc<FleetCounters>,
 }
 
@@ -380,6 +513,7 @@ impl WallClockPool {
         counters: Arc<FleetCounters>,
         explore: ExploreOptions,
         never_negative: bool,
+        reexplore_live: bool,
     ) -> WallClockPool {
         let threads = threads.max(1);
         let shared = Arc::new(Shared {
@@ -394,6 +528,7 @@ impl WallClockPool {
             latency,
             explore,
             never_negative,
+            reexplore_live,
             counters,
         });
         let compile_handles = (0..threads)
@@ -581,6 +716,20 @@ fn run_compile(s: &Shared, job: WallJob) {
             }
             return;
         }
+        WallJobKind::Reexplore { explore } => {
+            let candidate = produce_reexplored(&w, &spec, &explore, s.never_negative, &fallback);
+            publish_reexplored(
+                &w,
+                &spec,
+                key,
+                candidate,
+                ready_ms,
+                &s.store,
+                &s.latency,
+                &s.counters,
+            );
+            return;
+        }
         other => other,
     };
     let candidate = produce_candidate(&w, &spec, &s.explore, s.never_negative, &fallback, kind);
@@ -604,21 +753,34 @@ fn run_compile(s: &Shared, job: WallJob) {
 fn serve_loop(rx: mpsc::Receiver<ServeJob>, s: &Shared, totals: &Mutex<ServeTotals>) {
     while let Ok(job) = rx.recv() {
         let mut fs_ms: Option<f64> = None;
+        // True once this task's latency entry can no longer change:
+        // immediately after the first publication when the calibration
+        // loop is off (nothing re-publishes — the serving threads stay
+        // off the shared lock, as before), or once the single allowed
+        // drift-triggered improvement has been observed.
+        let mut settled = job.fs.is_none();
         let mut served = 0.0f64;
         for _ in 0..job.iterations {
-            if fs_ms.is_none() {
+            if !settled {
                 if let Some((key, class)) = job.fs {
                     let published = s.latency.lock().unwrap().get(&(key.0, class)).copied();
-                    if let Some(ms) = published {
-                        if let PlanLookup::Hit { prog, .. } = s.store.lookup(key, class) {
-                            // A vetoed compile publishes the pinned
-                            // fallback — the session keeps serving it
-                            // and must not report itself optimized.
-                            if prog.tech == Tech::Fs {
-                                job.session.hot_swap(prog);
+                    if let Some(pl) = published {
+                        let current = pl.latest();
+                        if fs_ms != Some(current) {
+                            if let PlanLookup::Hit { prog, .. } = s.store.lookup(key, class) {
+                                // A vetoed compile publishes the pinned
+                                // fallback — the session keeps serving
+                                // it and must not report itself
+                                // optimized.
+                                if prog.tech == Tech::Fs {
+                                    job.session.hot_swap(prog);
+                                }
                             }
+                            fs_ms = Some(current);
                         }
-                        fs_ms = Some(ms);
+                        // One re-exploration per (graph, class): after
+                        // an improvement lands the entry is final.
+                        settled = !s.reexplore_live || pl.improved.is_some();
                     }
                 }
             }
@@ -686,6 +848,7 @@ mod tests {
             Arc::clone(&counters),
             explore,
             true,
+            false,
         );
 
         pool.enqueue_compile(WallJob {
@@ -700,8 +863,8 @@ mod tests {
         // The publication barrier blocks until the worker thread has
         // inserted the plan and its latency.
         pool.await_key(key.0);
-        let ms = latency.lock().unwrap().get(&(key.0, spec.name)).copied();
-        let ms = ms.expect("latency published");
+        let pl = latency.lock().unwrap().get(&(key.0, spec.name)).copied();
+        let ms = pl.expect("latency published").latest();
         match store.lookup(key, spec.name) {
             PlanLookup::Hit { ready_ms, .. } => assert_eq!(ready_ms, 42.0),
             other => panic!("expected published hit, got {other:?}"),

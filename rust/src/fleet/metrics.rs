@@ -40,6 +40,22 @@ pub struct FleetReport {
     /// (0 with `compile_shards == 1` or when no explored graph had more
     /// than one fusible region).
     pub shard_jobs: usize,
+    /// Drift-triggered re-exploration compile jobs (0 unless the
+    /// calibration loop is on).
+    pub reexplore_jobs: usize,
+    /// Re-explorations whose plan beat the incumbent (hot-swapped in).
+    pub reexplore_improved: usize,
+    /// Re-explorations the plan-quality no-worse gate rejected.
+    pub reexplore_rejected: usize,
+    /// Per-kernel (modeled, measured) pairs the calibrator recorded.
+    pub calibration_samples: usize,
+    /// Median |predicted − measured| relative kernel-time error under
+    /// the default cost constants / under the fitted per-class params
+    /// (sample-weighted across classes; `drift_after <= drift_before`
+    /// by construction — the fit falls back to the defaults whenever it
+    /// would not help).
+    pub drift_before: f64,
+    pub drift_after: f64,
     /// Per-job compile latency (enqueue → virtual ready; a sharded
     /// exploration counts once, at its join barrier) over every explore
     /// and port job. Derived from the virtual clocks in both executors,
@@ -118,6 +134,12 @@ impl FleetReport {
             .set("port_failures", self.port_failures)
             .set("fs_vetoes", self.fs_vetoes)
             .set("shard_jobs", self.shard_jobs)
+            .set("reexplore_jobs", self.reexplore_jobs)
+            .set("reexplore_improved", self.reexplore_improved)
+            .set("reexplore_rejected", self.reexplore_rejected)
+            .set("calibration_samples", self.calibration_samples)
+            .set("drift_before", self.drift_before)
+            .set("drift_after", self.drift_after)
             .set("compile_p50_ms", self.compile.p50)
             .set("compile_p99_ms", self.compile.p99)
             .set("compile_max_ms", self.compile.max)
@@ -179,6 +201,27 @@ impl FleetReport {
             "compile latency p50/p99".to_string(),
             format!("{} / {} ms", fmt_f(self.compile.p50, 3), fmt_f(self.compile.p99, 3)),
         ]);
+        if self.calibration_samples > 0 {
+            t.row(vec![
+                "calibration samples (kernels)".to_string(),
+                self.calibration_samples.to_string(),
+            ]);
+            t.row(vec![
+                "cost-model drift before/after".to_string(),
+                format!(
+                    "{} / {}",
+                    fmt_f(self.drift_before, 4),
+                    fmt_f(self.drift_after, 4)
+                ),
+            ]);
+            t.row(vec![
+                "drift re-explorations (improved/rejected)".to_string(),
+                format!(
+                    "{} ({}/{})",
+                    self.reexplore_jobs, self.reexplore_improved, self.reexplore_rejected
+                ),
+            ]);
+        }
         t.row(vec!["cross-device ports".to_string(), self.port_jobs.to_string()]);
         t.row(vec!["port failures (re-explored)".to_string(), self.port_failures.to_string()]);
         t.row(vec!["never-negative vetoes".to_string(), self.fs_vetoes.to_string()]);
@@ -255,6 +298,12 @@ mod tests {
             port_failures: 0,
             fs_vetoes: 1,
             shard_jobs: 4,
+            reexplore_jobs: 2,
+            reexplore_improved: 1,
+            reexplore_rejected: 1,
+            calibration_samples: 64,
+            drift_before: 0.3,
+            drift_after: 0.05,
             compile: crate::util::summarize(&[12.0, 20.0, 44.0, 16.0, 31.0]),
             regressions: 0,
             compile_owner_runs: 3,
@@ -299,6 +348,10 @@ mod tests {
             "wait_p50_ms",
             "wait_p99_ms",
             "shard_jobs",
+            "reexplore_jobs",
+            "calibration_samples",
+            "drift_before",
+            "drift_after",
             "compile_p50_ms",
             "compile_p99_ms",
             "compile_max_ms",
@@ -328,5 +381,11 @@ mod tests {
         assert!(text.contains("portability"));
         assert!(text.contains("p50/p99"));
         assert!(text.contains("V100"));
+        assert!(text.contains("cost-model drift"));
+        assert!(text.contains("drift re-explorations"));
+        // Calibration rows disappear when the loop never ran.
+        let mut off = report();
+        off.calibration_samples = 0;
+        assert!(!off.render().contains("cost-model drift"));
     }
 }

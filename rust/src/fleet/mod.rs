@@ -30,7 +30,17 @@
 //!   same plan/admission decisions.
 //! * [`metrics`] — the fleet-wide report: GPU hours saved, regression
 //!   counts (must be zero), cache/portability hit rates, queue-latency
-//!   percentiles.
+//!   percentiles, cost-model drift before/after calibration.
+//!
+//! With [`FleetOptions::calibrate`] the fleet also closes the
+//! predicted-vs-measured loop ([`crate::codegen::calibrate`]): served
+//! programs yield per-kernel (modeled, measured) pairs, per-device-
+//! class [`crate::gpu::CostParams`] corrections are fitted with a
+//! robust regression, and graphs whose measured/predicted ratio drifts
+//! past [`FleetOptions::drift_bound`] are re-explored once under the
+//! calibrated params — published only when strictly faster, hot-swapped
+//! into in-flight sessions, and decided entirely on the dispatcher so
+//! both executors stay decision-identical.
 
 pub mod admission;
 pub mod executor;

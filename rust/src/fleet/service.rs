@@ -40,22 +40,23 @@
 
 use super::admission::{AdmissionConfig, AdmissionController, AdmitDecision};
 use super::executor::{
-    guard_and_publish, iter_ms, produce_candidate, produce_sharded_candidate, shard_partial,
-    ExecutorKind, FleetCounters, LatencyMap, ServeJob, ShardJoin, WallClockPool, WallJob,
-    WallJobKind,
+    guard_and_publish, iter_ms, produce_candidate, produce_reexplored, produce_sharded_candidate,
+    publish_reexplored, shard_partial, ExecutorKind, FleetCounters, LatencyMap, PublishedLatency,
+    ServeJob, ShardJoin, WallClockPool, WallJob, WallJobKind,
 };
 use super::metrics::{DeviceUtilization, FleetReport};
 use super::queue::{owner_hash, QueueStats, WorkStealingQueue};
 use super::registry::DeviceRegistry;
 use super::sim::FleetTask;
 use super::store::{PlanLookup, SharedPlanStore};
+use crate::codegen::calibrate::{self, Calibrator};
 use crate::coordinator::{GraphKey, ServiceMetrics, Session};
 use crate::explorer::{regions, ExploreOptions};
 use crate::gpu::DeviceSpec;
 use crate::pipeline::{self, OptimizedProgram, Tech};
 use crate::util::summarize;
 use crate::workloads::Workload;
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::sync::atomic::Ordering;
 use std::sync::{Arc, Mutex};
 
@@ -88,6 +89,17 @@ pub struct FleetOptions {
     pub compile_shards: usize,
     /// Execution substrate for [`FleetService::run_trace`].
     pub executor: ExecutorKind,
+    /// Close the predicted-vs-measured loop: record (modeled, measured)
+    /// kernel-time pairs as the fleet serves, fit per-device-class
+    /// [`crate::gpu::CostParams`] corrections, and re-explore graphs
+    /// whose measured/predicted ratio drifts past `drift_bound` under
+    /// the calibrated params (publishing only strictly-better plans).
+    pub calibrate: bool,
+    /// Re-exploration trigger: fire when measured/predicted leaves
+    /// `[1/drift_bound, drift_bound]` (must be ≥ 1).
+    pub drift_bound: f64,
+    /// Kernel samples a device class needs before its fit is trusted.
+    pub min_calibration_samples: usize,
 }
 
 impl Default for FleetOptions {
@@ -103,6 +115,9 @@ impl Default for FleetOptions {
             port_cost_frac: 0.1,
             compile_shards: 1,
             executor: ExecutorKind::VirtualTime,
+            calibrate: false,
+            drift_bound: 1.4,
+            min_calibration_samples: 8,
         }
     }
 }
@@ -116,9 +131,11 @@ struct CompileJob {
 
 /// Per-iteration latency of a task's FS plan: known immediately (store
 /// hit, or a virtual-mode inline compile) or pending publication by a
-/// wall-clock compile worker.
+/// wall-clock compile worker. A known entry carries the full
+/// [`PublishedLatency`] so a drift-triggered improvement applies from
+/// its virtual effective time, not retroactively.
 enum FsLatency {
-    Known(f64),
+    Known(PublishedLatency),
     Pending { key: u64, class: &'static str },
 }
 
@@ -151,6 +168,20 @@ pub struct FleetService {
     latency: LatencyMap,
     /// Explore/port/veto accounting shared with the compile pool.
     counters: Arc<FleetCounters>,
+    /// Online cost-model calibration state. Written only by the
+    /// dispatcher — in arrival order, at per-graph publication barriers
+    /// — so fits and the drift decisions they gate are byte-identical
+    /// across executors.
+    calibrator: Calibrator,
+    /// (graph key, class) whose published program has been sampled.
+    sampled: HashSet<(u64, &'static str)>,
+    /// (graph key, class) flagged drifted at first observation but not
+    /// yet re-explored — deferred by compile backpressure or an
+    /// unfitted class, retried on this graph's later hits.
+    drift_pending: HashSet<(u64, &'static str)>,
+    /// (graph key, class) already re-explored (one drift-triggered
+    /// recompile per pair — the loop must terminate).
+    reexplored: HashSet<(u64, &'static str)>,
     /// Live wall-clock substrate during a `run_trace` (None ⇒ virtual).
     pool: Option<WallClockPool>,
     // Accumulators.
@@ -198,6 +229,10 @@ impl FleetService {
             fallbacks: HashMap::new(),
             latency: Arc::new(Mutex::new(HashMap::new())),
             counters: Arc::new(FleetCounters::default()),
+            calibrator: Calibrator::new(opts.min_calibration_samples, 4096),
+            sampled: HashSet::new(),
+            drift_pending: HashSet::new(),
+            reexplored: HashSet::new(),
             pool: None,
             submitted: 0,
             regressions: 0,
@@ -230,6 +265,7 @@ impl FleetService {
                 Arc::clone(&self.counters),
                 self.opts.explore.clone(),
                 self.opts.never_negative,
+                self.opts.calibrate,
             ));
         }
         let mut last = 0.0f64;
@@ -376,7 +412,7 @@ impl FleetService {
             &self.latency,
             &self.counters,
         );
-        (ready, FsLatency::Known(ms))
+        (ready, FsLatency::Known(PublishedLatency::first(ms)))
     }
 
     /// Region-sharded exploration: one queue sub-job per region group,
@@ -454,7 +490,7 @@ impl FleetService {
             &self.latency,
             &self.counters,
         );
-        (ready, FsLatency::Known(ms))
+        (ready, FsLatency::Known(PublishedLatency::first(ms)))
     }
 
     /// Cross-class port: re-tune launch dims only (a fraction of the
@@ -515,7 +551,7 @@ impl FleetService {
                     &self.latency,
                     &self.counters,
                 );
-                (ready, FsLatency::Known(ms))
+                (ready, FsLatency::Known(PublishedLatency::first(ms)))
             }
             None => {
                 // Unschedulable on this class: pay the full exploration,
@@ -524,6 +560,121 @@ impl FleetService {
                 self.run_explore(template, spec, key, fallback, fb_ms, ready)
             }
         }
+    }
+
+    /// Calibration step for one served store hit. Sampling and the
+    /// drift verdict happen on the first hit per (graph, class); a
+    /// drifted pair whose re-exploration is deferred (backpressure,
+    /// unfitted class) stays pending and retries on later hits. Runs on
+    /// the dispatcher in both executors — after the per-graph
+    /// publication barrier, in arrival order — so the sample stream,
+    /// the fitted params and the drift decisions are executor-invariant
+    /// by construction.
+    ///
+    /// Order matters and is deliberate: drift is judged against the
+    /// class params as of *previous* publications (did our current
+    /// model predict this graph well?); only then do this graph's
+    /// samples refine the fit, and a drifted graph is re-explored under
+    /// the freshly calibrated snapshot.
+    #[allow(clippy::too_many_arguments)]
+    fn calibrate_on_hit(
+        &mut self,
+        template: usize,
+        spec: &DeviceSpec,
+        key: GraphKey,
+        prog: &Arc<OptimizedProgram>,
+        measured_ms: f64,
+        fallback: &Arc<OptimizedProgram>,
+        fb_ms: f64,
+        now: f64,
+    ) {
+        let id = (key.0, spec.name);
+        if self.sampled.insert(id) {
+            // First observation of this served program: judge drift
+            // under the class params as of previous publications, then
+            // fold its samples into the fit.
+            let params = self.calibrator.params_for(spec.name);
+            let predicted_ms = calibrate::predict_iter_ms(spec, prog, &params);
+            let ratio = measured_ms / predicted_ms.max(1e-12);
+            let bound = self.opts.drift_bound.max(1.0);
+            if ratio > bound || ratio * bound < 1.0 {
+                self.drift_pending.insert(id);
+            }
+            let w = Arc::clone(&self.templates[template]);
+            let samples = calibrate::program_samples(spec, prog, w.loop_kind);
+            self.calibrator.record(spec.name, samples, measured_ms);
+        }
+        if !self.drift_pending.contains(&id)
+            || self.reexplored.contains(&id)
+            || !self.calibrator.is_fitted(spec.name)
+        {
+            return;
+        }
+        // Admission accounting: a re-exploration is a compile job like
+        // any other — under compile saturation it yields to serving.
+        // The pending flag survives, so a deferred trigger fires on
+        // this graph's next hit once the backlog drains (or once the
+        // class accumulates enough samples to be fitted).
+        if self.compile_finishes.len() >= self.opts.admission.max_pending_compiles {
+            return;
+        }
+        self.drift_pending.remove(&id);
+        self.reexplored.insert(id);
+        self.run_reexplore(template, spec, key, fallback, fb_ms, now);
+    }
+
+    /// Drift-triggered re-exploration: a full compile job under the
+    /// calibrated [`crate::gpu::CostParams`] snapshot taken at trigger
+    /// time. Publication goes through the plan-quality no-worse gate
+    /// ([`publish_reexplored`]): only a strictly faster plan replaces
+    /// the incumbent, hot-swapping into in-flight wall-clock sessions
+    /// via the serving threads' publication poll, and its improved
+    /// latency takes effect at the job's virtual finish.
+    ///
+    /// Deliberately monolithic (no region-shard fan-out): unlike a
+    /// first-touch compile, the graph keeps serving its incumbent plan
+    /// throughout, so time-to-swap is a background-quality concern and
+    /// one queue slot per re-exploration keeps the accounting simple.
+    fn run_reexplore(
+        &mut self,
+        template: usize,
+        spec: &DeviceSpec,
+        key: GraphKey,
+        fallback: &Arc<OptimizedProgram>,
+        fb_ms: f64,
+        now: f64,
+    ) {
+        let w = Arc::clone(&self.templates[template]);
+        let mut explore = self.opts.explore.clone();
+        explore.cost = self.calibrator.params_for(spec.name);
+        let cost_ms = self.explore_cost_ms(&w);
+        let ready = self.schedule_compile(now, key, spec.name, cost_ms);
+        self.compile_ms.push(ready - now);
+        self.counters.reexplore_jobs.fetch_add(1, Ordering::Relaxed);
+        if let Some(pool) = self.pool.as_ref() {
+            pool.enqueue_compile(WallJob {
+                template,
+                key,
+                spec: spec.clone(),
+                fallback: Arc::clone(fallback),
+                fb_ms,
+                ready_ms: ready,
+                kind: WallJobKind::Reexplore { explore },
+            });
+            return;
+        }
+        let candidate =
+            produce_reexplored(&w, spec, &explore, self.opts.never_negative, fallback);
+        publish_reexplored(
+            &w,
+            spec,
+            key,
+            candidate,
+            ready,
+            &self.store,
+            &self.latency,
+            &self.counters,
+        );
     }
 
     /// Process one task arrival.
@@ -575,14 +726,31 @@ impl FleetService {
         // time. Store accounting records *acted-on* outcomes only: a
         // backpressured task that merely looked does not count.
         let fs: Option<(FsLatency, f64)> = match lookup {
-            PlanLookup::Hit { ready_ms, .. } => {
+            PlanLookup::Hit { ready_ms, prog } => {
                 self.store.note_exact_hit();
                 // Every store insert goes through `guard_and_publish`,
                 // which pairs it with a latency entry — a miss here is
                 // a broken publication invariant, not a cache miss.
                 let known = self.latency.lock().unwrap().get(&(key.0, spec.name)).copied();
-                let ms = known.expect("store hit must have a published latency");
-                Some((FsLatency::Known(ms), ready_ms))
+                let pl = known.expect("store hit must have a published latency");
+                if self.opts.calibrate {
+                    // Past the per-graph publication barrier, in
+                    // arrival (virtual-time measurement) order: sample
+                    // the served program, refit the class params, and
+                    // re-explore on drift — identically on both
+                    // executors.
+                    self.calibrate_on_hit(
+                        task.template,
+                        &spec,
+                        key,
+                        &prog,
+                        pl.at(now),
+                        &fallback,
+                        fb_ms,
+                        now,
+                    );
+                }
+                Some((FsLatency::Known(pl), ready_ms))
             }
             PlanLookup::Portable { source, available_ms, .. }
                 if decision == AdmitDecision::Admit =>
@@ -644,7 +812,7 @@ impl FleetService {
         for _ in 0..task.iterations {
             let iter = match &mut fs_state {
                 Some((lat, ready)) if cursor >= *ready => match lat {
-                    FsLatency::Known(ms) => *ms,
+                    FsLatency::Known(pl) => pl.at(cursor),
                     FsLatency::Pending { key, class } => {
                         // The task's virtual serving window crossed its
                         // compile's virtual finish: the bookkeeping
@@ -653,9 +821,9 @@ impl FleetService {
                         let pool = self.pool.as_ref().expect("wall-clock pool");
                         pool.await_key(*key);
                         let got = self.latency.lock().unwrap().get(&(*key, *class)).copied();
-                        let ms = got.expect("compile published its latency");
-                        *lat = FsLatency::Known(ms);
-                        ms
+                        let pl = got.expect("compile published its latency");
+                        *lat = FsLatency::Known(pl);
+                        pl.at(cursor)
                     }
                 },
                 _ => fb_ms,
@@ -684,6 +852,7 @@ impl FleetService {
     pub fn report(&self) -> FleetReport {
         let (admitted, fallback_only, rejected) = self.admission.counts();
         let store = self.store.stats();
+        let drift = self.calibrator.drift();
         let qstats = self.wall_queue.unwrap_or_else(|| self.queue.stats());
         let agg = ServiceMetrics::aggregate(self.device_metrics.iter().map(|m| &**m));
         let iter_summary = summarize(&agg.latencies());
@@ -718,6 +887,12 @@ impl FleetService {
             port_failures: self.counters.port_failures.load(Ordering::Relaxed),
             fs_vetoes: self.counters.fs_vetoes.load(Ordering::Relaxed),
             shard_jobs: self.counters.shard_jobs.load(Ordering::Relaxed),
+            reexplore_jobs: self.counters.reexplore_jobs.load(Ordering::Relaxed),
+            reexplore_improved: self.counters.reexplore_improved.load(Ordering::Relaxed),
+            reexplore_rejected: self.counters.reexplore_rejected.load(Ordering::Relaxed),
+            calibration_samples: drift.samples,
+            drift_before: drift.before,
+            drift_after: drift.after,
             compile: summarize(&self.compile_ms),
             regressions: self.regressions,
             compile_owner_runs: qstats.local_pops,
@@ -922,6 +1097,102 @@ mod tests {
         // the guard still caps it at fallback-only cost.
         assert!(wall.served_gpu_ms > 0.0);
         assert!(wall.served_gpu_ms <= wall.fallback_gpu_ms + 1e-6);
+    }
+
+    #[test]
+    fn calibration_closes_the_drift_loop_deterministically() {
+        let traffic = small_traffic();
+        let templates = build_templates(&traffic);
+        let trace = generate_trace(&traffic);
+        let run = |calibrate: bool| {
+            let opts = FleetOptions {
+                registry: DeviceRegistry::mixed(1, 1, 2),
+                compile_workers: 2,
+                calibrate,
+                ..Default::default()
+            };
+            let mut svc = FleetService::new(opts, templates.clone());
+            svc.run_trace(&trace)
+        };
+        let a = run(true);
+        let b = run(true);
+        // Calibration is dispatcher-driven state: replays stay
+        // byte-identical with the loop on.
+        assert_eq!(a.to_json().to_string(), b.to_json().to_string());
+        assert!(a.calibration_samples > 0, "served hits must be sampled");
+        assert!(a.drift_before > 0.0, "uncalibrated cost model must show drift");
+        assert!(
+            a.drift_after < a.drift_before,
+            "calibration must shrink drift: {} -> {}",
+            a.drift_before,
+            a.drift_after
+        );
+        assert!(a.reexplore_jobs >= 1, "drifted graphs must re-explore: {a:?}");
+        // Every re-exploration resolves through the no-worse gate.
+        assert_eq!(a.reexplore_improved + a.reexplore_rejected, a.reexplore_jobs);
+        assert_eq!(a.regressions, 0, "never-negative holds under calibration");
+        assert_eq!(a.admitted + a.fallback_only + a.rejected, a.tasks);
+        // With the loop off, nothing is sampled and nothing re-explores.
+        let off = run(false);
+        assert_eq!(off.calibration_samples, 0);
+        assert_eq!(off.reexplore_jobs, 0);
+        assert_eq!(off.drift_before, 0.0);
+        assert_eq!(off.drift_after, 0.0);
+    }
+
+    #[test]
+    fn calibrated_trace_converges_across_executors() {
+        // The equivalence invariant extended to the calibration loop:
+        // sampling, fitting, drift triggers and gated re-publication
+        // all happen on the dispatcher (virtual-time measurement order,
+        // per-graph publication barriers), so a calibrated wall-clock
+        // run must reach the calibrated virtual replay's decisions —
+        // including the re-exploration stream — exactly.
+        let traffic = small_traffic();
+        let templates = build_templates(&traffic);
+        let trace = generate_trace(&traffic);
+        let base = FleetOptions {
+            registry: DeviceRegistry::mixed(1, 1, 2),
+            compile_workers: 2,
+            calibrate: true,
+            ..Default::default()
+        };
+        let virt = {
+            let mut svc = FleetService::new(base.clone(), templates.clone());
+            svc.run_trace(&trace)
+        };
+        let wall = {
+            let opts = FleetOptions {
+                executor: ExecutorKind::WallClock { threads: 3 },
+                ..base
+            };
+            let mut svc = FleetService::new(opts, templates.clone());
+            svc.run_trace(&trace)
+        };
+        assert_eq!(wall.tasks, virt.tasks);
+        assert_eq!(wall.admitted, virt.admitted);
+        assert_eq!(wall.fallback_only, virt.fallback_only);
+        assert_eq!(wall.rejected, virt.rejected);
+        assert_eq!(wall.exact_hits, virt.exact_hits);
+        assert_eq!(wall.port_hits, virt.port_hits);
+        assert_eq!(wall.misses, virt.misses);
+        assert_eq!(wall.explore_jobs, virt.explore_jobs);
+        assert_eq!(wall.port_jobs, virt.port_jobs);
+        assert_eq!(wall.fs_vetoes, virt.fs_vetoes);
+        // The calibration decision stream is executor-invariant...
+        assert_eq!(wall.reexplore_jobs, virt.reexplore_jobs);
+        assert_eq!(wall.reexplore_improved, virt.reexplore_improved);
+        assert_eq!(wall.reexplore_rejected, virt.reexplore_rejected);
+        assert_eq!(wall.calibration_samples, virt.calibration_samples);
+        assert_eq!(wall.drift_before, virt.drift_before);
+        assert_eq!(wall.drift_after, virt.drift_after);
+        // ...as is the virtual bookkeeping the re-explore jobs feed.
+        assert_eq!(wall.compile.p50, virt.compile.p50);
+        assert_eq!(wall.compile.p99, virt.compile.p99);
+        assert_eq!(wall.makespan_ms, virt.makespan_ms);
+        assert!(virt.reexplore_jobs >= 1, "loop must actually fire: {virt:?}");
+        assert_eq!(virt.regressions, 0);
+        assert_eq!(wall.regressions, 0);
     }
 
     /// ln → matmul → ln: two fusible regions split by the GEMM, so a

@@ -1,0 +1,88 @@
+//! Tunable cost-model parameters shared by the delta evaluator (§5.4)
+//! and the latency evaluator (§4.3).
+//!
+//! Both cost models used to hard-code their constants (`7.0` µs launch
+//! overhead in `explorer::delta`, `CPI = 4.0` and the shuffle/shared-
+//! memory instruction equivalents in `codegen::latency`, the 0.4
+//! occupancy knee of the bandwidth model in `gpu::device`). Fusion
+//! decisions are only as good as these numbers, and the earlier
+//! FusionStitching paper frames scheme tuning explicitly as cost-model
+//! search — so the constants live here as one value-typed parameter
+//! block that can be threaded through exploration, tuning and lowering,
+//! and *corrected online* from simulator ground truth
+//! ([`crate::codegen::calibrate`]).
+
+/// The knobs of both cost models. `Default` reproduces the historical
+/// hard-coded constants exactly; the calibration loop fits per-device-
+/// class corrections (`launch_overhead_us`, `time_scale`,
+/// `iter_overhead_us`) from (predicted, measured) pairs.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CostParams {
+    /// Host + device cost of one extra kernel launch, µs
+    /// (`T_reduced_calls`' fixed per-call constant; calibrated to the
+    /// runtime's real per-kernel dispatch charge).
+    pub launch_overhead_us: f64,
+    /// Base ALU cycles per instruction-equivalent (Eq. 1's CPI).
+    pub cpi: f64,
+    /// Extra instruction-equivalents per warp-shuffle exchange.
+    pub shuffle_cost: f64,
+    /// Extra instruction-equivalents per shared-memory access.
+    pub shmem_access_cost: f64,
+    /// Occupancy at which effective memory bandwidth saturates (the
+    /// memory-level-parallelism knee of the microbenchmark papers).
+    pub bandwidth_knee: f64,
+    /// Calibrated multiplicative correction on modeled kernel device
+    /// time (1.0 = trust the analytic model).
+    pub time_scale: f64,
+    /// Calibrated fixed per-iteration overhead, µs — the host-runtime
+    /// base cost the per-kernel model cannot see. Used only when
+    /// predicting whole-iteration times (drift detection), never inside
+    /// per-kernel tuning.
+    pub iter_overhead_us: f64,
+}
+
+impl Default for CostParams {
+    fn default() -> Self {
+        CostParams {
+            launch_overhead_us: 7.0, // ~launch floor + host dispatch
+            cpi: 4.0,
+            shuffle_cost: 8.0,
+            shmem_access_cost: 6.0,
+            bandwidth_knee: 0.4,
+            time_scale: 1.0,
+            iter_overhead_us: 0.0,
+        }
+    }
+}
+
+impl CostParams {
+    /// Warp-cooperative reduction combine per row (5 shuffle stages).
+    pub fn warp_combine(&self) -> f64 {
+        5.0 * self.shuffle_cost
+    }
+
+    /// Block-cooperative reduction combine per row (warp stage + smem
+    /// stage + barrier).
+    pub fn block_combine(&self) -> f64 {
+        self.warp_combine() + 32.0 + 30.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_historical_constants() {
+        let p = CostParams::default();
+        assert_eq!(p.launch_overhead_us, 7.0);
+        assert_eq!(p.cpi, 4.0);
+        assert_eq!(p.shuffle_cost, 8.0);
+        assert_eq!(p.shmem_access_cost, 6.0);
+        assert_eq!(p.bandwidth_knee, 0.4);
+        assert_eq!(p.time_scale, 1.0);
+        assert_eq!(p.iter_overhead_us, 0.0);
+        assert_eq!(p.warp_combine(), 40.0);
+        assert_eq!(p.block_combine(), 102.0);
+    }
+}

@@ -112,6 +112,14 @@ impl DeviceSpec {
         if threads_per_block == 0 {
             return 0.0;
         }
+        // Hardware cap: a single block may not claim more shared memory
+        // than `shmem_per_block` (48 KB on every spec here), even when
+        // the SM's total (`shmem_per_sm`) could fit it. Without this
+        // check a 64 KB request on V100 (96 KB/SM) reported occupancy
+        // > 0 for a kernel the driver would refuse to launch.
+        if shmem_per_block > self.shmem_per_block {
+            return 0.0;
+        }
         let threads_per_block = threads_per_block.min(self.max_threads_per_block);
         // Blocks per SM limited by each resource.
         let by_threads = (self.max_warps_per_sm * self.warp_size) / threads_per_block;
@@ -135,11 +143,20 @@ impl DeviceSpec {
     }
 
     /// Effective memory bandwidth at a given occupancy: a kernel needs
-    /// enough warps in flight to cover HBM latency; below ~40% occupancy
-    /// bandwidth scales roughly linearly (the memory-level-parallelism
-    /// knee reported by the microbenchmark papers).
+    /// enough warps in flight to cover HBM latency; below the knee
+    /// occupancy, bandwidth scales roughly linearly (the
+    /// memory-level-parallelism knee reported by the microbenchmark
+    /// papers). The default knee is [`CostParams::default`]'s 0.4; the
+    /// calibration loop may thread a corrected value through
+    /// [`Self::effective_bandwidth_at`].
     pub fn effective_bandwidth_gbps(&self, occupancy: f64) -> f64 {
-        let eff = (occupancy / 0.4).min(1.0).max(0.05);
+        self.effective_bandwidth_at(occupancy, super::CostParams::default().bandwidth_knee)
+    }
+
+    /// [`Self::effective_bandwidth_gbps`] with an explicit knee — the
+    /// cost-model entry point ([`super::CostParams::bandwidth_knee`]).
+    pub fn effective_bandwidth_at(&self, occupancy: f64, knee: f64) -> f64 {
+        let eff = (occupancy / knee.max(1e-6)).min(1.0).max(0.05);
         self.hbm_gbps * eff
     }
 }
@@ -179,6 +196,31 @@ mod tests {
         let d = DeviceSpec::v100();
         let occ = d.occupancy(256, 16, 200 * 1024);
         assert_eq!(occ, 0.0);
+    }
+
+    #[test]
+    fn per_block_shmem_cap_is_enforced() {
+        // Regression: 64 KB/block on V100 fits the 96 KB SM (the old
+        // `shmem_per_sm`-only check reported occupancy > 0) but exceeds
+        // the 48 KB per-block hardware cap — the kernel cannot launch.
+        let d = DeviceSpec::v100();
+        assert_eq!(d.occupancy(256, 16, 64 * 1024), 0.0);
+        // One byte over the cap is already unlaunchable...
+        assert_eq!(d.occupancy(256, 16, 48 * 1024 + 1), 0.0);
+        // ...while exactly at the cap still launches (2 blocks on 96 KB).
+        assert!(d.occupancy(256, 16, 48 * 1024) > 0.0);
+        // Same cap on T4 (64 KB SM, 48 KB/block).
+        assert_eq!(DeviceSpec::t4().occupancy(256, 16, 56 * 1024), 0.0);
+    }
+
+    #[test]
+    fn bandwidth_knee_is_parameterized() {
+        let d = DeviceSpec::v100();
+        // Default delegates to the CostParams knee of 0.4.
+        assert_eq!(d.effective_bandwidth_gbps(0.2), d.effective_bandwidth_at(0.2, 0.4));
+        // A lower knee saturates earlier.
+        assert!(d.effective_bandwidth_at(0.2, 0.2) > d.effective_bandwidth_at(0.2, 0.4));
+        assert_eq!(d.effective_bandwidth_at(0.2, 0.2), d.hbm_gbps);
     }
 
     #[test]

@@ -8,11 +8,13 @@
 //! by an occupancy-dependent efficiency. Every Table 2 / Figure 7 number
 //! in our benches is produced by this substrate. See DESIGN.md §1.
 
+pub mod cost;
 pub mod device;
 pub mod kernel;
 pub mod simulator;
 pub mod trace;
 
+pub use cost::CostParams;
 pub use device::DeviceSpec;
 pub use kernel::{KernelClass, KernelSpec, LaunchDims};
 pub use simulator::{Breakdown, SimConfig, Simulator};

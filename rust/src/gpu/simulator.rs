@@ -74,6 +74,21 @@ impl SimConfig {
             memcpy_floor_us: 3.0,
         }
     }
+
+    /// Host-runtime dispatch charge for one kernel — the ONE copy of
+    /// the per-kernel host accounting, shared by [`Simulator::run`] and
+    /// the calibration ground truth ([`crate::codegen::calibrate`]).
+    /// `host_base_us` is charged once per iteration, not here.
+    pub fn host_charge_us(&self, class: &KernelClass, loop_kind: LoopKind) -> f64 {
+        match class {
+            KernelClass::Memcpy => {
+                let glue = if loop_kind != LoopKind::None { self.loop_glue_us } else { 0.0 };
+                self.host_per_memcpy_us + glue
+            }
+            _ if loop_kind == LoopKind::DynamicLoop => self.host_per_kernel_recurrent_us,
+            _ => self.host_per_kernel_us,
+        }
+    }
 }
 
 /// Per-iteration execution breakdown — one Table 2 row.
@@ -162,33 +177,23 @@ impl Simulator {
     /// on its TensorArray copies.
     pub fn run(&self, kernels: &[KernelSpec], loop_kind: LoopKind) -> Breakdown {
         let mut b = Breakdown::default();
-        let host_per_kernel = if loop_kind == LoopKind::DynamicLoop {
-            self.config.host_per_kernel_recurrent_us
-        } else {
-            self.config.host_per_kernel_us
-        };
         let mut host_us = self.config.host_base_us;
         for k in kernels {
             let t_us = self.kernel_time_us(k);
+            host_us += self.config.host_charge_us(&k.class, loop_kind);
             match k.class {
                 KernelClass::Memcpy => {
                     b.cpy_ms += t_us / 1e3;
                     b.cpy_calls += 1;
-                    host_us += self.config.host_per_memcpy_us;
-                    if loop_kind != LoopKind::None {
-                        host_us += self.config.loop_glue_us;
-                    }
                 }
                 KernelClass::ComputeIntensive { .. } => {
                     b.math_ms += t_us / 1e3;
                     b.math_calls += 1;
-                    host_us += host_per_kernel;
                 }
                 KernelClass::MemoryIntensive => {
                     b.mem_ms += t_us / 1e3;
                     b.mem_calls += 1;
                     b.mem_traffic_bytes += k.total_bytes();
-                    host_us += host_per_kernel;
                 }
             }
         }

@@ -117,11 +117,6 @@ impl Simulator {
     /// slice; the device executes serially (the single-stream behaviour
     /// Table 2's per-component times add up under).
     pub fn run_traced(&self, kernels: &[KernelSpec], loop_kind: LoopKind) -> Trace {
-        let host_per_kernel = if loop_kind == LoopKind::DynamicLoop {
-            self.config.host_per_kernel_recurrent_us
-        } else {
-            self.config.host_per_kernel_us
-        };
         let mut t = Trace::default();
         let mut clock = 0.0f64;
         // Iteration-setup slice (host_base).
@@ -134,18 +129,12 @@ impl Simulator {
         });
         clock += self.config.host_base_us;
         for k in kernels {
-            let (lane, host_us) = match k.class {
-                KernelClass::Memcpy => {
-                    let glue = if loop_kind != LoopKind::None {
-                        self.config.loop_glue_us
-                    } else {
-                        0.0
-                    };
-                    ("cpy", self.config.host_per_memcpy_us + glue)
-                }
-                KernelClass::ComputeIntensive { .. } => ("math", host_per_kernel),
-                KernelClass::MemoryIntensive => ("mem", host_per_kernel),
+            let lane = match k.class {
+                KernelClass::Memcpy => "cpy",
+                KernelClass::ComputeIntensive { .. } => "math",
+                KernelClass::MemoryIntensive => "mem",
             };
+            let host_us = self.config.host_charge_us(&k.class, loop_kind);
             t.events.push(TraceEvent {
                 name: format!("launch {}", k.name),
                 lane: "host",

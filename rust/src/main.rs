@@ -21,12 +21,16 @@
 //! * `fstitch fleet [--v100 N] [--t4 N] [--capacity C] [--workers K]
 //!   [--tasks N] [--rate MS] [--templates T] [--seed S] [--out FILE]
 //!   [--executor virtual|wallclock] [--threads N]
-//!   [--compile-shards S]` — replay a deterministic task trace through
-//!   the multi-device fleet service (§7.2) and print the fleet-wide
-//!   report; `wallclock` runs compile workers and per-device serving
-//!   slots on real OS threads, and `--compile-shards` fans a
-//!   multi-region graph's exploration out as parallel region sub-jobs
-//!   with a join barrier.
+//!   [--compile-shards S] [--calibrate] [--drift-bound R]` — replay a
+//!   deterministic task trace through the multi-device fleet service
+//!   (§7.2) and print the fleet-wide report; `wallclock` runs compile
+//!   workers and per-device serving slots on real OS threads,
+//!   `--compile-shards` fans a multi-region graph's exploration out as
+//!   parallel region sub-jobs with a join barrier, and `--calibrate`
+//!   turns on the online cost-model calibration loop (fit per-class
+//!   corrections from served traffic; re-explore graphs whose
+//!   measured/predicted ratio drifts past `--drift-bound`, default
+//!   1.4, publishing only strictly-better plans).
 
 use fusion_stitching::coordinator::{JitService, ServiceOptions};
 use fusion_stitching::fleet;
@@ -130,6 +134,13 @@ fn main() {
             session.wait_optimized();
             let b = svc.run_iteration(&session);
             println!("post-swap: {:.3} ms", b.e2e_ms());
+            // One sort serves the whole percentile batch.
+            if let Some(ps) = session.metrics.latency_percentiles(&[0.5, 0.95, 0.99]) {
+                println!(
+                    "latency p50/p95/p99: {:.3} / {:.3} / {:.3} ms",
+                    ps[0], ps[1], ps[2]
+                );
+            }
             println!("{}", session.metrics.to_json().to_pretty());
         }
         "report" => {
@@ -339,11 +350,23 @@ fn main() {
                 Some("virtual") | None => fleet::ExecutorKind::VirtualTime,
                 Some(other) => bad_flag("--executor", other),
             };
+            // --calibrate [--drift-bound R]: online cost-model
+            // calibration + drift-triggered re-exploration.
+            let calibrate = has_flag("--calibrate");
+            let drift_bound: f64 = match get_flag("--drift-bound") {
+                None => 1.4,
+                Some(s) => s.parse().unwrap_or_else(|_| bad_flag("--drift-bound", &s)),
+            };
+            if !(drift_bound >= 1.0) {
+                bad_flag("--drift-bound", "must be a ratio >= 1.0");
+            }
             let opts = fleet::FleetOptions {
                 registry: fleet::DeviceRegistry::mixed(v100s, t4s, capacity),
                 compile_workers: workers,
                 compile_shards,
                 executor,
+                calibrate,
+                drift_bound,
                 ..Default::default()
             };
             println!(
@@ -380,6 +403,18 @@ fn main() {
                     report.compile.p99
                 );
             }
+            if report.calibration_samples > 0 {
+                println!(
+                    "calibration: {} kernel samples; drift {:.4} -> {:.4}; \
+                     {} re-explorations ({} improved, {} rejected by the no-worse gate)",
+                    report.calibration_samples,
+                    report.drift_before,
+                    report.drift_after,
+                    report.reexplore_jobs,
+                    report.reexplore_improved,
+                    report.reexplore_rejected
+                );
+            }
             if report.wall_elapsed_ms > 0.0 {
                 println!(
                     "wall-clock executor: {} compile threads finished the trace in {:.1} ms",
@@ -403,7 +438,8 @@ fn main() {
                  [--model NAME] [--device v100|t4] [--iters N] [--dot] [--file HLO] \
                  [--explore] [--tech tf|xla|fs] [--out FILE] [--run] [--v100 N] [--t4 N] \
                  [--capacity C] [--workers K] [--tasks N] [--rate MS] [--templates T] \
-                 [--seed S] [--executor virtual|wallclock] [--threads N] [--compile-shards S]"
+                 [--seed S] [--executor virtual|wallclock] [--threads N] [--compile-shards S] \
+                 [--calibrate] [--drift-bound R]"
             );
         }
     }

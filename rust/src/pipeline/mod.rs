@@ -121,8 +121,23 @@ pub fn lower(
     tech: Tech,
     loop_kind: LoopKind,
 ) -> Vec<KernelSpec> {
+    lower_with_cost(graph, plan, device, tech, loop_kind, &crate::gpu::CostParams::default())
+}
+
+/// [`lower`] under explicit cost parameters: the FS launch-dimension
+/// tuner scores candidates with `cost` (the calibration loop's entry
+/// point into lowering); the TF/XLA personalities always keep the
+/// default constants so fallbacks stay bit-stable under calibration.
+pub fn lower_with_cost(
+    graph: &Graph,
+    plan: &FusionPlan,
+    device: &DeviceSpec,
+    tech: Tech,
+    loop_kind: LoopKind,
+    cost: &crate::gpu::CostParams,
+) -> Vec<KernelSpec> {
     let emit_cfg = match tech {
-        Tech::Fs => EmitConfig::fusion_stitching(),
+        Tech::Fs => EmitConfig::fusion_stitching_with(*cost),
         _ => EmitConfig::xla(),
     };
     let mut kernels: Vec<KernelSpec> = Vec::new();
@@ -205,7 +220,7 @@ pub fn optimize(
     opts: &ExploreOptions,
 ) -> OptimizedProgram {
     let plan = plan_for_runtime(&w.graph, device, tech, opts, w.loop_kind);
-    let kernels = lower(&w.graph, &plan, device, tech, w.loop_kind);
+    let kernels = lower_with_cost(&w.graph, &plan, device, tech, w.loop_kind, &opts.cost);
     OptimizedProgram { tech, plan, kernels }
 }
 

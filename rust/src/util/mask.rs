@@ -1,0 +1,66 @@
+//! Dense id-membership bitset.
+//!
+//! The cost models repeatedly ask "is this node in the pattern?" inside
+//! per-node loops; `slice::contains` made those checks O(n²) on large
+//! regions (the exploration hot path — see `benches/explorer_perf.rs`).
+//! An `IdMask` is built once per pattern in O(n/64 + |pattern|) and
+//! answers membership in O(1).
+
+/// Fixed-capacity membership set over dense ids `0..len`.
+#[derive(Debug, Clone)]
+pub struct IdMask {
+    words: Vec<u64>,
+}
+
+impl IdMask {
+    /// Empty mask with capacity for ids `0..len`.
+    pub fn new(len: usize) -> Self {
+        IdMask { words: vec![0u64; len.div_ceil(64)] }
+    }
+
+    /// Mask containing every id yielded by `ids` (each must be < `len`).
+    pub fn from_ids(len: usize, ids: impl IntoIterator<Item = usize>) -> Self {
+        let mut m = Self::new(len);
+        for id in ids {
+            m.insert(id);
+        }
+        m
+    }
+
+    /// Add one id.
+    pub fn insert(&mut self, idx: usize) {
+        self.words[idx / 64] |= 1 << (idx % 64);
+    }
+
+    /// Membership test.
+    pub fn contains(&self, idx: usize) -> bool {
+        match self.words.get(idx / 64) {
+            Some(w) => (w >> (idx % 64)) & 1 == 1,
+            None => false,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn membership_matches_source_ids() {
+        let ids = [0usize, 3, 63, 64, 130];
+        let m = IdMask::from_ids(131, ids.iter().copied());
+        for i in 0..131 {
+            assert_eq!(m.contains(i), ids.contains(&i), "id {i}");
+        }
+        // Out-of-capacity queries are simply absent, not a panic.
+        assert!(!m.contains(4096));
+    }
+
+    #[test]
+    fn empty_mask_contains_nothing() {
+        let m = IdMask::new(0);
+        assert!(!m.contains(0));
+        let m = IdMask::from_ids(64, std::iter::empty());
+        assert!(!m.contains(63));
+    }
+}

@@ -9,13 +9,15 @@
 
 pub mod hash;
 pub mod json;
+pub mod mask;
 pub mod prng;
 pub mod stats;
 pub mod table;
 pub mod timer;
 
 pub use json::JsonValue;
+pub use mask::IdMask;
 pub use prng::Prng;
-pub use stats::{mean, percentile, summarize, Summary};
+pub use stats::{mean, median, percentile, percentiles, summarize, Summary};
 pub use table::{fmt_f, Table};
 pub use timer::{bench_loop, BenchStats};

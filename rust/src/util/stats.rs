@@ -6,15 +6,36 @@
 /// Nearest-rank percentile of a sample set; `q` in `[0, 1]`.
 /// Returns 0.0 for an empty slice (reports render it as a zero row
 /// rather than poisoning JSON with NaN).
+///
+/// Clones and sorts per call — when a caller needs several quantiles of
+/// the same series (the fleet report does, over tens of thousands of
+/// samples), use [`percentiles`] or [`summarize`], which sort once.
 pub fn percentile(samples: &[f64], q: f64) -> f64 {
+    percentiles(samples, &[q])[0]
+}
+
+/// Sort-once multi-quantile: the nearest-rank percentile for every `q`
+/// in `qs`, paying one clone + sort for the whole batch instead of one
+/// per quantile. Empty input yields all zeros (like [`percentile`]).
+pub fn percentiles(samples: &[f64], qs: &[f64]) -> Vec<f64> {
     if samples.is_empty() {
-        return 0.0;
+        return vec![0.0; qs.len()];
     }
     let mut sorted = samples.to_vec();
     sorted.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+    qs.iter().map(|&q| sorted_percentile(&sorted, q)).collect()
+}
+
+/// Nearest-rank pick from an already-sorted slice (non-empty).
+fn sorted_percentile(sorted: &[f64], q: f64) -> f64 {
     let q = q.clamp(0.0, 1.0);
     let idx = ((sorted.len() as f64 - 1.0) * q).round() as usize;
     sorted[idx.min(sorted.len() - 1)]
+}
+
+/// Median of a sample set; 0.0 for an empty slice.
+pub fn median(samples: &[f64]) -> f64 {
+    percentile(samples, 0.5)
 }
 
 /// Arithmetic mean; 0.0 for an empty slice.
@@ -45,7 +66,7 @@ pub fn summarize(samples: &[f64]) -> Summary {
     }
     let mut sorted = samples.to_vec();
     sorted.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
-    let pick = |q: f64| sorted[((sorted.len() as f64 - 1.0) * q).round() as usize];
+    let pick = |q: f64| sorted_percentile(&sorted, q);
     Summary {
         n: sorted.len(),
         mean: mean(&sorted),
@@ -83,9 +104,22 @@ mod tests {
     fn empty_samples_are_zero() {
         assert_eq!(percentile(&[], 0.5), 0.0);
         assert_eq!(mean(&[]), 0.0);
+        assert_eq!(median(&[]), 0.0);
+        assert_eq!(percentiles(&[], &[0.1, 0.9]), vec![0.0, 0.0]);
         let s = summarize(&[]);
         assert_eq!(s.n, 0);
         assert_eq!(s.p99, 0.0);
+    }
+
+    #[test]
+    fn multi_quantile_matches_per_call_percentile() {
+        let xs: Vec<f64> = (1..=1000).rev().map(|i| i as f64).collect();
+        let qs = [0.0, 0.25, 0.5, 0.95, 0.99, 1.0];
+        let batch = percentiles(&xs, &qs);
+        for (&q, &got) in qs.iter().zip(&batch) {
+            assert_eq!(got, percentile(&xs, q), "q={q}");
+        }
+        assert_eq!(median(&xs), percentile(&xs, 0.5));
     }
 
     #[test]

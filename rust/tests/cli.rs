@@ -158,6 +158,43 @@ fn fleet_replays_a_trace_and_writes_json() {
 }
 
 #[test]
+fn fleet_calibrate_reports_drift_and_reexplorations() {
+    let out = std::env::temp_dir().join("fstitch_cli_fleet_cal.json");
+    let _ = std::fs::remove_file(&out);
+    let (stdout, stderr, ok) = fstitch(&[
+        "fleet",
+        "--tasks",
+        "120",
+        "--templates",
+        "4",
+        "--v100",
+        "1",
+        "--t4",
+        "1",
+        "--calibrate",
+        "--out",
+        out.to_str().unwrap(),
+    ]);
+    assert!(ok, "fleet --calibrate failed:\n{stdout}\n{stderr}");
+    assert!(stdout.contains("calibration:"), "{stdout}");
+    assert!(stdout.contains("FS regressions: 0"), "{stdout}");
+    let text = std::fs::read_to_string(&out).expect("fleet JSON written");
+    let json = fusion_stitching::util::JsonValue::parse(&text).expect("valid JSON");
+    let samples = json.get("calibration_samples").and_then(|v| v.as_usize()).unwrap_or(0);
+    assert!(samples > 0, "calibration must record samples: {text}");
+    let before = json.get("drift_before").and_then(|v| v.as_f64()).unwrap_or(0.0);
+    let after = json.get("drift_after").and_then(|v| v.as_f64()).unwrap_or(f64::MAX);
+    assert!(before > 0.0, "{text}");
+    assert!(after <= before, "drift grew: {before} -> {after}");
+    let jobs = json.get("reexplore_jobs").and_then(|v| v.as_usize()).unwrap_or(0);
+    let improved = json.get("reexplore_improved").and_then(|v| v.as_usize()).unwrap_or(0);
+    let rejected = json.get("reexplore_rejected").and_then(|v| v.as_usize()).unwrap_or(0);
+    assert_eq!(improved + rejected, jobs, "re-explore accounting must close: {text}");
+    assert_eq!(json.get("regressions").and_then(|v| v.as_usize()), Some(0));
+    let _ = std::fs::remove_file(&out);
+}
+
+#[test]
 fn fleet_wallclock_executor_runs_on_real_threads() {
     let out = std::env::temp_dir().join("fstitch_cli_fleet_wall.json");
     let _ = std::fs::remove_file(&out);
