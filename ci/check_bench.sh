@@ -1,0 +1,209 @@
+#!/usr/bin/env bash
+# Single source of truth for the fleet-bench CI gates.
+#
+# Usage:
+#   ci/check_bench.sh [BENCH_JSON] [BASELINE_JSON]
+#       Run the structural gates (field presence, invariants that must
+#       hold on every run) and — when the baseline is seeded — the
+#       tolerance-banded trajectory gate against the committed
+#       baseline, so perf/hit-rate regressions fail the PR instead of
+#       silently drifting.
+#   ci/check_bench.sh --update-baseline [BENCH_JSON] [BASELINE_JSON]
+#       Re-seed the baseline from the current bench output (commit the
+#       result when a change legitimately moves the gated numbers).
+#
+# Defaults: BENCH_JSON=rust/BENCH_fleet.json, BASELINE_JSON=ci/bench_baseline.json.
+# Runnable locally from the repo root: `cargo bench --bench production_fleet
+# -- 1000 --threads 2 --compile-shards 4 && ci/check_bench.sh`.
+set -euo pipefail
+
+MODE=check
+if [[ "${1:-}" == "--update-baseline" ]]; then
+  MODE=update
+  shift
+fi
+BENCH="${1:-rust/BENCH_fleet.json}"
+BASELINE="${2:-ci/bench_baseline.json}"
+
+fail() {
+  echo "check_bench: FAIL: $*" >&2
+  exit 1
+}
+
+[[ -f "$BENCH" ]] || fail "bench summary $BENCH not found (run the production_fleet bench first)"
+command -v jq >/dev/null || fail "jq is required"
+
+assert() {
+  local desc="$1" expr="$2"
+  if ! jq -e "$expr" "$BENCH" >/dev/null; then
+    fail "$desc — jq assertion '$expr' did not hold on $BENCH"
+  fi
+}
+
+# ---------------------------------------------------------------------
+# Structural gates: must hold on every run, baseline or not.
+# ---------------------------------------------------------------------
+
+# Determinism + zero-regression invariants (§7.2).
+assert "replay must be reproducible" '.reproducible == true'
+assert "FS must never regress" '.report.regressions == 0'
+assert "wall-clock run must never regress" '.wallclock.regressions == 0'
+assert "sharded run must never regress" '.sharded.regressions == 0'
+
+# Per-job compile-latency fields present and non-zero.
+assert "virtual compile latency populated" \
+  '.report.compile_p50_ms > 0 and .report.compile_p99_ms > 0'
+assert "wall-clock compile latency populated" \
+  '.wallclock.compile_p50_ms > 0 and .wallclock.compile_p99_ms > 0'
+assert "sharded compile latency populated" \
+  '.sharded.compile_p50_ms > 0 and .sharded.compile_p99_ms > 0'
+
+# Executor decision equivalence (asserted inside the bench; the flags
+# record that the asserts ran).
+assert "wall-clock decisions match virtual" '.wallclock.matches_virtual_decisions == true'
+assert "sharded decisions match virtual" '.sharded.matches_virtual_decisions == true'
+
+# Cross-device plan portability must fire on a mixed registry.
+assert "mixed registry must port plans" '.report.port_hits > 0'
+
+# Calibration loop: drift must not grow, accounting must close.
+assert "calibration drift fields present" \
+  '.calibration | has("drift_before") and has("drift_after")'
+assert "uncalibrated model shows drift" '.calibration.drift_before > 0'
+assert "calibration must not grow drift" \
+  '.calibration.drift_after <= .calibration.drift_before'
+assert "re-exploration count sane" '.calibration.reexplored >= 0'
+assert "re-exploration accounting closes" \
+  '.calibration.reexplore_improved + .calibration.reexplore_rejected == .calibration.reexplored'
+assert "plan-quality no-worse gate green" '.calibration.plan_quality_no_worse == true'
+assert "calibrated decisions match virtual" '.calibration.matches_virtual_decisions == true'
+
+# Dynamic shapes: the bucket tier must fire and keep explorations
+# strictly sublinear in distinct shapes (tune-once-run-many under
+# shape-varying traffic).
+assert "dynamic-shapes section present" '.dynamic_shapes.enabled == true'
+assert "shape-varying traffic serves many graphs" \
+  '.dynamic_shapes.distinct_shapes > .dynamic_shapes.templates'
+assert "buckets coalesce sibling shapes" \
+  '.dynamic_shapes.distinct_buckets < .dynamic_shapes.distinct_shapes'
+assert "bucket tier must fire" '.dynamic_shapes.bucket_hits > 0'
+assert "explorations sublinear in distinct shapes" \
+  '.dynamic_shapes.explore_jobs < .dynamic_shapes.distinct_shapes'
+assert "every bucket hit runs one retune" \
+  '.dynamic_shapes.bucket_retunes == .dynamic_shapes.bucket_hits'
+assert "dynamic-shape run must never regress" '.dynamic_shapes.regressions == 0'
+assert "dynamic-shape decisions match virtual" \
+  '.dynamic_shapes.matches_virtual_decisions == true'
+
+echo "check_bench: structural gates OK ($BENCH)"
+
+# ---------------------------------------------------------------------
+# Baseline trajectory gate: tolerance-banded comparison against the
+# committed baseline. Integer decision counts are compared exactly
+# (the virtual executor is deterministic); latency percentiles and
+# rates get a relative band so a legitimate small shift does not flap.
+# ---------------------------------------------------------------------
+
+# The gated fields: path in BENCH json → comparison kind.
+GATED_EXACT=(
+  ".report.exact_hits"
+  ".report.port_hits"
+  ".report.misses"
+  ".report.explore_jobs"
+  ".report.fs_vetoes"
+  ".report.rejected"
+  ".dynamic_shapes.distinct_shapes"
+  ".dynamic_shapes.distinct_buckets"
+  ".dynamic_shapes.bucket_hits"
+  ".dynamic_shapes.explore_jobs"
+)
+GATED_BANDED=(
+  ".report.compile_p50_ms"
+  ".report.compile_p99_ms"
+  ".report.wait_p50_ms"
+  ".report.wait_p99_ms"
+  ".report.saved_frac"
+  ".dynamic_shapes.saved_frac"
+  ".calibration.drift_after"
+)
+TOLERANCE="${CHECK_BENCH_TOLERANCE:-0.15}"
+
+extract_baseline() {
+  local out="$1"
+  {
+    echo '{'
+    echo '  "seeded": true,'
+    echo "  \"tolerance\": $TOLERANCE,"
+    echo '  "note": "Gated fleet-bench trajectory. Re-seed with ci/check_bench.sh --update-baseline when a change legitimately moves these numbers, and say why in the PR.",'
+    echo '  "values": {'
+    local first=1
+    for path in "${GATED_EXACT[@]}" "${GATED_BANDED[@]}"; do
+      local val
+      val=$(jq "$path" "$BENCH")
+      [[ "$val" == "null" ]] && fail "cannot seed baseline: $path missing from $BENCH"
+      if [[ $first -eq 0 ]]; then echo ','; fi
+      printf '    "%s": %s' "$path" "$val"
+      first=0
+    done
+    echo ''
+    echo '  }'
+    echo '}'
+  } >"$out"
+}
+
+if [[ "$MODE" == "update" ]]; then
+  extract_baseline "$BASELINE"
+  echo "check_bench: re-seeded $BASELINE from $BENCH (tolerance $TOLERANCE)"
+  exit 0
+fi
+
+if [[ ! -f "$BASELINE" ]] || [[ "$(jq -r '.seeded // false' "$BASELINE")" != "true" ]]; then
+  # Bootstrap mode: no trusted numbers committed yet. Emit the
+  # candidate so a maintainer (or a follow-up commit) can seed the
+  # gate; the structural gates above still protect this run.
+  CANDIDATE="${BASELINE%.json}.candidate.json"
+  extract_baseline "$CANDIDATE"
+  echo "check_bench: WARNING: $BASELINE is not seeded — trajectory gate skipped." >&2
+  echo "check_bench: wrote candidate baseline to $CANDIDATE; review and commit it as $BASELINE to arm the gate." >&2
+  exit 0
+fi
+
+BASE_TOL=$(jq -r '.tolerance // 0.15' "$BASELINE")
+failures=0
+
+for path in "${GATED_EXACT[@]}"; do
+  expected=$(jq -r --arg p "$path" '.values[$p]' "$BASELINE")
+  actual=$(jq -r "$path" "$BENCH")
+  if [[ "$expected" == "null" ]]; then
+    echo "check_bench: WARNING: $path not in baseline (stale baseline? re-seed)" >&2
+    continue
+  fi
+  if [[ "$actual" != "$expected" ]]; then
+    echo "check_bench: FAIL: $path = $actual, baseline $expected (exact match required)" >&2
+    failures=$((failures + 1))
+  fi
+done
+
+for path in "${GATED_BANDED[@]}"; do
+  expected=$(jq -r --arg p "$path" '.values[$p]' "$BASELINE")
+  actual=$(jq -r "$path" "$BENCH")
+  if [[ "$expected" == "null" ]]; then
+    echo "check_bench: WARNING: $path not in baseline (stale baseline? re-seed)" >&2
+    continue
+  fi
+  within=$(awk -v a="$actual" -v e="$expected" -v t="$BASE_TOL" 'BEGIN {
+    d = a - e; if (d < 0) d = -d;
+    if (e == 0) { print (d <= 1e-12) ? "true" : "false" }
+    else { r = e; if (r < 0) r = -r; print (d / r <= t) ? "true" : "false" }
+  }')
+  if [[ "$within" != "true" ]]; then
+    pct=$(awk -v t="$BASE_TOL" 'BEGIN { print t * 100 }')
+    echo "check_bench: FAIL: $path = $actual drifted beyond ±${pct}% of baseline $expected" >&2
+    failures=$((failures + 1))
+  fi
+done
+
+if [[ $failures -gt 0 ]]; then
+  fail "$failures gated field(s) regressed against $BASELINE — if the change is intentional, re-seed with ci/check_bench.sh --update-baseline and explain in the PR"
+fi
+echo "check_bench: baseline trajectory gate OK ($BASELINE, tolerance $BASE_TOL)"

@@ -17,8 +17,8 @@
 //! cache/portability hit rates, queue-latency percentiles.
 
 use fusion_stitching::fleet::{
-    build_templates, generate_trace, DeviceRegistry, ExecutorKind, FleetOptions, FleetService,
-    TrafficConfig,
+    build_template_families, build_templates, generate_trace, DeviceRegistry, ExecutorKind,
+    FleetOptions, FleetService, TrafficConfig,
 };
 
 fn main() {
@@ -127,4 +127,39 @@ fn main() {
     );
     assert_eq!(sharded.regressions, 0, "sharded compiles stay never-negative");
     assert!(sharded.compile.p50 > 0.0);
+
+    // Shape-polymorphic traffic: the same fleet, but every task draws
+    // a (batch, seq) from its template's seeded shape distribution.
+    // Sibling shapes inside one power-of-two bucket reuse the explored
+    // plan via a launch-dimension-only retune (the store's third reuse
+    // tier), so full explorations stay sublinear in distinct shapes —
+    // tune-once-run-many under realistic traffic.
+    let dyn_traffic = TrafficConfig { dynamic_shapes: true, ..traffic.clone() };
+    let dyn_opts = FleetOptions {
+        registry: DeviceRegistry::mixed(2, 2, 2),
+        compile_workers: 3,
+        ..Default::default()
+    };
+    let families = build_template_families(&dyn_traffic);
+    let dyn_trace = generate_trace(&dyn_traffic);
+    let mut dyn_svc = FleetService::with_families(dyn_opts, families);
+    let dynamic = dyn_svc.run_trace(&dyn_trace);
+    println!(
+        "\ndynamic shapes: {} distinct graphs in {} buckets; {} exact hits, \
+         {} ports, {} bucket hits ({} retunes, {} failed); {} full explorations",
+        dynamic.distinct_shapes,
+        dynamic.distinct_buckets,
+        dynamic.exact_hits,
+        dynamic.port_hits,
+        dynamic.bucket_hits,
+        dynamic.bucket_retunes,
+        dynamic.bucket_failures,
+        dynamic.explore_jobs
+    );
+    assert_eq!(dynamic.regressions, 0, "never-negative holds under dynamic shapes");
+    assert!(dynamic.bucket_hits > 0, "sibling shapes must reuse plans");
+    assert!(
+        dynamic.explore_jobs < dynamic.distinct_shapes,
+        "explorations must stay sublinear in distinct shapes"
+    );
 }

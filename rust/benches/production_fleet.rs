@@ -26,6 +26,14 @@
 //! on both executors, and the bench asserts their decisions converge
 //! and the new compile-latency percentiles are populated.
 //!
+//! A **dynamic-shapes** section then re-runs the fleet under
+//! shape-varying traffic (every task draws (batch, seq) from its
+//! template's seeded distribution): sibling shapes must resolve through
+//! the plan store's power-of-two bucket tier (launch-dim-only retunes),
+//! keeping full explorations strictly sublinear in the number of
+//! distinct graphs served — the paper's tune-once-run-many economics
+//! under realistic traffic.
+//!
 //! Run: `cargo bench --bench production_fleet` (add `-- N` for trace
 //! size, default 1200, acceptance floor 1000; `--threads K` for the
 //! wall-clock pool size, default 2; `--compile-shards S`, default 4).
@@ -33,8 +41,8 @@
 
 use fusion_stitching::explorer::regions;
 use fusion_stitching::fleet::{
-    build_templates, generate_trace, DeviceRegistry, ExecutorKind, FleetOptions, FleetReport,
-    FleetService, TrafficConfig,
+    build_template_families, build_templates, generate_trace, DeviceRegistry, ExecutorKind,
+    FleetOptions, FleetReport, FleetService, TrafficConfig,
 };
 use fusion_stitching::util::JsonValue;
 use fusion_stitching::workloads::Workload;
@@ -67,6 +75,14 @@ fn run_calibrated(
     let trace = generate_trace(traffic);
     let opts = FleetOptions { executor, calibrate: true, ..base_options() };
     let mut svc = FleetService::new(opts, templates.to_vec());
+    svc.run_trace(&trace)
+}
+
+fn run_dynamic(traffic: &TrafficConfig, executor: ExecutorKind) -> FleetReport {
+    let families = build_template_families(traffic);
+    let trace = generate_trace(traffic);
+    let opts = FleetOptions { executor, ..base_options() };
+    let mut svc = FleetService::with_families(opts, families);
     svc.run_trace(&trace)
 }
 
@@ -249,6 +265,69 @@ fn main() {
         report.saved_frac() * 100.0
     );
 
+    // Dynamic shapes: the same fleet under shape-varying traffic —
+    // every task draws (batch, seq) from its template's seeded shape
+    // distribution. The tune-once-run-many economics must survive:
+    // sibling shapes resolve through the store's power-of-two bucket
+    // tier (launch-dim-only retunes), so full explorations stay
+    // strictly sublinear in the number of distinct graphs served, and
+    // the decision stream still converges across executors.
+    println!("\n== dynamic shapes: seeded per-template (batch, seq) distributions ==");
+    let dyn_traffic = TrafficConfig {
+        tasks: tasks.min(600),
+        templates: 12,
+        dynamic_shapes: true,
+        ..Default::default()
+    };
+    let dynamic = run_dynamic(&dyn_traffic, ExecutorKind::VirtualTime);
+    let dyn_replay = run_dynamic(&dyn_traffic, ExecutorKind::VirtualTime);
+    assert_eq!(
+        dynamic.to_json().to_string(),
+        dyn_replay.to_json().to_string(),
+        "dynamic-shape replay diverged for the same seed"
+    );
+    let dyn_wall = run_dynamic(&dyn_traffic, ExecutorKind::WallClock { threads });
+    assert_eq!(
+        decisions(&dyn_wall),
+        decisions(&dynamic),
+        "dynamic-shape wall-clock run diverged from virtual decisions"
+    );
+    assert_eq!(dyn_wall.bucket_hits, dynamic.bucket_hits);
+    assert_eq!(dyn_wall.bucket_retunes, dynamic.bucket_retunes);
+    assert_eq!(dyn_wall.bucket_failures, dynamic.bucket_failures);
+    assert_eq!(dyn_wall.distinct_shapes, dynamic.distinct_shapes);
+    assert_eq!(dyn_wall.distinct_buckets, dynamic.distinct_buckets);
+    assert_eq!(dynamic.regressions, 0, "never-negative must hold under dynamic shapes");
+    assert_eq!(dyn_wall.regressions, 0);
+    assert!(
+        dynamic.distinct_shapes > dyn_traffic.templates,
+        "shape-varying traffic must produce many distinct graphs"
+    );
+    assert!(dynamic.bucket_hits > 0, "sibling shapes must reuse plans via the bucket tier");
+    assert!(
+        dynamic.explore_jobs < dynamic.distinct_shapes,
+        "full explorations ({}) must be strictly sublinear in distinct shapes ({})",
+        dynamic.explore_jobs,
+        dynamic.distinct_shapes
+    );
+    let bucket_hit_rate = dynamic.bucket_hits as f64
+        / (dynamic.exact_hits + dynamic.port_hits + dynamic.bucket_hits + dynamic.misses).max(1)
+            as f64;
+    println!(
+        "dynamic shapes: {} tasks over {} distinct graphs in {} buckets; \
+         {} explorations + {} ports + {} shape retunes ({} failed); \
+         bucket-hit rate {:.1}%; saved {:.1}%",
+        dyn_traffic.tasks,
+        dynamic.distinct_shapes,
+        dynamic.distinct_buckets,
+        dynamic.explore_jobs,
+        dynamic.port_jobs,
+        dynamic.bucket_retunes,
+        dynamic.bucket_failures,
+        bucket_hit_rate * 100.0,
+        dynamic.saved_frac() * 100.0
+    );
+
     let projected = report.projected_gpu_hours_saved(30_000.0, 2.0);
     println!(
         "\nGPU time saved: {:.1} ms of {:.1} ms fallback-only ({:.1}%)",
@@ -286,6 +365,32 @@ fn main() {
         .set("monolithic_compile_p99_ms", report.compile.p99)
         .set("regressions", sharded.regressions)
         .set("matches_virtual_decisions", true);
+    let mut dynamic_json = JsonValue::obj();
+    dynamic_json
+        .set("enabled", true)
+        .set("tasks", dyn_traffic.tasks)
+        .set("templates", dyn_traffic.templates)
+        .set("distinct_shapes", dynamic.distinct_shapes)
+        .set("distinct_buckets", dynamic.distinct_buckets)
+        .set("exact_hits", dynamic.exact_hits)
+        .set("port_hits", dynamic.port_hits)
+        .set("bucket_hits", dynamic.bucket_hits)
+        .set("misses", dynamic.misses)
+        .set("explore_jobs", dynamic.explore_jobs)
+        .set("port_jobs", dynamic.port_jobs)
+        .set("bucket_retunes", dynamic.bucket_retunes)
+        .set("bucket_failures", dynamic.bucket_failures)
+        .set("bucket_hit_rate", bucket_hit_rate)
+        .set(
+            "explores_per_distinct_shape",
+            dynamic.explore_jobs as f64 / dynamic.distinct_shapes.max(1) as f64,
+        )
+        .set("explorations_sublinear", dynamic.explore_jobs < dynamic.distinct_shapes)
+        .set("compile_p50_ms", dynamic.compile.p50)
+        .set("compile_p99_ms", dynamic.compile.p99)
+        .set("saved_frac", dynamic.saved_frac())
+        .set("regressions", dynamic.regressions)
+        .set("matches_virtual_decisions", true);
     let mut calibration_json = JsonValue::obj();
     calibration_json
         .set("enabled", true)
@@ -309,6 +414,7 @@ fn main() {
         .set("report", report.to_json())
         .set("wallclock", wall_json)
         .set("sharded", sharded_json)
+        .set("dynamic_shapes", dynamic_json)
         .set("calibration", calibration_json);
     let path = "BENCH_fleet.json";
     match std::fs::write(path, out.to_pretty()) {

@@ -217,21 +217,37 @@ pub fn tune_pattern(
 }
 
 /// Re-tune an already-explored fusion plan for a (possibly different)
-/// device: run only the §4.2 schedule/launch-dimension tuner over each
-/// kernel the plan launches, skipping exploration entirely — the
-/// codegen-level plan-portability entry point, giving the caller every
-/// [`TunedKernel`] (launch dims, schedules, estimates) on the new
-/// device. The fleet's program-level variant is
-/// [`crate::pipeline::port_program`], which folds this tuning into
+/// device *or shape*: run only the §4.2 schedule/launch-dimension tuner
+/// over each kernel the plan launches, skipping exploration entirely —
+/// the codegen-level plan-portability entry point, giving the caller
+/// every [`TunedKernel`] (launch dims, schedules, estimates) on the new
+/// target. Because a plan stores node *ids*, it applies to any graph
+/// sharing the source graph's structure: pass the same graph with a new
+/// `device` to port across device classes, or a sibling-shape graph
+/// (same builder, different batch/seq) with the same device to port
+/// across shapes — either way every kernel's shared-memory and
+/// occupancy feasibility is re-checked by the latency evaluator through
+/// [`DeviceSpec::occupancy`] at the target's shapes. The fleet's
+/// program-level variants are [`crate::pipeline::port_program`] and
+/// [`crate::pipeline::reshape_program`], which fold this tuning into
 /// lowering so each kernel is tuned once. Returns `None` when any
-/// pattern fails to schedule on the target device (the caller falls
-/// back to a full re-exploration).
+/// pattern fails to schedule on the target (the caller falls back to a
+/// full re-exploration) or when a pattern's node ids do not exist on
+/// `graph` (a foreign plan — shape-porting only makes sense between
+/// structure siblings).
 pub fn retune_plan(
     graph: &Graph,
     plan: &crate::explorer::FusionPlan,
     device: &DeviceSpec,
     opts: &TunerOptions,
 ) -> Option<Vec<TunedKernel>> {
+    let foreign = plan
+        .patterns
+        .iter()
+        .any(|p| p.nodes().iter().any(|n| n.idx() >= graph.len()));
+    if foreign {
+        return None;
+    }
     plan.kernels(graph)
         .iter()
         .map(|p| tune_pattern(graph, p.nodes(), device, opts))
@@ -314,6 +330,46 @@ mod tests {
         let g = Graph::new("e");
         let device = DeviceSpec::v100();
         assert!(tune_pattern(&g, &[], &device, &TunerOptions::xla()).is_none());
+    }
+
+    #[test]
+    fn retune_plan_ports_across_shapes() {
+        // Explore layer-norm at 4096 rows, then re-tune the same plan
+        // against sibling graphs at other row counts (same structure,
+        // same device): every kernel must re-schedule, with feasibility
+        // re-checked at the new shape — no re-exploration.
+        let ln_rows = |rows: usize| {
+            let mut g = Graph::new("ln");
+            let x = g.param(Shape::new(vec![rows, 768]), DType::F32, "x");
+            let _ = blocks::layer_norm(&mut g, x, "ln");
+            g
+        };
+        let device = DeviceSpec::v100();
+        let explore_opts = crate::explorer::ExploreOptions::default();
+        let big = ln_rows(4096);
+        let plan = crate::explorer::explore(&big, &device, &explore_opts);
+        let opts = TunerOptions::fusion_stitching();
+        let at_big = retune_plan(&big, &plan, &device, &opts).expect("tunes at 4096");
+        let small = ln_rows(1024);
+        let at_small = retune_plan(&small, &plan, &device, &opts).expect("tunes at 1024");
+        assert_eq!(at_big.len(), at_small.len());
+        // A quarter of the rows is strictly less work on the same
+        // device: the retuned estimate must not get slower.
+        let sum = |ks: &[TunedKernel]| ks.iter().map(|k| k.estimate.time_us).sum::<f64>();
+        assert!(sum(&at_small) <= sum(&at_big), "{} vs {}", sum(&at_small), sum(&at_big));
+    }
+
+    #[test]
+    fn retune_plan_rejects_foreign_plans() {
+        // A plan whose node ids point past the target graph is not a
+        // structure sibling (hash-collision defense): refuse to retune.
+        let (g, _) = ln_pattern();
+        let device = DeviceSpec::v100();
+        let explore_opts = crate::explorer::ExploreOptions::default();
+        let plan = crate::explorer::explore(&g, &device, &explore_opts);
+        let mut tiny = Graph::new("tiny");
+        let _ = tiny.param(Shape::new(vec![8]), DType::F32, "p");
+        assert!(retune_plan(&tiny, &plan, &device, &TunerOptions::fusion_stitching()).is_none());
     }
 
     #[test]

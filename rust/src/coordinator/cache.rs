@@ -35,6 +35,65 @@ impl GraphKey {
     }
 }
 
+/// Shape-polymorphic identity of a graph: a shape-erased *structure*
+/// key plus a power-of-two *shape bucket*.
+///
+/// [`GraphKey`] hashes exact shapes, so realistic traffic with varied
+/// batch sizes and sequence lengths would pay a full exploration per
+/// distinct shape. `ShapeClass` splits that identity in two:
+///
+/// * `structure` — FNV-1a over op kinds (including `Transpose{perm}` /
+///   `Reduce{op, axes}` payloads, positionally — the PR 3 collision
+///   class), dtypes, ranks and edges, but **no dimension values**. Two
+///   instantiations of one parameterized builder at different
+///   (batch, seq) share it; any structural difference separates it.
+/// * `bucket` — FNV-1a over every dimension rounded up to its power of
+///   two. Sibling shapes inside one bucket are close enough that a plan
+///   explored at one serves the others after a launch-dimension-only
+///   retune (`pipeline::reshape_program`); crossing a power-of-two
+///   boundary changes the bucket and forces a fresh exploration.
+///
+/// Graphs with equal [`GraphKey`] always have equal `ShapeClass`; the
+/// converse direction (same class, different exact key) is exactly the
+/// fleet store's `BucketHit` reuse tier.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ShapeClass {
+    /// Shape-erased structure hash.
+    pub structure: u64,
+    /// Power-of-two bucket hash over all dimension values.
+    pub bucket: u64,
+}
+
+impl ShapeClass {
+    /// Bucket a single dimension: the next power of two at or above it
+    /// (zero-sized dims bucket as 1, like scalars).
+    pub fn bucket_dim(d: usize) -> u64 {
+        d.max(1).next_power_of_two() as u64
+    }
+
+    /// Compute both halves in one graph walk.
+    pub fn of(graph: &Graph) -> Self {
+        use crate::util::hash::{fnv1a_u64, FNV_OFFSET};
+        let mut s = FNV_OFFSET;
+        let mut b = FNV_OFFSET;
+        s = fnv1a_u64(s, graph.len() as u64);
+        for node in graph.nodes() {
+            s = fnv1a_u64(s, kind_tag(&node.kind));
+            s = fnv1a_u64(s, node.dtype.size_bytes() as u64);
+            // Rank stays in the structure (it changes the generated
+            // kernel's loop nest); the dim values only feed the bucket.
+            s = fnv1a_u64(s, node.shape.rank() as u64 + 1);
+            for &inp in &node.inputs {
+                s = fnv1a_u64(s, inp.0 as u64 + 0x9E37);
+            }
+            for &d in node.shape.dims() {
+                b = fnv1a_u64(b, Self::bucket_dim(d));
+            }
+        }
+        ShapeClass { structure: s, bucket: b }
+    }
+}
+
 fn kind_tag(kind: &crate::graph::OpKind) -> u64 {
     use crate::graph::OpKind::*;
     use crate::util::hash::{fnv1a_u64, FNV_OFFSET};
@@ -235,6 +294,128 @@ mod tests {
         };
         assert_ne!(build(vec![0, 3]), build(vec![1, 2]));
         assert_eq!(build(vec![0, 3]), build(vec![0, 3]));
+    }
+
+    #[test]
+    fn shape_class_erases_dims_but_keeps_structure() {
+        // Same chain at different leading dims: exact keys differ, the
+        // structure half matches, and the buckets differ across a
+        // power-of-two boundary.
+        let build = |rows: usize| {
+            let mut g = Graph::new("t");
+            let mut cur = g.param(Shape::new(vec![rows, 256]), DType::F32, "p");
+            for i in 0..3 {
+                cur = g.unary(OpKind::Relu, cur, format!("r{i}"));
+            }
+            (GraphKey::of(&g), ShapeClass::of(&g))
+        };
+        let (k64, c64) = build(64);
+        let (k48, c48) = build(48);
+        let (k128, c128) = build(128);
+        assert_ne!(k64, k48);
+        assert_eq!(c64.structure, c48.structure);
+        assert_eq!(c64.structure, c128.structure);
+        // 48 rounds up to 64: same bucket as 64, different from 128.
+        assert_eq!(c48.bucket, c64.bucket);
+        assert_ne!(c64.bucket, c128.bucket);
+    }
+
+    #[test]
+    fn shape_class_structure_separates_op_payloads() {
+        // Echo of PR 3's GraphKey collision class: permutations and
+        // axes splits are *structure*, not shape — erasing dims must
+        // not merge them back together.
+        let transpose = |perm: Vec<usize>| {
+            let mut g = Graph::new("t");
+            let p = g.param(Shape::new(vec![4, 4, 4]), DType::F32, "p");
+            let _ = g.add(
+                OpKind::Transpose { perm },
+                DType::F32,
+                Shape::new(vec![4, 4, 4]),
+                vec![p],
+                "t",
+            );
+            ShapeClass::of(&g)
+        };
+        assert_ne!(
+            transpose(vec![0, 2, 1]).structure,
+            transpose(vec![1, 0, 2]).structure
+        );
+        use crate::graph::ReduceOp;
+        let reduce = |axes: Vec<usize>| {
+            let mut g = Graph::new("r");
+            let p = g.param(Shape::new(vec![2, 2, 2, 2]), DType::F32, "p");
+            let _ = g.reduce(ReduceOp::Sum, p, axes, "r");
+            ShapeClass::of(&g)
+        };
+        assert_ne!(reduce(vec![0, 3]).structure, reduce(vec![1, 2]).structure);
+        // Distinct op kinds separate too.
+        let unary = |kind: OpKind| {
+            let mut g = Graph::new("u");
+            let p = g.param(Shape::new(vec![8, 8]), DType::F32, "p");
+            let _ = g.unary(kind, p, "u");
+            ShapeClass::of(&g)
+        };
+        assert_ne!(unary(OpKind::Exp).structure, unary(OpKind::Tanh).structure);
+    }
+
+    #[test]
+    fn shape_class_pairs_never_collide_across_buckets_or_structures() {
+        // Sweep a family of (structure, shape) pairs: every pair of
+        // graphs must agree on (structure, bucket) exactly when they
+        // have the same op chain and their dims round to the same
+        // powers of two.
+        use std::collections::HashMap;
+        let build = |ops: usize, rows: usize| {
+            let mut g = Graph::new("t");
+            let mut cur = g.param(Shape::new(vec![rows, 128]), DType::F32, "p");
+            for i in 0..ops {
+                cur = g.unary(OpKind::Relu, cur, format!("r{i}"));
+                if i == 0 {
+                    let r = g.reduce(crate::graph::ReduceOp::Sum, cur, vec![1], "red");
+                    cur = g.broadcast(r, Shape::new(vec![rows, 128]), "bc");
+                }
+            }
+            ShapeClass::of(&g)
+        };
+        let mut seen: HashMap<(u64, u64), (usize, u64)> = HashMap::new();
+        for ops in [2usize, 3, 4, 5] {
+            for rows in [5usize, 17, 31, 32, 33, 48, 64, 65, 100, 128, 200, 256, 2000] {
+                let c = build(ops, rows);
+                let fingerprint = (ops, ShapeClass::bucket_dim(rows));
+                match seen.get(&(c.structure, c.bucket)) {
+                    Some(&prev) => assert_eq!(
+                        prev, fingerprint,
+                        "(structure, bucket) collided across distinct classes"
+                    ),
+                    None => {
+                        seen.insert((c.structure, c.bucket), fingerprint);
+                    }
+                }
+            }
+        }
+        // 4 structures × 6 distinct row buckets (the 13 row values
+        // round up to {8, 32, 64, 128, 256, 2048} — off-pow2 values
+        // deliberately merge into their pow2 neighbours) = 24 classes.
+        assert_eq!(seen.len(), 24, "expected 24 distinct classes, got {}", seen.len());
+    }
+
+    #[test]
+    fn graph_key_equality_implies_shape_class_equality() {
+        let mk = || {
+            let mut g = Graph::new("t");
+            let p = g.param(Shape::new(vec![33, 65]), DType::F32, "p");
+            let _ = g.unary(OpKind::Sigmoid, p, "s");
+            g
+        };
+        let (a, b) = (mk(), mk());
+        assert_eq!(GraphKey::of(&a), GraphKey::of(&b));
+        assert_eq!(ShapeClass::of(&a), ShapeClass::of(&b));
+        assert_eq!(ShapeClass::bucket_dim(33), 64);
+        assert_eq!(ShapeClass::bucket_dim(64), 64);
+        assert_eq!(ShapeClass::bucket_dim(65), 128);
+        assert_eq!(ShapeClass::bucket_dim(0), 1);
+        assert_eq!(ShapeClass::bucket_dim(1), 1);
     }
 
     #[test]

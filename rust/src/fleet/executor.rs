@@ -25,26 +25,38 @@
 //!
 //! 1. **Publication barrier** — before the dispatcher looks up a graph
 //!    in the plan store, it waits for any in-flight compile of that
-//!    same graph ([`WallClockPool::await_key`]), so the lookup sees
-//!    exactly the store state the virtual replay would have seen. Jobs
-//!    for *different* graphs overlap freely.
+//!    same graph *or of a sibling shape in its (structure, bucket)
+//!    class* ([`WallClockPool::await_plan`]), so the lookup sees
+//!    exactly the store state — including shape-port representatives —
+//!    the virtual replay would have seen. Jobs for unrelated graphs
+//!    overlap freely.
 //! 2. **Virtual bookkeeping parity** — the dispatcher still advances
 //!    the virtual slot clocks past every admitted task, lazily waiting
 //!    for a published latency only when a task's virtual serving window
 //!    actually crosses its compile's virtual ready time (rare: most
 //!    tasks finish on the fallback first, which is the §6 premise).
 //!
-//! Plan decisions, store hits/ports/misses and the never-negative
-//! guarantee are therefore identical across executors (asserted by the
-//! equivalence test in `super::service`); wall-clock latency fields
-//! (`served_gpu_ms`, iteration percentiles, elapsed time) reflect the
-//! real thread race and legitimately differ.
+//! Plan decisions, store hits/buckets/ports/misses and the
+//! never-negative guarantee are therefore identical across executors
+//! (asserted by the equivalence tests in `super::service`); wall-clock
+//! latency fields (`served_gpu_ms`, iteration percentiles, elapsed
+//! time) reflect the real thread race and legitimately differ.
+//!
+//! # Failure containment
+//!
+//! A panicking compile worker must not wedge the fleet: every job's
+//! publication-barrier release lives in a drop guard, the shared locks
+//! recover from poisoning ([`super::lock_recover`] — each critical
+//! section is a single collection op), and [`compile_loop`] catches the
+//! panic, records it, and keeps the worker draining the queue. The
+//! collected panics are returned in [`WallTotals::errors`] and
+//! re-raised as one deterministic dispatcher-side error at shutdown —
+//! a surfaced failure instead of a silent join-barrier deadlock.
 
+use super::lock_recover;
 use super::queue::{owner_hash, QueueStats, WorkStealingQueue};
-use super::store::{PlanLookup, SharedPlanStore};
-use crate::coordinator::{
-    guard_never_negative, tune_with_guards, GraphKey, ServiceOptions, Session,
-};
+use super::store::{PlanKey, PlanLookup, SharedPlanStore};
+use crate::coordinator::{guard_never_negative, tune_with_guards, ServiceOptions, Session};
 use crate::explorer::{regions, ExploreOptions, FusionPlan};
 use crate::gpu::{DeviceSpec, SimConfig, Simulator};
 use crate::pipeline::{self, OptimizedProgram, Tech};
@@ -56,22 +68,17 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 /// Which substrate executes compiles and serving.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum ExecutorKind {
     /// Deterministic single-threaded replay in virtual time (the test
     /// harness; byte-identical across runs of one seed).
+    #[default]
     VirtualTime,
     /// Real OS threads: `threads` compile workers drain the shared
     /// work-stealing queue and every registered device serves on its
     /// own thread. `threads` is independent of the virtual admission
     /// model's `compile_workers` — decisions converge for any count.
     WallClock { threads: usize },
-}
-
-impl Default for ExecutorKind {
-    fn default() -> Self {
-        ExecutorKind::VirtualTime
-    }
 }
 
 impl ExecutorKind {
@@ -130,6 +137,11 @@ pub(crate) struct FleetCounters {
     pub explore_jobs: AtomicUsize,
     pub port_jobs: AtomicUsize,
     pub port_failures: AtomicUsize,
+    /// Same-class shape retunes (the `BucketHit` tier's compile jobs).
+    pub bucket_jobs: AtomicUsize,
+    /// Bucket retunes whose sibling plan could not schedule at the new
+    /// shape (the task fell back to a full exploration).
+    pub bucket_failures: AtomicUsize,
     pub fs_vetoes: AtomicUsize,
     /// Region-shard compile sub-jobs fanned out by sharded explorations
     /// (each counts toward queue traffic but not `explore_jobs`, which
@@ -155,11 +167,11 @@ pub(crate) fn iter_ms(spec: &DeviceSpec, prog: &OptimizedProgram, loop_kind: Loo
 
 /// Produce the guarded compile candidate for one job: a full FS
 /// exploration behind the coordinator's crash/veto guards, or the
-/// never-negative check on an already-lowered port. The tuning/guard
-/// half of the publication path, shared verbatim by the virtual inline
-/// compiles and the wall-clock workers (see [`guard_and_publish`] for
-/// the other half) so both executors decide identically by
-/// construction.
+/// never-negative check on an already-lowered port/shape-retune. The
+/// tuning/guard half of the publication path, shared verbatim by the
+/// virtual inline compiles and the wall-clock workers (see
+/// [`guard_and_publish`] for the other half) so both executors decide
+/// identically by construction.
 pub(crate) fn produce_candidate(
     w: &Workload,
     spec: &DeviceSpec,
@@ -206,7 +218,7 @@ pub(crate) fn produce_candidate(
 pub(crate) fn guard_and_publish(
     w: &Workload,
     spec: &DeviceSpec,
-    key: GraphKey,
+    key: PlanKey,
     candidate: Option<Arc<OptimizedProgram>>,
     fallback: &Arc<OptimizedProgram>,
     fb_ms: f64,
@@ -219,13 +231,13 @@ pub(crate) fn guard_and_publish(
         Some(prog) => {
             let ms = iter_ms(spec, &prog, w.loop_kind);
             store.insert(key, spec.name, prog, ready_ms);
-            latency.lock().unwrap().insert((key.0, spec.name), PublishedLatency::first(ms));
+            lock_recover(latency).insert((key.exact.0, spec.name), PublishedLatency::first(ms));
             ms
         }
         None => {
             counters.fs_vetoes.fetch_add(1, Ordering::Relaxed);
             store.insert(key, spec.name, Arc::clone(fallback), ready_ms);
-            latency.lock().unwrap().insert((key.0, spec.name), PublishedLatency::first(fb_ms));
+            lock_recover(latency).insert((key.exact.0, spec.name), PublishedLatency::first(fb_ms));
             fb_ms
         }
     }
@@ -268,7 +280,7 @@ pub(crate) fn produce_reexplored(
 pub(crate) fn publish_reexplored(
     w: &Workload,
     spec: &DeviceSpec,
-    key: GraphKey,
+    key: PlanKey,
     candidate: Option<Arc<OptimizedProgram>>,
     effective_ms: f64,
     store: &SharedPlanStore,
@@ -290,15 +302,13 @@ pub(crate) fn publish_reexplored(
         return;
     };
     let new_ms = iter_ms(spec, &prog, w.loop_kind);
-    let old_ms = latency
-        .lock()
-        .unwrap()
-        .get(&(key.0, spec.name))
+    let old_ms = lock_recover(latency)
+        .get(&(key.exact.0, spec.name))
         .map(|p| p.latest())
         .unwrap_or(f64::INFINITY);
     if new_ms < old_ms - 1e-12 {
         store.insert(key, spec.name, prog, incumbent_ready);
-        if let Some(entry) = latency.lock().unwrap().get_mut(&(key.0, spec.name)) {
+        if let Some(entry) = lock_recover(latency).get_mut(&(key.exact.0, spec.name)) {
             entry.improved = Some((new_ms, effective_ms));
         }
         counters.reexplore_improved.fetch_add(1, Ordering::Relaxed);
@@ -317,10 +327,10 @@ pub(crate) enum WallJobKind {
     /// remote fusion + lowering), guards and publishes for the whole
     /// graph.
     ExploreShard { join: Arc<ShardJoin>, index: usize },
-    /// A cross-class port already lowered by the dispatcher (the
-    /// launch-dim re-tune is the cheap 10% and must stay on the
-    /// deterministic decision path); the worker runs the §7.2
-    /// never-negative guard and publishes the verdict.
+    /// A cross-class port or same-class shape retune already lowered by
+    /// the dispatcher (the launch-dim re-tune is the cheap ~10% and
+    /// must stay on the deterministic decision path); the worker runs
+    /// the §7.2 never-negative guard and publishes the verdict.
     GuardPort { ported: OptimizedProgram },
     /// Drift-triggered re-exploration under calibrated cost parameters
     /// (carried inside `explore.cost` — a snapshot the dispatcher took
@@ -364,7 +374,7 @@ impl ShardJoin {
         index: usize,
         partial: Option<FusionPlan>,
     ) -> Option<Vec<Option<FusionPlan>>> {
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_recover(&self.state);
         st.partials[index] = partial;
         st.done += 1;
         if st.done == self.groups.len() {
@@ -424,11 +434,13 @@ pub(crate) fn produce_sharded_candidate(
     }
 }
 
-/// One unit of background compilation.
+/// One unit of background compilation. Carries the workload instance
+/// itself (shape-polymorphic traffic instantiates templates per shape,
+/// so a bare template index no longer identifies the graph).
 #[derive(Debug)]
 pub(crate) struct WallJob {
-    pub template: usize,
-    pub key: GraphKey,
+    pub w: Arc<Workload>,
+    pub key: PlanKey,
     pub spec: DeviceSpec,
     pub fallback: Arc<OptimizedProgram>,
     pub fb_ms: f64,
@@ -447,7 +459,7 @@ pub(crate) struct ServeJob {
     pub fb_ms: f64,
     /// Plan identity to poll for, when the task has one in flight or
     /// already published (`None` for fallback-only admissions).
-    pub fs: Option<(GraphKey, &'static str)>,
+    pub fs: Option<(PlanKey, &'static str)>,
 }
 
 /// Wall-clock accumulators owned by the serving threads.
@@ -466,6 +478,20 @@ pub(crate) struct WallTotals {
     pub regressions: usize,
     pub queue: QueueStats,
     pub elapsed_ms: f64,
+    /// Panics caught on compile workers, in observation order. The
+    /// dispatcher re-raises them as one error after teardown.
+    pub errors: Vec<String>,
+}
+
+/// Publication-barrier accounting: unpublished compile jobs per exact
+/// graph key and per (structure, bucket) shape class. The bucket count
+/// exists because a sibling shape's lookup outcome (`BucketHit`)
+/// depends on whether this class already published *anything* in the
+/// bucket — the dispatcher must not race a sibling's in-flight compile.
+#[derive(Debug, Default)]
+struct Inflight {
+    exact: HashMap<u64, usize>,
+    buckets: HashMap<(u64, u64), usize>,
 }
 
 /// State shared by the dispatcher, compile workers and serving threads.
@@ -474,11 +500,10 @@ struct Shared {
     work_lock: Mutex<()>,
     work_cv: Condvar,
     shutdown: AtomicBool,
-    /// Graph key → number of unpublished compile jobs (the publication
-    /// barrier the dispatcher waits on before a same-graph lookup).
-    inflight: Mutex<HashMap<u64, usize>>,
+    /// The publication barrier the dispatcher waits on before a
+    /// same-graph or same-bucket lookup.
+    inflight: Mutex<Inflight>,
     inflight_cv: Condvar,
-    templates: Vec<Arc<Workload>>,
     store: Arc<SharedPlanStore>,
     latency: LatencyMap,
     explore: ExploreOptions,
@@ -488,6 +513,8 @@ struct Shared {
     /// publication (the mid-stream hot-swap path).
     reexplore_live: bool,
     counters: Arc<FleetCounters>,
+    /// Compile-worker panics, surfaced on the dispatcher at shutdown.
+    errors: Mutex<Vec<String>>,
 }
 
 /// The running wall-clock substrate: compile workers + serving threads.
@@ -507,7 +534,6 @@ impl WallClockPool {
     pub(crate) fn start(
         threads: usize,
         devices: usize,
-        templates: Vec<Arc<Workload>>,
         store: Arc<SharedPlanStore>,
         latency: LatencyMap,
         counters: Arc<FleetCounters>,
@@ -521,15 +547,15 @@ impl WallClockPool {
             work_lock: Mutex::new(()),
             work_cv: Condvar::new(),
             shutdown: AtomicBool::new(false),
-            inflight: Mutex::new(HashMap::new()),
+            inflight: Mutex::new(Inflight::default()),
             inflight_cv: Condvar::new(),
-            templates,
             store,
             latency,
             explore,
             never_negative,
             reexplore_live,
             counters,
+            errors: Mutex::new(Vec::new()),
         });
         let compile_handles = (0..threads)
             .map(|i| {
@@ -568,13 +594,36 @@ impl WallClockPool {
         }
     }
 
-    /// Block until no compile for `key` is in flight — the publication
-    /// barrier that keeps wall-clock plan decisions identical to the
-    /// virtual replay's.
+    /// Block until no compile for this exact graph is in flight — the
+    /// narrow barrier used when a task's virtual serving window crosses
+    /// its own compile's virtual ready time.
     pub(crate) fn await_key(&self, key: u64) {
-        let mut inflight = self.shared.inflight.lock().unwrap();
-        while inflight.get(&key).copied().unwrap_or(0) > 0 {
-            inflight = self.shared.inflight_cv.wait(inflight).unwrap();
+        let mut inflight = lock_recover(&self.shared.inflight);
+        while inflight.exact.get(&key).copied().unwrap_or(0) > 0 {
+            inflight = self
+                .shared
+                .inflight_cv
+                .wait(inflight)
+                .unwrap_or_else(std::sync::PoisonError::into_inner);
+        }
+    }
+
+    /// Block until no compile for this exact graph *or any sibling
+    /// shape in its (structure, bucket) class* is in flight — the
+    /// publication barrier that keeps wall-clock plan decisions
+    /// (including the `BucketHit` tier) identical to the virtual
+    /// replay's.
+    pub(crate) fn await_plan(&self, key: PlanKey) {
+        let bucket = (key.shape.structure, key.shape.bucket);
+        let mut inflight = lock_recover(&self.shared.inflight);
+        while inflight.exact.get(&key.exact.0).copied().unwrap_or(0) > 0
+            || inflight.buckets.get(&bucket).copied().unwrap_or(0) > 0
+        {
+            inflight = self
+                .shared
+                .inflight_cv
+                .wait(inflight)
+                .unwrap_or_else(std::sync::PoisonError::into_inner);
         }
     }
 
@@ -582,12 +631,26 @@ impl WallClockPool {
     /// pool; idle workers steal it FIFO-from-longest if the owner is
     /// busy.
     pub(crate) fn enqueue_compile(&self, job: WallJob) {
-        *self.shared.inflight.lock().unwrap().entry(job.key.0).or_insert(0) += 1;
+        {
+            let mut inflight = lock_recover(&self.shared.inflight);
+            *inflight.exact.entry(job.key.exact.0).or_insert(0) += 1;
+            *inflight
+                .buckets
+                .entry((job.key.shape.structure, job.key.shape.bucket))
+                .or_insert(0) += 1;
+        }
         let workers = self.shared.queue.workers() as u64;
-        let owner = (owner_hash(job.key.0, job.spec.name) % workers) as usize;
+        let owner = (owner_hash(job.key.exact.0, job.spec.name) % workers) as usize;
         self.shared.queue.push(owner, job);
-        let _guard = self.shared.work_lock.lock().unwrap();
+        let _guard = lock_recover(&self.shared.work_lock);
         self.shared.work_cv.notify_all();
+    }
+
+    /// Snapshot of the compile-worker panics caught so far — lets the
+    /// dispatcher attribute a missing publication mid-trace to its real
+    /// cause instead of failing a publication invariant.
+    pub(crate) fn errors(&self) -> Vec<String> {
+        lock_recover(&self.shared.errors).clone()
     }
 
     /// Hand an admitted task to its device's serving thread.
@@ -599,76 +662,112 @@ impl WallClockPool {
 
     /// Quiesce and tear down: wait for every compile to publish, stop
     /// the workers, close the serving channels, join everything, and
-    /// return the wall-clock totals.
+    /// return the wall-clock totals (including any caught worker
+    /// panics, for the dispatcher to surface).
     pub(crate) fn shutdown(self) -> WallTotals {
         {
-            let mut inflight = self.shared.inflight.lock().unwrap();
-            while !inflight.is_empty() {
-                inflight = self.shared.inflight_cv.wait(inflight).unwrap();
+            let mut inflight = lock_recover(&self.shared.inflight);
+            while !inflight.exact.is_empty() || !inflight.buckets.is_empty() {
+                inflight = self
+                    .shared
+                    .inflight_cv
+                    .wait(inflight)
+                    .unwrap_or_else(std::sync::PoisonError::into_inner);
             }
         }
         self.shared.shutdown.store(true, Ordering::Release);
         {
-            let _guard = self.shared.work_lock.lock().unwrap();
+            let _guard = lock_recover(&self.shared.work_lock);
         }
         self.shared.work_cv.notify_all();
         for h in self.compile_handles {
-            h.join().expect("compile worker panicked");
+            h.join().expect("compile worker exited cleanly");
         }
         drop(self.serve_txs); // closes the channels; threads drain + exit
         for h in self.serve_handles {
-            h.join().expect("serving thread panicked");
+            h.join().expect("serving thread exited cleanly");
         }
-        let totals = self.totals.lock().unwrap();
+        let totals = lock_recover(&self.totals);
         WallTotals {
             served_gpu_ms: totals.served_gpu_ms,
             device_busy_ms: totals.device_busy_ms.clone(),
             regressions: totals.regressions,
             queue: self.shared.queue.stats(),
             elapsed_ms: self.started.elapsed().as_secs_f64() * 1e3,
+            errors: lock_recover(&self.shared.errors).clone(),
         }
     }
 }
 
 /// Compile-worker thread body: drain own-LIFO, steal FIFO-from-longest,
-/// park briefly when the fleet is quiet.
+/// park briefly when the fleet is quiet. A panicking job is caught and
+/// recorded — the worker keeps draining, so the publication barrier and
+/// the shutdown quiesce always complete; the dispatcher raises the
+/// recorded panics as one loud error at teardown.
 fn compile_loop(worker: usize, s: &Shared) {
     loop {
         if let Some(job) = s.queue.pop(worker) {
-            run_compile(s, job);
+            let key = job.key;
+            let outcome =
+                std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| run_compile(s, job)));
+            if let Err(panic) = outcome {
+                let msg = panic_text(&panic);
+                lock_recover(&s.errors).push(format!(
+                    "compile worker {worker} panicked on graph {:#x}: {msg}",
+                    key.exact.0
+                ));
+            }
             continue;
         }
         if s.shutdown.load(Ordering::Acquire) {
             return; // queue observed empty after shutdown
         }
-        let guard = s.work_lock.lock().unwrap();
+        let guard = lock_recover(&s.work_lock);
         if s.queue.is_empty() && !s.shutdown.load(Ordering::Acquire) {
-            let _ = s.work_cv.wait_timeout(guard, Duration::from_millis(2)).unwrap();
+            let _ = s
+                .work_cv
+                .wait_timeout(guard, Duration::from_millis(2))
+                .unwrap_or_else(std::sync::PoisonError::into_inner);
         }
     }
 }
 
-/// Releases one inflight count for a graph when dropped — on the normal
-/// path *and* during unwinding, so a panicking compile worker turns
-/// into a loud join failure instead of wedging every dispatcher wait on
-/// its graph forever.
+/// Best-effort panic payload rendering for the surfaced error report.
+fn panic_text(panic: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = panic.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = panic.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// Releases one inflight count (exact + bucket) for a graph when
+/// dropped — on the normal path *and* during unwinding, so a panicking
+/// compile turns into a surfaced error instead of wedging every
+/// dispatcher wait on its graph or bucket forever.
 struct InflightRelease<'a> {
     s: &'a Shared,
-    key: u64,
+    key: PlanKey,
 }
 
 impl Drop for InflightRelease<'_> {
     fn drop(&mut self) {
         // Recover the map even if a previous panic poisoned the lock:
         // the count decrement must always happen.
-        let mut inflight = match self.s.inflight.lock() {
-            Ok(guard) => guard,
-            Err(poisoned) => poisoned.into_inner(),
-        };
-        match inflight.get_mut(&self.key) {
+        let mut inflight = lock_recover(&self.s.inflight);
+        let bucket = (self.key.shape.structure, self.key.shape.bucket);
+        match inflight.exact.get_mut(&self.key.exact.0) {
             Some(n) if *n > 1 => *n -= 1,
             _ => {
-                inflight.remove(&self.key);
+                inflight.exact.remove(&self.key.exact.0);
+            }
+        }
+        match inflight.buckets.get_mut(&bucket) {
+            Some(n) if *n > 1 => *n -= 1,
+            _ => {
+                inflight.buckets.remove(&bucket);
             }
         }
         drop(inflight);
@@ -679,11 +778,10 @@ impl Drop for InflightRelease<'_> {
 /// Execute one compile job and publish its outcome (plan + latency into
 /// the shared store/map, veto counters, publication-barrier release).
 fn run_compile(s: &Shared, job: WallJob) {
-    let WallJob { template, key, spec, fallback, fb_ms, ready_ms, kind } = job;
+    let WallJob { w, key, spec, fallback, fb_ms, ready_ms, kind } = job;
     // Publication-barrier release happens in this guard's Drop, even if
     // the pipeline below panics.
-    let _release = InflightRelease { s, key: key.0 };
-    let w = Arc::clone(&s.templates[template]);
+    let _release = InflightRelease { s, key };
     let kind = match kind {
         WallJobKind::ExploreShard { join, index } => {
             // Shard jobs publish once, from whichever worker completes
@@ -763,7 +861,7 @@ fn serve_loop(rx: mpsc::Receiver<ServeJob>, s: &Shared, totals: &Mutex<ServeTota
         for _ in 0..job.iterations {
             if !settled {
                 if let Some((key, class)) = job.fs {
-                    let published = s.latency.lock().unwrap().get(&(key.0, class)).copied();
+                    let published = lock_recover(&s.latency).get(&(key.exact.0, class)).copied();
                     if let Some(pl) = published {
                         let current = pl.latest();
                         if fs_ms != Some(current) {
@@ -789,7 +887,7 @@ fn serve_loop(rx: mpsc::Receiver<ServeJob>, s: &Shared, totals: &Mutex<ServeTota
             served += iter;
         }
         let fb_total = job.fb_ms * job.iterations as f64;
-        let mut t = totals.lock().unwrap();
+        let mut t = lock_recover(totals);
         t.served_gpu_ms += served;
         t.device_busy_ms[job.device] += served;
         if served > fb_total + 1e-9 {
@@ -830,7 +928,7 @@ mod tests {
     #[test]
     fn pool_explores_publishes_and_serves_with_hot_swap() {
         let w = ln_workload();
-        let key = GraphKey::of(&w.graph);
+        let key = PlanKey::of(&w.graph);
         let spec = DeviceSpec::v100();
         let explore = ExploreOptions::default();
         let fallback = Arc::new(optimize(&w, &spec, Tech::Xla, &explore));
@@ -842,7 +940,6 @@ mod tests {
         let pool = WallClockPool::start(
             2,
             1,
-            vec![Arc::new(w.clone())],
             Arc::clone(&store),
             Arc::clone(&latency),
             Arc::clone(&counters),
@@ -852,7 +949,7 @@ mod tests {
         );
 
         pool.enqueue_compile(WallJob {
-            template: 0,
+            w: Arc::new(w.clone()),
             key,
             spec: spec.clone(),
             fallback: Arc::clone(&fallback),
@@ -861,9 +958,11 @@ mod tests {
             kind: WallJobKind::Explore,
         });
         // The publication barrier blocks until the worker thread has
-        // inserted the plan and its latency.
-        pool.await_key(key.0);
-        let pl = latency.lock().unwrap().get(&(key.0, spec.name)).copied();
+        // inserted the plan and its latency — both the exact-key and
+        // the bucket-level waits must release.
+        pool.await_plan(key);
+        pool.await_key(key.exact.0);
+        let pl = lock_recover(&latency).get(&(key.exact.0, spec.name)).copied();
         let ms = pl.expect("latency published").latest();
         match store.lookup(key, spec.name) {
             PlanLookup::Hit { ready_ms, .. } => assert_eq!(ready_ms, 42.0),
@@ -891,9 +990,66 @@ mod tests {
         assert_eq!(totals.regressions, 0);
         assert_eq!(totals.device_busy_ms.len(), 1);
         assert!(totals.elapsed_ms > 0.0);
+        assert!(totals.errors.is_empty(), "no worker panicked: {:?}", totals.errors);
         // The explore ran on a real worker thread through the queue.
         let q = totals.queue;
         assert_eq!(q.pushes, 1);
         assert_eq!(q.local_pops + q.steals, 1);
+    }
+
+    #[test]
+    fn panicking_compile_job_surfaces_instead_of_deadlocking() {
+        // A compile worker that panics mid-job must release the
+        // publication barrier (no dispatcher deadlock), keep the pool
+        // alive, and surface the panic in the teardown totals. The
+        // ExploreShard kind with an out-of-range group index panics
+        // deterministically inside run_compile.
+        let w = ln_workload();
+        let key = PlanKey::of(&w.graph);
+        let spec = DeviceSpec::v100();
+        let explore = ExploreOptions::default();
+        let fallback = Arc::new(optimize(&w, &spec, Tech::Xla, &explore));
+        let fb_ms = iter_ms(&spec, &fallback, w.loop_kind);
+
+        let store = Arc::new(SharedPlanStore::new());
+        let latency: LatencyMap = Arc::new(Mutex::new(HashMap::new()));
+        let counters = Arc::new(FleetCounters::default());
+        let pool = WallClockPool::start(
+            2,
+            1,
+            Arc::clone(&store),
+            Arc::clone(&latency),
+            Arc::clone(&counters),
+            explore,
+            true,
+            false,
+        );
+        let join = Arc::new(ShardJoin::new(vec![]));
+        pool.enqueue_compile(WallJob {
+            w: Arc::new(w.clone()),
+            key,
+            spec: spec.clone(),
+            fallback: Arc::clone(&fallback),
+            fb_ms,
+            ready_ms: 1.0,
+            kind: WallJobKind::ExploreShard { join, index: 0 },
+        });
+        // The barrier must release even though the job panicked...
+        pool.await_plan(key);
+        // ...and the pool still runs follow-up work to completion.
+        pool.enqueue_compile(WallJob {
+            w: Arc::new(w.clone()),
+            key,
+            spec: spec.clone(),
+            fallback: Arc::clone(&fallback),
+            fb_ms,
+            ready_ms: 2.0,
+            kind: WallJobKind::Explore,
+        });
+        pool.await_plan(key);
+        assert!(matches!(store.lookup(key, spec.name), PlanLookup::Hit { .. }));
+        let totals = pool.shutdown();
+        assert_eq!(totals.errors.len(), 1, "the panic must be recorded: {:?}", totals.errors);
+        assert!(totals.errors[0].contains("panicked"), "{:?}", totals.errors);
     }
 }

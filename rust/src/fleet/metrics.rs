@@ -31,10 +31,27 @@ pub struct FleetReport {
     pub rejected: usize,
     pub exact_hits: usize,
     pub port_hits: usize,
+    /// Store lookups resolved through the shape-bucket tier: a sibling
+    /// shape's plan re-served after a launch-dim-only retune (0 unless
+    /// traffic is shape-varying).
+    pub bucket_hits: usize,
     pub misses: usize,
+    /// Distinct exact graphs the trace touched (template × shape
+    /// instances). The amortization headline: full explorations should
+    /// be sublinear in this under shape-varying traffic.
+    pub distinct_shapes: usize,
+    /// Distinct (structure, power-of-two bucket) classes the trace
+    /// touched — the reuse granularity of the bucket tier.
+    pub distinct_buckets: usize,
     pub explore_jobs: usize,
     pub port_jobs: usize,
     pub port_failures: usize,
+    /// Same-class shape-retune compile jobs (one per acted-on bucket
+    /// hit).
+    pub bucket_retunes: usize,
+    /// Shape retunes whose sibling plan could not schedule at the new
+    /// shape (fell back to a full exploration).
+    pub bucket_failures: usize,
     pub fs_vetoes: usize,
     /// Region-shard compile sub-jobs fanned out by sharded explorations
     /// (0 with `compile_shards == 1` or when no explored graph had more
@@ -128,10 +145,15 @@ impl FleetReport {
             .set("rejected", self.rejected)
             .set("exact_hits", self.exact_hits)
             .set("port_hits", self.port_hits)
+            .set("bucket_hits", self.bucket_hits)
             .set("misses", self.misses)
+            .set("distinct_shapes", self.distinct_shapes)
+            .set("distinct_buckets", self.distinct_buckets)
             .set("explore_jobs", self.explore_jobs)
             .set("port_jobs", self.port_jobs)
             .set("port_failures", self.port_failures)
+            .set("bucket_retunes", self.bucket_retunes)
+            .set("bucket_failures", self.bucket_failures)
             .set("fs_vetoes", self.fs_vetoes)
             .set("shard_jobs", self.shard_jobs)
             .set("reexplore_jobs", self.reexplore_jobs)
@@ -191,7 +213,21 @@ impl FleetReport {
             "plan-store portability hits".to_string(),
             self.port_hits.to_string(),
         ]);
+        t.row(vec![
+            "plan-store shape-bucket hits".to_string(),
+            self.bucket_hits.to_string(),
+        ]);
         t.row(vec!["plan-store misses".to_string(), self.misses.to_string()]);
+        if self.bucket_hits > 0 || self.distinct_shapes > self.misses {
+            t.row(vec![
+                "distinct shapes / buckets served".to_string(),
+                format!("{} / {}", self.distinct_shapes, self.distinct_buckets),
+            ]);
+            t.row(vec![
+                "shape retunes (failed)".to_string(),
+                format!("{} ({})", self.bucket_retunes, self.bucket_failures),
+            ]);
+        }
         t.row(vec!["full explorations".to_string(), self.explore_jobs.to_string()]);
         t.row(vec![
             "region-shard compile sub-jobs".to_string(),
@@ -292,10 +328,15 @@ mod tests {
             rejected: 1,
             exact_hits: 4,
             port_hits: 2,
+            bucket_hits: 2,
             misses: 3,
+            distinct_shapes: 5,
+            distinct_buckets: 3,
             explore_jobs: 3,
             port_jobs: 2,
             port_failures: 0,
+            bucket_retunes: 2,
+            bucket_failures: 0,
             fs_vetoes: 1,
             shard_jobs: 4,
             reexplore_jobs: 2,
@@ -344,6 +385,11 @@ mod tests {
             "wall_elapsed_ms",
             "tasks",
             "port_hits",
+            "bucket_hits",
+            "distinct_shapes",
+            "distinct_buckets",
+            "bucket_retunes",
+            "bucket_failures",
             "regressions",
             "wait_p50_ms",
             "wait_p99_ms",
@@ -362,6 +408,8 @@ mod tests {
         }
         assert_eq!(j.get("regressions").and_then(|v| v.as_usize()), Some(0));
         assert_eq!(j.get("shard_jobs").and_then(|v| v.as_usize()), Some(4));
+        assert_eq!(j.get("bucket_hits").and_then(|v| v.as_usize()), Some(2));
+        assert_eq!(j.get("distinct_shapes").and_then(|v| v.as_usize()), Some(5));
     }
 
     #[test]
@@ -379,6 +427,8 @@ mod tests {
     fn render_mentions_portability_and_percentiles() {
         let text = report().render();
         assert!(text.contains("portability"));
+        assert!(text.contains("shape-bucket hits"));
+        assert!(text.contains("distinct shapes / buckets"));
         assert!(text.contains("p50/p99"));
         assert!(text.contains("V100"));
         assert!(text.contains("cost-model drift"));

@@ -14,13 +14,19 @@
 //!   as one queue sub-job per region group with a join barrier, so the
 //!   pool parallelizes *within* one graph
 //!   ([`crate::explorer::regions`]).
-//! * [`store`] — the shared cross-device plan store: a plan explored on
-//!   one device class is *ported* to another by re-running only the
-//!   §4.2 launch-dimension tuner ([`crate::pipeline::port_program`]).
+//! * [`store`] — the shared cross-device, shape-polymorphic plan store
+//!   with three reuse tiers: exact hit, cross-class *port* (re-run only
+//!   the §4.2 launch-dimension tuner on the new device,
+//!   [`crate::pipeline::port_program`]), and same-class *bucket hit* —
+//!   a plan explored at a sibling shape inside the same power-of-two
+//!   shape bucket is re-lowered at the new shape
+//!   ([`crate::pipeline::reshape_program`]).
 //! * [`admission`] — admission control (backlog rejection) and compile
 //!   backpressure (serve fallback-only under saturation).
 //! * [`sim`] — deterministic seeded traffic traces at the paper's task
-//!   scale.
+//!   scale; with [`TrafficConfig::dynamic_shapes`] every task draws a
+//!   (batch, seq) from its template's seeded shape distribution and the
+//!   template population becomes shape-scalable [`TemplateFamily`]s.
 //! * [`service`] — [`FleetService`]: replays a trace through the real
 //!   optimization pipeline on either executor.
 //! * [`executor`] — the [`ExecutorKind`] seam: the deterministic
@@ -57,5 +63,23 @@ pub use metrics::{DeviceUtilization, FleetReport};
 pub use queue::{owner_hash, QueueStats, WorkStealingQueue};
 pub use registry::{DeviceId, DeviceRegistry, RegisteredDevice};
 pub use service::{FleetOptions, FleetService};
-pub use sim::{build_templates, generate_trace, FleetTask, TrafficConfig};
-pub use store::{PlanLookup, SharedPlanStore, StoreStats};
+pub use sim::{
+    build_template_families, build_templates, generate_trace, FleetTask, ModelFamily, ShapeDist,
+    TaskShape, TemplateFamily, TrafficConfig,
+};
+pub use store::{PlanKey, PlanLookup, SharedPlanStore, StoreStats};
+
+use std::sync::{Mutex, MutexGuard};
+
+/// Lock a fleet-internal mutex, recovering the guard when a panicking
+/// thread poisoned it. Every critical section behind these locks is a
+/// single collection operation that cannot be observed half-done, so
+/// the data stays consistent and recovery is sound. Without this, one
+/// poisoned lock cascades: other compile workers panic on `unwrap()`,
+/// stop draining the queue, and the dispatcher's publication-barrier
+/// wait never releases — a silent deadlock instead of a surfaced error
+/// (worker panics are collected and re-raised on the dispatcher at
+/// shutdown; see [`executor`]).
+pub(crate) fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}

@@ -27,6 +27,7 @@
 //! only one thread drives the queue); the lost/duplicate-free guarantee
 //! under contention is exercised by the multi-threaded stress test.
 
+use super::lock_recover;
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
@@ -41,7 +42,11 @@ pub struct QueueStats {
 
 /// Per-worker deques with LIFO local pop and FIFO stealing. Shareable:
 /// all methods take `&self`, so one instance can sit behind an `Arc`
-/// and be driven by many worker threads at once.
+/// and be driven by many worker threads at once. Deque locks recover
+/// from poisoning ([`super::lock_recover`]): every critical section is
+/// one `VecDeque` operation, so the structure stays consistent, and a
+/// worker that panicked mid-job must not stop its peers from draining
+/// the queue (the compile pool's publication barrier depends on it).
 #[derive(Debug)]
 pub struct WorkStealingQueue<T> {
     deques: Vec<Mutex<VecDeque<T>>>,
@@ -70,7 +75,7 @@ impl<T> WorkStealingQueue<T> {
     /// Enqueue an item on `worker`'s deque (index wraps).
     pub fn push(&self, worker: usize, item: T) {
         let w = worker % self.deques.len();
-        self.deques[w].lock().unwrap().push_back(item);
+        lock_recover(&self.deques[w]).push_back(item);
         self.pushes.fetch_add(1, Ordering::Relaxed);
     }
 
@@ -80,7 +85,7 @@ impl<T> WorkStealingQueue<T> {
     /// when a full scan observed every deque empty.
     pub fn pop(&self, worker: usize) -> Option<T> {
         let w = worker % self.deques.len();
-        if let Some(item) = self.deques[w].lock().unwrap().pop_back() {
+        if let Some(item) = lock_recover(&self.deques[w]).pop_back() {
             self.local_pops.fetch_add(1, Ordering::Relaxed);
             return Some(item);
         }
@@ -90,7 +95,7 @@ impl<T> WorkStealingQueue<T> {
         loop {
             let mut victim: Option<(usize, usize)> = None; // (index, len)
             for (i, dq) in self.deques.iter().enumerate() {
-                let len = dq.lock().unwrap().len();
+                let len = lock_recover(dq).len();
                 if len == 0 {
                     continue;
                 }
@@ -100,7 +105,7 @@ impl<T> WorkStealingQueue<T> {
                 }
             }
             let (v, _) = victim?;
-            if let Some(item) = self.deques[v].lock().unwrap().pop_front() {
+            if let Some(item) = lock_recover(&self.deques[v]).pop_front() {
                 self.steals.fetch_add(1, Ordering::Relaxed);
                 return Some(item);
             }
@@ -109,7 +114,7 @@ impl<T> WorkStealingQueue<T> {
 
     /// Total queued items across all deques.
     pub fn len(&self) -> usize {
-        self.deques.iter().map(|d| d.lock().unwrap().len()).sum()
+        self.deques.iter().map(|d| lock_recover(d).len()).sum()
     }
 
     /// True when no work is queued anywhere.
@@ -119,7 +124,7 @@ impl<T> WorkStealingQueue<T> {
 
     /// Backlog of one worker's deque.
     pub fn backlog(&self, worker: usize) -> usize {
-        self.deques[worker % self.deques.len()].lock().unwrap().len()
+        lock_recover(&self.deques[worker % self.deques.len()]).len()
     }
 
     /// Accounting snapshot. Exact at quiescence (no concurrent pushes

@@ -3,10 +3,10 @@
 //!
 //! One [`FleetService`] owns a [`DeviceRegistry`], a bounded
 //! compile-worker pool fed through a [`WorkStealingQueue`], a
-//! [`SharedPlanStore`] making plans portable across device classes, and
-//! an [`AdmissionController`]. A seeded task trace (see [`super::sim`])
-//! is replayed through one of two executors (see [`ExecutorKind`] and
-//! [`super::executor`]):
+//! [`SharedPlanStore`] making plans portable across device classes *and*
+//! across sibling shapes, and an [`AdmissionController`]. A seeded task
+//! trace (see [`super::sim`]) is replayed through one of two executors
+//! (see [`ExecutorKind`] and [`super::executor`]):
 //!
 //! * **Virtual time** (default): serving latencies come from the
 //!   per-device timing simulator, compile latencies from a
@@ -21,20 +21,25 @@
 //!   virtual replay's; measured latency fields differ.
 //!
 //! Either way, every *program* on the path (fallbacks, explored plans,
-//! ported plans) is produced by the real pipeline: `baselines::xla`,
-//! `explorer::explore`, `codegen::tuner`, `pipeline::port_program`, and
-//! the coordinator's never-negative guard.
+//! ported plans, shape-retuned plans) is produced by the real pipeline:
+//! `baselines::xla`, `explorer::explore`, `codegen::tuner`,
+//! `pipeline::port_program`, `pipeline::reshape_program`, and the
+//! coordinator's never-negative guard.
 //!
 //! Per task the flow mirrors §6/§7.2 at fleet scale:
 //!
-//! 1. **Place** on the least-loaded serving slot (mixed V100/T4).
-//! 2. **Admit** — reject on deep backlog; under compile saturation
+//! 1. **Instantiate** the task's template at its requested
+//!    (batch, seq) — shape-polymorphic traffic makes this a distinct
+//!    graph per shape ([`TemplateFamily`]).
+//! 2. **Place** on the least-loaded serving slot (mixed V100/T4).
+//! 3. **Admit** — reject on deep backlog; under compile saturation
 //!    serve the fallback without enqueueing new optimization work.
-//! 3. **Resolve a plan** — exact store hit (serve optimized, possibly
-//!    hot-swapping when the producing compile finishes mid-task), a
-//!    cross-class *port* (launch-dim re-tune only), or a full
-//!    exploration on the worker pool.
-//! 4. **Serve** iterations, fallback until the plan is ready,
+//! 4. **Resolve a plan** through the store's three reuse tiers — exact
+//!    hit (serve optimized, possibly hot-swapping when the producing
+//!    compile finishes mid-task), a cross-class *port* or same-class
+//!    shape-bucket *retune* (launch-dim re-tune only, ~10% of a
+//!    compile), or a full exploration on the worker pool.
+//! 5. **Serve** iterations, fallback until the plan is ready,
 //!    optimized after — never-negative guarded, so a task can never
 //!    regress past its fallback.
 
@@ -44,20 +49,21 @@ use super::executor::{
     publish_reexplored, shard_partial, ExecutorKind, FleetCounters, LatencyMap, PublishedLatency,
     ServeJob, ShardJoin, WallClockPool, WallJob, WallJobKind,
 };
+use super::lock_recover;
 use super::metrics::{DeviceUtilization, FleetReport};
 use super::queue::{owner_hash, QueueStats, WorkStealingQueue};
 use super::registry::DeviceRegistry;
-use super::sim::FleetTask;
-use super::store::{PlanLookup, SharedPlanStore};
+use super::sim::{FleetTask, TaskShape, TemplateFamily};
+use super::store::{PlanKey, PlanLookup, SharedPlanStore};
 use crate::codegen::calibrate::{self, Calibrator};
-use crate::coordinator::{GraphKey, ServiceMetrics, Session};
+use crate::coordinator::{ServiceMetrics, Session};
 use crate::explorer::{regions, ExploreOptions};
 use crate::gpu::DeviceSpec;
 use crate::pipeline::{self, OptimizedProgram, Tech};
 use crate::util::summarize;
 use crate::workloads::Workload;
 use std::collections::{HashMap, HashSet};
-use std::sync::atomic::Ordering;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 /// Fleet configuration.
@@ -78,8 +84,9 @@ pub struct FleetOptions {
     /// `base + per_op × |V|` ms of worker time.
     pub explore_cost_base_ms: f64,
     pub explore_cost_per_op_ms: f64,
-    /// A cross-class port (launch-dim re-tune only) costs this fraction
-    /// of the full exploration.
+    /// A launch-dimension-only retune — cross-class port or same-class
+    /// shape-bucket retune — costs this fraction of the full
+    /// exploration.
     pub port_cost_frac: f64,
     /// Region-shard fan-out for full explorations: a graph whose
     /// fusible subgraph splits into multiple independent regions is
@@ -139,11 +146,58 @@ enum FsLatency {
     Pending { key: u64, class: &'static str },
 }
 
+/// One instantiated (template, shape): the workload the fleet serves
+/// plus its two-level plan-store identity.
+#[derive(Clone)]
+struct Instance {
+    w: Arc<Workload>,
+    key: PlanKey,
+}
+
+/// Which launch-dimension-only reuse tier a retune job belongs to. The
+/// two tiers share one compile path ([`FleetService::run_retune`]) and
+/// differ only in the lowering entry point and the counters they feed.
+#[derive(Debug, Clone, Copy)]
+enum RetuneTier {
+    /// Cross-class port of the exact graph
+    /// ([`pipeline::port_program`]).
+    Port,
+    /// Same-structure sibling-shape retune inside one power-of-two
+    /// bucket ([`pipeline::reshape_program`]).
+    Bucket,
+}
+
+impl RetuneTier {
+    /// The dispatcher-side lowering for this tier (launch dims only;
+    /// feasibility re-checked on the target class/shape).
+    fn lower(
+        self,
+        w: &Workload,
+        source: &OptimizedProgram,
+        spec: &DeviceSpec,
+    ) -> Option<OptimizedProgram> {
+        match self {
+            RetuneTier::Port => pipeline::port_program(&w.graph, source, spec, w.loop_kind),
+            RetuneTier::Bucket => pipeline::reshape_program(&w.graph, source, spec, w.loop_kind),
+        }
+    }
+
+    /// (jobs, failures) counters this tier reports into.
+    fn counters(self, c: &FleetCounters) -> (&AtomicUsize, &AtomicUsize) {
+        match self {
+            RetuneTier::Port => (&c.port_jobs, &c.port_failures),
+            RetuneTier::Bucket => (&c.bucket_jobs, &c.bucket_failures),
+        }
+    }
+}
+
 /// The multi-device serving layer.
 pub struct FleetService {
     opts: FleetOptions,
-    templates: Vec<Arc<Workload>>,
-    template_keys: Vec<GraphKey>,
+    families: Vec<TemplateFamily>,
+    /// (template, shape) → instantiated workload + plan key, built
+    /// lazily on first arrival and reused for every sibling task.
+    instances: HashMap<(usize, TaskShape), Instance>,
     store: Arc<SharedPlanStore>,
     admission: AdmissionController,
     queue: WorkStealingQueue<CompileJob>,
@@ -160,13 +214,13 @@ pub struct FleetService {
     /// aggregated fleet-wide in the report). `Arc` so wall-clock
     /// serving sessions can record into them from their device thread.
     device_metrics: Vec<Arc<ServiceMetrics>>,
-    /// (template, class) → fallback program + per-iteration ms.
-    fallbacks: HashMap<(usize, &'static str), (Arc<OptimizedProgram>, f64)>,
+    /// Exact graph key + class → fallback program + per-iteration ms.
+    fallbacks: HashMap<(u64, &'static str), (Arc<OptimizedProgram>, f64)>,
     /// (graph key, class) → per-iteration ms of the stored program;
     /// shared with the wall-clock pool, where an entry's appearance is
     /// the publication signal.
     latency: LatencyMap,
-    /// Explore/port/veto accounting shared with the compile pool.
+    /// Explore/port/retune/veto accounting shared with the compile pool.
     counters: Arc<FleetCounters>,
     /// Online cost-model calibration state. Written only by the
     /// dispatcher — in arrival order, at per-graph publication barriers
@@ -190,11 +244,16 @@ pub struct FleetService {
     served_gpu_ms: f64,
     fallback_gpu_ms: f64,
     waits_ms: Vec<f64>,
-    /// Per compile job (explore or port): enqueue → virtual ready, join
-    /// barrier included for sharded explorations. Virtual bookkeeping
-    /// in both executors, so the reported percentiles are
-    /// executor-invariant.
+    /// Per compile job (explore, port or shape retune): enqueue →
+    /// virtual ready, join barrier included for sharded explorations.
+    /// Virtual bookkeeping in both executors, so the reported
+    /// percentiles are executor-invariant.
     compile_ms: Vec<f64>,
+    /// Distinct exact graphs the trace touched (arrivals, pre-admission
+    /// — deterministic across executors).
+    seen_graphs: HashSet<u64>,
+    /// Distinct (structure, bucket) classes the trace touched.
+    seen_buckets: HashSet<(u64, u64)>,
     makespan_ms: f64,
     /// Queue accounting of the torn-down wall-clock pool, when one ran.
     wall_queue: Option<QueueStats>,
@@ -202,14 +261,19 @@ pub struct FleetService {
 }
 
 impl FleetService {
-    /// Build a fleet over a template population (tasks reference
-    /// templates by index; see [`super::sim::build_templates`]).
+    /// Build a fleet over a fixed-shape template population (tasks
+    /// reference templates by index; see [`super::sim::build_templates`]).
     pub fn new(opts: FleetOptions, templates: Vec<Workload>) -> Self {
+        Self::with_families(opts, templates.into_iter().map(TemplateFamily::Fixed).collect())
+    }
+
+    /// Build a fleet over a (possibly shape-polymorphic) template
+    /// family population (see [`super::sim::build_template_families`]).
+    pub fn with_families(opts: FleetOptions, families: Vec<TemplateFamily>) -> Self {
         assert!(!opts.registry.is_empty(), "fleet needs at least one device");
         assert!(opts.compile_workers >= 1, "fleet needs at least one compile worker");
         assert!(opts.compile_shards >= 1, "compile fan-out needs at least one shard");
-        assert!(!templates.is_empty(), "fleet needs at least one template");
-        let template_keys = templates.iter().map(|w| GraphKey::of(&w.graph)).collect();
+        assert!(!families.is_empty(), "fleet needs at least one template");
         let slots = opts
             .registry
             .devices()
@@ -240,11 +304,13 @@ impl FleetService {
             fallback_gpu_ms: 0.0,
             waits_ms: Vec::new(),
             compile_ms: Vec::new(),
+            seen_graphs: HashSet::new(),
+            seen_buckets: HashSet::new(),
             makespan_ms: 0.0,
             wall_queue: None,
             wall_elapsed_ms: 0.0,
-            templates: templates.into_iter().map(Arc::new).collect(),
-            template_keys,
+            instances: HashMap::new(),
+            families,
             store: Arc::new(SharedPlanStore::new()),
             opts,
         }
@@ -253,13 +319,13 @@ impl FleetService {
     /// Replay a trace (must be sorted by arrival) and report. Under
     /// [`ExecutorKind::WallClock`] this spins up the compile-worker and
     /// per-device serving threads for the duration of the trace and
-    /// quiesces them before reporting.
+    /// quiesces them before reporting; any compile-worker panic caught
+    /// during the run is surfaced here as one dispatcher-side error.
     pub fn run_trace(&mut self, trace: &[FleetTask]) -> FleetReport {
         if let ExecutorKind::WallClock { threads } = self.opts.executor {
             self.pool = Some(WallClockPool::start(
                 threads,
                 self.opts.registry.len(),
-                self.templates.clone(),
                 Arc::clone(&self.store),
                 Arc::clone(&self.latency),
                 Arc::clone(&self.counters),
@@ -279,6 +345,11 @@ impl FleetService {
         }
         if let Some(pool) = self.pool.take() {
             let totals = pool.shutdown();
+            assert!(
+                totals.errors.is_empty(),
+                "wall-clock compile workers panicked: {}",
+                totals.errors.join("; ")
+            );
             self.served_gpu_ms = totals.served_gpu_ms;
             self.device_busy_ms = totals.device_busy_ms;
             self.regressions = totals.regressions;
@@ -293,20 +364,38 @@ impl FleetService {
         &self.store
     }
 
+    /// Instantiate (or fetch the cached instance of) a template at a
+    /// shape. Deterministic per (template, shape), so both executors
+    /// resolve identical graphs and keys.
+    fn instance(&mut self, template: usize, shape: TaskShape) -> Instance {
+        if let Some(inst) = self.instances.get(&(template, shape)) {
+            return inst.clone();
+        }
+        let w = Arc::new(self.families[template].instantiate(shape));
+        let key = PlanKey::of(&w.graph);
+        let inst = Instance { w, key };
+        self.instances.insert((template, shape), inst.clone());
+        inst
+    }
+
     fn explore_cost_ms(&self, w: &Workload) -> f64 {
         self.opts.explore_cost_base_ms + self.opts.explore_cost_per_op_ms * w.graph.len() as f64
     }
 
-    /// XLA fallback program + per-iteration ms for (template, class) —
+    /// XLA fallback program + per-iteration ms for (graph, class) —
     /// computed once, shared by every instance of the class.
-    fn fallback_for(&mut self, template: usize, spec: &DeviceSpec) -> (Arc<OptimizedProgram>, f64) {
-        if let Some(v) = self.fallbacks.get(&(template, spec.name)) {
+    fn fallback_for(
+        &mut self,
+        w: &Arc<Workload>,
+        key: PlanKey,
+        spec: &DeviceSpec,
+    ) -> (Arc<OptimizedProgram>, f64) {
+        if let Some(v) = self.fallbacks.get(&(key.exact.0, spec.name)) {
             return v.clone();
         }
-        let w = Arc::clone(&self.templates[template]);
-        let prog = Arc::new(pipeline::optimize(&w, spec, Tech::Xla, &self.opts.explore));
+        let prog = Arc::new(pipeline::optimize(w, spec, Tech::Xla, &self.opts.explore));
         let ms = iter_ms(spec, &prog, w.loop_kind);
-        self.fallbacks.insert((template, spec.name), (Arc::clone(&prog), ms));
+        self.fallbacks.insert((key.exact.0, spec.name), (Arc::clone(&prog), ms));
         (prog, ms)
     }
 
@@ -321,13 +410,14 @@ impl FleetService {
     fn schedule_compile(
         &mut self,
         enqueue_at: f64,
-        key: GraphKey,
+        key: PlanKey,
         class: &'static str,
         cost_ms: f64,
     ) -> f64 {
         if self.pool.is_none() {
-            let owner = (owner_hash(key.0, class) % self.opts.compile_workers as u64) as usize;
-            self.queue.push(owner, CompileJob { key: key.0, class });
+            let owner =
+                (owner_hash(key.exact.0, class) % self.opts.compile_workers as u64) as usize;
+            self.queue.push(owner, CompileJob { key: key.exact.0, class });
         }
         let mut w = 0;
         for i in 1..self.worker_free_ms.len() {
@@ -337,7 +427,7 @@ impl FleetService {
         }
         if self.pool.is_none() {
             let job = self.queue.pop(w).expect("job just queued");
-            debug_assert_eq!((job.key, job.class), (key.0, class));
+            debug_assert_eq!((job.key, job.class), (key.exact.0, class));
         }
         let start = enqueue_at.max(self.worker_free_ms[w]);
         let finish = start + cost_ms;
@@ -356,29 +446,27 @@ impl FleetService {
     /// exploration was handed to a wall-clock worker).
     fn run_explore(
         &mut self,
-        template: usize,
+        w: &Arc<Workload>,
         spec: &DeviceSpec,
-        key: GraphKey,
+        key: PlanKey,
         fallback: &Arc<OptimizedProgram>,
         fb_ms: f64,
         enqueue_at: f64,
     ) -> (f64, FsLatency) {
-        let w = Arc::clone(&self.templates[template]);
         if self.opts.compile_shards > 1 {
             let groups =
                 regions::shard_regions(regions::partition(&w.graph), self.opts.compile_shards);
             if groups.len() > 1 {
-                return self
-                    .run_explore_sharded(template, spec, key, fallback, fb_ms, enqueue_at, groups);
+                return self.run_explore_sharded(w, spec, key, fallback, fb_ms, enqueue_at, groups);
             }
         }
-        let cost = self.explore_cost_ms(&w);
+        let cost = self.explore_cost_ms(w);
         let ready = self.schedule_compile(enqueue_at, key, spec.name, cost);
         self.compile_ms.push(ready - enqueue_at);
         self.counters.explore_jobs.fetch_add(1, Ordering::Relaxed);
         if let Some(pool) = self.pool.as_ref() {
             pool.enqueue_compile(WallJob {
-                template,
+                w: Arc::clone(w),
                 key,
                 spec: spec.clone(),
                 fallback: Arc::clone(fallback),
@@ -386,14 +474,14 @@ impl FleetService {
                 ready_ms: ready,
                 kind: WallJobKind::Explore,
             });
-            return (ready, FsLatency::Pending { key: key.0, class: spec.name });
+            return (ready, FsLatency::Pending { key: key.exact.0, class: spec.name });
         }
         // Vetoed/crashed compiles (None) pin the fallback for this
         // class so later tasks skip the re-tuning attempt; either way
         // the outcome goes through the produce/publish path shared with
         // the wall-clock workers.
         let candidate = produce_candidate(
-            &w,
+            w,
             spec,
             &self.opts.explore,
             self.opts.never_negative,
@@ -401,7 +489,7 @@ impl FleetService {
             WallJobKind::Explore,
         );
         let ms = guard_and_publish(
-            &w,
+            w,
             spec,
             key,
             candidate,
@@ -425,15 +513,14 @@ impl FleetService {
     #[allow(clippy::too_many_arguments)]
     fn run_explore_sharded(
         &mut self,
-        template: usize,
+        w: &Arc<Workload>,
         spec: &DeviceSpec,
-        key: GraphKey,
+        key: PlanKey,
         fallback: &Arc<OptimizedProgram>,
         fb_ms: f64,
         enqueue_at: f64,
         groups: Vec<Vec<regions::Region>>,
     ) -> (f64, FsLatency) {
-        let w = Arc::clone(&self.templates[template]);
         // Apportion the monolithic cost basis (base + per_op × |V|, the
         // same basis `explore_cost_ms` charges) across the shards by
         // their region-op share: sharding parallelizes the modeled
@@ -455,7 +542,7 @@ impl FleetService {
             let join = Arc::new(ShardJoin::new(groups));
             for index in 0..join.groups.len() {
                 pool.enqueue_compile(WallJob {
-                    template,
+                    w: Arc::clone(w),
                     key,
                     spec: spec.clone(),
                     fallback: Arc::clone(fallback),
@@ -464,14 +551,14 @@ impl FleetService {
                     kind: WallJobKind::ExploreShard { join: Arc::clone(&join), index },
                 });
             }
-            return (ready, FsLatency::Pending { key: key.0, class: spec.name });
+            return (ready, FsLatency::Pending { key: key.exact.0, class: spec.name });
         }
         let partials = groups
             .iter()
-            .map(|group| shard_partial(&w, spec, &self.opts.explore, group))
+            .map(|group| shard_partial(w, spec, &self.opts.explore, group))
             .collect();
         let candidate = produce_sharded_candidate(
-            &w,
+            w,
             spec,
             &self.opts.explore,
             self.opts.never_negative,
@@ -479,7 +566,7 @@ impl FleetService {
             partials,
         );
         let ms = guard_and_publish(
-            &w,
+            w,
             spec,
             key,
             candidate,
@@ -493,71 +580,91 @@ impl FleetService {
         (ready, FsLatency::Known(PublishedLatency::first(ms)))
     }
 
-    /// Cross-class port: re-tune launch dims only (a fraction of the
-    /// exploration cost), guard, store. The launch-dim lowering itself
-    /// stays on the dispatcher in both executors (it is the cheap ~10%
-    /// and its outcome steers the decision stream); the wall-clock
-    /// executor offloads the guard + publication. Falls back to a full
-    /// exploration when the plan cannot schedule on the target class.
+    /// Shared tail of the two launch-dimension-only retune paths
+    /// (cross-class port and same-class shape retune): the dispatcher
+    /// already lowered `ported`; the §7.2 never-negative guard +
+    /// publication run on a compile worker under wall clock, inline
+    /// under virtual time — identically either way.
     #[allow(clippy::too_many_arguments)]
-    fn run_port(
+    fn finish_retune(
         &mut self,
-        template: usize,
+        w: &Arc<Workload>,
         spec: &DeviceSpec,
-        key: GraphKey,
+        key: PlanKey,
+        ported: OptimizedProgram,
+        fallback: &Arc<OptimizedProgram>,
+        fb_ms: f64,
+        ready: f64,
+    ) -> (f64, FsLatency) {
+        if let Some(pool) = self.pool.as_ref() {
+            pool.enqueue_compile(WallJob {
+                w: Arc::clone(w),
+                key,
+                spec: spec.clone(),
+                fallback: Arc::clone(fallback),
+                fb_ms,
+                ready_ms: ready,
+                kind: WallJobKind::GuardPort { ported },
+            });
+            return (ready, FsLatency::Pending { key: key.exact.0, class: spec.name });
+        }
+        let accepted = produce_candidate(
+            w,
+            spec,
+            &self.opts.explore,
+            self.opts.never_negative,
+            fallback,
+            WallJobKind::GuardPort { ported },
+        );
+        let ms = guard_and_publish(
+            w,
+            spec,
+            key,
+            accepted,
+            fallback,
+            fb_ms,
+            ready,
+            &self.store,
+            &self.latency,
+            &self.counters,
+        );
+        (ready, FsLatency::Known(PublishedLatency::first(ms)))
+    }
+
+    /// One launch-dimension-only retune — cross-class port or
+    /// same-class shape retune, selected by `tier` — for a fraction of
+    /// the exploration cost: lower on the dispatcher (the cheap ~10%
+    /// whose outcome steers the decision stream), then guard + publish
+    /// through [`Self::finish_retune`] (on a compile worker under wall
+    /// clock). Falls back to a full exploration when the source plan
+    /// cannot schedule on the target class/shape.
+    #[allow(clippy::too_many_arguments)]
+    fn run_retune(
+        &mut self,
+        tier: RetuneTier,
+        w: &Arc<Workload>,
+        spec: &DeviceSpec,
+        key: PlanKey,
         source: &Arc<OptimizedProgram>,
         available_ms: f64,
         fallback: &Arc<OptimizedProgram>,
         fb_ms: f64,
         now: f64,
     ) -> (f64, FsLatency) {
-        let w = Arc::clone(&self.templates[template]);
-        let cost = self.explore_cost_ms(&w) * self.opts.port_cost_frac;
+        let cost = self.explore_cost_ms(w) * self.opts.port_cost_frac;
         let enqueue_at = now.max(available_ms);
         let ready = self.schedule_compile(enqueue_at, key, spec.name, cost);
         self.compile_ms.push(ready - enqueue_at);
-        self.counters.port_jobs.fetch_add(1, Ordering::Relaxed);
-        match pipeline::port_program(&w.graph, source, spec, w.loop_kind) {
-            Some(ported) => {
-                if let Some(pool) = self.pool.as_ref() {
-                    pool.enqueue_compile(WallJob {
-                        template,
-                        key,
-                        spec: spec.clone(),
-                        fallback: Arc::clone(fallback),
-                        fb_ms,
-                        ready_ms: ready,
-                        kind: WallJobKind::GuardPort { ported },
-                    });
-                    return (ready, FsLatency::Pending { key: key.0, class: spec.name });
-                }
-                let accepted = produce_candidate(
-                    &w,
-                    spec,
-                    &self.opts.explore,
-                    self.opts.never_negative,
-                    fallback,
-                    WallJobKind::GuardPort { ported },
-                );
-                let ms = guard_and_publish(
-                    &w,
-                    spec,
-                    key,
-                    accepted,
-                    fallback,
-                    fb_ms,
-                    ready,
-                    &self.store,
-                    &self.latency,
-                    &self.counters,
-                );
-                (ready, FsLatency::Known(PublishedLatency::first(ms)))
-            }
+        let counters = Arc::clone(&self.counters);
+        let (jobs, failures) = tier.counters(&counters);
+        jobs.fetch_add(1, Ordering::Relaxed);
+        match tier.lower(w, source, spec) {
+            Some(ported) => self.finish_retune(w, spec, key, ported, fallback, fb_ms, ready),
             None => {
-                // Unschedulable on this class: pay the full exploration,
-                // starting where the failed port left off.
-                self.counters.port_failures.fetch_add(1, Ordering::Relaxed);
-                self.run_explore(template, spec, key, fallback, fb_ms, ready)
+                // Unschedulable on the target: pay the full exploration,
+                // starting where the failed retune left off.
+                failures.fetch_add(1, Ordering::Relaxed);
+                self.run_explore(w, spec, key, fallback, fb_ms, ready)
             }
         }
     }
@@ -579,16 +686,16 @@ impl FleetService {
     #[allow(clippy::too_many_arguments)]
     fn calibrate_on_hit(
         &mut self,
-        template: usize,
+        w: &Arc<Workload>,
         spec: &DeviceSpec,
-        key: GraphKey,
+        key: PlanKey,
         prog: &Arc<OptimizedProgram>,
         measured_ms: f64,
         fallback: &Arc<OptimizedProgram>,
         fb_ms: f64,
         now: f64,
     ) {
-        let id = (key.0, spec.name);
+        let id = (key.exact.0, spec.name);
         if self.sampled.insert(id) {
             // First observation of this served program: judge drift
             // under the class params as of previous publications, then
@@ -600,7 +707,6 @@ impl FleetService {
             if ratio > bound || ratio * bound < 1.0 {
                 self.drift_pending.insert(id);
             }
-            let w = Arc::clone(&self.templates[template]);
             let samples = calibrate::program_samples(spec, prog, w.loop_kind);
             self.calibrator.record(spec.name, samples, measured_ms);
         }
@@ -620,7 +726,7 @@ impl FleetService {
         }
         self.drift_pending.remove(&id);
         self.reexplored.insert(id);
-        self.run_reexplore(template, spec, key, fallback, fb_ms, now);
+        self.run_reexplore(w, spec, key, fallback, fb_ms, now);
     }
 
     /// Drift-triggered re-exploration: a full compile job under the
@@ -637,23 +743,22 @@ impl FleetService {
     /// one queue slot per re-exploration keeps the accounting simple.
     fn run_reexplore(
         &mut self,
-        template: usize,
+        w: &Arc<Workload>,
         spec: &DeviceSpec,
-        key: GraphKey,
+        key: PlanKey,
         fallback: &Arc<OptimizedProgram>,
         fb_ms: f64,
         now: f64,
     ) {
-        let w = Arc::clone(&self.templates[template]);
         let mut explore = self.opts.explore.clone();
         explore.cost = self.calibrator.params_for(spec.name);
-        let cost_ms = self.explore_cost_ms(&w);
+        let cost_ms = self.explore_cost_ms(w);
         let ready = self.schedule_compile(now, key, spec.name, cost_ms);
         self.compile_ms.push(ready - now);
         self.counters.reexplore_jobs.fetch_add(1, Ordering::Relaxed);
         if let Some(pool) = self.pool.as_ref() {
             pool.enqueue_compile(WallJob {
-                template,
+                w: Arc::clone(w),
                 key,
                 spec: spec.clone(),
                 fallback: Arc::clone(fallback),
@@ -663,10 +768,9 @@ impl FleetService {
             });
             return;
         }
-        let candidate =
-            produce_reexplored(&w, spec, &explore, self.opts.never_negative, fallback);
+        let candidate = produce_reexplored(w, spec, &explore, self.opts.never_negative, fallback);
         publish_reexplored(
-            &w,
+            w,
             spec,
             key,
             candidate,
@@ -682,7 +786,17 @@ impl FleetService {
         let now = task.arrival_ms;
         self.submitted += 1;
 
-        // 1. Place: least-loaded serving slot fleet-wide (earliest
+        // 1. Instantiate the template at the task's requested shape
+        // (cached per (template, shape); static traffic always resolves
+        // the one fixed instance) and account the distinct-shape /
+        // distinct-bucket census on every arrival — pre-admission, so
+        // it is executor-invariant by construction.
+        let inst = self.instance(task.template, task.shape);
+        let key = inst.key;
+        self.seen_graphs.insert(key.exact.0);
+        self.seen_buckets.insert((key.shape.structure, key.shape.bucket));
+
+        // 2. Place: least-loaded serving slot fleet-wide (earliest
         // free; ties resolve to the lowest device/slot index). Both
         // executors place on the virtual slot clocks — trace arrivals
         // are virtual timestamps either way, which is what makes the
@@ -698,16 +812,16 @@ impl FleetService {
         let start = now.max(self.slots[best_d][best_s]);
         let wait = start - now;
         let spec = self.opts.registry.devices()[best_d].spec.clone();
-        let key = self.template_keys[task.template];
 
         // Wall clock: publication barrier — wait out any in-flight
-        // compile of this same graph so the store lookup below sees
-        // exactly what the virtual replay would.
+        // compile of this same graph *or a bucket sibling* so the store
+        // lookup below sees exactly what the virtual replay would
+        // (including shape-port representatives).
         if let Some(pool) = self.pool.as_ref() {
-            pool.await_key(key.0);
+            pool.await_plan(key);
         }
 
-        // 2. Resolve plan availability + admission. Arrivals are
+        // 3. Resolve plan availability + admission. Arrivals are
         // monotone, so finished compiles can be dropped as we go
         // (keeps the pending count O(pending), not O(all jobs ever)).
         let lookup = self.store.lookup(key, spec.name);
@@ -719,10 +833,10 @@ impl FleetService {
             return;
         }
 
-        let w = Arc::clone(&self.templates[task.template]);
-        let (fallback, fb_ms) = self.fallback_for(task.template, &spec);
+        let w = Arc::clone(&inst.w);
+        let (fallback, fb_ms) = self.fallback_for(&w, key, &spec);
 
-        // 3. FS availability: per-iteration latency + virtual ready
+        // 4. FS availability: per-iteration latency + virtual ready
         // time. Store accounting records *acted-on* outcomes only: a
         // backpressured task that merely looked does not count.
         let fs: Option<(FsLatency, f64)> = match lookup {
@@ -731,7 +845,7 @@ impl FleetService {
                 // Every store insert goes through `guard_and_publish`,
                 // which pairs it with a latency entry — a miss here is
                 // a broken publication invariant, not a cache miss.
-                let known = self.latency.lock().unwrap().get(&(key.0, spec.name)).copied();
+                let known = lock_recover(&self.latency).get(&(key.exact.0, spec.name)).copied();
                 let pl = known.expect("store hit must have a published latency");
                 if self.opts.calibrate {
                     // Past the per-graph publication barrier, in
@@ -740,7 +854,7 @@ impl FleetService {
                     // re-explore on drift — identically on both
                     // executors.
                     self.calibrate_on_hit(
-                        task.template,
+                        &w,
                         &spec,
                         key,
                         &prog,
@@ -756,8 +870,26 @@ impl FleetService {
                 if decision == AdmitDecision::Admit =>
             {
                 self.store.note_port_hit();
-                let (ready, lat) = self.run_port(
-                    task.template,
+                let (ready, lat) = self.run_retune(
+                    RetuneTier::Port,
+                    &w,
+                    &spec,
+                    key,
+                    &source,
+                    available_ms,
+                    &fallback,
+                    fb_ms,
+                    now,
+                );
+                Some((lat, ready))
+            }
+            PlanLookup::BucketHit { source, available_ms, .. }
+                if decision == AdmitDecision::Admit =>
+            {
+                self.store.note_bucket_hit();
+                let (ready, lat) = self.run_retune(
+                    RetuneTier::Bucket,
+                    &w,
                     &spec,
                     key,
                     &source,
@@ -770,8 +902,7 @@ impl FleetService {
             }
             PlanLookup::Miss if decision == AdmitDecision::Admit => {
                 self.store.note_miss();
-                let (ready, lat) =
-                    self.run_explore(task.template, &spec, key, &fallback, fb_ms, now);
+                let (ready, lat) = self.run_explore(&w, &spec, key, &fallback, fb_ms, now);
                 Some((lat, ready))
             }
             // Compile backpressure: serve the fallback for the whole
@@ -799,7 +930,7 @@ impl FleetService {
             });
         }
 
-        // 4. Advance the virtual clocks through the task's iterations,
+        // 5. Advance the virtual clocks through the task's iterations,
         // hot-swapping to the FS latency once its compile finishes in
         // virtual time (§6 at fleet scale). Both executors run this —
         // placement, waits and makespan all derive from it — but only
@@ -820,8 +951,20 @@ impl FleetService {
                         // tasks drain on the fallback first).
                         let pool = self.pool.as_ref().expect("wall-clock pool");
                         pool.await_key(*key);
-                        let got = self.latency.lock().unwrap().get(&(*key, *class)).copied();
-                        let pl = got.expect("compile published its latency");
+                        let got = lock_recover(&self.latency).get(&(*key, *class)).copied();
+                        let pl = got.unwrap_or_else(|| {
+                            // A quiesced compile with no published
+                            // latency means its worker panicked —
+                            // surface the recorded cause now rather
+                            // than a bare invariant failure.
+                            panic!(
+                                "compile for graph {:#x} on {} never published; \
+                                 worker errors: {:?}",
+                                key,
+                                class,
+                                pool.errors()
+                            )
+                        });
                         *lat = FsLatency::Known(pl);
                         pl.at(cursor)
                     }
@@ -881,10 +1024,15 @@ impl FleetService {
             rejected,
             exact_hits: store.exact_hits,
             port_hits: store.port_hits,
+            bucket_hits: store.bucket_hits,
             misses: store.misses,
+            distinct_shapes: self.seen_graphs.len(),
+            distinct_buckets: self.seen_buckets.len(),
             explore_jobs: self.counters.explore_jobs.load(Ordering::Relaxed),
             port_jobs: self.counters.port_jobs.load(Ordering::Relaxed),
             port_failures: self.counters.port_failures.load(Ordering::Relaxed),
+            bucket_retunes: self.counters.bucket_jobs.load(Ordering::Relaxed),
+            bucket_failures: self.counters.bucket_failures.load(Ordering::Relaxed),
             fs_vetoes: self.counters.fs_vetoes.load(Ordering::Relaxed),
             shard_jobs: self.counters.shard_jobs.load(Ordering::Relaxed),
             reexplore_jobs: self.counters.reexplore_jobs.load(Ordering::Relaxed),
@@ -912,7 +1060,9 @@ impl FleetService {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::fleet::sim::{build_templates, generate_trace, TrafficConfig};
+    use crate::fleet::sim::{
+        build_template_families, build_templates, generate_trace, ModelFamily, TrafficConfig,
+    };
 
     fn small_traffic() -> TrafficConfig {
         TrafficConfig {
@@ -948,6 +1098,11 @@ mod tests {
         let snapshot = a.to_json().to_string();
         assert!(a.port_hits >= 1, "mixed classes must port plans: {snapshot}");
         assert!(a.exact_hits >= 1, "hot templates must hit the store");
+        assert_eq!(a.bucket_hits, 0, "fixed shapes never bucket-hit");
+        assert!(
+            a.misses <= a.distinct_shapes && a.distinct_shapes <= 4,
+            "static traffic sees at most one graph per template: {snapshot}"
+        );
         assert!(a.served_gpu_ms > 0.0);
         assert!(a.saved_gpu_ms() >= 0.0, "guard keeps savings non-negative");
         assert!(a.wait.p99 >= a.wait.p50);
@@ -997,6 +1152,7 @@ mod tests {
         let r = svc.run_trace(&trace);
         assert_eq!(r.explore_jobs, 0);
         assert_eq!(r.port_jobs, 0);
+        assert_eq!(r.bucket_retunes, 0);
         assert_eq!(r.admitted, 0);
         assert!(r.fallback_only > 0);
         assert_eq!(r.saved_gpu_ms(), 0.0, "no optimization, no savings");
@@ -1072,6 +1228,7 @@ mod tests {
         assert_eq!(wall.rejected, virt.rejected);
         assert_eq!(wall.exact_hits, virt.exact_hits);
         assert_eq!(wall.port_hits, virt.port_hits);
+        assert_eq!(wall.bucket_hits, virt.bucket_hits);
         assert_eq!(wall.misses, virt.misses);
         assert_eq!(wall.explore_jobs, virt.explore_jobs);
         assert_eq!(wall.port_jobs, virt.port_jobs);
@@ -1223,7 +1380,13 @@ mod tests {
         // join barrier finishes strictly earlier than the monolithic
         // compile (each shard pays only its own region's op cost).
         let template = two_region_template(512);
-        let trace = vec![FleetTask { id: 0, arrival_ms: 0.0, template: 0, iterations: 8 }];
+        let trace = vec![FleetTask {
+            id: 0,
+            arrival_ms: 0.0,
+            template: 0,
+            iterations: 8,
+            shape: TaskShape::default(),
+        }];
         let run = |executor: ExecutorKind, shards: usize| {
             let opts = FleetOptions {
                 registry: DeviceRegistry::mixed(1, 0, 2),
@@ -1308,6 +1471,157 @@ mod tests {
         assert_eq!(wall.compile.p50, virt.compile.p50);
         assert_eq!(wall.compile.p99, virt.compile.p99);
         assert_eq!(wall.makespan_ms, virt.makespan_ms);
+        assert_eq!(virt.regressions, 0);
+        assert_eq!(wall.regressions, 0);
+    }
+
+    #[test]
+    fn bucket_hits_reserve_sibling_shapes_without_reexploring() {
+        // The BucketHit tier end-to-end on a hand-built trace: one
+        // layer-norm family, a single V100, three arrivals — rows 64
+        // (explore), rows 48 (sibling bucket: launch-dim retune only),
+        // rows 48 again (exact hit on the retuned program).
+        let families = vec![TemplateFamily::Model(ModelFamily::LayerNorm)];
+        let shape = |seq: usize| TaskShape { batch: 1, seq };
+        let trace = vec![
+            FleetTask { id: 0, arrival_ms: 0.0, template: 0, iterations: 6, shape: shape(64) },
+            FleetTask { id: 1, arrival_ms: 200.0, template: 0, iterations: 6, shape: shape(48) },
+            FleetTask { id: 2, arrival_ms: 400.0, template: 0, iterations: 6, shape: shape(48) },
+        ];
+        let run = |executor: ExecutorKind| {
+            let opts = FleetOptions {
+                registry: DeviceRegistry::mixed(1, 0, 2),
+                compile_workers: 2,
+                executor,
+                ..Default::default()
+            };
+            let mut svc = FleetService::with_families(opts, families.clone());
+            svc.run_trace(&trace)
+        };
+        let r = run(ExecutorKind::VirtualTime);
+        assert_eq!(r.misses, 1, "only the first shape explores: {:?}", r.to_json().to_string());
+        assert_eq!(r.explore_jobs, 1);
+        assert_eq!(r.bucket_hits, 1, "rows 48 reuses the rows-64 plan");
+        assert_eq!(r.bucket_retunes, 1);
+        assert_eq!(r.bucket_failures, 0);
+        assert_eq!(r.exact_hits, 1, "the third task hits the retuned program");
+        assert_eq!(r.port_hits, 0, "single class never cross-class ports");
+        assert_eq!(r.distinct_shapes, 2);
+        assert_eq!(r.distinct_buckets, 1);
+        assert_eq!(r.regressions, 0);
+        // The same decisions on real threads (publication barrier must
+        // cover bucket siblings, not just exact keys).
+        let wall = run(ExecutorKind::WallClock { threads: 2 });
+        assert_eq!(wall.misses, r.misses);
+        assert_eq!(wall.explore_jobs, r.explore_jobs);
+        assert_eq!(wall.bucket_hits, r.bucket_hits);
+        assert_eq!(wall.bucket_retunes, r.bucket_retunes);
+        assert_eq!(wall.exact_hits, r.exact_hits);
+        assert_eq!(wall.regressions, 0);
+    }
+
+    fn dynamic_traffic() -> TrafficConfig {
+        TrafficConfig {
+            tasks: 150,
+            templates: 4,
+            mean_interarrival_ms: 1.0,
+            min_ops: 20,
+            max_ops: 40,
+            dynamic_shapes: true,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn dynamic_shape_fleet_amortizes_explorations_across_buckets() {
+        let traffic = dynamic_traffic();
+        let families = build_template_families(&traffic);
+        let trace = generate_trace(&traffic);
+        let run = || {
+            let opts = FleetOptions {
+                registry: DeviceRegistry::mixed(1, 1, 2),
+                compile_workers: 2,
+                ..Default::default()
+            };
+            let mut svc = FleetService::with_families(opts, families.clone());
+            svc.run_trace(&trace)
+        };
+        let a = run();
+        let b = run();
+        // Shape-polymorphic replays stay byte-identical.
+        assert_eq!(a.to_json().to_string(), b.to_json().to_string());
+        let snapshot = a.to_json().to_string();
+        assert_eq!(a.regressions, 0, "never-negative holds under dynamic shapes");
+        assert!(
+            a.distinct_shapes > traffic.templates,
+            "shape-varying traffic must produce many distinct graphs: {snapshot}"
+        );
+        assert!(
+            a.distinct_buckets < a.distinct_shapes,
+            "power-of-two bucketing must coalesce sibling shapes: {snapshot}"
+        );
+        assert!(a.bucket_hits >= 1, "sibling shapes must reuse plans: {snapshot}");
+        assert_eq!(
+            a.bucket_retunes,
+            a.bucket_hits,
+            "every acted-on bucket hit runs one retune job: {snapshot}"
+        );
+        // The amortization claim: full explorations are strictly
+        // sublinear in distinct shapes — the bucket tier (plus the
+        // cross-class port tier) absorbs the rest.
+        assert!(
+            a.explore_jobs < a.distinct_shapes,
+            "explorations must be sublinear in distinct shapes: {snapshot}"
+        );
+        assert_eq!(a.admitted + a.fallback_only + a.rejected, a.tasks);
+    }
+
+    #[test]
+    fn dynamic_shape_trace_converges_across_executors() {
+        // Decision equivalence under shape-varying traffic: the bucket
+        // tier's lookups depend on publication order of sibling shapes,
+        // so the wall-clock publication barrier must cover buckets —
+        // this is the test that catches it racing.
+        let traffic = dynamic_traffic();
+        let families = build_template_families(&traffic);
+        let trace = generate_trace(&traffic);
+        let base = FleetOptions {
+            registry: DeviceRegistry::mixed(1, 1, 2),
+            compile_workers: 2,
+            ..Default::default()
+        };
+        let virt = {
+            let mut svc = FleetService::with_families(base.clone(), families.clone());
+            svc.run_trace(&trace)
+        };
+        let wall = {
+            let opts = FleetOptions {
+                executor: ExecutorKind::WallClock { threads: 3 },
+                ..base
+            };
+            let mut svc = FleetService::with_families(opts, families.clone());
+            svc.run_trace(&trace)
+        };
+        assert_eq!(wall.tasks, virt.tasks);
+        assert_eq!(wall.admitted, virt.admitted);
+        assert_eq!(wall.fallback_only, virt.fallback_only);
+        assert_eq!(wall.rejected, virt.rejected);
+        assert_eq!(wall.exact_hits, virt.exact_hits);
+        assert_eq!(wall.port_hits, virt.port_hits);
+        assert_eq!(wall.bucket_hits, virt.bucket_hits);
+        assert_eq!(wall.misses, virt.misses);
+        assert_eq!(wall.explore_jobs, virt.explore_jobs);
+        assert_eq!(wall.port_jobs, virt.port_jobs);
+        assert_eq!(wall.bucket_retunes, virt.bucket_retunes);
+        assert_eq!(wall.bucket_failures, virt.bucket_failures);
+        assert_eq!(wall.port_failures, virt.port_failures);
+        assert_eq!(wall.fs_vetoes, virt.fs_vetoes);
+        assert_eq!(wall.distinct_shapes, virt.distinct_shapes);
+        assert_eq!(wall.distinct_buckets, virt.distinct_buckets);
+        assert_eq!(wall.compile.p50, virt.compile.p50);
+        assert_eq!(wall.compile.p99, virt.compile.p99);
+        assert_eq!(wall.makespan_ms, virt.makespan_ms);
+        assert!(virt.bucket_hits >= 1, "the bucket tier must fire: {virt:?}");
         assert_eq!(virt.regressions, 0);
         assert_eq!(wall.regressions, 0);
     }

@@ -7,10 +7,20 @@
 //! driven by [`crate::util::Prng`], so a (seed, config) pair always
 //! produces byte-identical traces — the reproducibility the bench
 //! asserts.
+//!
+//! With [`TrafficConfig::dynamic_shapes`] the population becomes
+//! *shape-polymorphic*: each template is a [`TemplateFamily`] — a
+//! builder parameterized over (batch, seq) rather than one fixed graph
+//! — and every task additionally draws a [`TaskShape`] from its
+//! template's seeded [`ShapeDist`]. Real serving traffic varies batch
+//! size and sequence length per request; this is what makes the plan
+//! store's power-of-two shape buckets (and the `BucketHit` reuse tier)
+//! do actual work instead of one-exploration-per-distinct-shape.
 
 use crate::util::Prng;
-use crate::workloads::synthetic::{generate, SyntheticConfig};
-use crate::workloads::{LoopKind, Mode, Workload};
+use crate::workloads::models;
+use crate::workloads::synthetic::{generate, generate_scaled, SyntheticConfig};
+use crate::workloads::{blocks, LoopKind, Mode, Workload};
 
 /// Trace-generation knobs.
 #[derive(Debug, Clone)]
@@ -29,6 +39,12 @@ pub struct TrafficConfig {
     /// Ops per template graph (uniform in this inclusive range).
     pub min_ops: usize,
     pub max_ops: usize,
+    /// Shape-polymorphic traffic: templates become shape-scalable
+    /// families and every task draws a (batch, seq) from its template's
+    /// seeded [`ShapeDist`]. Off (the default), every task carries the
+    /// fixed [`TaskShape::default`] and the population is byte-identical
+    /// to the static [`build_templates`] one.
+    pub dynamic_shapes: bool,
 }
 
 impl Default for TrafficConfig {
@@ -42,23 +58,179 @@ impl Default for TrafficConfig {
             max_iterations: 24,
             min_ops: 30,
             max_ops: 90,
+            dynamic_shapes: false,
         }
     }
 }
 
+/// The (batch, seq) a task wants served. For the synthetic families the
+/// instantiated graph scales its leading dimension to
+/// `rows() = batch × seq`; the model families thread both through the
+/// parameterized `workloads::models::*_with` builders.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct TaskShape {
+    pub batch: usize,
+    pub seq: usize,
+}
+
+impl TaskShape {
+    /// Flattened row count (the leading dim of the scalable families).
+    pub fn rows(&self) -> usize {
+        self.batch * self.seq
+    }
+}
+
+impl Default for TaskShape {
+    /// The fixed-shape sentinel static traffic carries.
+    fn default() -> Self {
+        TaskShape { batch: 1, seq: 1 }
+    }
+}
+
 /// One task in the trace: an instance of a template model arriving at a
-/// virtual time and serving a fixed number of iterations.
+/// virtual time, at a concrete (batch, seq), serving a fixed number of
+/// iterations.
 #[derive(Debug, Clone, PartialEq)]
 pub struct FleetTask {
     pub id: usize,
     pub arrival_ms: f64,
     pub template: usize,
     pub iterations: usize,
+    pub shape: TaskShape,
 }
 
-/// Build the template population: synthetic graphs spanning the op-mix
-/// space (elementwise chains, reduction towers, GEMM sprinkling) with
-/// the three runtime loop regimes interleaved, as in the §7.2 bench.
+/// Per-template shape distribution: the (batch, seq) choice sets one
+/// workload's requests draw from. Seeded per (traffic seed, template),
+/// so a template's shape mix is stable across replays while different
+/// templates get different windows — hot models at big batches, tail
+/// models at small ones, exactly the production mix the amortization
+/// claim is about.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShapeDist {
+    pub batches: Vec<usize>,
+    pub seqs: Vec<usize>,
+}
+
+/// Batch choices shape distributions window over (powers of two: batch
+/// rarely arrives off-pow2 in serving systems that pad).
+const BATCH_CHOICES: [usize; 6] = [1, 2, 4, 8, 16, 32];
+/// Sequence-length choices: deliberately mixing powers of two with
+/// off-pow2 lengths (24/48/96), so sibling shapes land in shared
+/// power-of-two buckets and the `BucketHit` tier is exercised.
+const SEQ_CHOICES: [usize; 8] = [16, 24, 32, 48, 64, 96, 128, 192];
+
+impl ShapeDist {
+    /// The seeded distribution for one template.
+    pub fn for_template(cfg: &TrafficConfig, template: usize) -> ShapeDist {
+        let mut p = Prng::new(
+            cfg.seed ^ 0x5AFE_5EED ^ (template as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+        );
+        // A contiguous window of at least two choices per axis: every
+        // template sees genuine shape variety.
+        let b0 = p.below(BATCH_CHOICES.len() - 1);
+        let b1 = p.range(b0 + 1, BATCH_CHOICES.len() - 1);
+        let s0 = p.below(SEQ_CHOICES.len() - 1);
+        let s1 = p.range(s0 + 1, SEQ_CHOICES.len() - 1);
+        ShapeDist {
+            batches: BATCH_CHOICES[b0..=b1].to_vec(),
+            seqs: SEQ_CHOICES[s0..=s1].to_vec(),
+        }
+    }
+
+    /// Draw one (batch, seq) from the distribution.
+    pub fn draw(&self, prng: &mut Prng) -> TaskShape {
+        TaskShape { batch: *prng.pick(&self.batches), seq: *prng.pick(&self.seqs) }
+    }
+}
+
+/// A parameterized paper model usable as a shape-polymorphic template
+/// (the `workloads::models::*_with` builders).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ModelFamily {
+    /// BERT encoder (inference config) at (batch, seq) — structure
+    /// invariant in both.
+    BertInfer,
+    /// DIEN (inference) at (batch, seq_len) — only batch variation is
+    /// shape-polymorphic (seq changes the unrolled recurrence depth).
+    DienInfer,
+    /// The Figure-1 layer-norm microbenchmark at rows = batch × seq.
+    LayerNorm,
+}
+
+impl ModelFamily {
+    fn build(self, shape: TaskShape) -> Workload {
+        match self {
+            ModelFamily::BertInfer => models::bert_with(Mode::Infer, shape.batch, shape.seq),
+            ModelFamily::DienInfer => models::dien_with(Mode::Infer, shape.batch, shape.seq),
+            ModelFamily::LayerNorm => {
+                use crate::graph::{DType, Graph, Shape};
+                let mut g = Graph::new("LN");
+                let x = g.param(Shape::new(vec![shape.rows().max(2), 256]), DType::F32, "x");
+                let _ = blocks::layer_norm(&mut g, x, "ln");
+                Workload {
+                    name: "LN",
+                    field: "micro",
+                    mode: Mode::Infer,
+                    batch: shape.batch,
+                    loop_kind: LoopKind::None,
+                    graph: g,
+                }
+            }
+        }
+    }
+}
+
+/// One template of the (possibly shape-polymorphic) population: a
+/// builder the fleet instantiates per requested [`TaskShape`].
+/// Instantiations of one family at different shapes share graph
+/// *structure* (for the scalable variants), which is what lets the plan
+/// store's shape buckets re-serve one exploration across sibling
+/// shapes.
+#[derive(Debug, Clone)]
+pub enum TemplateFamily {
+    /// A single fixed-shape workload: `instantiate` ignores the shape.
+    /// The static population ([`build_templates`]) wrapped unchanged.
+    Fixed(Workload),
+    /// Shape-scalable synthetic graph family, instantiated at
+    /// rows = batch × seq with a per-family structure seed
+    /// ([`generate_scaled`]).
+    Synthetic {
+        cfg: SyntheticConfig,
+        graph_seed: u64,
+        loop_kind: LoopKind,
+    },
+    /// A parameterized paper model.
+    Model(ModelFamily),
+}
+
+impl TemplateFamily {
+    /// Build the workload instance this family serves at `shape`.
+    /// Deterministic: one (family, shape) always yields the same graph.
+    pub fn instantiate(&self, shape: TaskShape) -> Workload {
+        match self {
+            TemplateFamily::Fixed(w) => w.clone(),
+            TemplateFamily::Synthetic { cfg, graph_seed, loop_kind } => {
+                let mut p = Prng::new(*graph_seed);
+                let graph = generate_scaled(cfg, &mut p, shape.rows().max(2));
+                Workload {
+                    name: "task",
+                    field: "fleet",
+                    mode: Mode::Infer,
+                    batch: shape.batch,
+                    loop_kind: *loop_kind,
+                    graph,
+                }
+            }
+            TemplateFamily::Model(m) => m.build(shape),
+        }
+    }
+}
+
+/// Build the static template population: synthetic graphs spanning the
+/// op-mix space (elementwise chains, reduction towers, GEMM sprinkling)
+/// with the three runtime loop regimes interleaved, as in the §7.2
+/// bench. Byte-stable across PRs: the fixed-shape fleet path depends on
+/// this exact population.
 pub fn build_templates(cfg: &TrafficConfig) -> Vec<Workload> {
     assert!(cfg.templates > 0, "need at least one template");
     assert!(cfg.min_ops <= cfg.max_ops);
@@ -73,11 +245,7 @@ pub fn build_templates(cfg: &TrafficConfig) -> Vec<Workload> {
                 ..Default::default()
             };
             let graph = generate(&syn, &mut prng);
-            let loop_kind = match i % 5 {
-                0 => LoopKind::DynamicLoop,
-                1 => LoopKind::StaticUnrolled,
-                _ => LoopKind::None,
-            };
+            let loop_kind = template_loop_kind(i);
             Workload {
                 name: "task",
                 field: "fleet",
@@ -90,11 +258,64 @@ pub fn build_templates(cfg: &TrafficConfig) -> Vec<Workload> {
         .collect()
 }
 
+fn template_loop_kind(i: usize) -> LoopKind {
+    match i % 5 {
+        0 => LoopKind::DynamicLoop,
+        1 => LoopKind::StaticUnrolled,
+        _ => LoopKind::None,
+    }
+}
+
+/// Build the template population as families. With
+/// [`TrafficConfig::dynamic_shapes`] off this wraps the static
+/// [`build_templates`] population unchanged (every instantiation is the
+/// same fixed graph); with it on, each template becomes a shape-scalable
+/// synthetic family drawing the same op-mix knobs, instantiated lazily
+/// at each requested (batch, seq).
+pub fn build_template_families(cfg: &TrafficConfig) -> Vec<TemplateFamily> {
+    if !cfg.dynamic_shapes {
+        return build_templates(cfg).into_iter().map(TemplateFamily::Fixed).collect();
+    }
+    assert!(cfg.templates > 0, "need at least one template");
+    assert!(cfg.min_ops <= cfg.max_ops);
+    let mut prng = Prng::new(cfg.seed ^ 0xABCD_EF01_2345_6789);
+    (0..cfg.templates)
+        .map(|i| {
+            let syn = SyntheticConfig {
+                num_ops: prng.range(cfg.min_ops, cfg.max_ops),
+                p_reduce: 0.05 + prng.f64() * 0.2,
+                p_expensive: 0.05 + prng.f64() * 0.25,
+                p_gemm: prng.f64() * 0.1,
+                ..Default::default()
+            };
+            let graph_seed = prng.next_u64();
+            TemplateFamily::Synthetic {
+                cfg: syn,
+                graph_seed,
+                loop_kind: template_loop_kind(i),
+            }
+        })
+        .collect()
+}
+
 /// Generate the arrival trace (sorted by arrival time by construction).
+/// The arrival/template/iteration streams are identical with
+/// `dynamic_shapes` on or off: shape draws come from a *separate*
+/// seeded PRNG stream, so flipping the flag changes the shapes — not
+/// which templates arrive when.
 pub fn generate_trace(cfg: &TrafficConfig) -> Vec<FleetTask> {
-    assert!(cfg.min_iterations >= 1 && cfg.min_iterations <= cfg.max_iterations);
+    assert!(cfg.min_iterations >= 1);
+    assert!(cfg.min_iterations <= cfg.max_iterations);
     assert!(cfg.mean_interarrival_ms > 0.0);
+    let dists: Option<Vec<ShapeDist>> = if cfg.dynamic_shapes {
+        Some((0..cfg.templates).map(|t| ShapeDist::for_template(cfg, t)).collect())
+    } else {
+        None
+    };
     let mut prng = Prng::new(cfg.seed);
+    // Dedicated stream for shape draws: the main stream above must stay
+    // byte-identical whether or not shapes vary.
+    let mut shape_prng = Prng::new(cfg.seed ^ 0x5AFE_CAFE);
     let mut t = 0.0f64;
     (0..cfg.tasks)
         .map(|id| {
@@ -105,7 +326,11 @@ pub fn generate_trace(cfg: &TrafficConfig) -> Vec<FleetTask> {
             let r = prng.f64();
             let template = ((r * r * cfg.templates as f64) as usize).min(cfg.templates - 1);
             let iterations = prng.range(cfg.min_iterations, cfg.max_iterations);
-            FleetTask { id, arrival_ms: t, template, iterations }
+            let shape = match &dists {
+                Some(d) => d[template].draw(&mut shape_prng),
+                None => TaskShape::default(),
+            };
+            FleetTask { id, arrival_ms: t, template, iterations, shape }
         })
         .collect()
 }
@@ -113,6 +338,7 @@ pub fn generate_trace(cfg: &TrafficConfig) -> Vec<FleetTask> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::ShapeClass;
 
     #[test]
     fn traces_are_deterministic_per_seed() {
@@ -133,6 +359,7 @@ mod tests {
             last = task.arrival_ms;
             assert!(task.template < cfg.templates);
             assert!((cfg.min_iterations..=cfg.max_iterations).contains(&task.iterations));
+            assert_eq!(task.shape, TaskShape::default(), "static traffic is fixed-shape");
         }
     }
 
@@ -160,5 +387,120 @@ mod tests {
         assert!(a.iter().any(|w| w.loop_kind == LoopKind::DynamicLoop));
         assert!(a.iter().any(|w| w.loop_kind == LoopKind::StaticUnrolled));
         assert!(a.iter().any(|w| w.loop_kind == LoopKind::None));
+    }
+
+    #[test]
+    fn dynamic_shape_streams_match_static_arrivals() {
+        // Flipping dynamic_shapes must not perturb which templates
+        // arrive when — only the shapes.
+        let stat = TrafficConfig { tasks: 300, ..Default::default() };
+        let dyn_cfg = TrafficConfig { dynamic_shapes: true, ..stat.clone() };
+        let a = generate_trace(&stat);
+        let b = generate_trace(&dyn_cfg);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.arrival_ms, y.arrival_ms);
+            assert_eq!(x.template, y.template);
+            assert_eq!(x.iterations, y.iterations);
+        }
+        assert_eq!(generate_trace(&dyn_cfg), generate_trace(&dyn_cfg));
+    }
+
+    #[test]
+    fn shape_dists_have_variety_and_stay_in_choice_sets() {
+        let cfg = TrafficConfig { dynamic_shapes: true, ..Default::default() };
+        for t in 0..cfg.templates {
+            let d = ShapeDist::for_template(&cfg, t);
+            assert_eq!(d, ShapeDist::for_template(&cfg, t), "dist must be seeded");
+            assert!(d.batches.len() >= 2, "template {t}: {d:?}");
+            assert!(d.seqs.len() >= 2, "template {t}: {d:?}");
+            assert!(d.batches.iter().all(|b| BATCH_CHOICES.contains(b)));
+            assert!(d.seqs.iter().all(|s| SEQ_CHOICES.contains(s)));
+        }
+        // Tasks actually vary in shape.
+        let trace = generate_trace(&TrafficConfig { tasks: 400, ..cfg });
+        let distinct: std::collections::HashSet<(usize, TaskShape)> =
+            trace.iter().map(|t| (t.template, t.shape)).collect();
+        let distinct_templates: std::collections::HashSet<usize> =
+            trace.iter().map(|t| t.template).collect();
+        assert!(
+            distinct.len() > 2 * distinct_templates.len(),
+            "expected shape variety: {} instances over {} templates",
+            distinct.len(),
+            distinct_templates.len()
+        );
+    }
+
+    #[test]
+    fn synthetic_families_instantiate_structure_siblings() {
+        let cfg = TrafficConfig { dynamic_shapes: true, templates: 6, ..Default::default() };
+        let families = build_template_families(&cfg);
+        assert_eq!(families.len(), 6);
+        for fam in &families {
+            let a = fam.instantiate(TaskShape { batch: 2, seq: 24 });
+            let b = fam.instantiate(TaskShape { batch: 2, seq: 32 });
+            let c = fam.instantiate(TaskShape { batch: 2, seq: 24 });
+            a.graph.validate().unwrap();
+            b.graph.validate().unwrap();
+            // Same family, same shape → identical graph (deterministic).
+            assert_eq!(
+                crate::coordinator::GraphKey::of(&a.graph),
+                crate::coordinator::GraphKey::of(&c.graph)
+            );
+            // Sibling shapes share structure, not the exact key; rows 48
+            // vs 64 both bucket to 64, so the full shape class matches.
+            let (ca, cb) = (ShapeClass::of(&a.graph), ShapeClass::of(&b.graph));
+            assert_eq!(ca.structure, cb.structure);
+            assert_eq!(ca.bucket, cb.bucket, "rows 48 and 64 share the pow2-64 bucket");
+            assert_ne!(
+                crate::coordinator::GraphKey::of(&a.graph),
+                crate::coordinator::GraphKey::of(&b.graph)
+            );
+        }
+    }
+
+    #[test]
+    fn fixed_families_ignore_the_shape() {
+        let cfg = TrafficConfig { templates: 3, ..Default::default() };
+        let fixed = build_template_families(&cfg);
+        let plain = build_templates(&cfg);
+        assert_eq!(fixed.len(), plain.len());
+        for (fam, w) in fixed.iter().zip(&plain) {
+            let a = fam.instantiate(TaskShape::default());
+            let b = fam.instantiate(TaskShape { batch: 8, seq: 128 });
+            assert_eq!(
+                crate::coordinator::GraphKey::of(&a.graph),
+                crate::coordinator::GraphKey::of(&b.graph)
+            );
+            assert_eq!(
+                crate::coordinator::GraphKey::of(&a.graph),
+                crate::coordinator::GraphKey::of(&w.graph)
+            );
+        }
+    }
+
+    #[test]
+    fn model_families_are_shape_polymorphic() {
+        // The parameterized models::* builders drive shape-varying
+        // requests too: BERT instantiations at sibling seqs share
+        // structure, and 24 vs 32 share the pow2-32 bucket.
+        let fam = TemplateFamily::Model(ModelFamily::BertInfer);
+        let a = fam.instantiate(TaskShape { batch: 2, seq: 24 });
+        let b = fam.instantiate(TaskShape { batch: 2, seq: 32 });
+        let (ca, cb) = (ShapeClass::of(&a.graph), ShapeClass::of(&b.graph));
+        assert_eq!(ca.structure, cb.structure);
+        assert_eq!(ca.bucket, cb.bucket);
+        assert_ne!(
+            crate::coordinator::GraphKey::of(&a.graph),
+            crate::coordinator::GraphKey::of(&b.graph)
+        );
+        // LN micro-family: rows 48 vs 64 — same bucket, distinct keys.
+        let ln = TemplateFamily::Model(ModelFamily::LayerNorm);
+        let x = ln.instantiate(TaskShape { batch: 1, seq: 48 });
+        let y = ln.instantiate(TaskShape { batch: 1, seq: 64 });
+        assert_eq!(ShapeClass::of(&x.graph), ShapeClass::of(&y.graph));
+        assert_ne!(
+            crate::coordinator::GraphKey::of(&x.graph),
+            crate::coordinator::GraphKey::of(&y.graph)
+        );
     }
 }

@@ -1,19 +1,55 @@
-//! Shared cross-device plan store.
+//! Shared cross-device, shape-polymorphic plan store.
 //!
 //! The §7.5 tune-once-run-many economics at fleet scale: exploration
-//! runs once per (graph, device-class) — and for a graph already
-//! explored on *any* class, other classes skip the explorer entirely
-//! and only re-run the §4.2 launch-dimension tuner
-//! ([`crate::pipeline::port_program`]). The store tracks, per graph
-//! key, the portability *source* program (the first FS exploration
-//! result) plus the program each device class actually serves, with
-//! the virtual time its producing compile finishes (tasks that arrive
-//! earlier hot-swap mid-serve, §6 style).
+//! runs once per (graph, device-class) — and a graph already explored
+//! elsewhere is re-served through one of two cheap launch-dimension
+//! retunes instead of a fresh exploration. The store resolves a lookup
+//! through three reuse tiers:
+//!
+//! 1. **Exact hit** — this device class already serves a program for
+//!    this exact graph.
+//! 2. **Cross-class port** — another class explored this exact graph;
+//!    re-run only the §4.2 launch-dimension tuner for the new device
+//!    ([`crate::pipeline::port_program`]).
+//! 3. **Bucket hit** — the bucket holds an FS plan for a *sibling
+//!    shape* of the same structure inside the same power-of-two shape
+//!    bucket ([`crate::coordinator::ShapeClass`]) — this class's own
+//!    rep when it has one, else the bucket's first FS plan from any
+//!    class; re-lower the sibling's plan at the new shape
+//!    ([`crate::pipeline::reshape_program`]), again a
+//!    launch-dimension-only retune.
+//!
+//! Only a genuinely new (structure, bucket, class) triple pays a full
+//! exploration. Per exact graph key the store tracks the portability
+//! *source* program (the first FS exploration result) plus the program
+//! each device class actually serves, with the virtual time its
+//! producing compile finishes (tasks that arrive earlier hot-swap
+//! mid-serve, §6 style); per (structure, bucket, class) it tracks the
+//! first FS program published in the bucket — the shape-port
+//! representative.
 
-use crate::coordinator::GraphKey;
+use super::lock_recover;
+use crate::coordinator::{GraphKey, ShapeClass};
+use crate::graph::Graph;
 use crate::pipeline::{OptimizedProgram, Tech};
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
+
+/// Full plan-store identity of a graph: the exact structural hash plus
+/// its shape-erased (structure, bucket) class. Carried together through
+/// the compile pipeline so publication can index both tiers atomically.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct PlanKey {
+    pub exact: GraphKey,
+    pub shape: ShapeClass,
+}
+
+impl PlanKey {
+    /// Compute both identities of a graph.
+    pub fn of(graph: &Graph) -> Self {
+        PlanKey { exact: GraphKey::of(graph), shape: ShapeClass::of(graph) }
+    }
+}
 
 /// Outcome of a lookup for (graph, device class).
 #[derive(Debug, Clone)]
@@ -33,18 +69,31 @@ pub enum PlanLookup {
         available_ms: f64,
         tuned_on: &'static str,
     },
-    /// Never explored anywhere: full exploration required.
+    /// No program for this exact graph, but the bucket holds an FS
+    /// program for a sibling shape in the same (structure, bucket) —
+    /// from this class when it has one, else the bucket's first FS
+    /// program from any class: shape-port it (launch-dim re-tune at
+    /// the new shape/class only). `tuned_at` is the sibling's exact
+    /// key, `available_ms` when the sibling plan exists in virtual
+    /// time.
+    BucketHit {
+        source: Arc<OptimizedProgram>,
+        available_ms: f64,
+        tuned_at: GraphKey,
+    },
+    /// Never explored anywhere reusable: full exploration required.
     Miss,
 }
 
-/// Hit/port/miss accounting. Counted by the fleet service when a task
-/// *acts* on a lookup (serves from the store, runs a port, runs a full
-/// exploration) — not at lookup time, so rejected/backpressured tasks
-/// do not inflate the rates.
+/// Hit/bucket/port/miss accounting. Counted by the fleet service when a
+/// task *acts* on a lookup (serves from the store, runs a retune, runs
+/// a full exploration) — not at lookup time, so rejected/backpressured
+/// tasks do not inflate the rates.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct StoreStats {
     pub exact_hits: usize,
     pub port_hits: usize,
+    pub bucket_hits: usize,
     pub misses: usize,
 }
 
@@ -59,10 +108,43 @@ struct Entry {
     programs: HashMap<&'static str, (Arc<OptimizedProgram>, f64)>,
 }
 
-/// Thread-safe shared plan store, keyed by graph structure hash.
+/// An FS program published inside one shape bucket: the representative
+/// sibling plans are shape-ported from.
+#[derive(Debug, Clone)]
+struct BucketRep {
+    exact: u64,
+    prog: Arc<OptimizedProgram>,
+    ready_ms: f64,
+}
+
+/// Per (structure, bucket): the shape-port representatives. Same-class
+/// reps are preferred (the plan was launch-tuned on this hardware);
+/// `first` is the bucket-wide fallback — the first FS program published
+/// by *any* class, mirroring the exact tier's cross-class port source,
+/// so a class's first touch of a bucket costs a retune, not an
+/// exploration, whenever anyone explored the bucket before.
+#[derive(Debug, Default)]
+struct BucketEntry {
+    first: Option<BucketRep>,
+    per_class: HashMap<&'static str, BucketRep>,
+}
+
+/// Both indices under ONE lock, so a publication lands in the exact and
+/// bucket tiers atomically (a lookup can never see the entry without
+/// its bucket representative or vice versa).
+#[derive(Debug, Default)]
+struct StoreState {
+    /// Exact graph key → per-class programs + port source.
+    entries: HashMap<u64, Entry>,
+    /// (structure, bucket) → shape-port representatives.
+    buckets: HashMap<(u64, u64), BucketEntry>,
+}
+
+/// Thread-safe shared plan store, keyed by graph structure hash and
+/// shape bucket.
 #[derive(Debug, Default)]
 pub struct SharedPlanStore {
-    entries: Mutex<HashMap<u64, Entry>>,
+    state: Mutex<StoreState>,
     stats: Mutex<StoreStats>,
 }
 
@@ -71,71 +153,110 @@ impl SharedPlanStore {
         Self::default()
     }
 
-    /// Look up the program for (graph, device class). Pure: accounting
-    /// happens via the `note_*` methods once the caller acts on the
-    /// outcome.
-    pub fn lookup(&self, key: GraphKey, device_class: &'static str) -> PlanLookup {
-        let entries = self.entries.lock().unwrap();
-        match entries.get(&key.0) {
-            Some(e) => {
-                if let Some((prog, ready_ms)) = e.programs.get(device_class) {
-                    PlanLookup::Hit { prog: Arc::clone(prog), ready_ms: *ready_ms }
-                } else if let Some((src, avail, class)) = &e.source {
-                    PlanLookup::Portable {
-                        source: Arc::clone(src),
-                        available_ms: *avail,
-                        tuned_on: class,
-                    }
-                } else {
-                    PlanLookup::Miss
-                }
+    /// Look up the program for (graph, device class) through the three
+    /// reuse tiers. Pure: accounting happens via the `note_*` methods
+    /// once the caller acts on the outcome.
+    pub fn lookup(&self, key: PlanKey, device_class: &'static str) -> PlanLookup {
+        let st = lock_recover(&self.state);
+        if let Some(e) = st.entries.get(&key.exact.0) {
+            if let Some((prog, ready_ms)) = e.programs.get(device_class) {
+                return PlanLookup::Hit { prog: Arc::clone(prog), ready_ms: *ready_ms };
             }
-            None => PlanLookup::Miss,
+            if let Some((src, avail, class)) = &e.source {
+                return PlanLookup::Portable {
+                    source: Arc::clone(src),
+                    available_ms: *avail,
+                    tuned_on: class,
+                };
+            }
         }
+        if let Some(bucket) = st.buckets.get(&(key.shape.structure, key.shape.bucket)) {
+            // Prefer the same-class rep (launch-tuned on this hardware);
+            // fall back to the bucket's first FS program from any class
+            // — the retune re-lowers for this (shape, class) either
+            // way. A rep for this exact key would have resolved in the
+            // exact tier above; anything else is a sibling shape.
+            let rep = bucket
+                .per_class
+                .get(device_class)
+                .or_else(|| bucket.first.as_ref())
+                .filter(|rep| rep.exact != key.exact.0);
+            if let Some(rep) = rep {
+                return PlanLookup::BucketHit {
+                    source: Arc::clone(&rep.prog),
+                    available_ms: rep.ready_ms,
+                    tuned_at: GraphKey(rep.exact),
+                };
+            }
+        }
+        PlanLookup::Miss
     }
 
     /// Record that a task was served from a stored program.
     pub fn note_exact_hit(&self) {
-        self.stats.lock().unwrap().exact_hits += 1;
+        lock_recover(&self.stats).exact_hits += 1;
     }
 
     /// Record that a task triggered a cross-class port of a stored plan.
     pub fn note_port_hit(&self) {
-        self.stats.lock().unwrap().port_hits += 1;
+        lock_recover(&self.stats).port_hits += 1;
+    }
+
+    /// Record that a task triggered a same-class shape retune of a
+    /// sibling shape's plan.
+    pub fn note_bucket_hit(&self) {
+        lock_recover(&self.stats).bucket_hits += 1;
     }
 
     /// Record that a task found nothing and triggered full exploration.
     pub fn note_miss(&self) {
-        self.stats.lock().unwrap().misses += 1;
+        lock_recover(&self.stats).misses += 1;
     }
 
     /// Record the program `device_class` serves for `key`; `ready_ms`
     /// is the virtual completion time of the compile that produced it.
-    /// The first *FS* program inserted for a key becomes the
-    /// portability source for the other classes.
+    /// The first *FS* program inserted for an exact key becomes the
+    /// portability source for the other classes, and the first FS
+    /// program a class publishes in a (structure, bucket) becomes that
+    /// class's shape-port representative for sibling shapes.
     pub fn insert(
         &self,
-        key: GraphKey,
+        key: PlanKey,
         device_class: &'static str,
         prog: Arc<OptimizedProgram>,
         ready_ms: f64,
     ) {
-        let mut entries = self.entries.lock().unwrap();
-        let e = entries.entry(key.0).or_default();
+        let mut st = lock_recover(&self.state);
+        let StoreState { entries, buckets } = &mut *st;
+        let e = entries.entry(key.exact.0).or_default();
         if e.source.is_none() && prog.tech == Tech::Fs {
             e.source = Some((Arc::clone(&prog), ready_ms, device_class));
+        }
+        if prog.tech == Tech::Fs {
+            let bucket = buckets.entry((key.shape.structure, key.shape.bucket)).or_default();
+            let rep = BucketRep { exact: key.exact.0, prog: Arc::clone(&prog), ready_ms };
+            if bucket.first.is_none() {
+                bucket.first = Some(rep.clone());
+            }
+            bucket.per_class.entry(device_class).or_insert(rep);
         }
         e.programs.insert(device_class, (prog, ready_ms));
     }
 
     /// Accounting snapshot.
     pub fn stats(&self) -> StoreStats {
-        *self.stats.lock().unwrap()
+        *lock_recover(&self.stats)
     }
 
-    /// Number of distinct graphs with at least one entry.
+    /// Number of distinct exact graphs with at least one entry.
     pub fn len(&self) -> usize {
-        self.entries.lock().unwrap().len()
+        lock_recover(&self.state).entries.len()
+    }
+
+    /// Number of distinct (structure, bucket) classes with at least one
+    /// shape-port representative.
+    pub fn bucket_len(&self) -> usize {
+        lock_recover(&self.state).buckets.len()
     }
 
     /// True when nothing is stored.
@@ -153,9 +274,9 @@ mod tests {
     use crate::pipeline::optimize;
     use crate::workloads::{blocks, LoopKind, Mode, Workload};
 
-    fn ln_workload() -> Workload {
+    fn ln_workload_rows(rows: usize) -> Workload {
         let mut g = Graph::new("LN");
-        let x = g.param(Shape::new(vec![1024, 256]), DType::F32, "x");
+        let x = g.param(Shape::new(vec![rows, 256]), DType::F32, "x");
         let _ = blocks::layer_norm(&mut g, x, "ln");
         Workload {
             name: "LN",
@@ -167,11 +288,15 @@ mod tests {
         }
     }
 
+    fn ln_workload() -> Workload {
+        ln_workload_rows(1024)
+    }
+
     #[test]
     fn miss_then_hit_then_port() {
         let store = SharedPlanStore::new();
         let w = ln_workload();
-        let key = GraphKey::of(&w.graph);
+        let key = PlanKey::of(&w.graph);
         let v100 = DeviceSpec::v100();
 
         assert!(matches!(store.lookup(key, "V100"), PlanLookup::Miss));
@@ -201,20 +326,81 @@ mod tests {
         store.note_exact_hit();
         store.note_port_hit();
         store.note_port_hit();
+        store.note_bucket_hit();
         assert_eq!(
             store.stats(),
-            StoreStats { exact_hits: 1, port_hits: 2, misses: 1 }
+            StoreStats { exact_hits: 1, port_hits: 2, bucket_hits: 1, misses: 1 }
         );
         assert_eq!(store.len(), 1);
+        assert_eq!(store.bucket_len(), 1);
     }
 
     #[test]
-    fn vetoed_fallback_is_not_a_port_source() {
+    fn sibling_shape_is_a_bucket_hit_within_and_across_classes() {
+        // Explore LN at 1024 rows on V100; the 1000-row sibling (same
+        // structure, same power-of-two bucket) must resolve as a
+        // BucketHit on V100 — and on T4 too, through the bucket's
+        // first-FS cross-class fallback (a first touch of an
+        // already-explored bucket costs a retune, never an
+        // exploration).
+        let store = SharedPlanStore::new();
+        let big = ln_workload_rows(1024);
+        let sib = ln_workload_rows(1000);
+        let key_big = PlanKey::of(&big.graph);
+        let key_sib = PlanKey::of(&sib.graph);
+        assert_ne!(key_big.exact, key_sib.exact);
+        assert_eq!(key_big.shape, key_sib.shape);
+
+        let v100 = DeviceSpec::v100();
+        let prog = Arc::new(optimize(
+            &big,
+            &v100,
+            crate::pipeline::Tech::Fs,
+            &ExploreOptions::default(),
+        ));
+        store.insert(key_big, "V100", Arc::clone(&prog), 7.0);
+
+        match store.lookup(key_sib, "V100") {
+            PlanLookup::BucketHit { tuned_at, available_ms, .. } => {
+                assert_eq!(tuned_at, key_big.exact);
+                assert_eq!(available_ms, 7.0);
+            }
+            other => panic!("expected bucket hit, got {other:?}"),
+        }
+        assert!(matches!(store.lookup(key_sib, "T4"), PlanLookup::BucketHit { .. }));
+
+        // A shape outside the bucket misses even on V100.
+        let far = ln_workload_rows(4096);
+        let key_far = PlanKey::of(&far.graph);
+        assert_eq!(key_far.shape.structure, key_big.shape.structure);
+        assert_ne!(key_far.shape.bucket, key_big.shape.bucket);
+        assert!(matches!(store.lookup(key_far, "V100"), PlanLookup::Miss));
+
+        // Exact-tier resolution still wins over the bucket tier: once
+        // the sibling publishes its own program the bucket rep is moot.
+        let sib_prog = Arc::new(optimize(
+            &sib,
+            &v100,
+            crate::pipeline::Tech::Fs,
+            &ExploreOptions::default(),
+        ));
+        store.insert(key_sib, "V100", sib_prog, 9.0);
+        assert!(matches!(
+            store.lookup(key_sib, "V100"),
+            PlanLookup::Hit { ready_ms, .. } if ready_ms == 9.0
+        ));
+        // The bucket keeps its first representative (one class, one rep).
+        assert_eq!(store.bucket_len(), 1);
+    }
+
+    #[test]
+    fn vetoed_fallback_is_not_a_port_or_bucket_source() {
         // A class that stored its fallback (FS veto) must not offer it
-        // for porting: other classes should fully explore instead.
+        // for porting or shape-retuning: other lookups should fully
+        // explore instead.
         let store = SharedPlanStore::new();
         let w = ln_workload();
-        let key = GraphKey::of(&w.graph);
+        let key = PlanKey::of(&w.graph);
         let v100 = DeviceSpec::v100();
         let xla_prog = Arc::new(optimize(
             &w,
@@ -226,6 +412,11 @@ mod tests {
 
         assert!(matches!(store.lookup(key, "V100"), PlanLookup::Hit { .. }));
         assert!(matches!(store.lookup(key, "T4"), PlanLookup::Miss));
+        // The pinned fallback is not a shape-port rep either.
+        let sib = ln_workload_rows(1000);
+        let key_sib = PlanKey::of(&sib.graph);
+        assert!(matches!(store.lookup(key_sib, "V100"), PlanLookup::Miss));
+        assert_eq!(store.bucket_len(), 0);
         // Once an FS program lands (from the T4 exploration), it becomes
         // the source even though V100 inserted first.
         let t4 = DeviceSpec::t4();
@@ -240,5 +431,7 @@ mod tests {
             PlanLookup::Portable { tuned_on, .. } => assert_eq!(tuned_on, "T4"),
             other => panic!("expected portable, got {other:?}"),
         }
+        // And it is T4's bucket rep for sibling shapes.
+        assert!(matches!(store.lookup(key_sib, "T4"), PlanLookup::BucketHit { .. }));
     }
 }

@@ -21,16 +21,20 @@
 //! * `fstitch fleet [--v100 N] [--t4 N] [--capacity C] [--workers K]
 //!   [--tasks N] [--rate MS] [--templates T] [--seed S] [--out FILE]
 //!   [--executor virtual|wallclock] [--threads N]
-//!   [--compile-shards S] [--calibrate] [--drift-bound R]` — replay a
-//!   deterministic task trace through the multi-device fleet service
-//!   (§7.2) and print the fleet-wide report; `wallclock` runs compile
-//!   workers and per-device serving slots on real OS threads,
-//!   `--compile-shards` fans a multi-region graph's exploration out as
-//!   parallel region sub-jobs with a join barrier, and `--calibrate`
-//!   turns on the online cost-model calibration loop (fit per-class
-//!   corrections from served traffic; re-explore graphs whose
-//!   measured/predicted ratio drifts past `--drift-bound`, default
-//!   1.4, publishing only strictly-better plans).
+//!   [--compile-shards S] [--calibrate] [--drift-bound R]
+//!   [--dynamic-shapes]` — replay a deterministic task trace through
+//!   the multi-device fleet service (§7.2) and print the fleet-wide
+//!   report; `wallclock` runs compile workers and per-device serving
+//!   slots on real OS threads, `--compile-shards` fans a multi-region
+//!   graph's exploration out as parallel region sub-jobs with a join
+//!   barrier, `--calibrate` turns on the online cost-model calibration
+//!   loop (fit per-class corrections from served traffic; re-explore
+//!   graphs whose measured/predicted ratio drifts past
+//!   `--drift-bound`, default 1.4, publishing only strictly-better
+//!   plans), and `--dynamic-shapes` draws a (batch, seq) per task from
+//!   seeded per-template shape distributions, serving sibling shapes
+//!   through the plan store's power-of-two bucket tier (launch-dim
+//!   retune instead of per-shape re-exploration).
 
 use fusion_stitching::coordinator::{JitService, ServiceOptions};
 use fusion_stitching::fleet;
@@ -306,11 +310,17 @@ fn main() {
             if templates == 0 {
                 bad_flag("--templates", "need at least one template");
             }
+            // --dynamic-shapes: shape-polymorphic traffic — every task
+            // draws (batch, seq) from its template's seeded shape
+            // distribution and sibling shapes reuse plans through the
+            // store's power-of-two bucket tier.
+            let dynamic_shapes = has_flag("--dynamic-shapes");
             let traffic = fleet::TrafficConfig {
                 tasks: num("--tasks", 400),
                 templates,
                 seed,
                 mean_interarrival_ms: rate,
+                dynamic_shapes,
                 ..Default::default()
             };
             let (v100s, t4s) = (num("--v100", 2), num("--t4", 2));
@@ -371,18 +381,19 @@ fn main() {
             };
             println!(
                 "== fleet: {} tasks over {} templates on {} devices ({} slots), \
-                 seed {:#x}, executor {}, compile shards {} ==\n",
+                 seed {:#x}, executor {}, compile shards {}, shapes {} ==\n",
                 traffic.tasks,
                 traffic.templates,
                 opts.registry.len(),
                 opts.registry.total_capacity(),
                 traffic.seed,
                 executor.name(),
-                compile_shards
+                compile_shards,
+                if dynamic_shapes { "dynamic" } else { "static" }
             );
-            let templates = fleet::build_templates(&traffic);
+            let families = fleet::build_template_families(&traffic);
             let trace = fleet::generate_trace(&traffic);
-            let mut svc = fleet::FleetService::new(opts, templates);
+            let mut svc = fleet::FleetService::with_families(opts, families);
             let report = svc.run_trace(&trace);
             println!("{}", report.render());
             println!(
@@ -393,6 +404,19 @@ fn main() {
                 report.port_hits,
                 report.regressions
             );
+            if dynamic_shapes {
+                println!(
+                    "dynamic shapes: {} distinct graphs in {} buckets; {} bucket hits \
+                     ({} shape retunes, {} fell back to full exploration); \
+                     {} full explorations",
+                    report.distinct_shapes,
+                    report.distinct_buckets,
+                    report.bucket_hits,
+                    report.bucket_retunes,
+                    report.bucket_failures,
+                    report.explore_jobs
+                );
+            }
             if report.shard_jobs > 0 {
                 println!(
                     "region-sharded compile: {} sub-jobs across {} explorations; \
@@ -439,7 +463,7 @@ fn main() {
                  [--explore] [--tech tf|xla|fs] [--out FILE] [--run] [--v100 N] [--t4 N] \
                  [--capacity C] [--workers K] [--tasks N] [--rate MS] [--templates T] \
                  [--seed S] [--executor virtual|wallclock] [--threads N] [--compile-shards S] \
-                 [--calibrate] [--drift-bound R]"
+                 [--calibrate] [--drift-bound R] [--dynamic-shapes]"
             );
         }
     }

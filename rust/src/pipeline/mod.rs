@@ -255,6 +255,37 @@ pub fn port_program(
     })
 }
 
+/// Port an already-optimized program to a *sibling shape* of the same
+/// graph structure: keep the fusion plan (the expensive §5 exploration
+/// result, whose node ids are valid on any same-structure graph because
+/// siblings share one construction order) and re-run only the §4.2
+/// launch-dimension tuner + lowering against the new shapes, on the
+/// same device class. The tuner re-checks shared-memory and occupancy
+/// feasibility through [`DeviceSpec::occupancy`] at the new shape — a
+/// pattern whose schedule no longer launches there is dropped by
+/// lowering, the kernel-count guard below catches it, and the caller
+/// re-explores from scratch. This is [`port_program`] generalized from
+/// device-porting to shape-porting (the fleet's `BucketHit` tier).
+pub fn reshape_program(
+    graph: &Graph,
+    prog: &OptimizedProgram,
+    device: &DeviceSpec,
+    loop_kind: LoopKind,
+) -> Option<OptimizedProgram> {
+    // Defense against a (structure, bucket) hash collision handing us a
+    // plan from a *different* structure: every pattern node id must at
+    // least exist on the target graph.
+    let in_bounds = prog
+        .plan
+        .patterns
+        .iter()
+        .all(|p| p.nodes().iter().all(|n| n.idx() < graph.len()));
+    if !in_bounds {
+        return None;
+    }
+    port_program(graph, prog, device, loop_kind)
+}
+
 /// One Table-2 row: technique + breakdown.
 #[derive(Debug, Clone)]
 pub struct Table2Row {
@@ -359,6 +390,43 @@ mod tests {
         // The ported program is servable: positive simulated latency.
         let sim = Simulator::new(t4, SimConfig::xla_runtime());
         assert!(sim.run(&ported.kernels, w.loop_kind).e2e_ms() > 0.0);
+    }
+
+    #[test]
+    fn reshape_program_retunes_at_sibling_shapes() {
+        // Optimize LN at one shape, then shape-port the program to a
+        // sibling graph (same structure, different rows) on the same
+        // device: the plan is kept, lowering re-tunes launch dims, and
+        // the ported program serves with positive simulated latency.
+        let ln_rows = |rows: usize| {
+            let mut g = Graph::new("LN");
+            let x = g.param(Shape::new(vec![rows, 768]), DType::F32, "x");
+            let _ = blocks::layer_norm(&mut g, x, "ln");
+            Workload {
+                name: "LN",
+                field: "micro",
+                mode: Mode::Infer,
+                batch: 32,
+                loop_kind: crate::workloads::LoopKind::None,
+                graph: g,
+            }
+        };
+        let device = DeviceSpec::v100();
+        let src = ln_rows(4096);
+        let prog = optimize(&src, &device, Tech::Fs, &ExploreOptions::default());
+        let sib = ln_rows(3000); // same pow2 bucket as 4096
+        let ported = reshape_program(&sib.graph, &prog, &device, sib.loop_kind)
+            .expect("sibling shape must shape-port");
+        assert_eq!(ported.tech, Tech::Fs);
+        assert_eq!(ported.plan.patterns.len(), prog.plan.patterns.len());
+        let sim = Simulator::new(device.clone(), SimConfig::xla_runtime());
+        assert!(sim.run(&ported.kernels, sib.loop_kind).e2e_ms() > 0.0);
+
+        // A foreign graph (fewer nodes than the plan covers) is
+        // rejected outright — hash-collision defense.
+        let mut tiny = Graph::new("tiny");
+        let _ = tiny.param(Shape::new(vec![8]), DType::F32, "p");
+        assert!(reshape_program(&tiny, &prog, &device, sib.loop_kind).is_none());
     }
 
     #[test]

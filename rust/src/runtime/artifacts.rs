@@ -40,30 +40,30 @@ pub struct ArtifactSet;
 
 impl ArtifactSet {
     /// Fused layer-norm (FusionStitching outcome: one module).
-    pub const LN_FUSED: &'static str = "ln_fused";
+    pub const LN_FUSED: &str = "ln_fused";
     /// Pure-jnp oracle module for parity checks.
-    pub const LN_REFERENCE: &'static str = "ln_reference";
+    pub const LN_REFERENCE: &str = "ln_reference";
     /// The 4-kernel XLA partition of Fig. 1, one module per kernel.
-    pub const LN_PART1: &'static str = "ln_part1_sum";
-    pub const LN_PART2: &'static str = "ln_part2_var";
-    pub const LN_PART3: &'static str = "ln_part3_rsqrt";
-    pub const LN_PART4: &'static str = "ln_part4_scale";
+    pub const LN_PART1: &str = "ln_part1_sum";
+    pub const LN_PART2: &str = "ln_part2_var";
+    pub const LN_PART3: &str = "ln_part3_rsqrt";
+    pub const LN_PART4: &str = "ln_part4_scale";
     /// Fused softmax.
-    pub const SOFTMAX_FUSED: &'static str = "softmax_fused";
+    pub const SOFTMAX_FUSED: &str = "softmax_fused";
     /// MLP block (GEMM + bias + GELU + layer-norm).
-    pub const MLP_BLOCK: &'static str = "mlp_block";
+    pub const MLP_BLOCK: &str = "mlp_block";
     /// Transformer encoder layer forward.
-    pub const ENCODER_LAYER: &'static str = "encoder_layer";
+    pub const ENCODER_LAYER: &str = "encoder_layer";
     /// Stitched bias+GELU kernel.
-    pub const GELU_BIAS_FUSED: &'static str = "gelu_bias_fused";
+    pub const GELU_BIAS_FUSED: &str = "gelu_bias_fused";
     /// Stitched softmax cross-entropy head (FS outcome: one kernel).
-    pub const XENT_FUSED: &'static str = "softmax_xent_fused";
+    pub const XENT_FUSED: &str = "softmax_xent_fused";
     /// The same loss head lowered as straight jnp (XLA-style splits).
-    pub const XENT_UNFUSED: &'static str = "softmax_xent_unfused";
+    pub const XENT_UNFUSED: &str = "softmax_xent_unfused";
     /// Stitched residual-add + layer-norm epilogue.
-    pub const RESIDUAL_LN_FUSED: &'static str = "residual_ln_fused";
+    pub const RESIDUAL_LN_FUSED: &str = "residual_ln_fused";
     /// Stitched per-head attention (MXU/VPU block composition).
-    pub const ATTENTION_FUSED: &'static str = "attention_fused";
+    pub const ATTENTION_FUSED: &str = "attention_fused";
 
     /// All stems, for availability checks.
     pub fn all() -> Vec<&'static str> {

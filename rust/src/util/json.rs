@@ -51,7 +51,10 @@ impl JsonValue {
         }
     }
 
-    /// Serialize compactly.
+    /// Serialize compactly. (Deliberately an inherent method, not a
+    /// `Display` impl: serialization is explicit in this crate and the
+    /// recursive writer borrows `&mut String` directly.)
+    #[allow(clippy::inherent_to_string)]
     pub fn to_string(&self) -> String {
         let mut out = String::new();
         self.write(&mut out);

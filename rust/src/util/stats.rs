@@ -123,6 +123,48 @@ mod tests {
     }
 
     #[test]
+    fn single_sample_every_quantile_is_the_sample() {
+        // Degenerate but production-reachable (a fleet trace with one
+        // compile job): every quantile of a singleton is the sample.
+        let xs = [7.25];
+        for q in [0.0, 0.25, 0.5, 0.95, 0.99, 1.0] {
+            assert_eq!(percentile(&xs, q), 7.25, "q={q}");
+        }
+        assert_eq!(median(&xs), 7.25);
+        assert_eq!(percentiles(&xs, &[0.0, 0.5, 1.0]), vec![7.25, 7.25, 7.25]);
+        assert_eq!(mean(&xs), 7.25);
+    }
+
+    #[test]
+    fn duplicate_heavy_input_is_stable() {
+        // Queue-wait series are duplicate-heavy (thousands of zero
+        // waits plus a tail): ties must not perturb the ranks.
+        let mut xs = vec![0.0; 980];
+        xs.extend([5.0; 19]);
+        xs.push(100.0);
+        let s = summarize(&xs);
+        assert_eq!(s.n, 1000);
+        // Nearest-rank indices: round(999·q) → 500, 949, 989.
+        assert_eq!(s.p50, 0.0);
+        assert_eq!(s.p95, 0.0, "95th of 98% zeros is still zero");
+        assert_eq!(s.p99, 5.0);
+        assert_eq!(s.min, 0.0);
+        assert_eq!(s.max, 100.0);
+        assert_eq!(median(&xs), 0.0);
+        // All-identical input: every statistic collapses to the value.
+        let same = vec![3.5; 64];
+        let t = summarize(&same);
+        assert_eq!((t.p50, t.p95, t.p99, t.min, t.max, t.mean), (3.5, 3.5, 3.5, 3.5, 3.5, 3.5));
+    }
+
+    #[test]
+    fn out_of_range_quantiles_clamp() {
+        let xs = [1.0, 2.0, 3.0];
+        assert_eq!(percentile(&xs, -0.5), 1.0);
+        assert_eq!(percentile(&xs, 2.0), 3.0);
+    }
+
+    #[test]
     fn summary_ordering_holds() {
         let xs = vec![9.0, 2.0, 7.0, 4.0, 1.0, 8.0, 3.0];
         let s = summarize(&xs);

@@ -100,15 +100,28 @@ pub fn catalog() -> Vec<Workload> {
 // BERT (NLP, both modes, batch 32)
 // ---------------------------------------------------------------------
 
-/// BERT encoder stack. Calibration: 4 encoder layers for training (fwd +
-/// structural bwd ≈ 560 memory-intensive ops ≈ Table 2's 561), 6 layers +
-/// embedding/pooler for inference (≈ 365). The inference variant is a
-/// distilled/small deployment config (Table 2's BERT-infer row shows
-/// Math ≈ 2.5 ms vs 42 ms for training — clearly not the same width).
+/// BERT encoder stack at the paper's Table-1 shapes. Calibration: 4
+/// encoder layers for training (fwd + structural bwd ≈ 560
+/// memory-intensive ops ≈ Table 2's 561), 6 layers + embedding/pooler
+/// for inference (≈ 365). The inference variant is a distilled/small
+/// deployment config (Table 2's BERT-infer row shows Math ≈ 2.5 ms vs
+/// 42 ms for training — clearly not the same width).
 pub fn bert(mode: Mode) -> Workload {
-    let (batch, seq, hidden, heads) = match mode {
-        Mode::Train => (32, 128, 768, 12),
-        Mode::Infer => (32, 64, 256, 8),
+    match mode {
+        Mode::Train => bert_with(mode, 32, 128),
+        Mode::Infer => bert_with(mode, 32, 64),
+    }
+}
+
+/// [`bert`] parameterized over (batch, seq): the op-graph *structure*
+/// (layer count, op kinds, edges) is invariant to both — only shapes
+/// change — so instantiations at different (batch, seq) are structure
+/// siblings the fleet's shape-bucketed plan store can generalize
+/// across.
+pub fn bert_with(mode: Mode, batch: usize, seq: usize) -> Workload {
+    let (hidden, heads) = match mode {
+        Mode::Train => (768, 12),
+        Mode::Infer => (256, 8),
     };
     let layers = match mode {
         Mode::Train => 4,
@@ -215,7 +228,15 @@ pub fn bert(mode: Mode) -> Workload {
 /// per-step auxiliary-loss network (the reason DIEN-train's op count
 /// nearly triples in Table 2).
 pub fn dien(mode: Mode) -> Workload {
-    let (batch, seq_len, emb, hidden) = (256, 100, 32, 64);
+    dien_with(mode, 256, 100)
+}
+
+/// [`dien`] parameterized over (batch, seq_len). Batch variation is
+/// shape-polymorphic (structure invariant); `seq_len` changes the
+/// unrolled recurrence *depth* and therefore the structure — sibling
+/// instances for bucket generalization must share it.
+pub fn dien_with(mode: Mode, batch: usize, seq_len: usize) -> Workload {
+    let (emb, hidden) = (32, 64);
     let mut g = Graph::new(format!("DIEN-{mode:?}"));
 
     // Behaviour/candidate embeddings.
@@ -324,13 +345,18 @@ pub fn dien(mode: Mode) -> Workload {
 /// Transformer NMT (training): 6 encoder + 6 decoder layers at the
 /// standard base width, label-smoothed cross-entropy, structural bwd.
 pub fn transformer() -> Workload {
-    let (tokens, hidden, heads) = (4096, 512, 8);
-    let (batch, seq) = (64, 64); // 4096 tokens
+    transformer_with(64, 64) // 4096 tokens
+}
+
+/// [`transformer`] parameterized over (batch, seq); structure is
+/// invariant to both (fixed 6+6 layer stack), so instantiations are
+/// shape siblings.
+pub fn transformer_with(batch: usize, seq: usize) -> Workload {
+    let (hidden, heads) = (512, 8);
     let layers = 6; // Transformer-base depth; calibrates Table 2's 2497/399 populations
     let mut g = Graph::new("Transformer-train");
     let shape = Shape::new(vec![batch, seq, hidden]);
     let rows = batch * seq;
-    assert_eq!(rows, tokens);
 
     let src = g.param(shape.clone(), DType::F32, "src/emb");
     let pos = g.param(shape.clone(), DType::F32, "src/pos");
@@ -392,7 +418,7 @@ pub fn transformer() -> Workload {
         name: "Transformer",
         field: "NLP",
         mode: Mode::Train,
-        batch: 4096,
+        batch: rows,
         loop_kind: LoopKind::None,
         graph: g,
     }
@@ -406,7 +432,13 @@ pub fn transformer() -> Workload {
 /// layers unrolled over 20 frames (TF `BasicLSTMCell` concatenates
 /// [x; h] into a single GEMM per step), attention + greedy decoder.
 pub fn asr() -> Workload {
-    let (batch, frames, feat, hidden) = (8, 20, 80, 256);
+    asr_with(8, 20)
+}
+
+/// [`asr`] parameterized over (batch, frames). Batch variation keeps
+/// the structure; `frames` changes the unrolled LSTM depth (structure).
+pub fn asr_with(batch: usize, frames: usize) -> Workload {
+    let (feat, hidden) = (80, 256);
     let mut g = Graph::new("ASR-infer");
     let feats = g.param(Shape::new(vec![batch, frames, feat]), DType::F32, "feats");
 
@@ -484,7 +516,14 @@ pub fn asr() -> Workload {
 /// CRNN OCR inference: conv/BN/ReLU backbone, column-wise bidirectional
 /// LSTM over the feature width, per-column softmax (CTC front).
 pub fn crnn() -> Workload {
-    let (batch, height, width) = (8, 32, 64);
+    crnn_with(8, 64)
+}
+
+/// [`crnn`] parameterized over (batch, width). Batch variation keeps
+/// the structure; `width` changes the column recurrence depth
+/// (structure).
+pub fn crnn_with(batch: usize, width: usize) -> Workload {
+    let height = 32;
     let mut g = Graph::new("CRNN-infer");
     let mut x = g.param(Shape::new(vec![batch, height, width * 2, 1]), DType::F32, "img");
 
@@ -824,6 +863,58 @@ mod tests {
         assert_eq!(asr().loop_kind, LoopKind::StaticUnrolled);
         assert_eq!(crnn().loop_kind, LoopKind::StaticUnrolled);
         assert!(asr().recurrent() && crnn().recurrent());
+    }
+
+    #[test]
+    fn sized_builders_are_structure_invariant_in_batch_and_seq() {
+        // The shape-polymorphic contract: instantiations of one builder
+        // at different (batch, seq) share op kinds, edges and ranks —
+        // only dimension values move. (For the recurrent builders this
+        // holds for batch; their seq/frames/width change the unrolled
+        // depth and are therefore structural.)
+        let structurally_equal = |a: &Workload, b: &Workload| {
+            assert_eq!(a.graph.len(), b.graph.len(), "{} op count", a.key());
+            for (x, y) in a.graph.nodes().iter().zip(b.graph.nodes()) {
+                assert_eq!(x.kind, y.kind, "{} kind at {}", a.key(), x.id);
+                assert_eq!(x.inputs, y.inputs, "{} edges at {}", a.key(), x.id);
+                assert_eq!(x.shape.rank(), y.shape.rank(), "{} rank at {}", a.key(), x.id);
+            }
+        };
+        structurally_equal(&bert_with(Mode::Infer, 8, 32), &bert_with(Mode::Infer, 16, 48));
+        structurally_equal(&bert_with(Mode::Train, 8, 32), &bert_with(Mode::Train, 4, 64));
+        structurally_equal(&transformer_with(8, 16), &transformer_with(16, 32));
+        structurally_equal(&dien_with(Mode::Infer, 64, 10), &dien_with(Mode::Infer, 128, 10));
+        structurally_equal(&asr_with(4, 5), &asr_with(16, 5));
+        structurally_equal(&crnn_with(4, 8), &crnn_with(16, 8));
+        // And the shapes really differ (not a no-op parameterization).
+        let (a, b) = (bert_with(Mode::Infer, 8, 32), bert_with(Mode::Infer, 16, 48));
+        assert!(a
+            .graph
+            .nodes()
+            .iter()
+            .zip(b.graph.nodes())
+            .any(|(x, y)| x.shape != y.shape));
+    }
+
+    #[test]
+    fn default_builders_match_their_sized_forms() {
+        let pairs = [
+            (bert(Mode::Train), bert_with(Mode::Train, 32, 128)),
+            (bert(Mode::Infer), bert_with(Mode::Infer, 32, 64)),
+            (dien(Mode::Infer), dien_with(Mode::Infer, 256, 100)),
+            (transformer(), transformer_with(64, 64)),
+            (asr(), asr_with(8, 20)),
+            (crnn(), crnn_with(8, 64)),
+        ];
+        for (d, s) in &pairs {
+            assert_eq!(d.graph.len(), s.graph.len());
+            assert_eq!(d.batch, s.batch);
+            for (x, y) in d.graph.nodes().iter().zip(s.graph.nodes()) {
+                assert_eq!(x.kind, y.kind);
+                assert_eq!(x.shape, y.shape);
+            }
+        }
+        assert_eq!(transformer().batch, 4096, "Table-1 token count preserved");
     }
 
     #[test]

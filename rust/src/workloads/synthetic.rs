@@ -40,12 +40,33 @@ impl Default for SyntheticConfig {
 /// construction: binary ops only combine equal shapes; reductions reduce
 /// the last axis; broadcasts re-expand reduced values.
 pub fn generate(cfg: &SyntheticConfig, prng: &mut Prng) -> Graph {
+    generate_inner(cfg, prng, None)
+}
+
+/// Like [`generate`] but every parameter uses `rows` as its leading
+/// dimension (columns still drawn from `dim_choices`). The PRNG draw
+/// sequence and every structural decision are independent of `rows`
+/// (requires `rows >= 2` so reducibility checks cannot flip), so two
+/// calls with the same seed produce graphs of **identical structure**
+/// whose shapes differ only in the leading dimension — the contract the
+/// fleet's shape-scalable template families
+/// ([`crate::fleet::TemplateFamily`]) and the shape-bucketed plan store
+/// rely on.
+pub fn generate_scaled(cfg: &SyntheticConfig, prng: &mut Prng, rows: usize) -> Graph {
+    assert!(rows >= 2, "scaled graphs need rows >= 2 for structure invariance");
+    generate_inner(cfg, prng, Some(rows))
+}
+
+fn generate_inner(cfg: &SyntheticConfig, prng: &mut Prng, fixed_rows: Option<usize>) -> Graph {
     let mut g = Graph::new("synthetic");
     // Pools of live values indexed by shape so binaries can find matches.
     let mut values: Vec<NodeId> = Vec::new();
 
     for i in 0..cfg.num_params {
-        let rows = *prng.pick(&cfg.dim_choices);
+        let rows = match fixed_rows {
+            Some(r) => r,
+            None => *prng.pick(&cfg.dim_choices),
+        };
         let cols = *prng.pick(&cfg.dim_choices);
         values.push(g.param(Shape::new(vec![rows, cols]), DType::F32, format!("p{i}")));
     }
@@ -137,6 +158,30 @@ mod tests {
             assert_eq!(a.kind, b.kind);
             assert_eq!(a.shape, b.shape);
         }
+    }
+
+    #[test]
+    fn scaled_graphs_share_structure_across_rows() {
+        // One seed, many row counts: identical op kinds and edges, only
+        // the leading dimension moves — the shape-family contract.
+        let cfg = SyntheticConfig { num_ops: 80, ..Default::default() };
+        let at = |rows: usize| generate_scaled(&cfg, &mut Prng::new(4242), rows);
+        let base = at(64);
+        base.validate().unwrap();
+        for rows in [2usize, 48, 63, 65, 100, 1024] {
+            let g = at(rows);
+            g.validate().unwrap();
+            assert_eq!(g.len(), base.len(), "rows={rows}");
+            for (a, b) in base.nodes().iter().zip(g.nodes()) {
+                assert_eq!(a.kind, b.kind, "rows={rows} node {}", a.id);
+                assert_eq!(a.inputs, b.inputs, "rows={rows} node {}", a.id);
+                assert_eq!(a.shape.rank(), b.shape.rank(), "rows={rows} node {}", a.id);
+            }
+        }
+        // The shapes really scale (params carry the requested rows).
+        let g100 = at(100);
+        let scaled_param = g100.nodes().iter().find(|n| n.kind == OpKind::Parameter).unwrap();
+        assert_eq!(scaled_param.shape.dims()[0], 100);
     }
 
     #[test]

@@ -195,6 +195,42 @@ fn fleet_calibrate_reports_drift_and_reexplorations() {
 }
 
 #[test]
+fn fleet_dynamic_shapes_reports_bucket_reuse() {
+    let out = std::env::temp_dir().join("fstitch_cli_fleet_dyn.json");
+    let _ = std::fs::remove_file(&out);
+    let (stdout, stderr, ok) = fstitch(&[
+        "fleet",
+        "--tasks",
+        "120",
+        "--templates",
+        "4",
+        "--v100",
+        "1",
+        "--t4",
+        "1",
+        "--dynamic-shapes",
+        "--out",
+        out.to_str().unwrap(),
+    ]);
+    assert!(ok, "fleet --dynamic-shapes failed:\n{stdout}\n{stderr}");
+    assert!(stdout.contains("shapes dynamic"), "{stdout}");
+    assert!(stdout.contains("dynamic shapes:"), "{stdout}");
+    assert!(stdout.contains("FS regressions: 0"), "{stdout}");
+    let text = std::fs::read_to_string(&out).expect("fleet JSON written");
+    let json = fusion_stitching::util::JsonValue::parse(&text).expect("valid JSON");
+    let shapes = json.get("distinct_shapes").and_then(|v| v.as_usize()).unwrap_or(0);
+    let buckets = json.get("distinct_buckets").and_then(|v| v.as_usize()).unwrap_or(0);
+    let bucket_hits = json.get("bucket_hits").and_then(|v| v.as_usize()).unwrap_or(0);
+    let explores = json.get("explore_jobs").and_then(|v| v.as_usize()).unwrap_or(usize::MAX);
+    assert!(shapes > 4, "shape-varying traffic must serve many graphs: {text}");
+    assert!(buckets < shapes, "buckets must coalesce siblings: {text}");
+    assert!(bucket_hits > 0, "sibling shapes must reuse plans: {text}");
+    assert!(explores < shapes, "explorations must stay sublinear in shapes: {text}");
+    assert_eq!(json.get("regressions").and_then(|v| v.as_usize()), Some(0));
+    let _ = std::fs::remove_file(&out);
+}
+
+#[test]
 fn fleet_wallclock_executor_runs_on_real_threads() {
     let out = std::env::temp_dir().join("fstitch_cli_fleet_wall.json");
     let _ = std::fs::remove_file(&out);

@@ -381,7 +381,7 @@ fn attention_artifact_rows_are_convex_combinations() {
         (lo.min(x), hi.max(x))
     });
     assert!(
-        out.iter().all(|&x| x >= vmin - 1e-4 && x <= vmax + 1e-4),
+        out.iter().all(|&x| (vmin - 1e-4..=vmax + 1e-4).contains(&x)),
         "attention output escaped v's convex hull"
     );
     // Determinism.
