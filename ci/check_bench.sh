@@ -95,6 +95,45 @@ assert "dynamic-shape run must never regress" '.dynamic_shapes.regressions == 0'
 assert "dynamic-shape decisions match virtual" \
   '.dynamic_shapes.matches_virtual_decisions == true'
 
+# Flight recorder: recording must never perturb decisions (asserted
+# inside the bench by byte-comparing the stripped traced report), and
+# when the `obs` feature is compiled in (the default build), the
+# observability section must carry the full stage-attribution and
+# lock-contention tables.
+assert "observability section present" '.observability | has("enabled")'
+assert "traced replays export identical Chrome traces" \
+  '.observability.trace_identical_across_replays == true'
+if [[ "$(jq -r '.observability.enabled' "$BENCH")" == "true" ]]; then
+  assert "traced run recorded events without overflow" \
+    '.observability.events_recorded > 0 and .observability.events_dropped == 0'
+  assert "all stage rows present" \
+    '.observability.virtual.stages
+     | has("queue") and has("compile_explore") and has("compile_port")
+       and has("compile_bucket") and has("compile_reexplore") and has("barrier")
+       and has("serve") and has("e2e")'
+  assert "stage percentiles populated" \
+    '.observability.virtual.stages.serve.p99_ms >= .observability.virtual.stages.serve.p50_ms
+     and .observability.virtual.stages.e2e.count > 0'
+  assert "queue + serve totals close to e2e" \
+    '(.observability.virtual.stages.queue.total_ms + .observability.virtual.stages.serve.total_ms
+      - .observability.virtual.stages.e2e.total_ms) | (if . < 0 then -. else . end) < 1e-3'
+  assert "all hot-lock profiles present" \
+    '.observability.virtual.locks
+     | has("plan_store") and has("work_queue") and has("publication_barrier")
+       and has("service_metrics")'
+  assert "lock rows carry the contention fields" \
+    '.observability.virtual.locks.plan_store
+     | has("acquisitions") and has("contended") and has("blocked_ms")'
+  assert "virtual replay never blocks on the publication barrier" \
+    '.observability.virtual.locks.publication_barrier.acquisitions == 0'
+  assert "wall run crosses the publication barrier" \
+    '.observability.wallclock.locks.publication_barrier.acquisitions > 0'
+  assert "wall dispatcher measures real barrier stalls" \
+    '.observability.wallclock.locks.publication_barrier.blocked_ms > 0'
+  assert "wall run exercises the work-stealing deques" \
+    '.observability.wallclock.locks.work_queue.acquisitions > 0'
+fi
+
 echo "check_bench: structural gates OK ($BENCH)"
 
 # ---------------------------------------------------------------------

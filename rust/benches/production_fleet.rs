@@ -34,6 +34,14 @@
 //! distinct graphs served — the paper's tune-once-run-many economics
 //! under realistic traffic.
 //!
+//! A **flight recorder** section then replays the same trace with
+//! tracing on: stage-attributed latency (queue / compile tiers /
+//! barrier / serve) and lock-contention profiles fold into the report,
+//! two traced virtual replays must export byte-identical Chrome
+//! traces, and — the load-bearing gate — the traced report with its
+//! observability section stripped is byte-identical to the untraced
+//! one: recording never perturbs decisions.
+//!
 //! Run: `cargo bench --bench production_fleet` (add `-- N` for trace
 //! size, default 1200, acceptance floor 1000; `--threads K` for the
 //! wall-clock pool size, default 2; `--compile-shards S`, default 4).
@@ -44,6 +52,7 @@ use fusion_stitching::fleet::{
     build_template_families, build_templates, generate_trace, DeviceRegistry, ExecutorKind,
     FleetOptions, FleetReport, FleetService, TrafficConfig,
 };
+use fusion_stitching::obs::{chrome_trace, TraceDump};
 use fusion_stitching::util::JsonValue;
 use fusion_stitching::workloads::Workload;
 
@@ -76,6 +85,19 @@ fn run_calibrated(
     let opts = FleetOptions { executor, calibrate: true, ..base_options() };
     let mut svc = FleetService::new(opts, templates.to_vec());
     svc.run_trace(&trace)
+}
+
+fn run_traced(
+    traffic: &TrafficConfig,
+    templates: &[Workload],
+    executor: ExecutorKind,
+) -> (FleetReport, Option<TraceDump>) {
+    let trace = generate_trace(traffic);
+    let opts = FleetOptions { executor, observe: true, ..base_options() };
+    let mut svc = FleetService::new(opts, templates.to_vec());
+    let report = svc.run_trace(&trace);
+    let dump = svc.trace_dump();
+    (report, dump)
 }
 
 fn run_dynamic(traffic: &TrafficConfig, executor: ExecutorKind) -> FleetReport {
@@ -328,6 +350,47 @@ fn main() {
         dynamic.saved_frac() * 100.0
     );
 
+    // Flight recorder: the same trace with tracing on. Recording must
+    // not perturb decisions (the traced report, with its observability
+    // section stripped, is byte-identical to the untraced report), two
+    // traced virtual replays must export byte-identical Chrome traces,
+    // and the wall-clock run must profile real publication-barrier and
+    // work-queue contention.
+    println!("\n== flight recorder: stage attribution + contention profile ==");
+    let obs_enabled = fusion_stitching::obs::recorder::ENABLED;
+    let (mut traced, traced_dump) = run_traced(&traffic, &templates, ExecutorKind::VirtualTime);
+    let vobs = traced.observability.take();
+    assert_eq!(
+        traced.to_json().to_string(),
+        report.to_json().to_string(),
+        "tracing must not perturb the virtual decision stream"
+    );
+    assert_eq!(vobs.is_some(), obs_enabled, "observe folds a section into the report");
+    let (_, replay_dump) = run_traced(&traffic, &templates, ExecutorKind::VirtualTime);
+    let trace_identical = match (&traced_dump, &replay_dump) {
+        (Some(a), Some(b)) => chrome_trace(a).to_string() == chrome_trace(b).to_string(),
+        _ => !obs_enabled,
+    };
+    assert!(trace_identical, "traced virtual replays must export identical Chrome traces");
+    let (mut wall_traced, _) =
+        run_traced(&traffic, &templates, ExecutorKind::WallClock { threads });
+    let wobs = wall_traced.observability.take();
+    assert_eq!(
+        decisions(&wall_traced),
+        decisions(&report),
+        "traced wall-clock run diverged from virtual decisions"
+    );
+    if let Some(w) = &wobs {
+        let barrier = w.lock("publication_barrier").expect("barrier profile");
+        assert!(barrier.acquisitions > 0, "wall dispatcher must cross the publication barrier");
+        let queue = w.lock("work_queue").expect("deque profile");
+        assert!(queue.acquisitions > 0, "wall compile pool must touch the work-stealing deques");
+    }
+    match &vobs {
+        Some(v) => println!("{}", v.render()),
+        None => println!("flight recorder: built without the `obs` feature; section skipped"),
+    }
+
     let projected = report.projected_gpu_hours_saved(30_000.0, 2.0);
     println!(
         "\nGPU time saved: {:.1} ms of {:.1} ms fallback-only ({:.1}%)",
@@ -404,6 +467,18 @@ fn main() {
         .set("saved_frac_uncalibrated", report.saved_frac())
         .set("plan_quality_no_worse", plan_quality_no_worse)
         .set("matches_virtual_decisions", true);
+    let mut obs_json = JsonValue::obj();
+    obs_json
+        .set("enabled", obs_enabled)
+        .set("trace_identical_across_replays", trace_identical)
+        .set("events_recorded", traced_dump.as_ref().map_or(0, |d| d.recorded))
+        .set("events_dropped", traced_dump.as_ref().map_or(0, |d| d.dropped));
+    if let Some(v) = &vobs {
+        obs_json.set("virtual", v.to_json());
+    }
+    if let Some(w) = &wobs {
+        obs_json.set("wallclock", w.to_json());
+    }
     let mut out = JsonValue::obj();
     out.set("bench", "production_fleet")
         .set("tasks", traffic.tasks)
@@ -415,7 +490,8 @@ fn main() {
         .set("wallclock", wall_json)
         .set("sharded", sharded_json)
         .set("dynamic_shapes", dynamic_json)
-        .set("calibration", calibration_json);
+        .set("calibration", calibration_json)
+        .set("observability", obs_json);
     let path = "BENCH_fleet.json";
     match std::fs::write(path, out.to_pretty()) {
         Ok(()) => println!("wrote {path}"),

@@ -117,6 +117,16 @@ pub fn predict_iter_ms(spec: &DeviceSpec, prog: &OptimizedProgram, params: &Cost
     (kernel_us + params.iter_overhead_us) / 1e3
 }
 
+/// Judge one measured-vs-predicted observation against a symmetric
+/// drift bound: returns the measured/predicted ratio and whether it
+/// falls outside `[1/bound, bound]` (the re-exploration trigger).
+/// Bounds below 1.0 are clamped to 1.0 so the interval is never empty.
+pub fn drift_verdict(measured_ms: f64, predicted_ms: f64, bound: f64) -> (f64, bool) {
+    let ratio = measured_ms / predicted_ms.max(1e-12);
+    let bound = bound.max(1.0);
+    (ratio, ratio > bound || ratio * bound < 1.0)
+}
+
 /// Per-kernel calibration samples of one published program (x under the
 /// default structural constants, y from the simulator + host charges).
 /// Unlaunchable kernels (poisoned model time) are excluded.
@@ -347,6 +357,22 @@ mod tests {
         let (a, b) = theil_sen(&samples);
         assert!((b - 1.5).abs() < 0.05, "slope {b}");
         assert!((a - 3.0).abs() < 0.5, "intercept {a}");
+    }
+
+    #[test]
+    fn drift_verdict_is_symmetric_and_clamps_bound() {
+        // Inside the band: no drift either direction.
+        assert!(!drift_verdict(1.4, 1.0, 1.5).1);
+        assert!(!drift_verdict(0.7, 1.0, 1.5).1);
+        // Outside the band: both slow and fast drifts trigger.
+        let (ratio, drifted) = drift_verdict(2.0, 1.0, 1.5);
+        assert!(drifted && (ratio - 2.0).abs() < 1e-12);
+        assert!(drift_verdict(0.5, 1.0, 1.5).1);
+        // A degenerate bound (< 1.0) clamps to 1.0 rather than
+        // flagging every exact match.
+        assert!(!drift_verdict(1.0, 1.0, 0.2).1);
+        // Zero prediction must not divide by zero.
+        assert!(drift_verdict(1.0, 0.0, 1.5).0.is_finite());
     }
 
     #[test]

@@ -1,25 +1,70 @@
 //! Serving metrics: iteration latencies, throughput, optimization
 //! status transitions (used by the e2e example and the fleet bench).
 
-use crate::util::JsonValue;
+use crate::obs::{LockSnapshot, LockStats};
+use crate::util::{summarize_owned, JsonValue, Summary};
 use std::sync::Mutex;
 
 /// Accumulated service metrics. Interior-mutable so the service can
 /// record from its serving loop while holding only `&self`.
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct ServiceMetrics {
     inner: Mutex<Inner>,
+    /// Contention profile of `inner` (the `service_metrics` row in the
+    /// fleet's observability report).
+    lock: LockStats,
 }
 
-#[derive(Debug, Default, Clone)]
+impl Default for ServiceMetrics {
+    fn default() -> Self {
+        ServiceMetrics { inner: Mutex::default(), lock: LockStats::new("service_metrics") }
+    }
+}
+
+/// O(1) running latency summary, maintained incrementally on every
+/// recorded iteration — snapshots never clone the sample vector.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct IterStats {
+    pub count: usize,
+    pub sum_ms: f64,
+    pub min_ms: f64,
+    pub max_ms: f64,
+}
+
+impl IterStats {
+    pub fn mean_ms(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_ms / self.count as f64
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
 struct Inner {
     /// Per-iteration simulated latency (ms), in execution order.
     latencies_ms: Vec<f64>,
+    /// Running count/sum/min/max over `latencies_ms`.
+    stats: IterStats,
     /// Iteration index at which the optimized program was hot-swapped in
     /// (None while still running the fallback).
     swap_iteration: Option<usize>,
     /// Background optimization wall time, ms.
     optimize_wall_ms: Option<f64>,
+}
+
+impl Default for Inner {
+    fn default() -> Self {
+        Inner {
+            latencies_ms: Vec::new(),
+            // min starts at +inf so the first sample always takes it;
+            // `iter_stats` normalizes the empty case back to 0.0.
+            stats: IterStats { count: 0, sum_ms: 0.0, min_ms: f64::INFINITY, max_ms: 0.0 },
+            swap_iteration: None,
+            optimize_wall_ms: None,
+        }
+    }
 }
 
 impl ServiceMetrics {
@@ -29,29 +74,64 @@ impl ServiceMetrics {
 
     /// Record one served iteration.
     pub fn record_iteration(&self, latency_ms: f64) {
-        self.inner.lock().unwrap().latencies_ms.push(latency_ms);
+        let mut inner = self.lock.lock(&self.inner);
+        inner.latencies_ms.push(latency_ms);
+        inner.stats.count += 1;
+        inner.stats.sum_ms += latency_ms;
+        inner.stats.min_ms = inner.stats.min_ms.min(latency_ms);
+        inner.stats.max_ms = inner.stats.max_ms.max(latency_ms);
     }
 
     /// Record that the optimized program took over at iteration `it`.
     pub fn record_swap(&self, it: usize, optimize_wall_ms: f64) {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = self.lock.lock(&self.inner);
         inner.swap_iteration = Some(it);
         inner.optimize_wall_ms = Some(optimize_wall_ms);
     }
 
     /// Iterations served so far.
     pub fn iterations(&self) -> usize {
-        self.inner.lock().unwrap().latencies_ms.len()
+        self.lock.lock(&self.inner).latencies_ms.len()
     }
 
     /// Iteration index of the hot swap.
     pub fn swap_iteration(&self) -> Option<usize> {
-        self.inner.lock().unwrap().swap_iteration
+        self.lock.lock(&self.inner).swap_iteration
     }
 
-    /// Snapshot of the recorded per-iteration latencies (ms).
+    /// Snapshot of the recorded per-iteration latencies (ms). This
+    /// clones the full series — report paths that only need summary
+    /// statistics should use [`Self::iter_stats`] (O(1)) or
+    /// [`Self::merged_summary`] (one pass) instead.
     pub fn latencies(&self) -> Vec<f64> {
-        self.inner.lock().unwrap().latencies_ms.clone()
+        self.lock.lock(&self.inner).latencies_ms.clone()
+    }
+
+    /// The incrementally maintained count/sum/min/max snapshot.
+    pub fn iter_stats(&self) -> IterStats {
+        let mut s = self.lock.lock(&self.inner).stats;
+        if s.count == 0 {
+            s.min_ms = 0.0;
+        }
+        s
+    }
+
+    /// Contention profile of this object's mutex.
+    pub fn lock_profile(&self) -> LockSnapshot {
+        self.lock.snapshot()
+    }
+
+    /// Fleet-wide latency summary over many per-device metrics in one
+    /// pass: a single concatenation plus one in-place sort, replacing
+    /// the aggregate-then-`latencies()` path that copied every sample
+    /// twice per report.
+    pub fn merged_summary<'a>(parts: impl IntoIterator<Item = &'a ServiceMetrics>) -> Summary {
+        let mut all: Vec<f64> = Vec::new();
+        for m in parts {
+            let inner = m.lock.lock(&m.inner);
+            all.extend_from_slice(&inner.latencies_ms);
+        }
+        summarize_owned(all)
     }
 
     /// Latency percentile over all recorded iterations (`q` in [0, 1]);
@@ -67,7 +147,7 @@ impl ServiceMetrics {
     /// series with tens of thousands of samples, and one clone + sort
     /// serves the whole batch.
     pub fn latency_percentiles(&self, qs: &[f64]) -> Option<Vec<f64>> {
-        let inner = self.inner.lock().unwrap();
+        let inner = self.lock.lock(&self.inner);
         if inner.latencies_ms.is_empty() {
             None
         } else {
@@ -82,9 +162,13 @@ impl ServiceMetrics {
     /// any index into the concatenation would misattribute samples
     /// around it (`mean_before_after` on an aggregate would lie).
     pub fn absorb(&self, other: &ServiceMetrics) {
-        let o = other.inner.lock().unwrap().clone();
-        let mut inner = self.inner.lock().unwrap();
+        let o = other.lock.lock(&other.inner).clone();
+        let mut inner = self.lock.lock(&self.inner);
         inner.latencies_ms.extend_from_slice(&o.latencies_ms);
+        inner.stats.count += o.stats.count;
+        inner.stats.sum_ms += o.stats.sum_ms;
+        inner.stats.min_ms = inner.stats.min_ms.min(o.stats.min_ms);
+        inner.stats.max_ms = inner.stats.max_ms.max(o.stats.max_ms);
         inner.swap_iteration = None;
         if let Some(w) = o.optimize_wall_ms {
             inner.optimize_wall_ms = Some(inner.optimize_wall_ms.unwrap_or(0.0) + w);
@@ -103,7 +187,7 @@ impl ServiceMetrics {
     /// Mean latency before/after the swap (ms); after is None until the
     /// swap happened.
     pub fn mean_before_after(&self) -> (f64, Option<f64>) {
-        let inner = self.inner.lock().unwrap();
+        let inner = self.lock.lock(&self.inner);
         let swap = inner.swap_iteration.unwrap_or(inner.latencies_ms.len());
         let mean = |xs: &[f64]| {
             if xs.is_empty() {
@@ -124,7 +208,7 @@ impl ServiceMetrics {
     /// JSON snapshot for reports.
     pub fn to_json(&self) -> JsonValue {
         let (before, after) = self.mean_before_after();
-        let inner = self.inner.lock().unwrap();
+        let inner = self.lock.lock(&self.inner);
         let mut o = JsonValue::obj();
         o.set("iterations", inner.latencies_ms.len());
         o.set("mean_before_ms", before);
@@ -199,6 +283,46 @@ mod tests {
         assert_eq!(batch, vec![p50, p99]);
         assert!(ServiceMetrics::new().latency_percentiles(&[0.5]).is_none());
         assert_eq!(m.latencies().len(), 100);
+    }
+
+    #[test]
+    fn incremental_stats_track_the_sample_vector() {
+        let m = ServiceMetrics::new();
+        let empty = m.iter_stats();
+        assert_eq!((empty.count, empty.min_ms, empty.max_ms), (0, 0.0, 0.0));
+        assert_eq!(empty.mean_ms(), 0.0);
+        for v in [4.0, 2.0, 9.0] {
+            m.record_iteration(v);
+        }
+        let s = m.iter_stats();
+        assert_eq!(s.count, 3);
+        assert!((s.sum_ms - 15.0).abs() < 1e-12);
+        assert_eq!((s.min_ms, s.max_ms), (2.0, 9.0));
+        assert!((s.mean_ms() - 5.0).abs() < 1e-12);
+        // absorb folds the incremental stats, not just the vector.
+        let other = ServiceMetrics::new();
+        other.record_iteration(1.0);
+        m.absorb(&other);
+        let s = m.iter_stats();
+        assert_eq!((s.count, s.min_ms, s.max_ms), (4, 1.0, 9.0));
+        // The lock profile counts every recorded iteration.
+        assert!(m.lock_profile().acquisitions >= 6);
+        assert_eq!(m.lock_profile().name, "service_metrics");
+    }
+
+    #[test]
+    fn merged_summary_matches_aggregate_path() {
+        let a = ServiceMetrics::new();
+        let b = ServiceMetrics::new();
+        for i in 1..=50 {
+            a.record_iteration(i as f64);
+            b.record_iteration((i + 50) as f64);
+        }
+        let merged = ServiceMetrics::merged_summary([&a, &b]);
+        let old = crate::util::summarize(&ServiceMetrics::aggregate([&a, &b]).latencies());
+        assert_eq!(merged, old, "one-pass summary must equal the clone-twice path");
+        assert_eq!(merged.n, 100);
+        assert_eq!((merged.min, merged.max), (1.0, 100.0));
     }
 
     #[test]

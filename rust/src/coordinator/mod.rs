@@ -7,6 +7,6 @@ pub mod persist;
 pub mod service;
 
 pub use cache::{CompilationCache, GraphKey, ShapeClass};
-pub use metrics::ServiceMetrics;
+pub use metrics::{IterStats, ServiceMetrics};
 pub use persist::{PersistedPlan, PlanStore};
 pub use service::{guard_never_negative, tune_with_guards, JitService, ServiceOptions, Session};

@@ -57,6 +57,7 @@ use super::lock_recover;
 use super::queue::{owner_hash, QueueStats, WorkStealingQueue};
 use super::store::{PlanKey, PlanLookup, SharedPlanStore};
 use crate::coordinator::{guard_never_negative, tune_with_guards, ServiceOptions, Session};
+use crate::obs::{Event, EventKind, LockSnapshot, LockStats, Recorder, TrackHandle, WALL_PID};
 use crate::explorer::{regions, ExploreOptions, FusionPlan};
 use crate::gpu::{DeviceSpec, SimConfig, Simulator};
 use crate::pipeline::{self, OptimizedProgram, Tech};
@@ -198,7 +199,7 @@ pub(crate) fn produce_candidate(
         WallJobKind::Reexplore { .. } => {
             unreachable!("re-explorations publish through publish_reexplored")
         }
-        WallJobKind::GuardPort { ported } => {
+        WallJobKind::GuardPort { ported, .. } => {
             if never_negative {
                 guard_never_negative(w, spec, ported, fallback)
             } else {
@@ -331,7 +332,7 @@ pub(crate) enum WallJobKind {
     /// the dispatcher (the launch-dim re-tune is the cheap ~10% and
     /// must stay on the deterministic decision path); the worker runs
     /// the §7.2 never-negative guard and publishes the verdict.
-    GuardPort { ported: OptimizedProgram },
+    GuardPort { ported: OptimizedProgram, tier: &'static str },
     /// Drift-triggered re-exploration under calibrated cost parameters
     /// (carried inside `explore.cost` — a snapshot the dispatcher took
     /// at trigger time, so both executors explore under identical
@@ -460,6 +461,8 @@ pub(crate) struct ServeJob {
     /// Plan identity to poll for, when the task has one in flight or
     /// already published (`None` for fallback-only admissions).
     pub fs: Option<(PlanKey, &'static str)>,
+    /// Originating task id — the flight-recorder span key.
+    pub task: usize,
 }
 
 /// Wall-clock accumulators owned by the serving threads.
@@ -477,6 +480,12 @@ pub(crate) struct WallTotals {
     pub device_busy_ms: Vec<f64>,
     pub regressions: usize,
     pub queue: QueueStats,
+    /// Contention profile of the work-stealing deques, snapshotted at
+    /// teardown.
+    pub queue_lock: LockSnapshot,
+    /// Publication-barrier profile: dispatcher stalls (await_plan /
+    /// await_key) plus the shutdown quiesce, wall-measured.
+    pub barrier: LockSnapshot,
     pub elapsed_ms: f64,
     /// Panics caught on compile workers, in observation order. The
     /// dispatcher re-raises them as one error after teardown.
@@ -515,6 +524,42 @@ struct Shared {
     counters: Arc<FleetCounters>,
     /// Compile-worker panics, surfaced on the dispatcher at shutdown.
     errors: Mutex<Vec<String>>,
+    /// Pool start time — the epoch wall-track event timestamps count
+    /// from.
+    epoch: Instant,
+    /// Publication-barrier contention profile. Blocked time is measured
+    /// by the waiters around the condvar loops, barrier-style.
+    barrier: LockStats,
+}
+
+/// Microseconds since the pool epoch (wall-track event timestamps).
+fn epoch_us(s: &Shared) -> f64 {
+    s.epoch.elapsed().as_secs_f64() * 1e6
+}
+
+/// Flight-recorder span shape for one compile job: start event, end
+/// event (`None` = the start kind is a closed X span), and whether the
+/// job records a Publish instant on completion. Explores emit B/E
+/// pairs; retunes and re-explorations emit one span; shard partials do
+/// not publish (the join's final shard publishes for the graph).
+fn compile_span(kind: &WallJobKind) -> (EventKind, Option<EventKind>, bool) {
+    match kind {
+        WallJobKind::Explore => (
+            EventKind::ExploreStart { shard: 0, shards: 1 },
+            Some(EventKind::ExploreEnd { shard: 0, shards: 1 }),
+            true,
+        ),
+        WallJobKind::ExploreShard { join, index } => {
+            let (shard, shards) = (*index as u32, join.groups.len() as u32);
+            (
+                EventKind::ExploreStart { shard, shards },
+                Some(EventKind::ExploreEnd { shard, shards }),
+                false,
+            )
+        }
+        WallJobKind::GuardPort { tier, .. } => (EventKind::Retune { tier }, None, true),
+        WallJobKind::Reexplore { .. } => (EventKind::Reexplore, None, true),
+    }
 }
 
 /// The running wall-clock substrate: compile workers + serving threads.
@@ -524,7 +569,6 @@ pub(crate) struct WallClockPool {
     compile_handles: Vec<JoinHandle<()>>,
     serve_handles: Vec<JoinHandle<()>>,
     totals: Arc<Mutex<ServeTotals>>,
-    started: Instant,
 }
 
 impl WallClockPool {
@@ -540,6 +584,7 @@ impl WallClockPool {
         explore: ExploreOptions,
         never_negative: bool,
         reexplore_live: bool,
+        recorder: Option<Arc<Recorder>>,
     ) -> WallClockPool {
         let threads = threads.max(1);
         let shared = Arc::new(Shared {
@@ -556,13 +601,18 @@ impl WallClockPool {
             reexplore_live,
             counters,
             errors: Mutex::new(Vec::new()),
+            epoch: Instant::now(),
+            barrier: LockStats::new("publication_barrier"),
         });
         let compile_handles = (0..threads)
             .map(|i| {
                 let s = Arc::clone(&shared);
+                let obs = recorder
+                    .as_ref()
+                    .map(|r| (r.ring(), r.add_track(format!("compile-{i}"), WALL_PID)));
                 std::thread::Builder::new()
                     .name(format!("fstitch-compile-{i}"))
-                    .spawn(move || compile_loop(i, &s))
+                    .spawn(move || compile_loop(i, &s, obs))
                     .expect("spawn compile worker")
             })
             .collect();
@@ -578,33 +628,42 @@ impl WallClockPool {
                 serve_txs.push(tx);
                 let s = Arc::clone(&shared);
                 let t = Arc::clone(&totals);
+                let obs = recorder
+                    .as_ref()
+                    .map(|r| (r.ring(), r.add_track(format!("serve-{d}"), WALL_PID)));
                 std::thread::Builder::new()
                     .name(format!("fstitch-serve-{d}"))
-                    .spawn(move || serve_loop(rx, &s, &t))
+                    .spawn(move || serve_loop(rx, &s, &t, obs))
                     .expect("spawn serving thread")
             })
             .collect();
-        WallClockPool {
-            shared,
-            serve_txs,
-            compile_handles,
-            serve_handles,
-            totals,
-            started: Instant::now(),
-        }
+        WallClockPool { shared, serve_txs, compile_handles, serve_handles, totals }
+    }
+
+    /// Microseconds since the pool epoch — timestamps for dispatcher-
+    /// side wall-track events (barrier stalls).
+    pub(crate) fn elapsed_us(&self) -> f64 {
+        epoch_us(&self.shared)
     }
 
     /// Block until no compile for this exact graph is in flight — the
     /// narrow barrier used when a task's virtual serving window crosses
     /// its own compile's virtual ready time.
     pub(crate) fn await_key(&self, key: u64) {
+        self.shared.barrier.acquire();
+        let mut waited: Option<Instant> = None;
         let mut inflight = lock_recover(&self.shared.inflight);
         while inflight.exact.get(&key).copied().unwrap_or(0) > 0 {
+            waited.get_or_insert_with(Instant::now);
             inflight = self
                 .shared
                 .inflight_cv
                 .wait(inflight)
                 .unwrap_or_else(std::sync::PoisonError::into_inner);
+        }
+        drop(inflight);
+        if let Some(t0) = waited {
+            self.shared.barrier.block(t0.elapsed());
         }
     }
 
@@ -615,15 +674,22 @@ impl WallClockPool {
     /// replay's.
     pub(crate) fn await_plan(&self, key: PlanKey) {
         let bucket = (key.shape.structure, key.shape.bucket);
+        self.shared.barrier.acquire();
+        let mut waited: Option<Instant> = None;
         let mut inflight = lock_recover(&self.shared.inflight);
         while inflight.exact.get(&key.exact.0).copied().unwrap_or(0) > 0
             || inflight.buckets.get(&bucket).copied().unwrap_or(0) > 0
         {
+            waited.get_or_insert_with(Instant::now);
             inflight = self
                 .shared
                 .inflight_cv
                 .wait(inflight)
                 .unwrap_or_else(std::sync::PoisonError::into_inner);
+        }
+        drop(inflight);
+        if let Some(t0) = waited {
+            self.shared.barrier.block(t0.elapsed());
         }
     }
 
@@ -666,13 +732,20 @@ impl WallClockPool {
     /// panics, for the dispatcher to surface).
     pub(crate) fn shutdown(self) -> WallTotals {
         {
+            self.shared.barrier.acquire();
+            let mut waited: Option<Instant> = None;
             let mut inflight = lock_recover(&self.shared.inflight);
             while !inflight.exact.is_empty() || !inflight.buckets.is_empty() {
+                waited.get_or_insert_with(Instant::now);
                 inflight = self
                     .shared
                     .inflight_cv
                     .wait(inflight)
                     .unwrap_or_else(std::sync::PoisonError::into_inner);
+            }
+            drop(inflight);
+            if let Some(t0) = waited {
+                self.shared.barrier.block(t0.elapsed());
             }
         }
         self.shared.shutdown.store(true, Ordering::Release);
@@ -693,7 +766,9 @@ impl WallClockPool {
             device_busy_ms: totals.device_busy_ms.clone(),
             regressions: totals.regressions,
             queue: self.shared.queue.stats(),
-            elapsed_ms: self.started.elapsed().as_secs_f64() * 1e3,
+            queue_lock: self.shared.queue.lock_profile(),
+            barrier: self.shared.barrier.snapshot(),
+            elapsed_ms: self.shared.epoch.elapsed().as_secs_f64() * 1e3,
             errors: lock_recover(&self.shared.errors).clone(),
         }
     }
@@ -704,18 +779,40 @@ impl WallClockPool {
 /// recorded — the worker keeps draining, so the publication barrier and
 /// the shutdown quiesce always complete; the dispatcher raises the
 /// recorded panics as one loud error at teardown.
-fn compile_loop(worker: usize, s: &Shared) {
+fn compile_loop(worker: usize, s: &Shared, obs: Option<(TrackHandle, u32)>) {
     loop {
         if let Some(job) = s.queue.pop(worker) {
             let key = job.key;
+            let span = obs.as_ref().map(|_| compile_span(&job.kind));
+            let t0_us = obs.as_ref().map(|_| epoch_us(s));
             let outcome =
                 std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| run_compile(s, job)));
+            let failed = outcome.is_err();
             if let Err(panic) = outcome {
                 let msg = panic_text(&panic);
                 lock_recover(&s.errors).push(format!(
                     "compile worker {worker} panicked on graph {:#x}: {msg}",
                     key.exact.0
                 ));
+            }
+            if let (Some((ring, track)), Some((start, end, publishes))) = (obs.as_ref(), span) {
+                let t0 = t0_us.unwrap_or(0.0);
+                let t1 = epoch_us(s);
+                let (track, id) = (*track, key.exact.0);
+                match end {
+                    Some(end) => {
+                        ring.record(Event { track, id, kind: start, ts_us: t0, dur_us: 0.0 });
+                        ring.record(Event { track, id, kind: end, ts_us: t1, dur_us: 0.0 });
+                    }
+                    None => {
+                        let dur_us = t1 - t0;
+                        ring.record(Event { track, id, kind: start, ts_us: t0, dur_us });
+                    }
+                }
+                if publishes && !failed {
+                    let kind = EventKind::Publish;
+                    ring.record(Event { track, id, kind, ts_us: t1, dur_us: 0.0 });
+                }
             }
             continue;
         }
@@ -848,8 +945,15 @@ fn run_compile(s: &Shared, job: WallJob) {
 /// Serving-thread body for one device: serve each task's iterations on
 /// the session's current program, hot-swapping the moment the compile
 /// pool publishes the plan this task is waiting on.
-fn serve_loop(rx: mpsc::Receiver<ServeJob>, s: &Shared, totals: &Mutex<ServeTotals>) {
+fn serve_loop(
+    rx: mpsc::Receiver<ServeJob>,
+    s: &Shared,
+    totals: &Mutex<ServeTotals>,
+    obs: Option<(TrackHandle, u32)>,
+) {
     while let Ok(job) = rx.recv() {
+        let t0_us = obs.as_ref().map(|_| epoch_us(s));
+        let mut swapped_us: Option<f64> = None;
         let mut fs_ms: Option<f64> = None;
         // True once this task's latency entry can no longer change:
         // immediately after the first publication when the calibration
@@ -872,6 +976,9 @@ fn serve_loop(rx: mpsc::Receiver<ServeJob>, s: &Shared, totals: &Mutex<ServeTota
                                 // optimized.
                                 if prog.tech == Tech::Fs {
                                     job.session.hot_swap(prog);
+                                    if obs.is_some() && swapped_us.is_none() {
+                                        swapped_us = Some(epoch_us(s));
+                                    }
                                 }
                             }
                             fs_ms = Some(current);
@@ -885,6 +992,17 @@ fn serve_loop(rx: mpsc::Receiver<ServeJob>, s: &Shared, totals: &Mutex<ServeTota
             let iter = fs_ms.unwrap_or(job.fb_ms);
             job.session.metrics.record_iteration(iter);
             served += iter;
+        }
+        if let Some((ring, track)) = obs.as_ref() {
+            let (track, id) = (*track, job.task as u64);
+            if let Some(ts_us) = swapped_us {
+                let kind = EventKind::HotSwap;
+                ring.record(Event { track, id, kind, ts_us, dur_us: 0.0 });
+            }
+            let kind = EventKind::Serve { device: job.device as u32 };
+            let ts_us = t0_us.unwrap_or(0.0);
+            let dur_us = epoch_us(s) - ts_us;
+            ring.record(Event { track, id, kind, ts_us, dur_us });
         }
         let fb_total = job.fb_ms * job.iterations as f64;
         let mut t = lock_recover(totals);
@@ -946,6 +1064,7 @@ mod tests {
             explore,
             true,
             false,
+            None,
         );
 
         pool.enqueue_compile(WallJob {
@@ -983,6 +1102,7 @@ mod tests {
             iterations: 5,
             fb_ms,
             fs: Some((key, spec.name)),
+            task: 0,
         });
         let totals = pool.shutdown();
         assert_eq!(metrics.iterations(), 5);
@@ -995,6 +1115,12 @@ mod tests {
         let q = totals.queue;
         assert_eq!(q.pushes, 1);
         assert_eq!(q.local_pops + q.steals, 1);
+        // Lock profiles are snapshotted at teardown: the barrier was
+        // acquired by await_plan, await_key and the shutdown quiesce.
+        assert_eq!(totals.barrier.name, "publication_barrier");
+        assert!(totals.barrier.acquisitions >= 3, "{:?}", totals.barrier);
+        assert_eq!(totals.queue_lock.name, "work_queue");
+        assert!(totals.queue_lock.acquisitions > 0);
     }
 
     #[test]
@@ -1023,6 +1149,7 @@ mod tests {
             explore,
             true,
             false,
+            None,
         );
         let join = Arc::new(ShardJoin::new(vec![]));
         pool.enqueue_compile(WallJob {

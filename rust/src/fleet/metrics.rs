@@ -1,6 +1,7 @@
 //! Fleet-wide report: the §7.2 production numbers, but measured through
 //! the coordinator path instead of asserted.
 
+use crate::obs::ObsReport;
 use crate::util::{fmt_f, JsonValue, Summary, Table};
 
 /// Per-device utilization line.
@@ -102,6 +103,10 @@ pub struct FleetReport {
     /// Real elapsed time of the wall-clock run (0 under virtual time).
     pub wall_elapsed_ms: f64,
     pub per_device: Vec<DeviceUtilization>,
+    /// Flight-recorder report (stage-attributed latency + lock
+    /// contention); `None` unless `FleetOptions::observe` was on and
+    /// the crate was built with the `obs` feature.
+    pub observability: Option<ObsReport>,
 }
 
 impl FleetReport {
@@ -179,6 +184,9 @@ impl FleetReport {
             .set("iter_p99_ms", self.iter_p99_ms)
             .set("makespan_ms", self.makespan_ms)
             .set("wall_elapsed_ms", self.wall_elapsed_ms);
+        if let Some(obs) = &self.observability {
+            o.set("observability", obs.to_json());
+        }
         let devices: Vec<JsonValue> = self
             .per_device
             .iter()
@@ -311,6 +319,10 @@ impl FleetReport {
             ]);
         }
         out.push_str(&d.render());
+        if let Some(obs) = &self.observability {
+            out.push('\n');
+            out.push_str(&obs.render());
+        }
         out
     }
 }
@@ -363,6 +375,7 @@ mod tests {
                 busy_ms: 61.0,
                 utilization: 0.5,
             }],
+            observability: None,
         }
     }
 
@@ -421,6 +434,27 @@ mod tests {
         let text = r.render();
         assert!(text.contains("compile latency p50/p99"));
         assert!(text.contains("region-shard compile sub-jobs"));
+    }
+
+    #[test]
+    fn observability_section_is_optional_and_ordered() {
+        // None: no section in JSON or render.
+        let plain = report();
+        assert!(plain.to_json().get("observability").is_none());
+        assert!(!plain.render().contains("stage attribution"));
+        // Some: the section lands between the scalars and `devices`.
+        let mut traced = report();
+        let mut accum = crate::obs::StageAccum::new(1);
+        accum.task(0, 1.0, 4.0, 9.0);
+        traced.observability =
+            Some(accum.report(vec![crate::obs::LockSnapshot::zero("plan_store")], 3, 0));
+        let j = traced.to_json();
+        let obs = j.get("observability").expect("observability section");
+        assert!(obs.get("stages").is_some());
+        assert!(obs.get("locks").is_some());
+        let text = traced.render();
+        assert!(text.contains("stage attribution"));
+        assert!(text.contains("lock contention"));
     }
 
     #[test]

@@ -69,17 +69,13 @@ pub use sim::{
 };
 pub use store::{PlanKey, PlanLookup, SharedPlanStore, StoreStats};
 
-use std::sync::{Mutex, MutexGuard};
-
-/// Lock a fleet-internal mutex, recovering the guard when a panicking
-/// thread poisoned it. Every critical section behind these locks is a
-/// single collection operation that cannot be observed half-done, so
-/// the data stays consistent and recovery is sound. Without this, one
-/// poisoned lock cascades: other compile workers panic on `unwrap()`,
-/// stop draining the queue, and the dispatcher's publication-barrier
-/// wait never releases — a silent deadlock instead of a surfaced error
-/// (worker panics are collected and re-raised on the dispatcher at
-/// shutdown; see [`executor`]).
-pub(crate) fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
-    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
-}
+// Poison-recovering mutex lock (now shared crate-wide from
+// `util::sync`). Every critical section behind these locks is a single
+// collection operation that cannot be observed half-done, so the data
+// stays consistent and recovery is sound. Without this, one poisoned
+// lock cascades: other compile workers panic on `unwrap()`, stop
+// draining the queue, and the dispatcher's publication-barrier wait
+// never releases — a silent deadlock instead of a surfaced error
+// (worker panics are collected and re-raised on the dispatcher at
+// shutdown; see [`executor`]).
+pub(crate) use crate::util::sync::lock_recover;

@@ -27,7 +27,7 @@
 //! only one thread drives the queue); the lost/duplicate-free guarantee
 //! under contention is exercised by the multi-threaded stress test.
 
-use super::lock_recover;
+use crate::obs::{LockSnapshot, LockStats};
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
@@ -43,7 +43,8 @@ pub struct QueueStats {
 /// Per-worker deques with LIFO local pop and FIFO stealing. Shareable:
 /// all methods take `&self`, so one instance can sit behind an `Arc`
 /// and be driven by many worker threads at once. Deque locks recover
-/// from poisoning ([`super::lock_recover`]): every critical section is
+/// from poisoning (via [`LockStats::lock`], which also profiles
+/// contention): every critical section is
 /// one `VecDeque` operation, so the structure stays consistent, and a
 /// worker that panicked mid-job must not stop its peers from draining
 /// the queue (the compile pool's publication barrier depends on it).
@@ -53,6 +54,9 @@ pub struct WorkStealingQueue<T> {
     pushes: AtomicUsize,
     local_pops: AtomicUsize,
     steals: AtomicUsize,
+    /// One contention profile across every deque lock (the
+    /// `work_queue` row in the fleet's observability report).
+    lock: LockStats,
 }
 
 impl<T> WorkStealingQueue<T> {
@@ -64,7 +68,13 @@ impl<T> WorkStealingQueue<T> {
             pushes: AtomicUsize::new(0),
             local_pops: AtomicUsize::new(0),
             steals: AtomicUsize::new(0),
+            lock: LockStats::new("work_queue"),
         }
+    }
+
+    /// Contention profile across all deque locks.
+    pub fn lock_profile(&self) -> LockSnapshot {
+        self.lock.snapshot()
     }
 
     /// Number of workers.
@@ -75,7 +85,7 @@ impl<T> WorkStealingQueue<T> {
     /// Enqueue an item on `worker`'s deque (index wraps).
     pub fn push(&self, worker: usize, item: T) {
         let w = worker % self.deques.len();
-        lock_recover(&self.deques[w]).push_back(item);
+        self.lock.lock(&self.deques[w]).push_back(item);
         self.pushes.fetch_add(1, Ordering::Relaxed);
     }
 
@@ -85,7 +95,7 @@ impl<T> WorkStealingQueue<T> {
     /// when a full scan observed every deque empty.
     pub fn pop(&self, worker: usize) -> Option<T> {
         let w = worker % self.deques.len();
-        if let Some(item) = lock_recover(&self.deques[w]).pop_back() {
+        if let Some(item) = self.lock.lock(&self.deques[w]).pop_back() {
             self.local_pops.fetch_add(1, Ordering::Relaxed);
             return Some(item);
         }
@@ -95,7 +105,7 @@ impl<T> WorkStealingQueue<T> {
         loop {
             let mut victim: Option<(usize, usize)> = None; // (index, len)
             for (i, dq) in self.deques.iter().enumerate() {
-                let len = lock_recover(dq).len();
+                let len = self.lock.lock(dq).len();
                 if len == 0 {
                     continue;
                 }
@@ -105,7 +115,7 @@ impl<T> WorkStealingQueue<T> {
                 }
             }
             let (v, _) = victim?;
-            if let Some(item) = lock_recover(&self.deques[v]).pop_front() {
+            if let Some(item) = self.lock.lock(&self.deques[v]).pop_front() {
                 self.steals.fetch_add(1, Ordering::Relaxed);
                 return Some(item);
             }
@@ -114,7 +124,7 @@ impl<T> WorkStealingQueue<T> {
 
     /// Total queued items across all deques.
     pub fn len(&self) -> usize {
-        self.deques.iter().map(|d| lock_recover(d).len()).sum()
+        self.deques.iter().map(|d| self.lock.lock(d).len()).sum()
     }
 
     /// True when no work is queued anywhere.
@@ -124,7 +134,7 @@ impl<T> WorkStealingQueue<T> {
 
     /// Backlog of one worker's deque.
     pub fn backlog(&self, worker: usize) -> usize {
-        lock_recover(&self.deques[worker % self.deques.len()]).len()
+        self.lock.lock(&self.deques[worker % self.deques.len()]).len()
     }
 
     /// Accounting snapshot. Exact at quiescence (no concurrent pushes
@@ -166,6 +176,11 @@ mod tests {
         assert_eq!(q.pop(0), None);
         assert_eq!(q.stats().local_pops, 1);
         assert_eq!(q.stats().steals, 2);
+        // Deque locks are profiled; single-threaded use never contends.
+        let profile = q.lock_profile();
+        assert_eq!(profile.name, "work_queue");
+        assert!(profile.acquisitions >= 6, "acquisitions {}", profile.acquisitions);
+        assert_eq!(profile.contended, 0);
     }
 
     #[test]

@@ -28,10 +28,11 @@
 //! first FS program published in the bucket — the shape-port
 //! representative.
 
-use super::lock_recover;
 use crate::coordinator::{GraphKey, ShapeClass};
 use crate::graph::Graph;
+use crate::obs::{LockSnapshot, LockStats};
 use crate::pipeline::{OptimizedProgram, Tech};
+use crate::util::lock_recover;
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
@@ -142,10 +143,24 @@ struct StoreState {
 
 /// Thread-safe shared plan store, keyed by graph structure hash and
 /// shape bucket.
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct SharedPlanStore {
     state: Mutex<StoreState>,
     stats: Mutex<StoreStats>,
+    /// Contention profile of the `state` lock (the `plan_store` row in
+    /// the fleet's observability report). The `stats` lock is a leaf
+    /// counter touched off the serving path; it is not profiled.
+    lock: LockStats,
+}
+
+impl Default for SharedPlanStore {
+    fn default() -> Self {
+        SharedPlanStore {
+            state: Mutex::default(),
+            stats: Mutex::default(),
+            lock: LockStats::new("plan_store"),
+        }
+    }
 }
 
 impl SharedPlanStore {
@@ -153,11 +168,16 @@ impl SharedPlanStore {
         Self::default()
     }
 
+    /// Contention profile of the store's state lock.
+    pub fn lock_profile(&self) -> LockSnapshot {
+        self.lock.snapshot()
+    }
+
     /// Look up the program for (graph, device class) through the three
     /// reuse tiers. Pure: accounting happens via the `note_*` methods
     /// once the caller acts on the outcome.
     pub fn lookup(&self, key: PlanKey, device_class: &'static str) -> PlanLookup {
-        let st = lock_recover(&self.state);
+        let st = self.lock.lock(&self.state);
         if let Some(e) = st.entries.get(&key.exact.0) {
             if let Some((prog, ready_ms)) = e.programs.get(device_class) {
                 return PlanLookup::Hit { prog: Arc::clone(prog), ready_ms: *ready_ms };
@@ -226,7 +246,7 @@ impl SharedPlanStore {
         prog: Arc<OptimizedProgram>,
         ready_ms: f64,
     ) {
-        let mut st = lock_recover(&self.state);
+        let mut st = self.lock.lock(&self.state);
         let StoreState { entries, buckets } = &mut *st;
         let e = entries.entry(key.exact.0).or_default();
         if e.source.is_none() && prog.tech == Tech::Fs {
@@ -250,13 +270,13 @@ impl SharedPlanStore {
 
     /// Number of distinct exact graphs with at least one entry.
     pub fn len(&self) -> usize {
-        lock_recover(&self.state).entries.len()
+        self.lock.lock(&self.state).entries.len()
     }
 
     /// Number of distinct (structure, bucket) classes with at least one
     /// shape-port representative.
     pub fn bucket_len(&self) -> usize {
-        lock_recover(&self.state).buckets.len()
+        self.lock.lock(&self.state).buckets.len()
     }
 
     /// True when nothing is stored.
@@ -333,6 +353,12 @@ mod tests {
         );
         assert_eq!(store.len(), 1);
         assert_eq!(store.bucket_len(), 1);
+        // The state lock is profiled: every lookup/insert counts, and
+        // single-threaded use never contends.
+        let profile = store.lock_profile();
+        assert_eq!(profile.name, "plan_store");
+        assert!(profile.acquisitions >= 4, "acquisitions {}", profile.acquisitions);
+        assert_eq!(profile.contended, 0);
     }
 
     #[test]

@@ -43,6 +43,9 @@
 //!   between device classes by re-running only the launch-dim tuner),
 //!   admission control/backpressure, and a deterministic discrete-event
 //!   traffic simulator reporting fleet-wide GPU-hours saved.
+//! * [`obs`] — the fleet's flight recorder: per-thread event rings with
+//!   typed lifecycle spans, stage-attributed latency, a lock-contention
+//!   profiler, and Chrome trace-event export (Perfetto-loadable).
 //! * [`util`] — deterministic PRNG, tiny JSON writer, table formatting,
 //!   percentile helpers, and a micro-bench timer (the environment has
 //!   no criterion/serde).
@@ -55,6 +58,7 @@ pub mod fleet;
 pub mod gpu;
 pub mod graph;
 pub mod hlo;
+pub mod obs;
 pub mod pipeline;
 pub mod runtime;
 pub mod util;

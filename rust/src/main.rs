@@ -34,7 +34,11 @@
 //!   plans), and `--dynamic-shapes` draws a (batch, seq) per task from
 //!   seeded per-template shape distributions, serving sibling shapes
 //!   through the plan store's power-of-two bucket tier (launch-dim
-//!   retune instead of per-shape re-exploration).
+//!   retune instead of per-shape re-exploration). `--observe` turns on
+//!   the flight recorder (per-task lifecycle spans, stage-attributed
+//!   latency, lock-contention profile in the report) and
+//!   `--trace FILE` additionally exports the spans as Chrome
+//!   trace-event JSON for Perfetto / chrome://tracing.
 
 use fusion_stitching::coordinator::{JitService, ServiceOptions};
 use fusion_stitching::fleet;
@@ -370,6 +374,13 @@ fn main() {
             if !(drift_bound >= 1.0) {
                 bad_flag("--drift-bound", "must be a ratio >= 1.0");
             }
+            // --trace FILE: export the run's flight-recorder events as
+            // Chrome trace-event JSON (open in Perfetto or
+            // chrome://tracing). --observe alone folds the
+            // observability section (stage latency + lock contention)
+            // into the report without writing the export.
+            let trace_out = get_flag("--trace");
+            let observe = has_flag("--observe") || trace_out.is_some();
             let opts = fleet::FleetOptions {
                 registry: fleet::DeviceRegistry::mixed(v100s, t4s, capacity),
                 compile_workers: workers,
@@ -377,6 +388,7 @@ fn main() {
                 executor,
                 calibrate,
                 drift_bound,
+                observe,
                 ..Default::default()
             };
             println!(
@@ -454,6 +466,26 @@ fn main() {
                     }
                 }
             }
+            if let Some(path) = trace_out {
+                match svc.trace_dump() {
+                    None => {
+                        eprintln!("--trace: binary built without the `obs` feature; no trace");
+                        std::process::exit(1);
+                    }
+                    Some(dump) => {
+                        let json = fusion_stitching::obs::chrome_trace(&dump).to_pretty();
+                        match std::fs::write(&path, json) {
+                            Ok(()) => {
+                                println!("wrote Chrome trace {path} ({} events)", dump.events.len())
+                            }
+                            Err(e) => {
+                                eprintln!("write {path}: {e}");
+                                std::process::exit(1);
+                            }
+                        }
+                    }
+                }
+            }
         }
         _ => {
             println!("fstitch — FusionStitching (Zheng et al., 2020) reproduction");
@@ -463,7 +495,7 @@ fn main() {
                  [--explore] [--tech tf|xla|fs] [--out FILE] [--run] [--v100 N] [--t4 N] \
                  [--capacity C] [--workers K] [--tasks N] [--rate MS] [--templates T] \
                  [--seed S] [--executor virtual|wallclock] [--threads N] [--compile-shards S] \
-                 [--calibrate] [--drift-bound R] [--dynamic-shapes]"
+                 [--calibrate] [--drift-bound R] [--dynamic-shapes] [--observe] [--trace FILE]"
             );
         }
     }

@@ -1,0 +1,167 @@
+//! Chrome trace-event JSON export for flight-recorder dumps —
+//! loadable in Perfetto (<https://ui.perfetto.dev>) or
+//! `chrome://tracing`, same array-of-events format as
+//! [`crate::gpu::trace`]'s kernel timelines.
+//!
+//! Two process lanes: pid 1 is the **virtual timeline** (recorded by
+//! the dispatcher from virtual timestamps — identical across executors
+//! and replays), pid 2 is the **wall clock** (compile worker / serving
+//! threads, dispatcher barrier stalls). Spans are `ph:"X"`, explore
+//! sub-jobs are `ph:"B"`/`"E"` pairs, publications and hot-swaps are
+//! instants, drift samples are `ph:"C"` counters.
+
+use crate::obs::recorder::{EventKind, TraceDump, VIRTUAL_PID, WALL_PID};
+use crate::util::JsonValue;
+
+/// Build the Chrome trace-event array for a drained recorder.
+pub fn chrome_trace(dump: &TraceDump) -> JsonValue {
+    let mut events: Vec<JsonValue> = Vec::with_capacity(dump.events.len() + dump.tracks.len() + 2);
+
+    for (pid, name) in [
+        (VIRTUAL_PID, "fleet (virtual timeline)"),
+        (WALL_PID, "fleet (wall clock)"),
+    ] {
+        let mut args = JsonValue::obj();
+        args.set("name", name);
+        let mut meta = JsonValue::obj();
+        meta.set("name", "process_name").set("ph", "M").set("pid", pid as i64).set("args", args);
+        events.push(meta);
+    }
+    for (tid, track) in dump.tracks.iter().enumerate() {
+        let mut args = JsonValue::obj();
+        args.set("name", track.name.clone());
+        let mut meta = JsonValue::obj();
+        meta.set("name", "thread_name")
+            .set("ph", "M")
+            .set("pid", track.pid as i64)
+            .set("tid", tid as i64)
+            .set("args", args);
+        events.push(meta);
+    }
+
+    for ev in &dump.events {
+        let pid = dump.tracks.get(ev.track as usize).map(|t| t.pid).unwrap_or(VIRTUAL_PID);
+        let mut args = JsonValue::obj();
+        args.set("id", ev.id as i64);
+        let ph = match ev.kind {
+            EventKind::TaskAdmitted { decision } => {
+                args.set("decision", decision);
+                "i"
+            }
+            EventKind::ExploreStart { shard, shards } => {
+                args.set("shard", shard as i64).set("shards", shards as i64);
+                "B"
+            }
+            EventKind::ExploreEnd { shard, shards } => {
+                args.set("shard", shard as i64).set("shards", shards as i64);
+                "E"
+            }
+            EventKind::Retune { tier } => {
+                args.set("tier", tier);
+                "X"
+            }
+            EventKind::Serve { device } => {
+                args.set("device", device as i64);
+                "X"
+            }
+            EventKind::DriftSample { ratio } => {
+                args = JsonValue::obj();
+                args.set("ratio", ratio);
+                "C"
+            }
+            EventKind::QueueWait | EventKind::Reexplore | EventKind::BarrierWait => "X",
+            EventKind::Publish | EventKind::HotSwap => "i",
+        };
+        let mut o = JsonValue::obj();
+        o.set("name", ev.kind.name())
+            .set("ph", ph)
+            .set("pid", pid as i64)
+            .set("tid", ev.track as i64)
+            .set("ts", ev.ts_us)
+            .set("args", args);
+        if ph == "X" {
+            o.set("dur", ev.dur_us);
+        }
+        if ph == "i" {
+            // Thread-scoped instant marker.
+            o.set("s", "t");
+        }
+        events.push(o);
+    }
+
+    JsonValue::Arr(events)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::recorder::{Event, Recorder};
+
+    #[test]
+    fn chrome_export_has_metadata_spans_and_counters() {
+        if !crate::obs::recorder::ENABLED {
+            return;
+        }
+        let r = Recorder::new(32);
+        let disp = r.add_track("dispatcher", VIRTUAL_PID);
+        let dev = r.add_track("device-0", VIRTUAL_PID);
+        let h = r.ring();
+        let ev = |track, kind, ts_us, dur_us| Event { track, id: 1, kind, ts_us, dur_us };
+        h.record(ev(disp, EventKind::TaskAdmitted { decision: "admit" }, 0.0, 0.0));
+        h.record(ev(dev, EventKind::QueueWait, 0.0, 500.0));
+        h.record(ev(disp, EventKind::ExploreStart { shard: 0, shards: 2 }, 10.0, 0.0));
+        h.record(ev(disp, EventKind::ExploreEnd { shard: 0, shards: 2 }, 900.0, 0.0));
+        h.record(ev(disp, EventKind::Publish, 900.0, 0.0));
+        h.record(ev(dev, EventKind::Serve { device: 0 }, 500.0, 4000.0));
+        h.record(ev(disp, EventKind::DriftSample { ratio: 1.2 }, 4500.0, 0.0));
+        let json = chrome_trace(&r.drain());
+        let s = json.to_string();
+        assert!(s.starts_with('['));
+        for needle in [
+            "\"process_name\"",
+            "\"thread_name\"",
+            "\"TaskAdmitted\"",
+            "\"QueueWait\"",
+            "\"Explore\"",
+            "\"Publish\"",
+            "\"Serve\"",
+            "\"drift_ratio\"",
+            "\"ph\":\"B\"",
+            "\"ph\":\"E\"",
+            "\"ph\":\"X\"",
+            "\"ph\":\"C\"",
+        ] {
+            assert!(s.contains(needle), "missing {needle} in {s}");
+        }
+        // Structurally parseable by our own reader (a stand-in for the
+        // jq gate in CI).
+        let parsed = JsonValue::parse(&s).expect("chrome trace must round-trip");
+        match parsed {
+            JsonValue::Arr(items) => assert!(items.len() >= 9),
+            other => panic!("expected array, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn identical_dumps_export_identical_json() {
+        if !crate::obs::recorder::ENABLED {
+            return;
+        }
+        let run = || {
+            let r = Recorder::new(16);
+            let t = r.add_track("dispatcher", VIRTUAL_PID);
+            let h = r.ring();
+            for i in 0..8u64 {
+                h.record(Event {
+                    track: t,
+                    id: i,
+                    kind: EventKind::Publish,
+                    ts_us: i as f64 * 3.0,
+                    dur_us: 0.0,
+                });
+            }
+            chrome_trace(&r.drain()).to_string()
+        };
+        assert_eq!(run(), run());
+    }
+}

@@ -1,0 +1,46 @@
+//! Flight-recorder observability for the serving fleet (§7's
+//! production claim needs attribution, not just aggregates).
+//!
+//! Four pieces:
+//!
+//! - [`recorder`] — per-thread event rings with typed span events
+//!   (`TaskAdmitted`, `QueueWait`, `ExploreStart/End`, `Retune`,
+//!   `Publish`, `BarrierWait`, `HotSwap`, `Serve`, drift counters)
+//!   keyed by task id. Hot path: one relaxed atomic bump + one slot
+//!   write; compiled to a no-op without the `obs` cargo feature.
+//! - [`stages`] — each task's timeline decomposed into admission →
+//!   queue → compile (per tier) → publication-barrier stall → serve,
+//!   with per-stage p50/p99 and a per-device timeline folded into
+//!   `fleet::FleetReport` and `BENCH_fleet.json`'s `observability`
+//!   section.
+//! - [`contention`] — acquisition counts and blocked wall time for the
+//!   fleet's hot locks (plan store, work-stealing deques, publication
+//!   barrier, `ServiceMetrics`) — the profile the dispatcher-sharding
+//!   roadmap item needs.
+//! - [`chrome`] — Chrome trace-event JSON export
+//!   (`fstitch fleet --trace out.json`, Perfetto-loadable), one track
+//!   per compile worker / serving thread / device.
+//!
+//! Recording never perturbs scheduling decisions: every virtual-
+//! timeline event is derived from bookkeeping the dispatcher already
+//! computes, and wall-clock measurement happens only where virtual
+//! time never looks (barrier stalls, lock contention, pool threads).
+//! The virtual/wall-clock decision-equivalence tests run with tracing
+//! enabled to pin that property.
+
+pub mod chrome;
+pub mod contention;
+pub mod recorder;
+pub mod stages;
+
+pub use chrome::chrome_trace;
+pub use contention::{LockSnapshot, LockStats};
+pub use recorder::{Event, EventKind, Recorder, TraceDump, TrackHandle, VIRTUAL_PID, WALL_PID};
+pub use stages::{CompileStage, ObsReport, StageAccum};
+
+/// True when the crate was built with the `obs` feature (default): the
+/// recorder's hot path is live. When false, `FleetOptions::observe` is
+/// ignored and no observability section is produced.
+pub const fn enabled() -> bool {
+    recorder::ENABLED
+}

@@ -1,0 +1,332 @@
+//! The flight-recorder core: per-thread event rings with typed span
+//! events keyed by task id.
+//!
+//! Hot-path cost is one relaxed atomic index bump plus one array slot
+//! write — no allocation, no locking, no clock read beyond what the
+//! caller already has. Each [`Ring`] has exactly one writer thread
+//! (enforced by protocol, see [`Recorder::ring`]); readers drain only
+//! after every writer has quiesced (the fleet drains after the
+//! wall-clock pool has joined, or from the single dispatcher thread in
+//! virtual mode). With the `obs` cargo feature disabled, [`ENABLED`] is
+//! `false` and [`TrackHandle::record`] compiles to a no-op.
+
+use std::cell::UnsafeCell;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::util::lock_recover;
+
+/// Compile-time switch: `false` when built with `--no-default-features`
+/// (the recorder's hot-path stores fold away entirely).
+pub const ENABLED: bool = cfg!(feature = "obs");
+
+/// Process lane for the virtual timeline (identical across executors).
+pub const VIRTUAL_PID: u32 = 1;
+/// Process lane for wall-clock measurements (threads, barrier stalls).
+pub const WALL_PID: u32 = 2;
+
+/// A typed flight-recorder event. Spans carry a nonzero `dur_us`;
+/// instants and counters carry zero.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum EventKind {
+    /// Instant: the admission decision for a task.
+    TaskAdmitted { decision: &'static str },
+    /// Span: task arrival → serving-slot start.
+    QueueWait,
+    /// Instant: an exploration sub-job entered the compile schedule.
+    ExploreStart { shard: u32, shards: u32 },
+    /// Instant: that sub-job finished.
+    ExploreEnd { shard: u32, shards: u32 },
+    /// Span: a launch-dim-only retune ("port" or "bucket").
+    Retune { tier: &'static str },
+    /// Span: a drift-triggered re-exploration.
+    Reexplore,
+    /// Instant: a plan (or pinned fallback) was published.
+    Publish,
+    /// Span: the dispatcher stalled on the publication barrier
+    /// (wall-clock executor only — virtual time never blocks).
+    BarrierWait,
+    /// Instant: a serving session hot-swapped to a published plan.
+    HotSwap,
+    /// Span: a task's serving window on its device.
+    Serve { device: u32 },
+    /// Counter: a calibration measured/predicted drift-ratio sample.
+    DriftSample { ratio: f64 },
+}
+
+impl EventKind {
+    /// Stable display name (Chrome trace event name).
+    pub fn name(&self) -> &'static str {
+        match self {
+            EventKind::TaskAdmitted { .. } => "TaskAdmitted",
+            EventKind::QueueWait => "QueueWait",
+            EventKind::ExploreStart { .. } | EventKind::ExploreEnd { .. } => "Explore",
+            EventKind::Retune { .. } => "Retune",
+            EventKind::Reexplore => "Reexplore",
+            EventKind::Publish => "Publish",
+            EventKind::BarrierWait => "BarrierWait",
+            EventKind::HotSwap => "HotSwap",
+            EventKind::Serve { .. } => "Serve",
+            EventKind::DriftSample { .. } => "drift_ratio",
+        }
+    }
+}
+
+/// One recorded event on a logical track.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Event {
+    /// Logical lane (see [`Recorder::add_track`]).
+    pub track: u32,
+    /// Task id for lifecycle events, graph key for compile-side events.
+    pub id: u64,
+    pub kind: EventKind,
+    /// Start timestamp in microseconds (virtual-timeline events use
+    /// virtual ms × 1000; wall events use µs since the pool epoch).
+    pub ts_us: f64,
+    /// Span duration in microseconds; 0 for instants and counters.
+    pub dur_us: f64,
+}
+
+/// A fixed-capacity single-writer ring of events. Overwrites the oldest
+/// entries when full (flight-recorder semantics: the tail of the run is
+/// always retained).
+struct Ring {
+    slots: Box<[Slot]>,
+    head: AtomicUsize,
+}
+
+struct Slot(UnsafeCell<Option<Event>>);
+
+// SAFETY: slots are written by exactly one thread (the ring's owner, by
+// the `Recorder::ring` protocol) and read only after that writer has
+// quiesced, so there is never a concurrent read/write on the same cell.
+unsafe impl Sync for Slot {}
+
+impl Ring {
+    fn new(cap: usize) -> Ring {
+        let cap = cap.max(1);
+        let mut slots = Vec::with_capacity(cap);
+        slots.resize_with(cap, || Slot(UnsafeCell::new(None)));
+        Ring { slots: slots.into_boxed_slice(), head: AtomicUsize::new(0) }
+    }
+
+    #[inline]
+    fn record(&self, ev: Event) {
+        let i = self.head.fetch_add(1, Ordering::Relaxed);
+        let slot = &self.slots[i % self.slots.len()];
+        // SAFETY: single-writer protocol (see `Slot`).
+        unsafe { *slot.0.get() = Some(ev) };
+    }
+
+    /// Events in write order (oldest retained first). Caller must
+    /// guarantee the writer has quiesced.
+    fn drain(&self) -> (Vec<Event>, usize, usize) {
+        let head = self.head.load(Ordering::Acquire);
+        let cap = self.slots.len();
+        let read = |i: usize| -> Option<Event> {
+            // SAFETY: the writer has quiesced (drain protocol).
+            unsafe { *self.slots[i % cap].0.get() }
+        };
+        let (first, count) = if head <= cap { (0, head) } else { (head - cap, cap) };
+        let events: Vec<Event> = (first..first + count).filter_map(read).collect();
+        (events, head, head.saturating_sub(cap))
+    }
+}
+
+/// A cheap cloneable writer handle bound to one ring. Clones share the
+/// ring, so all clones must stay on the owning thread.
+#[derive(Clone)]
+pub struct TrackHandle {
+    ring: Arc<Ring>,
+}
+
+impl TrackHandle {
+    /// Record one event: one relaxed atomic bump + one slot write.
+    #[inline]
+    pub fn record(&self, ev: Event) {
+        if !ENABLED {
+            return;
+        }
+        self.ring.record(ev);
+    }
+}
+
+impl std::fmt::Debug for TrackHandle {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("TrackHandle").finish()
+    }
+}
+
+/// A named logical lane events are attributed to (one per compile
+/// worker / serving thread / device / dispatcher).
+#[derive(Debug, Clone)]
+pub struct TrackInfo {
+    pub name: String,
+    /// [`VIRTUAL_PID`] or [`WALL_PID`].
+    pub pid: u32,
+}
+
+/// The drained recorder state, ready for export.
+#[derive(Debug, Clone)]
+pub struct TraceDump {
+    pub tracks: Vec<TrackInfo>,
+    /// Ring contents concatenated in ring-registration order, each ring
+    /// in write order.
+    pub events: Vec<Event>,
+    /// Events ever recorded (before ring wraparound losses).
+    pub recorded: usize,
+    /// Events lost to wraparound.
+    pub dropped: usize,
+}
+
+/// The flight recorder: a registry of tracks plus per-thread rings.
+///
+/// Track registration and ring creation take a mutex (cold path, done
+/// at startup); recording itself never does.
+#[derive(Debug)]
+pub struct Recorder {
+    ring_cap: usize,
+    state: Mutex<RecorderState>,
+}
+
+#[derive(Debug, Default)]
+struct RecorderState {
+    tracks: Vec<TrackInfo>,
+    rings: Vec<Arc<Ring>>,
+}
+
+impl std::fmt::Debug for Ring {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Ring").field("cap", &self.slots.len()).finish()
+    }
+}
+
+impl Recorder {
+    /// `ring_cap` = events retained per ring before the oldest are
+    /// overwritten.
+    pub fn new(ring_cap: usize) -> Recorder {
+        Recorder { ring_cap, state: Mutex::new(RecorderState::default()) }
+    }
+
+    /// Register a logical track; returns its id (the Chrome `tid`).
+    pub fn add_track(&self, name: impl Into<String>, pid: u32) -> u32 {
+        let mut st = lock_recover(&self.state);
+        st.tracks.push(TrackInfo { name: name.into(), pid });
+        (st.tracks.len() - 1) as u32
+    }
+
+    /// Create a ring and hand back its writer handle. Protocol: the
+    /// handle (and its clones) must only be used from one thread, and
+    /// [`Recorder::drain`] must only run after all writers quiesced.
+    pub fn ring(&self) -> TrackHandle {
+        let ring = Arc::new(Ring::new(self.ring_cap));
+        lock_recover(&self.state).rings.push(Arc::clone(&ring));
+        TrackHandle { ring }
+    }
+
+    /// Collect every ring's events. Caller must guarantee all writer
+    /// threads have quiesced (in the fleet: after pool shutdown).
+    pub fn drain(&self) -> TraceDump {
+        let st = lock_recover(&self.state);
+        let mut events = Vec::new();
+        let (mut recorded, mut dropped) = (0usize, 0usize);
+        for ring in &st.rings {
+            let (evs, rec, drop) = ring.drain();
+            events.extend(evs);
+            recorded += rec;
+            dropped += drop;
+        }
+        TraceDump { tracks: st.tracks.clone(), events, recorded, dropped }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(id: u64, ts: f64) -> Event {
+        Event { track: 0, id, kind: EventKind::Publish, ts_us: ts, dur_us: 0.0 }
+    }
+
+    #[test]
+    fn records_in_order_and_counts() {
+        let r = Recorder::new(8);
+        let t = r.add_track("dispatcher", VIRTUAL_PID);
+        assert_eq!(t, 0);
+        let h = r.ring();
+        for i in 0..5 {
+            h.record(ev(i, i as f64));
+        }
+        let d = r.drain();
+        if ENABLED {
+            assert_eq!(d.recorded, 5);
+            assert_eq!(d.dropped, 0);
+            assert_eq!(d.events.len(), 5);
+            assert!(d.events.windows(2).all(|w| w[0].id < w[1].id));
+        } else {
+            assert_eq!(d.recorded, 0);
+        }
+        assert_eq!(d.tracks.len(), 1);
+        assert_eq!(d.tracks[0].pid, VIRTUAL_PID);
+    }
+
+    #[test]
+    fn wraparound_keeps_tail_and_counts_drops() {
+        if !ENABLED {
+            return;
+        }
+        let r = Recorder::new(4);
+        let h = r.ring();
+        for i in 0..10u64 {
+            h.record(ev(i, i as f64));
+        }
+        let d = r.drain();
+        assert_eq!(d.recorded, 10);
+        assert_eq!(d.dropped, 6);
+        let ids: Vec<u64> = d.events.iter().map(|e| e.id).collect();
+        assert_eq!(ids, vec![6, 7, 8, 9], "tail of the run is retained");
+    }
+
+    #[test]
+    fn per_thread_rings_merge_on_drain() {
+        if !ENABLED {
+            return;
+        }
+        let r = Arc::new(Recorder::new(64));
+        let handles: Vec<_> = (0..4u64)
+            .map(|w| {
+                let h = r.ring();
+                std::thread::spawn(move || {
+                    for i in 0..16u64 {
+                        h.record(ev(w * 100 + i, i as f64));
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let d = r.drain();
+        assert_eq!(d.recorded, 64);
+        assert_eq!(d.dropped, 0);
+        assert_eq!(d.events.len(), 64);
+    }
+
+    #[test]
+    fn identical_write_sequences_drain_identically() {
+        // The byte-identical-replay property rests on this: same events
+        // in, same dump out.
+        let run = || {
+            let r = Recorder::new(16);
+            r.add_track("d", VIRTUAL_PID);
+            let h = r.ring();
+            for i in 0..20u64 {
+                h.record(ev(i, i as f64 * 1.5));
+            }
+            r.drain()
+        };
+        let (a, b) = (run(), run());
+        assert_eq!(a.events, b.events);
+        assert_eq!((a.recorded, a.dropped), (b.recorded, b.dropped));
+    }
+}

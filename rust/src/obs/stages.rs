@@ -1,0 +1,291 @@
+//! Stage attribution: each task's timeline decomposed into
+//! admission → queue → compile (explore / port / bucket-retune /
+//! re-explore) → publication-barrier stall → serve, summarized as
+//! per-stage p50/p99 plus a per-device serving timeline.
+//!
+//! All stage samples except `barrier` come from virtual-time
+//! bookkeeping, so they are identical across executors and across
+//! replays; `barrier` is the wall-clock dispatcher stall and is zero
+//! under the virtual executor by construction.
+
+use crate::obs::contention::LockSnapshot;
+use crate::util::{summarize_owned, JsonValue, Summary, Table};
+
+/// Compile-stage tiers (matching the plan store's reuse tiers).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CompileStage {
+    Explore,
+    Port,
+    Bucket,
+    Reexplore,
+}
+
+/// Accumulates per-stage latency samples while a trace replays.
+#[derive(Debug, Default)]
+pub struct StageAccum {
+    queue: Vec<f64>,
+    serve: Vec<f64>,
+    e2e: Vec<f64>,
+    explore: Vec<f64>,
+    port: Vec<f64>,
+    bucket: Vec<f64>,
+    reexplore: Vec<f64>,
+    barrier: Vec<f64>,
+    device_serve: Vec<Vec<f64>>,
+    device_first: Vec<f64>,
+    device_last: Vec<f64>,
+}
+
+impl StageAccum {
+    pub fn new(devices: usize) -> StageAccum {
+        StageAccum {
+            device_serve: vec![Vec::new(); devices],
+            device_first: vec![f64::INFINITY; devices],
+            device_last: vec![0.0; devices],
+            ..Default::default()
+        }
+    }
+
+    /// Record one admitted task's timeline: queue wait, serving span on
+    /// `device` from `start_ms` to `end_ms`, and end-to-end latency
+    /// (arrival → completion). `queue + serve == e2e` by construction
+    /// of the virtual bookkeeping; the report re-checks it.
+    pub fn task(&mut self, device: usize, queue_ms: f64, start_ms: f64, end_ms: f64) {
+        let serve = end_ms - start_ms;
+        self.queue.push(queue_ms);
+        self.serve.push(serve);
+        self.e2e.push(queue_ms + serve);
+        if let Some(d) = self.device_serve.get_mut(device) {
+            d.push(serve);
+            self.device_first[device] = self.device_first[device].min(start_ms);
+            self.device_last[device] = self.device_last[device].max(end_ms);
+        }
+    }
+
+    /// Record one compile job's enqueue→ready latency by tier.
+    pub fn compile(&mut self, stage: CompileStage, ms: f64) {
+        match stage {
+            CompileStage::Explore => self.explore.push(ms),
+            CompileStage::Port => self.port.push(ms),
+            CompileStage::Bucket => self.bucket.push(ms),
+            CompileStage::Reexplore => self.reexplore.push(ms),
+        }
+    }
+
+    /// Record one dispatcher publication-barrier stall (wall-clock
+    /// executor only).
+    pub fn barrier_wait(&mut self, ms: f64) {
+        self.barrier.push(ms);
+    }
+
+    /// Summarize into a report. `locks` is the contention profile,
+    /// `recorded`/`dropped` come from the event recorder.
+    pub fn report(&self, locks: Vec<LockSnapshot>, recorded: usize, dropped: usize) -> ObsReport {
+        let row = |name: &'static str, samples: &[f64]| StageRow {
+            name,
+            total_ms: samples.iter().sum(),
+            summary: summarize_owned(samples.to_vec()),
+        };
+        let per_device = self
+            .device_serve
+            .iter()
+            .enumerate()
+            .map(|(d, serves)| DeviceLane {
+                device: d,
+                first_start_ms: if serves.is_empty() { 0.0 } else { self.device_first[d] },
+                last_end_ms: self.device_last[d],
+                serve: summarize_owned(serves.clone()),
+            })
+            .collect();
+        ObsReport {
+            stages: vec![
+                row("queue", &self.queue),
+                row("compile_explore", &self.explore),
+                row("compile_port", &self.port),
+                row("compile_bucket", &self.bucket),
+                row("compile_reexplore", &self.reexplore),
+                row("barrier", &self.barrier),
+                row("serve", &self.serve),
+                row("e2e", &self.e2e),
+            ],
+            per_device,
+            locks,
+            events_recorded: recorded,
+            events_dropped: dropped,
+        }
+    }
+}
+
+/// One stage's latency attribution.
+#[derive(Debug, Clone)]
+pub struct StageRow {
+    pub name: &'static str,
+    pub total_ms: f64,
+    pub summary: Summary,
+}
+
+/// One device's serving timeline.
+#[derive(Debug, Clone)]
+pub struct DeviceLane {
+    pub device: usize,
+    pub first_start_ms: f64,
+    pub last_end_ms: f64,
+    pub serve: Summary,
+}
+
+/// The observability section of a fleet report: stage attribution,
+/// per-device timelines, the lock-contention profile, and recorder
+/// accounting.
+#[derive(Debug, Clone)]
+pub struct ObsReport {
+    pub stages: Vec<StageRow>,
+    pub per_device: Vec<DeviceLane>,
+    pub locks: Vec<LockSnapshot>,
+    pub events_recorded: usize,
+    pub events_dropped: usize,
+}
+
+impl ObsReport {
+    pub fn stage(&self, name: &str) -> Option<&StageRow> {
+        self.stages.iter().find(|s| s.name == name)
+    }
+
+    pub fn lock(&self, name: &str) -> Option<&LockSnapshot> {
+        self.locks.iter().find(|l| l.name == name)
+    }
+
+    pub fn to_json(&self) -> JsonValue {
+        let mut stages = JsonValue::obj();
+        for s in &self.stages {
+            let mut o = JsonValue::obj();
+            o.set("count", s.summary.n)
+                .set("total_ms", s.total_ms)
+                .set("p50_ms", s.summary.p50)
+                .set("p99_ms", s.summary.p99)
+                .set("max_ms", s.summary.max);
+            stages.set(s.name, o);
+        }
+        let mut locks = JsonValue::obj();
+        for l in &self.locks {
+            locks.set(l.name, l.to_json());
+        }
+        let devices: Vec<JsonValue> = self
+            .per_device
+            .iter()
+            .map(|d| {
+                let mut o = JsonValue::obj();
+                o.set("device", d.device)
+                    .set("first_start_ms", d.first_start_ms)
+                    .set("last_end_ms", d.last_end_ms)
+                    .set("serve_count", d.serve.n)
+                    .set("serve_p50_ms", d.serve.p50)
+                    .set("serve_p99_ms", d.serve.p99);
+                o
+            })
+            .collect();
+        let mut events = JsonValue::obj();
+        events.set("recorded", self.events_recorded).set("dropped", self.events_dropped);
+        let mut o = JsonValue::obj();
+        o.set("stages", stages)
+            .set("per_device", JsonValue::Arr(devices))
+            .set("locks", locks)
+            .set("events", events);
+        o
+    }
+
+    /// The stage-attribution + lock-contention tables for terminal
+    /// reports.
+    pub fn render(&self) -> String {
+        let mut t = Table::new(vec!["stage", "count", "total ms", "p50 ms", "p99 ms"]);
+        for s in &self.stages {
+            t.row(vec![
+                s.name.to_string(),
+                s.summary.n.to_string(),
+                format!("{:.1}", s.total_ms),
+                format!("{:.3}", s.summary.p50),
+                format!("{:.3}", s.summary.p99),
+            ]);
+        }
+        let mut l = Table::new(vec!["lock", "acquisitions", "contended", "blocked ms"]);
+        for s in &self.locks {
+            l.row(vec![
+                s.name.to_string(),
+                s.acquisitions.to_string(),
+                s.contended.to_string(),
+                format!("{:.3}", s.blocked_ms),
+            ]);
+        }
+        format!(
+            "stage attribution ({} events, {} dropped):\n{}\nlock contention:\n{}",
+            self.events_recorded,
+            self.events_dropped,
+            t.render(),
+            l.render()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn queue_plus_serve_equals_e2e() {
+        let mut a = StageAccum::new(2);
+        a.task(0, 2.0, 12.0, 20.0);
+        a.task(1, 0.0, 5.0, 9.5);
+        a.task(0, 1.5, 21.0, 30.0);
+        a.compile(CompileStage::Explore, 40.0);
+        a.compile(CompileStage::Port, 4.0);
+        let r = a.report(vec![LockSnapshot::zero("plan_store")], 10, 0);
+        let total = |n: &str| r.stage(n).unwrap().total_ms;
+        assert!((total("queue") + total("serve") - total("e2e")).abs() < 1e-9);
+        assert_eq!(r.stage("queue").unwrap().summary.n, 3);
+        assert_eq!(r.stage("compile_explore").unwrap().summary.n, 1);
+        assert_eq!(r.stage("barrier").unwrap().summary.n, 0);
+        assert_eq!(r.per_device.len(), 2);
+        assert_eq!(r.per_device[0].serve.n, 2);
+        assert_eq!(r.per_device[0].first_start_ms, 12.0);
+        assert_eq!(r.per_device[0].last_end_ms, 30.0);
+        assert_eq!(r.lock("plan_store").unwrap().acquisitions, 0);
+    }
+
+    #[test]
+    fn json_and_render_cover_all_stages() {
+        let mut a = StageAccum::new(1);
+        a.task(0, 1.0, 3.0, 7.0);
+        a.barrier_wait(0.5);
+        let r = a.report(vec![LockSnapshot::zero("work_queue")], 4, 1);
+        let j = r.to_json().to_string();
+        for key in [
+            "queue",
+            "compile_explore",
+            "compile_port",
+            "compile_bucket",
+            "compile_reexplore",
+            "barrier",
+            "serve",
+            "e2e",
+            "p50_ms",
+            "p99_ms",
+            "work_queue",
+            "blocked_ms",
+            "per_device",
+            "recorded",
+        ] {
+            assert!(j.contains(key), "missing {key} in {j}");
+        }
+        let rendered = r.render();
+        assert!(rendered.contains("stage attribution"));
+        assert!(rendered.contains("lock contention"));
+        assert!(rendered.contains("work_queue"));
+    }
+
+    #[test]
+    fn empty_accum_reports_zero_rows() {
+        let r = StageAccum::new(0).report(Vec::new(), 0, 0);
+        assert_eq!(r.stage("e2e").unwrap().summary.n, 0);
+        assert_eq!(r.stage("e2e").unwrap().total_ms, 0.0);
+        assert!(r.per_device.is_empty());
+    }
+}

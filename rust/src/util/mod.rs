@@ -12,12 +12,14 @@ pub mod json;
 pub mod mask;
 pub mod prng;
 pub mod stats;
+pub mod sync;
 pub mod table;
 pub mod timer;
 
 pub use json::JsonValue;
 pub use mask::IdMask;
 pub use prng::Prng;
-pub use stats::{mean, median, percentile, percentiles, summarize, Summary};
+pub use stats::{mean, median, percentile, percentiles, summarize, summarize_owned, Summary};
+pub use sync::lock_recover;
 pub use table::{fmt_f, Table};
 pub use timer::{bench_loop, BenchStats};

@@ -48,7 +48,7 @@ pub fn mean(samples: &[f64]) -> f64 {
 }
 
 /// One-pass summary of a sample set.
-#[derive(Debug, Clone, Copy, Default)]
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct Summary {
     pub n: usize,
     pub mean: f64,
@@ -61,20 +61,27 @@ pub struct Summary {
 
 /// Summarize a sample set (sorts once; empty input yields all zeros).
 pub fn summarize(samples: &[f64]) -> Summary {
+    summarize_owned(samples.to_vec())
+}
+
+/// Summarize taking ownership of the samples: sorts in place, paying no
+/// clone. Report paths that already hold a scratch `Vec` (the fleet's
+/// merged per-device latency series runs to tens of thousands of
+/// samples) use this instead of [`summarize`].
+pub fn summarize_owned(mut samples: Vec<f64>) -> Summary {
     if samples.is_empty() {
         return Summary::default();
     }
-    let mut sorted = samples.to_vec();
-    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
-    let pick = |q: f64| sorted_percentile(&sorted, q);
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+    let pick = |q: f64| sorted_percentile(&samples, q);
     Summary {
-        n: sorted.len(),
-        mean: mean(&sorted),
+        n: samples.len(),
+        mean: mean(&samples),
         p50: pick(0.50),
         p95: pick(0.95),
         p99: pick(0.99),
-        min: sorted[0],
-        max: sorted[sorted.len() - 1],
+        min: samples[0],
+        max: samples[samples.len() - 1],
     }
 }
 
@@ -173,6 +180,18 @@ mod tests {
         assert_eq!(s.max, 9.0);
         assert!(s.min <= s.p50 && s.p50 <= s.p95 && s.p95 <= s.p99 && s.p99 <= s.max);
         assert!((s.mean - 34.0 / 7.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summarize_owned_matches_borrowed() {
+        let xs: Vec<f64> = (1..=500).rev().map(|i| i as f64 * 0.5).collect();
+        let a = summarize(&xs);
+        let b = summarize_owned(xs);
+        assert_eq!(
+            (a.n, a.mean, a.p50, a.p95, a.p99, a.min, a.max),
+            (b.n, b.mean, b.p50, b.p95, b.p99, b.min, b.max)
+        );
+        assert_eq!(summarize_owned(Vec::new()).n, 0);
     }
 
     #[test]

@@ -1,0 +1,38 @@
+//! Poison-recovering lock helpers shared by the fleet and coordinator.
+
+use std::sync::{Mutex, MutexGuard};
+
+/// Lock a mutex, recovering from poisoning instead of panicking.
+///
+/// Every critical section in the serving stack is a short collection
+/// operation (insert / lookup / push a sample) that cannot leave the
+/// protected data structurally broken mid-way, so a panic elsewhere on
+/// the holding thread does not invalidate the data — recovery is sound
+/// and keeps one panicking worker from cascading into every thread that
+/// touches the same map. Worker panics are reported separately (the
+/// fleet pool collects them per job and surfaces them at shutdown)
+/// rather than through lock poisoning.
+pub fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::{Arc, Mutex};
+
+    #[test]
+    fn recovers_from_poisoned_mutex() {
+        let m = Arc::new(Mutex::new(vec![1, 2, 3]));
+        let m2 = Arc::clone(&m);
+        // Poison the mutex: panic while holding the guard.
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison");
+        })
+        .join();
+        assert!(m.is_poisoned());
+        let g = lock_recover(&m);
+        assert_eq!(*g, vec![1, 2, 3], "data survives recovery");
+    }
+}

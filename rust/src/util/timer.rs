@@ -1,7 +1,7 @@
 //! Micro-benchmark timing loop (criterion is not available offline).
 //!
 //! `bench_loop` runs a closure with warmup, collects per-iteration
-//! wall-clock samples, and reports mean / p50 / p95 / min. Every
+//! wall-clock samples, and reports mean / p50 / p95 / p99 / min. Every
 //! `rust/benches/*.rs` harness builds on this.
 
 use std::time::{Duration, Instant};
@@ -13,6 +13,7 @@ pub struct BenchStats {
     pub mean: Duration,
     pub p50: Duration,
     pub p95: Duration,
+    pub p99: Duration,
     pub min: Duration,
     pub max: Duration,
 }
@@ -39,6 +40,7 @@ impl BenchStats {
             mean: total / iters as u32,
             p50: pick(0.50),
             p95: pick(0.95),
+            p99: pick(0.99),
             min: samples[0],
             max: samples[iters - 1],
         }
@@ -49,10 +51,12 @@ impl std::fmt::Display for BenchStats {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "mean {:>9.3} ms | p50 {:>9.3} ms | p95 {:>9.3} ms | min {:>9.3} ms | n={}",
+            "mean {:>9.3} ms | p50 {:>9.3} ms | p95 {:>9.3} ms | p99 {:>9.3} ms | \
+             min {:>9.3} ms | n={}",
             self.mean.as_secs_f64() * 1e3,
             self.p50.as_secs_f64() * 1e3,
             self.p95.as_secs_f64() * 1e3,
+            self.p99.as_secs_f64() * 1e3,
             self.min.as_secs_f64() * 1e3,
             self.iters
         )
@@ -91,7 +95,8 @@ mod tests {
         });
         assert!(s.min <= s.p50);
         assert!(s.p50 <= s.p95);
-        assert!(s.p95 <= s.max);
+        assert!(s.p95 <= s.p99);
+        assert!(s.p99 <= s.max);
         assert_eq!(s.iters, 20);
     }
 
@@ -107,6 +112,7 @@ mod tests {
         let s = bench_loop(0, 3, || 1);
         let d = format!("{s}");
         assert!(d.contains("mean"));
+        assert!(d.contains("p99"));
         assert!(d.contains("n=3"));
     }
 }
