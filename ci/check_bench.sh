@@ -134,6 +134,26 @@ if [[ "$(jq -r '.observability.enabled' "$BENCH")" == "true" ]]; then
     '.observability.wallclock.locks.work_queue.acquisitions > 0'
 fi
 
+# Cluster scale: the sharded control plane must have replayed the
+# production-scale trace (100k tasks over 1000 devices), the per-shard
+# decision streams must match across executors, throughput must be
+# measured, and the epoch-published plan store's serve-side read path
+# must be contention-free on the wall-clock run. Zero contended
+# acquisitions is strictly below any mutex-based single-dispatcher
+# baseline — a mutex read path contends whenever a publication and a
+# serve poll race, the epoch read path structurally cannot — so the
+# "strictly below baseline" requirement takes its strongest form: a
+# literal zero, on a path that demonstrably fired.
+assert "cluster-scale section present" '.scale | has("tasks_per_sec")'
+assert "cluster trace at production scale" '.scale.tasks >= 100000 and .scale.devices >= 1000'
+assert "cluster throughput measured" '.scale.tasks_per_sec > 0'
+assert "per-shard decision streams match across executors" \
+  '.scale.per_shard_decisions_match == true'
+assert "cluster run must never regress" '.scale.regressions == 0'
+assert "serve threads read plans through the epoch path" \
+  '.scale.locks.plan_store_read.acquisitions > 0'
+assert "epoch read path is contention-free" '.scale.locks.plan_store_read.contended == 0'
+
 echo "check_bench: structural gates OK ($BENCH)"
 
 # ---------------------------------------------------------------------
@@ -208,6 +228,11 @@ if [[ ! -f "$BASELINE" ]] || [[ "$(jq -r '.seeded // false' "$BASELINE")" != "tr
 fi
 
 BASE_TOL=$(jq -r '.tolerance // 0.15' "$BASELINE")
+# A provisional baseline was seeded by hand (estimates, not a measured
+# run): trajectory deviations are reported and a measured candidate is
+# written, but CI does not fail on them. Committing the candidate over
+# the baseline (which drops the flag) hardens the gate.
+PROVISIONAL=$(jq -r '.provisional // false' "$BASELINE")
 failures=0
 
 for path in "${GATED_EXACT[@]}"; do
@@ -243,6 +268,17 @@ for path in "${GATED_BANDED[@]}"; do
 done
 
 if [[ $failures -gt 0 ]]; then
+  if [[ "$PROVISIONAL" == "true" ]]; then
+    CANDIDATE="${BASELINE%.json}.candidate.json"
+    extract_baseline "$CANDIDATE"
+    echo "check_bench: WARNING: $failures field(s) deviate from the provisional (hand-seeded) baseline." >&2
+    echo "check_bench: wrote measured candidate to $CANDIDATE; commit it over $BASELINE to harden the trajectory gate." >&2
+    exit 0
+  fi
   fail "$failures gated field(s) regressed against $BASELINE — if the change is intentional, re-seed with ci/check_bench.sh --update-baseline and explain in the PR"
 fi
-echo "check_bench: baseline trajectory gate OK ($BASELINE, tolerance $BASE_TOL)"
+if [[ "$PROVISIONAL" == "true" ]]; then
+  echo "check_bench: trajectory gate OK against a provisional baseline — re-seed from a measured run to harden it"
+else
+  echo "check_bench: baseline trajectory gate OK ($BASELINE, tolerance $BASE_TOL)"
+fi

@@ -42,15 +42,27 @@
 //! observability section stripped is byte-identical to the untraced
 //! one: recording never perturbs decisions.
 //!
+//! Finally, the **cluster-scale** section replays a 100k-task,
+//! 1000-device trace (`TrafficConfig::cluster`) through eight
+//! structure-key-sharded dispatchers (`ShardedFleetService`) on both
+//! executors: per-shard decision digests must be identical across
+//! executors (cross-shard interleavings are free to race), the
+//! epoch-published plan store's serve-side read path must show zero
+//! contended acquisitions, and the wall-clock run's throughput lands
+//! in the JSON as `scale.tasks_per_sec` — the headline number of the
+//! sharded control plane.
+//!
 //! Run: `cargo bench --bench production_fleet` (add `-- N` for trace
 //! size, default 1200, acceptance floor 1000; `--threads K` for the
-//! wall-clock pool size, default 2; `--compile-shards S`, default 4).
+//! wall-clock pool size, default 2; `--compile-shards S`, default 4;
+//! `--scale-tasks N` / `--scale-devices D` / `--scale-shards S` for
+//! the cluster section, defaults 100000 / 1000 / 8).
 //! Writes `BENCH_fleet.json`.
 
 use fusion_stitching::explorer::regions;
 use fusion_stitching::fleet::{
     build_template_families, build_templates, generate_trace, DeviceRegistry, ExecutorKind,
-    FleetOptions, FleetReport, FleetService, TrafficConfig,
+    FleetOptions, FleetReport, FleetService, ShardedFleetService, TrafficConfig,
 };
 use fusion_stitching::obs::{chrome_trace, TraceDump};
 use fusion_stitching::util::JsonValue;
@@ -116,6 +128,9 @@ fn main() {
     let mut tasks: Option<usize> = None;
     let mut threads: usize = 2;
     let mut shards: usize = 4;
+    let mut scale_tasks: usize = 100_000;
+    let mut scale_devices: usize = 1000;
+    let mut scale_shards: usize = 8;
     let mut i = 0;
     while i < args.len() {
         let flag_value = |name: &str, i: usize| -> usize {
@@ -129,6 +144,15 @@ fn main() {
             i += 2;
         } else if args[i] == "--compile-shards" {
             shards = flag_value("--compile-shards", i).max(1);
+            i += 2;
+        } else if args[i] == "--scale-tasks" {
+            scale_tasks = flag_value("--scale-tasks", i).max(1);
+            i += 2;
+        } else if args[i] == "--scale-devices" {
+            scale_devices = flag_value("--scale-devices", i).max(2);
+            i += 2;
+        } else if args[i] == "--scale-shards" {
+            scale_shards = flag_value("--scale-shards", i).max(1);
             i += 2;
         } else {
             if tasks.is_none() {
@@ -391,6 +415,62 @@ fn main() {
         None => println!("flight recorder: built without the `obs` feature; section skipped"),
     }
 
+    // Cluster scale: the sharded control plane's headline. A 100k-task
+    // trace over a 1000-device registry replays through structure-key-
+    // sharded dispatchers on both executors. Gates: no task dropped or
+    // regressed, per-shard decision digests identical across executors
+    // (cross-shard interleavings are free to race — per-shard streams
+    // are not), and the epoch store's serve-side read path shows zero
+    // contended acquisitions: the lock the single dispatcher serialized
+    // every serve poll on no longer exists.
+    let scale_shards = scale_shards.min(scale_devices);
+    println!(
+        "\n== cluster scale: {scale_tasks} tasks, {scale_devices} devices, \
+         {scale_shards} dispatcher shards =="
+    );
+    let scale_traffic = TrafficConfig::cluster(scale_tasks);
+    let scale_opts = FleetOptions {
+        registry: DeviceRegistry::mixed(scale_devices / 2, scale_devices - scale_devices / 2, 2),
+        compile_workers: 2,
+        shards: scale_shards,
+        admission_tick_ms: 5.0,
+        ..Default::default()
+    };
+    let scale_run = |executor: ExecutorKind| {
+        let families = build_template_families(&scale_traffic);
+        let trace = generate_trace(&scale_traffic);
+        let opts = FleetOptions { executor, ..scale_opts.clone() };
+        let mut svc = ShardedFleetService::with_families(opts, families);
+        svc.run_trace(&trace)
+    };
+    let scale_virt = scale_run(ExecutorKind::VirtualTime);
+    println!(
+        "virtual: {} tasks across {} shards in {:.0} ms",
+        scale_virt.tasks(),
+        scale_virt.shards.len(),
+        scale_virt.elapsed_ms
+    );
+    let scale_wall = scale_run(ExecutorKind::WallClock { threads });
+    let digests_match = scale_virt.decision_digests() == scale_wall.decision_digests();
+    assert!(digests_match, "per-shard decision streams diverged across executors");
+    assert_eq!(scale_virt.tasks(), scale_traffic.tasks, "routing must not drop tasks");
+    assert_eq!(scale_wall.tasks(), scale_traffic.tasks);
+    assert_eq!(scale_virt.regressions(), 0, "never-negative must hold at cluster scale");
+    assert_eq!(scale_wall.regressions(), 0);
+    let read = scale_wall.lock("plan_store_read").expect("serve-side store profile");
+    assert!(read.acquisitions > 0, "served hits must poll through the epoch read path");
+    assert_eq!(read.contended, 0, "epoch reads must never contend");
+    assert!(scale_wall.tasks_per_sec() > 0.0);
+    println!(
+        "wall-clock: {} tasks in {:.0} ms — {:.0} tasks/s; plan-store epoch reads \
+         {} ({} contended)",
+        scale_wall.tasks(),
+        scale_wall.elapsed_ms,
+        scale_wall.tasks_per_sec(),
+        read.acquisitions,
+        read.contended
+    );
+
     let projected = report.projected_gpu_hours_saved(30_000.0, 2.0);
     println!(
         "\nGPU time saved: {:.1} ms of {:.1} ms fallback-only ({:.1}%)",
@@ -467,6 +547,32 @@ fn main() {
         .set("saved_frac_uncalibrated", report.saved_frac())
         .set("plan_quality_no_worse", plan_quality_no_worse)
         .set("matches_virtual_decisions", true);
+    let mut scale_locks = JsonValue::obj();
+    for row in scale_wall.merged_locks() {
+        scale_locks.set(row.name, row.to_json());
+    }
+    let digest_arr = JsonValue::Arr(
+        scale_wall
+            .decision_digests()
+            .iter()
+            .map(|d| JsonValue::from(format!("{d:#018x}")))
+            .collect(),
+    );
+    let mut scale_json = JsonValue::obj();
+    scale_json
+        .set("tasks", scale_traffic.tasks)
+        .set("devices", scale_devices)
+        .set("shards", scale_shards)
+        .set("templates", scale_traffic.templates)
+        .set("elapsed_ms", scale_wall.elapsed_ms)
+        .set("tasks_per_sec", scale_wall.tasks_per_sec())
+        .set("virtual_elapsed_ms", scale_virt.elapsed_ms)
+        .set("virtual_tasks_per_sec", scale_virt.tasks_per_sec())
+        .set("makespan_ms", scale_wall.makespan_ms())
+        .set("per_shard_decisions_match", digests_match)
+        .set("decision_digests", digest_arr)
+        .set("regressions", scale_wall.regressions())
+        .set("locks", scale_locks);
     let mut obs_json = JsonValue::obj();
     obs_json
         .set("enabled", obs_enabled)
@@ -491,6 +597,7 @@ fn main() {
         .set("sharded", sharded_json)
         .set("dynamic_shapes", dynamic_json)
         .set("calibration", calibration_json)
+        .set("scale", scale_json)
         .set("observability", obs_json);
     let path = "BENCH_fleet.json";
     match std::fs::write(path, out.to_pretty()) {

@@ -90,6 +90,51 @@ impl AdmissionController {
     }
 }
 
+/// Batched backpressure sampling for a shard dispatcher: instead of
+/// recomputing the fleet-wide pending-compile count for *every* task
+/// (an O(pending) retain-and-count on the dispatcher's hot path), the
+/// shard samples it once per tick of virtual time and every admission
+/// decision inside the tick reuses the sample. Per-task queue-delay
+/// rejection is untouched — it is a per-device property that costs
+/// nothing to read.
+///
+/// Determinism: ticks are cut on *virtual* arrival timestamps and the
+/// pending count is virtual bookkeeping in both executors, so a batched
+/// shard makes byte-identical decisions under the virtual and
+/// wall-clock executors — the per-shard equivalence invariant. A tick
+/// of `0.0` disables batching (every task resamples), which reproduces
+/// the unbatched dispatcher exactly.
+#[derive(Debug, Clone, Default)]
+pub struct AdmissionTick {
+    tick_ms: f64,
+    /// Start of the current tick, once the first sample has been taken.
+    started: Option<f64>,
+    pending: usize,
+}
+
+impl AdmissionTick {
+    pub fn new(tick_ms: f64) -> Self {
+        assert!(tick_ms >= 0.0, "admission tick must be non-negative");
+        AdmissionTick { tick_ms, started: None, pending: 0 }
+    }
+
+    /// The pending-compile count admission decisions at virtual time
+    /// `now` should use: the tick's cached sample, refreshed via
+    /// `sample` when `now` has left the tick window (or batching is
+    /// off).
+    pub fn pending(&mut self, now: f64, sample: impl FnOnce() -> usize) -> usize {
+        let stale = match self.started {
+            None => true,
+            Some(t0) => self.tick_ms == 0.0 || now >= t0 + self.tick_ms,
+        };
+        if stale {
+            self.started = Some(now);
+            self.pending = sample();
+        }
+        self.pending
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -126,5 +171,31 @@ mod tests {
         // Rejection takes precedence over backpressure.
         assert_eq!(ac.decide(1e9, 100, true), AdmitDecision::Reject);
         assert_eq!(ac.counts(), (2, 1, 1));
+    }
+
+    #[test]
+    fn admission_tick_batches_pending_samples_per_window() {
+        let mut tick = AdmissionTick::new(10.0);
+        let mut samples = 0usize;
+        let mut sample = |v: usize| {
+            samples += 1;
+            v
+        };
+        // First call samples; the rest of the window reuses the value
+        // even though the live count moved.
+        assert_eq!(tick.pending(0.0, || sample(3)), 3);
+        assert_eq!(tick.pending(4.0, || sample(7)), 3);
+        assert_eq!(tick.pending(9.9, || sample(7)), 3);
+        // Crossing the tick boundary resamples and opens a new window.
+        assert_eq!(tick.pending(10.0, || sample(7)), 7);
+        assert_eq!(tick.pending(19.9, || sample(1)), 7);
+        assert_eq!(samples, 2);
+
+        // A zero tick is the unbatched dispatcher: every decision
+        // resamples.
+        let mut legacy = AdmissionTick::new(0.0);
+        assert_eq!(legacy.pending(0.0, || 1), 1);
+        assert_eq!(legacy.pending(0.0, || 2), 2);
+        assert_eq!(legacy.pending(0.0, || 3), 3);
     }
 }

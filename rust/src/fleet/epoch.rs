@@ -1,0 +1,359 @@
+//! Epoch/RCU-style publication cell: lock-free reads, copy-on-write
+//! publication.
+//!
+//! The fleet's plan store and published-latency table are read on every
+//! serving iteration by up to a thousand serve threads, but written only
+//! when a compile worker publishes a plan — a classic read-mostly
+//! workload where even an uncontended `Mutex` acquisition per read shows
+//! up in the flight recorder at cluster scale. `EpochCell` replaces the
+//! mutex with an epoch-validated snapshot pointer:
+//!
+//! - **Readers** announce themselves in a bounded slot array (one CAS),
+//!   validate that no publication raced the announcement, then
+//!   dereference the current snapshot with no lock held. The common case
+//!   is one CAS + two loads + one store per read.
+//! - **Writers** serialize on a poison-recovering writer mutex, clone
+//!   the current snapshot, apply the mutation closure, swap the pointer
+//!   in one atomic store, and bump the epoch. The displaced snapshot is
+//!   *retired*, not freed: it is reclaimed only once every announced
+//!   reader stamp is newer than its retirement tag (readers drain).
+//!
+//! Safety argument (all operations are `SeqCst`, so a single total
+//! order exists): a reader stamps its slot with epoch `e` *before*
+//! validating `epoch == e`, and a writer bumps the epoch *before*
+//! scanning reader slots. If the reader's validation succeeds, every
+//! publication that could retire the pointer it is about to load bumps
+//! the epoch after that validation, hence scans the slots after the
+//! stamp is visible, hence observes stamp `e <= tag` and defers the
+//! free. If validation fails, the reader backs out without having
+//! dereferenced anything. When no free slot is available or validation
+//! keeps failing, readers fall back to holding the writer mutex, under
+//! which no publication (and therefore no reclamation) can run.
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicPtr, AtomicU64, AtomicUsize, Ordering::SeqCst};
+use std::sync::Mutex;
+
+use crate::util::sync::lock_recover;
+
+/// Default reader-slot capacity. Sized for the cluster-scale fleet: a
+/// 1000-device wall-clock run pins at most one slot per serve thread
+/// plus a handful of dispatcher/compile threads; overflow readers are
+/// still correct, they just take the writer-mutex slow path.
+const DEFAULT_SLOTS: usize = 1024;
+
+/// Fast-path retries before a reader gives up and takes the slow path.
+const PIN_RETRIES: usize = 8;
+
+static NEXT_HINT: AtomicUsize = AtomicUsize::new(0);
+
+thread_local! {
+    /// Each thread probes from its own preferred slot so steady-state
+    /// reads claim the same uncontended slot every time.
+    static SLOT_HINT: Cell<usize> = Cell::new(NEXT_HINT.fetch_add(1, SeqCst));
+}
+
+pub struct EpochCell<T: Clone> {
+    /// The currently published snapshot. Never null.
+    current: AtomicPtr<T>,
+    /// Monotonic publication epoch. Starts at 1 so a stamp of 0 always
+    /// means "slot quiescent".
+    epoch: AtomicU64,
+    /// Reader announcement slots: 0 = free, otherwise the epoch the
+    /// occupying reader validated against.
+    slots: Box<[AtomicU64]>,
+    /// Serializes publications (and backs the reader slow path).
+    writer: Mutex<()>,
+    /// Displaced snapshots awaiting reader drain: (retirement tag, ptr).
+    retired: Mutex<Vec<(u64, *mut T)>>,
+}
+
+// The raw pointers in `current`/`retired` are owned by the cell and
+// only dereferenced under the epoch protocol above; they represent a
+// `T` that itself crosses threads, hence the `Send + Sync` bounds.
+unsafe impl<T: Clone + Send + Sync> Send for EpochCell<T> {}
+unsafe impl<T: Clone + Send + Sync> Sync for EpochCell<T> {}
+
+/// Releases a reader slot even if the read closure panics.
+struct Unpin<'a>(&'a AtomicU64);
+
+impl Drop for Unpin<'_> {
+    fn drop(&mut self) {
+        self.0.store(0, SeqCst);
+    }
+}
+
+impl<T: Clone> EpochCell<T> {
+    pub fn new(value: T) -> Self {
+        Self::with_slots(value, DEFAULT_SLOTS)
+    }
+
+    /// Build a cell with an explicit reader-slot capacity (tests use a
+    /// tiny capacity to force the slow path; correctness never depends
+    /// on the count).
+    pub fn with_slots(value: T, slots: usize) -> Self {
+        assert!(slots >= 1, "epoch cell needs at least one reader slot");
+        let slots = (0..slots)
+            .map(|_| AtomicU64::new(0))
+            .collect::<Vec<_>>()
+            .into_boxed_slice();
+        EpochCell {
+            current: AtomicPtr::new(Box::into_raw(Box::new(value))),
+            epoch: AtomicU64::new(1),
+            slots,
+            writer: Mutex::new(()),
+            retired: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Claim a reader slot stamped with the current epoch, validating
+    /// that no publication raced the stamp. `None` means "retry or take
+    /// the slow path" — never an unsafe success.
+    fn pin(&self, hint: usize) -> Option<usize> {
+        let n = self.slots.len();
+        for probe in 0..n {
+            let i = (hint + probe) % n;
+            let e = self.epoch.load(SeqCst);
+            if self.slots[i].compare_exchange(0, e, SeqCst, SeqCst).is_ok() {
+                if self.epoch.load(SeqCst) == e {
+                    return Some(i);
+                }
+                // A publication bumped the epoch between stamp and
+                // validation; back out without dereferencing.
+                self.slots[i].store(0, SeqCst);
+                return None;
+            }
+        }
+        None
+    }
+
+    /// Read the current snapshot without taking any lock on the fast
+    /// path. The closure must not call back into this cell's `publish`
+    /// (it would deadlock only on the slow path, so don't rely on it).
+    pub fn read<R>(&self, f: impl FnOnce(&T) -> R) -> R {
+        let hint = SLOT_HINT.with(Cell::get) % self.slots.len();
+        for _ in 0..PIN_RETRIES {
+            if let Some(slot) = self.pin(hint) {
+                let _unpin = Unpin(&self.slots[slot]);
+                let p = self.current.load(SeqCst);
+                // Safe: our validated stamp keeps every retirement tag
+                // >= stamp alive, and `current` can only be retired
+                // with a tag >= the stamp we validated against.
+                return f(unsafe { &*p });
+            }
+        }
+        // Slow path: no free slot (or heavy publication churn). Holding
+        // the writer mutex excludes publication and reclamation.
+        let _writer = lock_recover(&self.writer);
+        let p = self.current.load(SeqCst);
+        f(unsafe { &*p })
+    }
+
+    /// Clone of the current snapshot.
+    pub fn snapshot(&self) -> T {
+        self.read(T::clone)
+    }
+
+    /// Publish a new snapshot: clone the current one, apply `f`, swap
+    /// it in atomically, and retire the displaced snapshot until all
+    /// readers that might hold it have drained. Publications serialize
+    /// on a poison-recovering writer mutex, so a panicking mutation
+    /// closure discards its half-built clone and leaves the published
+    /// snapshot untouched.
+    pub fn publish<R>(&self, f: impl FnOnce(&mut T) -> R) -> R {
+        let _writer = lock_recover(&self.writer);
+        let cur = self.current.load(SeqCst);
+        // Safe: the writer mutex excludes reclamation of `current`.
+        let mut next = unsafe { (*cur).clone() };
+        let out = f(&mut next);
+        let fresh = Box::into_raw(Box::new(next));
+        let old = self.current.swap(fresh, SeqCst);
+        let tag = self.epoch.fetch_add(1, SeqCst);
+        let mut retired = lock_recover(&self.retired);
+        retired.push((tag, old));
+        // Reclaim every retired snapshot older than the oldest active
+        // reader stamp. With no active readers, everything retired is
+        // reclaimable: a reader arriving now validates against the
+        // bumped epoch and can only observe `fresh` or newer.
+        let min_active = self
+            .slots
+            .iter()
+            .map(|s| s.load(SeqCst))
+            .filter(|&v| v != 0)
+            .min();
+        retired.retain(|&(t, p)| {
+            let drain = match min_active {
+                None => true,
+                Some(m) => t < m,
+            };
+            if drain {
+                // Safe: no active reader stamp protects tag `t`, and
+                // `p` left `current` at retirement, so no new reader
+                // can reach it.
+                unsafe { drop(Box::from_raw(p)) };
+            }
+            !drain
+        });
+        out
+    }
+
+    /// Number of retired snapshots still awaiting reader drain
+    /// (observability + tests).
+    pub fn retired_len(&self) -> usize {
+        lock_recover(&self.retired).len()
+    }
+
+    /// Number of publications so far.
+    pub fn publications(&self) -> u64 {
+        self.epoch.load(SeqCst) - 1
+    }
+}
+
+impl<T: Clone> std::fmt::Debug for EpochCell<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("EpochCell")
+            .field("publications", &self.publications())
+            .field("retired", &self.retired_len())
+            .finish()
+    }
+}
+
+impl<T: Clone> Drop for EpochCell<T> {
+    fn drop(&mut self) {
+        // `&mut self` proves no readers or writers remain.
+        let cur = *self.current.get_mut();
+        unsafe { drop(Box::from_raw(cur)) };
+        let retired = self
+            .retired
+            .get_mut()
+            .unwrap_or_else(std::sync::PoisonError::into_inner);
+        for (_, p) in retired.drain(..) {
+            unsafe { drop(Box::from_raw(p)) };
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+    use std::sync::Arc;
+
+    #[test]
+    fn read_sees_latest_publication() {
+        let cell = EpochCell::new(vec![1u64]);
+        assert_eq!(cell.snapshot(), vec![1]);
+        cell.publish(|v| v.push(2));
+        cell.publish(|v| v.push(3));
+        assert_eq!(cell.snapshot(), vec![1, 2, 3]);
+        assert_eq!(cell.publications(), 2);
+        // No reader was active at either publication: nothing retired.
+        assert_eq!(cell.retired_len(), 0);
+    }
+
+    #[test]
+    fn retired_snapshot_survives_until_reader_drains() {
+        let cell = Arc::new(EpochCell::new(String::from("v0")));
+        let (entered_tx, entered_rx) = mpsc::channel();
+        let (release_tx, release_rx) = mpsc::channel::<()>();
+        let reader = {
+            let cell = Arc::clone(&cell);
+            std::thread::spawn(move || {
+                cell.read(|s| {
+                    entered_tx.send(s.clone()).unwrap();
+                    release_rx.recv().unwrap();
+                    s.clone()
+                })
+            })
+        };
+        // Reader is pinned inside the closure on the old snapshot.
+        assert_eq!(entered_rx.recv().unwrap(), "v0");
+        cell.publish(|s| *s = String::from("v1"));
+        cell.publish(|s| *s = String::from("v2"));
+        // Both displaced snapshots must wait for the pinned reader.
+        assert_eq!(cell.retired_len(), 2);
+        assert_eq!(cell.snapshot(), "v2");
+        release_tx.send(()).unwrap();
+        assert_eq!(reader.join().unwrap(), "v0", "pinned read stays on its epoch");
+        // The next publication reclaims the drained epochs.
+        cell.publish(|s| *s = String::from("v3"));
+        assert_eq!(cell.retired_len(), 0);
+    }
+
+    #[test]
+    fn slot_exhaustion_falls_back_to_the_slow_path() {
+        let cell = Arc::new(EpochCell::with_slots(7u64, 1));
+        let (entered_tx, entered_rx) = mpsc::channel();
+        let (release_tx, release_rx) = mpsc::channel::<()>();
+        let reader = {
+            let cell = Arc::clone(&cell);
+            std::thread::spawn(move || {
+                cell.read(|&v| {
+                    entered_tx.send(()).unwrap();
+                    release_rx.recv().unwrap();
+                    v
+                })
+            })
+        };
+        entered_rx.recv().unwrap();
+        // The only slot is pinned: this read must still succeed.
+        assert_eq!(cell.read(|&v| v), 7);
+        release_tx.send(()).unwrap();
+        assert_eq!(reader.join().unwrap(), 7);
+    }
+
+    #[test]
+    fn panicking_publication_is_discarded_and_writer_recovers() {
+        let cell = Arc::new(EpochCell::new(vec![1u64, 2]));
+        let poisoner = {
+            let cell = Arc::clone(&cell);
+            std::thread::spawn(move || {
+                cell.publish(|v| {
+                    v.push(99);
+                    panic!("shard worker dies mid-publication");
+                });
+            })
+        };
+        assert!(poisoner.join().is_err());
+        // The half-built clone is discarded, the writer mutex recovers.
+        assert_eq!(cell.snapshot(), vec![1, 2]);
+        cell.publish(|v| v.push(3));
+        assert_eq!(cell.snapshot(), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn concurrent_readers_and_writers_never_tear() {
+        // Every published snapshot is (n, n): readers must never
+        // observe a torn pair, and the final value must be the last
+        // publication.
+        const WRITES: u64 = 200;
+        let cell = Arc::new(EpochCell::with_slots((0u64, 0u64), 8));
+        std::thread::scope(|scope| {
+            for _ in 0..2 {
+                let cell = &cell;
+                scope.spawn(move || {
+                    for _ in 0..WRITES {
+                        cell.publish(|(a, b)| {
+                            *a += 1;
+                            *b += 1;
+                        });
+                    }
+                });
+            }
+            for _ in 0..6 {
+                let cell = &cell;
+                scope.spawn(move || {
+                    for _ in 0..2000 {
+                        let (a, b) = cell.read(|&pair| pair);
+                        assert_eq!(a, b, "snapshot must never tear");
+                    }
+                });
+            }
+        });
+        assert_eq!(cell.snapshot(), (2 * WRITES, 2 * WRITES));
+        // All readers drained: the retirement list must be bounded by
+        // what the final publication could not yet reclaim.
+        cell.publish(|_| {});
+        assert_eq!(cell.retired_len(), 0);
+    }
+}

@@ -53,6 +53,7 @@
 //! re-raised as one deterministic dispatcher-side error at shutdown —
 //! a surfaced failure instead of a silent join-barrier deadlock.
 
+use super::epoch::EpochCell;
 use super::lock_recover;
 use super::queue::{owner_hash, QueueStats, WorkStealingQueue};
 use super::store::{PlanKey, PlanLookup, SharedPlanStore};
@@ -128,7 +129,45 @@ impl PublishedLatency {
 /// (graph key, device class) → published latency of the served
 /// program. Shared between the dispatcher, compile workers and serving
 /// threads; publication of an entry *is* the wall-clock ready signal.
-pub(crate) type LatencyMap = Arc<Mutex<HashMap<(u64, &'static str), PublishedLatency>>>;
+/// Backed by an [`EpochCell`]: serve threads poll the table every
+/// iteration, so reads are lock-free epoch-validated snapshots, while
+/// compile workers publish copy-on-write (the table holds one small
+/// `Copy` entry per (graph, class), so a clone per publication is
+/// cheap and publications are rare — one per compile).
+#[derive(Debug)]
+pub(crate) struct LatencyTable {
+    cell: EpochCell<HashMap<(u64, &'static str), PublishedLatency>>,
+}
+
+impl LatencyTable {
+    /// A fresh shared table (one per shard dispatcher).
+    pub(crate) fn shared() -> LatencyMap {
+        Arc::new(LatencyTable { cell: EpochCell::new(HashMap::new()) })
+    }
+
+    /// Lock-free epoch read — the serve-thread per-iteration poll.
+    pub(crate) fn get(&self, k: &(u64, &'static str)) -> Option<PublishedLatency> {
+        self.cell.read(|m| m.get(k).copied())
+    }
+
+    /// Publish one entry (copy-on-write epoch swap).
+    pub(crate) fn insert(&self, k: (u64, &'static str), v: PublishedLatency) {
+        self.cell.publish(|m| {
+            m.insert(k, v);
+        });
+    }
+
+    /// Read-modify-write publication under the epoch writer lock (the
+    /// re-exploration improvement path).
+    pub(crate) fn update<R>(
+        &self,
+        f: impl FnOnce(&mut HashMap<(u64, &'static str), PublishedLatency>) -> R,
+    ) -> R {
+        self.cell.publish(f)
+    }
+}
+
+pub(crate) type LatencyMap = Arc<LatencyTable>;
 
 /// Outcome counters shared across the dispatcher and the compile pool
 /// (the virtual path bumps the same atomics inline, so reports read one
@@ -232,13 +271,13 @@ pub(crate) fn guard_and_publish(
         Some(prog) => {
             let ms = iter_ms(spec, &prog, w.loop_kind);
             store.insert(key, spec.name, prog, ready_ms);
-            lock_recover(latency).insert((key.exact.0, spec.name), PublishedLatency::first(ms));
+            latency.insert((key.exact.0, spec.name), PublishedLatency::first(ms));
             ms
         }
         None => {
             counters.fs_vetoes.fetch_add(1, Ordering::Relaxed);
             store.insert(key, spec.name, Arc::clone(fallback), ready_ms);
-            lock_recover(latency).insert((key.exact.0, spec.name), PublishedLatency::first(fb_ms));
+            latency.insert((key.exact.0, spec.name), PublishedLatency::first(fb_ms));
             fb_ms
         }
     }
@@ -303,15 +342,17 @@ pub(crate) fn publish_reexplored(
         return;
     };
     let new_ms = iter_ms(spec, &prog, w.loop_kind);
-    let old_ms = lock_recover(latency)
+    let old_ms = latency
         .get(&(key.exact.0, spec.name))
         .map(|p| p.latest())
         .unwrap_or(f64::INFINITY);
     if new_ms < old_ms - 1e-12 {
         store.insert(key, spec.name, prog, incumbent_ready);
-        if let Some(entry) = lock_recover(latency).get_mut(&(key.exact.0, spec.name)) {
-            entry.improved = Some((new_ms, effective_ms));
-        }
+        latency.update(|map| {
+            if let Some(entry) = map.get_mut(&(key.exact.0, spec.name)) {
+                entry.improved = Some((new_ms, effective_ms));
+            }
+        });
         counters.reexplore_improved.fetch_add(1, Ordering::Relaxed);
     } else {
         counters.reexplore_rejected.fetch_add(1, Ordering::Relaxed);
@@ -965,11 +1006,14 @@ fn serve_loop(
         for _ in 0..job.iterations {
             if !settled {
                 if let Some((key, class)) = job.fs {
-                    let published = lock_recover(&s.latency).get(&(key.exact.0, class)).copied();
+                    // Lock-free epoch reads: the per-iteration poll and
+                    // the hot-swap lookup never touch a mutex — the
+                    // `plan_store_read` profile row proves it per run.
+                    let published = s.latency.get(&(key.exact.0, class));
                     if let Some(pl) = published {
                         let current = pl.latest();
                         if fs_ms != Some(current) {
-                            if let PlanLookup::Hit { prog, .. } = s.store.lookup(key, class) {
+                            if let PlanLookup::Hit { prog, .. } = s.store.lookup_serve(key, class) {
                                 // A vetoed compile publishes the pinned
                                 // fallback — the session keeps serving
                                 // it and must not report itself
@@ -1053,7 +1097,7 @@ mod tests {
         let fb_ms = iter_ms(&spec, &fallback, w.loop_kind);
 
         let store = Arc::new(SharedPlanStore::new());
-        let latency: LatencyMap = Arc::new(Mutex::new(HashMap::new()));
+        let latency: LatencyMap = LatencyTable::shared();
         let counters = Arc::new(FleetCounters::default());
         let pool = WallClockPool::start(
             2,
@@ -1081,7 +1125,7 @@ mod tests {
         // the bucket-level waits must release.
         pool.await_plan(key);
         pool.await_key(key.exact.0);
-        let pl = lock_recover(&latency).get(&(key.exact.0, spec.name)).copied();
+        let pl = latency.get(&(key.exact.0, spec.name));
         let ms = pl.expect("latency published").latest();
         match store.lookup(key, spec.name) {
             PlanLookup::Hit { ready_ms, .. } => assert_eq!(ready_ms, 42.0),
@@ -1138,7 +1182,7 @@ mod tests {
         let fb_ms = iter_ms(&spec, &fallback, w.loop_kind);
 
         let store = Arc::new(SharedPlanStore::new());
-        let latency: LatencyMap = Arc::new(Mutex::new(HashMap::new()));
+        let latency: LatencyMap = LatencyTable::shared();
         let counters = Arc::new(FleetCounters::default());
         let pool = WallClockPool::start(
             2,
@@ -1178,5 +1222,89 @@ mod tests {
         let totals = pool.shutdown();
         assert_eq!(totals.errors.len(), 1, "the panic must be recorded: {:?}", totals.errors);
         assert!(totals.errors[0].contains("panicked"), "{:?}", totals.errors);
+    }
+
+    #[test]
+    fn killed_shard_worker_drains_other_shards() {
+        // Cluster-scale failure containment: every shard dispatcher
+        // owns its own pool (workers, publication barrier, epoch
+        // store), so killing one shard's compile worker mid-trace — a
+        // deterministic panic via an out-of-range shard-join index —
+        // must leave the other shard's pipeline untouched: it still
+        // explores, publishes, hot-swaps and drains to completion, and
+        // only the dead shard reports the panic. All the per-shard
+        // structures recover through `lock_recover`, so the poisoned
+        // shard itself also quiesces instead of wedging its barrier.
+        let w = ln_workload();
+        let key = PlanKey::of(&w.graph);
+        let spec = DeviceSpec::v100();
+        let explore = ExploreOptions::default();
+        let fallback = Arc::new(optimize(&w, &spec, Tech::Xla, &explore));
+        let fb_ms = iter_ms(&spec, &fallback, w.loop_kind);
+
+        let shards: Vec<WallClockPool> = (0..2)
+            .map(|_| {
+                WallClockPool::start(
+                    1,
+                    1,
+                    Arc::new(SharedPlanStore::new()),
+                    LatencyTable::shared(),
+                    Arc::new(FleetCounters::default()),
+                    explore.clone(),
+                    true,
+                    false,
+                    None,
+                )
+            })
+            .collect();
+
+        // Shard 0's only worker dies on this job.
+        let join = Arc::new(ShardJoin::new(vec![]));
+        shards[0].enqueue_compile(WallJob {
+            w: Arc::new(w.clone()),
+            key,
+            spec: spec.clone(),
+            fallback: Arc::clone(&fallback),
+            fb_ms,
+            ready_ms: 1.0,
+            kind: WallJobKind::ExploreShard { join, index: 0 },
+        });
+        // Shard 1 keeps taking healthy traffic end to end.
+        shards[1].enqueue_compile(WallJob {
+            w: Arc::new(w.clone()),
+            key,
+            spec: spec.clone(),
+            fallback: Arc::clone(&fallback),
+            fb_ms,
+            ready_ms: 3.0,
+            kind: WallJobKind::Explore,
+        });
+        shards[1].await_plan(key);
+        let metrics = Arc::new(ServiceMetrics::new());
+        let session = Session::serving_fallback(
+            Arc::clone(&fallback),
+            Arc::clone(&metrics),
+            w.loop_kind,
+        );
+        shards[1].send_serve(ServeJob {
+            session,
+            device: 0,
+            iterations: 4,
+            fb_ms,
+            fs: Some((key, spec.name)),
+            task: 0,
+        });
+
+        let mut totals = Vec::new();
+        for shard in shards {
+            totals.push(shard.shutdown());
+        }
+        assert_eq!(totals[0].errors.len(), 1, "dead shard surfaces its panic");
+        assert!(totals[0].errors[0].contains("panicked"), "{:?}", totals[0].errors);
+        assert!(totals[1].errors.is_empty(), "healthy shard untouched: {:?}", totals[1].errors);
+        assert_eq!(metrics.iterations(), 4, "healthy shard drained its serve queue");
+        assert_eq!(totals[1].regressions, 0);
+        let q = &totals[1].queue;
+        assert!(q.pushes == 1 && q.local_pops + q.steals == 1);
     }
 }

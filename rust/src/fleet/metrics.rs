@@ -1,7 +1,7 @@
 //! Fleet-wide report: the §7.2 production numbers, but measured through
 //! the coordinator path instead of asserted.
 
-use crate::obs::ObsReport;
+use crate::obs::{LockSnapshot, ObsReport};
 use crate::util::{fmt_f, JsonValue, Summary, Table};
 
 /// Per-device utilization line.
@@ -327,6 +327,176 @@ impl FleetReport {
     }
 }
 
+/// One shard dispatcher's contribution to a cluster run: its full
+/// [`FleetReport`] plus the cluster-level evidence the rollup compares
+/// across executors — the arrival-ordered decision digest and the
+/// shard's lock-contention rows.
+#[derive(Debug, Clone)]
+pub struct ShardRollup {
+    pub shard: usize,
+    pub report: FleetReport,
+    /// FNV-1a fold of this shard's decision stream (see
+    /// [`super::service::FleetService::decision_digest`]).
+    pub decision_digest: u64,
+    /// This shard's lock rows (plan store dispatcher/read, compile
+    /// queue, publication barrier, service metrics).
+    pub locks: Vec<LockSnapshot>,
+}
+
+/// What a [`super::cluster::ShardedFleetService`] run produces: one
+/// rollup per shard plus the cluster-level throughput measurement.
+/// Decision fields aggregate exactly (shards are disjoint); latency
+/// percentiles do not and deliberately stay per-shard.
+#[derive(Debug, Clone)]
+pub struct ClusterReport {
+    /// Which executor produced the run: "virtual" or "wallclock".
+    pub executor: &'static str,
+    pub shards: Vec<ShardRollup>,
+    /// Real elapsed time of the whole cluster run (all shards,
+    /// including their pool spin-up/teardown under wall clock).
+    pub elapsed_ms: f64,
+}
+
+impl ClusterReport {
+    /// Total tasks routed across every shard.
+    pub fn tasks(&self) -> usize {
+        self.shards.iter().map(|s| s.report.tasks).sum()
+    }
+
+    /// The headline throughput: routed tasks over real elapsed time.
+    pub fn tasks_per_sec(&self) -> f64 {
+        if self.elapsed_ms <= 0.0 {
+            0.0
+        } else {
+            self.tasks() as f64 / (self.elapsed_ms / 1e3)
+        }
+    }
+
+    /// Cluster makespan: the slowest shard's virtual makespan (shards
+    /// run concurrently).
+    pub fn makespan_ms(&self) -> f64 {
+        self.shards.iter().fold(0.0, |m, s| m.max(s.report.makespan_ms))
+    }
+
+    /// Never-negative regressions across every shard.
+    pub fn regressions(&self) -> usize {
+        self.shards.iter().map(|s| s.report.regressions).sum()
+    }
+
+    /// One lock row per name, merged across shards (e.g. the cluster's
+    /// total `plan_store_read` traffic). Row order follows the first
+    /// shard's rows.
+    pub fn merged_locks(&self) -> Vec<LockSnapshot> {
+        let mut out: Vec<LockSnapshot> = Vec::new();
+        for shard in &self.shards {
+            for row in &shard.locks {
+                match out.iter_mut().find(|r| r.name == row.name) {
+                    Some(r) => r.merge(row),
+                    None => out.push(*row),
+                }
+            }
+        }
+        out
+    }
+
+    /// Fetch one merged lock row by name.
+    pub fn lock(&self, name: &str) -> Option<LockSnapshot> {
+        self.merged_locks().into_iter().find(|r| r.name == name)
+    }
+
+    /// The per-shard decision digests in shard order — the equivalence
+    /// evidence two executors' runs are compared on.
+    pub fn decision_digests(&self) -> Vec<u64> {
+        self.shards.iter().map(|s| s.decision_digest).collect()
+    }
+
+    /// JSON snapshot: cluster totals, throughput, merged lock rows and
+    /// a compact per-shard table (digests as hex strings — JSON numbers
+    /// lose u64 precision past 2^53).
+    pub fn to_json(&self) -> JsonValue {
+        let mut o = JsonValue::obj();
+        let admitted: usize = self.shards.iter().map(|s| s.report.admitted).sum();
+        let fallback_only: usize = self.shards.iter().map(|s| s.report.fallback_only).sum();
+        let rejected: usize = self.shards.iter().map(|s| s.report.rejected).sum();
+        let explore_jobs: usize = self.shards.iter().map(|s| s.report.explore_jobs).sum();
+        o.set("executor", self.executor)
+            .set("shards", self.shards.len())
+            .set("tasks", self.tasks())
+            .set("admitted", admitted)
+            .set("fallback_only", fallback_only)
+            .set("rejected", rejected)
+            .set("explore_jobs", explore_jobs)
+            .set("regressions", self.regressions())
+            .set("makespan_ms", self.makespan_ms())
+            .set("elapsed_ms", self.elapsed_ms)
+            .set("tasks_per_sec", self.tasks_per_sec());
+        let mut locks = JsonValue::obj();
+        for row in self.merged_locks() {
+            locks.set(row.name, row.to_json());
+        }
+        o.set("locks", locks);
+        let per_shard: Vec<JsonValue> = self
+            .shards
+            .iter()
+            .map(|s| {
+                let mut sj = JsonValue::obj();
+                sj.set("shard", s.shard)
+                    .set("devices", s.report.per_device.len())
+                    .set("tasks", s.report.tasks)
+                    .set("admitted", s.report.admitted)
+                    .set("fallback_only", s.report.fallback_only)
+                    .set("rejected", s.report.rejected)
+                    .set("exact_hits", s.report.exact_hits)
+                    .set("port_hits", s.report.port_hits)
+                    .set("bucket_hits", s.report.bucket_hits)
+                    .set("misses", s.report.misses)
+                    .set("explore_jobs", s.report.explore_jobs)
+                    .set("regressions", s.report.regressions)
+                    .set("makespan_ms", s.report.makespan_ms)
+                    .set("decision_digest", format!("{:#018x}", s.decision_digest));
+                let mut lj = JsonValue::obj();
+                for row in &s.locks {
+                    lj.set(row.name, row.to_json());
+                }
+                sj.set("locks", lj);
+                sj
+            })
+            .collect();
+        o.set("per_shard", JsonValue::Arr(per_shard));
+        o
+    }
+
+    /// Human-readable cluster summary (one row per shard).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        let mut t = Table::new(vec!["metric", "value"]);
+        t.row(vec!["executor".to_string(), self.executor.to_string()]);
+        t.row(vec!["shards".to_string(), self.shards.len().to_string()]);
+        t.row(vec!["tasks".to_string(), self.tasks().to_string()]);
+        t.row(vec!["makespan".to_string(), format!("{} ms", fmt_f(self.makespan_ms(), 1))]);
+        t.row(vec!["elapsed".to_string(), format!("{} ms", fmt_f(self.elapsed_ms, 1))]);
+        t.row(vec![
+            "throughput".to_string(),
+            format!("{} tasks/s", fmt_f(self.tasks_per_sec(), 1)),
+        ]);
+        t.row(vec!["regressions".to_string(), self.regressions().to_string()]);
+        out.push_str(&t.render());
+        out.push('\n');
+        let mut s = Table::new(vec!["shard", "devices", "tasks", "admitted", "digest"]);
+        for shard in &self.shards {
+            s.row(vec![
+                shard.shard.to_string(),
+                shard.report.per_device.len().to_string(),
+                shard.report.tasks.to_string(),
+                shard.report.admitted.to_string(),
+                format!("{:#018x}", shard.decision_digest),
+            ]);
+        }
+        out.push_str(&s.render());
+        out
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -455,6 +625,54 @@ mod tests {
         let text = traced.render();
         assert!(text.contains("stage attribution"));
         assert!(text.contains("lock contention"));
+    }
+
+    #[test]
+    fn cluster_rollup_aggregates_shards_and_merges_locks() {
+        let shard = |i: usize, digest: u64| ShardRollup {
+            shard: i,
+            report: report(),
+            decision_digest: digest,
+            locks: vec![
+                LockSnapshot { name: "plan_store", acquisitions: 5, contended: 0, blocked_ms: 0.0 },
+                LockSnapshot {
+                    name: "plan_store_read",
+                    acquisitions: 40,
+                    contended: 0,
+                    blocked_ms: 0.0,
+                },
+            ],
+        };
+        let cluster = ClusterReport {
+            executor: "wallclock",
+            shards: vec![shard(0, 0x1111), shard(1, 0x2222)],
+            elapsed_ms: 500.0,
+        };
+        assert_eq!(cluster.tasks(), 20);
+        assert_eq!(cluster.regressions(), 0);
+        assert!((cluster.makespan_ms() - 123.0).abs() < 1e-12);
+        assert!((cluster.tasks_per_sec() - 40.0).abs() < 1e-9, "20 tasks / 0.5 s");
+        assert_eq!(cluster.decision_digests(), vec![0x1111, 0x2222]);
+        let read = cluster.lock("plan_store_read").expect("merged read row");
+        assert_eq!(read.acquisitions, 80);
+        assert_eq!(read.contended, 0);
+        let j = cluster.to_json();
+        assert_eq!(j.get("shards").and_then(|v| v.as_usize()), Some(2));
+        assert_eq!(j.get("tasks").and_then(|v| v.as_usize()), Some(20));
+        assert!(j.get("tasks_per_sec").and_then(|v| v.as_f64()).unwrap() > 0.0);
+        let locks = j.get("locks").expect("merged locks object");
+        let row = locks.get("plan_store_read").expect("read row");
+        assert_eq!(row.get("acquisitions").and_then(|v| v.as_usize()), Some(80));
+        let per_shard = match j.get("per_shard") {
+            Some(JsonValue::Arr(v)) => v,
+            other => panic!("per_shard must be an array: {other:?}"),
+        };
+        assert_eq!(per_shard.len(), 2);
+        let digest = per_shard[0].get("decision_digest").and_then(|v| v.as_str());
+        assert_eq!(digest, Some("0x0000000000001111"));
+        let text = cluster.render();
+        assert!(text.contains("throughput"));
+        assert!(text.contains("0x0000000000002222"));
     }
 
     #[test]

@@ -37,6 +37,16 @@
 //! * [`metrics`] — the fleet-wide report: GPU hours saved, regression
 //!   counts (must be zero), cache/portability hit rates, queue-latency
 //!   percentiles, cost-model drift before/after calibration.
+//! * [`epoch`] — the RCU-style [`EpochCell`] publication primitive:
+//!   serve threads read published plans through a lock-free epoch
+//!   snapshot (one atomic pointer load per read), writers publish by
+//!   cloning, swapping and retiring the old snapshot after readers
+//!   drain. Backs the plan store's and latency table's hot read paths.
+//! * [`cluster`] — [`ShardedFleetService`]: the cluster-scale control
+//!   plane. Tasks route to one of `shards` complete dispatchers by
+//!   their graph's structure key ([`queue::shard_of`]); per-shard
+//!   admission is batched per tick; the decision-equivalence invariant
+//!   holds *per shard* ([`ClusterReport::decision_digests`]).
 //!
 //! With [`FleetOptions::calibrate`] the fleet also closes the
 //! predicted-vs-measured loop ([`crate::codegen::calibrate`]): served
@@ -49,6 +59,8 @@
 //! both executors stay decision-identical.
 
 pub mod admission;
+pub mod cluster;
+pub mod epoch;
 pub mod executor;
 pub mod metrics;
 pub mod queue;
@@ -57,10 +69,12 @@ pub mod service;
 pub mod sim;
 pub mod store;
 
-pub use admission::{AdmissionConfig, AdmissionController, AdmitDecision};
+pub use admission::{AdmissionConfig, AdmissionController, AdmissionTick, AdmitDecision};
+pub use cluster::ShardedFleetService;
+pub use epoch::EpochCell;
 pub use executor::ExecutorKind;
-pub use metrics::{DeviceUtilization, FleetReport};
-pub use queue::{owner_hash, QueueStats, WorkStealingQueue};
+pub use metrics::{ClusterReport, DeviceUtilization, FleetReport, ShardRollup};
+pub use queue::{owner_hash, shard_of, QueueStats, WorkStealingQueue};
 pub use registry::{DeviceId, DeviceRegistry, RegisteredDevice};
 pub use service::{FleetOptions, FleetService};
 pub use sim::{

@@ -157,6 +157,19 @@ pub fn owner_hash(key: u64, class: &str) -> u64 {
     fnv1a_bytes(fnv1a_bytes(FNV_OFFSET, &key.to_le_bytes()), class.as_bytes())
 }
 
+/// Structure-key → shard routing for the sharded dispatcher fleet: all
+/// shapes and buckets of one graph structure land on one shard, so a
+/// shard's plan store is a clean partition of the cluster's (no
+/// cross-shard publication coupling). Built on the same process-stable
+/// FNV-1a as compile-job owner routing — never a `RandomState`-seeded
+/// hasher, so shard assignment is identical across processes, replays
+/// and executors — with a distinct class tag so shard routing stays
+/// decorrelated from worker routing within a shard.
+pub fn shard_of(structure: u64, shards: usize) -> usize {
+    assert!(shards > 0, "shard routing needs at least one shard");
+    (owner_hash(structure, "shard") % shards as u64) as usize
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -250,6 +263,33 @@ mod tests {
         let owners: std::collections::HashSet<u64> =
             keys.iter().map(|&k| owner_hash(k, "V100") % 4).collect();
         assert_eq!(owners.len(), 4, "keys must reach every worker");
+    }
+
+    #[test]
+    fn shard_routing_is_process_stable_fnv() {
+        // Shard assignment must survive process restarts and cross-host
+        // replays, so `shard_of` may never route through a
+        // `RandomState`-seeded hasher. Pin it to an independent inline
+        // FNV-1a reimplementation: any switch to a seeded hasher (or a
+        // constant change) fails loudly here instead of silently
+        // re-sharding the fleet.
+        fn fnv(mut h: u64, bytes: &[u8]) -> u64 {
+            for &b in bytes {
+                h ^= u64::from(b);
+                h = h.wrapping_mul(0x0000_0100_0000_01B3);
+            }
+            h
+        }
+        for key in [0u64, 1, 0xF1EE7, 0x9E37_79B9_7F4A_7C15, u64::MAX] {
+            let expect = fnv(fnv(0xcbf2_9ce4_8422_2325, &key.to_le_bytes()), b"shard");
+            assert_eq!(owner_hash(key, "shard"), expect);
+            for shards in [1usize, 2, 4, 8] {
+                assert_eq!(shard_of(key, shards), (expect % shards as u64) as usize);
+            }
+        }
+        // Every structure of one shard at S shards must stay together:
+        // routing is a pure function of (structure, shards).
+        assert_eq!(shard_of(42, 4), shard_of(42, 4));
     }
 
     #[test]

@@ -97,6 +97,27 @@ impl DeviceRegistry {
         }
         out
     }
+
+    /// Split the population into `shards` disjoint sub-registries,
+    /// dealing device instances round-robin in registration order so
+    /// every shard gets a representative class mix (the usual
+    /// registration order groups classes in runs, and round-robin cuts
+    /// across the runs). Ids are re-assigned per shard — a shard's
+    /// dispatcher is a self-contained fleet.
+    pub fn partition(&self, shards: usize) -> Vec<DeviceRegistry> {
+        assert!(shards > 0, "partition needs at least one shard");
+        assert!(
+            self.devices.len() >= shards,
+            "cannot spread {} devices over {} shards",
+            self.devices.len(),
+            shards
+        );
+        let mut out = vec![Self::new(); shards];
+        for (i, d) in self.devices.iter().enumerate() {
+            out[i % shards].register(d.spec.clone(), d.capacity);
+        }
+        out
+    }
 }
 
 #[cfg(test)]
@@ -127,5 +148,26 @@ mod tests {
     #[should_panic(expected = "capacity")]
     fn zero_capacity_rejected() {
         DeviceRegistry::new().register(DeviceSpec::v100(), 0);
+    }
+
+    #[test]
+    fn partition_deals_classes_round_robin() {
+        let reg = DeviceRegistry::mixed(4, 4, 2);
+        let shards = reg.partition(4);
+        assert_eq!(shards.len(), 4);
+        for shard in &shards {
+            assert_eq!(shard.len(), 2);
+            assert_eq!(shard.total_capacity(), 4);
+            // Round-robin over [V100 x4, T4 x4] gives every shard one
+            // of each class.
+            assert_eq!(shard.classes(), vec!["V100", "T4"]);
+            assert_eq!(shard.device(DeviceId(0)).id, DeviceId(0));
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot spread")]
+    fn partition_rejects_more_shards_than_devices() {
+        DeviceRegistry::mixed(1, 1, 1).partition(3);
     }
 }

@@ -43,13 +43,12 @@
 //!    optimized after — never-negative guarded, so a task can never
 //!    regress past its fallback.
 
-use super::admission::{AdmissionConfig, AdmissionController, AdmitDecision};
+use super::admission::{AdmissionConfig, AdmissionController, AdmissionTick, AdmitDecision};
 use super::executor::{
     guard_and_publish, iter_ms, produce_candidate, produce_reexplored, produce_sharded_candidate,
-    publish_reexplored, shard_partial, ExecutorKind, FleetCounters, LatencyMap, PublishedLatency,
-    ServeJob, ShardJoin, WallClockPool, WallJob, WallJobKind,
+    publish_reexplored, shard_partial, ExecutorKind, FleetCounters, LatencyMap, LatencyTable,
+    PublishedLatency, ServeJob, ShardJoin, WallClockPool, WallJob, WallJobKind,
 };
-use super::lock_recover;
 use super::metrics::{DeviceUtilization, FleetReport};
 use super::queue::{owner_hash, QueueStats, WorkStealingQueue};
 use super::registry::DeviceRegistry;
@@ -64,11 +63,12 @@ use crate::obs::{
     VIRTUAL_PID, WALL_PID,
 };
 use crate::pipeline::{self, OptimizedProgram, Tech};
+use crate::util::hash::{fnv1a_u64, FNV_OFFSET};
 use crate::util::summarize;
 use crate::workloads::Workload;
 use std::collections::{HashMap, HashSet};
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::time::Instant;
 
 /// Fleet configuration.
@@ -81,6 +81,16 @@ pub struct FleetOptions {
     /// so decisions stay executor-independent.
     pub compile_workers: usize,
     pub admission: AdmissionConfig,
+    /// Batch admission backpressure per dispatcher tick: the pending
+    /// compile count is sampled once per this many ms of virtual time
+    /// and reused for every decision inside the window ([`AdmissionTick`]).
+    /// `0.0` samples on every task — the unbatched behavior.
+    pub admission_tick_ms: f64,
+    /// Control-plane fan-out for [`super::cluster::ShardedFleetService`]:
+    /// tasks route to one of `shards` independent dispatchers by their
+    /// graph's structure key. A plain [`FleetService`] ignores the
+    /// field — it *is* the one-shard case.
+    pub shards: usize,
     pub explore: ExploreOptions,
     /// §7.2 production guard: never swap in a plan estimated slower
     /// than the fallback on its device.
@@ -127,6 +137,8 @@ impl Default for FleetOptions {
             registry: DeviceRegistry::mixed(2, 2, 2),
             compile_workers: 2,
             admission: AdmissionConfig::default(),
+            admission_tick_ms: 0.0,
+            shards: 1,
             explore: ExploreOptions::default(),
             never_negative: true,
             explore_cost_base_ms: 10.0,
@@ -283,6 +295,13 @@ pub struct FleetService {
     instances: HashMap<(usize, TaskShape), Instance>,
     store: Arc<SharedPlanStore>,
     admission: AdmissionController,
+    /// Per-tick pending-compile sampling for batched admission.
+    admission_tick: AdmissionTick,
+    /// FNV-1a fold of the arrival-ordered decision stream (task id,
+    /// admission verdict, placement, reuse tier, wait bits). Everything
+    /// folded is virtual bookkeeping, so the digest is
+    /// executor-invariant — the cluster layer pins it per shard.
+    decision_digest: u64,
     queue: WorkStealingQueue<CompileJob>,
     /// Virtual time each compile worker frees up.
     worker_free_ms: Vec<f64>,
@@ -374,6 +393,8 @@ impl FleetService {
         let obs = build_fleet_obs(&opts, n_dev);
         FleetService {
             admission: AdmissionController::new(opts.admission.clone()),
+            admission_tick: AdmissionTick::new(opts.admission_tick_ms),
+            decision_digest: FNV_OFFSET,
             queue: WorkStealingQueue::new(opts.compile_workers),
             worker_free_ms: vec![0.0; opts.compile_workers],
             compile_finishes: Vec::new(),
@@ -382,7 +403,7 @@ impl FleetService {
             device_busy_ms: vec![0.0; n_dev],
             device_metrics: (0..n_dev).map(|_| Arc::new(ServiceMetrics::new())).collect(),
             fallbacks: HashMap::new(),
-            latency: Arc::new(Mutex::new(HashMap::new())),
+            latency: LatencyTable::shared(),
             counters: Arc::new(FleetCounters::default()),
             calibrator: Calibrator::new(opts.min_calibration_samples, 4096),
             sampled: HashSet::new(),
@@ -459,6 +480,33 @@ impl FleetService {
     /// Shared plan store (inspection).
     pub fn store(&self) -> &SharedPlanStore {
         &self.store
+    }
+
+    /// FNV-1a digest of the arrival-ordered decision stream: admission
+    /// verdicts, placements, reuse tiers and queue waits, all virtual
+    /// bookkeeping. Two runs of the same (sub)trace agree iff their
+    /// dispatchers made byte-identical decisions — the cluster layer
+    /// compares this per shard across executors.
+    pub fn decision_digest(&self) -> u64 {
+        self.decision_digest
+    }
+
+    /// The run's lock-contention rows — plan-store dispatcher and
+    /// serve-read paths, compile queue, publication barrier, service
+    /// metrics. The same rows the observability report carries, but
+    /// available without tracing so per-shard rollups can fold them.
+    pub fn lock_rows(&self) -> Vec<LockSnapshot> {
+        let mut sm = LockSnapshot::zero("service_metrics");
+        for m in &self.device_metrics {
+            sm.merge(&m.lock_profile());
+        }
+        vec![
+            self.store.lock_profile(),
+            self.store.read_profile(),
+            self.wall_queue_lock.unwrap_or_else(|| self.queue.lock_profile()),
+            self.wall_barrier.unwrap_or_else(|| LockSnapshot::zero("publication_barrier")),
+            sm,
+        ]
     }
 
     /// The drained flight recorder (None when tracing was off).
@@ -1036,11 +1084,37 @@ impl FleetService {
         // 3. Resolve plan availability + admission. Arrivals are
         // monotone, so finished compiles can be dropped as we go
         // (keeps the pending count O(pending), not O(all jobs ever)).
+        // Under a nonzero admission tick the retain-and-count runs once
+        // per tick window and the sample is reused for every decision
+        // inside it — ticks are cut on virtual arrival time, so both
+        // executors batch identically.
         let lookup = self.store.lookup(key, spec.name);
-        self.compile_finishes.retain(|&f| f > now);
-        let pending = self.compile_finishes.len();
+        let tick = &mut self.admission_tick;
+        let finishes = &mut self.compile_finishes;
+        let pending = tick.pending(now, || {
+            finishes.retain(|&f| f > now);
+            finishes.len()
+        });
         let needs_compile = !matches!(&lookup, PlanLookup::Hit { .. });
         let decision = self.admission.decide(wait, pending, needs_compile);
+        // Fold the decision tuple into the per-dispatcher digest —
+        // everything here derives from virtual bookkeeping, never from
+        // wall-clock measurement.
+        let tier = match &lookup {
+            PlanLookup::Hit { .. } => 1u64,
+            PlanLookup::Portable { .. } => 2,
+            PlanLookup::BucketHit { .. } => 3,
+            PlanLookup::Miss => 4,
+        };
+        let verdict_code = match decision {
+            AdmitDecision::Admit => 1u64,
+            AdmitDecision::AdmitFallbackOnly => 2,
+            AdmitDecision::Reject => 3,
+        };
+        for v in [task.id as u64, verdict_code, tier, best_d as u64, best_s as u64] {
+            self.decision_digest = fnv1a_u64(self.decision_digest, v);
+        }
+        self.decision_digest = fnv1a_u64(self.decision_digest, wait.to_bits());
         if let Some(obs) = self.obs.as_ref() {
             let verdict = match decision {
                 AdmitDecision::Admit => "admit",
@@ -1067,7 +1141,7 @@ impl FleetService {
                 // Every store insert goes through `guard_and_publish`,
                 // which pairs it with a latency entry — a miss here is
                 // a broken publication invariant, not a cache miss.
-                let known = lock_recover(&self.latency).get(&(key.exact.0, spec.name)).copied();
+                let known = self.latency.get(&(key.exact.0, spec.name));
                 let pl = known.expect("store hit must have a published latency");
                 if self.opts.calibrate {
                     // Past the per-graph publication barrier, in
@@ -1173,7 +1247,7 @@ impl FleetService {
                         // needs the published latency now (rare — most
                         // tasks drain on the fallback first).
                         self.barrier_wait(task.id, |pool| pool.await_key(*key));
-                        let got = lock_recover(&self.latency).get(&(*key, *class)).copied();
+                        let got = self.latency.get(&(*key, *class));
                         let pl = got.unwrap_or_else(|| {
                             // A quiesced compile with no published
                             // latency means its worker panicked —
@@ -1249,18 +1323,8 @@ impl FleetService {
             })
             .collect();
         let observability = self.obs.as_ref().map(|obs| {
-            let mut sm = LockSnapshot::zero("service_metrics");
-            for m in &self.device_metrics {
-                sm.merge(&m.lock_profile());
-            }
-            let locks = vec![
-                self.store.lock_profile(),
-                self.wall_queue_lock.unwrap_or_else(|| self.queue.lock_profile()),
-                self.wall_barrier.unwrap_or_else(|| LockSnapshot::zero("publication_barrier")),
-                sm,
-            ];
             let dump = obs.recorder.drain();
-            obs.stages.report(locks, dump.recorded, dump.dropped)
+            obs.stages.report(self.lock_rows(), dump.recorded, dump.dropped)
         });
         FleetReport {
             executor: self.opts.executor.name(),
@@ -1452,20 +1516,23 @@ mod tests {
             observe: true,
             ..Default::default()
         };
-        let virt = {
+        let (virt, virt_digest) = {
             let mut svc = FleetService::new(base.clone(), templates.clone());
-            svc.run_trace(&trace)
+            let r = svc.run_trace(&trace);
+            (r, svc.decision_digest())
         };
         // Three real compile threads against a two-worker virtual
         // admission model: decisions must converge for any thread count.
-        let wall = {
+        let (wall, wall_digest) = {
             let opts = FleetOptions {
                 executor: ExecutorKind::WallClock { threads: 3 },
                 ..base
             };
             let mut svc = FleetService::new(opts, templates.clone());
-            svc.run_trace(&trace)
+            let r = svc.run_trace(&trace);
+            (r, svc.decision_digest())
         };
+        assert_eq!(wall_digest, virt_digest, "decision digests must agree across executors");
         assert_eq!(wall.executor, "wallclock");
         assert_eq!(virt.executor, "virtual");
         // Plan decisions, admission decisions and store traffic are
@@ -1509,6 +1576,11 @@ mod tests {
             let wobs = wall.observability.as_ref().expect("tracing was on");
             assert!(wobs.lock("work_queue").unwrap().acquisitions > 0);
             assert!(wobs.lock("publication_barrier").unwrap().acquisitions > 0);
+            // The serve threads' plan reads go through the epoch
+            // snapshot: profiled, never contended.
+            let read = wobs.lock("plan_store_read").unwrap();
+            assert!(read.acquisitions > 0, "served hits must hot-swap through the read path");
+            assert_eq!(read.contended, 0, "the epoch read path must never block");
             let vobs = virt.observability.as_ref().expect("tracing was on");
             assert_eq!(vobs.lock("publication_barrier").unwrap().acquisitions, 0);
             assert_eq!(vobs.stage("barrier").unwrap().summary.n, 0);

@@ -63,6 +63,31 @@ impl Default for TrafficConfig {
     }
 }
 
+impl TrafficConfig {
+    /// Cluster-scale preset: the shape of the 100k-task production
+    /// trace the sharded bench replays. Template count scales with the
+    /// trace (one per ~500 tasks, floor 24) so the population keeps the
+    /// hot-head/long-tail mix at any size; arrivals come far denser
+    /// than the default (a cluster sees a month of traffic
+    /// concurrently, not serially); graphs and per-task iteration
+    /// counts stay light so a 100k replay is seconds, not hours; and
+    /// dynamic shapes are on — shape-polymorphic traffic is the regime
+    /// the sharded store's bucket tier exists for.
+    pub fn cluster(tasks: usize) -> Self {
+        TrafficConfig {
+            tasks,
+            mean_interarrival_ms: 0.2,
+            templates: (tasks / 500).max(24),
+            min_iterations: 2,
+            max_iterations: 8,
+            min_ops: 20,
+            max_ops: 50,
+            dynamic_shapes: true,
+            ..Default::default()
+        }
+    }
+}
+
 /// The (batch, seq) a task wants served. For the synthetic families the
 /// instantiated graph scales its leading dimension to
 /// `rows() = batch × seq`; the model families thread both through the
@@ -371,6 +396,17 @@ mod tests {
         // Quadratic skew: the first quartile of templates draws ~half
         // the traffic (sqrt(0.25) = 0.5), far above the uniform 25%.
         assert!(hot as f64 > trace.len() as f64 * 0.35, "hot share {hot}");
+    }
+
+    #[test]
+    fn cluster_preset_scales_templates_with_trace_size() {
+        let big = TrafficConfig::cluster(100_000);
+        assert_eq!(big.tasks, 100_000);
+        assert_eq!(big.templates, 200);
+        assert!(big.dynamic_shapes);
+        assert!(big.mean_interarrival_ms < 1.0);
+        // Small replays keep the default population floor.
+        assert_eq!(TrafficConfig::cluster(1000).templates, 24);
     }
 
     #[test]

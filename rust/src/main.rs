@@ -38,7 +38,14 @@
 //!   the flight recorder (per-task lifecycle spans, stage-attributed
 //!   latency, lock-contention profile in the report) and
 //!   `--trace FILE` additionally exports the spans as Chrome
-//!   trace-event JSON for Perfetto / chrome://tracing.
+//!   trace-event JSON for Perfetto / chrome://tracing. `--shards N`
+//!   splits the control plane into N structure-key-sharded dispatchers
+//!   (each owning a slice of the device registry and its own
+//!   epoch-published plan store; tasks route by their graph's
+//!   shape-erased structure key) and prints the per-shard rollup with
+//!   decision digests, and `--admission-tick MS` batches each
+//!   dispatcher's admission pending-compile sampling per tick instead
+//!   of per task (0 = legacy per-task sampling).
 
 use fusion_stitching::coordinator::{JitService, ServiceOptions};
 use fusion_stitching::fleet;
@@ -381,6 +388,23 @@ fn main() {
             // into the report without writing the export.
             let trace_out = get_flag("--trace");
             let observe = has_flag("--observe") || trace_out.is_some();
+            // --shards N: split the control plane into N structure-key-
+            // sharded dispatchers; --admission-tick MS batches each
+            // dispatcher's pending-compile sampling per tick.
+            let shards = num("--shards", 1);
+            if shards == 0 {
+                bad_flag("--shards", "need at least one dispatcher shard");
+            }
+            if shards > v100s + t4s {
+                bad_flag("--shards", "more dispatcher shards than devices");
+            }
+            let admission_tick: f64 = match get_flag("--admission-tick") {
+                None => 0.0,
+                Some(s) => s.parse().unwrap_or_else(|_| bad_flag("--admission-tick", &s)),
+            };
+            if !(admission_tick >= 0.0) {
+                bad_flag("--admission-tick", "must be a non-negative window in ms");
+            }
             let opts = fleet::FleetOptions {
                 registry: fleet::DeviceRegistry::mixed(v100s, t4s, capacity),
                 compile_workers: workers,
@@ -389,6 +413,8 @@ fn main() {
                 calibrate,
                 drift_bound,
                 observe,
+                shards,
+                admission_tick_ms: admission_tick,
                 ..Default::default()
             };
             println!(
@@ -405,6 +431,33 @@ fn main() {
             );
             let families = fleet::build_template_families(&traffic);
             let trace = fleet::generate_trace(&traffic);
+            if shards > 1 {
+                if trace_out.is_some() {
+                    bad_flag("--trace", "flight-recorder export is per-dispatcher; drop --shards");
+                }
+                let mut svc = fleet::ShardedFleetService::with_families(opts, families);
+                let cr = svc.run_trace(&trace);
+                println!("{}", cr.render());
+                println!(
+                    "\ncluster: {} tasks across {} shards in {:.1} ms \
+                     ({:.0} tasks/s); FS regressions: {}",
+                    cr.tasks(),
+                    cr.shards.len(),
+                    cr.elapsed_ms,
+                    cr.tasks_per_sec(),
+                    cr.regressions()
+                );
+                if let Some(out) = get_flag("--out") {
+                    match std::fs::write(&out, cr.to_json().to_pretty()) {
+                        Ok(()) => println!("wrote {out}"),
+                        Err(e) => {
+                            eprintln!("write {out}: {e}");
+                            std::process::exit(1);
+                        }
+                    }
+                }
+                return;
+            }
             let mut svc = fleet::FleetService::with_families(opts, families);
             let report = svc.run_trace(&trace);
             println!("{}", report.render());
@@ -495,7 +548,8 @@ fn main() {
                  [--explore] [--tech tf|xla|fs] [--out FILE] [--run] [--v100 N] [--t4 N] \
                  [--capacity C] [--workers K] [--tasks N] [--rate MS] [--templates T] \
                  [--seed S] [--executor virtual|wallclock] [--threads N] [--compile-shards S] \
-                 [--calibrate] [--drift-bound R] [--dynamic-shapes] [--observe] [--trace FILE]"
+                 [--calibrate] [--drift-bound R] [--dynamic-shapes] [--observe] [--trace FILE] \
+                 [--shards N] [--admission-tick MS]"
             );
         }
     }

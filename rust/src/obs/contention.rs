@@ -93,6 +93,14 @@ impl LockSnapshot {
         self.blocked_ms += other.blocked_ms;
     }
 
+    /// The same counters under a new label. Per-shard rollups tag each
+    /// dispatcher's rows with its shard (e.g. `plan_store[3]`) before
+    /// folding them into one cluster-wide table.
+    pub fn relabel(mut self, name: &'static str) -> LockSnapshot {
+        self.name = name;
+        self
+    }
+
     pub fn to_json(&self) -> JsonValue {
         let mut o = JsonValue::obj();
         o.set("acquisitions", self.acquisitions)
@@ -169,5 +177,8 @@ mod tests {
         assert!(a.blocked_ms >= 5.9);
         let j = a.to_json().to_string();
         assert!(j.contains("blocked_ms"));
+        let relabeled = a.relabel("barrier[2]");
+        assert_eq!(relabeled.name, "barrier[2]");
+        assert_eq!(relabeled.acquisitions, 4);
     }
 }
