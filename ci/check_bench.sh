@@ -154,6 +154,23 @@ assert "serve threads read plans through the epoch path" \
   '.scale.locks.plan_store_read.acquisitions > 0'
 assert "epoch read path is contention-free" '.scale.locks.plan_store_read.contended == 0'
 
+# Cross-GEMM stitching: the paper models must absorb at least one GEMM
+# boundary, the absorbed lowering must launch strictly fewer kernels
+# than the cut-only plan, and the modeled end-to-end latency must not
+# regress. These are structural (not trajectory) gates: they hold by
+# construction of the absorption cost model, on every run.
+assert "absorption section present" '.absorption | has("bert") and has("transformer")'
+assert "bert absorbs a GEMM boundary" '.absorption.bert.gemm_absorbed > 0'
+assert "transformer absorbs a GEMM boundary" '.absorption.transformer.gemm_absorbed > 0'
+assert "bert absorbed plan launches fewer kernels" \
+  '.absorption.bert.kernels_absorbed < .absorption.bert.kernels_cut'
+assert "transformer absorbed plan launches fewer kernels" \
+  '.absorption.transformer.kernels_absorbed < .absorption.transformer.kernels_cut'
+assert "bert absorption does not regress modeled latency" \
+  '.absorption.bert.e2e_ms_absorbed <= .absorption.bert.e2e_ms_cut'
+assert "transformer absorption does not regress modeled latency" \
+  '.absorption.transformer.e2e_ms_absorbed <= .absorption.transformer.e2e_ms_cut'
+
 echo "check_bench: structural gates OK ($BENCH)"
 
 # ---------------------------------------------------------------------
@@ -175,6 +192,12 @@ GATED_EXACT=(
   ".dynamic_shapes.distinct_buckets"
   ".dynamic_shapes.bucket_hits"
   ".dynamic_shapes.explore_jobs"
+  ".absorption.bert.gemm_absorbed"
+  ".absorption.bert.kernels_absorbed"
+  ".absorption.bert.kernels_cut"
+  ".absorption.transformer.gemm_absorbed"
+  ".absorption.transformer.kernels_absorbed"
+  ".absorption.transformer.kernels_cut"
 )
 GATED_BANDED=(
   ".report.compile_p50_ms"
@@ -184,6 +207,8 @@ GATED_BANDED=(
   ".report.saved_frac"
   ".dynamic_shapes.saved_frac"
   ".calibration.drift_after"
+  ".absorption.bert.e2e_ms_absorbed"
+  ".absorption.transformer.e2e_ms_absorbed"
 )
 TOLERANCE="${CHECK_BENCH_TOLERANCE:-0.15}"
 
@@ -228,11 +253,6 @@ if [[ ! -f "$BASELINE" ]] || [[ "$(jq -r '.seeded // false' "$BASELINE")" != "tr
 fi
 
 BASE_TOL=$(jq -r '.tolerance // 0.15' "$BASELINE")
-# A provisional baseline was seeded by hand (estimates, not a measured
-# run): trajectory deviations are reported and a measured candidate is
-# written, but CI does not fail on them. Committing the candidate over
-# the baseline (which drops the flag) hardens the gate.
-PROVISIONAL=$(jq -r '.provisional // false' "$BASELINE")
 failures=0
 
 for path in "${GATED_EXACT[@]}"; do
@@ -268,17 +288,6 @@ for path in "${GATED_BANDED[@]}"; do
 done
 
 if [[ $failures -gt 0 ]]; then
-  if [[ "$PROVISIONAL" == "true" ]]; then
-    CANDIDATE="${BASELINE%.json}.candidate.json"
-    extract_baseline "$CANDIDATE"
-    echo "check_bench: WARNING: $failures field(s) deviate from the provisional (hand-seeded) baseline." >&2
-    echo "check_bench: wrote measured candidate to $CANDIDATE; commit it over $BASELINE to harden the trajectory gate." >&2
-    exit 0
-  fi
   fail "$failures gated field(s) regressed against $BASELINE — if the change is intentional, re-seed with ci/check_bench.sh --update-baseline and explain in the PR"
 fi
-if [[ "$PROVISIONAL" == "true" ]]; then
-  echo "check_bench: trajectory gate OK against a provisional baseline — re-seed from a measured run to harden it"
-else
-  echo "check_bench: baseline trajectory gate OK ($BASELINE, tolerance $BASE_TOL)"
-fi
+echo "check_bench: baseline trajectory gate OK ($BASELINE, tolerance $BASE_TOL)"

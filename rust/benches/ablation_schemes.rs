@@ -102,6 +102,7 @@ fn main() {
         ("top-k = 1", ExploreOptions { top_k: 1, ..base.clone() }),
         ("top-k = 5", ExploreOptions { top_k: 5, ..base.clone() }),
         ("remote fusion off", ExploreOptions { enable_remote_fusion: false, ..base.clone() }),
+        ("epilogue absorption off", ExploreOptions { absorb_anchors: false, ..base.clone() }),
         ("max pattern 8", ExploreOptions { max_pattern_size: 8, ..base.clone() }),
         ("pack bundle 16", ExploreOptions { max_pack_bundle: 16, ..base.clone() }),
         ("beam width 1", ExploreOptions { beam_width: 1, ..base.clone() }),

@@ -120,6 +120,45 @@ fn run_dynamic(traffic: &TrafficConfig, executor: ExecutorKind) -> FleetReport {
     svc.run_trace(&trace)
 }
 
+/// Cross-GEMM stitching on the paper models: the same exploration with
+/// epilogue/prologue absorption on vs forced off (cut at every anchor
+/// boundary), lowered and simulated end-to-end on a V100. The gates in
+/// `ci/check_bench.sh` hold this section to "absorbs at least one
+/// boundary, strictly fewer kernels, no e2e regression".
+fn absorption_section() -> JsonValue {
+    use fusion_stitching::explorer::ExploreOptions;
+    use fusion_stitching::gpu::{DeviceSpec, SimConfig, Simulator};
+    use fusion_stitching::pipeline::{self, Tech};
+    use fusion_stitching::workloads::{models, Mode};
+    let device = DeviceSpec::v100();
+    let sim = Simulator::new(device.clone(), SimConfig::xla_runtime());
+    let cut_opts = ExploreOptions { absorb_anchors: false, ..Default::default() };
+    let mut out = JsonValue::obj();
+    let cases = [("bert", models::bert(Mode::Infer)), ("transformer", models::transformer())];
+    for (key, w) in cases {
+        let on = pipeline::optimize(&w, &device, Tech::Fs, &ExploreOptions::default());
+        let off = pipeline::optimize(&w, &device, Tech::Fs, &cut_opts);
+        let t_on = sim.run(&on.kernels, w.loop_kind).e2e_ms();
+        let t_off = sim.run(&off.kernels, w.loop_kind).e2e_ms();
+        println!(
+            "absorption[{key}]: {} boundaries, kernels {} -> {}, e2e {:.3} -> {:.3} ms",
+            on.plan.absorbed_boundaries(),
+            off.kernels.len(),
+            on.kernels.len(),
+            t_off,
+            t_on
+        );
+        let mut row = JsonValue::obj();
+        row.set("gemm_absorbed", on.plan.absorbed_boundaries())
+            .set("kernels_absorbed", on.kernels.len())
+            .set("kernels_cut", off.kernels.len())
+            .set("e2e_ms_absorbed", t_on)
+            .set("e2e_ms_cut", t_off);
+        out.set(key, row);
+    }
+    out
+}
+
 fn main() {
     // Positional number = trace size (first parseable arg outside a
     // flag pair, in any order); `--threads K` = wall-clock pool size;
@@ -585,6 +624,7 @@ fn main() {
     if let Some(w) = &wobs {
         obs_json.set("wallclock", w.to_json());
     }
+    let absorption_json = absorption_section();
     let mut out = JsonValue::obj();
     out.set("bench", "production_fleet")
         .set("tasks", traffic.tasks)
@@ -598,7 +638,8 @@ fn main() {
         .set("dynamic_shapes", dynamic_json)
         .set("calibration", calibration_json)
         .set("scale", scale_json)
-        .set("observability", obs_json);
+        .set("observability", obs_json)
+        .set("absorption", absorption_json);
     let path = "BENCH_fleet.json";
     match std::fs::write(path, out.to_pretty()) {
         Ok(()) => println!("wrote {path}"),

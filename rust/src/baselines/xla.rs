@@ -115,7 +115,9 @@ pub fn plan_with_limit(graph: &Graph, max_fusion_size: usize) -> FusionPlan {
         .filter(|f| f.len() > 1)
         .map(FusionPattern::new)
         .collect();
-    FusionPlan { patterns }
+    // Baseline personalities never absorb anchors: cut behavior stays
+    // bit-stable.
+    FusionPlan { patterns, absorbed: Vec::new() }
 }
 
 #[cfg(test)]

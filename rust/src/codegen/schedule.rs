@@ -7,7 +7,9 @@
 //! memory). A schedule choice for every sub-root plus a launch dimension
 //! fully determines the generated kernel.
 
-/// The four kernel composition schemes of Fig. 3.
+/// The four kernel composition schemes of Fig. 3, plus the anchored
+/// cross-GEMM scheme that stitches memory-intensive chains onto a
+/// compute-intensive anchor.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum CompositionScheme {
     /// Independent ops packed into one launch (no data dependence).
@@ -21,6 +23,27 @@ pub enum CompositionScheme {
     /// Producer value staged in shared memory (intra-block reuse) —
     /// unlocks non-homogeneous parallelism in one kernel.
     BlockComposition,
+    /// Anchored stitching across the compute boundary: the GEMM/conv
+    /// anchor's output tile (or its prologue's input tile) is handed to
+    /// the absorbed element-wise/reduce chain through shared memory
+    /// instead of an HBM round-trip. One output row per warp at a fixed
+    /// 256-thread block; feasible only while the row tile fits the
+    /// per-block shared-memory cap ([`crate::codegen::shmem`] staging
+    /// helpers) — lowering falls back to the cut plan otherwise.
+    GemmEpilogue,
+}
+
+impl CompositionScheme {
+    /// Short name for reports/pseudocode.
+    pub fn name(self) -> &'static str {
+        match self {
+            CompositionScheme::KernelPacking => "kernel_packing",
+            CompositionScheme::ThreadComposition => "thread_composition",
+            CompositionScheme::WarpComposition => "warp_composition",
+            CompositionScheme::BlockComposition => "block_composition",
+            CompositionScheme::GemmEpilogue => "gemm_epilogue",
+        }
+    }
 }
 
 /// Schedule template assigned to one sub-root (§4.2): how its group's
@@ -93,5 +116,15 @@ mod tests {
     fn all_lists_three_templates() {
         assert_eq!(SubRootSchedule::all().len(), 3);
         assert_eq!(SubRootSchedule::all()[0], SubRootSchedule::ThreadLocal);
+    }
+
+    #[test]
+    fn gemm_epilogue_is_not_a_subroot_template() {
+        // No SubRootSchedule maps to the anchored scheme: it is chosen
+        // by the absorption pass, never by per-sub-root tuning.
+        for s in SubRootSchedule::all() {
+            assert_ne!(s.scheme(), CompositionScheme::GemmEpilogue);
+        }
+        assert_eq!(CompositionScheme::GemmEpilogue.name(), "gemm_epilogue");
     }
 }

@@ -115,6 +115,27 @@ fn align(bytes: usize) -> usize {
     bytes.div_ceil(128) * 128 // 128-byte banks-friendly alignment
 }
 
+/// Rows of the boundary tensor the `GemmEpilogue` hand-off stages per
+/// block: one row per warp at the scheme's fixed 256-thread block.
+pub const EPILOGUE_ROWS_PER_BLOCK: usize = 8;
+
+/// Per-block shared-memory staging of the cross-GEMM hand-off for a
+/// boundary tensor of `row_elems` elements per row, `elem_bytes` each:
+/// the absorbed chain reads the anchor-side tile from shared memory
+/// instead of HBM, so the anchor kernel must hold
+/// [`EPILOGUE_ROWS_PER_BLOCK`] rows resident.
+pub fn epilogue_staging_bytes(row_elems: usize, elem_bytes: usize) -> usize {
+    align(row_elems.max(1) * elem_bytes * EPILOGUE_ROWS_PER_BLOCK)
+}
+
+/// Tune-time feasibility of the `GemmEpilogue` hand-off on `device`:
+/// the staged tile must respect the per-block shared-memory cap and the
+/// combined kernel must still be launchable at the scheme's fixed
+/// 256-thread block. When this fails the plan lowers in its cut form.
+pub fn epilogue_feasible(device: &crate::gpu::DeviceSpec, staging_bytes: usize) -> bool {
+    staging_bytes <= device.shmem_per_block && device.occupancy(256, 32, staging_bytes) > 0.0
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -177,6 +198,18 @@ mod tests {
             &[ShmemRequest { owner: a, bytes: 100 }],
         );
         assert_eq!(alloc.total_bytes, 128);
+    }
+
+    #[test]
+    fn epilogue_staging_respects_block_cap() {
+        let d = crate::gpu::DeviceSpec::v100();
+        // 1024-wide f32 rows: 8 × 4 KB = 32 KB — feasible.
+        let ok = epilogue_staging_bytes(1024, 4);
+        assert_eq!(ok, 32 * 1024);
+        assert!(epilogue_feasible(&d, ok));
+        // 2048-wide f32 rows: 64 KB — over the 48 KB per-block cap.
+        let too_big = epilogue_staging_bytes(2048, 4);
+        assert!(!epilogue_feasible(&d, too_big));
     }
 
     /// Three sequential requests collapse into one slot; a fourth that

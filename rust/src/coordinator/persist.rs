@@ -10,7 +10,7 @@
 //! orders of magnitude cheaper than re-running the explorer.
 
 use super::cache::GraphKey;
-use crate::explorer::{FusionPattern, FusionPlan};
+use crate::explorer::{AbsorbedAnchor, FusionPattern, FusionPlan};
 use crate::gpu::DeviceSpec;
 use crate::graph::{Graph, NodeId};
 use crate::pipeline::{lower, OptimizedProgram, Tech};
@@ -28,6 +28,10 @@ pub struct PersistedPlan {
     pub graph_len: usize,
     pub tech: Tech,
     pub patterns: Vec<Vec<u32>>,
+    /// Absorbed GEMM boundaries as `(anchor, epilogue, prologue)` node
+    /// ids (pattern `min_id`s for the sides); restoring without these
+    /// would silently re-lower an absorbed plan in its cut form.
+    pub absorbed: Vec<(u32, Option<u32>, Option<u32>)>,
 }
 
 /// On-disk snapshot of tuned plans, keyed by graph hash.
@@ -67,6 +71,18 @@ impl PlanStore {
                     .iter()
                     .map(|p| p.nodes().iter().map(|n| n.idx() as u32).collect())
                     .collect(),
+                absorbed: prog
+                    .plan
+                    .absorbed
+                    .iter()
+                    .map(|a| {
+                        (
+                            a.anchor.idx() as u32,
+                            a.epilogue.map(|n| n.idx() as u32),
+                            a.prologue.map(|n| n.idx() as u32),
+                        )
+                    })
+                    .collect(),
             },
         );
     }
@@ -104,7 +120,22 @@ impl PlanStore {
                 return None;
             }
         }
-        let plan = FusionPlan { patterns };
+        let absorbed: Vec<AbsorbedAnchor> = saved
+            .absorbed
+            .iter()
+            .map(|&(anchor, ep, pro)| AbsorbedAnchor {
+                anchor: NodeId(anchor),
+                epilogue: ep.map(NodeId),
+                prologue: pro.map(NodeId),
+            })
+            .collect();
+        for a in &absorbed {
+            let ids = [Some(a.anchor), a.epilogue, a.prologue];
+            if ids.iter().flatten().any(|n| n.idx() >= graph.len()) {
+                return None;
+            }
+        }
+        let plan = FusionPlan { patterns, absorbed };
         if !plan.is_disjoint() {
             return None;
         }
@@ -134,6 +165,27 @@ impl PlanStore {
                                     JsonValue::Arr(
                                         pat.iter().map(|&n| JsonValue::Num(n as f64)).collect(),
                                     )
+                                })
+                                .collect(),
+                        ),
+                    )
+                    // `[anchor, epilogue, prologue]` triples; -1 marks
+                    // an unabsorbed side. Absent in version-1 snapshots
+                    // written before cross-GEMM stitching → empty.
+                    .set(
+                        "absorbed",
+                        JsonValue::Arr(
+                            p.absorbed
+                                .iter()
+                                .map(|&(a, ep, pro)| {
+                                    let side = |v: Option<u32>| {
+                                        JsonValue::Num(v.map_or(-1.0, |x| x as f64))
+                                    };
+                                    JsonValue::Arr(vec![
+                                        JsonValue::Num(a as f64),
+                                        side(ep),
+                                        side(pro),
+                                    ])
                                 })
                                 .collect(),
                         ),
@@ -182,9 +234,28 @@ impl PlanStore {
                         .collect::<Vec<_>>()
                 })
                 .unwrap_or_default();
+            let absorbed = p
+                .get("absorbed")
+                .map(|x| {
+                    x.items()
+                        .iter()
+                        .filter_map(|t| {
+                            let nums: Vec<f64> =
+                                t.items().iter().filter_map(|n| n.as_f64()).collect();
+                            let side = |f: f64| (f >= 0.0).then_some(f as u32);
+                            match nums.as_slice() {
+                                [a, ep, pro] if *a >= 0.0 => {
+                                    Some((*a as u32, side(*ep), side(*pro)))
+                                }
+                                _ => None,
+                            }
+                        })
+                        .collect::<Vec<_>>()
+                })
+                .unwrap_or_default();
             store.plans.insert(
                 key,
-                PersistedPlan { key: GraphKey(key), graph_len, tech, patterns },
+                PersistedPlan { key: GraphKey(key), graph_len, tech, patterns, absorbed },
             );
         }
         Ok(store)
@@ -240,6 +311,48 @@ mod tests {
         assert_eq!(restored.tech, Tech::Fs);
         assert_eq!(restored.plan.patterns.len(), prog.plan.patterns.len());
         assert_eq!(restored.kernels.len(), prog.kernels.len());
+    }
+
+    #[test]
+    fn roundtrip_preserves_absorbed_boundaries() {
+        // A GEMM with a bias+relu epilogue absorbs its boundary; a
+        // restored plan must re-lower to the same merged kernel set,
+        // not silently fall back to the cut form.
+        let mut g = Graph::new("GE");
+        let x = g.param(Shape::new(vec![512, 64]), DType::F32, "x");
+        let wt = g.param(Shape::new(vec![64, 256]), DType::F32, "w");
+        let mm = g.matmul(x, wt, "mm");
+        let b = g.param(Shape::new(vec![256]), DType::F32, "b");
+        let bb = g.add(
+            OpKind::Broadcast,
+            DType::F32,
+            Shape::new(vec![512, 256]),
+            vec![b],
+            "bb",
+        );
+        let add = g.binary(OpKind::Add, mm, bb, "add");
+        let _ = g.unary(OpKind::Relu, add, "relu");
+        let w = Workload {
+            name: "GE",
+            field: "micro",
+            mode: Mode::Infer,
+            batch: 1,
+            loop_kind: LoopKind::None,
+            graph: g,
+        };
+        let device = DeviceSpec::v100();
+        let prog = optimize(&w, &device, Tech::Fs, &ExploreOptions::default());
+        assert!(prog.plan.absorbed_boundaries() > 0, "probe must absorb");
+
+        let mut store = PlanStore::new();
+        store.insert(&w.graph, &prog);
+        let json = store.to_json().to_pretty();
+        let loaded = PlanStore::from_json(&JsonValue::parse(&json).unwrap()).unwrap();
+        let restored = loaded.restore(&w, &device).expect("plan restores");
+        assert_eq!(restored.plan.absorbed, prog.plan.absorbed);
+        assert_eq!(restored.kernels.len(), prog.kernels.len());
+        let kernels = &restored.kernels;
+        assert!(kernels.iter().any(|k| k.name.starts_with("fs.gemm_epilogue.")));
     }
 
     #[test]

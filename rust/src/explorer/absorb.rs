@@ -1,0 +1,393 @@
+//! Anchored-region absorption: stitch fusion patterns across the
+//! compute-intensive boundary (cross-GEMM stitching).
+//!
+//! The classic cut rule severs every fusible region at GEMM/conv nodes,
+//! so each epilogue (bias+GELU, residual chains) and prologue pays an
+//! HBM round-trip plus a kernel launch against the anchor. This pass
+//! runs *after* the cut-based plan is final (beam → backfill → remote
+//! fusion) and lets each anchor ([`crate::graph::Fusibility::Anchor`])
+//! claim at most one adjacent epilogue pattern and one prologue pattern,
+//! lowered through the [`crate::codegen::CompositionScheme::GemmEpilogue`]
+//! shared-memory hand-off.
+//!
+//! Decisions are a pure function of (graph, device, options): the pass
+//! never mutates the pattern set, only annotates the plan — so sharded
+//! exploration, plan porting, and the per-shard decision digests all see
+//! identical outcomes, and lowering can always fall back to the cut form
+//! when the hand-off is infeasible at a different device or shape.
+
+use super::candidates::ExploreOptions;
+use super::delta::DeltaModel;
+use super::pattern::{AbsorbedAnchor, FusionPattern, FusionPlan};
+use crate::gpu::DeviceSpec;
+use crate::graph::{Graph, NodeId};
+
+/// Annotate `plan` with the GEMM boundaries worth absorbing.
+///
+/// For every anchor in id order: the **epilogue** candidate is the plan
+/// pattern containing a direct consumer of the anchor whose row space
+/// matches the anchor output; the **prologue** candidate is a pattern
+/// feeding the anchor whose every output is consumed only by the anchor
+/// (otherwise its result must reach HBM anyway). A boundary is absorbed
+/// iff the delta model's [`DeltaModel::absorb_gain_us`] is positive —
+/// saved launch + saved intermediate round-trip beating the staging
+/// tile's occupancy pressure — and the stitched node set stays acyclic.
+/// Each pattern is claimed by at most one anchor.
+pub fn absorb_anchors(
+    graph: &Graph,
+    device: &DeviceSpec,
+    mut plan: FusionPlan,
+    opts: &ExploreOptions,
+) -> FusionPlan {
+    plan.absorbed.clear();
+    if !opts.absorb_anchors {
+        return plan;
+    }
+    let model = DeltaModel::with_params(graph, device.clone(), opts.cost);
+
+    // node -> owning pattern index.
+    let mut owner: Vec<Option<usize>> = vec![None; graph.len()];
+    for (pi, p) in plan.patterns.iter().enumerate() {
+        for &id in p.nodes() {
+            owner[id.idx()] = Some(pi);
+        }
+    }
+    let mut claimed = vec![false; plan.patterns.len()];
+
+    for node in graph.nodes() {
+        if !node.kind.is_anchor() {
+            continue;
+        }
+        let anchor = node.id;
+
+        let epilogue = if model.absorb_gain_us(anchor) > 0.0 {
+            claim_epilogue(graph, &plan, &owner, &mut claimed, anchor)
+        } else {
+            None
+        };
+        let prologue = claim_prologue(graph, &model, &plan, &owner, &mut claimed, anchor);
+
+        if epilogue.is_some() || prologue.is_some() {
+            plan.absorbed.push(AbsorbedAnchor { anchor, epilogue, prologue });
+        }
+    }
+    plan
+}
+
+/// The subset of `plan.absorbed` whose staging hand-off is feasible on
+/// `device` at `graph`'s shapes — the boundaries lowering will actually
+/// merge. Re-derives the hard-feasibility half of
+/// [`DeltaModel::absorb_gain_us`] (staging fits the per-block cap and
+/// the anchor still launches) without cost parameters, so lowering and
+/// plan porting get one deterministic answer: an absorbed boundary
+/// either folds into its anchor's library kernel here or the caller
+/// falls back to the cut form / re-explores. Sides referencing
+/// out-of-range ids or patterns missing from the plan are dropped
+/// (foreign-plan defense, mirroring `retune_plan`).
+pub fn applied_absorptions(
+    graph: &Graph,
+    plan: &FusionPlan,
+    device: &DeviceSpec,
+) -> Vec<AbsorbedAnchor> {
+    let mut out = Vec::new();
+    for a in &plan.absorbed {
+        if a.anchor.idx() >= graph.len() || !graph.node(a.anchor).kind.is_anchor() {
+            continue;
+        }
+        let keep = |side: Option<NodeId>, is_epilogue: bool| -> Option<NodeId> {
+            let mid = side?;
+            let p = plan.patterns.iter().find(|p| p.min_id() == mid)?;
+            if p.nodes().iter().any(|n| n.idx() >= graph.len()) {
+                return None;
+            }
+            let node = graph.node(boundary_node(graph, a.anchor, p, is_epilogue)?);
+            let staging = crate::codegen::shmem::epilogue_staging_bytes(
+                node.shape.inner_dim(),
+                node.dtype.size_bytes(),
+            );
+            crate::codegen::shmem::epilogue_feasible(device, staging).then_some(mid)
+        };
+        let applied = AbsorbedAnchor {
+            anchor: a.anchor,
+            epilogue: keep(a.epilogue, true),
+            prologue: keep(a.prologue, false),
+        };
+        if applied.boundaries() > 0 {
+            out.push(applied);
+        }
+    }
+    out
+}
+
+/// The staged boundary tensor of one absorbed side: the anchor output
+/// for an epilogue, the pattern output feeding the anchor for a
+/// prologue.
+pub fn boundary_node(
+    graph: &Graph,
+    anchor: NodeId,
+    pattern: &FusionPattern,
+    is_epilogue: bool,
+) -> Option<NodeId> {
+    if is_epilogue {
+        Some(anchor)
+    } else {
+        graph
+            .node(anchor)
+            .inputs
+            .iter()
+            .copied()
+            .find(|&i| pattern.contains(i))
+    }
+}
+
+/// The epilogue pattern for `anchor`: smallest-`min_id` unclaimed plan
+/// pattern that directly consumes the anchor output over the same row
+/// space, with an acyclic union. Returns the pattern's `min_id`.
+fn claim_epilogue(
+    graph: &Graph,
+    plan: &FusionPlan,
+    owner: &[Option<usize>],
+    claimed: &mut [bool],
+    anchor: NodeId,
+) -> Option<NodeId> {
+    let rows = graph.node(anchor).shape.outer_elements();
+    let mut cands: Vec<usize> = graph
+        .consumers(anchor)
+        .iter()
+        .filter_map(|c| owner[c.idx()])
+        .collect();
+    cands.sort_unstable();
+    cands.dedup();
+    for pi in cands {
+        if claimed[pi] {
+            continue;
+        }
+        let p = &plan.patterns[pi];
+        // The hand-off streams anchor-output rows; a pattern iterating a
+        // different row space cannot consume the staged tile.
+        if crate::codegen::latency::pattern_rows(graph, p.nodes()).0 != rows {
+            continue;
+        }
+        let mut union: Vec<NodeId> = p.nodes().to_vec();
+        union.push(anchor);
+        if graph.fusion_creates_cycle(&union) {
+            continue;
+        }
+        claimed[pi] = true;
+        return Some(p.min_id());
+    }
+    None
+}
+
+/// The prologue pattern for `anchor`: an unclaimed pattern producing one
+/// of the anchor's direct inputs, whose every pattern output flows only
+/// into this anchor, with positive gain on that boundary tensor.
+fn claim_prologue(
+    graph: &Graph,
+    model: &DeltaModel,
+    plan: &FusionPlan,
+    owner: &[Option<usize>],
+    claimed: &mut [bool],
+    anchor: NodeId,
+) -> Option<NodeId> {
+    for &inp in &graph.node(anchor).inputs {
+        let Some(pi) = owner[inp.idx()] else { continue };
+        if claimed[pi] {
+            continue;
+        }
+        let p = &plan.patterns[pi];
+        let outputs = graph.pattern_outputs(p.nodes());
+        let only_feeds_anchor = outputs.iter().all(|&o| {
+            graph.consumers(o).iter().all(|&c| c == anchor || p.contains(c))
+        });
+        if !only_feeds_anchor {
+            continue;
+        }
+        let mut union: Vec<NodeId> = p.nodes().to_vec();
+        union.push(anchor);
+        if graph.fusion_creates_cycle(&union) {
+            continue;
+        }
+        if model.absorb_gain_us(inp) <= 0.0 {
+            continue;
+        }
+        claimed[pi] = true;
+        return Some(p.min_id());
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::explorer::pattern::FusionPattern;
+    use crate::graph::{DType, OpKind, Shape};
+
+    /// matmul [rows,64]×[64,cols] followed by broadcast-bias + add +
+    /// relu, with the epilogue chain pre-fused into one pattern.
+    fn gemm_with_epilogue(rows: usize, cols: usize) -> (Graph, NodeId, FusionPlan) {
+        let mut g = Graph::new("ge");
+        let x = g.param(Shape::new(vec![rows, 64]), DType::F32, "x");
+        let w = g.param(Shape::new(vec![64, cols]), DType::F32, "w");
+        let mm = g.add(
+            OpKind::MatMul,
+            DType::F32,
+            Shape::new(vec![rows, cols]),
+            vec![x, w],
+            "mm",
+        );
+        let b = g.param(Shape::new(vec![cols]), DType::F32, "b");
+        let bb = g.add(
+            OpKind::Broadcast,
+            DType::F32,
+            Shape::new(vec![rows, cols]),
+            vec![b],
+            "bb",
+        );
+        let add = g.binary(OpKind::Add, mm, bb, "add");
+        let relu = g.unary(OpKind::Relu, add, "relu");
+        let plan = FusionPlan {
+            patterns: vec![FusionPattern::new(vec![bb, add, relu])],
+            absorbed: Vec::new(),
+        };
+        (g, mm, plan)
+    }
+
+    /// The ISSUE-pinned accept/reject pair: absorption happens when the
+    /// saved launch + round-trip beats the staging occupancy pressure,
+    /// and is rejected when the epilogue's shmem/occupancy cost wins.
+    #[test]
+    fn absorption_accepts_profitable_boundary_and_rejects_occupancy_pressure() {
+        let device = DeviceSpec::v100();
+        let opts = ExploreOptions::default();
+
+        // Accept: 256-wide rows stage 8 KB — full occupancy, the saved
+        // launch + round-trip is pure profit.
+        let (g, mm, plan) = gemm_with_epilogue(512, 256);
+        let out = absorb_anchors(&g, &device, plan, &opts);
+        assert_eq!(out.absorbed.len(), 1, "expected the boundary absorbed");
+        assert_eq!(out.absorbed[0].anchor, mm);
+        assert!(out.absorbed[0].epilogue.is_some());
+
+        // Reject (economics): 1500-wide rows stage ~47 KB, crushing the
+        // anchor kernel to 0.25 occupancy; with only 32 rows the saved
+        // round-trip is far too small to pay for that.
+        let (g, _, plan) = gemm_with_epilogue(32, 1500);
+        let out = absorb_anchors(&g, &device, plan, &opts);
+        assert!(out.absorbed.is_empty(), "occupancy pressure must reject");
+
+        // Reject (hard infeasibility): 2048-wide rows need 64 KB of
+        // staging — over the per-block cap, unlaunchable.
+        let (g, _, plan) = gemm_with_epilogue(512, 2048);
+        let out = absorb_anchors(&g, &device, plan, &opts);
+        assert!(out.absorbed.is_empty(), "infeasible staging must reject");
+    }
+
+    #[test]
+    fn applied_set_drops_boundaries_that_no_longer_stage() {
+        // Absorb at 256 columns, then re-check the same plan against a
+        // sibling graph at 2048 columns: the 64 KB staging tile is over
+        // the per-block cap there, so the applied set is empty —
+        // lowering falls back to the cut form and plan porting
+        // re-explores.
+        let device = DeviceSpec::v100();
+        let (g, _, plan) = gemm_with_epilogue(512, 256);
+        let plan = absorb_anchors(&g, &device, plan, &ExploreOptions::default());
+        assert_eq!(plan.absorbed_boundaries(), 1);
+        assert_eq!(applied_absorptions(&g, &plan, &device), plan.absorbed);
+        let (wide, _, _) = gemm_with_epilogue(512, 2048);
+        assert!(applied_absorptions(&wide, &plan, &device).is_empty());
+    }
+
+    #[test]
+    fn absorption_is_off_for_baseline_style_options() {
+        let device = DeviceSpec::v100();
+        let opts = ExploreOptions { absorb_anchors: false, ..Default::default() };
+        let (g, _, plan) = gemm_with_epilogue(512, 256);
+        let out = absorb_anchors(&g, &device, plan, &opts);
+        assert!(out.absorbed.is_empty());
+    }
+
+    #[test]
+    fn prologue_requires_sole_consumption_by_the_anchor() {
+        let mut g = Graph::new("pro");
+        let x = g.param(Shape::new(vec![512, 256]), DType::F32, "x");
+        let e = g.unary(OpKind::Exp, x, "e");
+        let n = g.unary(OpKind::Neg, e, "n");
+        let w = g.param(Shape::new(vec![256, 256]), DType::F32, "w");
+        let mm = g.add(
+            OpKind::MatMul,
+            DType::F32,
+            Shape::new(vec![512, 256]),
+            vec![n, w],
+            "mm",
+        );
+        let _ = mm;
+        let plan = FusionPlan {
+            patterns: vec![FusionPattern::new(vec![e, n])],
+            absorbed: Vec::new(),
+        };
+        let device = DeviceSpec::v100();
+        let opts = ExploreOptions::default();
+        // n feeds only the anchor: the prologue is absorbed.
+        let out = absorb_anchors(&g, &device, plan.clone(), &opts);
+        assert_eq!(out.absorbed.len(), 1);
+        assert!(out.absorbed[0].prologue.is_some());
+        assert!(out.absorbed[0].epilogue.is_none());
+
+        // A second consumer of n outside the anchor blocks absorption.
+        let mut g2 = Graph::new("pro2");
+        let x = g2.param(Shape::new(vec![512, 256]), DType::F32, "x");
+        let e = g2.unary(OpKind::Exp, x, "e");
+        let n = g2.unary(OpKind::Neg, e, "n");
+        let w = g2.param(Shape::new(vec![256, 256]), DType::F32, "w");
+        let _mm = g2.add(
+            OpKind::MatMul,
+            DType::F32,
+            Shape::new(vec![512, 256]),
+            vec![n, w],
+            "mm",
+        );
+        let _leak = g2.unary(OpKind::Abs, n, "leak");
+        let plan2 = FusionPlan {
+            patterns: vec![FusionPattern::new(vec![e, n])],
+            absorbed: Vec::new(),
+        };
+        let out2 = absorb_anchors(&g2, &device, plan2, &opts);
+        assert!(out2.absorbed.is_empty());
+    }
+
+    #[test]
+    fn each_pattern_is_claimed_at_most_once() {
+        // One epilogue chain sandwiched between two matmuls: it can be
+        // mm1's epilogue or mm2's prologue, never both.
+        let mut g = Graph::new("sandwich");
+        let x = g.param(Shape::new(vec![512, 256]), DType::F32, "x");
+        let w1 = g.param(Shape::new(vec![256, 256]), DType::F32, "w1");
+        let mm1 = g.add(
+            OpKind::MatMul,
+            DType::F32,
+            Shape::new(vec![512, 256]),
+            vec![x, w1],
+            "mm1",
+        );
+        let gelu = g.unary(OpKind::Gelu, mm1, "gelu");
+        let neg = g.unary(OpKind::Neg, gelu, "neg");
+        let w2 = g.param(Shape::new(vec![256, 256]), DType::F32, "w2");
+        let _mm2 = g.add(
+            OpKind::MatMul,
+            DType::F32,
+            Shape::new(vec![512, 256]),
+            vec![neg, w2],
+            "mm2",
+        );
+        let plan = FusionPlan {
+            patterns: vec![FusionPattern::new(vec![gelu, neg])],
+            absorbed: Vec::new(),
+        };
+        let out = absorb_anchors(&g, &DeviceSpec::v100(), plan, &ExploreOptions::default());
+        let boundaries = out.absorbed_boundaries();
+        assert_eq!(boundaries, 1, "one pattern, one claim: {:?}", out.absorbed);
+        assert_eq!(out.absorbed[0].anchor, mm1, "anchor id order wins");
+    }
+}

@@ -171,7 +171,7 @@ pub fn compose_plan(
     let model = DeltaModel::with_params(graph, device.clone(), opts.cost);
     let best = beams
         .into_iter()
-        .map(|b| FusionPlan { patterns: b.into_patterns() })
+        .map(|b| FusionPlan { patterns: b.into_patterns(), absorbed: Vec::new() })
         .min_by(|a, b| {
             let ta = model.plan_time_us(&a.kernels(graph));
             let tb = model.plan_time_us(&b.kernels(graph));

@@ -37,6 +37,13 @@ pub struct ExploreOptions {
     /// Beam width for plan composition (§5.3; the paper keeps 3
     /// buffer sets).
     pub beam_width: usize,
+    /// Run the anchored-region absorption pass after remote fusion:
+    /// GEMM/conv anchors may absorb the adjacent epilogue/prologue
+    /// patterns across the compute boundary when the saved launch +
+    /// intermediate round-trip beats the staging occupancy pressure.
+    /// Off for dynamic-loop bodies (the per-iteration re-dispatch defeats
+    /// the hand-off) and for the baseline personalities.
+    pub absorb_anchors: bool,
     /// Cost-model constants every scoring pass of this exploration uses
     /// (delta evaluator, beam selection, accurate-model pruning, launch
     /// tuning at lowering). Defaults reproduce the historical hard-coded
@@ -54,6 +61,7 @@ impl Default for ExploreOptions {
             max_pack_bundle: 4,
             full_cost_model: false,
             beam_width: 3,
+            absorb_anchors: true,
             cost: CostParams::default(),
         }
     }

@@ -126,6 +126,41 @@ impl<'g> DeltaModel<'g> {
         (t_mem.max(t_alu) * self.params.time_scale).max(self.device.kernel_floor_us)
     }
 
+    /// Modeled gain, µs, of absorbing one compute boundary whose
+    /// hand-off tensor is `boundary`'s output (the anchor's result for
+    /// an epilogue, the prologue root's result for a prologue).
+    ///
+    /// Gain = saved kernel launch + saved HBM round-trip of the boundary
+    /// tensor (it was written by one kernel and re-read by the next; the
+    /// `GemmEpilogue` hand-off keeps it in shared memory), minus the
+    /// occupancy pressure the staging tile puts on the anchor kernel.
+    /// `NEG_INFINITY` when the staged tile cannot launch at all — the
+    /// hard shmem-feasibility cut.
+    pub fn absorb_gain_us(&self, boundary: NodeId) -> f64 {
+        let node = self.graph.node(boundary);
+        let staging = crate::codegen::shmem::epilogue_staging_bytes(
+            node.shape.inner_dim(),
+            node.dtype.size_bytes(),
+        );
+        if !crate::codegen::shmem::epilogue_feasible(&self.device, staging) {
+            return f64::NEG_INFINITY;
+        }
+        // Occupancy of the combined kernel at the scheme's fixed
+        // 256-thread block vs. the same kernel without staging; the
+        // register estimate (32) covers the anchor tile + epilogue temps.
+        let occ = self.device.occupancy(256, 32, staging);
+        let occ_free = self.device.occupancy(256, 32, 0);
+        if occ == 0.0 || occ_free == 0.0 {
+            return f64::NEG_INFINITY;
+        }
+        let bw = self.device.effective_bandwidth_at(occ_free, self.params.bandwidth_knee);
+        let round_trip_us = 2.0 * node.output_bytes() as f64 / (bw * 1e3);
+        let saved = self.params.launch_overhead_us
+            + round_trip_us * self.params.time_scale * self.params.absorb_traffic_scale;
+        let occ_lost = ((occ_free - occ) / occ_free).max(0.0);
+        saved - self.params.absorb_occupancy_penalty_us * occ_lost
+    }
+
     /// Total simplified plan time: Σ kernel times + per-kernel launch
     /// overhead. Used by beam search to rank buffer sets cheaply.
     pub fn plan_time_us(&self, kernels: &[crate::explorer::FusionPattern]) -> f64 {

@@ -12,6 +12,7 @@
 //! the work units the fleet's compile pool parallelizes within a graph
 //! (see [`explore_partitioned`]).
 
+pub mod absorb;
 pub mod beam;
 pub mod candidates;
 pub mod delta;
@@ -19,10 +20,11 @@ pub mod pattern;
 pub mod regions;
 pub mod remote;
 
+pub use absorb::{absorb_anchors, applied_absorptions};
 pub use beam::{compose_plan, BeamOptions};
 pub use candidates::{candidate_patterns, ExploreOptions};
 pub use delta::{delta_score, DeltaModel};
-pub use pattern::{FusionPattern, FusionPlan};
+pub use pattern::{AbsorbedAnchor, FusionPattern, FusionPlan};
 pub use regions::{explore_partitioned, Region};
 pub use remote::remote_fusion;
 
@@ -50,6 +52,10 @@ pub fn explore(graph: &Graph, device: &DeviceSpec, opts: &ExploreOptions) -> Fus
     if opts.enable_remote_fusion {
         plan = remote_fusion(graph, device, plan, opts);
     }
+    // Anchored-region absorption runs last, over the final pattern set,
+    // so its decisions are identical for monolithic and sharded
+    // exploration (both funnel through the same finished plan shape).
+    plan = absorb::absorb_anchors(graph, device, plan, opts);
     debug_assert!(plan.is_disjoint());
     plan
 }

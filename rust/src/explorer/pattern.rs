@@ -87,14 +87,47 @@ impl FusionPattern {
     }
 }
 
+/// One GEMM/conv anchor with the boundaries it absorbed (§ cross-GEMM
+/// stitching). Patterns referenced here stay in `FusionPlan::patterns`
+/// untouched — lowering merges them into the anchor's library kernel via
+/// the `GemmEpilogue` hand-off, falling back to the cut form when the
+/// staging buffer does not fit at the target device/shape.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct AbsorbedAnchor {
+    /// The compute-intensive node that anchors the stitched region.
+    pub anchor: NodeId,
+    /// `min_id` of the plan pattern stitched after the anchor (consumes
+    /// its output), if any.
+    pub epilogue: Option<NodeId>,
+    /// `min_id` of the plan pattern stitched before the anchor (feeds
+    /// only the anchor), if any.
+    pub prologue: Option<NodeId>,
+}
+
+impl AbsorbedAnchor {
+    /// Number of compute boundaries this anchor absorbed (0..=2).
+    pub fn boundaries(&self) -> usize {
+        usize::from(self.epilogue.is_some()) + usize::from(self.prologue.is_some())
+    }
+}
+
 /// A fusion plan: disjoint patterns + every fusible node not covered by
 /// any pattern executes as its own single-op kernel.
 #[derive(Debug, Clone, Default)]
 pub struct FusionPlan {
     pub patterns: Vec<FusionPattern>,
+    /// GEMM boundaries absorbed by the anchored-region pass. Always empty
+    /// for the XLA/TF baseline personalities (their cut behavior is
+    /// bit-stable); sorted by anchor id for determinism.
+    pub absorbed: Vec<AbsorbedAnchor>,
 }
 
 impl FusionPlan {
+    /// Total absorbed compute boundaries across all anchors.
+    pub fn absorbed_boundaries(&self) -> usize {
+        self.absorbed.iter().map(|a| a.boundaries()).sum()
+    }
+
     /// Kernels this plan launches for the memory-intensive population:
     /// the multi-op patterns plus singletons for uncovered fusible ops
     /// (excluding zero-cost reshapes, which no framework launches).
@@ -184,6 +217,7 @@ mod tests {
         let (g, ids) = chain();
         let plan = FusionPlan {
             patterns: vec![FusionPattern::new(vec![ids[0], ids[1]])],
+            absorbed: Vec::new(),
         };
         let kernels = plan.kernels(&g);
         // one fused kernel + singleton for c (param excluded)

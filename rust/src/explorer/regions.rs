@@ -224,6 +224,10 @@ pub fn finish_partitioned(
     if opts.enable_remote_fusion {
         plan = super::remote_fusion(graph, device, plan, opts);
     }
+    // Anchored-region absorption is part of the global tail: it runs
+    // over the finished whole-graph pattern set, so sharded and
+    // monolithic exploration annotate the same boundaries.
+    plan = super::absorb::absorb_anchors(graph, device, plan, opts);
     debug_assert!(plan.is_disjoint());
     plan
 }
@@ -369,6 +373,28 @@ mod tests {
             t_part <= t_mono * 1.001 + 1e-9,
             "partitioned {t_part} vs monolithic {t_mono}"
         );
+    }
+
+    #[test]
+    fn both_exploration_paths_absorb_bert_gemm_boundaries() {
+        use crate::workloads::{models, Mode};
+        let device = DeviceSpec::v100();
+        let opts = ExploreOptions::default();
+        let w = models::bert(Mode::Infer);
+        let mono = explore(&w.graph, &device, &opts);
+        let part = explore_partitioned(&w.graph, &device, &opts);
+        assert!(
+            mono.absorbed_boundaries() > 0,
+            "monolithic bert exploration must absorb a GEMM boundary"
+        );
+        assert!(
+            part.absorbed_boundaries() > 0,
+            "partitioned bert exploration must absorb a GEMM boundary"
+        );
+        // The pass is a pure function of the finished plan: running the
+        // same plan through it twice reproduces the annotations exactly.
+        let again = crate::explorer::absorb_anchors(&w.graph, &device, part.clone(), &opts);
+        assert_eq!(part.absorbed, again.absorbed);
     }
 
     #[test]

@@ -77,6 +77,7 @@ pub fn remote_fusion(
     // Multi-op patterns go into the plan; singletons remain implicit.
     FusionPlan {
         patterns: out.into_iter().filter(|p| p.len() > 1).collect(),
+        absorbed: plan.absorbed,
     }
 }
 
@@ -116,6 +117,7 @@ mod tests {
         let device = DeviceSpec::v100();
         let plan = FusionPlan {
             patterns: vec![FusionPattern::new(vec![a, b])],
+            absorbed: Vec::new(),
         };
         let packed = remote_fusion(&g, &device, plan.clone(), &ExploreOptions::default());
         assert_eq!(packed.kernels(&g).len(), plan.kernels(&g).len());

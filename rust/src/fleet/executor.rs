@@ -196,6 +196,10 @@ pub(crate) struct FleetCounters {
     /// Re-explorations rejected by the gate (crashed, vetoed, or not
     /// better than the incumbent); the incumbent keeps serving.
     pub reexplore_rejected: AtomicUsize,
+    /// GEMM boundaries absorbed across every published plan (cross-GEMM
+    /// stitching): counted at the single publication path, so virtual
+    /// and wall-clock executors agree by construction.
+    pub gemm_absorbed: AtomicUsize,
 }
 
 /// Per-iteration simulated latency of a program on a device.
@@ -270,6 +274,9 @@ pub(crate) fn guard_and_publish(
     match candidate {
         Some(prog) => {
             let ms = iter_ms(spec, &prog, w.loop_kind);
+            counters
+                .gemm_absorbed
+                .fetch_add(prog.plan.absorbed_boundaries(), Ordering::Relaxed);
             store.insert(key, spec.name, prog, ready_ms);
             latency.insert((key.exact.0, spec.name), PublishedLatency::first(ms));
             ms

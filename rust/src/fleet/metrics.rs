@@ -65,6 +65,10 @@ pub struct FleetReport {
     pub reexplore_improved: usize,
     /// Re-explorations the plan-quality no-worse gate rejected.
     pub reexplore_rejected: usize,
+    /// GEMM boundaries absorbed across every published plan (cross-GEMM
+    /// stitching): epilogue/prologue patterns folded into their anchor's
+    /// library kernel instead of launching separately.
+    pub gemm_absorbed: usize,
     /// Per-kernel (modeled, measured) pairs the calibrator recorded.
     pub calibration_samples: usize,
     /// Median |predicted − measured| relative kernel-time error under
@@ -164,6 +168,7 @@ impl FleetReport {
             .set("reexplore_jobs", self.reexplore_jobs)
             .set("reexplore_improved", self.reexplore_improved)
             .set("reexplore_rejected", self.reexplore_rejected)
+            .set("gemm_absorbed", self.gemm_absorbed)
             .set("calibration_samples", self.calibration_samples)
             .set("drift_before", self.drift_before)
             .set("drift_after", self.drift_after)
@@ -237,6 +242,10 @@ impl FleetReport {
             ]);
         }
         t.row(vec!["full explorations".to_string(), self.explore_jobs.to_string()]);
+        t.row(vec![
+            "GEMM boundaries absorbed".to_string(),
+            self.gemm_absorbed.to_string(),
+        ]);
         t.row(vec![
             "region-shard compile sub-jobs".to_string(),
             self.shard_jobs.to_string(),
@@ -524,6 +533,7 @@ mod tests {
             reexplore_jobs: 2,
             reexplore_improved: 1,
             reexplore_rejected: 1,
+            gemm_absorbed: 6,
             calibration_samples: 64,
             drift_before: 0.3,
             drift_after: 0.05,
@@ -578,6 +588,7 @@ mod tests {
             "wait_p99_ms",
             "shard_jobs",
             "reexplore_jobs",
+            "gemm_absorbed",
             "calibration_samples",
             "drift_before",
             "drift_after",
@@ -593,6 +604,7 @@ mod tests {
         assert_eq!(j.get("shard_jobs").and_then(|v| v.as_usize()), Some(4));
         assert_eq!(j.get("bucket_hits").and_then(|v| v.as_usize()), Some(2));
         assert_eq!(j.get("distinct_shapes").and_then(|v| v.as_usize()), Some(5));
+        assert_eq!(j.get("gemm_absorbed").and_then(|v| v.as_usize()), Some(6));
     }
 
     #[test]

@@ -1348,6 +1348,7 @@ impl FleetService {
             reexplore_jobs: self.counters.reexplore_jobs.load(Ordering::Relaxed),
             reexplore_improved: self.counters.reexplore_improved.load(Ordering::Relaxed),
             reexplore_rejected: self.counters.reexplore_rejected.load(Ordering::Relaxed),
+            gemm_absorbed: self.counters.gemm_absorbed.load(Ordering::Relaxed),
             calibration_samples: drift.samples,
             drift_before: drift.before,
             drift_after: drift.after,
@@ -1848,6 +1849,48 @@ mod tests {
         assert_eq!(wall.bucket_hits, r.bucket_hits);
         assert_eq!(wall.bucket_retunes, r.bucket_retunes);
         assert_eq!(wall.exact_hits, r.exact_hits);
+        assert_eq!(wall.regressions, 0);
+    }
+
+    #[test]
+    fn bucket_retune_fails_over_when_absorption_cannot_restage() {
+        // Cross-GEMM stitching meets the bucket tier: seq 33 explores
+        // and absorbs its epilogue (the ~33 KB staging tile fits);
+        // seq 64 lands in the same pow2 bucket (cols 1056 and 2048 both
+        // round to 2048) but needs 64 KB of staging — over the
+        // per-block cap — so the launch-dim-only retune must refuse to
+        // silently serve the cut form and instead fail over to a full
+        // exploration, which re-decides absorption at the new shape.
+        let families = vec![TemplateFamily::Model(ModelFamily::GemmEpilogueProbe)];
+        let shape = |seq: usize| TaskShape { batch: 1, seq };
+        let trace = vec![
+            FleetTask { id: 0, arrival_ms: 0.0, template: 0, iterations: 6, shape: shape(33) },
+            FleetTask { id: 1, arrival_ms: 200.0, template: 0, iterations: 6, shape: shape(64) },
+        ];
+        let run = |executor: ExecutorKind| {
+            let opts = FleetOptions {
+                registry: DeviceRegistry::mixed(1, 0, 2),
+                compile_workers: 2,
+                executor,
+                ..Default::default()
+            };
+            let mut svc = FleetService::with_families(opts, families.clone());
+            svc.run_trace(&trace)
+        };
+        let r = run(ExecutorKind::VirtualTime);
+        assert_eq!(r.misses, 1, "{}", r.to_json().to_string());
+        assert_eq!(r.bucket_hits, 1, "seq 64 shares seq 33's pow2 bucket");
+        assert_eq!(r.bucket_retunes, 1);
+        assert_eq!(r.bucket_failures, 1, "the absorbed plan must refuse to restage");
+        assert_eq!(r.explore_jobs, 2, "the failure pays a full exploration");
+        assert!(r.gemm_absorbed >= 1, "the seq-33 exploration absorbs its epilogue");
+        assert_eq!(r.regressions, 0, "the fail-over still serves");
+        // The same decisions on real threads.
+        let wall = run(ExecutorKind::WallClock { threads: 2 });
+        assert_eq!(wall.bucket_hits, r.bucket_hits);
+        assert_eq!(wall.bucket_failures, r.bucket_failures);
+        assert_eq!(wall.explore_jobs, r.explore_jobs);
+        assert_eq!(wall.gemm_absorbed, r.gemm_absorbed);
         assert_eq!(wall.regressions, 0);
     }
 

@@ -180,6 +180,11 @@ pub enum ModelFamily {
     DienInfer,
     /// The Figure-1 layer-norm microbenchmark at rows = batch × seq.
     LayerNorm,
+    /// Cross-GEMM stitching probe: x[512,64] × w[64, 32·seq] with a
+    /// bias+relu epilogue. The staging tile scales with seq, so sibling
+    /// shapes inside one pow2 bucket can disagree on absorption
+    /// feasibility — the bucket tier's retune-failure path.
+    GemmEpilogueProbe,
 }
 
 impl ModelFamily {
@@ -194,6 +199,26 @@ impl ModelFamily {
                 let _ = blocks::layer_norm(&mut g, x, "ln");
                 Workload {
                     name: "LN",
+                    field: "micro",
+                    mode: Mode::Infer,
+                    batch: shape.batch,
+                    loop_kind: LoopKind::None,
+                    graph: g,
+                }
+            }
+            ModelFamily::GemmEpilogueProbe => {
+                use crate::graph::{DType, Graph, OpKind, Shape};
+                let cols = 32 * shape.seq.max(1);
+                let mut g = Graph::new("GEP");
+                let x = g.param(Shape::new(vec![512, 64]), DType::F32, "x");
+                let w = g.param(Shape::new(vec![64, cols]), DType::F32, "w");
+                let mm = g.matmul(x, w, "mm");
+                let b = g.param(Shape::new(vec![cols]), DType::F32, "b");
+                let bb = g.broadcast(b, Shape::new(vec![512, cols]), "bb");
+                let add = g.binary(OpKind::Add, mm, bb, "add");
+                let _ = g.unary(OpKind::Relu, add, "relu");
+                Workload {
+                    name: "GEP",
                     field: "micro",
                     mode: Mode::Infer,
                     batch: shape.batch,

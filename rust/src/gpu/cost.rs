@@ -39,6 +39,17 @@ pub struct CostParams {
     /// predicting whole-iteration times (drift detection), never inside
     /// per-kernel tuning.
     pub iter_overhead_us: f64,
+    /// Multiplier on the saved intermediate round-trip traffic when a
+    /// GEMM boundary is absorbed (the epilogue/prologue no longer writes
+    /// + re-reads the anchor-side tensor through HBM). 1.0 = trust the
+    /// bandwidth model.
+    pub absorb_traffic_scale: f64,
+    /// Occupancy-pressure penalty of an absorbed boundary, µs at fully
+    /// crushed occupancy. The `GemmEpilogue` hand-off stages a row tile
+    /// of the boundary tensor in shared memory; the penalty charged is
+    /// this constant scaled by the fraction of anchor-kernel occupancy
+    /// that staging buffer costs.
+    pub absorb_occupancy_penalty_us: f64,
 }
 
 impl Default for CostParams {
@@ -51,6 +62,8 @@ impl Default for CostParams {
             bandwidth_knee: 0.4,
             time_scale: 1.0,
             iter_overhead_us: 0.0,
+            absorb_traffic_scale: 1.0,
+            absorb_occupancy_penalty_us: 12.0,
         }
     }
 }
@@ -84,5 +97,33 @@ mod tests {
         assert_eq!(p.iter_overhead_us, 0.0);
         assert_eq!(p.warp_combine(), 40.0);
         assert_eq!(p.block_combine(), 102.0);
+    }
+
+    /// Golden pin of every `CostParams::default()` field. The exhaustive
+    /// destructuring makes adding a field a compile error here, so new
+    /// cost terms (like the absorption pair) can never silently shift
+    /// the XLA/TF personality fallbacks or the calibrated-fit base.
+    #[test]
+    fn golden_default_pins_every_field() {
+        let CostParams {
+            launch_overhead_us,
+            cpi,
+            shuffle_cost,
+            shmem_access_cost,
+            bandwidth_knee,
+            time_scale,
+            iter_overhead_us,
+            absorb_traffic_scale,
+            absorb_occupancy_penalty_us,
+        } = CostParams::default();
+        assert_eq!(launch_overhead_us, 7.0);
+        assert_eq!(cpi, 4.0);
+        assert_eq!(shuffle_cost, 8.0);
+        assert_eq!(shmem_access_cost, 6.0);
+        assert_eq!(bandwidth_knee, 0.4);
+        assert_eq!(time_scale, 1.0);
+        assert_eq!(iter_overhead_us, 0.0);
+        assert_eq!(absorb_traffic_scale, 1.0);
+        assert_eq!(absorb_occupancy_penalty_us, 12.0);
     }
 }

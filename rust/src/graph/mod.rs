@@ -21,5 +21,5 @@ mod shape;
 pub use dot::to_dot;
 pub use dtype::DType;
 pub use graph::{Graph, Node, NodeId};
-pub use op::{OpClass, OpKind, ReduceOp};
+pub use op::{Fusibility, OpClass, OpKind, ReduceOp};
 pub use shape::Shape;

@@ -103,6 +103,28 @@ pub enum OpKind {
     Conv,
 }
 
+/// Fusibility taxonomy: how an op may participate in a stitched region.
+///
+/// This refines the historical `is_fusible()` boolean. The old cut rule
+/// ("everything memory-intensive fuses, GEMM/conv/sources never do")
+/// survives as `Fusible` vs. the rest, but compute-intensive ops are now
+/// distinguished from sources: a MatMul/Conv is an **anchor** — a region
+/// may claim exactly one and absorb the element-wise/reduce chains feeding
+/// and following it across the compute boundary (the `GemmEpilogue`
+/// composition scheme). Sources remain fully opaque: they never appear
+/// inside a kernel and never anchor one.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Fusibility {
+    /// Memory-intensive op: may appear anywhere inside a generated kernel.
+    Fusible,
+    /// Compute-intensive op (GEMM/conv): lowered via a vendor library,
+    /// but a region may claim one as its anchor and stitch the adjacent
+    /// memory-intensive chains onto it through shared memory.
+    Anchor,
+    /// Never participates in any kernel (graph inputs/constants).
+    Opaque,
+}
+
 /// Coarse classification used by schedule templates and cost models.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum OpClass {
@@ -138,13 +160,26 @@ impl OpKind {
         }
     }
 
+    /// Where this op sits in the fusibility taxonomy.
+    pub fn fusibility(&self) -> Fusibility {
+        match self.class() {
+            OpClass::ComputeIntensive => Fusibility::Anchor,
+            OpClass::Source => Fusibility::Opaque,
+            _ => Fusibility::Fusible,
+        }
+    }
+
     /// True for ops that fusion may place inside a generated kernel
     /// (everything memory-intensive, i.e. not GEMM/conv/sources).
+    /// Equivalent to `fusibility() == Fusibility::Fusible`; anchors are
+    /// handled by the dedicated absorption pass, not the pattern DP.
     pub fn is_fusible(&self) -> bool {
-        !matches!(
-            self.class(),
-            OpClass::ComputeIntensive | OpClass::Source
-        )
+        self.fusibility() == Fusibility::Fusible
+    }
+
+    /// True for compute-intensive ops a region may claim as its anchor.
+    pub fn is_anchor(&self) -> bool {
+        self.fusibility() == Fusibility::Anchor
     }
 
     /// True for ops XLA refuses to fuse as *producers* (mid-kernel):
@@ -257,6 +292,27 @@ mod tests {
         assert!(!OpKind::MatMul.is_fusible());
         assert!(!OpKind::Conv.is_fusible());
         assert!(!OpKind::Parameter.is_fusible());
+    }
+
+    #[test]
+    fn taxonomy_refines_the_boolean_cut() {
+        // Fusible ↔ the historical `is_fusible()` true set.
+        assert_eq!(OpKind::Add.fusibility(), Fusibility::Fusible);
+        assert_eq!(OpKind::Gelu.fusibility(), Fusibility::Fusible);
+        assert_eq!(
+            OpKind::Reduce { op: ReduceOp::Sum, axes: vec![1] }.fusibility(),
+            Fusibility::Fusible
+        );
+        // GEMM/conv are anchors, not opaque: a region may claim one.
+        assert_eq!(OpKind::MatMul.fusibility(), Fusibility::Anchor);
+        assert_eq!(OpKind::BatchMatMul.fusibility(), Fusibility::Anchor);
+        assert_eq!(OpKind::Conv.fusibility(), Fusibility::Anchor);
+        assert!(OpKind::MatMul.is_anchor());
+        // Sources stay fully opaque — never in a kernel, never an anchor.
+        assert_eq!(OpKind::Parameter.fusibility(), Fusibility::Opaque);
+        assert_eq!(OpKind::Constant.fusibility(), Fusibility::Opaque);
+        assert!(!OpKind::Parameter.is_anchor());
+        assert!(!OpKind::Add.is_anchor());
     }
 
     #[test]

@@ -101,6 +101,10 @@ pub fn runtime_explore_opts(opts: &ExploreOptions, loop_kind: LoopKind) -> Explo
     if loop_kind == LoopKind::DynamicLoop {
         o.max_pattern_size = o.max_pattern_size.min(DYNLOOP_PATTERN_BUDGET);
         o.enable_remote_fusion = false;
+        // The GEMM library call and its epilogue live in different
+        // per-step dispatches, so the shared-memory hand-off cannot
+        // bridge them either.
+        o.absorb_anchors = false;
     }
     o
 }
@@ -140,13 +144,34 @@ pub fn lower_with_cost(
         Tech::Fs => EmitConfig::fusion_stitching_with(*cost),
         _ => EmitConfig::xla(),
     };
+    // Cross-GEMM stitching: which absorbed boundaries still stage on
+    // *this* device at *this* graph's shapes. Each survivor folds its
+    // pattern into the anchor's library kernel below; everything else
+    // (and every boundary on the baselines, whose plans never absorb)
+    // keeps the cut form.
+    let applied = match tech {
+        Tech::Fs => explorer::applied_absorptions(graph, plan, device),
+        _ => Vec::new(),
+    };
+    let merged: std::collections::HashSet<crate::graph::NodeId> = applied
+        .iter()
+        .flat_map(|a| [a.epilogue, a.prologue])
+        .flatten()
+        .collect();
     let mut kernels: Vec<KernelSpec> = Vec::new();
 
     // Library + memcpy kernels from the graph itself.
     let mut base_copies = 0usize;
     for node in graph.nodes() {
         match node.kind.class() {
-            OpClass::ComputeIntensive => kernels.push(emit_library_call(graph, node.id)),
+            OpClass::ComputeIntensive => {
+                let spec = emit_library_call(graph, node.id);
+                let spec = match applied.iter().find(|a| a.anchor == node.id) {
+                    Some(a) => merge_absorbed_kernel(graph, plan, a, spec),
+                    None => spec,
+                };
+                kernels.push(spec);
+            }
             _ if node.kind == OpKind::Copy => {
                 base_copies += 1;
                 kernels.push(KernelSpec::memcpy(node.name.clone(), node.output_bytes()));
@@ -197,8 +222,13 @@ pub fn lower_with_cost(
             .collect();
     }
 
-    // Memory-intensive kernels from the plan.
+    // Memory-intensive kernels from the plan. Patterns an anchor
+    // absorbed were folded into its library kernel above and launch
+    // nothing of their own.
     for (i, pat) in plan.kernels(graph).iter().enumerate() {
+        if merged.contains(&pat.min_id()) {
+            continue;
+        }
         if let Some((spec, _t)) = emit_kernel(
             graph,
             pat.nodes(),
@@ -210,6 +240,58 @@ pub fn lower_with_cost(
         }
     }
     kernels
+}
+
+/// Fold an anchor's absorbed epilogue/prologue patterns into its
+/// library kernel — the `GemmEpilogue` hand-off. The combined kernel
+/// stays compute-intensive (the GEMM dominates its runtime); it takes
+/// over the patterns' external traffic, stops round-tripping the staged
+/// boundary tensor through HBM, and carries the staging tile in shared
+/// memory.
+fn merge_absorbed_kernel(
+    graph: &Graph,
+    plan: &FusionPlan,
+    a: &crate::explorer::AbsorbedAnchor,
+    mut spec: KernelSpec,
+) -> KernelSpec {
+    spec.name = format!("fs.gemm_epilogue.{}", spec.name);
+    for (side, is_epilogue) in [(a.epilogue, true), (a.prologue, false)] {
+        let Some(mid) = side else { continue };
+        let Some(p) = plan.patterns.iter().find(|p| p.min_id() == mid) else { continue };
+        let Some(boundary) = explorer::absorb::boundary_node(graph, a.anchor, p, is_epilogue)
+        else {
+            continue;
+        };
+        let bnode = graph.node(boundary);
+        let staging = crate::codegen::shmem::epilogue_staging_bytes(
+            bnode.shape.inner_dim(),
+            bnode.dtype.size_bytes(),
+        );
+        spec.shmem_per_block = spec.shmem_per_block.max(staging);
+        // The pattern's external inputs now stream through the combined
+        // kernel.
+        let externals: std::collections::BTreeSet<crate::graph::NodeId> = p
+            .nodes()
+            .iter()
+            .flat_map(|&id| graph.node(id).inputs.iter().copied())
+            .filter(|&i| !p.contains(i) && i != a.anchor)
+            .collect();
+        let ext_bytes: usize = externals.iter().map(|&i| graph.node(i).output_bytes()).sum();
+        spec.bytes_read += ext_bytes;
+        if is_epilogue {
+            for out in graph.pattern_outputs(p.nodes()) {
+                spec.bytes_written += graph.node(out).output_bytes();
+            }
+        }
+        // The staged boundary tensor no longer touches HBM.
+        let saved = bnode.output_bytes();
+        if is_epilogue {
+            spec.bytes_written = spec.bytes_written.saturating_sub(saved);
+        } else {
+            spec.bytes_read = spec.bytes_read.saturating_sub(saved);
+        }
+    }
+    spec
 }
 
 /// Optimize + lower a workload under one technique.
@@ -244,6 +326,15 @@ pub fn port_program(
             .filter(|k| matches!(k.class, crate::gpu::KernelClass::MemoryIntensive))
             .count()
     };
+    // A launch-dim-only retune must not silently revisit the explorer's
+    // absorption decisions: when a previously-absorbed boundary no
+    // longer stages at this device/shape, refuse and let the caller
+    // re-explore rather than serve a structurally different cut program
+    // under the old plan.
+    let applied = explorer::applied_absorptions(graph, &prog.plan, device);
+    if applied.iter().map(|a| a.boundaries()).sum::<usize>() < prog.plan.absorbed_boundaries() {
+        return None;
+    }
     let kernels = lower(graph, &prog.plan, device, prog.tech, loop_kind);
     if mem_count(&kernels) < mem_count(&prog.kernels) {
         return None;
@@ -427,6 +518,90 @@ mod tests {
         let mut tiny = Graph::new("tiny");
         let _ = tiny.param(Shape::new(vec![8]), DType::F32, "p");
         assert!(reshape_program(&tiny, &prog, &device, sib.loop_kind).is_none());
+    }
+
+    /// x[512,64] × w[64,cols] with a broadcast-bias + add + relu
+    /// epilogue: absorbable when the `cols`-wide staging tile fits.
+    fn gemm_epilogue_workload(cols: usize) -> Workload {
+        let mut g = Graph::new("GE");
+        let x = g.param(Shape::new(vec![512, 64]), DType::F32, "x");
+        let w = g.param(Shape::new(vec![64, cols]), DType::F32, "w");
+        let mm = g.matmul(x, w, "mm");
+        let b = g.param(Shape::new(vec![cols]), DType::F32, "b");
+        let bb = g.add(
+            crate::graph::OpKind::Broadcast,
+            DType::F32,
+            Shape::new(vec![512, cols]),
+            vec![b],
+            "bb",
+        );
+        let add = g.binary(crate::graph::OpKind::Add, mm, bb, "add");
+        let _ = g.unary(crate::graph::OpKind::Relu, add, "relu");
+        Workload {
+            name: "GE",
+            field: "micro",
+            mode: Mode::Infer,
+            batch: 1,
+            loop_kind: crate::workloads::LoopKind::None,
+            graph: g,
+        }
+    }
+
+    #[test]
+    fn absorption_merges_epilogues_into_library_kernels() {
+        let w = models::bert(Mode::Infer);
+        let device = DeviceSpec::v100();
+        let on = optimize(&w, &device, Tech::Fs, &ExploreOptions::default());
+        let off_opts = ExploreOptions { absorb_anchors: false, ..Default::default() };
+        let off = optimize(&w, &device, Tech::Fs, &off_opts);
+        assert!(on.plan.absorbed_boundaries() > 0, "bert must absorb GEMM boundaries");
+        assert!(off.plan.absorbed.is_empty());
+        // Absorption only annotates the plan — the pattern decisions
+        // are identical either way…
+        assert_eq!(on.plan.patterns.len(), off.plan.patterns.len());
+        // …but lowering folds each absorbed pattern into its anchor's
+        // library kernel: strictly fewer launches, same math population
+        // (the combined kernels stay compute-intensive), lower latency.
+        assert!(
+            on.kernels.len() < off.kernels.len(),
+            "{} vs {}",
+            on.kernels.len(),
+            off.kernels.len()
+        );
+        let merged = &on.kernels;
+        assert!(merged.iter().any(|k| k.name.starts_with("fs.gemm_epilogue.")));
+        let math = |ks: &[KernelSpec]| {
+            let ci = |k: &&KernelSpec| {
+                matches!(k.class, crate::gpu::KernelClass::ComputeIntensive { .. })
+            };
+            ks.iter().filter(ci).count()
+        };
+        assert_eq!(math(&on.kernels), math(&off.kernels));
+        let sim = Simulator::new(device.clone(), SimConfig::xla_runtime());
+        let t_on = sim.run(&on.kernels, w.loop_kind).e2e_ms();
+        let t_off = sim.run(&off.kernels, w.loop_kind).e2e_ms();
+        assert!(t_on < t_off, "absorbed {t_on} ms vs cut {t_off} ms");
+    }
+
+    #[test]
+    fn reshape_refuses_when_absorption_no_longer_stages() {
+        // Absorbed at 256 columns (8 KB staging). A sibling at 512
+        // still stages and keeps the merged form; a sibling at 2048
+        // needs 64 KB — over the per-block cap — so the shape-port is
+        // refused and the caller must re-explore.
+        let device = DeviceSpec::v100();
+        let src = gemm_epilogue_workload(256);
+        let prog = optimize(&src, &device, Tech::Fs, &ExploreOptions::default());
+        assert!(prog.plan.absorbed_boundaries() > 0, "probe must absorb");
+
+        let ok = gemm_epilogue_workload(512);
+        let ported = reshape_program(&ok.graph, &prog, &device, ok.loop_kind)
+            .expect("512-wide sibling still stages");
+        let kernels = &ported.kernels;
+        assert!(kernels.iter().any(|k| k.name.starts_with("fs.gemm_epilogue.")));
+
+        let wide = gemm_epilogue_workload(2048);
+        assert!(reshape_program(&wide.graph, &prog, &device, wide.loop_kind).is_none());
     }
 
     #[test]
