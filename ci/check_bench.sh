@@ -2,17 +2,19 @@
 # Single source of truth for the fleet-bench CI gates.
 #
 # Usage:
-#   ci/check_bench.sh [BENCH_JSON] [BASELINE_JSON]
+#   ci/check_bench.sh [BENCH_JSON] [BASELINE_JSON] [EXPLORER_JSON]
 #       Run the structural gates (field presence, invariants that must
 #       hold on every run) and — when the baseline is seeded — the
 #       tolerance-banded trajectory gate against the committed
 #       baseline, so perf/hit-rate regressions fail the PR instead of
-#       silently drifting.
+#       silently drifting. When the explorer summary exists, the
+#       footprint-first pruning gates run over it too.
 #   ci/check_bench.sh --update-baseline [BENCH_JSON] [BASELINE_JSON]
 #       Re-seed the baseline from the current bench output (commit the
 #       result when a change legitimately moves the gated numbers).
 #
-# Defaults: BENCH_JSON=rust/BENCH_fleet.json, BASELINE_JSON=ci/bench_baseline.json.
+# Defaults: BENCH_JSON=rust/BENCH_fleet.json, BASELINE_JSON=ci/bench_baseline.json,
+# EXPLORER_JSON=rust/BENCH_explorer.json.
 # Runnable locally from the repo root: `cargo bench --bench production_fleet
 # -- 1000 --threads 2 --compile-shards 4 && ci/check_bench.sh`.
 set -euo pipefail
@@ -24,6 +26,7 @@ if [[ "${1:-}" == "--update-baseline" ]]; then
 fi
 BENCH="${1:-rust/BENCH_fleet.json}"
 BASELINE="${2:-ci/bench_baseline.json}"
+EXPLORER="${3:-rust/BENCH_explorer.json}"
 
 fail() {
   echo "check_bench: FAIL: $*" >&2
@@ -33,11 +36,15 @@ fail() {
 [[ -f "$BENCH" ]] || fail "bench summary $BENCH not found (run the production_fleet bench first)"
 command -v jq >/dev/null || fail "jq is required"
 
-assert() {
-  local desc="$1" expr="$2"
-  if ! jq -e "$expr" "$BENCH" >/dev/null; then
-    fail "$desc — jq assertion '$expr' did not hold on $BENCH"
+assert_in() {
+  local file="$1" desc="$2" expr="$3"
+  if ! jq -e "$expr" "$file" >/dev/null; then
+    fail "$desc — jq assertion '$expr' did not hold on $file"
   fi
+}
+
+assert() {
+  assert_in "$BENCH" "$@"
 }
 
 # ---------------------------------------------------------------------
@@ -94,6 +101,14 @@ assert "every bucket hit runs one retune" \
 assert "dynamic-shape run must never regress" '.dynamic_shapes.regressions == 0'
 assert "dynamic-shape decisions match virtual" \
   '.dynamic_shapes.matches_virtual_decisions == true'
+
+# Footprint-first pruning: the dynamic-shapes traffic carries one
+# footprint-probe family whose over-cap candidates must be discarded
+# before the beam — a zero means the bound stopped firing (or the
+# counter stopped riding published plans to the fleet report).
+assert "footprint pruning counter present" '.dynamic_shapes | has("footprint_pruned")'
+assert "footprint pruning must fire on dynamic traffic" \
+  '.dynamic_shapes.footprint_pruned > 0'
 
 # Flight recorder: recording must never perturb decisions (asserted
 # inside the bench by byte-comparing the stripped traced report), and
@@ -171,6 +186,30 @@ assert "bert absorption does not regress modeled latency" \
 assert "transformer absorption does not regress modeled latency" \
   '.absorption.transformer.e2e_ms_absorbed <= .absorption.transformer.e2e_ms_cut'
 
+# ---------------------------------------------------------------------
+# Explorer footprint gates: pruning must strictly shrink the candidate
+# sets on the probe workloads and must not regress the modeled latency
+# of the chosen plan (the bench itself asserts and aborts; these gates
+# also catch a summary emitted by a stale or truncated run). Soft-skip
+# when the explorer bench has not run — the fleet gates above are
+# independent of it.
+# ---------------------------------------------------------------------
+
+if [[ -f "$EXPLORER" ]]; then
+  assert_in "$EXPLORER" "explorer footprint section present" \
+    '(.footprint | length) > 0'
+  assert_in "$EXPLORER" "footprint pruning fires on every probe workload" \
+    'all(.footprint[]; .footprint_pruned > 0)'
+  assert_in "$EXPLORER" "pruning strictly shrinks the beam candidate sets" \
+    'all(.footprint[]; .candidates_pruned < .candidates_unpruned)'
+  assert_in "$EXPLORER" "pruned plans do not regress modeled latency" \
+    '.footprint_no_regression == true
+     and all(.footprint[]; .plan_us_pruned <= .plan_us_unpruned * 1.02 + 1e-9)'
+  echo "check_bench: explorer footprint gates OK ($EXPLORER)"
+else
+  echo "check_bench: WARNING: $EXPLORER not found — explorer footprint gates skipped" >&2
+fi
+
 echo "check_bench: structural gates OK ($BENCH)"
 
 # ---------------------------------------------------------------------
@@ -199,6 +238,11 @@ GATED_EXACT=(
   ".absorption.transformer.kernels_absorbed"
   ".absorption.transformer.kernels_cut"
 )
+# Counters where growth is a regression but shrinking is an
+# improvement: the gate is one-sided (actual must be <= baseline).
+GATED_NO_WORSE=(
+  ".dynamic_shapes.bucket_failures"
+)
 GATED_BANDED=(
   ".report.compile_p50_ms"
   ".report.compile_p99_ms"
@@ -221,7 +265,7 @@ extract_baseline() {
     echo '  "note": "Gated fleet-bench trajectory. Re-seed with ci/check_bench.sh --update-baseline when a change legitimately moves these numbers, and say why in the PR.",'
     echo '  "values": {'
     local first=1
-    for path in "${GATED_EXACT[@]}" "${GATED_BANDED[@]}"; do
+    for path in "${GATED_EXACT[@]}" "${GATED_NO_WORSE[@]}" "${GATED_BANDED[@]}"; do
       local val
       val=$(jq "$path" "$BENCH")
       [[ "$val" == "null" ]] && fail "cannot seed baseline: $path missing from $BENCH"
@@ -264,6 +308,20 @@ for path in "${GATED_EXACT[@]}"; do
   fi
   if [[ "$actual" != "$expected" ]]; then
     echo "check_bench: FAIL: $path = $actual, baseline $expected (exact match required)" >&2
+    failures=$((failures + 1))
+  fi
+done
+
+for path in "${GATED_NO_WORSE[@]}"; do
+  expected=$(jq -r --arg p "$path" '.values[$p]' "$BASELINE")
+  actual=$(jq -r "$path" "$BENCH")
+  if [[ "$expected" == "null" ]]; then
+    echo "check_bench: WARNING: $path not in baseline (stale baseline? re-seed)" >&2
+    continue
+  fi
+  worse=$(awk -v a="$actual" -v e="$expected" 'BEGIN { print (a > e) ? "true" : "false" }')
+  if [[ "$worse" == "true" ]]; then
+    echo "check_bench: FAIL: $path = $actual grew past baseline $expected (shrinking is fine)" >&2
     failures=$((failures + 1))
   fi
 done

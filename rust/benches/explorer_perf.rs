@@ -184,6 +184,72 @@ fn main() {
     }
     println!("{}", t2.render());
 
+    // ---- footprint pruning: pruned vs unpruned candidates --------------
+    // The footprint bound discards hard-infeasible combinations before
+    // they reach the beam. On shapes whose loss tails stage more than a
+    // block's shared-memory cap, pruning must strictly shrink the
+    // candidate sets without regressing the modeled latency of the
+    // chosen plan (infeasible winners were always rejected later; the
+    // bound just rejects them earlier and cheaper).
+    println!("== footprint pruning: pruned vs unpruned candidates ==\n");
+    let mut tf = Table::new(vec![
+        "workload", "cands pruned", "cands unpruned", "dropped", "ms pruned", "ms unpruned",
+    ]);
+    let mut footprint_json: Vec<JsonValue> = Vec::new();
+    let mut footprint_no_regression = true;
+    let unpruned_opts = ExploreOptions { footprint_prune: false, ..ExploreOptions::default() };
+    let probes: Vec<workloads::Workload> = vec![
+        workloads::models::bert_with(Mode::Train, 32, 512),
+        workloads::models::transformer_with(128, 128),
+    ];
+    for w in &probes {
+        let g = &w.graph;
+        let count = |o: &ExploreOptions| {
+            let (sets, stats) = explorer::candidate_patterns_with_stats(g, &device, o, None);
+            let eligible = sets.iter().flatten().filter(|sp| sp.pattern.len() >= 2).count();
+            (eligible, stats)
+        };
+        let (pruned_cands, pruned_stats) = count(&opts);
+        let (unpruned_cands, _) = count(&unpruned_opts);
+        assert!(
+            pruned_stats.footprint_pruned > 0 && pruned_cands < unpruned_cands,
+            "{}: footprint pruning must strictly shrink the candidate sets",
+            w.key()
+        );
+        let pruned_wall = bench_loop(1, 3, || explorer::explore(g, &device, &opts));
+        let unpruned_wall = bench_loop(1, 3, || explorer::explore(g, &device, &unpruned_opts));
+        let plan_pruned = explorer::explore(g, &device, &opts);
+        let plan_unpruned = explorer::explore(g, &device, &unpruned_opts);
+        let model = DeltaModel::new(g, device.clone());
+        let lat_pruned = model.plan_time_us(&plan_pruned.kernels(g));
+        let lat_unpruned = model.plan_time_us(&plan_unpruned.kernels(g));
+        footprint_no_regression &= lat_pruned <= lat_unpruned * 1.02 + 1e-9;
+        assert!(
+            footprint_no_regression,
+            "{}: pruned plan {lat_pruned:.2} µs regressed vs unpruned {lat_unpruned:.2} µs",
+            w.key()
+        );
+        tf.row(vec![
+            w.key(),
+            pruned_cands.to_string(),
+            unpruned_cands.to_string(),
+            pruned_stats.footprint_pruned.to_string(),
+            format!("{:.2}", pruned_wall.mean_ms()),
+            format!("{:.2}", unpruned_wall.mean_ms()),
+        ]);
+        let mut row = JsonValue::obj();
+        row.set("workload", w.key())
+            .set("candidates_pruned", pruned_cands)
+            .set("candidates_unpruned", unpruned_cands)
+            .set("footprint_pruned", pruned_stats.footprint_pruned)
+            .set("explore_ms_pruned", pruned_wall.mean_ms())
+            .set("explore_ms_unpruned", unpruned_wall.mean_ms())
+            .set("plan_us_pruned", lat_pruned)
+            .set("plan_us_unpruned", lat_unpruned);
+        footprint_json.push(row);
+    }
+    println!("{}", tf.render());
+
     // ---- codegen tuner on the biggest pattern --------------------------
     let w = workloads::models::bert(Mode::Infer);
     let plan = explorer::explore(&w.graph, &device, &opts);
@@ -207,7 +273,9 @@ fn main() {
         .set("synthetic", JsonValue::Arr(synthetic_json))
         .set("delta_hot_path", JsonValue::Arr(delta_json))
         .set("partitioned", JsonValue::Arr(partitioned_json))
-        .set("workloads", JsonValue::Arr(workloads_json));
+        .set("workloads", JsonValue::Arr(workloads_json))
+        .set("footprint_no_regression", footprint_no_regression)
+        .set("footprint", JsonValue::Arr(footprint_json));
     let path = "BENCH_explorer.json";
     match std::fs::write(path, out.to_pretty()) {
         Ok(()) => println!("wrote {path}"),

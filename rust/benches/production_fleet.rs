@@ -62,7 +62,8 @@
 use fusion_stitching::explorer::regions;
 use fusion_stitching::fleet::{
     build_template_families, build_templates, generate_trace, DeviceRegistry, ExecutorKind,
-    FleetOptions, FleetReport, FleetService, ShardedFleetService, TrafficConfig,
+    FleetOptions, FleetReport, FleetService, ModelFamily, ShardedFleetService, TemplateFamily,
+    TrafficConfig,
 };
 use fusion_stitching::obs::{chrome_trace, TraceDump};
 use fusion_stitching::util::JsonValue;
@@ -113,7 +114,13 @@ fn run_traced(
 }
 
 fn run_dynamic(traffic: &TrafficConfig, executor: ExecutorKind) -> FleetReport {
-    let families = build_template_families(traffic);
+    let mut families = build_template_families(traffic);
+    // One template is the deterministic footprint probe: its wide
+    // softmax-style tail guarantees every exploration of it discards an
+    // over-cap candidate, so the `footprint_pruned` gate has signal
+    // under any traffic seed (the synthetic families' dims all fit the
+    // per-block cap comfortably).
+    families[0] = TemplateFamily::Model(ModelFamily::FootprintProbe);
     let trace = generate_trace(traffic);
     let opts = FleetOptions { executor, ..base_options() };
     let mut svc = FleetService::with_families(opts, families);
@@ -248,6 +255,7 @@ fn main() {
             r.port_failures,
             r.fs_vetoes,
             r.shard_jobs,
+            r.footprint_pruned,
         )
     };
     assert_eq!(
@@ -390,6 +398,11 @@ fn main() {
     );
     assert!(dynamic.bucket_hits > 0, "sibling shapes must reuse plans via the bucket tier");
     assert!(
+        dynamic.footprint_pruned > 0,
+        "the footprint probe's over-cap candidates must be pruned before the beam"
+    );
+    assert_eq!(dyn_wall.footprint_pruned, dynamic.footprint_pruned);
+    assert!(
         dynamic.explore_jobs < dynamic.distinct_shapes,
         "full explorations ({}) must be strictly sublinear in distinct shapes ({})",
         dynamic.explore_jobs,
@@ -401,7 +414,7 @@ fn main() {
     println!(
         "dynamic shapes: {} tasks over {} distinct graphs in {} buckets; \
          {} explorations + {} ports + {} shape retunes ({} failed); \
-         bucket-hit rate {:.1}%; saved {:.1}%",
+         {} footprint-pruned candidates; bucket-hit rate {:.1}%; saved {:.1}%",
         dyn_traffic.tasks,
         dynamic.distinct_shapes,
         dynamic.distinct_buckets,
@@ -409,6 +422,7 @@ fn main() {
         dynamic.port_jobs,
         dynamic.bucket_retunes,
         dynamic.bucket_failures,
+        dynamic.footprint_pruned,
         bucket_hit_rate * 100.0,
         dynamic.saved_frac() * 100.0
     );
@@ -562,6 +576,7 @@ fn main() {
         .set("port_jobs", dynamic.port_jobs)
         .set("bucket_retunes", dynamic.bucket_retunes)
         .set("bucket_failures", dynamic.bucket_failures)
+        .set("footprint_pruned", dynamic.footprint_pruned)
         .set("bucket_hit_rate", bucket_hit_rate)
         .set(
             "explores_per_distinct_shape",

@@ -117,7 +117,7 @@ pub fn plan_with_limit(graph: &Graph, max_fusion_size: usize) -> FusionPlan {
         .collect();
     // Baseline personalities never absorb anchors: cut behavior stays
     // bit-stable.
-    FusionPlan { patterns, absorbed: Vec::new() }
+    FusionPlan { patterns, ..Default::default() }
 }
 
 #[cfg(test)]

@@ -46,6 +46,11 @@ pub struct KernelSample {
     /// Simulator device time plus the host runtime's per-kernel
     /// dispatch charge (the regression's y).
     pub measured_us: f64,
+    /// Shared-memory request as a fraction of the per-block cap
+    /// ([`super::shmem::block_cap`]) — the regressor for the
+    /// footprint→occupancy interaction: kernels crowding the cap run at
+    /// depressed occupancy in ways the affine (a, b) map cannot express.
+    pub footprint_frac: f64,
 }
 
 /// One whole-program observation (for the per-iteration residual).
@@ -109,10 +114,15 @@ fn measured_kernel_us(sim: &Simulator, k: &KernelSpec, loop_kind: LoopKind) -> f
 /// `params`: per-kernel analytic time plus the per-launch overhead,
 /// plus the calibrated per-iteration base.
 pub fn predict_iter_ms(spec: &DeviceSpec, prog: &OptimizedProgram, params: &CostParams) -> f64 {
+    let cap = super::shmem::block_cap(spec);
     let kernel_us: f64 = prog
         .kernels
         .iter()
-        .map(|k| model_kernel_us(spec, k, params) + params.launch_overhead_us)
+        .map(|k| {
+            model_kernel_us(spec, k, params)
+                + params.launch_overhead_us
+                + params.footprint_pressure_charge_us(k.shmem_per_block, cap)
+        })
         .sum();
     (kernel_us + params.iter_overhead_us) / 1e3
 }
@@ -137,21 +147,36 @@ pub fn program_samples(
 ) -> Vec<KernelSample> {
     let base = CostParams::default();
     let sim = Simulator::new(spec.clone(), SimConfig::xla_runtime());
+    let cap = super::shmem::block_cap(spec) as f64;
     prog.kernels
         .iter()
         .map(|k| KernelSample {
             modeled_us: model_kernel_us(spec, k, &base),
             measured_us: measured_kernel_us(&sim, k, loop_kind),
+            footprint_frac: k.shmem_per_block as f64 / cap.max(1.0),
         })
         .filter(|s| s.modeled_us < 1e11)
         .collect()
 }
 
-/// Median |a + b·x − y| / y over the samples.
-fn median_abs_rel_err(samples: &[KernelSample], intercept: f64, slope: f64) -> f64 {
+/// Median |a + b·x + fp·max(0, frac − knee) − y| / y over the samples:
+/// the calibration error functional. The footprint surcharge mirrors
+/// [`CostParams::footprint_pressure_charge_us`] so the no-worse gate,
+/// the fitted pressure term and [`Calibrator::drift`] all judge the
+/// same prediction.
+fn median_abs_rel_err(
+    samples: &[KernelSample],
+    intercept: f64,
+    slope: f64,
+    pressure: f64,
+    knee: f64,
+) -> f64 {
     let errs: Vec<f64> = samples
         .iter()
-        .map(|s| (intercept + slope * s.modeled_us - s.measured_us).abs() / s.measured_us.max(1e-9))
+        .map(|s| {
+            let fp = pressure * (s.footprint_frac - knee).max(0.0);
+            (intercept + slope * s.modeled_us + fp - s.measured_us).abs() / s.measured_us.max(1e-9)
+        })
         .collect();
     median(&errs)
 }
@@ -259,18 +284,53 @@ impl Calibrator {
             return;
         }
         let base = CostParams::default();
+        let knee = base.footprint_knee;
         let (a_fit, b_fit) = theil_sen(&state.kernels);
         let (a_fit, b_fit) = (a_fit.clamp(0.5, 60.0), b_fit.clamp(0.25, 4.0));
-        // Keep the fit only when it beats the defaults on the very
-        // samples it was fitted from — the no-worse drift gate.
-        let fit_err = median_abs_rel_err(&state.kernels, a_fit, b_fit);
-        let def_err = median_abs_rel_err(&state.kernels, base.launch_overhead_us, 1.0);
-        let (a, b) = if fit_err <= def_err {
-            (a_fit, b_fit)
+        // Footprint→occupancy interaction: fit the per-excess-fraction
+        // surcharge from the above-knee residuals of the affine fit
+        // (median residual per unit of cap excess — Theil–Sen-flavored
+        // and deterministic like the rest of the fit).
+        let hot: Vec<&KernelSample> =
+            state.kernels.iter().filter(|s| s.footprint_frac > knee).collect();
+        let fp_fit = if hot.is_empty() {
+            base.footprint_pressure_us
         } else {
-            (base.launch_overhead_us, 1.0)
+            let per_excess: Vec<f64> = hot
+                .iter()
+                .map(|s| {
+                    (s.measured_us - (a_fit + b_fit * s.modeled_us)) / (s.footprint_frac - knee)
+                })
+                .collect();
+            median(&per_excess).clamp(0.0, 64.0)
         };
-        let mut p = CostParams { launch_overhead_us: a, time_scale: b, ..base };
+        // Keep a fit only when it beats the defaults on the very samples
+        // it was fitted from — the no-worse drift gate. The fitted
+        // pressure term additionally has to beat the default pressure
+        // under the same (a, b), or it is discarded on its own.
+        let def_err = median_abs_rel_err(
+            &state.kernels,
+            base.launch_overhead_us,
+            1.0,
+            base.footprint_pressure_us,
+            knee,
+        );
+        let fit_err = median_abs_rel_err(&state.kernels, a_fit, b_fit, fp_fit, knee);
+        let fit_err_base_fp =
+            median_abs_rel_err(&state.kernels, a_fit, b_fit, base.footprint_pressure_us, knee);
+        let (a, b, fp) = if fit_err <= def_err && fit_err <= fit_err_base_fp {
+            (a_fit, b_fit, fp_fit)
+        } else if fit_err_base_fp <= def_err {
+            (a_fit, b_fit, base.footprint_pressure_us)
+        } else {
+            (base.launch_overhead_us, 1.0, base.footprint_pressure_us)
+        };
+        let mut p = CostParams {
+            launch_overhead_us: a,
+            time_scale: b,
+            footprint_pressure_us: fp,
+            ..base
+        };
         if !state.graphs.is_empty() {
             let residuals: Vec<f64> = state
                 .graphs
@@ -309,12 +369,20 @@ impl Calibrator {
             }
             let n = state.kernels.len();
             let base = CostParams::default();
-            let b = median_abs_rel_err(&state.kernels, base.launch_overhead_us, 1.0);
+            let b = median_abs_rel_err(
+                &state.kernels,
+                base.launch_overhead_us,
+                1.0,
+                base.footprint_pressure_us,
+                base.footprint_knee,
+            );
             let a = if state.fitted {
                 median_abs_rel_err(
                     &state.kernels,
                     state.params.launch_overhead_us,
                     state.params.time_scale,
+                    state.params.footprint_pressure_us,
+                    state.params.footprint_knee,
                 )
             } else {
                 b
@@ -348,15 +416,55 @@ mod tests {
         let mut samples: Vec<KernelSample> = (1..=40)
             .map(|i| {
                 let x = i as f64;
-                KernelSample { modeled_us: x, measured_us: 3.0 + 1.5 * x }
+                KernelSample { modeled_us: x, measured_us: 3.0 + 1.5 * x, footprint_frac: 0.0 }
             })
             .collect();
         // A few wild outliers must not move the medians.
-        samples.push(KernelSample { modeled_us: 10.0, measured_us: 500.0 });
-        samples.push(KernelSample { modeled_us: 20.0, measured_us: 0.1 });
+        samples.push(KernelSample { modeled_us: 10.0, measured_us: 500.0, footprint_frac: 0.0 });
+        samples.push(KernelSample { modeled_us: 20.0, measured_us: 0.1, footprint_frac: 0.0 });
         let (a, b) = theil_sen(&samples);
         assert!((b - 1.5).abs() < 0.05, "slope {b}");
         assert!((a - 3.0).abs() < 0.5, "intercept {a}");
+    }
+
+    /// The footprint→occupancy interaction fit: a kernel population
+    /// whose ground truth carries a surcharge proportional to how far
+    /// the shmem request crowds past the knee must come back with the
+    /// surcharge in `footprint_pressure_us` — and the affine part of
+    /// the fit must not be polluted by it.
+    #[test]
+    fn calibration_learns_footprint_pressure_from_hot_residuals() {
+        let base = CostParams::default();
+        let knee = base.footprint_knee;
+        // 30 cool samples on y = 2 + x, then 10 hot ones (frac = 1.0)
+        // carrying a 20 µs/excess-fraction surcharge: +20·(1.0 − knee).
+        let mut samples: Vec<KernelSample> = (1..=30)
+            .map(|i| {
+                let x = i as f64;
+                KernelSample { modeled_us: x, measured_us: 2.0 + x, footprint_frac: 0.2 }
+            })
+            .collect();
+        samples.extend((31..=40).map(|i| {
+            let x = i as f64;
+            KernelSample {
+                modeled_us: x,
+                measured_us: 2.0 + x + 20.0 * (1.0 - knee),
+                footprint_frac: 1.0,
+            }
+        }));
+        let mut cal = Calibrator::new(8, 4096);
+        cal.record("V100", samples, 0.0);
+        assert!(cal.is_fitted("V100"));
+        let p = cal.params_for("V100");
+        assert!((p.time_scale - 1.0).abs() < 0.05, "slope {}", p.time_scale);
+        assert!((p.launch_overhead_us - 2.0).abs() < 0.5, "intercept {}", p.launch_overhead_us);
+        assert!(
+            (p.footprint_pressure_us - 20.0).abs() < 1.0,
+            "pressure {}",
+            p.footprint_pressure_us
+        );
+        let d = cal.drift();
+        assert!(d.after < d.before, "pressure fit must shrink error: {d:?}");
     }
 
     #[test]

@@ -268,14 +268,15 @@ pub fn estimate_kernel(
 
     // ---- resources -----------------------------------------------------
     let shmem_alloc = shmem::allocate(graph, pattern, &shmem_requests);
-    if shmem_alloc.total_bytes > device.shmem_per_block {
-        return None;
-    }
     let regs = estimate_registers(graph, pattern);
-    let occupancy = device.occupancy(launch.block_threads, regs, shmem_alloc.total_bytes);
-    if occupancy == 0.0 {
+    // One feasibility authority for the whole stack: the same engine
+    // predicate the absorption pass (`epilogue_feasible`) and the
+    // explorer's footprint pruning consult — per-block cap plus
+    // launchability at this schedule's actual launch shape.
+    if !shmem::footprint_feasible(device, launch.block_threads, regs, shmem_alloc.total_bytes) {
         return None;
     }
+    let occupancy = device.occupancy(launch.block_threads, regs, shmem_alloc.total_bytes);
 
     // ---- traffic ---------------------------------------------------------
     let mut bytes_read = 0usize;

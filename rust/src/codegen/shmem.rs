@@ -8,7 +8,9 @@
 //! lets a later request take over a buffer whose value is already dead
 //! (fully consumed along every path reaching the current op).
 
+use crate::gpu::DeviceSpec;
 use crate::graph::{Graph, NodeId};
+use crate::util::IdMask;
 
 /// One shared-memory request: `owner` (a block-reuse sub-root) needs
 /// `bytes` from its definition until its last in-pattern consumer.
@@ -115,6 +117,96 @@ fn align(bytes: usize) -> usize {
     bytes.div_ceil(128) * 128 // 128-byte banks-friendly alignment
 }
 
+// ---- the footprint engine ----------------------------------------------
+//
+// Every capacity question in the stack funnels through the three
+// functions below: the delta evaluator's candidate pruning, the beam's
+// defense-in-depth filter, the tuner's launchability guard and the
+// absorption pass's `epilogue_feasible` all consult the same per-block
+// cap and the same occupancy model instead of keeping private copies.
+
+/// Per-block shared-memory capacity of `device` — the single source of
+/// truth for the hard cap (48 KB on every spec shipped here).
+pub fn block_cap(device: &DeviceSpec) -> usize {
+    device.shmem_per_block
+}
+
+/// True when a `bytes` request respects the per-block hardware cap.
+pub fn fits_block_cap(device: &DeviceSpec, bytes: usize) -> bool {
+    bytes <= block_cap(device)
+}
+
+/// Full launchability of a `bytes` shared-memory footprint at the given
+/// launch shape: within the per-block cap *and* the kernel still
+/// achieves non-zero occupancy. This is the one predicate both the
+/// tuner's guard and [`epilogue_feasible`] reduce to.
+pub fn footprint_feasible(
+    device: &DeviceSpec,
+    threads_per_block: usize,
+    regs_per_thread: usize,
+    bytes: usize,
+) -> bool {
+    fits_block_cap(device, bytes)
+        && device.occupancy(threads_per_block, regs_per_thread, bytes) > 0.0
+}
+
+/// Intermediate-buffer footprint bound of a fusion pattern under the
+/// delta evaluator's §5.4 simplifications: every internal expensive
+/// producer (reduction / expensive elementwise with an in-pattern
+/// consumer) is assumed block-composed and stages one row of its output
+/// in shared memory.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PatternFootprint {
+    /// Largest single per-row staging request, bytes — the hard-
+    /// feasibility bound (matches the delta model's max-single-request
+    /// shmem shortcut, so pruning on it is exactly the old occupancy-
+    /// zero filter moved before scoring).
+    pub max_request_bytes: usize,
+    /// Sum of all per-row staging requests, bytes — the soft-pressure
+    /// signal (ignores lifetime sharing, so it upper-bounds what
+    /// [`allocate`] will pack at tune time).
+    pub staged_sum_bytes: usize,
+}
+
+impl PatternFootprint {
+    /// Hard feasibility against the per-block cap.
+    pub fn fits(&self, device: &DeviceSpec) -> bool {
+        fits_block_cap(device, self.max_request_bytes)
+    }
+}
+
+/// Per-row staging bytes of one sub-root's output at `rows` kernel rows
+/// (the quantity both the delta evaluator and the tuner's block-reuse
+/// request derive from).
+pub fn per_row_staging_bytes(graph: &Graph, id: NodeId, rows: usize) -> usize {
+    let node = graph.node(id);
+    (node.num_elements() / rows.max(1)).max(1) * node.dtype.size_bytes()
+}
+
+/// Compute a pattern's [`PatternFootprint`] incrementally from its
+/// membership bitset (`member` must cover exactly `pattern`'s ids).
+pub fn pattern_footprint(
+    graph: &Graph,
+    pattern: &[NodeId],
+    rows: usize,
+    member: &IdMask,
+) -> PatternFootprint {
+    let mut fp = PatternFootprint::default();
+    for &id in pattern {
+        let node = graph.node(id);
+        if !node.kind.is_expensive_producer() {
+            continue;
+        }
+        let internal = graph.consumers(id).iter().any(|c| member.contains(c.idx()));
+        if internal {
+            let per_row = per_row_staging_bytes(graph, id, rows);
+            fp.max_request_bytes = fp.max_request_bytes.max(per_row);
+            fp.staged_sum_bytes += per_row;
+        }
+    }
+    fp
+}
+
 /// Rows of the boundary tensor the `GemmEpilogue` hand-off stages per
 /// block: one row per warp at the scheme's fixed 256-thread block.
 pub const EPILOGUE_ROWS_PER_BLOCK: usize = 8;
@@ -131,9 +223,12 @@ pub fn epilogue_staging_bytes(row_elems: usize, elem_bytes: usize) -> usize {
 /// Tune-time feasibility of the `GemmEpilogue` hand-off on `device`:
 /// the staged tile must respect the per-block shared-memory cap and the
 /// combined kernel must still be launchable at the scheme's fixed
-/// 256-thread block. When this fails the plan lowers in its cut form.
-pub fn epilogue_feasible(device: &crate::gpu::DeviceSpec, staging_bytes: usize) -> bool {
-    staging_bytes <= device.shmem_per_block && device.occupancy(256, 32, staging_bytes) > 0.0
+/// 256-thread block (32 registers covering anchor tile + epilogue
+/// temps). A thin wrapper over [`footprint_feasible`] so absorption and
+/// the tuner agree byte-for-byte at the cap. When this fails the plan
+/// lowers in its cut form.
+pub fn epilogue_feasible(device: &DeviceSpec, staging_bytes: usize) -> bool {
+    footprint_feasible(device, 256, 32, staging_bytes)
 }
 
 #[cfg(test)]
@@ -198,6 +293,74 @@ mod tests {
             &[ShmemRequest { owner: a, bytes: 100 }],
         );
         assert_eq!(alloc.total_bytes, 128);
+    }
+
+    /// Satellite regression: a request at exactly the per-block cap is
+    /// treated identically by every caller of the footprint engine —
+    /// the absorption pass (`epilogue_feasible`) and the tuner's guard
+    /// (`footprint_feasible` at the tuned launch shape) must agree at
+    /// the boundary, one byte over must flip both.
+    #[test]
+    fn exactly_at_cap_is_feasible_for_every_caller() {
+        for d in [
+            crate::gpu::DeviceSpec::v100(),
+            crate::gpu::DeviceSpec::t4(),
+            crate::gpu::DeviceSpec::a100(),
+        ] {
+            let cap = block_cap(&d);
+            assert!(fits_block_cap(&d, cap));
+            assert!(!fits_block_cap(&d, cap + 1));
+            // Absorption's view (fixed 256-thread / 32-reg scheme)...
+            assert!(epilogue_feasible(&d, cap), "{}", d.name);
+            assert!(!epilogue_feasible(&d, cap + 1), "{}", d.name);
+            // ...and the tuner's view at the same launch shape agree.
+            assert_eq!(
+                epilogue_feasible(&d, cap),
+                footprint_feasible(&d, 256, 32, cap),
+                "{}",
+                d.name
+            );
+            assert_eq!(
+                epilogue_feasible(&d, cap + 1),
+                footprint_feasible(&d, 256, 32, cap + 1),
+                "{}",
+                d.name
+            );
+            // The delta evaluator's launch shape (256 threads, 16 regs)
+            // draws the line at the same byte.
+            assert!(footprint_feasible(&d, 256, 16, cap));
+            assert!(!footprint_feasible(&d, 256, 16, cap + 1));
+        }
+    }
+
+    #[test]
+    fn pattern_footprint_tracks_internal_expensive_producers() {
+        use crate::graph::ReduceOp;
+        // exp → reduce → abs: the reduce is an internal expensive
+        // producer (its consumer `abs` is in-pattern); exp's consumer is
+        // also internal and exp is an ExpensiveElementwise producer.
+        let mut g = Graph::new("fp");
+        let p = g.param(Shape::new(vec![64, 256]), DType::F32, "p");
+        let e = g.unary(OpKind::Exp, p, "e");
+        let r = g.reduce(ReduceOp::Sum, e, vec![1], "r");
+        let a = g.unary(OpKind::Abs, r, "a");
+        let pattern = vec![e, r, a];
+        let member =
+            IdMask::from_ids(g.len(), pattern.iter().map(|id| id.idx()));
+        let (rows, _) = crate::codegen::latency::pattern_rows(&g, &pattern);
+        let fp = pattern_footprint(&g, &pattern, rows, &member);
+        // e: 64×256 elems / 64 rows = 256 × 4 B = 1024 B per row;
+        // r: 64 elems / 64 rows = 1 × 4 B = 4 B per row.
+        assert_eq!(fp.max_request_bytes, 1024);
+        assert_eq!(fp.staged_sum_bytes, 1024 + 4);
+        assert!(fp.fits(&crate::gpu::DeviceSpec::v100()));
+        // With the tail consumer excluded the reduce has no in-pattern
+        // consumer: only exp stages.
+        let pattern2 = vec![e, r];
+        let member2 =
+            IdMask::from_ids(g.len(), pattern2.iter().map(|id| id.idx()));
+        let fp2 = pattern_footprint(&g, &pattern2, rows, &member2);
+        assert_eq!(fp2.staged_sum_bytes, 1024);
     }
 
     #[test]

@@ -135,7 +135,7 @@ impl PlanStore {
                 return None;
             }
         }
-        let plan = FusionPlan { patterns, absorbed };
+        let plan = FusionPlan { patterns, absorbed, footprint_pruned: 0 };
         if !plan.is_disjoint() {
             return None;
         }

@@ -248,7 +248,7 @@ mod tests {
         let relu = g.unary(OpKind::Relu, add, "relu");
         let plan = FusionPlan {
             patterns: vec![FusionPattern::new(vec![bb, add, relu])],
-            absorbed: Vec::new(),
+            ..Default::default()
         };
         (g, mm, plan)
     }
@@ -325,7 +325,7 @@ mod tests {
         let _ = mm;
         let plan = FusionPlan {
             patterns: vec![FusionPattern::new(vec![e, n])],
-            absorbed: Vec::new(),
+            ..Default::default()
         };
         let device = DeviceSpec::v100();
         let opts = ExploreOptions::default();
@@ -351,7 +351,7 @@ mod tests {
         let _leak = g2.unary(OpKind::Abs, n, "leak");
         let plan2 = FusionPlan {
             patterns: vec![FusionPattern::new(vec![e, n])],
-            absorbed: Vec::new(),
+            ..Default::default()
         };
         let out2 = absorb_anchors(&g2, &device, plan2, &opts);
         assert!(out2.absorbed.is_empty());
@@ -383,7 +383,7 @@ mod tests {
         );
         let plan = FusionPlan {
             patterns: vec![FusionPattern::new(vec![gelu, neg])],
-            absorbed: Vec::new(),
+            ..Default::default()
         };
         let out = absorb_anchors(&g, &DeviceSpec::v100(), plan, &ExploreOptions::default());
         let boundaries = out.absorbed_boundaries();

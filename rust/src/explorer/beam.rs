@@ -22,11 +22,23 @@ pub struct BeamOptions {
     /// Cost constants for the final accurate-model selection among the
     /// finished beams.
     pub cost: crate::gpu::CostParams,
+    /// Defense-in-depth footprint filter (default on, mirroring
+    /// [`super::candidates::ExploreOptions::footprint_prune`]): a
+    /// candidate whose intermediate-footprint bound cannot launch never
+    /// expands a beam state, and each rejection is counted on the
+    /// resulting plan. With DP-level pruning on this filters nothing —
+    /// the candidate sets are already clean — but it keeps the beam
+    /// sound for callers feeding it hand-built candidate sets.
+    pub footprint_prune: bool,
 }
 
 impl Default for BeamOptions {
     fn default() -> Self {
-        BeamOptions { width: 3, cost: crate::gpu::CostParams::default() }
+        BeamOptions {
+            width: 3,
+            cost: crate::gpu::CostParams::default(),
+            footprint_prune: true,
+        }
     }
 }
 
@@ -133,6 +145,13 @@ pub fn compose_plan(
     opts: &BeamOptions,
 ) -> FusionPlan {
     let mut beams = vec![BufferSet::new(graph.len())];
+    // Capacity enforcement tracks the prune flag so the unpruned
+    // ablation's final selection stays optimistic end-to-end (an
+    // over-cap pattern must not be vetoed here either — that happens at
+    // accurate-model pruning time in that world).
+    let model = DeltaModel::with_params(graph, device.clone(), opts.cost)
+        .with_capacity_enforcement(opts.footprint_prune);
+    let mut footprint_pruned = 0usize;
 
     // Producer→consumer order = forward topological order.
     for &v in graph.topo_order().iter() {
@@ -140,16 +159,34 @@ pub fn compose_plan(
         if cands.is_empty() {
             continue;
         }
+        // Defense-in-depth footprint filter, applied once per vertex
+        // (not per beam fork, which would over-count): a candidate the
+        // DP should already have pruned never expands a state.
+        let admitted: Vec<&super::candidates::ScoredPattern> = cands
+            .iter()
+            .filter(|sc| {
+                // Only multi-op, positive-score patterns improve a plan.
+                if sc.pattern.len() < 2 || sc.score <= 0.0 {
+                    return false;
+                }
+                if opts.footprint_prune
+                    && !model.pattern_footprint_feasible(sc.pattern.nodes())
+                {
+                    footprint_pruned += 1;
+                    return false;
+                }
+                true
+            })
+            .collect();
+        if admitted.is_empty() {
+            continue;
+        }
         // Move the current beams in as the "skip this vertex" option —
         // appends fork from them by (cheap, structurally-shared) clone.
         let mut next: Vec<BufferSet> = std::mem::take(&mut beams);
         let skip_count = next.len();
         for bi in 0..skip_count {
-            for sc in cands {
-                // Only multi-op, positive-score patterns improve a plan.
-                if sc.pattern.len() < 2 || sc.score <= 0.0 {
-                    continue;
-                }
+            for sc in &admitted {
                 if next[bi].overlaps(&sc.pattern) {
                     continue;
                 }
@@ -168,16 +205,16 @@ pub fn compose_plan(
     // Final selection among the beam's plans with the accurate model:
     // total simplified kernel time over the *whole* kernel list (the
     // paper's latency-evaluator pass over candidate plans).
-    let model = DeltaModel::with_params(graph, device.clone(), opts.cost);
-    let best = beams
+    let mut best = beams
         .into_iter()
-        .map(|b| FusionPlan { patterns: b.into_patterns(), absorbed: Vec::new() })
+        .map(|b| FusionPlan { patterns: b.into_patterns(), ..Default::default() })
         .min_by(|a, b| {
             let ta = model.plan_time_us(&a.kernels(graph));
             let tb = model.plan_time_us(&b.kernels(graph));
             ta.partial_cmp(&tb).unwrap_or(std::cmp::Ordering::Equal)
         })
         .unwrap_or_default();
+    best.footprint_pruned = footprint_pruned;
     debug_assert!(best.is_disjoint());
     best
 }
@@ -268,6 +305,34 @@ mod tests {
         // Exactly one survivor per coverage set, and it is the best one.
         assert_eq!(fixed.iter().filter(|s| s.covered == vec![0b0011]).count(), 1);
         assert!(fixed.iter().any(|s| s.covered == vec![0b0011] && s.score == 4.0));
+    }
+
+    /// Defense-in-depth: even when a hand-built candidate set smuggles
+    /// an over-cap pattern past the DP, the beam refuses to expand with
+    /// it and counts the rejection on the plan.
+    #[test]
+    fn beam_filters_infeasible_candidates_and_counts() {
+        use crate::explorer::candidates::ScoredPattern;
+        use crate::graph::ReduceOp;
+        let mut g = Graph::new("wide");
+        let x = g.param(Shape::new(vec![64, 16384]), DType::F32, "x");
+        let e = g.unary(crate::graph::OpKind::Exp, x, "e");
+        let r = g.reduce(ReduceOp::Sum, e, vec![1], "r");
+        let device = DeviceSpec::v100();
+        // Hand the beam an over-cap pattern with a falsely great score.
+        let mut cands: CandidateSets = vec![Vec::new(); g.len()];
+        cands[e.idx()].push(ScoredPattern {
+            pattern: FusionPattern::new(vec![e, r]),
+            score: 100.0,
+        });
+        let plan = compose_plan(&g, &device, &cands, &BeamOptions::default());
+        assert!(plan.patterns.is_empty(), "over-cap pattern must not compose");
+        assert_eq!(plan.footprint_pruned, 1);
+        // With the filter off (unpruned ablation) the pattern composes.
+        let open = BeamOptions { footprint_prune: false, ..Default::default() };
+        let plan = compose_plan(&g, &device, &cands, &open);
+        assert_eq!(plan.patterns.len(), 1);
+        assert_eq!(plan.footprint_pruned, 0);
     }
 
     #[test]

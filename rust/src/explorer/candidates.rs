@@ -44,6 +44,16 @@ pub struct ExploreOptions {
     /// Off for dynamic-loop bodies (the per-iteration re-dispatch defeats
     /// the hand-off) and for the baseline personalities.
     pub absorb_anchors: bool,
+    /// Footprint-first hard pruning (default on): DP combinations whose
+    /// intermediate-footprint bound cannot launch are discarded *before*
+    /// scoring (and counted), and the beam re-checks every candidate it
+    /// admits. Off = the unpruned ablation: the delta model scores
+    /// over-cap patterns optimistically and their infeasibility is only
+    /// discovered by the accurate-model pruning at tune time — the
+    /// pre-refactor world `explorer_perf`'s footprint section measures
+    /// against. Plan-equivalent when on: the hard bound is exactly the
+    /// old occupancy-zero score filter, applied earlier.
+    pub footprint_prune: bool,
     /// Cost-model constants every scoring pass of this exploration uses
     /// (delta evaluator, beam selection, accurate-model pruning, launch
     /// tuning at lowering). Defaults reproduce the historical hard-coded
@@ -62,9 +72,21 @@ impl Default for ExploreOptions {
             full_cost_model: false,
             beam_width: 3,
             absorb_anchors: true,
+            footprint_prune: true,
             cost: CostParams::default(),
         }
     }
+}
+
+/// Tally of candidate generation: how many DP combinations the
+/// footprint-first hard bound discarded before scoring, and how many
+/// were scored. Deterministic per (graph, device, opts, mask).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CandidateStats {
+    /// Combinations whose footprint bound could not launch.
+    pub footprint_pruned: usize,
+    /// Combinations that reached the delta (or full) scorer.
+    pub scored: usize,
 }
 
 /// A pattern with its delta-evaluator score.
@@ -97,13 +119,32 @@ pub fn candidate_patterns_in(
     opts: &ExploreOptions,
     mask: Option<&[bool]>,
 ) -> CandidateSets {
-    let model = DeltaModel::with_params(graph, device.clone(), opts.cost);
+    candidate_patterns_with_stats(graph, device, opts, mask).0
+}
+
+/// [`candidate_patterns_in`] plus the [`CandidateStats`] tally — the
+/// entry point exploration uses so the footprint-prune count can ride
+/// the finished [`super::FusionPlan`] up to the fleet's counters.
+pub fn candidate_patterns_with_stats(
+    graph: &Graph,
+    device: &DeviceSpec,
+    opts: &ExploreOptions,
+    mask: Option<&[bool]>,
+) -> (CandidateSets, CandidateStats) {
+    // In unpruned ablation mode the delta model prices over-cap
+    // patterns optimistically (capacity clamped), so they survive into
+    // the candidate sets and the beam — infeasibility then surfaces at
+    // accurate-model pruning time, as it did before footprint-first.
+    let model = DeltaModel::with_params(graph, device.clone(), opts.cost)
+        .with_capacity_enforcement(opts.footprint_prune);
     let scorer = Scorer {
         model,
         graph,
         device: device.clone(),
         full: opts.full_cost_model,
         cost: opts.cost,
+        prune: opts.footprint_prune,
+        stats: std::cell::Cell::new(CandidateStats::default()),
     };
     let mut cands: CandidateSets = vec![Vec::new(); graph.len()];
 
@@ -137,7 +178,8 @@ pub fn candidate_patterns_in(
         dedup_top_k(&mut results, opts.top_k);
         cands[v.idx()] = results;
     }
-    cands
+    let stats = scorer.stats.get();
+    (cands, stats)
 }
 
 /// Scoring indirection: delta-evaluator by default; the full
@@ -148,9 +190,31 @@ struct Scorer<'g> {
     device: DeviceSpec,
     full: bool,
     cost: CostParams,
+    /// Footprint-first hard pruning on/off (mirrors
+    /// [`ExploreOptions::footprint_prune`]).
+    prune: bool,
+    /// Running tally of pruned/scored combinations (interior mutability:
+    /// the DP threads `&Scorer` everywhere).
+    stats: std::cell::Cell<CandidateStats>,
 }
 
 impl Scorer<'_> {
+    /// Gate + score one DP combination: `None` when the footprint-first
+    /// hard bound discards it before scoring (counted), otherwise the
+    /// pattern's score (callers still filter non-finite scores — the
+    /// defense that keeps unprunable infeasibilities out).
+    fn admit(&self, pattern: &FusionPattern) -> Option<f64> {
+        let mut stats = self.stats.get();
+        if self.prune && !self.model.pattern_footprint_feasible(pattern.nodes()) {
+            stats.footprint_pruned += 1;
+            self.stats.set(stats);
+            return None;
+        }
+        stats.scored += 1;
+        self.stats.set(stats);
+        Some(self.score(pattern))
+    }
+
     fn score(&self, pattern: &FusionPattern) -> f64 {
         if !self.full {
             return self.model.score(pattern.nodes());
@@ -245,9 +309,10 @@ fn combine_pair(
             if pat.len() > opts.max_pattern_size || !pat.is_valid(graph) {
                 continue;
             }
-            let score = scorer.score(&pat);
-            if score.is_finite() {
-                out.push(ScoredPattern { pattern: pat, score });
+            if let Some(score) = scorer.admit(&pat) {
+                if score.is_finite() {
+                    out.push(ScoredPattern { pattern: pat, score });
+                }
             }
         }
     }
@@ -273,9 +338,10 @@ fn merge_results(
             if u.len() > opts.max_pattern_size || !u.is_valid(graph) {
                 continue;
             }
-            let score = scorer.score(&u);
-            if score.is_finite() {
-                out.push(ScoredPattern { pattern: u, score });
+            if let Some(score) = scorer.admit(&u) {
+                if score.is_finite() {
+                    out.push(ScoredPattern { pattern: u, score });
+                }
             }
         }
     }
@@ -378,6 +444,78 @@ mod tests {
         for s in &cands[a.idx()] {
             if s.pattern.contains(c) && !s.pattern.contains(bb) {
                 panic!("cyclic candidate survived: {:?}", s.pattern);
+            }
+        }
+    }
+
+    /// Satellite regression: a pattern exceeding the per-block cap is
+    /// discarded by the DP before scoring — it never appears in any
+    /// candidate set (so it can never reach the beam) and the stats
+    /// count the discard. The unpruned ablation admits the same
+    /// combination and counts nothing.
+    #[test]
+    fn over_cap_combinations_never_enter_candidate_sets() {
+        // exp → reduce at [64, 16384]: 64 KB per-row staging for the
+        // internal exp producer — over the 48 KB per-block cap.
+        let mut g = Graph::new("wide");
+        let x = g.param(Shape::new(vec![64, 16384]), DType::F32, "x");
+        let e = g.unary(OpKind::Exp, x, "e");
+        let r = g.reduce(ReduceOp::Sum, e, vec![1], "r");
+        let device = DeviceSpec::v100();
+
+        let opts = ExploreOptions::default();
+        assert!(opts.footprint_prune, "footprint-first is the default");
+        let (cands, stats) = candidate_patterns_with_stats(&g, &device, &opts, None);
+        assert!(stats.footprint_pruned > 0, "the over-cap union must be counted");
+        let model = DeltaModel::new(&g, device.clone());
+        for per_vertex in &cands {
+            for s in per_vertex {
+                if s.pattern.len() >= 2 {
+                    assert!(
+                        model.pattern_footprint_feasible(s.pattern.nodes()),
+                        "infeasible candidate survived: {:?}",
+                        s.pattern
+                    );
+                }
+            }
+        }
+        assert!(
+            !cands[e.idx()].iter().any(|s| s.pattern.contains(r)),
+            "{{e, r}} must never become a candidate under pruning"
+        );
+
+        // Ablation: with pruning off the optimistic model admits it.
+        let unpruned = ExploreOptions { footprint_prune: false, ..Default::default() };
+        let (cands_off, stats_off) =
+            candidate_patterns_with_stats(&g, &device, &unpruned, None);
+        assert_eq!(stats_off.footprint_pruned, 0);
+        assert!(
+            cands_off[e.idx()].iter().any(|s| s.pattern.contains(r)),
+            "the unpruned ablation must admit the over-cap union"
+        );
+    }
+
+    /// On a workload where every combination fits, pruning changes
+    /// nothing: identical candidate sets, identical scores, zero prune
+    /// count — the plan-equivalence guarantee at the DP level.
+    #[test]
+    fn pruning_is_identity_when_everything_fits() {
+        let mut g = Graph::new("ln");
+        let x = g.param(Shape::new(vec![4096, 768]), DType::F32, "x");
+        let _ = blocks::layer_norm(&mut g, x, "ln");
+        let device = DeviceSpec::v100();
+        let on = ExploreOptions::default();
+        let off = ExploreOptions { footprint_prune: false, ..Default::default() };
+        let (c_on, s_on) = candidate_patterns_with_stats(&g, &device, &on, None);
+        let (c_off, s_off) = candidate_patterns_with_stats(&g, &device, &off, None);
+        assert_eq!(s_on.footprint_pruned, 0);
+        assert_eq!(s_on.scored, s_off.scored);
+        assert_eq!(c_on.len(), c_off.len());
+        for (a, b) in c_on.iter().zip(&c_off) {
+            assert_eq!(a.len(), b.len());
+            for (sa, sb) in a.iter().zip(b) {
+                assert_eq!(sa.pattern, sb.pattern);
+                assert_eq!(sa.score, sb.score);
             }
         }
     }

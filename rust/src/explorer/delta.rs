@@ -10,6 +10,7 @@
 //! simplifications §5.4 lists). A positive score means fusing saves
 //! time; the explorer only keeps positive-score patterns.
 
+use crate::codegen::shmem;
 use crate::gpu::{CostParams, DeviceSpec};
 use crate::graph::{Graph, Node, NodeId, OpClass, OpKind};
 
@@ -24,6 +25,13 @@ pub struct DeltaModel<'g> {
     params: CostParams,
     /// Cached standalone time per node, µs.
     op_time_cache: Vec<f64>,
+    /// When true (the default), a pattern whose intermediate-footprint
+    /// bound cannot launch scores `INFINITY` (the hard capacity pin).
+    /// The unpruned ablation turns this off: footprint is clamped to
+    /// the per-block cap for the occupancy estimate, modeling the
+    /// pre-footprint-first world where infeasibility was only
+    /// discovered at tuning time.
+    enforce_capacity: bool,
 }
 
 impl<'g> DeltaModel<'g> {
@@ -40,7 +48,16 @@ impl<'g> DeltaModel<'g> {
             .iter()
             .map(|n| standalone_op_time_us(graph, n, &device, &params))
             .collect();
-        DeltaModel { graph, device, params, op_time_cache }
+        DeltaModel { graph, device, params, op_time_cache, enforce_capacity: true }
+    }
+
+    /// Toggle the hard intermediate-footprint pin (on by default). With
+    /// enforcement off the model scores over-cap patterns optimistically
+    /// — the unpruned-exploration ablation the `explorer_perf` bench
+    /// compares against.
+    pub fn with_capacity_enforcement(mut self, on: bool) -> Self {
+        self.enforce_capacity = on;
+        self
     }
 
     /// Host + device cost of one extra kernel launch, µs
@@ -94,10 +111,17 @@ impl<'g> DeltaModel<'g> {
         // large regions (the exploration hot path).
         let member = crate::util::IdMask::from_ids(g.len(), pattern.iter().map(|id| id.idx()));
 
-        // Shared-memory estimate: max over per-row staging requests of
-        // reused sub-roots (assume block composition for every internal
-        // expensive/reduction producer — conservative).
-        let mut shmem = 0usize;
+        // Shared-memory estimate through the footprint engine: max over
+        // per-row staging requests of reused sub-roots (assume block
+        // composition for every internal expensive/reduction producer —
+        // conservative), same §5.4 shortcut as before but now the same
+        // accounting the tuner and the absorption pass consult.
+        let fp = shmem::pattern_footprint(g, pattern, rows, &member);
+        let shmem_bytes = if self.enforce_capacity {
+            fp.max_request_bytes
+        } else {
+            fp.max_request_bytes.min(shmem::block_cap(&self.device))
+        };
         let mut alu_work = 0f64;
         for &id in pattern {
             let node = g.node(id);
@@ -106,14 +130,8 @@ impl<'g> DeltaModel<'g> {
                 _ => node.num_elements(),
             } as f64;
             alu_work += work_items * node.kind.instructions_per_element();
-            let internal = g.consumers(id).iter().any(|c| member.contains(c.idx()));
-            if internal && node.kind.is_expensive_producer() {
-                let per_row = (node.num_elements() / rows.max(1)).max(1)
-                    * node.dtype.size_bytes();
-                shmem = shmem.max(per_row);
-            }
         }
-        let occ = self.device.occupancy(256, 16, shmem);
+        let occ = self.device.occupancy(256, 16, shmem_bytes);
         if occ == 0.0 {
             return f64::INFINITY;
         }
@@ -123,7 +141,34 @@ impl<'g> DeltaModel<'g> {
         // instr/µs
         let ips = self.device.num_sms as f64 * 64.0 * self.device.clock_ghz * 1e3 * occ;
         let t_alu = alu_work / ips;
-        (t_mem.max(t_alu) * self.params.time_scale).max(self.device.kernel_floor_us)
+        // Soft footprint pressure: summed staging requests crowding the
+        // per-block budget cost occupancy headroom the max-single-
+        // request occupancy shortcut above cannot see. Zero below the
+        // knee, so lightly-staged patterns price exactly as before.
+        let pressure = self
+            .params
+            .footprint_pressure_charge_us(fp.staged_sum_bytes, shmem::block_cap(&self.device));
+        (t_mem.max(t_alu) * self.params.time_scale).max(self.device.kernel_floor_us) + pressure
+    }
+
+    /// Intermediate-footprint bound of a pattern, bytes: the largest
+    /// single per-row staging request under the same §5.4 shortcuts
+    /// [`Self::pattern_time_us`] prices with. Cheap enough to gate
+    /// every DP combination before scoring.
+    pub fn pattern_footprint_bytes(&self, pattern: &[NodeId]) -> usize {
+        let g = self.graph;
+        let (rows, _len) = crate::codegen::latency::pattern_rows(g, pattern);
+        let member = crate::util::IdMask::from_ids(g.len(), pattern.iter().map(|id| id.idx()));
+        shmem::pattern_footprint(g, pattern, rows, &member).max_request_bytes
+    }
+
+    /// Hard feasibility of a pattern's footprint bound at the delta
+    /// evaluator's fixed launch shape (256 threads, 16 registers) — the
+    /// exploration-side pruning predicate. Equivalent to the old
+    /// "occupancy zero ⇒ score `INFINITY` ⇒ filtered" path, applied
+    /// before any scoring work is spent.
+    pub fn pattern_footprint_feasible(&self, pattern: &[NodeId]) -> bool {
+        shmem::footprint_feasible(&self.device, 256, 16, self.pattern_footprint_bytes(pattern))
     }
 
     /// Modeled gain, µs, of absorbing one compute boundary whose
@@ -304,6 +349,65 @@ mod tests {
         let model = DeltaModel::new(&g, DeviceSpec::v100());
         assert_eq!(model.pattern_time_us(&[e, r]), f64::INFINITY);
         assert!(model.score(&[e, r]) < 0.0);
+        // The footprint bound sees the same 64 KB before scoring — the
+        // exploration-side pruning predicate fires without paying for a
+        // full pattern_time_us evaluation.
+        assert_eq!(model.pattern_footprint_bytes(&[e, r]), 64 * 1024);
+        assert!(!model.pattern_footprint_feasible(&[e, r]));
+    }
+
+    #[test]
+    fn capacity_toggle_models_the_unpruned_world() {
+        // Same over-cap pattern as above: with capacity enforcement off
+        // (the unpruned ablation) the model clamps the footprint to the
+        // cap and scores the fusion finitely — exactly the optimistic
+        // pre-refactor behavior whose infeasibility only tuning caught.
+        let mut g = Graph::new("wide");
+        let x = g.param(Shape::new(vec![64, 16384]), DType::F32, "x");
+        let e = g.unary(crate::graph::OpKind::Exp, x, "e");
+        let r = g.reduce(crate::graph::ReduceOp::Sum, e, vec![1], "r");
+        let optimistic =
+            DeltaModel::new(&g, DeviceSpec::v100()).with_capacity_enforcement(false);
+        let t = optimistic.pattern_time_us(&[e, r]);
+        assert!(t.is_finite(), "optimistic model must score over-cap patterns");
+        // The footprint bound itself is mode-independent: still 64 KB,
+        // still infeasible — only the *pricing* is optimistic.
+        assert!(!optimistic.pattern_footprint_feasible(&[e, r]));
+    }
+
+    #[test]
+    fn footprint_pressure_prices_staged_crowding() {
+        // A pattern whose summed staging requests land above the knee
+        // must price worse under a higher footprint_pressure_us, while
+        // a lightly-staged pattern (layer-norm) is untouched — the
+        // "defaults don't perturb tier-1 plans" invariant.
+        let mut g = Graph::new("crowd");
+        // 64 rows × 12288 f32 = 48 KB per-row staging for exp — at the
+        // cap (feasible) and far above the 24 KB knee.
+        let x = g.param(Shape::new(vec![64, 12288]), DType::F32, "x");
+        let e = g.unary(crate::graph::OpKind::Exp, x, "e");
+        let r = g.reduce(crate::graph::ReduceOp::Sum, e, vec![1], "r");
+        let base = DeltaModel::new(&g, DeviceSpec::v100());
+        let hot = DeltaModel::with_params(
+            &g,
+            DeviceSpec::v100(),
+            CostParams { footprint_pressure_us: 40.0, ..Default::default() },
+        );
+        let (t0, t1) = (base.pattern_time_us(&[e, r]), hot.pattern_time_us(&[e, r]));
+        assert!(t0.is_finite() && t1 > t0, "base {t0} hot {t1}");
+
+        let (g2, p) = ln();
+        let base_ln = DeltaModel::new(&g2, DeviceSpec::v100());
+        let hot_ln = DeltaModel::with_params(
+            &g2,
+            DeviceSpec::v100(),
+            CostParams { footprint_pressure_us: 40.0, ..Default::default() },
+        );
+        assert_eq!(
+            base_ln.pattern_time_us(&p),
+            hot_ln.pattern_time_us(&p),
+            "below-knee patterns must be pressure-free"
+        );
     }
 
     #[test]

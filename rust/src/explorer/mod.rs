@@ -22,7 +22,9 @@ pub mod remote;
 
 pub use absorb::{absorb_anchors, applied_absorptions};
 pub use beam::{compose_plan, BeamOptions};
-pub use candidates::{candidate_patterns, ExploreOptions};
+pub use candidates::{
+    candidate_patterns, candidate_patterns_with_stats, CandidateStats, ExploreOptions,
+};
 pub use delta::{delta_score, DeltaModel};
 pub use pattern::{AbsorbedAnchor, FusionPattern, FusionPlan};
 pub use regions::{explore_partitioned, Region};
@@ -39,13 +41,21 @@ use crate::graph::Graph;
 /// basic compilation pass of XLA" — which also delivers the production
 /// never-negative property of §7.2.
 pub fn explore(graph: &Graph, device: &DeviceSpec, opts: &ExploreOptions) -> FusionPlan {
-    let cands = candidate_patterns(graph, device, opts);
+    let (cands, stats) = candidates::candidate_patterns_with_stats(graph, device, opts, None);
     let mut plan = compose_plan(
         graph,
         device,
         &cands,
-        &BeamOptions { width: opts.beam_width, cost: opts.cost },
+        &BeamOptions {
+            width: opts.beam_width,
+            cost: opts.cost,
+            footprint_prune: opts.footprint_prune,
+        },
     );
+    // The plan carries the whole exploration's footprint-prune tally:
+    // DP combinations discarded before scoring plus the beam's
+    // defense-filter rejections (already on the plan).
+    plan.footprint_pruned += stats.footprint_pruned;
     plan = absorb_producers(graph, plan, opts);
     plan = prune_bad_patterns(graph, device, plan, opts);
     plan = backfill_with_xla(graph, plan);
@@ -172,4 +182,85 @@ pub fn absorb_producers(
         }
     }
     plan
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::NodeId;
+    use crate::workloads::{models, Mode};
+
+    /// Canonical kernel shape of a plan: per-pattern sorted node ids,
+    /// patterns sorted — plan identity independent of discovery order.
+    fn canon(plan: &FusionPlan) -> Vec<Vec<NodeId>> {
+        let mut v: Vec<Vec<NodeId>> = plan
+            .patterns
+            .iter()
+            .map(|p| {
+                let mut n = p.nodes().to_vec();
+                n.sort_unstable();
+                n
+            })
+            .collect();
+        v.sort();
+        v
+    }
+
+    /// Satellite property: over the tier-1 model builders, footprint-
+    /// first pruning is plan-preserving whenever nothing had to be
+    /// pruned (the hard bound is exactly the old occupancy-zero score
+    /// filter, applied before the beam instead of inside it), and when
+    /// pruning does fire every surviving pattern is feasible and the
+    /// modeled plan latency does not regress beyond composition noise
+    /// (pruning a small over-cap union can keep a *larger* feasible
+    /// union from being discovered, costing at most a launch).
+    #[test]
+    fn pruned_exploration_is_plan_preserving_on_feasible_workloads() {
+        let device = DeviceSpec::v100();
+        let on = ExploreOptions::default();
+        let off = ExploreOptions { footprint_prune: false, ..Default::default() };
+        let mut identity_cases = 0usize;
+        for w in [
+            models::bert(Mode::Infer),
+            models::bert(Mode::Train),
+            models::asr(),
+            models::bert_with(Mode::Train, 32, 512),
+        ] {
+            let p_on = explore(&w.graph, &device, &on);
+            let p_off = explore(&w.graph, &device, &off);
+            let model = DeltaModel::new(&w.graph, device.clone());
+            for p in &p_on.patterns {
+                assert!(
+                    model.pattern_footprint_feasible(p.nodes()),
+                    "{}: infeasible pattern in pruned plan: {:?}",
+                    w.key(),
+                    p
+                );
+            }
+            if p_on.footprint_pruned == 0 {
+                // Nothing was discarded: the DP, beam, and every later
+                // pass saw identical inputs — the plans must match.
+                assert_eq!(canon(&p_on), canon(&p_off), "{}", w.key());
+                assert_eq!(p_on.absorbed.len(), p_off.absorbed.len(), "{}", w.key());
+                identity_cases += 1;
+            } else {
+                let t_on = model.plan_time_us(&p_on.kernels(&w.graph));
+                let t_off = model.plan_time_us(&p_off.kernels(&w.graph));
+                assert!(
+                    t_on <= t_off * 1.02 + 1e-9,
+                    "{}: pruned plan {t_on:.2} µs regressed vs unpruned {t_off:.2} µs",
+                    w.key()
+                );
+            }
+        }
+        assert!(identity_cases > 0, "no workload exercised the identity branch");
+        // The long-sequence BERT stages 64 KB for its 1-D loss tail —
+        // pruning must actually fire somewhere in the sweep.
+        let big = explore(
+            &models::bert_with(Mode::Train, 32, 512).graph,
+            &device,
+            &on,
+        );
+        assert!(big.footprint_pruned > 0, "the 64 KB loss tail must be pruned");
+    }
 }

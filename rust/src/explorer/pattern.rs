@@ -120,6 +120,14 @@ pub struct FusionPlan {
     /// for the XLA/TF baseline personalities (their cut behavior is
     /// bit-stable); sorted by anchor id for determinism.
     pub absorbed: Vec<AbsorbedAnchor>,
+    /// Candidates discarded during exploration because their
+    /// intermediate-footprint bound could not launch (the footprint-
+    /// first hard prune: DP combinations plus the beam's defense
+    /// filter). A pure function of (graph, device, options) — never of
+    /// which executor or worker explored — so the fleet can publish it
+    /// as an executor-invariant counter. Zero for restored/baseline
+    /// plans, which carry no exploration trace.
+    pub footprint_pruned: usize,
 }
 
 impl FusionPlan {
@@ -217,7 +225,7 @@ mod tests {
         let (g, ids) = chain();
         let plan = FusionPlan {
             patterns: vec![FusionPattern::new(vec![ids[0], ids[1]])],
-            absorbed: Vec::new(),
+            ..Default::default()
         };
         let kernels = plan.kernels(&g);
         // one fused kernel + singleton for c (param excluded)

@@ -19,7 +19,7 @@
 //! regions into one launch).
 
 use super::beam::{compose_plan, BeamOptions};
-use super::candidates::{candidate_patterns_in, CandidateSets, ExploreOptions};
+use super::candidates::{candidate_patterns_with_stats, CandidateSets, ExploreOptions};
 use super::pattern::FusionPlan;
 use crate::gpu::DeviceSpec;
 use crate::graph::{Graph, NodeId, OpKind};
@@ -142,8 +142,10 @@ pub fn explore_region(
         return FusionPlan::default(); // a single op never fuses
     }
     let mask = region.mask(graph.len());
-    let cands = candidate_patterns_in(graph, device, opts, Some(&mask));
-    compose_absorb_prune(graph, device, opts, &cands)
+    let (cands, stats) = candidate_patterns_with_stats(graph, device, opts, Some(&mask));
+    let mut plan = compose_absorb_prune(graph, device, opts, &cands);
+    plan.footprint_pruned += stats.footprint_pruned;
+    plan
 }
 
 /// Beam composition + producer absorption + accurate-model pruning over
@@ -159,7 +161,11 @@ fn compose_absorb_prune(
         graph,
         device,
         cands,
-        &BeamOptions { width: opts.beam_width, cost: opts.cost },
+        &BeamOptions {
+            width: opts.beam_width,
+            cost: opts.cost,
+            footprint_prune: opts.footprint_prune,
+        },
     );
     plan = super::absorb_producers(graph, plan, opts);
     plan = super::prune_bad_patterns(graph, device, plan, opts);
@@ -190,8 +196,11 @@ pub fn explore_shard(
             mask[id.idx()] = true;
         }
     }
-    let mut cands = candidate_patterns_in(graph, device, opts, Some(&mask));
+    let (mut cands, stats) = candidate_patterns_with_stats(graph, device, opts, Some(&mask));
     let mut plan = FusionPlan::default();
+    // The group-wide DP's prune tally belongs to this shard's plan; the
+    // dispatcher sums shard partials when it joins them.
+    plan.footprint_pruned = stats.footprint_pruned;
     let mut region_cands: CandidateSets = vec![Vec::new(); graph.len()];
     for region in group {
         if region.len() < 2 {
@@ -202,6 +211,7 @@ pub fn explore_shard(
         }
         let rplan = compose_absorb_prune(graph, device, opts, &region_cands);
         plan.patterns.extend(rplan.patterns);
+        plan.footprint_pruned += rplan.footprint_pruned;
         for &id in region.nodes() {
             region_cands[id.idx()] = Vec::new();
         }

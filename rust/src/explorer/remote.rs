@@ -75,9 +75,12 @@ pub fn remote_fusion(
     }
 
     // Multi-op patterns go into the plan; singletons remain implicit.
+    // The exploration-time footprint-prune count rides through: remote
+    // packing reshapes kernels, not the exploration trace.
     FusionPlan {
         patterns: out.into_iter().filter(|p| p.len() > 1).collect(),
         absorbed: plan.absorbed,
+        footprint_pruned: plan.footprint_pruned,
     }
 }
 
@@ -117,7 +120,7 @@ mod tests {
         let device = DeviceSpec::v100();
         let plan = FusionPlan {
             patterns: vec![FusionPattern::new(vec![a, b])],
-            absorbed: Vec::new(),
+            ..Default::default()
         };
         let packed = remote_fusion(&g, &device, plan.clone(), &ExploreOptions::default());
         assert_eq!(packed.kernels(&g).len(), plan.kernels(&g).len());

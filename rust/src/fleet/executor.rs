@@ -200,6 +200,13 @@ pub(crate) struct FleetCounters {
     /// stitching): counted at the single publication path, so virtual
     /// and wall-clock executors agree by construction.
     pub gemm_absorbed: AtomicUsize,
+    /// Candidate patterns discarded by the footprint bound across every
+    /// published plan's exploration (DP combinations plus beam defense
+    /// rejections). Counted at the same single publication path as
+    /// `gemm_absorbed`: the tally is a pure function of (graph, device,
+    /// options), so virtual and wall-clock executors agree by
+    /// construction.
+    pub footprint_pruned: AtomicUsize,
 }
 
 /// Per-iteration simulated latency of a program on a device.
@@ -277,6 +284,7 @@ pub(crate) fn guard_and_publish(
             counters
                 .gemm_absorbed
                 .fetch_add(prog.plan.absorbed_boundaries(), Ordering::Relaxed);
+            counters.footprint_pruned.fetch_add(prog.plan.footprint_pruned, Ordering::Relaxed);
             store.insert(key, spec.name, prog, ready_ms);
             latency.insert((key.exact.0, spec.name), PublishedLatency::first(ms));
             ms
@@ -466,7 +474,9 @@ pub(crate) fn produce_sharded_candidate(
 ) -> Option<Arc<OptimizedProgram>> {
     let mut merged = FusionPlan::default();
     for p in partials {
-        merged.patterns.extend(p?.patterns);
+        let p = p?;
+        merged.footprint_pruned += p.footprint_pruned;
+        merged.patterns.extend(p.patterns);
     }
     let opts = pipeline::runtime_explore_opts(explore, w.loop_kind);
     let prog = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {

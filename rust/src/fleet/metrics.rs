@@ -69,6 +69,11 @@ pub struct FleetReport {
     /// stitching): epilogue/prologue patterns folded into their anchor's
     /// library kernel instead of launching separately.
     pub gemm_absorbed: usize,
+    /// Candidate patterns the footprint bound discarded before the beam
+    /// across every published plan's exploration (footprint-first
+    /// pruning; 0 with `footprint_prune` off or when every candidate
+    /// fits the per-block shared-memory cap).
+    pub footprint_pruned: usize,
     /// Per-kernel (modeled, measured) pairs the calibrator recorded.
     pub calibration_samples: usize,
     /// Median |predicted − measured| relative kernel-time error under
@@ -169,6 +174,7 @@ impl FleetReport {
             .set("reexplore_improved", self.reexplore_improved)
             .set("reexplore_rejected", self.reexplore_rejected)
             .set("gemm_absorbed", self.gemm_absorbed)
+            .set("footprint_pruned", self.footprint_pruned)
             .set("calibration_samples", self.calibration_samples)
             .set("drift_before", self.drift_before)
             .set("drift_after", self.drift_after)
@@ -245,6 +251,10 @@ impl FleetReport {
         t.row(vec![
             "GEMM boundaries absorbed".to_string(),
             self.gemm_absorbed.to_string(),
+        ]);
+        t.row(vec![
+            "footprint-pruned candidates".to_string(),
+            self.footprint_pruned.to_string(),
         ]);
         t.row(vec![
             "region-shard compile sub-jobs".to_string(),
@@ -534,6 +544,7 @@ mod tests {
             reexplore_improved: 1,
             reexplore_rejected: 1,
             gemm_absorbed: 6,
+            footprint_pruned: 9,
             calibration_samples: 64,
             drift_before: 0.3,
             drift_after: 0.05,
@@ -589,6 +600,7 @@ mod tests {
             "shard_jobs",
             "reexplore_jobs",
             "gemm_absorbed",
+            "footprint_pruned",
             "calibration_samples",
             "drift_before",
             "drift_after",
@@ -605,6 +617,7 @@ mod tests {
         assert_eq!(j.get("bucket_hits").and_then(|v| v.as_usize()), Some(2));
         assert_eq!(j.get("distinct_shapes").and_then(|v| v.as_usize()), Some(5));
         assert_eq!(j.get("gemm_absorbed").and_then(|v| v.as_usize()), Some(6));
+        assert_eq!(j.get("footprint_pruned").and_then(|v| v.as_usize()), Some(9));
     }
 
     #[test]

@@ -1349,6 +1349,7 @@ impl FleetService {
             reexplore_improved: self.counters.reexplore_improved.load(Ordering::Relaxed),
             reexplore_rejected: self.counters.reexplore_rejected.load(Ordering::Relaxed),
             gemm_absorbed: self.counters.gemm_absorbed.load(Ordering::Relaxed),
+            footprint_pruned: self.counters.footprint_pruned.load(Ordering::Relaxed),
             calibration_samples: drift.samples,
             drift_before: drift.before,
             drift_after: drift.after,
@@ -1891,6 +1892,10 @@ mod tests {
         assert_eq!(wall.bucket_failures, r.bucket_failures);
         assert_eq!(wall.explore_jobs, r.explore_jobs);
         assert_eq!(wall.gemm_absorbed, r.gemm_absorbed);
+        assert_eq!(
+            wall.footprint_pruned, r.footprint_pruned,
+            "the prune tally is a pure function of (graph, device, options)"
+        );
         assert_eq!(wall.regressions, 0);
     }
 

@@ -185,6 +185,14 @@ pub enum ModelFamily {
     /// shapes inside one pow2 bucket can disagree on absorption
     /// feasibility — the bucket tier's retune-failure path.
     GemmEpilogueProbe,
+    /// Footprint-pruning probe: a layer-norm block (profitably fusible,
+    /// so the exploration beats its fallback and publishes) next to a
+    /// softmax-style wide tail exp(y[rows, 16384]) → row-sum whose
+    /// exp→reduce candidate stages 64 KB per row — over the per-block
+    /// shared-memory cap of every device class at every shape. A
+    /// deterministic source of footprint-pruned candidates for the
+    /// fleet's `footprint_pruned` counter under dynamic-shape traffic.
+    FootprintProbe,
 }
 
 impl ModelFamily {
@@ -219,6 +227,24 @@ impl ModelFamily {
                 let _ = g.unary(OpKind::Relu, add, "relu");
                 Workload {
                     name: "GEP",
+                    field: "micro",
+                    mode: Mode::Infer,
+                    batch: shape.batch,
+                    loop_kind: LoopKind::None,
+                    graph: g,
+                }
+            }
+            ModelFamily::FootprintProbe => {
+                use crate::graph::{DType, Graph, OpKind, ReduceOp, Shape};
+                let rows = shape.rows().max(2);
+                let mut g = Graph::new("FPP");
+                let x = g.param(Shape::new(vec![rows, 256]), DType::F32, "x");
+                let _ = blocks::layer_norm(&mut g, x, "ln");
+                let y = g.param(Shape::new(vec![rows, 16384]), DType::F32, "y");
+                let e = g.unary(OpKind::Exp, y, "exp");
+                let _ = g.reduce(ReduceOp::Sum, e, vec![1], "rowsum");
+                Workload {
+                    name: "FPP",
                     field: "micro",
                     mode: Mode::Infer,
                     batch: shape.batch,

@@ -50,6 +50,19 @@ pub struct CostParams {
     /// this constant scaled by the fraction of anchor-kernel occupancy
     /// that staging buffer costs.
     pub absorb_occupancy_penalty_us: f64,
+    /// Soft footprint-pressure penalty, µs per unit of staged-footprint
+    /// excess over the knee. The delta evaluator charges
+    /// `footprint_pressure_us × max(0, staged_sum/cap − footprint_knee)`
+    /// on a pattern's fused time: patterns whose summed staging requests
+    /// crowd the per-block budget lose occupancy headroom the max-
+    /// single-request occupancy shortcut cannot see. Calibration refits
+    /// this per device class from above-knee residuals.
+    pub footprint_pressure_us: f64,
+    /// Fraction of the per-block shared-memory cap below which staged
+    /// footprint is free (the pressure term's knee). 0.5 = pressure only
+    /// starts past 24 KB of the 48 KB cap, which keeps every tier-1
+    /// default-shape pattern unpenalized.
+    pub footprint_knee: f64,
 }
 
 impl Default for CostParams {
@@ -64,7 +77,22 @@ impl Default for CostParams {
             iter_overhead_us: 0.0,
             absorb_traffic_scale: 1.0,
             absorb_occupancy_penalty_us: 12.0,
+            footprint_pressure_us: 4.0,
+            footprint_knee: 0.5,
         }
+    }
+}
+
+impl CostParams {
+    /// Soft footprint-pressure charge, µs, for `staged_bytes` of summed
+    /// staging requests against a `cap_bytes` per-block budget (the
+    /// delta evaluator's pricing of intermediate-buffer crowding).
+    pub fn footprint_pressure_charge_us(&self, staged_bytes: usize, cap_bytes: usize) -> f64 {
+        if cap_bytes == 0 {
+            return 0.0;
+        }
+        let frac = staged_bytes as f64 / cap_bytes as f64;
+        self.footprint_pressure_us * (frac - self.footprint_knee).max(0.0)
     }
 }
 
@@ -95,8 +123,29 @@ mod tests {
         assert_eq!(p.bandwidth_knee, 0.4);
         assert_eq!(p.time_scale, 1.0);
         assert_eq!(p.iter_overhead_us, 0.0);
+        assert_eq!(p.footprint_pressure_us, 4.0);
+        assert_eq!(p.footprint_knee, 0.5);
         assert_eq!(p.warp_combine(), 40.0);
         assert_eq!(p.block_combine(), 102.0);
+    }
+
+    #[test]
+    fn footprint_pressure_is_zero_below_knee_and_linear_above() {
+        let p = CostParams::default();
+        let cap = 48 * 1024;
+        // At and below the knee (24 KB of 48 KB): free.
+        assert_eq!(p.footprint_pressure_charge_us(0, cap), 0.0);
+        assert_eq!(p.footprint_pressure_charge_us(cap / 2, cap), 0.0);
+        // At the full cap: half a unit of excess → pressure_us × 0.5.
+        assert!((p.footprint_pressure_charge_us(cap, cap) - 2.0).abs() < 1e-12);
+        // Past the cap keeps growing linearly (the unpruned ablation
+        // scores such patterns; the hard filter normally removes them).
+        assert!(
+            p.footprint_pressure_charge_us(2 * cap, cap)
+                > p.footprint_pressure_charge_us(cap, cap)
+        );
+        // Degenerate cap: no charge, no division by zero.
+        assert_eq!(p.footprint_pressure_charge_us(1024, 0), 0.0);
     }
 
     /// Golden pin of every `CostParams::default()` field. The exhaustive
@@ -115,6 +164,8 @@ mod tests {
             iter_overhead_us,
             absorb_traffic_scale,
             absorb_occupancy_penalty_us,
+            footprint_pressure_us,
+            footprint_knee,
         } = CostParams::default();
         assert_eq!(launch_overhead_us, 7.0);
         assert_eq!(cpi, 4.0);
@@ -125,5 +176,7 @@ mod tests {
         assert_eq!(iter_overhead_us, 0.0);
         assert_eq!(absorb_traffic_scale, 1.0);
         assert_eq!(absorb_occupancy_penalty_us, 12.0);
+        assert_eq!(footprint_pressure_us, 4.0);
+        assert_eq!(footprint_knee, 0.5);
     }
 }

@@ -339,11 +339,13 @@ pub fn port_program(
     if mem_count(&kernels) < mem_count(&prog.kernels) {
         return None;
     }
-    Some(OptimizedProgram {
-        tech: prog.tech,
-        plan: prog.plan.clone(),
-        kernels,
-    })
+    // A launch-dim-only retune runs no exploration: it inherits the
+    // plan's patterns but not the origin's footprint-prune tally, so
+    // the fleet's publication-path counter never double-counts a plan
+    // that fans out across devices or sibling shapes.
+    let mut plan = prog.plan.clone();
+    plan.footprint_pruned = 0;
+    Some(OptimizedProgram { tech: prog.tech, plan, kernels })
 }
 
 /// Port an already-optimized program to a *sibling shape* of the same
