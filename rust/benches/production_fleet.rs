@@ -34,6 +34,15 @@
 //! distinct graphs served — the paper's tune-once-run-many economics
 //! under realistic traffic.
 //!
+//! A **multi-tenant QoS** section replays six tenants across three
+//! priority tiers under device churn with one injected device kill: the
+//! dispatcher sheds over-SLA low-tier work, the killed device's live
+//! session migrates to a survivor through the port/reshape feasibility
+//! ladder, every QoS/churn counter must match exactly between the
+//! wall-clock run and the virtual replay, and premium tasks must show
+//! zero SLA violations. The section lands in the JSON as `qos` and is
+//! gated by `ci/check_bench.sh`.
+//!
 //! A **flight recorder** section then replays the same trace with
 //! tracing on: stage-attributed latency (queue / compile tiers /
 //! barrier / serve) and lock-contention profiles fold into the report,
@@ -61,9 +70,9 @@
 
 use fusion_stitching::explorer::regions;
 use fusion_stitching::fleet::{
-    build_template_families, build_templates, generate_trace, DeviceRegistry, ExecutorKind,
-    FleetOptions, FleetReport, FleetService, ModelFamily, ShardedFleetService, TemplateFamily,
-    TrafficConfig,
+    build_template_families, build_templates, generate_trace, ChurnEvent, ChurnEventKind,
+    ChurnPlan, DeviceRegistry, ExecutorKind, FleetOptions, FleetReport, FleetService, FleetTask,
+    ModelFamily, ShardedFleetService, TaskShape, TemplateFamily, TrafficConfig,
 };
 use fusion_stitching::obs::{chrome_trace, TraceDump};
 use fusion_stitching::util::JsonValue;
@@ -358,6 +367,100 @@ fn main() {
         report.saved_frac() * 100.0
     );
 
+    // Multi-tenant QoS under churn: the same fleet serving six tenants
+    // across three priority tiers (premium / standard / best-effort)
+    // while devices drain, rejoin and fail mid-trace. Gates: the QoS
+    // and churn counters are virtual bookkeeping so the wall-clock run
+    // must match the virtual replay *exactly*, the decision digest must
+    // converge, premium never blows its SLA, the injected kill must
+    // migrate a live session, and never-negative still holds.
+    println!("\n== multi-tenant QoS: 6 tenants, device churn + injected fault ==");
+    let qos_traffic = TrafficConfig { tasks: tasks.min(600), tenants: 6, ..Default::default() };
+    let mut qos_trace = generate_trace(&qos_traffic);
+    let horizon = qos_trace.last().map_or(0.0, |t| t.arrival_ms);
+    let task = |k: usize, arrival_ms: f64, iterations: usize| FleetTask {
+        id: qos_traffic.tasks + k,
+        arrival_ms,
+        template: 0,
+        iterations,
+        shape: TaskShape::default(),
+        tenant: 0,
+    };
+    // Probe tail, built so the injected kill provably lands on a live
+    // session under ANY traffic seed. Placement picks the slot with the
+    // earliest free-time (ties to the lowest index), so after organic
+    // traffic the all-free slot order is history-dependent. First a
+    // flush wave — one task per slot, all at the same instant, long
+    // after the organic trace drained (admission bounds any wait at
+    // 250 ms, so every slot frees well before `horizon + 1000`) —
+    // re-ties the free-times per device class (identical sessions
+    // within a class). The probe wave then lands on the earliest class
+    // in index order: slots (0,0) (0,1) (1,0) if V100 frees first,
+    // (2,0) (2,1) (3,0) if T4 does — either way the third probe runs
+    // on device 1 or device 3, so killing both mid-probe migrates
+    // exactly one live session (probes run >= 400 iterations x the
+    // 3 us kernel floor = 1.2 ms across the kill at +0.5 ms). A final
+    // post-kill arrival delivers the kill markers to the wall-clock
+    // serving threads.
+    let flush_at = horizon + 1000.0;
+    for k in 0..8 {
+        qos_trace.push(task(k, flush_at, 50));
+    }
+    let probe_at = flush_at + 2000.0;
+    for k in 8..11 {
+        qos_trace.push(task(k, probe_at, 400));
+    }
+    qos_trace.push(task(11, probe_at + 5.0, 8));
+    let churn = ChurnPlan::from_events(vec![
+        ChurnEvent { at_ms: horizon * 0.4, device: 2, kind: ChurnEventKind::Leave },
+        ChurnEvent { at_ms: horizon * 0.7, device: 2, kind: ChurnEventKind::Join },
+        ChurnEvent { at_ms: probe_at + 0.5, device: 1, kind: ChurnEventKind::Kill },
+        ChurnEvent { at_ms: probe_at + 0.5, device: 3, kind: ChurnEventKind::Kill },
+    ]);
+    let run_qos = |executor: ExecutorKind| {
+        let opts = FleetOptions { executor, churn_plan: Some(churn.clone()), ..base_options() };
+        let mut svc = FleetService::new(opts, templates.to_vec());
+        let r = svc.run_trace(&qos_trace);
+        (r, svc.decision_digest())
+    };
+    let (qos, qd) = run_qos(ExecutorKind::VirtualTime);
+    let (qos_wall, qwd) = run_qos(ExecutorKind::WallClock { threads });
+    assert_eq!(qwd, qd, "QoS/churn decisions must converge across executors");
+    assert_eq!(qos_wall.sheds, qos.sheds, "shed counter is virtual bookkeeping");
+    assert_eq!(qos_wall.sla_violations, qos.sla_violations);
+    assert_eq!(qos_wall.migrations, qos.migrations);
+    assert_eq!(qos_wall.migrations_degraded, qos.migrations_degraded);
+    assert_eq!(qos_wall.churn_events, qos.churn_events);
+    assert_eq!(qos_wall.faults, qos.faults);
+    assert_eq!(qos.regressions, 0, "never-negative must hold under churn");
+    assert_eq!(qos_wall.regressions, 0);
+    assert_eq!(qos.faults, 2, "the plan injects exactly two device kills");
+    assert_eq!(qos.churn_events, 2, "one drain + one rejoin");
+    assert!(qos.migrations >= 1, "a probe session must migrate off a killed device");
+    let premium_violations: usize = qos
+        .tenants
+        .iter()
+        .filter(|t| t.tier == "premium")
+        .map(|t| t.sla_violations)
+        .sum();
+    assert_eq!(premium_violations, 0, "premium SLA must hold");
+    assert_eq!(
+        qos.admitted + qos.fallback_only + qos.rejected + qos.sheds,
+        qos.tasks,
+        "admission accounting must close with the shed lane"
+    );
+    println!(
+        "qos: {} tenants; {} sheds, {} SLA violations; {} churn events + {} fault; \
+         {} migrations ({} degraded); decisions match across executors",
+        qos.tenants.len(),
+        qos.sheds,
+        qos.sla_violations,
+        qos.churn_events,
+        qos.faults,
+        qos.migrations,
+        qos.migrations_degraded
+    );
+
     // Dynamic shapes: the same fleet under shape-varying traffic —
     // every task draws (batch, seq) from its template's seeded shape
     // distribution. The tune-once-run-many economics must survive:
@@ -601,6 +704,39 @@ fn main() {
         .set("saved_frac_uncalibrated", report.saved_frac())
         .set("plan_quality_no_worse", plan_quality_no_worse)
         .set("matches_virtual_decisions", true);
+    let mut per_tenant = Vec::new();
+    for t in &qos.tenants {
+        let mut row = JsonValue::obj();
+        row.set("tenant", t.tenant as u64)
+            .set("tier", t.tier)
+            .set("sla_ms", t.sla_ms)
+            .set("tasks", t.tasks)
+            .set("served", t.served)
+            .set("shed", t.shed)
+            .set("rejected", t.rejected)
+            .set("sla_violations", t.sla_violations)
+            .set("e2e_p50_ms", t.e2e.p50)
+            .set("e2e_p99_ms", t.e2e.p99);
+        per_tenant.push(row);
+    }
+    let mut qos_json = JsonValue::obj();
+    qos_json
+        .set("enabled", true)
+        .set("tasks", qos.tasks)
+        .set("tenants", qos_traffic.tenants)
+        .set("sheds", qos.sheds)
+        .set("sla_violations", qos.sla_violations)
+        .set("top_tier_sla_violations", premium_violations)
+        .set("migrations", qos.migrations)
+        .set("migrations_degraded", qos.migrations_degraded)
+        .set("churn_events", qos.churn_events)
+        .set("faults", qos.faults)
+        .set("sheds_match_wall", qos_wall.sheds == qos.sheds)
+        .set("faults_match_wall", qos_wall.faults == qos.faults)
+        .set("migrations_match_wall", qos_wall.migrations == qos.migrations)
+        .set("decisions_match_wall", qwd == qd)
+        .set("regressions", qos.regressions)
+        .set("per_tenant", JsonValue::Arr(per_tenant));
     let mut scale_locks = JsonValue::obj();
     for row in scale_wall.merged_locks() {
         scale_locks.set(row.name, row.to_json());
@@ -652,6 +788,7 @@ fn main() {
         .set("sharded", sharded_json)
         .set("dynamic_shapes", dynamic_json)
         .set("calibration", calibration_json)
+        .set("qos", qos_json)
         .set("scale", scale_json)
         .set("observability", obs_json)
         .set("absorption", absorption_json);

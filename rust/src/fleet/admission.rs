@@ -11,6 +11,17 @@
 //!   exploration) but skip FusionStitching compilation. Optimization
 //!   yields to serving under overload — the fleet-wide version of §6's
 //!   "serve the fallback while tuning runs in background".
+//!
+//! Multi-tenant traffic adds a third axis: each task's [`TenantTier`]
+//! carries a queue-delay SLA, and [`AdmissionController::decide_tiered`]
+//! *sheds* (rather than FIFO-queues) work whose tier cannot absorb the
+//! current backpressure — Premium keeps the full single-tenant
+//! semantics, Standard degrades to the fallback under compile
+//! saturation, BestEffort sheds. Decisions use only virtual-time inputs
+//! (the placed queue delay and the [`AdmissionTick`]-sampled pending
+//! count), so they are byte-identical across executors.
+
+use crate::fleet::sim::TenantTier;
 
 /// Admission-control knobs.
 #[derive(Debug, Clone)]
@@ -41,6 +52,12 @@ pub enum AdmitDecision {
     AdmitFallbackOnly,
     /// Refuse the task (device backlog beyond the bound).
     Reject,
+    /// Drop the task because its tier's SLA cannot absorb the current
+    /// backpressure — QoS load-shedding, distinct from [`Reject`]
+    /// (which is the tier-blind hard backlog bound).
+    ///
+    /// [`Reject`]: AdmitDecision::Reject
+    Shed,
 }
 
 /// Stateful admission controller with decision accounting.
@@ -50,11 +67,12 @@ pub struct AdmissionController {
     admitted: usize,
     fallback_only: usize,
     rejected: usize,
+    shed: usize,
 }
 
 impl AdmissionController {
     pub fn new(config: AdmissionConfig) -> Self {
-        AdmissionController { config, admitted: 0, fallback_only: 0, rejected: 0 }
+        AdmissionController { config, admitted: 0, fallback_only: 0, rejected: 0, shed: 0 }
     }
 
     /// Decide one task given its placed queue delay, the pending
@@ -79,9 +97,49 @@ impl AdmissionController {
         AdmitDecision::Admit
     }
 
+    /// Decide one task under its tenant tier's SLA. Premium is exactly
+    /// the tier-blind [`AdmissionController::decide`] (so all-Premium
+    /// traffic — every pre-tenant trace — decides byte-for-byte like
+    /// the single-tenant fleet). Lower tiers shed when the placed queue
+    /// delay already blows their SLA, and under compile saturation
+    /// Standard degrades to the fallback while BestEffort sheds.
+    pub fn decide_tiered(
+        &mut self,
+        tier: TenantTier,
+        queue_delay_ms: f64,
+        pending_compiles: usize,
+        needs_compile: bool,
+    ) -> AdmitDecision {
+        if tier == TenantTier::Premium {
+            return self.decide(queue_delay_ms, pending_compiles, needs_compile);
+        }
+        // A tier's effective queue bound never exceeds the hard
+        // backlog bound — a lax SLA cannot smuggle work past it.
+        let bound = tier.sla_ms().min(self.config.max_queue_delay_ms);
+        if queue_delay_ms > bound {
+            self.shed += 1;
+            return AdmitDecision::Shed;
+        }
+        if needs_compile && pending_compiles >= self.config.max_pending_compiles {
+            if tier == TenantTier::Standard {
+                self.fallback_only += 1;
+                return AdmitDecision::AdmitFallbackOnly;
+            }
+            self.shed += 1;
+            return AdmitDecision::Shed;
+        }
+        self.admitted += 1;
+        AdmitDecision::Admit
+    }
+
     /// (admitted, fallback_only, rejected) counts so far.
     pub fn counts(&self) -> (usize, usize, usize) {
         (self.admitted, self.fallback_only, self.rejected)
+    }
+
+    /// Tasks shed by QoS load-shedding so far.
+    pub fn shed_count(&self) -> usize {
+        self.shed
     }
 
     /// The active configuration.
@@ -171,6 +229,69 @@ mod tests {
         // Rejection takes precedence over backpressure.
         assert_eq!(ac.decide(1e9, 100, true), AdmitDecision::Reject);
         assert_eq!(ac.counts(), (2, 1, 1));
+    }
+
+    #[test]
+    fn tiered_backpressure_admits_high_priority_while_low_sheds() {
+        // The same backpressure sample, three tiers: compile saturation
+        // keeps Premium on the legacy FIFO path (fallback-only),
+        // degrades Standard the same way, and sheds BestEffort.
+        let mut ac = AdmissionController::new(AdmissionConfig {
+            max_pending_compiles: 4,
+            ..Default::default()
+        });
+        let d = |ac: &mut AdmissionController, tier| ac.decide_tiered(tier, 0.0, 4, true);
+        assert_eq!(d(&mut ac, TenantTier::Premium), AdmitDecision::AdmitFallbackOnly);
+        assert_eq!(d(&mut ac, TenantTier::Standard), AdmitDecision::AdmitFallbackOnly);
+        assert_eq!(d(&mut ac, TenantTier::BestEffort), AdmitDecision::Shed);
+        assert_eq!(ac.counts(), (0, 2, 0));
+        assert_eq!(ac.shed_count(), 1);
+        // Under the saturation bound everyone is admitted.
+        assert_eq!(ac.decide_tiered(TenantTier::BestEffort, 0.0, 3, true), AdmitDecision::Admit);
+        // Plan-store hits need no compile: saturation never sheds them.
+        assert_eq!(ac.decide_tiered(TenantTier::BestEffort, 0.0, 100, false), AdmitDecision::Admit);
+    }
+
+    #[test]
+    fn blown_sla_sheds_lower_tiers_before_the_hard_bound() {
+        // Queue delay 150 ms: inside Premium's 250 ms bound, beyond
+        // Standard's 100 ms and BestEffort's 25 ms SLAs.
+        let mut ac = AdmissionController::new(AdmissionConfig::default());
+        assert_eq!(ac.decide_tiered(TenantTier::Premium, 150.0, 0, true), AdmitDecision::Admit);
+        assert_eq!(ac.decide_tiered(TenantTier::Standard, 150.0, 0, true), AdmitDecision::Shed);
+        assert_eq!(ac.decide_tiered(TenantTier::BestEffort, 30.0, 0, true), AdmitDecision::Shed);
+        assert_eq!(ac.decide_tiered(TenantTier::BestEffort, 20.0, 0, true), AdmitDecision::Admit);
+        // Premium keeps the tier-blind semantics exactly: past the hard
+        // bound it is a Reject, not a Shed.
+        assert_eq!(ac.decide_tiered(TenantTier::Premium, 250.1, 0, true), AdmitDecision::Reject);
+        assert_eq!(ac.counts(), (2, 0, 1));
+        assert_eq!(ac.shed_count(), 2);
+    }
+
+    #[test]
+    fn shed_decisions_cut_on_the_admission_tick_boundary() {
+        // The shed decision must be arrival-cut deterministic: every
+        // task inside one tick window sees the same pending sample, so
+        // whether a BestEffort task sheds depends only on its virtual
+        // arrival time — never on live (executor-dependent) queue state.
+        let mut ac = AdmissionController::new(AdmissionConfig {
+            max_pending_compiles: 4,
+            ..Default::default()
+        });
+        let mut tick = AdmissionTick::new(10.0);
+        // t=0: the window samples 6 pending (saturated).
+        let p0 = tick.pending(0.0, || 6);
+        assert_eq!(ac.decide_tiered(TenantTier::BestEffort, 0.0, p0, true), AdmitDecision::Shed);
+        // t=5: the live count has drained to 0, but the tick still
+        // serves the cached sample — same window, same shed decision.
+        let p1 = tick.pending(5.0, || 0);
+        assert_eq!(p1, 6);
+        assert_eq!(ac.decide_tiered(TenantTier::BestEffort, 5.0, p1, true), AdmitDecision::Shed);
+        // t=10: the boundary resamples; the drained pool admits.
+        let p2 = tick.pending(10.0, || 0);
+        assert_eq!(p2, 0);
+        assert_eq!(ac.decide_tiered(TenantTier::BestEffort, 10.0, p2, true), AdmitDecision::Admit);
+        assert_eq!(ac.shed_count(), 2);
     }
 
     #[test]

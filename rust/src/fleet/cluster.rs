@@ -207,6 +207,93 @@ mod tests {
         assert!(shapes > 12, "dynamic traffic must vary shapes: {shapes}");
     }
 
+    /// The CI-gated QoS rail: multi-tenant traffic with priority
+    /// tiers, seeded device churn AND fault injection, sharded four
+    /// ways — and still every shard's decision stream (admission
+    /// verdicts including sheds, placements, migration resolutions) is
+    /// byte-identical between the virtual and wall-clock executors.
+    #[test]
+    fn tenant_churn_fault_decisions_converge_across_executors() {
+        let traffic = TrafficConfig {
+            tasks: 240,
+            templates: 12,
+            mean_interarrival_ms: 1.0,
+            min_ops: 20,
+            max_ops: 40,
+            dynamic_shapes: true,
+            tenants: 6,
+            ..Default::default()
+        };
+        let families = build_template_families(&traffic);
+        let trace = generate_trace(&traffic);
+        let base = FleetOptions {
+            // Four devices per shard: every shard's churn plan has a
+            // fault victim plus drain/rejoin candidates.
+            registry: DeviceRegistry::mixed(8, 8, 2),
+            compile_workers: 2,
+            shards: 4,
+            admission_tick_ms: 5.0,
+            churn: true,
+            inject_faults: true,
+            ..Default::default()
+        };
+        let run = |executor: ExecutorKind| {
+            let opts = FleetOptions { executor, ..base.clone() };
+            let mut svc = ShardedFleetService::with_families(opts, families.clone());
+            svc.run_trace(&trace)
+        };
+        let virt = run(ExecutorKind::VirtualTime);
+        let wall = run(ExecutorKind::WallClock { threads: 2 });
+
+        assert_eq!(virt.tasks(), 240, "routing must not drop tasks");
+        assert_eq!(wall.tasks(), 240);
+        assert_eq!(virt.decision_digests(), wall.decision_digests());
+        for (v, w) in virt.shards.iter().zip(&wall.shards) {
+            let (vr, wr) = (&v.report, &w.report);
+            // Every QoS and churn counter is virtual bookkeeping, so
+            // the executors must agree exactly — not approximately.
+            assert_eq!(vr.sheds, wr.sheds, "shard {}", v.shard);
+            assert_eq!(vr.sla_violations, wr.sla_violations, "shard {}", v.shard);
+            assert_eq!(vr.migrations, wr.migrations, "shard {}", v.shard);
+            assert_eq!(vr.migrations_degraded, wr.migrations_degraded, "shard {}", v.shard);
+            assert_eq!(vr.churn_events, wr.churn_events, "shard {}", v.shard);
+            assert_eq!(vr.faults, wr.faults, "shard {}", v.shard);
+            assert_eq!(vr.regressions, 0, "shard {}", v.shard);
+            assert_eq!(wr.regressions, 0, "shard {}", v.shard);
+            assert_eq!(vr.tenants.len(), wr.tenants.len(), "shard {}", v.shard);
+            for (vt, wt) in vr.tenants.iter().zip(&wr.tenants) {
+                assert_eq!(vt.tenant, wt.tenant);
+                assert_eq!(vt.tasks, wt.tasks);
+                assert_eq!(vt.served, wt.served);
+                assert_eq!(vt.shed, wt.shed);
+                assert_eq!(vt.rejected, wt.rejected);
+                assert_eq!(vt.sla_violations, wt.sla_violations);
+            }
+            // Accounting still closes with the shed lane in play.
+            assert_eq!(
+                vr.admitted + vr.fallback_only + vr.rejected + vr.sheds,
+                vr.tasks,
+                "shard {}",
+                v.shard
+            );
+            // The tier contract: premium is never shed and never
+            // violates its SLA (tier-aware admission sheds pre-serve).
+            for t in vr.tenants.iter().filter(|t| t.tier == "premium") {
+                assert_eq!(t.shed, 0, "premium is never shed");
+                assert_eq!(t.sla_violations, 0, "premium SLA must hold");
+            }
+        }
+        // Fault injection is per shard: every shard's registry slice
+        // keeps at least two devices, so each seeded plan kills exactly
+        // one. (Whether a given shard's sessions happen to span its
+        // seeded boundaries is load-dependent — the guaranteed-migration
+        // paths are pinned by the `fleet::service` churn tests.)
+        let faults: usize = virt.shards.iter().map(|s| s.report.faults).sum();
+        assert_eq!(faults, 4, "every shard's churn plan kills one device");
+        let violations: usize = virt.shards.iter().map(|s| s.report.sla_violations).sum();
+        assert_eq!(violations, 0, "tier-aware shedding pre-empts every violation");
+    }
+
     /// Satellite: real workload structure keys spread near-uniformly
     /// over 2/4/8 shards. Process stability of the underlying hash is
     /// pinned separately by `queue::tests::shard_routing_is_process_stable_fnv`

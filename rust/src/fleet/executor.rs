@@ -620,10 +620,20 @@ fn compile_span(kind: &WallJobKind) -> (EventKind, Option<EventKind>, bool) {
     }
 }
 
+/// A message on a device's serving channel: a task to serve, or the
+/// fault-injection kill marker. `Kill` makes the serving thread exit
+/// after draining everything queued before it — FIFO channel order is
+/// what guarantees pre-kill work completes and the dispatcher's
+/// placement exclusion guarantees nothing is sent after it.
+pub(crate) enum ServeMsg {
+    Job(ServeJob),
+    Kill,
+}
+
 /// The running wall-clock substrate: compile workers + serving threads.
 pub(crate) struct WallClockPool {
     shared: Arc<Shared>,
-    serve_txs: Vec<mpsc::Sender<ServeJob>>,
+    serve_txs: Vec<mpsc::Sender<ServeMsg>>,
     compile_handles: Vec<JoinHandle<()>>,
     serve_handles: Vec<JoinHandle<()>>,
     totals: Arc<Mutex<ServeTotals>>,
@@ -682,7 +692,7 @@ impl WallClockPool {
         let mut serve_txs = Vec::with_capacity(devices);
         let serve_handles = (0..devices)
             .map(|d| {
-                let (tx, rx) = mpsc::channel::<ServeJob>();
+                let (tx, rx) = mpsc::channel::<ServeMsg>();
                 serve_txs.push(tx);
                 let s = Arc::clone(&shared);
                 let t = Arc::clone(&totals);
@@ -780,8 +790,16 @@ impl WallClockPool {
     /// Hand an admitted task to its device's serving thread.
     pub(crate) fn send_serve(&self, job: ServeJob) {
         self.serve_txs[job.device]
-            .send(job)
+            .send(ServeMsg::Job(job))
             .expect("serving thread alive until pool shutdown");
+    }
+
+    /// Deliver the fault-injection kill marker to a device's serving
+    /// thread. Queued work ahead of the marker still drains (FIFO); the
+    /// thread then exits, modelling a device dying mid-serve. A closed
+    /// channel (thread already gone) is fine — kills are idempotent.
+    pub(crate) fn send_kill(&self, device: usize) {
+        let _ = self.serve_txs[device].send(ServeMsg::Kill);
     }
 
     /// Quiesce and tear down: wait for every compile to publish, stop
@@ -1004,12 +1022,19 @@ fn run_compile(s: &Shared, job: WallJob) {
 /// the session's current program, hot-swapping the moment the compile
 /// pool publishes the plan this task is waiting on.
 fn serve_loop(
-    rx: mpsc::Receiver<ServeJob>,
+    rx: mpsc::Receiver<ServeMsg>,
     s: &Shared,
     totals: &Mutex<ServeTotals>,
     obs: Option<(TrackHandle, u32)>,
 ) {
-    while let Ok(job) = rx.recv() {
+    while let Ok(msg) = rx.recv() {
+        let job = match msg {
+            ServeMsg::Job(job) => job,
+            // Injected fault: the device dies. Everything queued before
+            // the marker has already drained; the dispatcher never
+            // routes to this device after the kill time.
+            ServeMsg::Kill => break,
+        };
         let t0_us = obs.as_ref().map(|_| epoch_us(s));
         let mut swapped_us: Option<f64> = None;
         let mut fs_ms: Option<f64> = None;

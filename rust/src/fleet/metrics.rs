@@ -15,6 +15,29 @@ pub struct DeviceUtilization {
     pub utilization: f64,
 }
 
+/// Per-tenant QoS line: admission outcomes, SLA verdicts and
+/// end-to-end latency for one tenant's slice of the trace. All virtual
+/// bookkeeping — identical across executors and replays.
+#[derive(Debug, Clone)]
+pub struct TenantQos {
+    pub tenant: u32,
+    /// Priority tier name: "premium", "standard" or "best_effort".
+    pub tier: &'static str,
+    /// The tier's queue-wait SLA bound in virtual ms.
+    pub sla_ms: f64,
+    pub tasks: usize,
+    pub served: usize,
+    /// Tasks shed by QoS load-shedding (lower tiers under pressure).
+    pub shed: usize,
+    /// Tasks rejected by the tier-blind backlog bound.
+    pub rejected: usize,
+    /// Served tasks whose queue wait blew the tier's SLA (admission
+    /// sheds these pre-serve, so nonzero means a policy bug).
+    pub sla_violations: usize,
+    /// End-to-end latency (arrival → virtual completion) percentiles.
+    pub e2e: Summary,
+}
+
 /// Everything one trace replay produces. Under the virtual-time
 /// executor all quantities are deterministic: two replays of the same
 /// (seed, config) are byte-identical, which the production bench
@@ -111,6 +134,23 @@ pub struct FleetReport {
     pub makespan_ms: f64,
     /// Real elapsed time of the wall-clock run (0 under virtual time).
     pub wall_elapsed_ms: f64,
+    /// Tasks shed by QoS load-shedding (fleet-wide; per-tenant splits
+    /// are in `tenants`).
+    pub sheds: usize,
+    /// Served tasks whose queue wait blew their tier's SLA — the CI
+    /// rail holds the top tier at zero.
+    pub sla_violations: usize,
+    /// In-flight session migrations forced by churn/faults.
+    pub migrations: usize,
+    /// Migrations whose plan could not follow the session and degraded
+    /// to the destination fallback.
+    pub migrations_degraded: usize,
+    /// Departure/rejoin events in the run's churn schedule.
+    pub churn_events: usize,
+    /// Injected device kills in the run's churn schedule.
+    pub faults: usize,
+    /// Per-tenant QoS lines, in tenant id order.
+    pub tenants: Vec<TenantQos>,
     pub per_device: Vec<DeviceUtilization>,
     /// Flight-recorder report (stage-attributed latency + lock
     /// contention); `None` unless `FleetOptions::observe` was on and
@@ -195,6 +235,33 @@ impl FleetReport {
             .set("iter_p99_ms", self.iter_p99_ms)
             .set("makespan_ms", self.makespan_ms)
             .set("wall_elapsed_ms", self.wall_elapsed_ms);
+        let mut qos = JsonValue::obj();
+        qos.set("sheds", self.sheds)
+            .set("sla_violations", self.sla_violations)
+            .set("migrations", self.migrations)
+            .set("migrations_degraded", self.migrations_degraded)
+            .set("churn_events", self.churn_events)
+            .set("faults", self.faults);
+        let tenants: Vec<JsonValue> = self
+            .tenants
+            .iter()
+            .map(|t| {
+                let mut tj = JsonValue::obj();
+                tj.set("tenant", t.tenant as u64)
+                    .set("tier", t.tier)
+                    .set("sla_ms", t.sla_ms)
+                    .set("tasks", t.tasks)
+                    .set("served", t.served)
+                    .set("shed", t.shed)
+                    .set("rejected", t.rejected)
+                    .set("sla_violations", t.sla_violations)
+                    .set("e2e_p50_ms", t.e2e.p50)
+                    .set("e2e_p99_ms", t.e2e.p99);
+                tj
+            })
+            .collect();
+        qos.set("tenants", JsonValue::Arr(tenants));
+        o.set("qos", qos);
         if let Some(obs) = &self.observability {
             o.set("observability", obs.to_json());
         }
@@ -317,6 +384,20 @@ impl FleetReport {
                 fmt_f(self.saved_frac() * 100.0, 1)
             ),
         ]);
+        if self.sheds > 0 || self.sla_violations > 0 {
+            t.row(vec!["QoS sheds".to_string(), self.sheds.to_string()]);
+            t.row(vec!["SLA violations".to_string(), self.sla_violations.to_string()]);
+        }
+        if self.churn_events > 0 || self.faults > 0 {
+            t.row(vec![
+                "churn events / injected faults".to_string(),
+                format!("{} / {}", self.churn_events, self.faults),
+            ]);
+            t.row(vec![
+                "session migrations (degraded)".to_string(),
+                format!("{} ({})", self.migrations, self.migrations_degraded),
+            ]);
+        }
         t.row(vec!["makespan".to_string(), format!("{} ms", fmt_f(self.makespan_ms, 1))]);
         if self.wall_elapsed_ms > 0.0 {
             t.row(vec![
@@ -326,6 +407,28 @@ impl FleetReport {
         }
         out.push_str(&t.render());
         out.push('\n');
+
+        if self.tenants.len() > 1 {
+            let mut q = Table::new(vec![
+                "tenant", "tier", "sla ms", "tasks", "served", "shed", "rejected", "sla viol",
+                "e2e p99",
+            ]);
+            for t in &self.tenants {
+                q.row(vec![
+                    t.tenant.to_string(),
+                    t.tier.to_string(),
+                    fmt_f(t.sla_ms, 0),
+                    t.tasks.to_string(),
+                    t.served.to_string(),
+                    t.shed.to_string(),
+                    t.rejected.to_string(),
+                    t.sla_violations.to_string(),
+                    fmt_f(t.e2e.p99, 2),
+                ]);
+            }
+            out.push_str(&q.render());
+            out.push('\n');
+        }
 
         let mut d = Table::new(vec!["device", "class", "tasks", "busy ms", "util %"]);
         for dev in &self.per_device {
@@ -471,6 +574,8 @@ impl ClusterReport {
                     .set("misses", s.report.misses)
                     .set("explore_jobs", s.report.explore_jobs)
                     .set("regressions", s.report.regressions)
+                    .set("sheds", s.report.sheds)
+                    .set("migrations", s.report.migrations)
                     .set("makespan_ms", s.report.makespan_ms)
                     .set("decision_digest", format!("{:#018x}", s.decision_digest));
                 let mut lj = JsonValue::obj();
@@ -559,6 +664,36 @@ mod tests {
             iter_p99_ms: 1.5,
             makespan_ms: 123.0,
             wall_elapsed_ms: 0.0,
+            sheds: 1,
+            sla_violations: 0,
+            migrations: 2,
+            migrations_degraded: 1,
+            churn_events: 3,
+            faults: 1,
+            tenants: vec![
+                TenantQos {
+                    tenant: 0,
+                    tier: "premium",
+                    sla_ms: 250.0,
+                    tasks: 6,
+                    served: 6,
+                    shed: 0,
+                    rejected: 0,
+                    sla_violations: 0,
+                    e2e: crate::util::summarize(&[1.0, 2.0, 3.0]),
+                },
+                TenantQos {
+                    tenant: 2,
+                    tier: "best_effort",
+                    sla_ms: 25.0,
+                    tasks: 4,
+                    served: 3,
+                    shed: 1,
+                    rejected: 0,
+                    sla_violations: 0,
+                    e2e: crate::util::summarize(&[1.5, 2.5]),
+                },
+            ],
             per_device: vec![DeviceUtilization {
                 id: 0,
                 class: "V100",
@@ -608,6 +743,7 @@ mod tests {
             "compile_p99_ms",
             "compile_max_ms",
             "saved_frac",
+            "qos",
             "devices",
         ] {
             assert!(j.get(key).is_some(), "missing {key}");
@@ -618,6 +754,30 @@ mod tests {
         assert_eq!(j.get("distinct_shapes").and_then(|v| v.as_usize()), Some(5));
         assert_eq!(j.get("gemm_absorbed").and_then(|v| v.as_usize()), Some(6));
         assert_eq!(j.get("footprint_pruned").and_then(|v| v.as_usize()), Some(9));
+    }
+
+    #[test]
+    fn qos_section_carries_tenant_rows_and_counters() {
+        let j = report().to_json();
+        let qos = j.get("qos").expect("qos section");
+        assert_eq!(qos.get("sheds").and_then(|v| v.as_usize()), Some(1));
+        assert_eq!(qos.get("sla_violations").and_then(|v| v.as_usize()), Some(0));
+        assert_eq!(qos.get("migrations").and_then(|v| v.as_usize()), Some(2));
+        assert_eq!(qos.get("churn_events").and_then(|v| v.as_usize()), Some(3));
+        assert_eq!(qos.get("faults").and_then(|v| v.as_usize()), Some(1));
+        let tenants = match qos.get("tenants") {
+            Some(JsonValue::Arr(v)) => v,
+            other => panic!("qos.tenants must be an array: {other:?}"),
+        };
+        assert_eq!(tenants.len(), 2);
+        assert_eq!(tenants[0].get("tier").and_then(|v| v.as_str()), Some("premium"));
+        assert_eq!(tenants[1].get("shed").and_then(|v| v.as_usize()), Some(1));
+        assert!(tenants[0].get("e2e_p99_ms").and_then(|v| v.as_f64()).unwrap() > 0.0);
+        // Render shows the tenant table and the churn/QoS rows.
+        let text = report().render();
+        assert!(text.contains("QoS sheds"));
+        assert!(text.contains("churn events / injected faults"));
+        assert!(text.contains("best_effort"));
     }
 
     #[test]

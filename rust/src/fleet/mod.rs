@@ -57,6 +57,19 @@
 //! calibrated params — published only when strictly faster, hot-swapped
 //! into in-flight sessions, and decided entirely on the dispatcher so
 //! both executors stay decision-identical.
+//!
+//! Multi-tenant QoS under churn: traffic can carry per-task tenants
+//! ([`TrafficConfig::tenants`]) with priority tiers ([`TenantTier`]) —
+//! Premium admits exactly like the tier-blind fleet while Standard and
+//! BestEffort shed or degrade under pressure at the dispatcher, so the
+//! per-shard decision digests stay executor-invariant. A seeded
+//! [`registry::ChurnPlan`] takes devices away mid-trace (and with
+//! [`FleetOptions::inject_faults`] kills one outright, delivered to the
+//! wall-clock serving thread as a real kill marker); in-flight sessions
+//! migrate to survivors with their plan following through the
+//! port/reshape feasibility ladder. The report's `qos` section carries
+//! per-tenant p50/p99, shed/violation counts and churn/migration
+//! counters, gated by `ci/check_bench.sh`.
 
 pub mod admission;
 pub mod cluster;
@@ -73,13 +86,15 @@ pub use admission::{AdmissionConfig, AdmissionController, AdmissionTick, AdmitDe
 pub use cluster::ShardedFleetService;
 pub use epoch::EpochCell;
 pub use executor::ExecutorKind;
-pub use metrics::{ClusterReport, DeviceUtilization, FleetReport, ShardRollup};
+pub use metrics::{ClusterReport, DeviceUtilization, FleetReport, ShardRollup, TenantQos};
 pub use queue::{owner_hash, shard_of, QueueStats, WorkStealingQueue};
-pub use registry::{DeviceId, DeviceRegistry, RegisteredDevice};
+pub use registry::{
+    ChurnEvent, ChurnEventKind, ChurnPlan, DeviceId, DeviceRegistry, RegisteredDevice,
+};
 pub use service::{FleetOptions, FleetService};
 pub use sim::{
     build_template_families, build_templates, generate_trace, FleetTask, ModelFamily, ShapeDist,
-    TaskShape, TemplateFamily, TrafficConfig,
+    TaskShape, TemplateFamily, TenantTier, TrafficConfig,
 };
 pub use store::{PlanKey, PlanLookup, SharedPlanStore, StoreStats};
 

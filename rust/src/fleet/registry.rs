@@ -6,8 +6,15 @@
 //! class — V100, T4, ...) and a serving capacity (concurrent session
 //! slots). Plans are tuned per device *class* and shared across
 //! instances of that class (see [`super::store`]).
+//!
+//! A [`ChurnPlan`] makes the population *elastic*: devices leave and
+//! rejoin mid-trace, and fault injection kills one mid-serve. The plan
+//! is pure virtual-time data seeded from the trace, so both executors
+//! see the identical membership timeline — placement exclusion and
+//! session migration stay decision-deterministic.
 
 use crate::gpu::DeviceSpec;
+use crate::util::Prng;
 
 /// Index of a registered device instance.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
@@ -120,6 +127,133 @@ impl DeviceRegistry {
     }
 }
 
+/// What happens to a device at a churn event.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ChurnEventKind {
+    /// The device drains out of the placement pool (maintenance,
+    /// preemption); it may rejoin later.
+    Leave,
+    /// The device rejoins the placement pool.
+    Join,
+    /// Fault injection: the device dies mid-serve and never returns;
+    /// its queued work redistributes to survivors.
+    Kill,
+}
+
+/// One membership change at a virtual timestamp.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ChurnEvent {
+    pub at_ms: f64,
+    pub device: usize,
+    pub kind: ChurnEventKind,
+}
+
+/// A deterministic membership timeline for one dispatcher's registry.
+/// Events are sorted by time; devices start active. Device 0 never
+/// churns, so placement always has at least one live target.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ChurnPlan {
+    events: Vec<ChurnEvent>,
+}
+
+impl ChurnPlan {
+    /// A plan from explicit events (test traces). Sorted by time.
+    pub fn from_events(mut events: Vec<ChurnEvent>) -> ChurnPlan {
+        assert!(
+            events.iter().all(|e| e.device != 0),
+            "device 0 is the churn-free placement anchor"
+        );
+        events.sort_by(|a, b| a.at_ms.total_cmp(&b.at_ms));
+        ChurnPlan { events }
+    }
+
+    /// The seeded plan a fleet builds from its own trace: roughly a
+    /// third of the non-anchor devices leave mid-trace and rejoin
+    /// later, and with `inject_faults` one device is killed at 60% of
+    /// the horizon. Inputs are all virtual (device count, the trace's
+    /// last arrival, a trace-derived seed), so the plan — like every
+    /// admission/placement decision built on it — is executor-invariant.
+    pub fn seeded(devices: usize, horizon_ms: f64, seed: u64, inject_faults: bool) -> ChurnPlan {
+        let mut events = Vec::new();
+        if devices >= 2 && horizon_ms > 0.0 {
+            let mut prng = Prng::new(seed ^ 0xC4E1_D1ED);
+            let victim = if inject_faults { 1 + prng.below(devices - 1) } else { 0 };
+            for device in 1..devices {
+                if device == victim {
+                    continue;
+                }
+                // ~1 in 3 devices churns: leave in the middle third of
+                // the trace, rejoin in the final third.
+                if prng.below(3) == 0 {
+                    let leave = horizon_ms * (0.3 + 0.3 * prng.f64());
+                    let join = horizon_ms * (0.7 + 0.2 * prng.f64());
+                    events.push(ChurnEvent { at_ms: leave, device, kind: ChurnEventKind::Leave });
+                    events.push(ChurnEvent { at_ms: join, device, kind: ChurnEventKind::Join });
+                }
+            }
+            if inject_faults {
+                events.push(ChurnEvent {
+                    at_ms: horizon_ms * 0.6,
+                    device: victim,
+                    kind: ChurnEventKind::Kill,
+                });
+            }
+        }
+        ChurnPlan::from_events(events)
+    }
+
+    /// Is `device` in the placement pool at virtual time `t`?
+    pub fn active(&self, device: usize, t: f64) -> bool {
+        let mut active = true;
+        for e in &self.events {
+            if e.at_ms > t {
+                break;
+            }
+            if e.device == device {
+                active = matches!(e.kind, ChurnEventKind::Join);
+            }
+        }
+        active
+    }
+
+    /// The kill timestamp of `device`, when fault injection targets it.
+    pub fn kill_time(&self, device: usize) -> Option<f64> {
+        self.events
+            .iter()
+            .find(|e| e.device == device && e.kind == ChurnEventKind::Kill)
+            .map(|e| e.at_ms)
+    }
+
+    /// The first Leave/Kill boundary for `device` strictly after `t`,
+    /// if any — the point an in-flight session on it must migrate.
+    pub fn next_departure(&self, device: usize, t: f64) -> Option<f64> {
+        self.events
+            .iter()
+            .find(|e| {
+                e.device == device
+                    && e.at_ms > t
+                    && matches!(e.kind, ChurnEventKind::Leave | ChurnEventKind::Kill)
+            })
+            .map(|e| e.at_ms)
+    }
+
+    /// All events, sorted by time.
+    pub fn events(&self) -> &[ChurnEvent] {
+        &self.events
+    }
+
+    /// (join/leave churn events, kill faults) in the plan.
+    pub fn counts(&self) -> (usize, usize) {
+        let faults = self.events.iter().filter(|e| e.kind == ChurnEventKind::Kill).count();
+        (self.events.len() - faults, faults)
+    }
+
+    /// True when the timeline is static (no churn, no faults).
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -169,5 +303,53 @@ mod tests {
     #[should_panic(expected = "cannot spread")]
     fn partition_rejects_more_shards_than_devices() {
         DeviceRegistry::mixed(1, 1, 1).partition(3);
+    }
+
+    #[test]
+    fn churn_plan_tracks_membership_over_time() {
+        let plan = ChurnPlan::from_events(vec![
+            ChurnEvent { at_ms: 100.0, device: 1, kind: ChurnEventKind::Leave },
+            ChurnEvent { at_ms: 300.0, device: 1, kind: ChurnEventKind::Join },
+            ChurnEvent { at_ms: 200.0, device: 2, kind: ChurnEventKind::Kill },
+        ]);
+        assert!(plan.active(1, 0.0) && plan.active(2, 0.0));
+        assert!(!plan.active(1, 100.0), "leave takes effect at its timestamp");
+        assert!(plan.active(1, 300.0), "join restores membership");
+        assert!(!plan.active(2, 250.0) && !plan.active(2, 1e9), "a kill is permanent");
+        assert!(plan.active(0, 150.0), "the anchor device never churns");
+        assert_eq!(plan.kill_time(2), Some(200.0));
+        assert_eq!(plan.kill_time(1), None);
+        assert_eq!(plan.next_departure(1, 0.0), Some(100.0));
+        assert_eq!(plan.next_departure(1, 100.0), None, "already departed");
+        assert_eq!(plan.counts(), (2, 1));
+    }
+
+    #[test]
+    fn seeded_churn_plans_are_deterministic_and_spare_the_anchor() {
+        let a = ChurnPlan::seeded(8, 1000.0, 42, true);
+        assert_eq!(a, ChurnPlan::seeded(8, 1000.0, 42, true), "plan must be seeded");
+        assert_ne!(a, ChurnPlan::seeded(8, 1000.0, 43, true));
+        let (churn, faults) = a.counts();
+        assert_eq!(faults, 1, "fault injection kills exactly one device");
+        assert!(churn >= 2, "an 8-device plan churns at least one device: {a:?}");
+        assert!(a.events().iter().all(|e| e.device != 0 && e.device < 8));
+        assert!(a.events().iter().all(|e| e.at_ms > 0.0 && e.at_ms < 1000.0));
+        assert!(a.events().windows(2).all(|w| w[0].at_ms <= w[1].at_ms), "sorted by time");
+        // Without faults there is no kill, and a 1-device fleet (or an
+        // empty horizon) never churns at all.
+        let (_, f2) = ChurnPlan::seeded(8, 1000.0, 42, false).counts();
+        assert_eq!(f2, 0);
+        assert!(ChurnPlan::seeded(1, 1000.0, 42, true).is_empty());
+        assert!(ChurnPlan::seeded(8, 0.0, 42, true).is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "anchor")]
+    fn churn_plan_rejects_events_on_the_anchor_device() {
+        ChurnPlan::from_events(vec![ChurnEvent {
+            at_ms: 1.0,
+            device: 0,
+            kind: ChurnEventKind::Leave,
+        }]);
     }
 }

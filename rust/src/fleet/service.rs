@@ -49,10 +49,10 @@ use super::executor::{
     publish_reexplored, shard_partial, ExecutorKind, FleetCounters, LatencyMap, LatencyTable,
     PublishedLatency, ServeJob, ShardJoin, WallClockPool, WallJob, WallJobKind,
 };
-use super::metrics::{DeviceUtilization, FleetReport};
+use super::metrics::{DeviceUtilization, FleetReport, TenantQos};
 use super::queue::{owner_hash, QueueStats, WorkStealingQueue};
-use super::registry::DeviceRegistry;
-use super::sim::{FleetTask, TaskShape, TemplateFamily};
+use super::registry::{ChurnPlan, DeviceRegistry};
+use super::sim::{FleetTask, TaskShape, TemplateFamily, TenantTier};
 use super::store::{PlanKey, PlanLookup, SharedPlanStore};
 use crate::codegen::calibrate::{self, Calibrator};
 use crate::coordinator::{ServiceMetrics, Session};
@@ -66,7 +66,7 @@ use crate::pipeline::{self, OptimizedProgram, Tech};
 use crate::util::hash::{fnv1a_u64, FNV_OFFSET};
 use crate::util::summarize;
 use crate::workloads::Workload;
-use std::collections::{HashMap, HashSet};
+use std::collections::{BTreeMap, HashMap, HashSet};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
@@ -129,6 +129,19 @@ pub struct FleetOptions {
     /// scheduling decisions; forced off without the `obs` cargo
     /// feature.
     pub observe: bool,
+    /// Device churn: synthesize a seeded [`ChurnPlan`] for the trace —
+    /// devices leave mid-trace and later rejoin, and in-flight sessions
+    /// migrate off departing devices (plan following the session
+    /// through the port/reshape feasibility ladder, degrading to the
+    /// destination fallback when infeasible).
+    pub churn: bool,
+    /// Explicit churn schedule — takes precedence over the synthesized
+    /// plan, so tests and replays can pin exact departure times.
+    pub churn_plan: Option<ChurnPlan>,
+    /// Fault injection: the synthesized churn plan also kills one
+    /// device mid-serve (no rejoin), and the wall-clock executor
+    /// delivers a real kill marker to that device's serving thread.
+    pub inject_faults: bool,
 }
 
 impl Default for FleetOptions {
@@ -150,6 +163,9 @@ impl Default for FleetOptions {
             drift_bound: 1.4,
             min_calibration_samples: 8,
             observe: false,
+            churn: false,
+            churn_plan: None,
+            inject_faults: false,
         }
     }
 }
@@ -169,6 +185,36 @@ struct CompileJob {
 enum FsLatency {
     Known(PublishedLatency),
     Pending { key: u64, class: &'static str },
+}
+
+/// Dispatcher-side record of one in-flight session migration (churn
+/// Leave or injected Kill on its device): where the session landed and
+/// the split point for the virtual busy/fallback accounting.
+struct Migration {
+    to_d: usize,
+    to_s: usize,
+    /// Virtual time the session left the source device.
+    at_ms: f64,
+    /// Iterations completed on the source before the move.
+    iters_before: usize,
+    /// Virtual GPU-ms served on the source before the move.
+    served_before: f64,
+    /// Destination-class fallback (the wall-clock executor's migrated
+    /// session serves it until — unless — the plan followed).
+    fallback: Arc<OptimizedProgram>,
+    fb_ms: f64,
+}
+
+/// Per-tenant QoS ledger (virtual bookkeeping, dispatcher-only writes —
+/// identical across executors by construction).
+#[derive(Debug, Default)]
+struct TenantAccum {
+    tasks: usize,
+    served: usize,
+    shed: usize,
+    rejected: usize,
+    sla_violations: usize,
+    e2e_ms: Vec<f64>,
 }
 
 /// One instantiated (template, shape): the workload the fleet serves
@@ -338,6 +384,11 @@ pub struct FleetService {
     /// (graph key, class) already re-explored (one drift-triggered
     /// recompile per pair — the loop must terminate).
     reexplored: HashSet<(u64, &'static str)>,
+    /// The run's churn schedule (empty ⇒ churn-free, the default).
+    churn: ChurnPlan,
+    /// Wall-clock only: whether each device's kill marker has been
+    /// delivered to its serving thread.
+    kill_signaled: Vec<bool>,
     /// Live wall-clock substrate during a `run_trace` (None ⇒ virtual).
     pool: Option<WallClockPool>,
     /// Flight recorder + stage accumulator (None ⇒ tracing off — the
@@ -346,6 +397,16 @@ pub struct FleetService {
     // Accumulators.
     submitted: usize,
     regressions: usize,
+    /// In-flight session migrations forced by churn/faults.
+    migrations: usize,
+    /// Migrations whose plan could not follow the session (port or
+    /// reshape infeasible on the destination) and degraded to fallback.
+    migrations_degraded: usize,
+    /// Served tasks whose queue wait blew their tenant tier's SLA.
+    sla_violations: usize,
+    /// Per-tenant QoS ledgers (BTreeMap: reports iterate in tenant id
+    /// order, deterministically).
+    tenant_qos: BTreeMap<u32, TenantAccum>,
     served_gpu_ms: f64,
     fallback_gpu_ms: f64,
     waits_ms: Vec<f64>,
@@ -409,10 +470,16 @@ impl FleetService {
             sampled: HashSet::new(),
             drift_pending: HashSet::new(),
             reexplored: HashSet::new(),
+            churn: ChurnPlan::default(),
+            kill_signaled: vec![false; n_dev],
             pool: None,
             obs,
             submitted: 0,
             regressions: 0,
+            migrations: 0,
+            migrations_degraded: 0,
+            sla_violations: 0,
+            tenant_qos: BTreeMap::new(),
             served_gpu_ms: 0.0,
             fallback_gpu_ms: 0.0,
             waits_ms: Vec::new(),
@@ -437,6 +504,23 @@ impl FleetService {
     /// quiesces them before reporting; any compile-worker panic caught
     /// during the run is surfaced here as one dispatcher-side error.
     pub fn run_trace(&mut self, trace: &[FleetTask]) -> FleetReport {
+        // Resolve the churn schedule up front. The synthesized plan
+        // seeds from trace length and spans the arrival horizon — both
+        // virtual quantities, so every executor (and every replay of
+        // the same trace) resolves the identical schedule.
+        self.churn = match (&self.opts.churn_plan, self.opts.churn || self.opts.inject_faults) {
+            (Some(plan), _) => plan.clone(),
+            (None, true) => {
+                let horizon = trace.last().map(|t| t.arrival_ms).unwrap_or(0.0);
+                ChurnPlan::seeded(
+                    self.opts.registry.len(),
+                    horizon,
+                    trace.len() as u64,
+                    self.opts.inject_faults,
+                )
+            }
+            (None, false) => ChurnPlan::default(),
+        };
         if let ExecutorKind::WallClock { threads } = self.opts.executor {
             self.pool = Some(WallClockPool::start(
                 threads,
@@ -1043,10 +1127,125 @@ impl FleetService {
         }
     }
 
+    /// Move an in-flight session off a departing device (churn Leave or
+    /// injected Kill). Destination = least-loaded surviving slot; the
+    /// plan follows the session through the same feasibility ladder the
+    /// store's reuse tiers run — same class keeps it, a published
+    /// destination-class entry is adopted, a portable/bucket source is
+    /// re-lowered via [`pipeline::port_program`] /
+    /// [`pipeline::reshape_program`] (re-checking occupancy and
+    /// shared-memory staging on the destination class), and anything
+    /// else degrades to the destination fallback. Session-local by
+    /// design: nothing publishes to the store and no retune counters
+    /// move — a migration is not a compile. Returns (device, slot,
+    /// destination fallback, destination fallback ms).
+    fn migrate_session(
+        &mut self,
+        task_id: usize,
+        w: &Arc<Workload>,
+        key: PlanKey,
+        from_d: usize,
+        at_ms: f64,
+        fs_state: &mut Option<(FsLatency, f64)>,
+        src_class: &'static str,
+    ) -> (usize, usize, Arc<OptimizedProgram>, f64) {
+        // Destination: least-loaded active slot, source excluded. The
+        // churn anchor (device 0 never leaves) guarantees a survivor —
+        // a departing device is never device 0.
+        let (mut to_d, mut to_s) = (usize::MAX, 0usize);
+        for (d, slots) in self.slots.iter().enumerate() {
+            if d == from_d || (d != 0 && !self.churn.active(d, at_ms)) {
+                continue;
+            }
+            for (s, &free) in slots.iter().enumerate() {
+                if to_d == usize::MAX || free < self.slots[to_d][to_s] {
+                    (to_d, to_s) = (d, s);
+                }
+            }
+        }
+        assert!(to_d != usize::MAX, "churn anchor guarantees a surviving device");
+        let dest_spec = self.opts.registry.devices()[to_d].spec.clone();
+        let (dest_fallback, dest_fb_ms) = self.fallback_for(w, key, &dest_spec);
+        self.migrations += 1;
+
+        // Resolve what the migrated session serves (codes fold into the
+        // decision digest; every input is virtual bookkeeping).
+        let resolution: u64 = if dest_spec.name == src_class {
+            1 // same class: plan and latency carry over untouched
+        } else if fs_state.is_none() {
+            5 // was serving pure fallback; still is
+        } else {
+            // Cross-class with an optimized plan in flight: quiesce any
+            // in-flight compile of this graph/bucket first so the store
+            // and latency lookups below see exactly what the virtual
+            // replay's would.
+            self.barrier_wait(task_id, |pool| pool.await_plan(key));
+            if let Some(pl) = self.latency.get(&(key.exact.0, dest_spec.name)) {
+                *fs_state = Some((FsLatency::Known(pl), at_ms));
+                2 // destination class already published this graph
+            } else {
+                let ported = match self.store.lookup(key, dest_spec.name) {
+                    PlanLookup::Portable { source, .. } => {
+                        pipeline::port_program(&w.graph, &source, &dest_spec, w.loop_kind)
+                    }
+                    PlanLookup::BucketHit { source, .. } => {
+                        pipeline::reshape_program(&w.graph, &source, &dest_spec, w.loop_kind)
+                    }
+                    _ => None,
+                };
+                let adopted = ported.and_then(|prog| {
+                    let ms = iter_ms(&dest_spec, &prog, w.loop_kind);
+                    (!self.opts.never_negative || ms <= dest_fb_ms).then_some(ms)
+                });
+                match adopted {
+                    Some(ms) => {
+                        let lat = FsLatency::Known(PublishedLatency::first(ms));
+                        *fs_state = Some((lat, at_ms));
+                        3 // the plan ported with the session
+                    }
+                    None => {
+                        *fs_state = None;
+                        self.migrations_degraded += 1;
+                        4 // infeasible (or slower) on the destination
+                    }
+                }
+            }
+        };
+        for v in [task_id as u64, 6, from_d as u64, to_d as u64, resolution] {
+            self.decision_digest = fnv1a_u64(self.decision_digest, v);
+        }
+        if let Some(obs) = self.obs.as_ref() {
+            let kind = EventKind::Migrate { from: from_d as u32, to: to_d as u32 };
+            let (track, id) = (obs.dispatcher, task_id as u64);
+            obs.ring.record(Event { track, id, kind, ts_us: at_ms * 1e3, dur_us: 0.0 });
+        }
+        (to_d, to_s, dest_fallback, dest_fb_ms)
+    }
+
     /// Process one task arrival.
     fn submit(&mut self, task: &FleetTask) {
         let now = task.arrival_ms;
         self.submitted += 1;
+        let tier = task.tier();
+        self.tenant_qos.entry(task.tenant).or_default().tasks += 1;
+
+        // Fault injection (wall clock): deliver the kill marker to any
+        // device whose kill time has passed. FIFO channel order drains
+        // everything queued before the marker, and the placement
+        // exclusion below guarantees nothing is routed to the device
+        // after its kill time — so the marker is always last.
+        if !self.churn.is_empty() {
+            if let Some(pool) = self.pool.as_ref() {
+                for d in 0..self.kill_signaled.len() {
+                    if !self.kill_signaled[d]
+                        && matches!(self.churn.kill_time(d), Some(t) if t <= now)
+                    {
+                        pool.send_kill(d);
+                        self.kill_signaled[d] = true;
+                    }
+                }
+            }
+        }
 
         // 1. Instantiate the template at the task's requested shape
         // (cached per (template, shape); static traffic always resolves
@@ -1063,8 +1262,14 @@ impl FleetService {
         // executors place on the virtual slot clocks — trace arrivals
         // are virtual timestamps either way, which is what makes the
         // wall-clock run converge to the virtual replay's decisions.
+        // Churned-out devices are excluded; device 0 is the churn
+        // anchor (never in a plan), so a candidate always exists and
+        // churn-free runs place exactly as before.
         let (mut best_d, mut best_s) = (0usize, 0usize);
         for (d, slots) in self.slots.iter().enumerate() {
+            if d != 0 && !self.churn.active(d, now) {
+                continue;
+            }
             for (s, &free) in slots.iter().enumerate() {
                 if free < self.slots[best_d][best_s] {
                     (best_d, best_s) = (d, s);
@@ -1096,11 +1301,11 @@ impl FleetService {
             finishes.len()
         });
         let needs_compile = !matches!(&lookup, PlanLookup::Hit { .. });
-        let decision = self.admission.decide(wait, pending, needs_compile);
+        let decision = self.admission.decide_tiered(tier, wait, pending, needs_compile);
         // Fold the decision tuple into the per-dispatcher digest —
         // everything here derives from virtual bookkeeping, never from
         // wall-clock measurement.
-        let tier = match &lookup {
+        let reuse_tier = match &lookup {
             PlanLookup::Hit { .. } => 1u64,
             PlanLookup::Portable { .. } => 2,
             PlanLookup::BucketHit { .. } => 3,
@@ -1110,8 +1315,16 @@ impl FleetService {
             AdmitDecision::Admit => 1u64,
             AdmitDecision::AdmitFallbackOnly => 2,
             AdmitDecision::Reject => 3,
+            AdmitDecision::Shed => 4,
         };
-        for v in [task.id as u64, verdict_code, tier, best_d as u64, best_s as u64] {
+        for v in [
+            task.id as u64,
+            task.tenant as u64,
+            verdict_code,
+            reuse_tier,
+            best_d as u64,
+            best_s as u64,
+        ] {
             self.decision_digest = fnv1a_u64(self.decision_digest, v);
         }
         self.decision_digest = fnv1a_u64(self.decision_digest, wait.to_bits());
@@ -1120,13 +1333,22 @@ impl FleetService {
                 AdmitDecision::Admit => "admit",
                 AdmitDecision::AdmitFallbackOnly => "fallback_only",
                 AdmitDecision::Reject => "reject",
+                AdmitDecision::Shed => "shed",
             };
             let (track, id) = (obs.dispatcher, task.id as u64);
-            let kind = EventKind::TaskAdmitted { decision: verdict };
+            let kind = EventKind::TaskAdmitted { decision: verdict, tenant: task.tenant };
             obs.ring.record(Event { track, id, kind, ts_us: now * 1e3, dur_us: 0.0 });
         }
-        if decision == AdmitDecision::Reject {
-            return;
+        match decision {
+            AdmitDecision::Reject => {
+                self.tenant_qos.entry(task.tenant).or_default().rejected += 1;
+                return;
+            }
+            AdmitDecision::Shed => {
+                self.tenant_qos.entry(task.tenant).or_default().shed += 1;
+                return;
+            }
+            AdmitDecision::Admit | AdmitDecision::AdmitFallbackOnly => {}
         }
 
         let w = Arc::clone(&inst.w);
@@ -1206,25 +1428,40 @@ impl FleetService {
             _ => None,
         };
 
+        // Churn: the chosen device's first departure (Leave or Kill)
+        // after `now`, if any. None on churn-free runs — everything
+        // below then reduces to the pre-churn path, byte for byte.
+        let boundary = if self.churn.is_empty() {
+            None
+        } else {
+            self.churn.next_departure(best_d, now)
+        };
+        let had_fs = fs.is_some();
+
         // Wall clock: hand the task to its device's serving thread
         // *before* advancing the virtual clocks, so real serving
         // overlaps any publication wait the bookkeeping below incurs.
         // The session crosses the thread boundary serving the fallback
-        // and is hot-swapped there when the plan publishes (§6).
-        if let Some(pool) = self.pool.as_ref() {
-            let session = Session::serving_fallback(
-                Arc::clone(&fallback),
-                Arc::clone(&self.device_metrics[best_d]),
-                w.loop_kind,
-            );
-            pool.send_serve(ServeJob {
-                session,
-                device: best_d,
-                iterations: task.iterations,
-                fb_ms,
-                fs: fs.as_ref().map(|_| (key, spec.name)),
-                task: task.id,
-            });
+        // and is hot-swapped there when the plan publishes (§6). With a
+        // departure pending on this device the send is deferred until
+        // the virtual loop below resolves whether (and where) the
+        // session migrates.
+        if boundary.is_none() {
+            if let Some(pool) = self.pool.as_ref() {
+                let session = Session::serving_fallback(
+                    Arc::clone(&fallback),
+                    Arc::clone(&self.device_metrics[best_d]),
+                    w.loop_kind,
+                );
+                pool.send_serve(ServeJob {
+                    session,
+                    device: best_d,
+                    iterations: task.iterations,
+                    fb_ms,
+                    fs: fs.as_ref().map(|_| (key, spec.name)),
+                    task: task.id,
+                });
+            }
         }
 
         // 5. Advance the virtual clocks through the task's iterations,
@@ -1232,12 +1469,36 @@ impl FleetService {
         // virtual time (§6 at fleet scale). Both executors run this —
         // placement, waits and makespan all derive from it — but only
         // the virtual executor also records metrics here (the
-        // wall-clock executor's serving threads measure for real).
-        let fb_total = fb_ms * task.iterations as f64;
+        // wall-clock executor's serving threads measure for real). A
+        // pending departure on the placed device migrates the session
+        // the first iteration the virtual cursor crosses it.
         let mut fs_state = fs;
         let mut cursor = start;
         let mut served = 0.0f64;
-        for _ in 0..task.iterations {
+        let mut cur_fb = fb_ms;
+        let mut migrated: Option<Migration> = None;
+        for it in 0..task.iterations {
+            if migrated.is_none() && matches!(boundary, Some(b) if cursor >= b) {
+                let (to_d, to_s, dest_fallback, dest_fb_ms) = self.migrate_session(
+                    task.id,
+                    &w,
+                    key,
+                    best_d,
+                    cursor,
+                    &mut fs_state,
+                    spec.name,
+                );
+                migrated = Some(Migration {
+                    to_d,
+                    to_s,
+                    at_ms: cursor,
+                    iters_before: it,
+                    served_before: served,
+                    fallback: dest_fallback,
+                    fb_ms: dest_fb_ms,
+                });
+                cur_fb = dest_fb_ms;
+            }
             let iter = match &mut fs_state {
                 Some((lat, ready)) if cursor >= *ready => match lat {
                     FsLatency::Known(pl) => pl.at(cursor),
@@ -1266,26 +1527,106 @@ impl FleetService {
                         pl.at(cursor)
                     }
                 },
-                _ => fb_ms,
+                _ => cur_fb,
             };
             if self.pool.is_none() {
-                self.device_metrics[best_d].record_iteration(iter);
+                let dev = migrated.as_ref().map_or(best_d, |m| m.to_d);
+                self.device_metrics[dev].record_iteration(iter);
             }
             cursor += iter;
             served += iter;
         }
+
+        // The never-negative baseline is what the task would have cost
+        // on fallback *on the devices it actually ran on* — a migration
+        // to a slower class must not read as a regression.
+        let fb_total = match &migrated {
+            Some(m) => {
+                fb_ms * m.iters_before as f64 + m.fb_ms * (task.iterations - m.iters_before) as f64
+            }
+            None => fb_ms * task.iterations as f64,
+        };
+
+        // Wall clock, deferred send: the migration (if any) is resolved,
+        // so hand the serving thread(s) their split of the iterations.
+        // Both sends happen before any later arrival can deliver this
+        // device's kill marker, preserving FIFO drain order.
+        if boundary.is_some() {
+            if let Some(pool) = self.pool.as_ref() {
+                let src_iters = migrated.as_ref().map_or(task.iterations, |m| m.iters_before);
+                if src_iters > 0 {
+                    let session = Session::serving_fallback(
+                        Arc::clone(&fallback),
+                        Arc::clone(&self.device_metrics[best_d]),
+                        w.loop_kind,
+                    );
+                    pool.send_serve(ServeJob {
+                        session,
+                        device: best_d,
+                        iterations: src_iters,
+                        fb_ms,
+                        fs: had_fs.then_some((key, spec.name)),
+                        task: task.id,
+                    });
+                }
+                if let Some(m) = &migrated {
+                    let dest_class = self.opts.registry.devices()[m.to_d].spec.name;
+                    let session = Session::serving_fallback(
+                        Arc::clone(&m.fallback),
+                        Arc::clone(&self.device_metrics[m.to_d]),
+                        w.loop_kind,
+                    );
+                    pool.send_serve(ServeJob {
+                        session,
+                        device: m.to_d,
+                        iterations: task.iterations - m.iters_before,
+                        fb_ms: m.fb_ms,
+                        fs: fs_state.as_ref().map(|_| (key, dest_class)),
+                        task: task.id,
+                    });
+                }
+            }
+        }
+
         if self.pool.is_none() {
             if served > fb_total + 1e-9 {
                 self.regressions += 1; // the guard must make this unreachable
             }
-            self.device_busy_ms[best_d] += served;
+            match &migrated {
+                Some(m) => {
+                    self.device_busy_ms[best_d] += m.served_before;
+                    self.device_busy_ms[m.to_d] += served - m.served_before;
+                }
+                None => self.device_busy_ms[best_d] += served,
+            }
             self.served_gpu_ms += served;
         }
-        self.slots[best_d][best_s] = cursor;
-        self.device_tasks[best_d] += 1;
+        match &migrated {
+            Some(m) => {
+                self.slots[best_d][best_s] = m.at_ms;
+                self.slots[m.to_d][m.to_s] = cursor;
+                self.device_tasks[m.to_d] += 1;
+            }
+            None => {
+                self.slots[best_d][best_s] = cursor;
+                self.device_tasks[best_d] += 1;
+            }
+        }
         self.fallback_gpu_ms += fb_total;
         self.waits_ms.push(wait);
         self.makespan_ms = self.makespan_ms.max(cursor);
+
+        // Per-tenant QoS ledger: end-to-end latency and the SLA verdict
+        // (the placed queue wait judged against the tier's bound —
+        // tier-aware admission sheds anything that would violate, so a
+        // nonzero count here is a policy bug the CI rail catches).
+        let acc = self.tenant_qos.entry(task.tenant).or_default();
+        acc.served += 1;
+        acc.e2e_ms.push(cursor - now);
+        if wait > tier.sla_ms() {
+            acc.sla_violations += 1;
+            self.sla_violations += 1;
+        }
         if let Some(obs) = self.obs.as_mut() {
             obs.stages.task(best_d, wait, start, cursor);
             let (track, id) = (obs.devices[best_d], task.id as u64);
@@ -1326,6 +1667,27 @@ impl FleetService {
             let dump = obs.recorder.drain();
             obs.stages.report(self.lock_rows(), dump.recorded, dump.dropped)
         });
+        // BTreeMap iteration → tenant rows come out in id order,
+        // deterministically, on every executor.
+        let tenants = self
+            .tenant_qos
+            .iter()
+            .map(|(&tenant, acc)| {
+                let tier = TenantTier::of(tenant);
+                TenantQos {
+                    tenant,
+                    tier: tier.name(),
+                    sla_ms: tier.sla_ms(),
+                    tasks: acc.tasks,
+                    served: acc.served,
+                    shed: acc.shed,
+                    rejected: acc.rejected,
+                    sla_violations: acc.sla_violations,
+                    e2e: summarize(&acc.e2e_ms),
+                }
+            })
+            .collect();
+        let (churn_events, faults) = self.churn.counts();
         FleetReport {
             executor: self.opts.executor.name(),
             tasks: self.submitted,
@@ -1364,6 +1726,13 @@ impl FleetService {
             iter_p99_ms: iter_summary.p99,
             makespan_ms: self.makespan_ms,
             wall_elapsed_ms: self.wall_elapsed_ms,
+            sheds: self.admission.shed_count(),
+            sla_violations: self.sla_violations,
+            migrations: self.migrations,
+            migrations_degraded: self.migrations_degraded,
+            churn_events,
+            faults,
+            tenants,
             per_device,
             observability,
         }
@@ -1373,6 +1742,7 @@ impl FleetService {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::fleet::registry::{ChurnEvent, ChurnEventKind};
     use crate::fleet::sim::{
         build_template_families, build_templates, generate_trace, ModelFamily, TrafficConfig,
     };
@@ -1719,6 +2089,7 @@ mod tests {
             template: 0,
             iterations: 8,
             shape: TaskShape::default(),
+            tenant: 0,
         }];
         let run = |executor: ExecutorKind, shards: usize| {
             let opts = FleetOptions {
@@ -1815,12 +2186,15 @@ mod tests {
         // (explore), rows 48 (sibling bucket: launch-dim retune only),
         // rows 48 again (exact hit on the retuned program).
         let families = vec![TemplateFamily::Model(ModelFamily::LayerNorm)];
-        let shape = |seq: usize| TaskShape { batch: 1, seq };
-        let trace = vec![
-            FleetTask { id: 0, arrival_ms: 0.0, template: 0, iterations: 6, shape: shape(64) },
-            FleetTask { id: 1, arrival_ms: 200.0, template: 0, iterations: 6, shape: shape(48) },
-            FleetTask { id: 2, arrival_ms: 400.0, template: 0, iterations: 6, shape: shape(48) },
-        ];
+        let task = |id: usize, arrival_ms: f64, seq: usize| FleetTask {
+            id,
+            arrival_ms,
+            template: 0,
+            iterations: 6,
+            shape: TaskShape { batch: 1, seq },
+            tenant: 0,
+        };
+        let trace = vec![task(0, 0.0, 64), task(1, 200.0, 48), task(2, 400.0, 48)];
         let run = |executor: ExecutorKind| {
             let opts = FleetOptions {
                 registry: DeviceRegistry::mixed(1, 0, 2),
@@ -1863,11 +2237,15 @@ mod tests {
         // silently serve the cut form and instead fail over to a full
         // exploration, which re-decides absorption at the new shape.
         let families = vec![TemplateFamily::Model(ModelFamily::GemmEpilogueProbe)];
-        let shape = |seq: usize| TaskShape { batch: 1, seq };
-        let trace = vec![
-            FleetTask { id: 0, arrival_ms: 0.0, template: 0, iterations: 6, shape: shape(33) },
-            FleetTask { id: 1, arrival_ms: 200.0, template: 0, iterations: 6, shape: shape(64) },
-        ];
+        let task = |id: usize, arrival_ms: f64, seq: usize| FleetTask {
+            id,
+            arrival_ms,
+            template: 0,
+            iterations: 6,
+            shape: TaskShape { batch: 1, seq },
+            tenant: 0,
+        };
+        let trace = vec![task(0, 0.0, 33), task(1, 200.0, 64)];
         let run = |executor: ExecutorKind| {
             let opts = FleetOptions {
                 registry: DeviceRegistry::mixed(1, 0, 2),
@@ -2072,5 +2450,158 @@ mod tests {
         assert_eq!(obs.lock("plan_store").unwrap().contended, 0);
         assert!(obs.events_recorded > 0);
         assert_eq!(obs.events_dropped, 0, "the ring must hold a small trace");
+    }
+
+    #[test]
+    fn killed_device_queued_work_drains_on_survivors() {
+        // Fault injection end to end on a hand-built backlog: four
+        // early arrivals fill both devices' slots, four more stack up
+        // behind them, and four late arrivals land after device 1 is
+        // killed mid-serve. The wall-clock run must complete (work
+        // queued ahead of the kill marker drains in FIFO order — the
+        // marker is always last on the channel), every session device 1
+        // was serving must migrate to the survivor, post-kill work must
+        // never route to the dead device, and none of it may perturb
+        // the decision stream.
+        let families = vec![
+            TemplateFamily::Model(ModelFamily::LayerNorm),
+            TemplateFamily::Model(ModelFamily::GemmEpilogueProbe),
+        ];
+        let task = |id: usize, arrival_ms: f64| FleetTask {
+            id,
+            arrival_ms,
+            template: id % 2,
+            iterations: 400,
+            shape: TaskShape { batch: 1, seq: 33 },
+            tenant: 0,
+        };
+        let mut trace: Vec<FleetTask> = (0..8).map(|id| task(id, 0.1 * id as f64)).collect();
+        trace.extend((8..12).map(|id| task(id, 2.0 + 0.2 * (id - 8) as f64)));
+        // Device 1's two slots pick up sessions at ~0.2/0.3 ms that run
+        // for at least 400 iterations x the 3 us kernel floor, so a
+        // kill at 1.0 ms lands mid-serve by construction.
+        let plan = ChurnPlan::from_events(vec![ChurnEvent {
+            at_ms: 1.0,
+            device: 1,
+            kind: ChurnEventKind::Kill,
+        }]);
+        let run = |executor: ExecutorKind| {
+            let opts = FleetOptions {
+                registry: DeviceRegistry::mixed(2, 0, 2),
+                compile_workers: 2,
+                churn_plan: Some(plan.clone()),
+                executor,
+                ..Default::default()
+            };
+            let mut svc = FleetService::with_families(opts, families.clone());
+            let r = svc.run_trace(&trace);
+            (r, svc.decision_digest())
+        };
+        let (virt, vd) = run(ExecutorKind::VirtualTime);
+        let (wall, wd) = run(ExecutorKind::WallClock { threads: 2 });
+        assert_eq!(wd, vd, "the kill must not perturb placement or admission");
+        for r in [&virt, &wall] {
+            let snapshot = r.to_json().to_string();
+            assert_eq!(r.faults, 1, "{snapshot}");
+            assert_eq!(r.churn_events, 0, "an explicit kill plan has no drains");
+            assert!(r.migrations >= 2, "both of device 1's sessions span the kill: {snapshot}");
+            assert_eq!(r.regressions, 0, "{snapshot}");
+            assert_eq!(r.rejected, 0, "the backlog never nears the premium bound");
+            assert_eq!(r.sheds, 0, "single-tenant traffic is all premium");
+            assert_eq!(r.admitted + r.fallback_only + r.rejected + r.sheds, r.tasks);
+        }
+        assert_eq!(virt.migrations, wall.migrations);
+        // Placement and migration accounting are virtual bookkeeping,
+        // identical across executors — and every session the dead
+        // device started (plus everything queued or arriving after the
+        // kill) completes on the survivor.
+        for d in 0..2 {
+            assert_eq!(virt.per_device[d].tasks, wall.per_device[d].tasks);
+        }
+        assert_eq!(virt.per_device[1].tasks, 0, "no session may complete on the dead device");
+        assert_eq!(virt.per_device[0].tasks, 12, "all queued work drains on the survivor");
+        assert_eq!(virt.makespan_ms, wall.makespan_ms);
+    }
+
+    #[test]
+    fn migration_rechecks_plan_feasibility_on_the_destination_class() {
+        // A mid-serve kill forces a cross-class migration, and the
+        // destination must re-check the plan's shared-memory/occupancy
+        // feasibility: the seq-33 GEMM-epilogue plan stages ~33 KB, so
+        // it ports to a stock T4 (48 KB per-block cap) but must degrade
+        // to the destination fallback on a 16 KB-cap class rather than
+        // silently serve a cut form of the absorbed plan.
+        let families = vec![
+            TemplateFamily::Model(ModelFamily::LayerNorm),
+            TemplateFamily::Model(ModelFamily::GemmEpilogueProbe),
+        ];
+        // Task 0 pins the anchor V100 with a long layer-norm session so
+        // the migration's least-loaded choice is the third device; task
+        // 1 is the victim session on the to-be-killed V100.
+        let task = |id: usize, arrival_ms: f64, template: usize, iters: usize, shape| FleetTask {
+            id,
+            arrival_ms,
+            template,
+            iterations: iters,
+            shape,
+            tenant: 0,
+        };
+        let trace = vec![
+            task(0, 0.0, 0, 2000, TaskShape { batch: 64, seq: 64 }),
+            task(1, 0.1, 1, 400, TaskShape { batch: 1, seq: 33 }),
+        ];
+        let plan = ChurnPlan::from_events(vec![ChurnEvent {
+            at_ms: 1.0,
+            device: 1,
+            kind: ChurnEventKind::Kill,
+        }]);
+        let run = |dest: DeviceSpec, executor: ExecutorKind| {
+            let mut registry = DeviceRegistry::new();
+            registry.register(DeviceSpec::v100(), 1);
+            registry.register(DeviceSpec::v100(), 1);
+            registry.register(dest, 1);
+            let opts = FleetOptions {
+                registry,
+                compile_workers: 2,
+                churn_plan: Some(plan.clone()),
+                executor,
+                ..Default::default()
+            };
+            let mut svc = FleetService::with_families(opts, families.clone());
+            let r = svc.run_trace(&trace);
+            (r, svc.decision_digest())
+        };
+        // Feasible destination: the plan follows the session.
+        let (ported, pd) = run(DeviceSpec::t4(), ExecutorKind::VirtualTime);
+        let snapshot = ported.to_json().to_string();
+        assert_eq!(ported.faults, 1, "{snapshot}");
+        assert_eq!(ported.migrations, 1, "{snapshot}");
+        assert_eq!(ported.migrations_degraded, 0, "33 KB staging fits the stock 48 KB cap");
+        assert_eq!(ported.regressions, 0, "{snapshot}");
+        // The migrated session is accounted on its destination.
+        assert_eq!(ported.per_device[1].tasks, 0);
+        assert_eq!(ported.per_device[2].tasks, 1);
+        let (pw, pwd) = run(DeviceSpec::t4(), ExecutorKind::WallClock { threads: 2 });
+        assert_eq!(pwd, pd, "the migration resolution folds into the digest");
+        assert_eq!(pw.migrations, 1);
+        assert_eq!(pw.migrations_degraded, 0);
+        // Infeasible destination: same kill, same plan, but a 16 KB
+        // per-block cap cannot restage the absorbed epilogue.
+        let small = DeviceSpec {
+            name: "T4-16K",
+            shmem_per_sm: 16 * 1024,
+            shmem_per_block: 16 * 1024,
+            ..DeviceSpec::t4()
+        };
+        let (degraded, dd) = run(small.clone(), ExecutorKind::VirtualTime);
+        let snapshot = degraded.to_json().to_string();
+        assert_eq!(degraded.faults, 1, "{snapshot}");
+        assert_eq!(degraded.migrations, 1, "{snapshot}");
+        assert_eq!(degraded.migrations_degraded, 1, "{snapshot}");
+        assert_eq!(degraded.regressions, 0, "degrading to fallback is not a regression");
+        let (dw, dwd) = run(small, ExecutorKind::WallClock { threads: 2 });
+        assert_eq!(dwd, dd, "the degrade verdict folds into the digest");
+        assert_eq!(dw.migrations_degraded, 1);
+        assert_ne!(pd, dd, "feasibility flips the migration resolution code");
     }
 }

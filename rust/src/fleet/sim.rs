@@ -45,6 +45,13 @@ pub struct TrafficConfig {
     /// fixed [`TaskShape::default`] and the population is byte-identical
     /// to the static [`build_templates`] one.
     pub dynamic_shapes: bool,
+    /// Multi-tenant traffic: tasks draw a tenant id in `0..tenants`
+    /// from a dedicated seeded stream, weighted toward low ids (tenant
+    /// 0 is the hottest, matching the hot-head template skew). Each
+    /// tenant maps to a [`TenantTier`] via [`TenantTier::of`]. With
+    /// `0` (the default) every task carries tenant 0 — single-tenant
+    /// traffic byte-identical to the pre-tenant trace streams.
+    pub tenants: usize,
 }
 
 impl Default for TrafficConfig {
@@ -59,6 +66,7 @@ impl Default for TrafficConfig {
             min_ops: 30,
             max_ops: 90,
             dynamic_shapes: false,
+            tenants: 0,
         }
     }
 }
@@ -112,9 +120,69 @@ impl Default for TaskShape {
     }
 }
 
+/// A tenant's priority tier: the SLA contract admission enforces under
+/// compile backpressure. Tenants map to tiers round-robin
+/// ([`TenantTier::of`]), so any `tenants >= 3` mix exercises all three.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum TenantTier {
+    /// Paid/latency-critical traffic: never shed, full FIFO semantics —
+    /// identical to the single-tenant admission policy, so all-Premium
+    /// traffic decides byte-for-byte like the pre-tenant fleet.
+    Premium,
+    /// Bulk serving: degrades to the XLA fallback under compile
+    /// saturation and sheds when its queue-delay SLA is blown.
+    Standard,
+    /// Scavenger tier: sheds under any backpressure its SLA cannot
+    /// absorb instead of queueing ahead of paid work.
+    BestEffort,
+}
+
+impl TenantTier {
+    /// The tier a tenant id serves under.
+    pub fn of(tenant: u32) -> TenantTier {
+        match tenant % 3 {
+            0 => TenantTier::Premium,
+            1 => TenantTier::Standard,
+            _ => TenantTier::BestEffort,
+        }
+    }
+
+    /// Max acceptable queue delay (ms of virtual time) before a task of
+    /// this tier is shed rather than served late. Premium's target
+    /// equals the admission controller's default `max_queue_delay_ms`,
+    /// so a *served* Premium task structurally never violates its SLA —
+    /// the report's `sla_violations` counter is an invariant detector,
+    /// not a tolerance.
+    pub fn sla_ms(&self) -> f64 {
+        match self {
+            TenantTier::Premium => 250.0,
+            TenantTier::Standard => 100.0,
+            TenantTier::BestEffort => 25.0,
+        }
+    }
+
+    /// Stable small code for decision-digest folding.
+    pub fn code(&self) -> u64 {
+        match self {
+            TenantTier::Premium => 0,
+            TenantTier::Standard => 1,
+            TenantTier::BestEffort => 2,
+        }
+    }
+
+    /// Stable display name (reports, lifecycle events).
+    pub fn name(&self) -> &'static str {
+        match self {
+            TenantTier::Premium => "premium",
+            TenantTier::Standard => "standard",
+            TenantTier::BestEffort => "best_effort",
+        }
+    }
+}
+
 /// One task in the trace: an instance of a template model arriving at a
 /// virtual time, at a concrete (batch, seq), serving a fixed number of
-/// iterations.
+/// iterations on behalf of a tenant.
 #[derive(Debug, Clone, PartialEq)]
 pub struct FleetTask {
     pub id: usize,
@@ -122,6 +190,14 @@ pub struct FleetTask {
     pub template: usize,
     pub iterations: usize,
     pub shape: TaskShape,
+    pub tenant: u32,
+}
+
+impl FleetTask {
+    /// The priority tier this task is admitted under.
+    pub fn tier(&self) -> TenantTier {
+        TenantTier::of(self.tenant)
+    }
 }
 
 /// Per-template shape distribution: the (batch, seq) choice sets one
@@ -376,9 +452,9 @@ pub fn build_template_families(cfg: &TrafficConfig) -> Vec<TemplateFamily> {
 
 /// Generate the arrival trace (sorted by arrival time by construction).
 /// The arrival/template/iteration streams are identical with
-/// `dynamic_shapes` on or off: shape draws come from a *separate*
-/// seeded PRNG stream, so flipping the flag changes the shapes — not
-/// which templates arrive when.
+/// `dynamic_shapes` on or off and with any tenant count: shape and
+/// tenant draws come from *separate* seeded PRNG streams, so flipping
+/// either knob changes those fields — not which templates arrive when.
 pub fn generate_trace(cfg: &TrafficConfig) -> Vec<FleetTask> {
     assert!(cfg.min_iterations >= 1);
     assert!(cfg.min_iterations <= cfg.max_iterations);
@@ -392,6 +468,12 @@ pub fn generate_trace(cfg: &TrafficConfig) -> Vec<FleetTask> {
     // Dedicated stream for shape draws: the main stream above must stay
     // byte-identical whether or not shapes vary.
     let mut shape_prng = Prng::new(cfg.seed ^ 0x5AFE_CAFE);
+    // Dedicated stream for tenant draws, for the same reason.
+    let mut tenant_prng = Prng::new(cfg.seed ^ 0x7E7A_A717);
+    // Triangular tenant popularity: tenant i carries weight
+    // `tenants - i`, so tenant 0 (Premium) is the hottest — production
+    // fleets serve a few heavy paid tenants and a long scavenger tail.
+    let tenant_weight_total = cfg.tenants * (cfg.tenants + 1) / 2;
     let mut t = 0.0f64;
     (0..cfg.tasks)
         .map(|id| {
@@ -406,7 +488,22 @@ pub fn generate_trace(cfg: &TrafficConfig) -> Vec<FleetTask> {
                 Some(d) => d[template].draw(&mut shape_prng),
                 None => TaskShape::default(),
             };
-            FleetTask { id, arrival_ms: t, template, iterations, shape }
+            let tenant = if cfg.tenants == 0 {
+                0
+            } else {
+                let mut roll = tenant_prng.below(tenant_weight_total);
+                let mut chosen = 0;
+                for i in 0..cfg.tenants {
+                    let w = cfg.tenants - i;
+                    if roll < w {
+                        chosen = i as u32;
+                        break;
+                    }
+                    roll -= w;
+                }
+                chosen
+            };
+            FleetTask { id, arrival_ms: t, template, iterations, shape, tenant }
         })
         .collect()
 }
@@ -490,6 +587,56 @@ mod tests {
             assert_eq!(x.iterations, y.iterations);
         }
         assert_eq!(generate_trace(&dyn_cfg), generate_trace(&dyn_cfg));
+    }
+
+    #[test]
+    fn tenant_stream_does_not_perturb_other_streams() {
+        // Flipping tenants on must not change which templates arrive
+        // when, what iterations they serve, or what shapes they draw —
+        // only the tenant field (same isolation contract as shapes).
+        let single = TrafficConfig { tasks: 300, dynamic_shapes: true, ..Default::default() };
+        let multi = TrafficConfig { tenants: 6, ..single.clone() };
+        let a = generate_trace(&single);
+        let b = generate_trace(&multi);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.arrival_ms, y.arrival_ms);
+            assert_eq!(x.template, y.template);
+            assert_eq!(x.iterations, y.iterations);
+            assert_eq!(x.shape, y.shape);
+            assert_eq!(x.tenant, 0, "single-tenant traffic is all tenant 0");
+        }
+        assert_eq!(generate_trace(&multi), generate_trace(&multi));
+    }
+
+    #[test]
+    fn tenant_mix_is_skewed_and_in_bounds() {
+        let cfg = TrafficConfig { tasks: 2000, tenants: 6, ..Default::default() };
+        let trace = generate_trace(&cfg);
+        let mut counts = vec![0usize; cfg.tenants];
+        for task in &trace {
+            assert!((task.tenant as usize) < cfg.tenants);
+            counts[task.tenant as usize] += 1;
+        }
+        // Triangular weights: tenant 0 carries 6/21 of traffic, tenant 5
+        // carries 1/21 — every tenant appears, hottest first.
+        assert!(counts.iter().all(|&c| c > 0), "every tenant must appear: {counts:?}");
+        assert!(counts[0] > counts[cfg.tenants - 1], "tenant 0 must be hottest: {counts:?}");
+    }
+
+    #[test]
+    fn tiers_cycle_and_premium_sla_matches_admission_default() {
+        assert_eq!(TenantTier::of(0), TenantTier::Premium);
+        assert_eq!(TenantTier::of(1), TenantTier::Standard);
+        assert_eq!(TenantTier::of(2), TenantTier::BestEffort);
+        assert_eq!(TenantTier::of(3), TenantTier::Premium);
+        // Premium's SLA equals the admission controller's default queue
+        // bound: a served Premium task can never violate it.
+        assert_eq!(
+            TenantTier::Premium.sla_ms(),
+            crate::fleet::AdmissionConfig::default().max_queue_delay_ms
+        );
+        assert!(TenantTier::Standard.sla_ms() < TenantTier::Premium.sla_ms());
+        assert!(TenantTier::BestEffort.sla_ms() < TenantTier::Standard.sla_ms());
     }
 
     #[test]

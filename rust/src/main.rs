@@ -22,7 +22,8 @@
 //!   [--tasks N] [--rate MS] [--templates T] [--seed S] [--out FILE]
 //!   [--executor virtual|wallclock] [--threads N]
 //!   [--compile-shards S] [--calibrate] [--drift-bound R]
-//!   [--dynamic-shapes]` — replay a deterministic task trace through
+//!   [--dynamic-shapes] [--tenants N] [--churn] [--inject-faults]` —
+//!   replay a deterministic task trace through
 //!   the multi-device fleet service (§7.2) and print the fleet-wide
 //!   report; `wallclock` runs compile workers and per-device serving
 //!   slots on real OS threads, `--compile-shards` fans a multi-region
@@ -45,7 +46,15 @@
 //!   shape-erased structure key) and prints the per-shard rollup with
 //!   decision digests, and `--admission-tick MS` batches each
 //!   dispatcher's admission pending-compile sampling per tick instead
-//!   of per task (0 = legacy per-task sampling).
+//!   of per task (0 = legacy per-task sampling). `--tenants N` spreads
+//!   the trace across N tenants (skewed seeded mix) mapped to priority
+//!   tiers with SLA-aware tiered admission, adding a per-tenant QoS
+//!   table to the report; `--churn` drains and rejoins devices
+//!   mid-trace on a seeded schedule, migrating in-flight sessions to
+//!   survivors through the plan port/reshape feasibility ladder; and
+//!   `--inject-faults` (implies churn) also kills one device outright
+//!   mid-serve, delivered to the wall-clock serving thread as a real
+//!   kill marker.
 
 use fusion_stitching::coordinator::{JitService, ServiceOptions};
 use fusion_stitching::fleet;
@@ -326,17 +335,33 @@ fn main() {
             // distribution and sibling shapes reuse plans through the
             // store's power-of-two bucket tier.
             let dynamic_shapes = has_flag("--dynamic-shapes");
+            // --tenants N: multi-tenant traffic — each task carries a
+            // tenant drawn from a skewed seeded mix, and tenants map to
+            // priority tiers (premium / standard / best_effort) with
+            // SLA-aware tiered admission at the dispatcher. The report
+            // gains a per-tenant QoS table.
+            let tenants = num("--tenants", 0);
+            // --churn: devices leave/rejoin mid-trace on a seeded
+            // schedule and in-flight sessions migrate to survivors.
+            // --inject-faults additionally kills one device outright
+            // mid-serve (implies churn).
+            let churn = has_flag("--churn");
+            let inject_faults = has_flag("--inject-faults");
             let traffic = fleet::TrafficConfig {
                 tasks: num("--tasks", 400),
                 templates,
                 seed,
                 mean_interarrival_ms: rate,
                 dynamic_shapes,
+                tenants,
                 ..Default::default()
             };
             let (v100s, t4s) = (num("--v100", 2), num("--t4", 2));
             if v100s + t4s == 0 {
                 bad_flag("--v100/--t4", "fleet needs at least one device");
+            }
+            if (churn || inject_faults) && v100s + t4s < 2 {
+                bad_flag("--churn", "churn needs at least two devices (device 0 never leaves)");
             }
             let capacity = num("--capacity", 2);
             if capacity == 0 {
@@ -415,11 +440,14 @@ fn main() {
                 observe,
                 shards,
                 admission_tick_ms: admission_tick,
+                churn,
+                inject_faults,
                 ..Default::default()
             };
             println!(
                 "== fleet: {} tasks over {} templates on {} devices ({} slots), \
-                 seed {:#x}, executor {}, compile shards {}, shapes {} ==\n",
+                 seed {:#x}, executor {}, compile shards {}, shapes {}, \
+                 tenants {}, churn {} ==\n",
                 traffic.tasks,
                 traffic.templates,
                 opts.registry.len(),
@@ -427,7 +455,13 @@ fn main() {
                 traffic.seed,
                 executor.name(),
                 compile_shards,
-                if dynamic_shapes { "dynamic" } else { "static" }
+                if dynamic_shapes { "dynamic" } else { "static" },
+                traffic.tenants.max(1),
+                match (churn, inject_faults) {
+                    (_, true) => "on+faults",
+                    (true, false) => "on",
+                    (false, false) => "off",
+                }
             );
             let families = fleet::build_template_families(&traffic);
             let trace = fleet::generate_trace(&traffic);
@@ -469,6 +503,18 @@ fn main() {
                 report.port_hits,
                 report.regressions
             );
+            if traffic.tenants > 0 || churn || inject_faults {
+                println!(
+                    "qos: {} sheds, {} SLA violations; churn {} events, {} faults, \
+                     {} migrations ({} degraded)",
+                    report.sheds,
+                    report.sla_violations,
+                    report.churn_events,
+                    report.faults,
+                    report.migrations,
+                    report.migrations_degraded
+                );
+            }
             if dynamic_shapes {
                 println!(
                     "dynamic shapes: {} distinct graphs in {} buckets; {} bucket hits \
@@ -549,7 +595,7 @@ fn main() {
                  [--capacity C] [--workers K] [--tasks N] [--rate MS] [--templates T] \
                  [--seed S] [--executor virtual|wallclock] [--threads N] [--compile-shards S] \
                  [--calibrate] [--drift-bound R] [--dynamic-shapes] [--observe] [--trace FILE] \
-                 [--shards N] [--admission-tick MS]"
+                 [--shards N] [--admission-tick MS] [--tenants N] [--churn] [--inject-faults]"
             );
         }
     }

@@ -44,8 +44,12 @@ pub fn chrome_trace(dump: &TraceDump) -> JsonValue {
         let mut args = JsonValue::obj();
         args.set("id", ev.id as i64);
         let ph = match ev.kind {
-            EventKind::TaskAdmitted { decision } => {
-                args.set("decision", decision);
+            EventKind::TaskAdmitted { decision, tenant } => {
+                args.set("decision", decision).set("tenant", tenant as i64);
+                "i"
+            }
+            EventKind::Migrate { from, to } => {
+                args.set("from", from as i64).set("to", to as i64);
                 "i"
             }
             EventKind::ExploreStart { shard, shards } => {
@@ -107,7 +111,7 @@ mod tests {
         let dev = r.add_track("device-0", VIRTUAL_PID);
         let h = r.ring();
         let ev = |track, kind, ts_us, dur_us| Event { track, id: 1, kind, ts_us, dur_us };
-        h.record(ev(disp, EventKind::TaskAdmitted { decision: "admit" }, 0.0, 0.0));
+        h.record(ev(disp, EventKind::TaskAdmitted { decision: "admit", tenant: 0 }, 0.0, 0.0));
         h.record(ev(dev, EventKind::QueueWait, 0.0, 500.0));
         h.record(ev(disp, EventKind::ExploreStart { shard: 0, shards: 2 }, 10.0, 0.0));
         h.record(ev(disp, EventKind::ExploreEnd { shard: 0, shards: 2 }, 900.0, 0.0));

@@ -29,8 +29,8 @@ pub const WALL_PID: u32 = 2;
 /// instants and counters carry zero.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum EventKind {
-    /// Instant: the admission decision for a task.
-    TaskAdmitted { decision: &'static str },
+    /// Instant: the admission decision for a task (tenant-tagged).
+    TaskAdmitted { decision: &'static str, tenant: u32 },
     /// Span: task arrival → serving-slot start.
     QueueWait,
     /// Instant: an exploration sub-job entered the compile schedule.
@@ -50,6 +50,9 @@ pub enum EventKind {
     HotSwap,
     /// Span: a task's serving window on its device.
     Serve { device: u32 },
+    /// Instant: an in-flight session migrated off a departing device
+    /// (churn Leave or an injected Kill).
+    Migrate { from: u32, to: u32 },
     /// Counter: a calibration measured/predicted drift-ratio sample.
     DriftSample { ratio: f64 },
 }
@@ -67,6 +70,7 @@ impl EventKind {
             EventKind::BarrierWait => "BarrierWait",
             EventKind::HotSwap => "HotSwap",
             EventKind::Serve { .. } => "Serve",
+            EventKind::Migrate { .. } => "Migrate",
             EventKind::DriftSample { .. } => "drift_ratio",
         }
     }
